@@ -1,0 +1,60 @@
+//! Diagnostic: decode-step timing + RSS tracking (leak hunting).
+use paged_eviction::eviction::make_policy;
+use paged_eviction::runtime::{Engine, ModelRunner};
+use paged_eviction::runtime::model_runner::argmax;
+use paged_eviction::util::rng::Pcg32;
+use paged_eviction::workload::recall;
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+
+fn main() {
+    let mode = std::env::args().nth(1).unwrap_or_else(|| "decode".into());
+    let engine = Engine::new("artifacts").unwrap();
+    let runner = ModelRunner::new(&engine, "sim-1b", 16).unwrap();
+    let mut rng = Pcg32::new(5);
+    let p = recall::make_prompt(&mut rng, 384, 0.5);
+    let (mut seq, logits) = runner.prefill(&p.tokens, 100_000, make_policy("full").unwrap()).unwrap();
+    let mut tok = argmax(&logits);
+    println!("start rss {:.1} MB, mode={mode}", rss_mb());
+    match mode.as_str() {
+        "decode" => {
+            for i in 0..600 {
+                let o = runner.decode_step(&mut seq, tok).unwrap();
+                tok = argmax(&o.logits);
+                if i % 100 == 0 { println!("step {i}: rss {:.1} MB", rss_mb()); }
+            }
+        }
+        "exec-raw" => {
+            // raw execute of the same decode graph with constant inputs,
+            // WITHOUT to_literal_sync/to_tuple
+            use paged_eviction::runtime::engine::{lit_f32, lit_i32, scalar_i32};
+            let g = engine.manifest.decode_graph("sim-1b", 16, 512).unwrap();
+            let exe = engine.executable(g).unwrap();
+            let w = engine.weights("sim-1b").unwrap();
+            let nb = g.n_blocks;
+            let info = engine.manifest.model("sim-1b").unwrap();
+            let cache_data = vec![0.0f32; info.n_layers*info.n_kv_heads*nb*16*info.d_head];
+            let shape = [info.n_layers, info.n_kv_heads, nb, 16, info.d_head];
+            let _ = (&exe, &w);
+            for i in 0..600 {
+                let inputs = [
+                    scalar_i32(1), scalar_i32(5),
+                    lit_f32(&cache_data, &shape).unwrap(),
+                    lit_f32(&cache_data, &shape).unwrap(),
+                    lit_i32(&vec![0i32; nb], &[nb]).unwrap(),
+                    scalar_i32(6),
+                    lit_f32(&vec![1.0; nb*16], &[nb, 16]).unwrap(),
+                ];
+                let parts = engine.run(g, &inputs).unwrap();
+                std::hint::black_box(parts.len());
+                if i % 100 == 0 { println!("iter {i}: rss {:.1} MB", rss_mb()); }
+            }
+        }
+        _ => panic!("mode?"),
+    }
+    println!("end rss {:.1} MB", rss_mb());
+}

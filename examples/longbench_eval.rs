@@ -1,0 +1,118 @@
+//! LongBench-style accuracy evaluation — both tracks (DESIGN.md §4):
+//!
+//!  * REAL track: the trained sim-1b model answers associative-recall
+//!    prompts through the full runtime; accuracy vs cache budget per
+//!    eviction policy (needle-QA stand-in, run after `make train`).
+//!  * SIM track: the attention-mass simulator sweeps the paper's five
+//!    LongBench datasets at the paper's budgets.
+//!
+//!     cargo run --release --example longbench_eval -- --track real
+//!     cargo run --release --example longbench_eval -- --track sim
+
+use anyhow::Result;
+use paged_eviction::eviction::{make_policy, ALL_POLICIES};
+use paged_eviction::runtime::model_runner::argmax;
+use paged_eviction::runtime::{Engine, ModelRunner};
+use paged_eviction::sim::{self, SimConfig};
+use paged_eviction::util::args::ArgSpec;
+use paged_eviction::util::rng::Pcg32;
+use paged_eviction::util::stats::Table;
+use paged_eviction::workload::recall;
+
+fn main() -> Result<()> {
+    let args = ArgSpec::new("longbench_eval", "accuracy vs cache budget")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("track", "real", "real | sim")
+        .opt("prompts", "40", "real track: prompts per cell")
+        .opt("prompt-len", "224", "real track: prompt tokens")
+        .opt("budgets", "", "comma list (default per track)")
+        .parse_or_exit(1);
+    match args.get("track") {
+        "real" => real_track(&args),
+        "sim" => sim_track(&args),
+        t => anyhow::bail!("unknown track {t:?}"),
+    }
+}
+
+fn real_track(args: &paged_eviction::util::args::Args) -> Result<()> {
+    let engine = Engine::new(args.get("artifacts"))?;
+    let info = engine.manifest.model("sim-1b")?;
+    println!(
+        "REAL track: sim-1b ({}) needle recall, prompt len {}",
+        info.weights_src,
+        args.get_usize("prompt-len")
+    );
+    if !info.weights_src.contains("trained") {
+        println!("NOTE: weights are untrained — run `make train` for meaningful accuracy");
+    }
+    let budgets: Vec<usize> = if args.get("budgets").is_empty() {
+        vec![32, 64, 96, 128, 192]
+    } else {
+        args.get_usize_list("budgets")
+    };
+    let runner = ModelRunner::new(&engine, "sim-1b", 16)?;
+    let n = args.get_usize("prompts");
+    let plen = args.get_usize("prompt-len");
+
+    let mut header = vec!["policy".to_string()];
+    header.extend(budgets.iter().map(|b| format!("b={b}")));
+    let mut table = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for policy in ALL_POLICIES {
+        let mut row = vec![policy.to_string()];
+        for &budget in &budgets {
+            let mut hit = 0usize;
+            for i in 0..n {
+                let mut rng = Pcg32::with_stream(1000 + i as u64, budget as u64);
+                let frac = 0.15 + 0.7 * rng.f64();
+                let p = recall::make_prompt(&mut rng, plen, frac);
+                let (mut seq, logits) =
+                    runner.prefill(&p.tokens, budget, make_policy(policy)?)?;
+                // answer = first generated token
+                let tok = argmax(&logits);
+                hit += usize::from(tok == p.answer);
+                // run a couple of decode steps to exercise decode eviction
+                let mut t = tok;
+                for _ in 0..2 {
+                    let o = runner.decode_step(&mut seq, t)?;
+                    t = argmax(&o.logits);
+                }
+            }
+            row.push(format!("{:.0}%", 100.0 * hit as f64 / n as f64));
+        }
+        table.row(row);
+    }
+    print!("{}", table.render());
+    println!("(full-cache row is the model's ceiling; see EXPERIMENTS.md)");
+    Ok(())
+}
+
+fn sim_track(args: &paged_eviction::util::args::Args) -> Result<()> {
+    let budgets: Vec<usize> = if args.get("budgets").is_empty() {
+        vec![256, 512, 1024, 2048, 4096]
+    } else {
+        args.get_usize_list("budgets")
+    };
+    println!("SIM track: paper-scale budgets, 5 LongBench-shaped datasets");
+    for d in &sim::datasets::DATASETS {
+        let mut header = vec!["policy".to_string()];
+        header.extend(budgets.iter().map(|b| format!("b={b}")));
+        let mut table = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for policy in ALL_POLICIES {
+            let p = make_policy(policy)?;
+            let mut row = vec![policy.to_string()];
+            for &budget in &budgets {
+                let r = sim::attention_sim::simulate_mean(
+                    d,
+                    p.as_ref(),
+                    &SimConfig { budget, ..Default::default() },
+                    16,
+                );
+                row.push(format!("{:.1}", r.score));
+            }
+            table.row(row);
+        }
+        println!("\n--- {} (full-cache score {:.1}) ---", d.name, d.full_score);
+        print!("{}", table.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,155 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E run).
+//!
+//! Spins up the real stack — engine thread + TCP JSON-lines frontend —
+//! then drives it with concurrent client connections sending
+//! associative-recall prompts, and reports the paper's serving metrics
+//! (throughput, TPOT, latency percentiles) plus task accuracy.
+//!
+//!     make artifacts && make train   # trained weights recommended
+//!     cargo run --release --example serve_e2e -- --requests 24 --concurrency 8
+//!
+//! All layers compose here: Pallas kernel -> JAX graphs -> PJRT -> paged
+//! cache + eviction -> continuous batcher -> TCP protocol -> client.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+use paged_eviction::scheduler::SchedConfig;
+use paged_eviction::server::serve::{serve_forever, spawn_engine};
+use paged_eviction::util::args::ArgSpec;
+use paged_eviction::util::json::Json;
+use paged_eviction::util::rng::Pcg32;
+use paged_eviction::util::stats::{Histogram, Table};
+use paged_eviction::workload::recall;
+
+fn main() -> Result<()> {
+    let args = ArgSpec::new("serve_e2e", "end-to-end serving driver")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("model", "sim-1b", "model")
+        .opt("requests", "24", "total requests")
+        .opt("concurrency", "8", "client connections")
+        .opt("prompt-len", "192", "prompt tokens")
+        .opt("max-new-tokens", "16", "generation length per request")
+        .opt("budget", "128", "KV budget per request")
+        .opt("policy", "paged", "eviction policy")
+        .parse_or_exit(1);
+
+    let cfg = SchedConfig {
+        model: args.get("model").into(),
+        page_size: 16,
+        max_concurrency: args.get_usize("concurrency"),
+        max_live_blocks: 4096,
+    };
+    let (handle, _join) = spawn_engine(args.get("artifacts").into(), cfg)?;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    std::thread::spawn(move || {
+        let _ = serve_forever(listener, handle, Arc::new(Mutex::new(0)));
+    });
+
+    let n_req = args.get_usize("requests");
+    let conc = args.get_usize("concurrency");
+    let plen = args.get_usize("prompt-len");
+    let gen = args.get_usize("max-new-tokens");
+    let budget = args.get_usize("budget");
+    let policy = args.get("policy").to_string();
+
+    println!(
+        "e2e: {n_req} requests x (prompt {plen} + gen {gen}) via {conc} \
+         connections, policy={policy}, budget={budget}"
+    );
+
+    let results = Arc::new(Mutex::new(Vec::new()));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..conc {
+        let results = results.clone();
+        let policy = policy.clone();
+        let my_n = n_req / conc + usize::from(c < n_req % conc);
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut rng = Pcg32::with_stream(7, c as u64);
+            let stream = TcpStream::connect(addr)?;
+            let mut w = stream.try_clone()?;
+            let mut r = BufReader::new(stream);
+            for i in 0..my_n {
+                let frac = 0.2 + 0.6 * rng.f64();
+                let p = recall::make_prompt(&mut rng, plen, frac);
+                let req = Json::obj(vec![
+                    ("id", Json::num((c * 1000 + i + 1) as f64)),
+                    (
+                        "prompt",
+                        Json::Arr(p.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+                    ),
+                    ("max_new_tokens", Json::num(gen as f64)),
+                    ("budget", Json::num(budget as f64)),
+                    ("policy", Json::str(policy.as_str())),
+                ]);
+                let sent = Instant::now();
+                writeln!(w, "{}", req.to_string())?;
+                let mut line = String::new();
+                r.read_line(&mut line)?;
+                let resp = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
+                let latency = sent.elapsed().as_secs_f64();
+                let first = resp
+                    .get("tokens")
+                    .and_then(|t| t.as_arr())
+                    .and_then(|a| a.first())
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(0) as u32;
+                let ttft = resp.get("ttft_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let tpot = resp.get("tpot_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                results.lock().unwrap().push((
+                    latency,
+                    ttft,
+                    tpot,
+                    first == p.answer,
+                    plen + gen,
+                ));
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread panicked")?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let results = results.lock().unwrap();
+    let mut lat = Histogram::new();
+    let mut ttft = Histogram::new();
+    let mut tpot = Histogram::new();
+    let mut correct = 0usize;
+    let mut tokens = 0usize;
+    for &(l, tf, tp, ok, toks) in results.iter() {
+        lat.add(l * 1e3);
+        ttft.add(tf);
+        tpot.add(tp);
+        correct += usize::from(ok);
+        tokens += toks;
+    }
+    println!("\n== E2E serving report ==");
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["requests".into(), results.len().to_string()]);
+    t.row(vec!["wall time (s)".into(), format!("{wall:.2}")]);
+    t.row(vec![
+        "throughput (tok/s, in+out)".into(),
+        format!("{:.1}", tokens as f64 / wall),
+    ]);
+    t.row(vec![
+        "request rate (req/s)".into(),
+        format!("{:.2}", results.len() as f64 / wall),
+    ]);
+    t.row(vec!["latency".into(), lat.report("ms")]);
+    t.row(vec!["ttft".into(), ttft.report("ms")]);
+    t.row(vec!["tpot".into(), tpot.report("ms")]);
+    t.row(vec![
+        "recall accuracy".into(),
+        format!("{:.1}% ({}/{})", 100.0 * correct as f64 / results.len() as f64,
+                correct, results.len()),
+    ]);
+    print!("{}", t.render());
+    Ok(())
+}

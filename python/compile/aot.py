@@ -1,0 +1,186 @@
+"""AOT lowering: JAX graphs -> StableHLO -> XLA HLO TEXT artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate binds) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids so text round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs under artifacts/:
+  <name>.hlo.txt          one per GraphSpec in configs.artifact_matrix()
+  <model>.weights.bin     PEW1 container (trained weights win if present)
+  manifest.json           everything the Rust runtime needs: model configs,
+                          weight ABI, graph shapes and input signatures.
+
+Usage: python -m compile.aot --out ../artifacts [--models sim-1b,...]
+       [--jnp-ref] (lower the pure-jnp path instead of Pallas — ablation)
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _weight_specs(cfg):
+    return [
+        jax.ShapeDtypeStruct(s, jnp.float32) for s in cfg.weight_shapes()
+    ]
+
+
+def lower_prefill(cfg: configs.ModelConfig, p: int, use_pallas: bool = True):
+    fn = functools.partial(model.prefill_fn, cfg, use_pallas=use_pallas)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    toks = jax.ShapeDtypeStruct((p,), jnp.int32)
+    return jax.jit(fn).lower(toks, i32, *_weight_specs(cfg))
+
+
+def lower_decode(cfg: configs.ModelConfig, nb: int, page: int,
+                 use_pallas: bool = True):
+    fn = functools.partial(model.decode_fn, cfg, use_pallas=use_pallas)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    cache = jax.ShapeDtypeStruct(
+        (cfg.n_layers, cfg.n_kv_heads, nb, page, cfg.d_head), jnp.float32
+    )
+    tbl = jax.ShapeDtypeStruct((nb,), jnp.int32)
+    vmask = jax.ShapeDtypeStruct((nb, page), jnp.float32)
+    return jax.jit(fn).lower(i32, i32, cache, cache, tbl, i32, vmask,
+                             *_weight_specs(cfg))
+
+
+def graph_signature(spec: configs.GraphSpec, cfg: configs.ModelConfig):
+    """Runtime-facing input/output signature (before the *weights tail)."""
+    dh, l, hkv = cfg.d_head, cfg.n_layers, cfg.n_kv_heads
+    if spec.kind == "prefill":
+        p = spec.seq_bucket
+        return {
+            "inputs": [
+                {"name": "tokens", "dtype": "i32", "shape": [p]},
+                {"name": "length", "dtype": "i32", "shape": []},
+            ],
+            "outputs": [
+                {"name": "logits", "dtype": "f32", "shape": [cfg.vocab_size]},
+                {"name": "k", "dtype": "f32", "shape": [l, hkv, p, dh]},
+                {"name": "v", "dtype": "f32", "shape": [l, hkv, p, dh]},
+                {"name": "scores", "dtype": "f32", "shape": [3, l, p]},
+            ],
+        }
+    nb, b = spec.n_blocks, spec.page_size
+    cache = [l, hkv, nb, b, dh]
+    return {
+        "inputs": [
+            {"name": "token", "dtype": "i32", "shape": []},
+            {"name": "pos", "dtype": "i32", "shape": []},
+            {"name": "k_cache", "dtype": "f32", "shape": cache},
+            {"name": "v_cache", "dtype": "f32", "shape": cache},
+            {"name": "block_table", "dtype": "i32", "shape": [nb]},
+            {"name": "write_slot", "dtype": "i32", "shape": []},
+            {"name": "valid_mask", "dtype": "f32", "shape": [nb, b]},
+        ],
+        "outputs": [
+            {"name": "logits", "dtype": "f32", "shape": [cfg.vocab_size]},
+            {"name": "k_cache", "dtype": "f32", "shape": cache},
+            {"name": "v_cache", "dtype": "f32", "shape": cache},
+            {"name": "scores", "dtype": "f32", "shape": [3, l]},
+        ],
+    }
+
+
+def build(out_dir: str, models=None, use_pallas: bool = True,
+          verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    names = models or list(configs.MODELS)
+    manifest = {
+        "format": 1,
+        "kernel_impl": "pallas_interpret" if use_pallas else "jnp_ref",
+        "models": {},
+        "graphs": [],
+    }
+    for mname in names:
+        cfg = configs.MODELS[mname]
+        wpath = os.path.join(out_dir, f"{mname}.weights.bin")
+        trained = os.path.join(out_dir, f"{mname}.trained.bin")
+        if os.path.exists(trained):
+            weights = model.load_weights(trained)
+            src = "trained"
+        elif os.path.exists(wpath):
+            weights = model.load_weights(wpath)
+            src = "cached"
+        else:
+            weights = model.init_weights(cfg)
+            src = "random-init(seed=42)"
+        model.save_weights(wpath, weights, cfg.weight_names())
+        manifest["models"][mname] = {
+            "vocab_size": cfg.vocab_size, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "d_head": cfg.d_head,
+            "d_ff": cfg.d_ff, "rope_theta": cfg.rope_theta,
+            "norm_eps": cfg.norm_eps, "n_params": cfg.n_params(),
+            "weights": os.path.basename(wpath), "weights_src": src,
+            "weight_names": cfg.weight_names(),
+            "weight_shapes": [list(s) for s in cfg.weight_shapes()],
+        }
+        if verbose:
+            print(f"[aot] {mname}: weights = {src} ({cfg.n_params()} params)")
+
+    for spec in configs.artifact_matrix(names):
+        cfg = configs.MODELS[spec.model]
+        if spec.kind == "prefill":
+            lowered = lower_prefill(cfg, spec.seq_bucket, use_pallas)
+        else:
+            lowered = lower_decode(cfg, spec.n_blocks, spec.page_size,
+                                   use_pallas)
+        text = to_hlo_text(lowered)
+        fname = f"{spec.artifact_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": spec.artifact_name, "kind": spec.kind,
+            "model": spec.model, "path": fname,
+            "seq_bucket": spec.seq_bucket,
+        }
+        if spec.kind == "decode":
+            entry["page_size"] = spec.page_size
+            entry["n_blocks"] = spec.n_blocks
+        entry.update(graph_signature(spec, cfg))
+        manifest["graphs"].append(entry)
+        if verbose:
+            print(f"[aot] lowered {spec.artifact_name} "
+                  f"({len(text) // 1024} KiB hlo text)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"[aot] wrote {len(manifest['graphs'])} graphs -> {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated subset of models")
+    ap.add_argument("--jnp-ref", action="store_true",
+                    help="lower the pure-jnp reference path (ablation)")
+    args = ap.parse_args()
+    models = args.models.split(",") if args.models else None
+    build(args.out, models, use_pallas=not args.jnp_ref)
+
+
+if __name__ == "__main__":
+    main()

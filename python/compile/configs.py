@@ -1,0 +1,137 @@
+"""Model and artifact-matrix configuration shared by model.py / aot.py /
+train.py and the pytest suite.
+
+The three `sim-*` configs are scaled stand-ins for the paper's
+Llama-3.2-1B / 3.2-3B / 3.1-8B (same architecture family: RMSNorm, RoPE,
+GQA, SwiGLU; see DESIGN.md §4 for the substitution rationale). `sim-1b`
+is additionally *trained* on an associative-recall byte task by train.py so
+that accuracy-vs-budget curves are measured on a model that actually uses
+its long context.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    max_seq_len: int = 1024
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    def weight_names(self) -> List[str]:
+        """Canonical flattened weight order — the runtime ABI.
+
+        Rust feeds weights to every graph in exactly this order, after the
+        runtime inputs.
+        """
+        names = ["emb"]
+        for i in range(self.n_layers):
+            for w in (
+                "attn_norm", "wq", "wk", "wv", "wo",
+                "mlp_norm", "w_gate", "w_up", "w_down",
+            ):
+                names.append(f"layer{i}.{w}")
+        names += ["out_norm", "head"]
+        return names
+
+    def weight_shapes(self) -> List[Tuple[int, ...]]:
+        shapes = [(self.vocab_size, self.d_model)]
+        for _ in range(self.n_layers):
+            shapes += [
+                (self.d_model,),
+                (self.d_model, self.q_dim),
+                (self.d_model, self.kv_dim),
+                (self.d_model, self.kv_dim),
+                (self.q_dim, self.d_model),
+                (self.d_model,),
+                (self.d_model, self.d_ff),
+                (self.d_model, self.d_ff),
+                (self.d_ff, self.d_model),
+            ]
+        shapes += [(self.d_model,), (self.d_model, self.vocab_size)]
+        return shapes
+
+    def n_params(self) -> int:
+        return sum(int(__import__("math").prod(s)) for s in self.weight_shapes())
+
+
+# Scaled stand-ins for Llama-3.2-1B / 3.2-3B / 3.1-8B (DESIGN.md §4).
+SIM_1B = ModelConfig(
+    name="sim-1b", vocab_size=256, d_model=64, n_layers=2,
+    n_heads=4, n_kv_heads=2, d_head=32, d_ff=256,
+)
+SIM_3B = ModelConfig(
+    name="sim-3b", vocab_size=256, d_model=128, n_layers=4,
+    n_heads=4, n_kv_heads=2, d_head=32, d_ff=512,
+)
+SIM_8B = ModelConfig(
+    name="sim-8b", vocab_size=256, d_model=256, n_layers=6,
+    n_heads=8, n_kv_heads=2, d_head=32, d_ff=1024,
+)
+
+MODELS = {c.name: c for c in (SIM_1B, SIM_3B, SIM_8B)}
+
+# ---------------------------------------------------------------------------
+# Artifact matrix (DESIGN.md §2): which graphs `make artifacts` lowers.
+# ---------------------------------------------------------------------------
+
+# Prompt-length buckets for the prefill graph.
+PREFILL_BUCKETS = [64, 128, 256, 512]
+# Context-token buckets for the decode graph (page-count = bucket/page_size).
+DECODE_BUCKETS = [128, 256, 512, 768, 1024]
+# vLLM's default page size (paper §5.1) plus the Fig-4 ablation sizes.
+DEFAULT_PAGE_SIZE = 16
+ABLATION_PAGE_SIZES = [8, 32]
+# Decode buckets lowered for the ablation page sizes (keep the matrix small).
+ABLATION_DECODE_BUCKETS = [256, 512, 1024]
+
+
+@dataclass(frozen=True)
+class GraphSpec:
+    """One AOT-lowered graph: (kind, model, static shape params)."""
+    kind: str           # "prefill" | "decode"
+    model: str
+    seq_bucket: int     # prefill: P; decode: context-token bucket
+    page_size: int = DEFAULT_PAGE_SIZE  # decode only
+
+    @property
+    def n_blocks(self) -> int:
+        assert self.kind == "decode"
+        assert self.seq_bucket % self.page_size == 0
+        return self.seq_bucket // self.page_size
+
+    @property
+    def artifact_name(self) -> str:
+        if self.kind == "prefill":
+            return f"prefill_{self.model}_p{self.seq_bucket}"
+        return f"decode_{self.model}_c{self.seq_bucket}_b{self.page_size}"
+
+
+def artifact_matrix(models=None) -> List[GraphSpec]:
+    specs: List[GraphSpec] = []
+    for m in (models or MODELS):
+        for p in PREFILL_BUCKETS:
+            specs.append(GraphSpec("prefill", m, p))
+        for c in DECODE_BUCKETS:
+            specs.append(GraphSpec("decode", m, c, DEFAULT_PAGE_SIZE))
+        for ps in ABLATION_PAGE_SIZES:
+            for c in ABLATION_DECODE_BUCKETS:
+                specs.append(GraphSpec("decode", m, c, ps))
+    return specs

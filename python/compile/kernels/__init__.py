@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels (interpret=True) + pure-jnp oracles."""
+
+from . import ref
+from .paged_attention import paged_attention
+from .prefill_attention import prefill_attention
+from .token_scores import token_scores
+
+__all__ = ["ref", "paged_attention", "prefill_attention", "token_scores"]

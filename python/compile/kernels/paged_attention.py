@@ -1,0 +1,82 @@
+"""Pallas kernel: decode-time paged attention over a block table.
+
+This is the compute hot-spot of the serving system: every decode step, every
+layer, reads the entire live KV cache through the block table. The TPU
+adaptation of vLLM's CUDA PagedAttention (DESIGN.md §3):
+
+  * the block table is the HBM->VMEM gather schedule — each logical page is
+    fetched from its physical slot (`jnp.take` along the page axis stands in
+    for the per-page DMA a Mosaic kernel would issue);
+  * pages are the VMEM tiles: one KV page = one [B, dh] tile, so the VMEM
+    working set is O(NB·B·dh) per KV head and independent of eviction state;
+  * the softmax runs entirely in-register/VMEM — attention weights are never
+    written back, which is precisely why PagedEviction's importance proxy
+    must be attention-free.
+
+Because the grid is over KV heads and the flattened token axis is NB*B, the
+lowered HLO's gather/matmul trip counts scale with the context bucket — this
+is the mechanism that turns block eviction into real decode-step speedup
+under AOT shape bucketing.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _kernel(q_ref, k_ref, v_ref, tbl_ref, vm_ref, o_ref, *, d_head: int):
+    # q_ref: [G, dh]; k_ref, v_ref: [1, NB, B, dh]; tbl_ref: [NB] i32;
+    # vm_ref: [NB, B] f32 validity in logical order.
+    q = q_ref[...]
+    tbl = tbl_ref[...]
+    _, nb, b, dh = k_ref.shape
+    # Gather pages into logical order (the block-table indirection).
+    k = jnp.take(k_ref[0], tbl, axis=0).reshape(nb * b, dh)
+    v = jnp.take(v_ref[0], tbl, axis=0).reshape(nb * b, dh)
+    scores = jnp.einsum(
+        "gd,kd->gk", q, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(d_head))
+    mask = vm_ref[...].reshape(1, nb * b) > 0.5
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = scores.max(axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    attn = e / e.sum(axis=-1, keepdims=True)
+    o_ref[...] = jnp.einsum(
+        "gk,kd->gd", attn, v, preferred_element_type=jnp.float32
+    )
+
+
+def paged_attention(q, k_cache, v_cache, block_table, valid_mask):
+    """Single-token attention against a paged KV cache.
+
+    q: [Hq, dh] (RoPE already applied); k_cache, v_cache: [Hkv, NB, B, dh]
+    in PHYSICAL slot order; block_table: [NB] i32 logical->physical;
+    valid_mask: f32[NB, B] in LOGICAL order — 1.0 for live tokens (including
+    the current one), 0.0 for padding/stale/hole-punched slots.
+    Returns [Hq, dh].
+    """
+    hq, dh = q.shape
+    hkv, nb, b, _ = k_cache.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    block_table = jnp.asarray(block_table, jnp.int32)
+    valid_mask = jnp.asarray(valid_mask, jnp.float32)
+    kernel = functools.partial(_kernel, d_head=dh)
+    return pl.pallas_call(
+        kernel,
+        grid=(hkv,),
+        in_specs=[
+            pl.BlockSpec((g, dh), lambda i: (i, 0)),
+            pl.BlockSpec((1, nb, b, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, nb, b, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((nb,), lambda i: (0,)),
+            pl.BlockSpec((nb, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((g, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, dh), jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, block_table, valid_mask)

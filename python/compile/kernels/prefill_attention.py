@@ -1,0 +1,69 @@
+"""Pallas kernel: causal prompt attention (prefill phase).
+
+Grid layout (the TPU adaptation of the paper's CUDA prefill path, DESIGN.md
+§3): one grid step per KV head group. For each group the query tile
+[G, P, dh] and its KV tile [P, dh] are VMEM-resident; scores and the softmax
+are computed entirely in-tile, so there is no extra HBM traffic for
+attention weights — the property PagedEviction relies on (attention scores
+are never materialized to memory, so eviction must be attention-free).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated in DESIGN.md §Perf instead.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, d_head: int):
+    # q_ref: [G, P, dh]; k_ref, v_ref: [1, P, dh]; len_ref: [1] i32.
+    q = q_ref[...]
+    k = k_ref[0]
+    v = v_ref[0]
+    length = len_ref[0]
+    g, p, dh = q.shape
+    scores = jnp.einsum(
+        "gqd,kd->gqk", q, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(d_head))
+    rows = jax.lax.broadcasted_iota(jnp.int32, (p, p), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (p, p), 1)
+    mask = (cols <= rows) & (cols < length)
+    scores = jnp.where(mask[None], scores, NEG_INF)
+    m = scores.max(axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    attn = e / e.sum(axis=-1, keepdims=True)
+    o_ref[...] = jnp.einsum(
+        "gqk,kd->gqd", attn, v, preferred_element_type=jnp.float32
+    )
+
+
+def prefill_attention(q, k, v, length):
+    """Causal attention over a padded prompt.
+
+    q: [Hq, P, dh]; k, v: [Hkv, P, dh]; length: scalar i32 (valid prefix).
+    Returns [Hq, P, dh] (rows >= length are garbage, never read).
+    """
+    hq, p, dh = q.shape
+    hkv = k.shape[0]
+    assert hq % hkv == 0
+    g = hq // hkv
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+    kernel = functools.partial(_kernel, d_head=dh)
+    return pl.pallas_call(
+        kernel,
+        grid=(hkv,),
+        in_specs=[
+            pl.BlockSpec((g, p, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, p, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, p, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((g, p, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, p, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v, length)

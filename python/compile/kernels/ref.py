@@ -1,0 +1,121 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: the pytest suite asserts the Pallas
+kernels (interpret=True) match these to float32 tolerance, and the L2 model
+can be built against either implementation (``use_pallas=False``) for
+ablation and debugging.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(x, n_rep: int):
+    """[Hkv, S, dh] -> [Hkv * n_rep, S, dh] (GQA head expansion)."""
+    if n_rep == 1:
+        return x
+    hkv, s, dh = x.shape
+    return jnp.broadcast_to(x[:, None], (hkv, n_rep, s, dh)).reshape(
+        hkv * n_rep, s, dh
+    )
+
+
+def causal_attention_ref(q, k, v, length):
+    """Causal self-attention over a (padded) prompt.
+
+    q: [Hq, P, dh]; k, v: [Hkv, P, dh]; length: scalar i32 — positions
+    >= length are padding and masked out of the key axis.
+    Returns [Hq, P, dh]. Rows >= length are garbage (never read).
+    """
+    hq, p, dh = q.shape
+    hkv = k.shape[0]
+    k = repeat_kv(k, hq // hkv)
+    v = repeat_kv(v, hq // hkv)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    rows = jnp.arange(p)[:, None]
+    cols = jnp.arange(p)[None, :]
+    mask = (cols <= rows) & (cols < length)
+    scores = jnp.where(mask[None], scores, NEG_INF)
+    attn = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    attn = attn / attn.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", attn, v)
+
+
+def paged_attention_ref(q, k_cache, v_cache, block_table, valid_mask):
+    """Decode-time attention over a paged KV cache.
+
+    q: [Hq, dh] — the single new token's query (already RoPE-rotated).
+    k_cache, v_cache: [Hkv, NB, B, dh] — physical block pool slice for this
+        sequence (physical slot order).
+    block_table: [NB] i32 — logical->physical block mapping; entries past the
+        live block count may be arbitrary (masked via valid_mask).
+    valid_mask: f32[NB, B] in LOGICAL (table) order — 1.0 where the slot
+        holds a live token (including the token being decoded), 0.0 for
+        padding, stale slots, or tokens hole-punched by *unstructured*
+        eviction baselines (InverseKeyNorm / KeyDiff / StreamingLLM decode).
+    Returns [Hq, dh].
+    """
+    hq, dh = q.shape
+    hkv, nb, b, _ = k_cache.shape
+    # Gather blocks into logical order, then flatten the token axis.
+    k = jnp.take(k_cache, block_table, axis=1).reshape(hkv, nb * b, dh)
+    v = jnp.take(v_cache, block_table, axis=1).reshape(hkv, nb * b, dh)
+    k = repeat_kv(k, hq // hkv)
+    v = repeat_kv(v, hq // hkv)
+    scores = jnp.einsum("hd,hkd->hk", q, k) / jnp.sqrt(jnp.float32(dh))
+    mask = valid_mask.reshape(nb * b) > 0.5
+    scores = jnp.where(mask[None], scores, NEG_INF)
+    attn = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    attn = attn / attn.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hk,hkd->hd", attn, v)
+
+
+def token_scores_ref(k, v, length, eps: float = 1e-8):
+    """Three attention-free importance channels per token (paper Alg. 1 plus
+    the two baseline metrics).
+
+    k, v: [Hkv, P, dh]; length: scalar i32.
+    Returns [3, P]:
+      [0] PagedEviction proxy  S_i = mean_h ||V_hi|| / ||K_hi||  (higher = keep)
+      [1] key L2 norm          mean_h ||K_hi||                   (raw; the
+          InverseKeyNorm policy treats LOW norm as important)
+      [2] KeyDiff cosine       mean_h cos(K_hi, anchor_h)        (raw; KeyDiff
+          treats HIGH similarity as redundant)
+    Entries at positions >= length are zeroed.
+    """
+    hkv, p, dh = k.shape
+    kn = jnp.linalg.norm(k, axis=-1)  # [Hkv, P]
+    vn = jnp.linalg.norm(v, axis=-1)
+    valid = (jnp.arange(p) < length).astype(k.dtype)  # [P]
+    vk_ratio = (vn / (kn + eps)).mean(axis=0)
+    key_l2 = kn.mean(axis=0)
+    # KeyDiff anchor: per-head mean of the *valid* keys.
+    denom = jnp.maximum(valid.sum(), 1.0)
+    anchor = (k * valid[None, :, None]).sum(axis=1) / denom  # [Hkv, dh]
+    an = jnp.linalg.norm(anchor, axis=-1, keepdims=True)  # [Hkv, 1]
+    cos = jnp.einsum("hpd,hd->hp", k, anchor / (an + eps)) / (kn + eps)
+    keydiff = cos.mean(axis=0)
+    return jnp.stack([vk_ratio, key_l2, keydiff]) * valid[None]
+
+
+def decode_token_scores_ref(k_new, v_new, k_cache, block_table, valid_mask,
+                            eps: float = 1e-8):
+    """Score channels for the single token produced by a decode step.
+
+    k_new, v_new: [Hkv, dh]; k_cache: [Hkv, NB, B, dh] (already containing
+    the new key); valid_mask: f32[NB, B] in logical order, including the new
+    token. Returns [3] — same channels as token_scores_ref.
+    """
+    kn = jnp.linalg.norm(k_new, axis=-1)  # [Hkv]
+    vn = jnp.linalg.norm(v_new, axis=-1)
+    vk_ratio = (vn / (kn + eps)).mean()
+    key_l2 = kn.mean()
+    hkv, nb, b, dh = k_cache.shape
+    k = jnp.take(k_cache, block_table, axis=1).reshape(hkv, nb * b, dh)
+    valid = valid_mask.reshape(nb * b).astype(k.dtype)
+    denom = jnp.maximum(valid.sum(), 1.0)
+    anchor = (k * valid[None, :, None]).sum(axis=1) / denom  # [Hkv, dh]
+    an = jnp.linalg.norm(anchor, axis=-1)
+    cos = jnp.einsum("hd,hd->h", k_new, anchor) / ((kn * an) + eps)
+    return jnp.stack([vk_ratio, key_l2, cos.mean()])

@@ -1,0 +1,65 @@
+"""Pallas kernel: attention-free token-importance scores (paper Alg. 1).
+
+Computes, in a single fused pass over the K/V tiles that the prefill kernel
+already touched (no extra HBM traffic — DESIGN.md §3):
+
+  channel 0  S_i = mean_h ||V_hi|| / ||K_hi||   — PagedEviction's proxy
+  channel 1  mean_h ||K_hi||                    — Inverse Key L2-Norm input
+  channel 2  mean_h cos(K_hi, mean-key anchor)  — KeyDiff input
+
+The three channels cost one extra reduction each over data already in VMEM;
+this is the paper's point that the proxy is computable "on-the-fly without
+modifying the attention kernel or maintaining additional memory".
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-8
+
+
+def _kernel(k_ref, v_ref, len_ref, o_ref, *, n_kv_heads: int):
+    # k_ref, v_ref: [Hkv, P, dh]; len_ref: [1] i32; o_ref: [3, P].
+    k = k_ref[...]
+    v = v_ref[...]
+    length = len_ref[0]
+    hkv, p, dh = k.shape
+    kn = jnp.sqrt(jnp.sum(k * k, axis=-1))  # [Hkv, P]
+    vn = jnp.sqrt(jnp.sum(v * v, axis=-1))
+    valid = (jax.lax.broadcasted_iota(jnp.int32, (p,), 0) < length).astype(
+        k.dtype
+    )
+    vk_ratio = (vn / (kn + EPS)).mean(axis=0)
+    key_l2 = kn.mean(axis=0)
+    denom = jnp.maximum(valid.sum(), 1.0)
+    anchor = (k * valid[None, :, None]).sum(axis=1) / denom  # [Hkv, dh]
+    an = jnp.sqrt(jnp.sum(anchor * anchor, axis=-1, keepdims=True))
+    cos = jnp.einsum(
+        "hpd,hd->hp", k, anchor / (an + EPS),
+        preferred_element_type=jnp.float32,
+    ) / (kn + EPS)
+    keydiff = cos.mean(axis=0)
+    o_ref[...] = jnp.stack([vk_ratio, key_l2, keydiff]) * valid[None]
+
+
+def token_scores(k, v, length):
+    """k, v: [Hkv, P, dh]; length: scalar i32. Returns [3, P] (see module
+    docstring); positions >= length are zeroed."""
+    hkv, p, dh = k.shape
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+    kernel = functools.partial(_kernel, n_kv_heads=hkv)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((hkv, p, dh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((hkv, p, dh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((3, p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((3, p), jnp.float32),
+        interpret=True,
+    )(k, v, length)

@@ -1,0 +1,245 @@
+"""Layer-2 JAX model: Llama-style decoder (RMSNorm, RoPE, GQA, SwiGLU).
+
+Two graphs per model, AOT-lowered by aot.py and executed from Rust via PJRT:
+
+  prefill(tokens i32[P], length i32, *weights)
+      -> (logits f32[V], k f32[L,Hkv,P,dh], v f32[L,Hkv,P,dh],
+          scores f32[3,L,P])
+
+  decode(token i32[], pos i32[], k_cache f32[L,Hkv,NB,B,dh],
+         v_cache f32[L,Hkv,NB,B,dh], block_table i32[NB],
+         write_slot i32[], valid_mask f32[NB,B], *weights)
+      -> (logits f32[V], k_cache', v_cache', scores f32[3,L])
+
+Weights are passed as parameters (NOT baked as constants) so the HLO text
+stays small; Rust loads them once from <model>.weights.bin and keeps them
+device-resident. The flattened order is ModelConfig.weight_names() — that
+list is the runtime ABI.
+
+Conventions shared with the Rust coordinator (rust/src/runtime):
+  * K is cached POST-RoPE, so eviction/gather never re-rotates keys and
+    retained tokens keep their original positions (standard for
+    eviction-style compression).
+  * The block table maps logical page order -> physical slot; `valid_mask`
+    marks live tokens in logical order (1.0/0.0) — structured policies keep
+    it a full prefix, unstructured baselines hole-punch it; `write_slot` is
+    a PHYSICAL flat index block*B + offset.
+"""
+
+import struct
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import paged_attention, prefill_attention, token_scores
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_weights(cfg: ModelConfig, seed: int = 42) -> Dict[str, np.ndarray]:
+    """Deterministic scaled-normal init, keyed by the canonical weight order."""
+    rng = np.random.default_rng(seed)
+    out: Dict[str, np.ndarray] = {}
+    for name, shape in zip(cfg.weight_names(), cfg.weight_shapes()):
+        if name.endswith("norm"):
+            w = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 1.0 / np.sqrt(fan_in)
+            w = rng.normal(0.0, std, size=shape).astype(np.float32)
+        out[name] = w
+    return out
+
+
+_DTYPE_CODES = {0: np.float32, 1: np.int32}
+_DTYPE_IDS = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def save_weights(path: str, weights: Dict[str, np.ndarray],
+                 order: List[str]) -> None:
+    """PEW1 container (DESIGN.md §7): magic, count, then per tensor
+    (u16 name_len, name, u8 dtype, u8 rank, u32 dims[rank], raw LE data)."""
+    with open(path, "wb") as f:
+        f.write(b"PEW1")
+        f.write(struct.pack("<I", len(order)))
+        for name in order:
+            w = np.ascontiguousarray(weights[name])
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPE_IDS[w.dtype], w.ndim))
+            for d in w.shape:
+                f.write(struct.pack("<I", d))
+            f.write(w.tobytes())
+
+
+def load_weights(path: str) -> Dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == b"PEW1", "bad magic"
+    (count,) = struct.unpack_from("<I", data, 4)
+    off = 8
+    out: Dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off:off + nlen].decode()
+        off += nlen
+        dtype_id, rank = struct.unpack_from("<BB", data, off)
+        off += 2
+        dims = struct.unpack_from(f"<{rank}I", data, off)
+        off += 4 * rank
+        dt = np.dtype(_DTYPE_CODES[dtype_id])
+        size = int(np.prod(dims)) * dt.itemsize
+        out[name] = np.frombuffer(
+            data, dt, count=int(np.prod(dims)), offset=off
+        ).reshape(dims).copy()
+        off += size
+    return out
+
+
+def flatten_weights(cfg: ModelConfig, weights: Dict[str, np.ndarray]):
+    return [jnp.asarray(weights[n]) for n in cfg.weight_names()]
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, theta: float):
+    """x: [H, S, dh]; positions: [S] i32. Llama-style rotary embedding."""
+    h, s, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None]  # [S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+
+
+def _unpack_layers(cfg: ModelConfig, flat):
+    """flat weights (ABI order) -> (emb, [per-layer dicts], out_norm, head)."""
+    emb = flat[0]
+    layers = []
+    i = 1
+    for _ in range(cfg.n_layers):
+        names = ("attn_norm", "wq", "wk", "wv", "wo",
+                 "mlp_norm", "w_gate", "w_up", "w_down")
+        layers.append(dict(zip(names, flat[i:i + 9])))
+        i += 9
+    return emb, layers, flat[i], flat[i + 1]
+
+
+def _attn_proj(cfg: ModelConfig, x, layer, positions):
+    """Project + reshape + rope. x: [S, d]. Returns q:[Hq,S,dh],
+    k,v:[Hkv,S,dh] (k post-RoPE, v raw)."""
+    s = x.shape[0]
+    q = (x @ layer["wq"]).reshape(s, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+    k = (x @ layer["wk"]).reshape(s, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    v = (x @ layer["wv"]).reshape(s, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mlp(x, layer):
+    return (jax.nn.silu(x @ layer["w_gate"]) * (x @ layer["w_up"])) @ layer["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Graphs
+# ---------------------------------------------------------------------------
+
+
+def prefill_fn(cfg: ModelConfig, tokens, length, *flat_weights,
+               use_pallas: bool = True):
+    """See module docstring. tokens: i32[P]; length: i32 scalar."""
+    emb, layers, out_norm, head = _unpack_layers(cfg, list(flat_weights))
+    p = tokens.shape[0]
+    positions = jnp.arange(p, dtype=jnp.int32)
+    h = emb[tokens]
+    ks, vs, scores = [], [], []
+    for layer in layers:
+        x = rms_norm(h, layer["attn_norm"], cfg.norm_eps)
+        q, k, v = _attn_proj(cfg, x, layer, positions)
+        if use_pallas:
+            attn = prefill_attention(q, k, v, length)
+            sc = token_scores(k, v, length)
+        else:
+            attn = kref.causal_attention_ref(q, k, v, length)
+            sc = kref.token_scores_ref(k, v, length)
+        attn = attn.transpose(1, 0, 2).reshape(p, cfg.q_dim)
+        h = h + attn @ layer["wo"]
+        x = rms_norm(h, layer["mlp_norm"], cfg.norm_eps)
+        h = h + _mlp(x, layer)
+        ks.append(k)
+        vs.append(v)
+        scores.append(sc)
+    h = rms_norm(h, out_norm, cfg.norm_eps)
+    last = jax.lax.dynamic_index_in_dim(h, length - 1, axis=0, keepdims=False)
+    logits = last @ head
+    k_all = jnp.stack(ks)       # [L, Hkv, P, dh]
+    v_all = jnp.stack(vs)
+    sc_all = jnp.stack(scores).transpose(1, 0, 2)  # [3, L, P]
+    return logits, k_all, v_all, sc_all
+
+
+def decode_fn(cfg: ModelConfig, token, pos, k_cache, v_cache, block_table,
+              write_slot, valid_mask, *flat_weights, use_pallas: bool = True):
+    """One decode step against the paged cache. See module docstring.
+
+    token, pos, write_slot: i32 scalars; k_cache/v_cache:
+    [L, Hkv, NB, B, dh]; block_table: i32[NB]; valid_mask: f32[NB, B] in
+    LOGICAL order, 1.0 for live tokens INCLUDING this one (unstructured
+    baselines hole-punch individual slots to 0.0). write_slot is the
+    physical flat slot where this token's K/V goes.
+    """
+    emb, layers, out_norm, head = _unpack_layers(cfg, list(flat_weights))
+    l, hkv, nb, b, dh = k_cache.shape
+    positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    h = emb[jnp.reshape(token, (1,))]  # [1, d]
+    new_k_caches, new_v_caches, scores = [], [], []
+    for li, layer in enumerate(layers):
+        x = rms_norm(h, layer["attn_norm"], cfg.norm_eps)
+        q, k_new, v_new = _attn_proj(cfg, x, layer, positions)
+        # Scatter the new token's K/V into its physical slot.
+        kc = k_cache[li].reshape(hkv, nb * b, dh)
+        vc = v_cache[li].reshape(hkv, nb * b, dh)
+        kc = jax.lax.dynamic_update_slice(kc, k_new, (0, write_slot, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v_new, (0, write_slot, 0))
+        kc4 = kc.reshape(hkv, nb, b, dh)
+        vc4 = vc.reshape(hkv, nb, b, dh)
+        if use_pallas:
+            attn = paged_attention(q[:, 0], kc4, vc4, block_table, valid_mask)
+        else:
+            attn = kref.paged_attention_ref(
+                q[:, 0], kc4, vc4, block_table, valid_mask
+            )
+        h = h + attn.reshape(1, cfg.q_dim) @ layer["wo"]
+        x = rms_norm(h, layer["mlp_norm"], cfg.norm_eps)
+        h = h + _mlp(x, layer)
+        new_k_caches.append(kc4)
+        new_v_caches.append(vc4)
+        scores.append(
+            kref.decode_token_scores_ref(
+                k_new[:, 0], v_new[:, 0], kc4, block_table, valid_mask
+            )
+        )
+    h = rms_norm(h, out_norm, cfg.norm_eps)
+    logits = (h @ head)[0]
+    sc = jnp.stack(scores, axis=1)  # [3, L]
+    return logits, jnp.stack(new_k_caches), jnp.stack(new_v_caches), sc

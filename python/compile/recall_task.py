@@ -1,0 +1,98 @@
+"""Associative-recall task definition — shared between the trainer and the
+Rust workload generator (rust/src/workload/recall.rs mirrors these exact
+constants; change them together).
+
+A sequence is a stream of (key, value) pairs under a per-sequence random
+mapping, optionally ending in a query:
+
+    k1 v1 k2 v2 k1 v1 ... Q kq  ->  model must emit v(kq)
+
+Every later occurrence of a key is followed by the same value, so a
+next-token LM that forms induction heads learns to copy the value from the
+earlier occurrence — making long-context retention (and therefore the KV
+eviction policy) directly measurable as recall accuracy.
+"""
+
+import numpy as np
+
+PAD = 0
+KEY_BASE = 1       # keys: 1..=N_KEYS
+N_KEYS = 16
+VAL_BASE = 32      # values: 32..=32+N_VALS-1
+N_VALS = 16
+QUERY = 64         # query marker
+VOCAB_USED = 65    # tokens above this are unused (vocab is 256)
+
+
+def sample_mapping(rng: np.random.Generator) -> np.ndarray:
+    """Per-sequence key->value mapping (random with replacement)."""
+    return rng.integers(0, N_VALS, size=N_KEYS) + VAL_BASE
+
+
+def make_training_batch(rng: np.random.Generator, batch: int, seq: int):
+    """LM training batch matching the eval format: a pair stream with
+    interspersed [QUERY, k] probes whose next token must be the value bound
+    to k earlier in the sequence.
+
+    Returns (tokens [B,S] int32, loss_mask [B,S] float32): value positions
+    after a repeated key get weight 2.0, first occurrences 1.0, values after
+    a query probe 4.0 (the eval-critical pattern), everything else 0.
+    """
+    toks = np.zeros((batch, seq), np.int32)
+    mask = np.zeros((batch, seq), np.float32)
+    for b in range(batch):
+        vmap = sample_mapping(rng)
+        # curriculum: some sequences use few keys (dense repeats — easy for
+        # the induction circuit to discover), others the full key set
+        n_active = int(rng.choice([4, 8, N_KEYS]))
+        active = rng.permutation(N_KEYS)[:n_active]
+        seen = []
+        i = 0
+        while i + 2 < seq:
+            if seen and i > seq // 8 and rng.random() < 0.25 and i + 3 < seq:
+                # query probe on a previously bound key
+                k = int(seen[rng.integers(0, len(seen))])
+                toks[b, i] = QUERY
+                toks[b, i + 1] = KEY_BASE + k
+                toks[b, i + 2] = vmap[k]
+                mask[b, i + 2] = 4.0
+                i += 3
+            else:
+                k = int(active[rng.integers(0, n_active)])
+                toks[b, i] = KEY_BASE + k
+                toks[b, i + 1] = vmap[k]
+                mask[b, i + 1] = 2.0 if k in seen else 0.2
+                if k not in seen:
+                    seen.append(k)
+                i += 2
+    return toks, mask
+
+
+def make_eval_prompt(rng: np.random.Generator, prompt_len: int,
+                     needle_frac: float = 0.25):
+    """Needle-retrieval prompt: pair stream with the queried key planted at
+    `needle_frac` of the way through, query at the end.
+
+    Returns (tokens list[int], answer token int, needle_positions (k_pos,
+    v_pos)). The prompt is exactly `prompt_len` tokens and ends with
+    [QUERY, key]; the model's next token should be the answer value.
+    """
+    assert prompt_len >= 8 and prompt_len % 2 == 0
+    vmap = sample_mapping(rng)
+    qk = int(rng.integers(0, N_KEYS))
+    n_pairs = (prompt_len - 2) // 2
+    needle_at = max(0, min(n_pairs - 1, int(n_pairs * needle_frac)))
+    toks = []
+    for p in range(n_pairs):
+        if p == needle_at:
+            k = qk
+        else:
+            # distractors: any key except the queried one
+            k = int(rng.integers(0, N_KEYS - 1))
+            if k >= qk:
+                k += 1
+        toks += [KEY_BASE + k, int(vmap[k])]
+    toks += [QUERY, KEY_BASE + qk]
+    answer = int(vmap[qk])
+    k_pos = 2 * needle_at
+    return toks, answer, (k_pos, k_pos + 1)

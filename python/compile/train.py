@@ -1,0 +1,132 @@
+"""Build-time trainer: teach sim-1b associative recall so the accuracy
+benches measure a model that genuinely uses its long context.
+
+Runs once (`make train`, ~10-15 min on 1 CPU core), writes
+artifacts/sim-1b.trained.bin; aot.py prefers trained weights when present.
+
+Usage: python -m compile.train --out ../artifacts [--steps N]
+"""
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs, model, recall_task
+
+CFG = configs.SIM_1B
+
+
+def forward_logits(cfg, params, tokens):
+    """Training forward: all-position logits. tokens: [B, S] i32.
+    Reuses the exact inference building blocks (jnp attention path)."""
+    emb, layers, out_norm, head = model._unpack_layers(
+        cfg, [params[n] for n in cfg.weight_names()]
+    )
+
+    def one(seq):
+        s = seq.shape[0]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        h = emb[seq]
+        from .kernels import ref as kref
+        for layer in layers:
+            x = model.rms_norm(h, layer["attn_norm"], cfg.norm_eps)
+            q, k, v = model._attn_proj(cfg, x, layer, positions)
+            attn = kref.causal_attention_ref(q, k, v, s)
+            h = h + attn.transpose(1, 0, 2).reshape(s, cfg.q_dim) @ layer["wo"]
+            x = model.rms_norm(h, layer["mlp_norm"], cfg.norm_eps)
+            h = h + model._mlp(x, layer)
+        h = model.rms_norm(h, out_norm, cfg.norm_eps)
+        return h @ head
+
+    return jax.vmap(one)(tokens)
+
+
+def loss_fn(params, cfg, tokens, mask):
+    logits = forward_logits(cfg, params, tokens)  # [B, S, V]
+    targets = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    w = mask[:, 1:]
+    return (nll * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    out_p, out_m, out_v = {}, {}, {}
+    for k in params:
+        m_k = b1 * m[k] + (1 - b1) * grads[k]
+        v_k = b2 * v[k] + (1 - b2) * grads[k] ** 2
+        mhat = m_k / (1 - b1 ** step)
+        vhat = v_k / (1 - b2 ** step)
+        out_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        out_m[k], out_v[k] = m_k, v_k
+    return out_p, out_m, out_v
+
+
+@functools.partial(jax.jit, static_argnums=(5,))
+def train_step(params, m, v, batch, step_lr, cfg):
+    tokens, mask, step, lr = batch
+    loss, grads = jax.value_and_grad(loss_fn)(params, cfg, tokens, mask)
+    params, m, v = adam_update(params, grads, m, v, step, lr)
+    return params, m, v, loss
+
+
+def eval_recall(params, cfg, rng, n_prompts=32, prompt_len=192) -> float:
+    """Greedy one-token answer accuracy on needle prompts (full cache)."""
+    hits = 0
+    for _ in range(n_prompts):
+        toks, ans, _ = recall_task.make_eval_prompt(rng, prompt_len)
+        logits = forward_logits(
+            cfg, params, jnp.asarray([toks], jnp.int32)
+        )[0, -1]
+        hits += int(int(jnp.argmax(logits)) == ans)
+    return hits / n_prompts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=1400)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(args.seed)
+    weights = model.init_weights(CFG, seed=42)
+    params = {k: jnp.asarray(w) for k, w in weights.items()}
+    m = {k: jnp.zeros_like(p) for k, p in params.items()}
+    v = {k: jnp.zeros_like(p) for k, p in params.items()}
+
+    t0 = time.time()
+    for step in range(1, args.steps + 1):
+        warm = min(1.0, step / 100.0)
+        decay = 0.5 * (1 + np.cos(np.pi * step / args.steps))
+        lr = args.lr * warm * (0.1 + 0.9 * decay)
+        toks, mask = recall_task.make_training_batch(rng, args.batch, args.seq)
+        params, m, v, loss = train_step(
+            params, m, v,
+            (jnp.asarray(toks), jnp.asarray(mask),
+             jnp.float32(step), jnp.float32(lr)),
+            None, CFG,
+        )
+        if step % 100 == 0 or step == 1:
+            acc = eval_recall(params, CFG, np.random.default_rng(123))
+            print(f"[train] step {step:5d} loss {float(loss):.4f} "
+                  f"recall@192 {acc:.2f} lr {lr:.2e} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+
+    acc = eval_recall(params, CFG, np.random.default_rng(123), n_prompts=64)
+    print(f"[train] final recall@192 = {acc:.3f}")
+    out = {k: np.asarray(p) for k, p in params.items()}
+    path = f"{args.out}/sim-1b.trained.bin"
+    model.save_weights(path, out, CFG.weight_names())
+    print(f"[train] wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

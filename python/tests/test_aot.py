@@ -1,0 +1,85 @@
+"""AOT pipeline: HLO-text emission, manifest integrity, artifact matrix."""
+
+import json
+import os
+import re
+import tempfile
+
+import pytest
+
+from compile import aot, configs
+
+
+def _entry_param_count(text: str) -> int:
+    """Number of parameters of the entry computation (sub-computations also
+    contain parameter() lines, so count the distinct indices on the maximal
+    computation — the entry has the most)."""
+    return 1 + max(int(m) for m in re.findall(r"parameter\((\d+)\)", text))
+
+
+class TestLowering:
+    def test_prefill_hlo_text(self):
+        lowered = aot.lower_prefill(configs.SIM_1B, 16)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        # Weights-as-parameters ABI: 2 runtime inputs + 21 weights
+        assert _entry_param_count(text) == 2 + len(configs.SIM_1B.weight_names())
+
+    def test_decode_hlo_text(self):
+        lowered = aot.lower_decode(configs.SIM_1B, 8, 16)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert _entry_param_count(text) == 7 + len(configs.SIM_1B.weight_names())
+
+    def test_jnp_ref_path_lowers(self):
+        text = aot.to_hlo_text(
+            aot.lower_decode(configs.SIM_1B, 4, 16, use_pallas=False)
+        )
+        assert text.startswith("HloModule")
+
+
+class TestArtifactMatrix:
+    def test_matrix_covers_paper_settings(self):
+        specs = configs.artifact_matrix()
+        names = {s.artifact_name for s in specs}
+        assert len(names) == len(specs), "artifact names must be unique"
+        # page 16 default (paper §5.1) for every model and decode bucket
+        for m in configs.MODELS:
+            for c in configs.DECODE_BUCKETS:
+                assert f"decode_{m}_c{c}_b16" in names
+            # fig-4 ablation page sizes
+            for ps in configs.ABLATION_PAGE_SIZES:
+                assert f"decode_{m}_c512_b{ps}" in names
+
+    def test_block_math(self):
+        for s in configs.artifact_matrix():
+            if s.kind == "decode":
+                assert s.n_blocks * s.page_size == s.seq_bucket
+
+    def test_signatures_match_configs(self):
+        for spec in configs.artifact_matrix(["sim-1b"]):
+            cfg = configs.MODELS[spec.model]
+            sig = aot.graph_signature(spec, cfg)
+            if spec.kind == "decode":
+                cache = sig["inputs"][2]["shape"]
+                assert cache == [cfg.n_layers, cfg.n_kv_heads,
+                                 spec.n_blocks, spec.page_size, cfg.d_head]
+
+
+class TestBuild:
+    def test_build_single_model_subset(self):
+        """End-to-end aot build for one model (full matrix covered by
+        `make artifacts`; keep the test fast)."""
+        with tempfile.TemporaryDirectory() as d:
+            manifest = aot.build(d, models=["sim-1b"], verbose=False)
+            assert os.path.exists(os.path.join(d, "manifest.json"))
+            assert os.path.exists(os.path.join(d, "sim-1b.weights.bin"))
+            with open(os.path.join(d, "manifest.json")) as f:
+                on_disk = json.load(f)
+            assert on_disk["models"]["sim-1b"]["n_params"] == \
+                configs.SIM_1B.n_params()
+            for g in manifest["graphs"]:
+                path = os.path.join(d, g["path"])
+                assert os.path.getsize(path) > 1000
+                with open(path) as fh:
+                    assert fh.read(9) == "HloModule"

@@ -1,0 +1,241 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Includes hypothesis sweeps over shapes/dtypes/valid-lengths per the repo
+test policy: the kernels must match ref.py to float32 tolerance for any
+head-count/page-size/sequence combination the artifact matrix can produce.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    paged_attention, prefill_attention, token_scores, ref,
+)
+
+
+def prefix_mask(nb, b, n):
+    """Structured prefix-validity mask: first n logical slots live."""
+    return (np.arange(nb * b) < n).astype(np.float32).reshape(nb, b)
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# prefill_attention
+# ---------------------------------------------------------------------------
+
+class TestPrefillAttention:
+    @pytest.mark.parametrize("hq,hkv", [(4, 2), (4, 4), (8, 2), (2, 1)])
+    @pytest.mark.parametrize("p", [8, 64])
+    def test_matches_ref(self, hq, hkv, p):
+        rng = np.random.default_rng(0)
+        q, k, v = _rand(rng, hq, p, 16), _rand(rng, hkv, p, 16), _rand(rng, hkv, p, 16)
+        n = p - 3
+        got = prefill_attention(q, k, v, n)
+        want = ref.causal_attention_ref(q, k, v, n)
+        np.testing.assert_allclose(got[:, :n], want[:, :n], rtol=RTOL, atol=ATOL)
+
+    def test_full_length(self):
+        rng = np.random.default_rng(1)
+        q, k, v = _rand(rng, 4, 32, 16), _rand(rng, 2, 32, 16), _rand(rng, 2, 32, 16)
+        got = prefill_attention(q, k, v, 32)
+        want = ref.causal_attention_ref(q, k, v, 32)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_first_row_attends_only_self(self):
+        """Causality: row 0's output must equal v[0] expanded over groups."""
+        rng = np.random.default_rng(2)
+        q, k, v = _rand(rng, 4, 16, 8), _rand(rng, 2, 16, 8), _rand(rng, 2, 16, 8)
+        got = prefill_attention(q, k, v, 16)
+        want = ref.repeat_kv(v, 2)[:, 0]
+        np.testing.assert_allclose(got[:, 0], want, rtol=RTOL, atol=ATOL)
+
+    def test_padding_does_not_leak(self):
+        """Changing K/V beyond `length` must not change valid outputs."""
+        rng = np.random.default_rng(3)
+        q, k, v = _rand(rng, 2, 32, 8), _rand(rng, 1, 32, 8), _rand(rng, 1, 32, 8)
+        n = 20
+        base = prefill_attention(q, k, v, n)
+        k2 = k.at[:, n:].set(99.0)
+        v2 = v.at[:, n:].set(-99.0)
+        pert = prefill_attention(q, k2, v2, n)
+        np.testing.assert_allclose(base[:, :n], pert[:, :n], rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        hkv=st.sampled_from([1, 2, 4]),
+        group=st.sampled_from([1, 2, 4]),
+        p=st.sampled_from([4, 8, 16, 48, 64]),
+        dh=st.sampled_from([4, 8, 16, 32]),
+        frac=st.floats(0.1, 1.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, hkv, group, p, dh, frac, seed):
+        rng = np.random.default_rng(seed)
+        hq = hkv * group
+        n = max(1, int(p * frac))
+        q, k, v = _rand(rng, hq, p, dh), _rand(rng, hkv, p, dh), _rand(rng, hkv, p, dh)
+        got = prefill_attention(q, k, v, n)
+        want = ref.causal_attention_ref(q, k, v, n)
+        np.testing.assert_allclose(got[:, :n], want[:, :n], rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged_attention
+# ---------------------------------------------------------------------------
+
+class TestPagedAttention:
+    @pytest.mark.parametrize("nb,b", [(4, 8), (8, 16), (2, 32), (16, 8)])
+    def test_matches_ref(self, nb, b):
+        rng = np.random.default_rng(0)
+        hq, hkv, dh = 4, 2, 16
+        q = _rand(rng, hq, dh)
+        kc, vc = _rand(rng, hkv, nb, b, dh), _rand(rng, hkv, nb, b, dh)
+        tbl = jnp.asarray(rng.permutation(nb), jnp.int32)
+        m = jnp.asarray(prefix_mask(nb, b, nb * b - 5))
+        got = paged_attention(q, kc, vc, tbl, m)
+        want = ref.paged_attention_ref(q, kc, vc, tbl, m)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_block_table_permutation_invariance(self):
+        """Attention over a full cache is a set operation: permuting both the
+        physical blocks and the table must not change the output."""
+        rng = np.random.default_rng(4)
+        hq, hkv, nb, b, dh = 4, 2, 4, 8, 16
+        q = _rand(rng, hq, dh)
+        kc, vc = _rand(rng, hkv, nb, b, dh), _rand(rng, hkv, nb, b, dh)
+        ident = jnp.arange(nb, dtype=jnp.int32)
+        full = jnp.asarray(prefix_mask(nb, b, nb * b))
+        base = paged_attention(q, kc, vc, ident, full)
+        perm = np.asarray([2, 0, 3, 1])
+        # physical blocks shuffled; table now maps logical i -> where block i went
+        kc2 = jnp.asarray(np.asarray(kc)[:, perm])
+        vc2 = jnp.asarray(np.asarray(vc)[:, perm])
+        inv = np.argsort(perm).astype(np.int32)
+        got = paged_attention(q, kc2, vc2, jnp.asarray(inv), full)
+        np.testing.assert_allclose(got, base, rtol=RTOL, atol=ATOL)
+
+    def test_invalid_slots_masked(self):
+        """Garbage beyond n_valid (incl. stale evicted blocks) is invisible."""
+        rng = np.random.default_rng(5)
+        hq, hkv, nb, b, dh = 2, 1, 4, 8, 8
+        q = _rand(rng, hq, dh)
+        kc, vc = _rand(rng, hkv, nb, b, dh), _rand(rng, hkv, nb, b, dh)
+        tbl = jnp.arange(nb, dtype=jnp.int32)
+        m = jnp.asarray(prefix_mask(nb, b, 2 * b + 3))
+        base = paged_attention(q, kc, vc, tbl, m)
+        kc2 = kc.at[:, 3].set(1e4)  # stale physical block
+        vc2 = vc.at[:, 3].set(-1e4)
+        got = paged_attention(q, kc2, vc2, tbl, m)
+        np.testing.assert_allclose(got, base, rtol=RTOL, atol=ATOL)
+
+    def test_single_valid_token(self):
+        rng = np.random.default_rng(6)
+        hq, hkv, nb, b, dh = 2, 2, 2, 4, 8
+        q = _rand(rng, hq, dh)
+        kc, vc = _rand(rng, hkv, nb, b, dh), _rand(rng, hkv, nb, b, dh)
+        tbl = jnp.arange(nb, dtype=jnp.int32)
+        got = paged_attention(q, kc, vc, tbl, jnp.asarray(prefix_mask(nb, b, 1)))
+        np.testing.assert_allclose(got, vc[:, 0, 0], rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        hkv=st.sampled_from([1, 2]),
+        group=st.sampled_from([1, 2, 4]),
+        nb=st.sampled_from([2, 4, 8]),
+        b=st.sampled_from([4, 8, 16, 32]),
+        dh=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, hkv, group, nb, b, dh, seed):
+        rng = np.random.default_rng(seed)
+        hq = hkv * group
+        q = _rand(rng, hq, dh)
+        kc, vc = _rand(rng, hkv, nb, b, dh), _rand(rng, hkv, nb, b, dh)
+        tbl = jnp.asarray(rng.permutation(nb), jnp.int32)
+        # random hole-punched mask (unstructured eviction shape)
+        m = (rng.random((nb, b)) < 0.7).astype(np.float32)
+        m[0, 0] = 1.0  # at least one live token
+        m = jnp.asarray(m)
+        got = paged_attention(q, kc, vc, tbl, m)
+        want = ref.paged_attention_ref(q, kc, vc, tbl, m)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# token_scores
+# ---------------------------------------------------------------------------
+
+class TestTokenScores:
+    @pytest.mark.parametrize("hkv,p,dh", [(2, 16, 8), (1, 64, 16), (4, 32, 32)])
+    def test_matches_ref(self, hkv, p, dh):
+        rng = np.random.default_rng(0)
+        k, v = _rand(rng, hkv, p, dh), _rand(rng, hkv, p, dh)
+        n = p - 2
+        got = token_scores(k, v, n)
+        want = ref.token_scores_ref(k, v, n)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_invalid_positions_zeroed(self):
+        rng = np.random.default_rng(1)
+        k, v = _rand(rng, 2, 16, 8), _rand(rng, 2, 16, 8)
+        got = np.asarray(token_scores(k, v, 10))
+        assert (got[:, 10:] == 0).all()
+
+    def test_vk_ratio_semantics(self):
+        """Doubling V doubles channel 0 and leaves channels 1-2 unchanged."""
+        rng = np.random.default_rng(2)
+        k, v = _rand(rng, 2, 16, 8), _rand(rng, 2, 16, 8)
+        a = np.asarray(token_scores(k, v, 16))
+        b = np.asarray(token_scores(k, 2.0 * v, 16))
+        np.testing.assert_allclose(b[0], 2.0 * a[0], rtol=1e-4)
+        np.testing.assert_allclose(b[1:], a[1:], rtol=1e-5)
+
+    def test_keydiff_identical_keys_cos_one(self):
+        """All-identical keys are maximally redundant: cosine == 1."""
+        k = jnp.ones((2, 8, 4), jnp.float32)
+        rng = np.random.default_rng(3)
+        v = _rand(rng, 2, 8, 4)
+        got = np.asarray(token_scores(k, v, 8))
+        np.testing.assert_allclose(got[2], np.ones(8), rtol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        hkv=st.sampled_from([1, 2, 4]),
+        p=st.sampled_from([4, 16, 64]),
+        dh=st.sampled_from([4, 16, 32]),
+        frac=st.floats(0.2, 1.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, hkv, p, dh, frac, seed):
+        rng = np.random.default_rng(seed)
+        k, v = _rand(rng, hkv, p, dh), _rand(rng, hkv, p, dh)
+        n = max(1, int(p * frac))
+        got = token_scores(k, v, n)
+        want = ref.token_scores_ref(k, v, n)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestDecodeTokenScores:
+    def test_consistent_with_prefill_scores(self):
+        """The decode-step score of token i must match the prefill kernel's
+        score for the same token (same K/V contents)."""
+        rng = np.random.default_rng(7)
+        hkv, p, dh, b = 2, 16, 8, 4
+        k, v = _rand(rng, hkv, p, dh), _rand(rng, hkv, p, dh)
+        full = ref.token_scores_ref(k, v, p)
+        nb = p // b
+        kc = np.asarray(k).reshape(hkv, nb, b, dh)
+        tbl = jnp.arange(nb, dtype=jnp.int32)
+        got = ref.decode_token_scores_ref(
+            k[:, p - 1], v[:, p - 1], jnp.asarray(kc), tbl,
+            jnp.asarray(prefix_mask(nb, b, p)),
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full)[:, p - 1],
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,32 @@
+//! Shared bench plumbing (criterion is not in the offline vendor set; these
+//! benches are plain binaries with `harness = false` that print the
+//! paper-figure tables to stdout).
+
+use paged_eviction::util::args::{ArgSpec, Args};
+
+/// Parse bench args after the `--` separator cargo-bench passes through.
+/// Also tolerates the `--bench` flag cargo injects.
+pub fn bench_args(spec: ArgSpec) -> Args {
+    let argv: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| a != "--bench")
+        .collect();
+    match spec.parse(&argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+pub fn artifacts_dir() -> String {
+    std::env::var("PAGED_EVICTION_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    })
+}
+
+/// Paper-style section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,180 @@
+//! Figure 2 — Accuracy vs cache budget, five LongBench datasets.
+//!
+//! Two tracks (DESIGN.md §4/§5):
+//!   SIM:  paper-scale budgets (256..4096) on the attention-mass simulator,
+//!         five dataset profiles, plus the H2O oracle upper bound.
+//!   REAL: sim-1b through the full runtime — full-cache fidelity (ROUGE-L
+//!         vs the full-cache generation) + needle recall when trained
+//!         (budgets scaled to the model's context window).
+//!
+//!     cargo bench --bench fig2_accuracy
+//!     cargo bench --bench fig2_accuracy -- --track sim --episodes 64
+
+mod common;
+
+use common::{artifacts_dir, bench_args, section};
+use paged_eviction::eviction::{make_policy, ALL_POLICIES};
+use paged_eviction::runtime::model_runner::argmax;
+use paged_eviction::runtime::{Engine, ModelRunner};
+use paged_eviction::sim::attention_sim::{simulate_episode, SimConfig};
+use paged_eviction::sim::datasets::DATASETS;
+use paged_eviction::sim::H2oOracle;
+use paged_eviction::util::args::ArgSpec;
+use paged_eviction::util::rng::Pcg32;
+use paged_eviction::util::stats::Table;
+use paged_eviction::workload::recall;
+
+fn main() {
+    let args = bench_args(
+        ArgSpec::new("fig2_accuracy", "accuracy vs cache budget (paper Fig. 2)")
+            .opt("track", "both", "sim | real | both")
+            .opt("episodes", "16", "sim episodes per cell")
+            .opt("prompts", "16", "real prompts per cell")
+            .flag("oracle", "include the H2O oracle row (sim track)"),
+    );
+    let track = args.get("track");
+    if track == "sim" || track == "both" {
+        sim_track(args.get_usize("episodes"), true);
+    }
+    if track == "real" || track == "both" {
+        real_track(args.get_usize("prompts"));
+    }
+}
+
+fn sim_track(episodes: usize, oracle: bool) {
+    section("Fig 2 (SIM track): score vs budget, page 16");
+    let budgets = [256usize, 512, 1024, 2048, 4096];
+    for d in &DATASETS {
+        let mut header = vec!["policy".to_string()];
+        header.extend(budgets.iter().map(|b| format!("b={b}")));
+        let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for pol in ALL_POLICIES {
+            let p = make_policy(pol).unwrap();
+            let mut row = vec![pol.to_string()];
+            for &budget in &budgets {
+                let mut acc = 0.0;
+                for e in 0..episodes {
+                    let cfg = SimConfig {
+                        budget,
+                        seed: e as u64 * 7919,
+                        ..Default::default()
+                    };
+                    acc += simulate_episode(d, p.as_ref(), &cfg).score;
+                }
+                row.push(format!("{:.1}", acc / episodes as f64));
+            }
+            t.row(row);
+        }
+        if oracle {
+            // H2O oracle needs the true importances — rebuild per episode
+            // with a policy constructed from the episode's own profile. We
+            // approximate by giving the oracle the channel-0 noiseless
+            // signal: rerun with zero proxy noise on channel 0.
+            let mut row = vec!["h2o_oracle*".to_string()];
+            for &budget in &budgets {
+                let mut acc = 0.0;
+                for e in 0..episodes {
+                    let cfg = SimConfig {
+                        budget,
+                        seed: e as u64 * 7919,
+                        proxy_corr: [1.0, 0.45, 0.30],
+                        ..Default::default()
+                    };
+                    // corr 1.0 on channel 0 == true attention-mass ranking
+                    let p = make_policy("paged").unwrap();
+                    acc += simulate_episode(d, p.as_ref(), &cfg).score;
+                }
+                row.push(format!("{:.1}", acc / episodes as f64));
+            }
+            t.row(row);
+        }
+        println!(
+            "\n--- {} (full-cache score {:.1}, prompt {} tokens) ---",
+            d.name, d.full_score, d.prompt_len
+        );
+        print!("{}", t.render());
+    }
+    let _ = H2oOracle::new(vec![]); // (exported oracle type; per-episode use in sim tests)
+    println!(
+        "\n* h2o_oracle = block eviction on the NOISELESS attention-mass \
+         signal (deployable only with attention-score access, which \
+         PagedAttention does not expose — paper §5.2)."
+    );
+}
+
+fn real_track(prompts: usize) {
+    section("Fig 2 (REAL track): sim-1b through the full runtime, vs budget");
+    let engine = match Engine::new(artifacts_dir()) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("skipped (run `make artifacts`): {e:#}");
+            return;
+        }
+    };
+    let info = engine.manifest.model("sim-1b").unwrap();
+    println!("weights: {}", info.weights_src);
+    let runner = ModelRunner::new(&engine, "sim-1b", 16).unwrap();
+    let plen = 224usize;
+    let gen_len = 24usize;
+    let budgets = [32usize, 64, 96, 128, 192];
+    // Primary metric: full-cache FIDELITY — ROUGE-L over token ids of the
+    // generation under eviction vs the full-cache generation for the same
+    // prompt (the paper's "<3-5% degradation from Full Cache" claim made
+    // directly measurable). Secondary: needle recall accuracy (meaningful
+    // only when `make train` produced a model that solves the task).
+    for metric in ["fidelity(ROUGE-L vs full)", "recall-acc %"] {
+        let mut header = vec!["policy".to_string()];
+        header.extend(budgets.iter().map(|b| format!("b={b}")));
+        let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for pol in ALL_POLICIES {
+            let mut row = vec![pol.to_string()];
+            for &budget in &budgets {
+                let mut acc = 0.0;
+                for i in 0..prompts {
+                    let mut rng = Pcg32::with_stream(500 + i as u64, 77);
+                    let frac = 0.1 + 0.75 * rng.f64();
+                    let p = recall::make_prompt(&mut rng, plen, frac);
+                    if metric.starts_with("fidelity") {
+                        let reference =
+                            generate(&runner, &p.tokens, 100_000, "full", gen_len);
+                        let cand = generate(&runner, &p.tokens, budget, pol, gen_len);
+                        acc += paged_eviction::sim::rouge::rouge_l_ids(&cand, &reference);
+                    } else {
+                        let (_seq, logits) = runner
+                            .prefill(&p.tokens, budget, make_policy(pol).unwrap())
+                            .unwrap();
+                        acc += f64::from(argmax(&logits) == p.answer);
+                    }
+                }
+                if metric.starts_with("fidelity") {
+                    row.push(format!("{:.2}", acc / prompts as f64));
+                } else {
+                    row.push(format!("{:.0}", 100.0 * acc / prompts as f64));
+                }
+            }
+            t.row(row);
+        }
+        println!("\n{metric} (prompt {plen}, gen {gen_len}):");
+        print!("{}", t.render());
+    }
+}
+
+fn generate(
+    runner: &ModelRunner,
+    prompt: &[u32],
+    budget: usize,
+    policy: &str,
+    len: usize,
+) -> Vec<u32> {
+    let (mut seq, logits) = runner
+        .prefill(prompt, budget, make_policy(policy).unwrap())
+        .unwrap();
+    let mut tok = argmax(&logits);
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        out.push(tok);
+        let o = runner.decode_step(&mut seq, tok).unwrap();
+        tok = argmax(&o.logits);
+    }
+    out
+}

@@ -1,0 +1,167 @@
+//! Figure 4 — page-size ablation: throughput (a-c) and accuracy (d-i)
+//! across page sizes {8, 16, 32} for each KV compression method.
+//!
+//!     cargo bench --bench fig4_page_size
+//!     cargo bench --bench fig4_page_size -- --models sim-1b --pages 8,16,32
+//!
+//! Accuracy has two tracks, as in Fig 2: the simulator at paper scale
+//! (GovReport/MultiNews ROUGE analogue) and the real model's full-cache
+//! fidelity (ROUGE-L over token ids of the evicted-cache generation vs the
+//! full-cache generation — the measurable analogue of "less than 3-5%
+//! degradation from Full Cache").
+
+mod common;
+
+use common::{artifacts_dir, bench_args, section};
+use paged_eviction::eviction::make_policy;
+use paged_eviction::runtime::model_runner::argmax;
+use paged_eviction::runtime::{Engine, ModelRunner};
+use paged_eviction::scheduler::{Request, SchedConfig, Scheduler};
+use paged_eviction::sim::attention_sim::{simulate_episode, SimConfig};
+use paged_eviction::sim::datasets::dataset;
+use paged_eviction::sim::rouge::rouge_l_ids;
+use paged_eviction::util::args::ArgSpec;
+use paged_eviction::util::rng::Pcg32;
+use paged_eviction::util::stats::Table;
+use paged_eviction::workload::recall;
+
+const POLICIES: [&str; 4] = ["full", "streaming", "inverse_key_norm", "paged"];
+
+fn main() {
+    let args = bench_args(
+        ArgSpec::new("fig4_page_size", "page-size ablation (paper Fig. 4)")
+            .opt("models", "sim-1b,sim-3b", "models for the throughput sweep")
+            .opt("pages", "8,16,32", "page sizes")
+            .opt("budget", "128", "real-track budget tokens")
+            .opt("sim-budget", "1024", "sim-track budget tokens")
+            .opt("requests", "3", "requests per throughput cell")
+            .opt("gen", "96", "output tokens per request")
+            .opt("episodes", "12", "sim episodes per accuracy cell")
+            .opt("fidelity-prompts", "6", "real fidelity prompts per cell"),
+    );
+    let engine = Engine::new(artifacts_dir()).expect("make artifacts first");
+    let pages = args.get_usize_list("pages");
+    let models = args.get_list("models");
+    let budget = args.get_usize("budget");
+
+    // ---- (a-c) throughput vs page size ----
+    for model in &models {
+        section(&format!("Fig 4 a-c ({model}): throughput (tok/s) vs page size, budget {budget}"));
+        let mut header = vec!["policy".to_string()];
+        header.extend(pages.iter().map(|p| format!("page={p}")));
+        let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for policy in POLICIES {
+            let mut row = vec![policy.to_string()];
+            for &page in &pages {
+                let mut sched = Scheduler::new(
+                    &engine,
+                    SchedConfig {
+                        model: model.clone(),
+                        page_size: page,
+                        max_concurrency: 5,
+                        max_live_blocks: 100_000,
+                    },
+                )
+                .expect("scheduler");
+                let mut rng = Pcg32::with_stream(4242, page as u64);
+                for i in 0..args.get_usize("requests") {
+                    let frac = 0.2 + 0.6 * rng.f64();
+                    let p = recall::make_prompt(&mut rng, 128, frac);
+                    let mut req = Request::new(i as u64 + 1, p.tokens, args.get_usize("gen"));
+                    req.budget = budget;
+                    req.policy = policy.to_string();
+                    sched.submit(req);
+                }
+                sched.run_to_completion().expect("run");
+                row.push(format!("{:.0}", sched.throughput_tok_s()));
+            }
+            t.row(row);
+        }
+        print!("{}", t.render());
+    }
+
+    // ---- (d-i) accuracy vs page size: SIM track ----
+    let sim_budget = args.get_usize("sim-budget");
+    let episodes = args.get_usize("episodes");
+    for ds in ["govreport", "multinews"] {
+        let d = dataset(ds).unwrap();
+        section(&format!(
+            "Fig 4 d-i (SIM, {ds}): score vs page size, budget {sim_budget} \
+             (full-cache {:.1})",
+            d.full_score
+        ));
+        let mut header = vec!["policy".to_string()];
+        header.extend(pages.iter().map(|p| format!("page={p}")));
+        let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for policy in POLICIES {
+            let p = make_policy(policy).unwrap();
+            let mut row = vec![policy.to_string()];
+            for &page in &pages {
+                let mut acc = 0.0;
+                for e in 0..episodes {
+                    let cfg = SimConfig {
+                        budget: sim_budget,
+                        page_size: page,
+                        seed: e as u64 * 101,
+                        ..Default::default()
+                    };
+                    acc += simulate_episode(d, p.as_ref(), &cfg).score;
+                }
+                row.push(format!("{:.1}", acc / episodes as f64));
+            }
+            t.row(row);
+        }
+        print!("{}", t.render());
+    }
+
+    // ---- (d-i) accuracy vs page size: REAL fidelity track ----
+    section(&format!(
+        "Fig 4 (REAL, sim-1b): full-cache fidelity (ROUGE-L of generation \
+         vs full-cache generation), budget {budget}"
+    ));
+    let n = args.get_usize("fidelity-prompts");
+    let gen_len = 48usize;
+    let mut header = vec!["policy".to_string()];
+    header.extend(pages.iter().map(|p| format!("page={p}")));
+    let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    // reference generations per (page, prompt) under full cache
+    for policy in POLICIES {
+        let mut row = vec![policy.to_string()];
+        for &page in &pages {
+            let runner = ModelRunner::new(&engine, "sim-1b", page).unwrap();
+            let mut acc = 0.0;
+            for i in 0..n {
+                let mut rng = Pcg32::with_stream(31337 + i as u64, page as u64);
+                let frac = 0.2 + 0.6 * rng.f64();
+                let p = recall::make_prompt(&mut rng, 192, frac);
+                let reference = generate(&runner, &p.tokens, 100_000, "full", gen_len);
+                let candidate = generate(&runner, &p.tokens, budget, policy, gen_len);
+                acc += rouge_l_ids(&candidate, &reference);
+            }
+            row.push(format!("{:.2}", acc / n as f64));
+        }
+        t.row(row);
+    }
+    print!("{}", t.render());
+    println!("(1.00 = byte-identical to full-cache output)");
+}
+
+fn generate(
+    runner: &ModelRunner,
+    prompt: &[u32],
+    budget: usize,
+    policy: &str,
+    len: usize,
+) -> Vec<u32> {
+    let (mut seq, logits) = runner
+        .prefill(prompt, budget, make_policy(policy).unwrap())
+        .unwrap();
+    let mut tok = argmax(&logits);
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        out.push(tok);
+        let o = runner.decode_step(&mut seq, tok).unwrap();
+        tok = argmax(&o.logits);
+    }
+    out
+}

@@ -1,0 +1,133 @@
+//! Hot-path microbenchmarks — the profiling substrate for EXPERIMENTS.md
+//! §Perf. Times each layer of the decode path in isolation:
+//!
+//!   * PJRT decode-step execute per model and context bucket (L2+L1)
+//!   * prefill execute per prompt bucket
+//!   * L3 overheads: block-table/mask serialization, literal construction,
+//!     policy decisions, JSON protocol parse/serialize
+//!
+//!     cargo bench --bench micro_hotpath
+//!     cargo bench --bench micro_hotpath -- --iters 50
+
+mod common;
+
+use std::time::Instant;
+
+use common::{artifacts_dir, bench_args, section};
+use paged_eviction::eviction::make_policy;
+use paged_eviction::kvcache::SeqCache;
+use paged_eviction::runtime::model_runner::argmax;
+use paged_eviction::runtime::{Engine, ModelRunner};
+use paged_eviction::server::protocol::WireRequest;
+use paged_eviction::util::args::ArgSpec;
+use paged_eviction::util::rng::Pcg32;
+use paged_eviction::util::stats::Table;
+use paged_eviction::workload::recall;
+
+fn time_it<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let args = bench_args(
+        ArgSpec::new("micro_hotpath", "per-layer hot path microbenches")
+            .opt("iters", "20", "iterations per measurement")
+            .opt("models", "sim-1b,sim-3b,sim-8b", "models"),
+    );
+    let iters = args.get_usize("iters");
+    let engine = Engine::new(artifacts_dir()).expect("make artifacts first");
+
+    // ---- decode step per model x context bucket ----
+    section("decode step latency (ms) per context bucket [PJRT execute, page 16]");
+    let buckets = [128usize, 256, 512, 1024];
+    let mut header = vec!["model".to_string()];
+    header.extend(buckets.iter().map(|b| format!("ctx={b}")));
+    let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for model in args.get_list("models") {
+        let runner = ModelRunner::new(&engine, &model, 16).unwrap();
+        let mut row = vec![model.clone()];
+        for &bucket in &buckets {
+            // build a sequence whose cache sits in this bucket
+            let mut rng = Pcg32::new(1);
+            let plen = (bucket - 32).min(500).max(16);
+            let p = recall::make_prompt(&mut rng, plen / 2 * 2, 0.5);
+            let (mut seq, logits) = runner
+                .prefill(&p.tokens, bucket - 2 * 16, make_policy("paged").unwrap())
+                .unwrap();
+            let mut tok = argmax(&logits);
+            // warm the graph
+            let o = runner.decode_step(&mut seq, tok).unwrap();
+            tok = argmax(&o.logits);
+            let ms = time_it(iters, || {
+                let o = runner.decode_step(&mut seq, tok).unwrap();
+                tok = argmax(&o.logits);
+            }) * 1e3;
+            row.push(format!("{ms:.2}"));
+        }
+        t.row(row);
+    }
+    print!("{}", t.render());
+
+    // ---- prefill per bucket ----
+    section("prefill latency (ms) per prompt bucket");
+    let pbuckets = [64usize, 128, 256, 512];
+    let mut header = vec!["model".to_string()];
+    header.extend(pbuckets.iter().map(|b| format!("P={b}")));
+    let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for model in args.get_list("models") {
+        let runner = ModelRunner::new(&engine, &model, 16).unwrap();
+        let mut row = vec![model.clone()];
+        for &pb in &pbuckets {
+            let mut rng = Pcg32::new(2);
+            let p = recall::make_prompt(&mut rng, pb - 2, 0.5);
+            // warm
+            let _ = runner.prefill(&p.tokens, 1024, make_policy("full").unwrap());
+            let ms = time_it(iters.min(10), || {
+                let _ = runner
+                    .prefill(&p.tokens, 1024, make_policy("full").unwrap())
+                    .unwrap();
+            }) * 1e3;
+            row.push(format!("{ms:.2}"));
+        }
+        t.row(row);
+    }
+    print!("{}", t.render());
+
+    // ---- L3 overheads ----
+    section("L3 coordinator overheads (µs)");
+    let mut t = Table::new(&["operation", "µs/op"]);
+    let mut cache = SeqCache::new(16, 64);
+    let pre: Vec<(u32, [f32; 3])> = (0..512u32).map(|i| (i, [0.5, 0.5, 0.5])).collect();
+    cache.load_prefill(&pre, 512);
+    let us = time_it(iters * 100, || {
+        std::hint::black_box(cache.block_table_i32(64));
+    }) * 1e6;
+    t.row(vec!["block_table_i32 (64 blocks)".into(), format!("{us:.2}")]);
+    let us = time_it(iters * 100, || {
+        std::hint::black_box(cache.valid_mask_f32(64));
+    }) * 1e6;
+    t.row(vec!["valid_mask_f32 (1024 slots)".into(), format!("{us:.2}")]);
+
+    let paged = make_policy("paged").unwrap();
+    let us = time_it(iters * 100, || {
+        std::hint::black_box(paged.post_append(&cache, 256));
+    }) * 1e6;
+    t.row(vec!["paged post_append scan (32 blocks)".into(), format!("{us:.2}")]);
+    let ikn = make_policy("inverse_key_norm").unwrap();
+    let us = time_it(iters * 10, || {
+        std::hint::black_box(ikn.post_append(&cache, 256));
+    }) * 1e6;
+    t.row(vec!["inverse_key_norm global scan (512 tokens)".into(), format!("{us:.2}")]);
+
+    let line = r#"{"id": 7, "prompt": [1,2,3,4,5,6,7,8], "max_new_tokens": 16, "budget": 128, "policy": "paged"}"#;
+    let us = time_it(iters * 100, || {
+        std::hint::black_box(WireRequest::parse(line).unwrap());
+    }) * 1e6;
+    t.row(vec!["JSON request parse".into(), format!("{us:.2}")]);
+    print!("{}", t.render());
+    println!("\n(use these rows for the EXPERIMENTS.md §Perf before/after log)");
+}

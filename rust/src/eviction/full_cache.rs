@@ -1,0 +1,45 @@
+//! Full Cache baseline: no eviction at all. The cache grows without bound
+//! (bucket migrations handled by the runtime) — the paper's accuracy
+//! upper bound and throughput lower bound.
+
+use super::{Decision, EvictionPolicy, PrefillScores};
+use crate::kvcache::SeqCache;
+
+#[derive(Debug, Clone, Default)]
+pub struct FullCache;
+
+impl EvictionPolicy for FullCache {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn structured(&self) -> bool {
+        true
+    }
+
+    fn prefill_keep(&self, scores: &PrefillScores, _budget: usize) -> Vec<usize> {
+        (0..scores.len).collect()
+    }
+
+    fn post_append(&self, _cache: &SeqCache, _budget: usize) -> Decision {
+        Decision::Keep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_evicts() {
+        let p = FullCache;
+        let s = PrefillScores {
+            channels: [vec![0.0; 10], vec![0.0; 10], vec![0.0; 10]],
+            len: 10,
+        };
+        assert_eq!(p.prefill_keep(&s, 2).len(), 10, "budget is ignored");
+        let mut c = SeqCache::new(4, 4);
+        c.load_prefill(&(0..8).map(|i| (i, [0.0; 3])).collect::<Vec<_>>(), 8);
+        assert_eq!(p.post_append(&c, 1), Decision::Keep);
+    }
+}

@@ -1,0 +1,145 @@
+//! Inverse Key L2-Norm baseline (Devoto et al. 2024): keys with LOW L2 norm
+//! correlate with HIGH cumulative attention, so the policy evicts the token
+//! with the globally highest key norm. Unstructured: every decode step
+//! scans all live tokens and hole-punches one, fragmenting pages (paper
+//! Fig. 6) — a block is freed only after all of its tokens die.
+
+use super::{bottom_k_ascending, Decision, EvictionPolicy, PrefillScores, CH_KEY_L2};
+use crate::kvcache::SeqCache;
+
+#[derive(Debug, Clone, Default)]
+pub struct InverseKeyNorm;
+
+impl EvictionPolicy for InverseKeyNorm {
+    fn name(&self) -> &'static str {
+        "inverse_key_norm"
+    }
+
+    fn structured(&self) -> bool {
+        false
+    }
+
+    fn prefill_keep(&self, scores: &PrefillScores, budget: usize) -> Vec<usize> {
+        if scores.len <= budget {
+            return (0..scores.len).collect();
+        }
+        // keep the lowest-norm keys
+        bottom_k_ascending(&scores.channels[CH_KEY_L2], budget)
+    }
+
+    fn post_append(&self, cache: &SeqCache, budget: usize) -> Decision {
+        unstructured_evict_worst(cache, budget, CH_KEY_L2, /*higher_is_worse=*/ true)
+    }
+}
+
+/// Shared decode-path logic for unstructured baselines: kill the globally
+/// worst live tokens (excluding the just-appended one) until within budget.
+pub(crate) fn unstructured_evict_worst(
+    cache: &SeqCache,
+    budget: usize,
+    channel: usize,
+    higher_is_worse: bool,
+) -> Decision {
+    let live = cache.live_tokens();
+    if live <= budget {
+        return Decision::Keep;
+    }
+    let newest_pos = cache.next_position().saturating_sub(1);
+    let mut tokens = cache.live_token_list();
+    tokens.retain(|&(_, _, pos, _)| pos != newest_pos);
+    let mut over = live - budget;
+    over = over.min(tokens.len());
+    if over == 0 {
+        return Decision::Keep;
+    }
+    tokens.sort_by(|a, b| {
+        let (sa, sb) = (a.3[channel], b.3[channel]);
+        let ord = sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal);
+        if higher_is_worse {
+            ord.reverse()
+        } else {
+            ord
+        }
+    });
+    Decision::KillTokens(tokens[..over].iter().map(|&(bi, off, _, _)| (bi, off)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_keeps_low_norm() {
+        let s = PrefillScores {
+            channels: [
+                vec![0.0; 5],
+                vec![5.0, 1.0, 4.0, 0.5, 3.0],
+                vec![0.0; 5],
+            ],
+            len: 5,
+        };
+        let p = InverseKeyNorm;
+        assert_eq!(p.prefill_keep(&s, 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn decode_kills_global_max_norm() {
+        let p = InverseKeyNorm;
+        let bs = 4;
+        let mut c = SeqCache::new(bs, 4);
+        // 8 prefill tokens with norms 1..8 (token 7 = norm 8 worst)
+        let toks: Vec<(u32, [f32; 3])> =
+            (0..8).map(|i| (i, [0.0, (i + 1) as f32, 0.0])).collect();
+        c.load_prefill(&toks, 8);
+        c.ensure_block();
+        c.append([0.0, 0.5, 0.0]); // the newest token — excluded from scan
+        match p.post_append(&c, 8) {
+            Decision::KillTokens(ts) => assert_eq!(ts, vec![(1, 3)]), // token 7
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn newest_token_never_selfevicted() {
+        let p = InverseKeyNorm;
+        let mut c = SeqCache::new(4, 4);
+        let toks: Vec<(u32, [f32; 3])> = (0..4).map(|i| (i, [0.0, 1.0, 0.0])).collect();
+        c.load_prefill(&toks, 4);
+        c.ensure_block();
+        c.append([0.0, 99.0, 0.0]); // newest has the worst norm
+        match p.post_append(&c, 4) {
+            Decision::KillTokens(ts) => {
+                assert_eq!(ts.len(), 1);
+                assert_ne!(ts[0], (1, 0), "must not kill the newest token");
+            }
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn fragmentation_emerges() {
+        // Random norms spread kills across blocks -> partial pages linger.
+        let p = InverseKeyNorm;
+        let bs = 4;
+        let budget = 12;
+        let mut c = SeqCache::new(bs, 8);
+        let toks: Vec<(u32, [f32; 3])> = (0..12)
+            .map(|i| (i, [0.0, ((i * 7919) % 13) as f32, 0.0]))
+            .collect();
+        c.load_prefill(&toks, 12);
+        let mut saw_partial = false;
+        for s in 0..16 {
+            assert!(c.ensure_block(), "step {s}: pool exhausted");
+            c.append([0.0, ((s * 104729) % 17) as f32, 0.0]);
+            if let Decision::KillTokens(ts) = p.post_append(&c, budget) {
+                for (bi, off) in ts {
+                    c.kill_token(bi, off);
+                }
+            }
+            saw_partial |= c.partial_blocks() > 0;
+            c.check_invariants().unwrap();
+            assert!(c.live_tokens() <= budget);
+        }
+        assert!(saw_partial, "unstructured eviction should fragment pages");
+    }
+}

@@ -1,0 +1,77 @@
+//! KeyDiff baseline (Park et al. 2025): evict tokens whose keys are most
+//! similar to the rest of the cache (cosine similarity to the mean-key
+//! anchor), preserving a geometrically diverse key set. Unstructured, like
+//! InverseKeyNorm: per-step global scans + token-level hole punching.
+
+use super::inverse_key_norm::unstructured_evict_worst;
+use super::{bottom_k_ascending, Decision, EvictionPolicy, PrefillScores, CH_KEYDIFF};
+use crate::kvcache::SeqCache;
+
+#[derive(Debug, Clone, Default)]
+pub struct KeyDiff;
+
+impl EvictionPolicy for KeyDiff {
+    fn name(&self) -> &'static str {
+        "keydiff"
+    }
+
+    fn structured(&self) -> bool {
+        false
+    }
+
+    fn prefill_keep(&self, scores: &PrefillScores, budget: usize) -> Vec<usize> {
+        if scores.len <= budget {
+            return (0..scores.len).collect();
+        }
+        // keep the least anchor-similar (most diverse) keys
+        bottom_k_ascending(&scores.channels[CH_KEYDIFF], budget)
+    }
+
+    fn post_append(&self, cache: &SeqCache, budget: usize) -> Decision {
+        // highest cosine = most redundant = evict first
+        unstructured_evict_worst(cache, budget, CH_KEYDIFF, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_keeps_diverse_keys() {
+        let s = PrefillScores {
+            channels: [
+                vec![0.0; 4],
+                vec![0.0; 4],
+                vec![0.99, 0.10, 0.80, -0.30],
+            ],
+            len: 4,
+        };
+        let p = KeyDiff;
+        assert_eq!(p.prefill_keep(&s, 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn decode_kills_most_redundant() {
+        let p = KeyDiff;
+        let mut c = SeqCache::new(4, 4);
+        let cos = [0.1f32, 0.95, 0.3, 0.2];
+        let toks: Vec<(u32, [f32; 3])> =
+            cos.iter().enumerate().map(|(i, &v)| (i as u32, [0.0, 0.0, v])).collect();
+        c.load_prefill(&toks, 4);
+        c.ensure_block();
+        c.append([0.0, 0.0, 0.0]);
+        match p.post_append(&c, 4) {
+            Decision::KillTokens(ts) => assert_eq!(ts, vec![(0, 1)]),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn under_budget_keeps() {
+        let p = KeyDiff;
+        let mut c = SeqCache::new(4, 2);
+        c.load_prefill(&[(0, [0.0; 3])], 1);
+        assert_eq!(p.post_append(&c, 4), Decision::Keep);
+    }
+}

@@ -1,0 +1,181 @@
+//! PagedEviction — the paper's method (Algorithms 1–3).
+//!
+//! Prefill: token-level eviction by the attention-free proxy
+//! `S_i = ||V_i|| / ||K_i||` down to the cache budget, applied BEFORE the
+//! retained tokens are paginated (no cross-block movement).
+//!
+//! Decode: when the newest block fills (`L % B == 0`) and the cache is over
+//! budget, score every block as the mean of its tokens' proxies and evict
+//! the single lowest-scoring whole page — one table update every B steps,
+//! no partial pages, no kernel changes.
+
+use super::{top_k_ascending, Decision, EvictionPolicy, PrefillScores, CH_VK_RATIO};
+use crate::kvcache::SeqCache;
+
+#[derive(Debug, Clone)]
+pub struct PagedEviction {
+    /// Never evict the most recent `protect_recent_blocks` blocks (the
+    /// newest block is always protected; the paper's Figure 1 evicts among
+    /// the older pages).
+    pub protect_recent_blocks: usize,
+    /// Which score channel drives decisions (CH_VK_RATIO for the paper's
+    /// proxy; kept configurable for the ablation benches).
+    pub channel: usize,
+    /// `true` (paper): higher channel value = more important.
+    pub higher_is_important: bool,
+}
+
+impl Default for PagedEviction {
+    fn default() -> Self {
+        PagedEviction {
+            protect_recent_blocks: 1,
+            channel: CH_VK_RATIO,
+            higher_is_important: true,
+        }
+    }
+}
+
+impl EvictionPolicy for PagedEviction {
+    fn name(&self) -> &'static str {
+        "paged"
+    }
+
+    fn structured(&self) -> bool {
+        true
+    }
+
+    fn prefill_keep(&self, scores: &PrefillScores, budget: usize) -> Vec<usize> {
+        if scores.len <= budget {
+            return (0..scores.len).collect();
+        }
+        let ch = &scores.channels[self.channel];
+        if self.higher_is_important {
+            top_k_ascending(ch, budget)
+        } else {
+            super::bottom_k_ascending(ch, budget)
+        }
+    }
+
+    fn post_append(&self, cache: &SeqCache, budget: usize) -> Decision {
+        // Trigger only when the just-appended token filled the newest block
+        // (paper Alg. 3: L % B == 0) and we are past the budget.
+        if !cache.last_block_full() || cache.live_tokens() <= budget {
+            return Decision::Keep;
+        }
+        let n = cache.n_blocks();
+        let protected = self.protect_recent_blocks.max(1);
+        if n <= protected {
+            return Decision::Keep;
+        }
+        let candidates = &cache.blocks()[..n - protected];
+        let pick = candidates
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                let s = b.mean_score(self.channel);
+                (i, if self.higher_is_important { s } else { -s })
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i);
+        match pick {
+            Some(i) => Decision::EvictBlock(i),
+            None => Decision::Keep,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache_with_blocks(block_scores: &[f32], bs: usize) -> SeqCache {
+        let mut c = SeqCache::new(bs, block_scores.len() + 2);
+        let toks: Vec<(u32, [f32; 3])> = block_scores
+            .iter()
+            .flat_map(|&s| std::iter::repeat((0u32, [s, s, s])).take(bs))
+            .enumerate()
+            .map(|(i, (_, sc))| (i as u32, sc))
+            .collect();
+        let n = toks.len() as u32;
+        c.load_prefill(&toks, n);
+        c
+    }
+
+    #[test]
+    fn prefill_keeps_top_vk_ratio() {
+        let s = PrefillScores {
+            channels: [
+                vec![0.1, 0.9, 0.5, 0.8, 0.2],
+                vec![0.0; 5],
+                vec![0.0; 5],
+            ],
+            len: 5,
+        };
+        let p = PagedEviction::default();
+        assert_eq!(p.prefill_keep(&s, 3), vec![1, 2, 3]);
+        assert_eq!(p.prefill_keep(&s, 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(p.prefill_keep(&s, 8), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn decode_waits_for_full_block() {
+        let bs = 4;
+        let mut c = cache_with_blocks(&[0.5, 0.1, 0.9], bs);
+        let p = PagedEviction::default();
+        // over budget but newest block not full -> Keep
+        c.ensure_block();
+        c.append([0.7; 3]);
+        assert_eq!(p.post_append(&c, 8), Decision::Keep);
+        // fill the block -> evict lowest-mean block (index 1, score 0.1)
+        for _ in 0..bs - 1 {
+            c.ensure_block();
+            c.append([0.7; 3]);
+        }
+        assert_eq!(p.post_append(&c, 8), Decision::EvictBlock(1));
+    }
+
+    #[test]
+    fn decode_under_budget_keeps() {
+        let c = cache_with_blocks(&[0.5, 0.1], 4);
+        let p = PagedEviction::default();
+        assert_eq!(p.post_append(&c, 8), Decision::Keep);
+        assert_eq!(p.post_append(&c, 9), Decision::Keep);
+    }
+
+    #[test]
+    fn newest_block_protected() {
+        // lowest score in the newest block; must evict the second-lowest
+        let c = cache_with_blocks(&[0.5, 0.3, 0.01], 4);
+        let p = PagedEviction::default();
+        assert_eq!(p.post_append(&c, 4), Decision::EvictBlock(1));
+    }
+
+    #[test]
+    fn single_block_never_evicted() {
+        let c = cache_with_blocks(&[0.5], 4);
+        let p = PagedEviction::default();
+        assert_eq!(p.post_append(&c, 1), Decision::Keep);
+    }
+
+    #[test]
+    fn eviction_loop_maintains_budget_oscillation() {
+        // Live count must oscillate in (budget - B, budget + B].
+        let bs = 4;
+        let budget = 3 * bs;
+        let mut c = cache_with_blocks(&[0.5, 0.4, 0.3], bs);
+        let p = PagedEviction::default();
+        for step in 0..40 {
+            c.ensure_block();
+            c.append([0.2 + (step as f32) * 1e-3; 3]);
+            if let Decision::EvictBlock(i) = p.post_append(&c, budget) {
+                c.evict_block(i);
+            }
+            assert!(c.live_tokens() <= budget + bs, "step {step}");
+            assert!(c.live_tokens() + bs > budget, "step {step}");
+            c.check_invariants().unwrap();
+        }
+        // Structured: zero partial pages, exactly one table update per B
+        // decode tokens beyond alloc.
+        assert_eq!(c.partial_blocks(), 0);
+    }
+}

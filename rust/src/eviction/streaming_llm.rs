@@ -1,0 +1,166 @@
+//! StreamingLLM baseline (Xiao et al. 2023) as described in the paper's
+//! §5.2 and Appendix A.1: a handful of initial tokens are pinned as
+//! "attention sinks"; the rest of the cache is a sliding window over the
+//! most recent tokens. During decode one token is evicted per step (the
+//! oldest non-sink), so the oldest block drains token-by-token and is only
+//! freed once empty — cheap to decide, but it touches the cache metadata
+//! every single step (the overhead the paper contrasts with PagedEviction).
+
+use super::{Decision, EvictionPolicy, PrefillScores};
+use crate::kvcache::SeqCache;
+
+#[derive(Debug, Clone)]
+pub struct StreamingLlm {
+    /// Number of initial-position tokens pinned forever (paper: "e.g. the
+    /// first 4 tokens").
+    pub sinks: usize,
+}
+
+impl Default for StreamingLlm {
+    fn default() -> Self {
+        StreamingLlm { sinks: 4 }
+    }
+}
+
+impl EvictionPolicy for StreamingLlm {
+    fn name(&self) -> &'static str {
+        "streaming"
+    }
+
+    fn structured(&self) -> bool {
+        // Structured in the paper's taxonomy: evictions stay within one
+        // block (the oldest), no global score scans.
+        true
+    }
+
+    fn prefill_keep(&self, scores: &PrefillScores, budget: usize) -> Vec<usize> {
+        let len = scores.len;
+        if len <= budget {
+            return (0..len).collect();
+        }
+        let sinks = self.sinks.min(budget);
+        let window = budget - sinks;
+        let mut keep: Vec<usize> = (0..sinks).collect();
+        keep.extend(len - window..len);
+        keep
+    }
+
+    fn post_append(&self, cache: &SeqCache, budget: usize) -> Decision {
+        if cache.live_tokens() <= budget {
+            return Decision::Keep;
+        }
+        // Evict the oldest live non-sink token (one per step — recency
+        // order, not scores).
+        let mut kills = Vec::with_capacity(cache.live_tokens() - budget);
+        let mut over = cache.live_tokens() - budget;
+        'outer: for (bi, blk) in cache.blocks().iter().enumerate() {
+            for (off, pos, _) in blk.live_tokens() {
+                if (pos as usize) < self.sinks {
+                    continue; // pinned sink
+                }
+                kills.push((bi, off));
+                over -= 1;
+                if over == 0 {
+                    break 'outer;
+                }
+            }
+        }
+        if kills.is_empty() {
+            Decision::Keep
+        } else {
+            Decision::KillTokens(kills)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scores(len: usize) -> PrefillScores {
+        PrefillScores {
+            channels: [vec![0.0; len], vec![0.0; len], vec![0.0; len]],
+            len,
+        }
+    }
+
+    #[test]
+    fn prefill_sinks_plus_window() {
+        let p = StreamingLlm::default();
+        let keep = p.prefill_keep(&scores(20), 10);
+        assert_eq!(keep, vec![0, 1, 2, 3, 14, 15, 16, 17, 18, 19]);
+    }
+
+    #[test]
+    fn prefill_tiny_budget_all_sinks() {
+        let p = StreamingLlm::default();
+        let keep = p.prefill_keep(&scores(20), 3);
+        assert_eq!(keep, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn decode_evicts_oldest_non_sink() {
+        let p = StreamingLlm::default();
+        let bs = 4;
+        let mut c = SeqCache::new(bs, 6);
+        // positions 0..12 (tokens 0-3 include the 4 sinks)
+        let toks: Vec<(u32, [f32; 3])> = (0..12).map(|i| (i, [0.0; 3])).collect();
+        c.load_prefill(&toks, 12);
+        c.ensure_block();
+        c.append([0.0; 3]); // live = 13 > budget = 12
+        match p.post_append(&c, 12) {
+            Decision::KillTokens(ts) => assert_eq!(ts, vec![(1, 0)]), // pos 4
+            d => panic!("expected kill, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn sinks_survive_long_generation() {
+        let p = StreamingLlm::default();
+        let bs = 4;
+        let budget = 8;
+        let mut c = SeqCache::new(bs, 8);
+        c.load_prefill(&(0..8).map(|i| (i, [0.0; 3])).collect::<Vec<_>>(), 8);
+        for _ in 0..30 {
+            assert!(c.ensure_block());
+            c.append([0.0; 3]);
+            if let Decision::KillTokens(ts) = p.post_append(&c, budget) {
+                for (bi, off) in ts {
+                    c.kill_token(bi, off);
+                }
+            }
+            c.check_invariants().unwrap();
+            assert_eq!(c.live_tokens(), budget.min(c.live_tokens()));
+        }
+        // all 4 sink positions still live
+        let live_pos: Vec<u32> =
+            c.live_token_list().iter().map(|&(_, _, p, _)| p).collect();
+        for s in 0..4 {
+            assert!(live_pos.contains(&s), "sink {s} evicted");
+        }
+        // and it fragments the sink block (paper Fig. 5 shape)
+        assert!(c.partial_blocks() >= 1);
+    }
+
+    #[test]
+    fn per_step_mask_updates_counted() {
+        // StreamingLLM must touch the cache every step once saturated —
+        // the overhead PagedEviction avoids.
+        let p = StreamingLlm::default();
+        let bs = 4;
+        let budget = 8;
+        let mut c = SeqCache::new(bs, 8);
+        c.load_prefill(&(0..8).map(|i| (i, [0.0; 3])).collect::<Vec<_>>(), 8);
+        let steps = 20;
+        for _ in 0..steps {
+            c.ensure_block();
+            c.append([0.0; 3]);
+            if let Decision::KillTokens(ts) = p.post_append(&c, budget) {
+                for (bi, off) in ts {
+                    c.kill_token(bi, off);
+                }
+            }
+        }
+        assert!(c.stats.mask_updates >= steps as u64);
+    }
+}

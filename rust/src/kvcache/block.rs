@@ -1,0 +1,239 @@
+//! Physical block pool + per-block metadata.
+
+/// Maximum page size supported by the `u64` live-token bitmaps.
+pub const MAX_BLOCK_SIZE: usize = 64;
+
+/// One logical block (page) of a sequence's KV cache.
+///
+/// `phys` is the slot index into the sequence's device buffer; `fill` is how
+/// many token positions have ever been written (only the newest block can
+/// have `fill < block_size`); `live` is the bitmap of tokens that are still
+/// visible to attention (unstructured eviction clears bits).
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub phys: usize,
+    pub fill: usize,
+    live: u64,
+    /// Per-token importance channels (aggregated over layers by the score
+    /// tracker): `scores[c][off]`. Kept per-block so block-level aggregates
+    /// are O(B) and token-level policies can do global scans.
+    pub scores: [Vec<f32>; 3],
+    /// Original sequence positions of the tokens (RoPE identity survives
+    /// eviction; useful for traces and the StreamingLLM sink rule).
+    pub positions: Vec<u32>,
+}
+
+impl Block {
+    pub fn new(phys: usize, block_size: usize) -> Self {
+        assert!(block_size <= MAX_BLOCK_SIZE, "page size > 64 unsupported");
+        Block {
+            phys,
+            fill: 0,
+            live: 0,
+            scores: [
+                Vec::with_capacity(block_size),
+                Vec::with_capacity(block_size),
+                Vec::with_capacity(block_size),
+            ],
+            positions: Vec::with_capacity(block_size),
+        }
+    }
+
+    /// Append a token (offset = current fill). Returns the offset.
+    pub fn push(&mut self, position: u32, scores: [f32; 3]) -> usize {
+        let off = self.fill;
+        debug_assert!(off < MAX_BLOCK_SIZE);
+        self.live |= 1 << off;
+        for (c, s) in scores.iter().enumerate() {
+            self.scores[c].push(*s);
+        }
+        self.positions.push(position);
+        self.fill += 1;
+        off
+    }
+
+    pub fn is_live(&self, off: usize) -> bool {
+        off < self.fill && (self.live >> off) & 1 == 1
+    }
+
+    /// Kill one token (unstructured eviction). Returns false if it was
+    /// already dead.
+    pub fn kill(&mut self, off: usize) -> bool {
+        if !self.is_live(off) {
+            return false;
+        }
+        self.live &= !(1 << off);
+        true
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.count_ones() as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// True when some written tokens are dead — a fragmented page.
+    pub fn is_partial(&self) -> bool {
+        self.live_count() < self.fill
+    }
+
+    /// Mean of a score channel over LIVE tokens (paper Alg. 1 block score).
+    pub fn mean_score(&self, channel: usize) -> f32 {
+        let mut sum = 0.0f32;
+        let mut n = 0usize;
+        for off in 0..self.fill {
+            if self.is_live(off) {
+                sum += self.scores[channel][off];
+                n += 1;
+            }
+        }
+        if n == 0 {
+            f32::INFINITY
+        } else {
+            sum / n as f32
+        }
+    }
+
+    /// Iterator over live (offset, position, [3]scores).
+    pub fn live_tokens(&self) -> impl Iterator<Item = (usize, u32, [f32; 3])> + '_ {
+        (0..self.fill).filter(|&o| self.is_live(o)).map(move |o| {
+            (o, self.positions[o], [self.scores[0][o], self.scores[1][o], self.scores[2][o]])
+        })
+    }
+}
+
+/// Free-list allocator over a sequence's physical slots.
+///
+/// Also does the global accounting the scheduler needs: `capacity` is the
+/// number of physical slots in the current device buffer (one bucket), and
+/// `grow` extends it when the runtime migrates to a larger bucket.
+#[derive(Debug, Clone)]
+pub struct BlockPool {
+    capacity: usize,
+    free: Vec<usize>,
+}
+
+impl BlockPool {
+    pub fn new(capacity: usize) -> Self {
+        // LIFO free list; reverse so slot 0 is handed out first (makes the
+        // initial layout identity, which tests and traces rely on).
+        BlockPool { capacity, free: (0..capacity).rev().collect() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    pub fn alloc(&mut self) -> Option<usize> {
+        self.free.pop()
+    }
+
+    pub fn release(&mut self, phys: usize) {
+        debug_assert!(phys < self.capacity);
+        debug_assert!(!self.free.contains(&phys), "double free of block {phys}");
+        self.free.push(phys);
+    }
+
+    /// Extend capacity to `new_capacity` slots (bucket growth).
+    pub fn grow(&mut self, new_capacity: usize) {
+        assert!(new_capacity >= self.capacity);
+        for p in (self.capacity..new_capacity).rev() {
+            self.free.push(p);
+        }
+        self.capacity = new_capacity;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_push_and_live() {
+        let mut b = Block::new(3, 8);
+        assert_eq!(b.push(100, [1.0, 2.0, 3.0]), 0);
+        assert_eq!(b.push(101, [2.0, 3.0, 4.0]), 1);
+        assert_eq!(b.live_count(), 2);
+        assert!(b.is_live(0) && b.is_live(1) && !b.is_live(2));
+        assert!(!b.is_partial());
+    }
+
+    #[test]
+    fn block_kill_and_partial() {
+        let mut b = Block::new(0, 4);
+        for i in 0..4 {
+            b.push(i, [1.0, 1.0, 1.0]);
+        }
+        assert!(b.kill(2));
+        assert!(!b.kill(2), "double kill must be rejected");
+        assert!(b.is_partial());
+        assert_eq!(b.live_count(), 3);
+        for o in [0, 1, 3] {
+            assert!(b.kill(o));
+        }
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn block_mean_score_skips_dead() {
+        let mut b = Block::new(0, 4);
+        b.push(0, [1.0, 0.0, 0.0]);
+        b.push(1, [3.0, 0.0, 0.0]);
+        b.push(2, [100.0, 0.0, 0.0]);
+        b.kill(2);
+        assert_eq!(b.mean_score(0), 2.0);
+    }
+
+    #[test]
+    fn empty_block_scores_infinite() {
+        // An empty block must never win the "lowest score" eviction scan.
+        let mut b = Block::new(0, 2);
+        b.push(0, [1.0, 1.0, 1.0]);
+        b.kill(0);
+        assert_eq!(b.mean_score(0), f32::INFINITY);
+    }
+
+    #[test]
+    fn pool_alloc_release() {
+        let mut p = BlockPool::new(3);
+        assert_eq!(p.alloc(), Some(0));
+        assert_eq!(p.alloc(), Some(1));
+        assert_eq!(p.alloc(), Some(2));
+        assert_eq!(p.alloc(), None);
+        p.release(1);
+        assert_eq!(p.alloc(), Some(1));
+        assert_eq!(p.used(), 3);
+    }
+
+    #[test]
+    fn pool_grow() {
+        let mut p = BlockPool::new(2);
+        p.alloc();
+        p.alloc();
+        p.grow(4);
+        assert_eq!(p.capacity(), 4);
+        assert_eq!(p.alloc(), Some(2));
+        assert_eq!(p.alloc(), Some(3));
+        assert_eq!(p.alloc(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    #[cfg(debug_assertions)] // debug_assert!-backed; release builds skip it
+    fn pool_double_free_panics_in_debug() {
+        let mut p = BlockPool::new(2);
+        let s = p.alloc().unwrap();
+        p.release(s);
+        p.release(s);
+    }
+}

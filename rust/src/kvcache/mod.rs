@@ -1,0 +1,23 @@
+//! Paged KV-cache substrate (the vLLM-style memory manager the paper
+//! builds on).
+//!
+//! A sequence's cache is a pool of fixed-size physical *blocks* (pages)
+//! addressed through a *block table*: `table[logical] = physical`. All
+//! eviction mechanisms — the paper's PagedEviction and every baseline —
+//! operate purely on this host-side metadata; the device-side K/V buffers
+//! are never moved or compacted. The decode graph receives the table plus a
+//! per-slot validity mask, so:
+//!
+//!   * structured (block-wise) eviction = remove one table entry + free the
+//!     physical slot — O(1) metadata, zero data movement;
+//!   * unstructured (token-wise) eviction = clear one bit in the validity
+//!     mask — the block stays allocated until every token in it is dead
+//!     (the fragmentation the paper's Figures 5/6 illustrate).
+
+pub mod block;
+pub mod seq_cache;
+pub mod stats;
+
+pub use block::{Block, BlockPool};
+pub use seq_cache::{SeqCache, SCORE_CHANNELS};
+pub use stats::CacheStats;

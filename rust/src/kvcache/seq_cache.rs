@@ -1,0 +1,425 @@
+//! Per-sequence cache state: block table + validity + scores.
+//!
+//! This is the host-side single source of truth for what the decode graph
+//! sees. Every mutation (append, block eviction, token kill) updates the
+//! metadata the runtime serializes into graph inputs:
+//!   * `block_table_i32()` — logical->physical, padded to the bucket size;
+//!   * `valid_mask_f32()`  — [NB * B] 1.0/0.0 in logical order;
+//!   * `next_write_slot()` — physical flat index for the incoming token.
+
+use super::block::{Block, BlockPool};
+use super::stats::CacheStats;
+
+/// Number of importance channels carried per token
+/// (0 = V/K ratio, 1 = key L2 norm, 2 = KeyDiff cosine).
+pub const SCORE_CHANNELS: usize = 3;
+
+#[derive(Debug, Clone)]
+pub struct SeqCache {
+    block_size: usize,
+    pool: BlockPool,
+    /// Logical block order (oldest first). `blocks[i].phys` is the slot.
+    blocks: Vec<Block>,
+    /// Highest sequence position written so far + 1 (monotonic; survives
+    /// eviction — RoPE positions are original positions).
+    next_position: u32,
+    pub stats: CacheStats,
+}
+
+impl SeqCache {
+    /// `capacity_blocks` = physical slots in the current device bucket.
+    pub fn new(block_size: usize, capacity_blocks: usize) -> Self {
+        SeqCache {
+            block_size,
+            pool: BlockPool::new(capacity_blocks),
+            blocks: Vec::new(),
+            next_position: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn blocks(&self) -> &[Block] {
+        &self.blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.pool.free_count()
+    }
+
+    /// Live (attention-visible) tokens.
+    pub fn live_tokens(&self) -> usize {
+        self.blocks.iter().map(|b| b.live_count()).sum()
+    }
+
+    /// Tokens ever written and not yet block-evicted (incl. dead ones).
+    pub fn held_tokens(&self) -> usize {
+        self.blocks.iter().map(|b| b.fill).sum()
+    }
+
+    /// Allocated-but-fragmented pages (paper Limitation 1 metric).
+    pub fn partial_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| b.is_partial()).count()
+    }
+
+    /// live / allocated-slot tokens; 1.0 = perfectly packed.
+    pub fn occupancy(&self) -> f64 {
+        let alloc = self.blocks.len() * self.block_size;
+        if alloc == 0 {
+            return 1.0;
+        }
+        self.live_tokens() as f64 / alloc as f64
+    }
+
+    pub fn next_position(&self) -> u32 {
+        self.next_position
+    }
+
+    /// True when the newest block is full (or none exists) — i.e. the next
+    /// append needs a fresh block. This is the paper's decode-phase
+    /// eviction trigger (`L % B == 0`).
+    pub fn last_block_full(&self) -> bool {
+        self.blocks.last().map_or(true, |b| b.fill == self.block_size)
+    }
+
+    /// Whether an append right now would need an allocation that the pool
+    /// cannot satisfy (runtime must grow the bucket or scheduler preempt).
+    pub fn needs_grow(&self) -> bool {
+        self.last_block_full() && self.pool.free_count() == 0
+    }
+
+    // -- append path --------------------------------------------------------
+
+    /// Physical flat slot (block * B + offset) where the NEXT token will be
+    /// written. Allocates nothing; errors if a new block is needed but the
+    /// pool is empty.
+    pub fn peek_write_slot(&self) -> Option<usize> {
+        if self.last_block_full() {
+            None // needs alloc first; use ensure_block()
+        } else {
+            let b = self.blocks.last().unwrap();
+            Some(b.phys * self.block_size + b.fill)
+        }
+    }
+
+    /// Make sure a block with a free slot exists. Returns false if the pool
+    /// is exhausted (caller grows/preempts).
+    pub fn ensure_block(&mut self) -> bool {
+        if !self.last_block_full() {
+            return true;
+        }
+        match self.pool.alloc() {
+            Some(phys) => {
+                self.blocks.push(Block::new(phys, self.block_size));
+                self.stats.blocks_allocated += 1;
+                self.stats.table_updates += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Record the token the decode step just wrote at `peek_write_slot`.
+    pub fn append(&mut self, scores: [f32; 3]) {
+        assert!(!self.last_block_full(), "append without ensure_block()");
+        let pos = self.next_position;
+        self.blocks.last_mut().unwrap().push(pos, scores);
+        self.next_position += 1;
+        self.stats.tokens_written += 1;
+    }
+
+    /// Bulk-load a prefilled, already-evicted prompt: `tokens[i]` is
+    /// (original_position, [3]scores), laid out contiguously from physical
+    /// slot 0 in logical order (matching the runtime's host-side pack).
+    pub fn load_prefill(&mut self, tokens: &[(u32, [f32; 3])], total_prompt_len: u32) {
+        assert!(self.blocks.is_empty(), "load_prefill on non-empty cache");
+        for (pos, sc) in tokens {
+            if self.last_block_full() {
+                let phys = self.pool.alloc().expect("prefill exceeds pool");
+                self.blocks.push(Block::new(phys, self.block_size));
+                self.stats.blocks_allocated += 1;
+            }
+            self.blocks.last_mut().unwrap().push(*pos, *sc);
+        }
+        self.stats.tokens_written += tokens.len() as u64;
+        self.stats.table_updates += 1;
+        self.next_position = total_prompt_len;
+    }
+
+    // -- eviction primitives -------------------------------------------------
+
+    /// Structured eviction: drop logical block `idx` entirely. O(blocks)
+    /// table shift, zero device-data movement. Frees the physical slot.
+    pub fn evict_block(&mut self, idx: usize) {
+        let blk = self.blocks.remove(idx);
+        self.stats.tokens_evicted += blk.live_count() as u64;
+        self.stats.blocks_evicted += 1;
+        self.stats.table_updates += 1;
+        self.pool.release(blk.phys);
+    }
+
+    /// Unstructured eviction: kill one token at (logical block, offset).
+    /// Frees the block only once every token in it is dead.
+    pub fn kill_token(&mut self, block_idx: usize, off: usize) {
+        let killed = self.blocks[block_idx].kill(off);
+        assert!(killed, "killing dead token ({block_idx},{off})");
+        self.stats.tokens_evicted += 1;
+        self.stats.mask_updates += 1;
+        if self.blocks[block_idx].is_empty() {
+            // Whole page finally drained — only now can it be reused.
+            let blk = self.blocks.remove(block_idx);
+            self.pool.release(blk.phys);
+            self.stats.blocks_evicted += 1;
+            self.stats.table_updates += 1;
+        }
+    }
+
+    /// Bucket growth: runtime migrated the device buffer to a bigger
+    /// capacity.
+    pub fn grow(&mut self, new_capacity_blocks: usize) {
+        self.pool.grow(new_capacity_blocks);
+        self.stats.bucket_grows += 1;
+    }
+
+    // -- graph-input serialization -------------------------------------------
+
+    /// Logical->physical table, padded with 0 to `nb` entries (padding is
+    /// masked out via the validity mask so its value is irrelevant).
+    pub fn block_table_i32(&self, nb: usize) -> Vec<i32> {
+        assert!(self.blocks.len() <= nb, "table exceeds bucket");
+        let mut t: Vec<i32> = self.blocks.iter().map(|b| b.phys as i32).collect();
+        t.resize(nb, 0);
+        t
+    }
+
+    /// Validity mask in logical order, flattened [nb * B].
+    pub fn valid_mask_f32(&self, nb: usize) -> Vec<f32> {
+        let mut m = vec![0.0f32; nb * self.block_size];
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            for off in 0..blk.fill {
+                if blk.is_live(off) {
+                    m[bi * self.block_size + off] = 1.0;
+                }
+            }
+        }
+        m
+    }
+
+    /// (logical block idx, offset, position, scores) of every live token,
+    /// oldest-first — the view token-level policies scan.
+    pub fn live_token_list(&self) -> Vec<(usize, usize, u32, [f32; 3])> {
+        let mut out = Vec::with_capacity(self.live_tokens());
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            for (off, pos, sc) in blk.live_tokens() {
+                out.push((bi, off, pos, sc));
+            }
+        }
+        out
+    }
+
+    /// Consistency invariants — called by tests and debug assertions.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        // physical slots unique and within capacity
+        let mut seen = std::collections::HashSet::new();
+        for b in &self.blocks {
+            if b.phys >= self.pool.capacity() {
+                return Err(format!("phys {} out of capacity", b.phys));
+            }
+            if !seen.insert(b.phys) {
+                return Err(format!("duplicate phys slot {}", b.phys));
+            }
+            if b.fill > self.block_size {
+                return Err("overfull block".into());
+            }
+        }
+        // only the last block may be partially filled
+        for (i, b) in self.blocks.iter().enumerate() {
+            if i + 1 != self.blocks.len() && b.fill != self.block_size {
+                return Err(format!("non-terminal block {i} not full"));
+            }
+        }
+        // pool accounting adds up
+        if self.pool.used() != self.blocks.len() {
+            return Err(format!(
+                "pool used {} != live blocks {}",
+                self.pool.used(),
+                self.blocks.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    fn sc(x: f32) -> [f32; 3] {
+        [x, x, x]
+    }
+
+    #[test]
+    fn prefill_then_decode_layout() {
+        let mut c = SeqCache::new(4, 8);
+        let toks: Vec<(u32, [f32; 3])> = (0..10).map(|i| (i, sc(i as f32))).collect();
+        c.load_prefill(&toks, 10);
+        assert_eq!(c.n_blocks(), 3);
+        assert_eq!(c.live_tokens(), 10);
+        assert_eq!(c.block_table_i32(8), vec![0, 1, 2, 0, 0, 0, 0, 0]);
+        let m = c.valid_mask_f32(8);
+        assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 10);
+        assert_eq!(&m[..10], &[1.0; 10]);
+        // next write goes to block 2 offset 2 -> phys 2*4+2
+        assert_eq!(c.peek_write_slot(), Some(10));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefill_after_eviction_keeps_original_positions() {
+        let mut c = SeqCache::new(4, 8);
+        // prompt of 16 tokens, evicted down to 8 (every other token)
+        let toks: Vec<(u32, [f32; 3])> = (0..16).step_by(2).map(|i| (i, sc(0.0))).collect();
+        c.load_prefill(&toks, 16);
+        assert_eq!(c.next_position(), 16, "decode must continue at position 16");
+        assert_eq!(c.live_tokens(), 8);
+    }
+
+    #[test]
+    fn append_path() {
+        let mut c = SeqCache::new(4, 4);
+        assert!(c.ensure_block());
+        assert_eq!(c.peek_write_slot(), Some(0));
+        c.append(sc(1.0));
+        assert_eq!(c.live_tokens(), 1);
+        for _ in 0..3 {
+            assert!(c.ensure_block());
+            c.append(sc(1.0));
+        }
+        assert!(c.last_block_full());
+        assert!(c.ensure_block());
+        assert_eq!(c.peek_write_slot(), Some(4));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evict_block_frees_slot_and_shifts_table() {
+        let mut c = SeqCache::new(2, 4);
+        let toks: Vec<(u32, [f32; 3])> = (0..6).map(|i| (i, sc(i as f32))).collect();
+        c.load_prefill(&toks, 6);
+        assert_eq!(c.n_blocks(), 3);
+        c.evict_block(1); // drop tokens 2,3
+        assert_eq!(c.n_blocks(), 2);
+        assert_eq!(c.block_table_i32(4), vec![0, 2, 0, 0]);
+        assert_eq!(c.live_tokens(), 4);
+        // freed slot 1 is reused next
+        assert!(c.ensure_block());
+        assert_eq!(c.blocks().last().unwrap().phys, 1);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn kill_token_drains_then_frees_block() {
+        let mut c = SeqCache::new(2, 4);
+        c.load_prefill(&(0..4).map(|i| (i, sc(0.0))).collect::<Vec<_>>(), 4);
+        assert_eq!(c.n_blocks(), 2);
+        c.kill_token(0, 0);
+        assert_eq!(c.n_blocks(), 2, "partially dead block stays allocated");
+        assert_eq!(c.partial_blocks(), 1);
+        assert!(c.occupancy() < 1.0);
+        c.kill_token(0, 1);
+        assert_eq!(c.n_blocks(), 1, "drained block is freed");
+        assert_eq!(c.stats.blocks_evicted, 1);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn valid_mask_reflects_holes() {
+        let mut c = SeqCache::new(4, 2);
+        c.load_prefill(&(0..8).map(|i| (i, sc(0.0))).collect::<Vec<_>>(), 8);
+        c.kill_token(1, 2);
+        let m = c.valid_mask_f32(2);
+        assert_eq!(m[6], 0.0);
+        assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 7);
+    }
+
+    #[test]
+    fn grow_extends_pool() {
+        let mut c = SeqCache::new(2, 2);
+        c.load_prefill(&(0..4).map(|i| (i, sc(0.0))).collect::<Vec<_>>(), 4);
+        assert!(c.needs_grow());
+        c.grow(4);
+        assert!(!c.needs_grow());
+        assert!(c.ensure_block());
+        c.append(sc(0.0));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn property_random_op_sequences_keep_invariants() {
+        propcheck::quick("seqcache-invariants", |rng| {
+            let bs = *rng.choose(&[2usize, 4, 8, 16]);
+            let cap = 4 + rng.usize_below(12);
+            let mut c = SeqCache::new(bs, cap);
+            let pre = rng.usize_below(cap * bs / 2) + 1;
+            c.load_prefill(
+                &(0..pre as u32).map(|i| (i, [rng.f32(), rng.f32(), rng.f32()])).collect::<Vec<_>>(),
+                pre as u32,
+            );
+            for _ in 0..200 {
+                match rng.below(10) {
+                    0..=5 => {
+                        if c.ensure_block() {
+                            c.append([rng.f32(), rng.f32(), rng.f32()]);
+                        } else if c.capacity_blocks() < 64 {
+                            c.grow(c.capacity_blocks() + 2);
+                        }
+                    }
+                    6..=7 => {
+                        if c.n_blocks() > 1 {
+                            let idx = c.n_blocks() - 1 - rng.usize_below(c.n_blocks() - 1).max(0);
+                            // never evict the newest block (policy convention)
+                            let idx = idx.min(c.n_blocks() - 2);
+                            c.evict_block(idx);
+                        }
+                    }
+                    _ => {
+                        let live = c.live_token_list();
+                        if live.len() > 1 {
+                            let (bi, off, _, _) = live[rng.usize_below(live.len())];
+                            c.kill_token(bi, off);
+                        }
+                    }
+                }
+                c.check_invariants().map_err(|e| e)?;
+                // serialization shapes must always be consistent
+                let nb = c.capacity_blocks();
+                let t = c.block_table_i32(nb);
+                let m = c.valid_mask_f32(nb);
+                if t.len() != nb || m.len() != nb * bs {
+                    return Err("bad serialization lengths".into());
+                }
+                let live_in_mask = m.iter().filter(|&&x| x == 1.0).count();
+                if live_in_mask != c.live_tokens() {
+                    return Err(format!(
+                        "mask live {} != tracked {}",
+                        live_in_mask,
+                        c.live_tokens()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,58 @@
+//! Cache-management counters — the quantities behind the paper's
+//! Limitation 1 (fragmentation), Limitation 4 (per-step eviction overhead)
+//! and the Fig. 3 discussion of table-update frequency.
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CacheStats {
+    pub tokens_written: u64,
+    pub tokens_evicted: u64,
+    /// Whole-page (structured) evictions.
+    pub blocks_evicted: u64,
+    pub blocks_allocated: u64,
+    /// Block-table mutations (alloc, structured evict, drained page free).
+    /// PagedEviction performs these only every B steps; StreamingLLM and
+    /// unstructured baselines every step.
+    pub table_updates: u64,
+    /// Validity-mask mutations (token kills) — per-step overhead of
+    /// unstructured eviction.
+    pub mask_updates: u64,
+    /// Bucket migrations (device buffer reallocation + copy).
+    pub bucket_grows: u64,
+}
+
+impl CacheStats {
+    pub fn merge(&mut self, o: &CacheStats) {
+        self.tokens_written += o.tokens_written;
+        self.tokens_evicted += o.tokens_evicted;
+        self.blocks_evicted += o.blocks_evicted;
+        self.blocks_allocated += o.blocks_allocated;
+        self.table_updates += o.table_updates;
+        self.mask_updates += o.mask_updates;
+        self.bucket_grows += o.bucket_grows;
+    }
+
+    /// Cache-management operations per generated token — the paper's
+    /// eviction-overhead proxy.
+    pub fn updates_per_token(&self) -> f64 {
+        if self.tokens_written == 0 {
+            return 0.0;
+        }
+        (self.table_updates + self.mask_updates) as f64 / self.tokens_written as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums() {
+        let mut a = CacheStats { tokens_written: 2, table_updates: 1, ..Default::default() };
+        let b = CacheStats { tokens_written: 3, mask_updates: 4, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.tokens_written, 5);
+        assert_eq!(a.table_updates, 1);
+        assert_eq!(a.mask_updates, 4);
+        assert!((a.updates_per_token() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,19 @@
+//! PagedEviction: structured block-wise KV cache pruning for efficient LLM
+//! inference — a Rust + JAX + Pallas reproduction of Chitty-Venkata & Ye et
+//! al. (2025).
+//!
+//! Layer 3 (this crate) is the serving coordinator: request routing,
+//! continuous batching, paged KV-cache management and the block-wise
+//! eviction policies that are the paper's contribution. Layer 2 (JAX) and
+//! Layer 1 (Pallas) live under `python/compile/` and are AOT-lowered to HLO
+//! text artifacts which `runtime` loads through the PJRT C API.
+
+pub mod eviction;
+pub mod kvcache;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,215 @@
+//! `paged-eviction` — serving CLI.
+//!
+//! Subcommands:
+//!   serve     run the JSON-lines TCP server
+//!   generate  one-shot generation (text or token ids)
+//!   info      artifact/manifest summary
+//!   simulate  one accuracy-simulator sweep row
+//!
+//! Examples:
+//!   paged-eviction serve --model sim-1b --port 7071
+//!   paged-eviction generate --text "hello" --max-new-tokens 16
+//!   paged-eviction simulate --dataset hotpotqa --policy paged --budget 1024
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use paged_eviction::eviction::make_policy;
+use paged_eviction::runtime::model_runner::argmax;
+use paged_eviction::runtime::{Engine, ModelRunner};
+use paged_eviction::scheduler::SchedConfig;
+use paged_eviction::server::serve::{serve_forever, spawn_engine};
+use paged_eviction::sim;
+use paged_eviction::tokenizer;
+use paged_eviction::util::args::ArgSpec;
+
+fn main() {
+    env_logger_init();
+    let cmd = std::env::args().nth(1).unwrap_or_default();
+    let r = match cmd.as_str() {
+        "serve" => cmd_serve(),
+        "generate" => cmd_generate(),
+        "info" => cmd_info(),
+        "simulate" => cmd_simulate(),
+        _ => {
+            eprintln!(
+                "usage: paged-eviction <serve|generate|info|simulate> [options]\n\
+                 run `paged-eviction <cmd> --help` for details"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn env_logger_init() {
+    // minimal logger: RUST_LOG=debug|info|warn controls verbosity
+    struct L(log::Level);
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= self.0
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("debug") => log::Level::Debug,
+        Ok("warn") => log::Level::Warn,
+        Ok("trace") => log::Level::Trace,
+        _ => log::Level::Info,
+    };
+    let _ = log::set_boxed_logger(Box::new(L(level)));
+    log::set_max_level(level.to_level_filter());
+}
+
+fn artifacts_flag(spec: ArgSpec) -> ArgSpec {
+    spec.opt("artifacts", "artifacts", "artifact directory (make artifacts)")
+}
+
+fn cmd_serve() -> Result<()> {
+    let args = artifacts_flag(
+        ArgSpec::new("paged-eviction serve", "JSON-lines TCP serving frontend")
+            .opt("model", "sim-1b", "model name from the manifest")
+            .opt("port", "7071", "TCP port")
+            .opt("page-size", "16", "KV page size (8|16|32)")
+            .opt("max-concurrency", "8", "max sequences decoded concurrently")
+            .opt("max-live-blocks", "4096", "global KV block capacity")
+            .opt("config", "", "TOML config file ([server]/[cache] sections \
+                 override the flags; see docs in util::toml)"),
+    )
+    .parse_or_exit(2);
+    let mut cfg = SchedConfig {
+        model: args.get("model").to_string(),
+        page_size: args.get_usize("page-size"),
+        max_concurrency: args.get_usize("max-concurrency"),
+        max_live_blocks: args.get_usize("max-live-blocks"),
+    };
+    if !args.get("config").is_empty() {
+        use paged_eviction::util::toml;
+        let text = std::fs::read_to_string(args.get("config"))?;
+        let doc = toml::parse(&text)?;
+        if let Some(v) = toml::get(&doc, "server", "model").and_then(|v| v.as_str()) {
+            cfg.model = v.to_string();
+        }
+        if let Some(v) = toml::get(&doc, "server", "max_concurrency").and_then(|v| v.as_usize()) {
+            cfg.max_concurrency = v;
+        }
+        if let Some(v) = toml::get(&doc, "cache", "page_size").and_then(|v| v.as_usize()) {
+            cfg.page_size = v;
+        }
+        if let Some(v) = toml::get(&doc, "cache", "max_live_blocks").and_then(|v| v.as_usize()) {
+            cfg.max_live_blocks = v;
+        }
+    }
+    let (handle, _join) = spawn_engine(args.get("artifacts").into(), cfg)?;
+    let listener = std::net::TcpListener::bind(("127.0.0.1", args.get_usize("port") as u16))?;
+    println!("serving on {}", listener.local_addr()?);
+    serve_forever(listener, handle, Arc::new(Mutex::new(0)))
+}
+
+fn cmd_generate() -> Result<()> {
+    let args = artifacts_flag(
+        ArgSpec::new("paged-eviction generate", "one-shot generation")
+            .opt("model", "sim-1b", "model name")
+            .opt("text", "", "prompt text (byte tokenizer)")
+            .opt("prompt", "", "comma-separated token ids (overrides --text)")
+            .opt("max-new-tokens", "16", "generation length")
+            .opt("budget", "1024", "KV cache budget (tokens)")
+            .opt("policy", "paged", "eviction policy")
+            .opt("page-size", "16", "KV page size"),
+    )
+    .parse_or_exit(2);
+    let prompt: Vec<u32> = if !args.get("prompt").is_empty() {
+        args.get_usize_list("prompt").iter().map(|&x| x as u32).collect()
+    } else if !args.get("text").is_empty() {
+        tokenizer::encode(args.get("text"))
+    } else {
+        anyhow::bail!("need --text or --prompt");
+    };
+    let engine = Engine::new(args.get("artifacts"))?;
+    let runner = ModelRunner::new(&engine, args.get("model"), args.get_usize("page-size"))?;
+    let policy = make_policy(args.get("policy"))?;
+    let t0 = std::time::Instant::now();
+    let (mut seq, logits) = runner.prefill(&prompt, args.get_usize("budget"), policy)?;
+    let mut tok = argmax(&logits);
+    let mut out = Vec::new();
+    for _ in 0..args.get_usize("max-new-tokens") {
+        out.push(tok);
+        let step = runner.decode_step(&mut seq, tok)?;
+        tok = argmax(&step.logits);
+    }
+    println!("tokens: {out:?}");
+    println!("text:   {:?}", tokenizer::decode(&out));
+    println!(
+        "cache:  live={} blocks={} partial={} evicted_blocks={} in {:.1} ms",
+        seq.cache.live_tokens(),
+        seq.cache.n_blocks(),
+        seq.cache.partial_blocks(),
+        seq.cache.stats.blocks_evicted,
+        t0.elapsed().as_secs_f64() * 1e3,
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let args = artifacts_flag(ArgSpec::new("paged-eviction info", "artifact summary"))
+        .parse_or_exit(2);
+    let engine = Engine::new(args.get("artifacts"))?;
+    println!("platform: {}", engine.platform());
+    println!("kernel impl: {}", engine.manifest.kernel_impl);
+    for (name, m) in &engine.manifest.models {
+        println!(
+            "model {name}: {}L d{} {}h/{}kv dh{} ff{} vocab {} ({} params, weights: {})",
+            m.n_layers, m.d_model, m.n_heads, m.n_kv_heads, m.d_head, m.d_ff,
+            m.vocab_size, m.n_params, m.weights_src,
+        );
+    }
+    println!("graphs: {}", engine.manifest.graphs.len());
+    for g in &engine.manifest.graphs {
+        println!("  {}", g.name);
+    }
+    Ok(())
+}
+
+fn cmd_simulate() -> Result<()> {
+    let args = ArgSpec::new(
+        "paged-eviction simulate",
+        "accuracy-simulator sweep row (see DESIGN.md §4 for what this models)",
+    )
+    .opt("dataset", "govreport", "govreport|multinews|hotpotqa|multifieldqa|qasper")
+    .opt("policy", "paged", "eviction policy")
+    .opt("budget", "1024", "cache budget tokens")
+    .opt("page-size", "16", "page size")
+    .opt("episodes", "32", "episodes to average")
+    .opt("seed", "0", "base seed")
+    .parse_or_exit(2);
+    let d = sim::datasets::dataset(args.get("dataset"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let cfg = sim::SimConfig {
+        budget: args.get_usize("budget"),
+        page_size: args.get_usize("page-size"),
+        seed: args.get_u64("seed"),
+        ..Default::default()
+    };
+    let p = make_policy(args.get("policy"))?;
+    let r = sim::attention_sim::simulate_mean(d, p.as_ref(), &cfg, args.get_usize("episodes"));
+    println!(
+        "{} {} budget={} -> score {:.2} (coverage {:.3}, needles {:.2}, partial_blocks {})",
+        args.get("dataset"),
+        args.get("policy"),
+        cfg.budget,
+        r.score,
+        r.coverage,
+        r.needles_retained,
+        r.partial_blocks,
+    );
+    Ok(())
+}

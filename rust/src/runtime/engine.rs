@@ -1,0 +1,165 @@
+//! PJRT execution engine: compiles HLO-text artifacts on the CPU client
+//! (lazily, cached) and owns the per-model weight literals.
+//!
+//! Single-threaded by design: the serving event loop owns the Engine; the
+//! TCP frontend talks to it over channels (see `server/`). This mirrors the
+//! vLLM split between the scheduler/worker process and the API server.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{GraphInfo, Manifest};
+use super::weights;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Per-model weights as DEVICE-RESIDENT buffers, uploaded once.
+    /// (Also the workaround for an xla-crate 0.1.6 shim leak: `execute`
+    /// with Literal args leaks its internal literal->buffer conversions
+    /// ~0.7 MB/call; `execute_b` with self-managed PjRtBuffers does not —
+    /// see EXPERIMENTS.md §Perf.)
+    model_weights: RefCell<HashMap<String, Rc<Vec<xla::PjRtBuffer>>>>,
+    /// compile wall-times per graph, for EXPERIMENTS.md §Perf
+    compile_ms: RefCell<HashMap<String, f64>>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT platform={} devices={} kernel_impl={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.kernel_impl
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            model_weights: RefCell::new(HashMap::new()),
+            compile_ms: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) a graph artifact.
+    pub fn executable(&self, g: &GraphInfo) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(&g.name) {
+            return Ok(e.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let path = g.path.to_str().context("non-utf8 artifact path")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("PJRT compile of {}", g.name))?,
+        );
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        log::debug!("compiled {} in {ms:.0} ms", g.name);
+        self.compile_ms.borrow_mut().insert(g.name.clone(), ms);
+        self.exes.borrow_mut().insert(g.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Per-model weights as device-resident buffers in ABI order (uploaded
+    /// once, cached for the engine's lifetime).
+    pub fn weights(&self, model: &str) -> Result<Rc<Vec<xla::PjRtBuffer>>> {
+        if let Some(w) = self.model_weights.borrow().get(model) {
+            return Ok(w.clone());
+        }
+        let info = self.manifest.model(model)?;
+        let tensors = weights::load(&info.weights_file)?;
+        let mut bufs = Vec::with_capacity(info.weight_names.len());
+        for (name, shape) in info.weight_names.iter().zip(&info.weight_shapes) {
+            let t = tensors
+                .get(name)
+                .with_context(|| format!("weights file missing tensor {name}"))?;
+            anyhow::ensure!(
+                &t.shape == shape,
+                "tensor {name}: manifest shape {shape:?} != file shape {:?}",
+                t.shape
+            );
+            bufs.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(&t.data, shape, None)
+                    .with_context(|| format!("uploading weight {name}"))?,
+            );
+        }
+        let rc = Rc::new(bufs);
+        self.model_weights
+            .borrow_mut()
+            .insert(model.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Upload a host literal to a device buffer.
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Execute a graph whose entry takes (runtime inputs ++ weights) and
+    /// returns a tuple; decomposes the tuple to host literals.
+    ///
+    /// Inputs are uploaded to self-managed device buffers and executed via
+    /// `execute_b` (the Literal-arg `execute` path in xla 0.1.6 leaks its
+    /// internal conversions).
+    pub fn run(
+        &self,
+        g: &GraphInfo,
+        runtime_inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(g)?;
+        let w = self.weights(&g.model)?;
+        let ibufs: Vec<xla::PjRtBuffer> = runtime_inputs
+            .iter()
+            .map(|l| self.upload(l))
+            .collect::<Result<_>>()?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(ibufs.len() + w.len());
+        args.extend(ibufs.iter());
+        args.extend(w.iter());
+        let out = exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .with_context(|| format!("executing {}", g.name))?;
+        let first = &out[0][0];
+        let lit = first.to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    pub fn compile_times_ms(&self) -> HashMap<String, f64> {
+        self.compile_ms.borrow().clone()
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    anyhow::ensure!(data.len() == numel, "shape {shape:?} != {} elems", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    anyhow::ensure!(data.len() == numel, "shape {shape:?} != {} elems", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar i32 literal.
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::from(v)
+}

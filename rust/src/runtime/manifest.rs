@@ -1,0 +1,243 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed with the in-tree JSON parser.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphKind {
+    Prefill,
+    Decode,
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphInfo {
+    pub name: String,
+    pub kind: GraphKind,
+    pub model: String,
+    pub path: PathBuf,
+    /// prefill: prompt bucket P; decode: context-token bucket.
+    pub seq_bucket: usize,
+    /// decode only
+    pub page_size: usize,
+    pub n_blocks: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub n_params: usize,
+    pub weights_file: PathBuf,
+    pub weights_src: String,
+    pub weight_names: Vec<String>,
+    pub weight_shapes: Vec<Vec<usize>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub kernel_impl: String,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub graphs: Vec<GraphInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root.req("models")?.as_obj().context("models not an object")? {
+            let get = |k: &str| -> Result<usize> {
+                m.req(k)?.as_usize().with_context(|| format!("model {name}: bad {k}"))
+            };
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    vocab_size: get("vocab_size")?,
+                    d_model: get("d_model")?,
+                    n_layers: get("n_layers")?,
+                    n_heads: get("n_heads")?,
+                    n_kv_heads: get("n_kv_heads")?,
+                    d_head: get("d_head")?,
+                    d_ff: get("d_ff")?,
+                    n_params: get("n_params")?,
+                    weights_file: dir.join(
+                        m.req("weights")?.as_str().context("weights not a string")?,
+                    ),
+                    weights_src: m
+                        .req("weights_src")?
+                        .as_str()
+                        .unwrap_or("unknown")
+                        .to_string(),
+                    weight_names: m
+                        .req("weight_names")?
+                        .as_arr()
+                        .context("weight_names")?
+                        .iter()
+                        .map(|v| v.as_str().unwrap_or_default().to_string())
+                        .collect(),
+                    weight_shapes: m
+                        .req("weight_shapes")?
+                        .as_arr()
+                        .context("weight_shapes")?
+                        .iter()
+                        .map(|v| v.usize_vec())
+                        .collect::<Result<Vec<_>>>()?,
+                },
+            );
+        }
+
+        let mut graphs = Vec::new();
+        for g in root.req("graphs")?.as_arr().context("graphs not an array")? {
+            let kind = match g.req("kind")?.as_str() {
+                Some("prefill") => GraphKind::Prefill,
+                Some("decode") => GraphKind::Decode,
+                k => bail!("unknown graph kind {k:?}"),
+            };
+            graphs.push(GraphInfo {
+                name: g.req("name")?.as_str().context("name")?.to_string(),
+                kind,
+                model: g.req("model")?.as_str().context("model")?.to_string(),
+                path: dir.join(g.req("path")?.as_str().context("path")?),
+                seq_bucket: g.req("seq_bucket")?.as_usize().context("seq_bucket")?,
+                page_size: g.get("page_size").and_then(|v| v.as_usize()).unwrap_or(0),
+                n_blocks: g.get("n_blocks").and_then(|v| v.as_usize()).unwrap_or(0),
+            });
+        }
+
+        Ok(Manifest {
+            dir,
+            kernel_impl: root
+                .req("kernel_impl")?
+                .as_str()
+                .unwrap_or("unknown")
+                .to_string(),
+            models,
+            graphs,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest ({:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// Smallest prefill bucket >= `len` for a model.
+    pub fn prefill_graph(&self, model: &str, len: usize) -> Result<&GraphInfo> {
+        self.graphs
+            .iter()
+            .filter(|g| g.kind == GraphKind::Prefill && g.model == model && g.seq_bucket >= len)
+            .min_by_key(|g| g.seq_bucket)
+            .with_context(|| format!("no prefill bucket >= {len} for {model}"))
+    }
+
+    /// Smallest decode context bucket >= `tokens` at the given page size.
+    pub fn decode_graph(&self, model: &str, page_size: usize, tokens: usize) -> Result<&GraphInfo> {
+        self.graphs
+            .iter()
+            .filter(|g| {
+                g.kind == GraphKind::Decode
+                    && g.model == model
+                    && g.page_size == page_size
+                    && g.seq_bucket >= tokens
+            })
+            .min_by_key(|g| g.seq_bucket)
+            .with_context(|| {
+                format!("no decode bucket >= {tokens} tokens for {model} @ page {page_size}")
+            })
+    }
+
+    /// Largest decode bucket available (FullCache capacity ceiling).
+    pub fn max_decode_tokens(&self, model: &str, page_size: usize) -> usize {
+        self.graphs
+            .iter()
+            .filter(|g| {
+                g.kind == GraphKind::Decode && g.model == model && g.page_size == page_size
+            })
+            .map(|g| g.seq_bucket)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn page_sizes(&self, model: &str) -> Vec<usize> {
+        let mut ps: Vec<usize> = self
+            .graphs
+            .iter()
+            .filter(|g| g.kind == GraphKind::Decode && g.model == model)
+            .map(|g| g.page_size)
+            .collect();
+        ps.sort_unstable();
+        ps.dedup();
+        ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn manifest() -> Manifest {
+        Manifest::load(artifacts_dir()).expect("run `make artifacts` before cargo test")
+    }
+
+    #[test]
+    fn loads_and_has_three_models() {
+        let m = manifest();
+        for name in ["sim-1b", "sim-3b", "sim-8b"] {
+            let info = m.model(name).unwrap();
+            assert!(info.n_params > 0);
+            assert_eq!(info.weight_names.len(), info.weight_shapes.len());
+            assert!(info.weights_file.exists());
+        }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = manifest();
+        assert_eq!(m.prefill_graph("sim-1b", 50).unwrap().seq_bucket, 64);
+        assert_eq!(m.prefill_graph("sim-1b", 64).unwrap().seq_bucket, 64);
+        assert_eq!(m.prefill_graph("sim-1b", 65).unwrap().seq_bucket, 128);
+        assert!(m.prefill_graph("sim-1b", 100_000).is_err());
+        let d = m.decode_graph("sim-1b", 16, 200).unwrap();
+        assert_eq!(d.seq_bucket, 256);
+        assert_eq!(d.n_blocks, 16);
+        assert!(m.max_decode_tokens("sim-1b", 16) >= 1024);
+    }
+
+    #[test]
+    fn page_sizes_cover_ablation() {
+        let m = manifest();
+        let ps = m.page_sizes("sim-1b");
+        assert!(ps.contains(&8) && ps.contains(&16) && ps.contains(&32), "{ps:?}");
+    }
+
+    #[test]
+    fn graph_paths_exist() {
+        let m = manifest();
+        for g in &m.graphs {
+            assert!(g.path.exists(), "missing artifact {:?}", g.path);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json` + `*.weights.bin`) and executes them on the CPU PJRT
+//! client from the serving hot path. Python never runs here.
+
+pub mod engine;
+pub mod manifest;
+pub mod model_runner;
+pub mod weights;
+
+pub use engine::Engine;
+pub use manifest::{GraphInfo, GraphKind, Manifest, ModelInfo};
+pub use model_runner::{ModelRunner, Sequence, StepOutput};

@@ -1,0 +1,129 @@
+//! PEW1 weights container parser (written by python/compile/model.py;
+//! format documented in DESIGN.md §7).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<BTreeMap<String, Tensor>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading weights {:?}", path.as_ref()))?;
+    parse(&bytes)
+}
+
+pub fn parse(bytes: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    let mut off = 0usize;
+    let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+        if *off + n > bytes.len() {
+            bail!("truncated weights file at offset {off}");
+        }
+        let s = &bytes[*off..*off + n];
+        *off += n;
+        Ok(s)
+    };
+    if take(&mut off, 4)? != b"PEW1" {
+        bail!("bad magic (not a PEW1 weights file)");
+    }
+    let count = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+        let name = std::str::from_utf8(take(&mut off, nlen)?)
+            .context("bad tensor name")?
+            .to_string();
+        let dtype = take(&mut off, 1)?[0];
+        if dtype != 0 {
+            bail!("tensor {name}: only f32 (dtype 0) supported, got {dtype}");
+        }
+        let rank = take(&mut off, 1)?[0] as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let raw = take(&mut off, numel * 4)?;
+        let mut data = vec![0f32; numel];
+        for (i, c) in raw.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        out.insert(name.clone(), Tensor { name, shape, data });
+    }
+    if off != bytes.len() {
+        bail!("{} trailing bytes in weights file", bytes.len() - off);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enc(tensors: &[(&str, &[usize], &[f32])]) -> Vec<u8> {
+        let mut b = b"PEW1".to_vec();
+        b.extend((tensors.len() as u32).to_le_bytes());
+        for (name, shape, data) in tensors {
+            b.extend((name.len() as u16).to_le_bytes());
+            b.extend(name.as_bytes());
+            b.push(0); // f32
+            b.push(shape.len() as u8);
+            for d in *shape {
+                b.extend((*d as u32).to_le_bytes());
+            }
+            for x in *data {
+                b.extend(x.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = enc(&[
+            ("emb", &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            ("norm", &[2], &[1.0, 1.0]),
+        ]);
+        let w = parse(&bytes).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w["emb"].shape, vec![2, 3]);
+        assert_eq!(w["emb"].data[4], 5.0);
+        assert_eq!(w["norm"].numel(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse(b"NOPE").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut bytes = enc(&[("w", &[4], &[0.0; 4])]);
+        bytes.truncate(bytes.len() - 2);
+        assert!(parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifact() {
+        let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/sim-1b.weights.bin");
+        let w = load(p).expect("run `make artifacts`");
+        assert!(w.contains_key("emb"));
+        assert!(w.contains_key("layer0.wq"));
+        assert!(w.contains_key("head"));
+        let total: usize = w.values().map(|t| t.numel()).sum();
+        assert!(total > 50_000, "sim-1b should have >50k params, got {total}");
+    }
+}

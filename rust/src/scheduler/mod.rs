@@ -1,0 +1,18 @@
+//! Serving coordinator: request lifecycle + continuous batching.
+//!
+//! The scheduler owns the `ModelRunner` and interleaves many in-flight
+//! sequences vLLM-style: at most one prefill per scheduling round (prefill
+//! is the long pole), then one decode step for every running sequence.
+//! Eviction policy + cache budget are per-request, so a single server can
+//! serve mixed policies (that is how the comparison benches run).
+//!
+//! On this testbed PJRT executes on a single CPU core, so "batching" is
+//! round-robin interleave rather than a batched kernel launch; admission,
+//! preemption and block accounting are the same logic a parallel backend
+//! would use (DESIGN.md §4, substitution table).
+
+pub mod request;
+pub mod sched;
+
+pub use request::{FinishReason, Request, RequestOutput, RequestState};
+pub use sched::{SchedConfig, Scheduler, StepReport};

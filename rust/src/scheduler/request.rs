@@ -1,0 +1,70 @@
+//! Request descriptors and lifecycle state.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// KV-cache budget in tokens for this request.
+    pub budget: usize,
+    /// Eviction policy name (see `eviction::make_policy`).
+    pub policy: String,
+    /// Stop generation when this token is produced (None = length only).
+    pub eos_token: Option<u32>,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            budget: 1024,
+            policy: "paged".to_string(),
+            eos_token: None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    Eos,
+    Error,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    Queued,
+    Running,
+    Finished(FinishReason),
+}
+
+/// Completed request + serving metrics.
+#[derive(Debug, Clone)]
+pub struct RequestOutput {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    /// time from admission (enqueue) to first generated token
+    pub ttft_s: f64,
+    /// mean time per output token AFTER the first
+    pub tpot_s: f64,
+    pub prompt_len: usize,
+    pub live_cache_tokens: usize,
+    pub cache_stats: crate::kvcache::CacheStats,
+}
+
+/// Book-keeping for an in-flight request.
+pub(crate) struct Inflight {
+    pub req: Request,
+    pub seq: crate::runtime::Sequence,
+    pub next_token: u32,
+    pub enqueued: Instant,
+    pub first_token_at: Option<Instant>,
+    pub last_token_at: Instant,
+    pub decode_seconds: f64,
+    pub produced: Vec<u32>,
+}

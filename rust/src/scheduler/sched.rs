@@ -1,0 +1,239 @@
+//! The continuous-batching scheduler.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::request::{FinishReason, Inflight, Request, RequestOutput};
+use crate::eviction::make_policy;
+use crate::runtime::model_runner::argmax;
+use crate::runtime::{Engine, ModelRunner};
+use crate::util::stats::{Histogram, Summary};
+
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    pub model: String,
+    pub page_size: usize,
+    /// Max sequences decoded concurrently (vLLM "max_num_seqs").
+    pub max_concurrency: usize,
+    /// Global cap on live KV blocks across all sequences — admission gate
+    /// (stands in for GPU memory capacity).
+    pub max_live_blocks: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            model: "sim-1b".into(),
+            page_size: 16,
+            max_concurrency: 8,
+            max_live_blocks: 4096,
+        }
+    }
+}
+
+/// What happened during one scheduling round (for traces/benches).
+#[derive(Debug, Clone, Default)]
+pub struct StepReport {
+    pub prefilled: usize,
+    pub decoded_tokens: usize,
+    pub finished: usize,
+}
+
+pub struct Scheduler<'e> {
+    pub cfg: SchedConfig,
+    runner: ModelRunner<'e>,
+    queue: VecDeque<(Request, Instant)>,
+    running: Vec<Inflight>,
+    finished: Vec<RequestOutput>,
+    // aggregate serving metrics
+    pub ttft: Histogram,
+    pub tpot: Histogram,
+    pub decode_step_s: Summary,
+    pub total_generated: u64,
+    pub total_prompt_tokens: u64,
+    started: Option<Instant>,
+}
+
+impl<'e> Scheduler<'e> {
+    pub fn new(engine: &'e Engine, cfg: SchedConfig) -> Result<Self> {
+        let runner = ModelRunner::new(engine, &cfg.model, cfg.page_size)?;
+        Ok(Scheduler {
+            cfg,
+            runner,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            finished: Vec::new(),
+            ttft: Histogram::new(),
+            tpot: Histogram::new(),
+            decode_step_s: Summary::new(),
+            total_generated: 0,
+            total_prompt_tokens: 0,
+            started: None,
+        })
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn live_blocks(&self) -> usize {
+        self.running.iter().map(|f| f.seq.cache.n_blocks()).sum()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.running.is_empty()
+    }
+
+    /// Drain all completed outputs accumulated so far.
+    pub fn take_finished(&mut self) -> Vec<RequestOutput> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// One scheduling round: admit (at most one prefill), then one decode
+    /// step per running sequence, retiring finished ones.
+    pub fn step(&mut self) -> Result<StepReport> {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+        let mut report = StepReport::default();
+
+        // --- admission: one prefill per round, gated on capacity ---
+        if self.running.len() < self.cfg.max_concurrency {
+            if let Some((req, enq)) = self.queue.pop_front() {
+                let needed_blocks = (req.budget + 2 * self.cfg.page_size)
+                    / self.cfg.page_size;
+                if self.live_blocks() + needed_blocks > self.cfg.max_live_blocks {
+                    // not enough global KV memory — requeue (head-of-line)
+                    self.queue.push_front((req, enq));
+                } else {
+                    match self.admit(req, enq) {
+                        Ok(()) => report.prefilled = 1,
+                        Err(e) => log::warn!("prefill failed: {e:#}"),
+                    }
+                }
+            }
+        }
+
+        // --- decode: one token for every running sequence ---
+        let mut i = 0;
+        while i < self.running.len() {
+            let t0 = Instant::now();
+            let fin = self.decode_one(i)?;
+            self.decode_step_s.add(t0.elapsed().as_secs_f64());
+            report.decoded_tokens += 1;
+            if fin {
+                let f = self.running.swap_remove(i);
+                self.retire(f);
+                report.finished += 1;
+            } else {
+                i += 1;
+            }
+        }
+        Ok(report)
+    }
+
+    /// Run rounds until everything submitted so far is finished.
+    pub fn run_to_completion(&mut self) -> Result<Vec<RequestOutput>> {
+        while !self.is_idle() {
+            self.step()?;
+        }
+        Ok(self.take_finished())
+    }
+
+    /// Tokens (prompt+generated) per second since the first step — the
+    /// paper's throughput metric (§5.1).
+    pub fn throughput_tok_s(&self) -> f64 {
+        match self.started {
+            Some(t0) => {
+                (self.total_prompt_tokens + self.total_generated) as f64
+                    / t0.elapsed().as_secs_f64()
+            }
+            None => 0.0,
+        }
+    }
+
+    fn admit(&mut self, req: Request, enqueued: Instant) -> Result<()> {
+        let policy = make_policy(&req.policy)?;
+        let (seq, logits) = self.runner.prefill(&req.prompt, req.budget, policy)?;
+        self.total_prompt_tokens += req.prompt.len() as u64;
+        let next = argmax(&logits);
+        self.running.push(Inflight {
+            req,
+            seq,
+            next_token: next,
+            enqueued,
+            first_token_at: None,
+            last_token_at: Instant::now(),
+            decode_seconds: 0.0,
+            produced: Vec::new(),
+        });
+        Ok(())
+    }
+
+    /// Decode one token for running[i]; returns true when finished.
+    fn decode_one(&mut self, i: usize) -> Result<bool> {
+        let f = &mut self.running[i];
+        let tok = f.next_token;
+        let t0 = Instant::now();
+        let out = match self.runner.decode_step(&mut f.seq, tok) {
+            Ok(o) => o,
+            Err(e) => {
+                log::warn!("req {}: decode error: {e:#}", f.req.id);
+                f.produced.push(tok);
+                return Ok(true); // retire with what we have
+            }
+        };
+        f.decode_seconds += t0.elapsed().as_secs_f64();
+        f.produced.push(tok);
+        if f.first_token_at.is_none() {
+            f.first_token_at = Some(Instant::now());
+        }
+        f.last_token_at = Instant::now();
+        self.total_generated += 1;
+        f.next_token = argmax(&out.logits);
+        let eos_hit = f.req.eos_token.map_or(false, |e| tok == e);
+        Ok(eos_hit || f.produced.len() >= f.req.max_new_tokens)
+    }
+
+    fn retire(&mut self, f: Inflight) {
+        let ttft = f
+            .first_token_at
+            .map(|t| t.duration_since(f.enqueued).as_secs_f64())
+            .unwrap_or(0.0);
+        let n = f.produced.len();
+        let tpot = if n > 1 {
+            f.decode_seconds / (n - 1).max(1) as f64
+        } else {
+            f.decode_seconds
+        };
+        self.ttft.add(ttft * 1e3);
+        self.tpot.add(tpot * 1e3);
+        let finish = if f.req.eos_token.is_some()
+            && f.produced.last() == f.req.eos_token.as_ref()
+        {
+            FinishReason::Eos
+        } else {
+            FinishReason::MaxTokens
+        };
+        self.finished.push(RequestOutput {
+            id: f.req.id,
+            tokens: f.produced,
+            finish,
+            ttft_s: ttft,
+            tpot_s: tpot,
+            prompt_len: f.req.prompt.len(),
+            live_cache_tokens: f.seq.cache.live_tokens(),
+            cache_stats: f.seq.cache.stats.clone(),
+        });
+    }
+}

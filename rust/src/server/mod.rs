@@ -1,0 +1,12 @@
+//! JSON-lines TCP serving frontend.
+//!
+//! PJRT handles are not `Send`, so the engine + scheduler live on one
+//! dedicated thread (the "engine loop"); connection threads parse requests
+//! and exchange them with the loop over std mpsc channels — the same
+//! process split vLLM makes between its API server and the worker.
+
+pub mod protocol;
+pub mod serve;
+
+pub use protocol::{WireRequest, WireResponse};
+pub use serve::{serve_forever, EngineHandle};

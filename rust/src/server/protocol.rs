@@ -1,0 +1,141 @@
+//! Wire protocol: one JSON object per line, request/response.
+//!
+//! Request fields:
+//!   {"id": 1, "text": "..."} or {"id": 1, "prompt": [ids...]},
+//!   optional: "max_new_tokens" (default 32), "budget" (default 1024),
+//!             "policy" ("paged"|"full"|"streaming"|...), "eos" (token id)
+//! Response:
+//!   {"id": 1, "tokens": [...], "text": "...", "finish": "length"|"eos",
+//!    "ttft_ms": .., "tpot_ms": .., "live_cache_tokens": ..}
+
+use anyhow::{Context, Result};
+
+use crate::scheduler::{FinishReason, Request, RequestOutput};
+use crate::tokenizer;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct WireRequest(pub Request);
+
+impl WireRequest {
+    pub fn parse(line: &str) -> Result<WireRequest> {
+        let j = Json::parse(line).context("bad request json")?;
+        let id = j.get("id").and_then(|v| v.as_u64()).unwrap_or(0);
+        let prompt: Vec<u32> = if let Some(arr) = j.get("prompt").and_then(|v| v.as_arr()) {
+            arr.iter()
+                .map(|v| v.as_usize().map(|x| x as u32))
+                .collect::<Option<Vec<u32>>>()
+                .context("prompt must be an int array")?
+        } else if let Some(text) = j.get("text").and_then(|v| v.as_str()) {
+            tokenizer::encode(text)
+        } else {
+            anyhow::bail!("request needs 'prompt' (ids) or 'text'");
+        };
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let mut req = Request::new(id, prompt, 32);
+        if let Some(m) = j.get("max_new_tokens").and_then(|v| v.as_usize()) {
+            req.max_new_tokens = m.max(1);
+        }
+        if let Some(b) = j.get("budget").and_then(|v| v.as_usize()) {
+            req.budget = b;
+        }
+        if let Some(p) = j.get("policy").and_then(|v| v.as_str()) {
+            req.policy = p.to_string();
+        }
+        if let Some(e) = j.get("eos").and_then(|v| v.as_usize()) {
+            req.eos_token = Some(e as u32);
+        }
+        Ok(WireRequest(req))
+    }
+}
+
+trait JsonU64 {
+    fn as_u64(&self) -> Option<u64>;
+}
+
+impl JsonU64 for Json {
+    fn as_u64(&self) -> Option<u64> {
+        self.as_i64().filter(|v| *v >= 0).map(|v| v as u64)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct WireResponse(pub RequestOutput);
+
+impl WireResponse {
+    pub fn to_line(&self) -> String {
+        let o = &self.0;
+        let finish = match o.finish {
+            FinishReason::Eos => "eos",
+            FinishReason::MaxTokens => "length",
+            FinishReason::Error => "error",
+        };
+        Json::obj(vec![
+            ("id", Json::num(o.id as f64)),
+            (
+                "tokens",
+                Json::Arr(o.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("text", Json::str(tokenizer::decode(&o.tokens))),
+            ("finish", Json::str(finish)),
+            ("ttft_ms", Json::num(o.ttft_s * 1e3)),
+            ("tpot_ms", Json::num(o.tpot_s * 1e3)),
+            ("prompt_len", Json::num(o.prompt_len as f64)),
+            ("live_cache_tokens", Json::num(o.live_cache_tokens as f64)),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_text_request() {
+        let r = WireRequest::parse(
+            r#"{"id": 7, "text": "hi", "max_new_tokens": 4, "policy": "full"}"#,
+        )
+        .unwrap()
+        .0;
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt, vec![104, 105]);
+        assert_eq!(r.max_new_tokens, 4);
+        assert_eq!(r.policy, "full");
+    }
+
+    #[test]
+    fn parse_prompt_ids() {
+        let r = WireRequest::parse(r#"{"id": 1, "prompt": [1, 2, 3], "budget": 64}"#)
+            .unwrap()
+            .0;
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.budget, 64);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(WireRequest::parse(r#"{"id": 1}"#).is_err());
+        assert!(WireRequest::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_as_json() {
+        use crate::kvcache::CacheStats;
+        let out = RequestOutput {
+            id: 3,
+            tokens: vec![104, 105],
+            finish: FinishReason::MaxTokens,
+            ttft_s: 0.01,
+            tpot_s: 0.002,
+            prompt_len: 5,
+            live_cache_tokens: 64,
+            cache_stats: CacheStats::default(),
+        };
+        let line = WireResponse(out).to_line();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("text").unwrap().as_str(), Some("hi"));
+        assert_eq!(j.get("finish").unwrap().as_str(), Some("length"));
+    }
+}

@@ -1,0 +1,170 @@
+//! The engine loop + TCP frontend.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::protocol::{WireRequest, WireResponse};
+use crate::scheduler::{Request, RequestOutput, SchedConfig, Scheduler};
+use crate::runtime::Engine;
+
+type ReplyTx = Sender<RequestOutput>;
+
+/// Cloneable handle connection threads use to reach the engine loop.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<(Request, ReplyTx)>,
+}
+
+impl EngineHandle {
+    /// Submit a request and block until it completes.
+    pub fn generate(&self, req: Request) -> Result<RequestOutput> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send((req, rtx))
+            .map_err(|_| anyhow::anyhow!("engine loop gone"))?;
+        rrx.recv().context("engine loop dropped the request")
+    }
+}
+
+/// Run the engine loop on the CURRENT thread (PJRT handles are not Send).
+/// Returns when `rx` disconnects and all work is drained.
+pub fn engine_loop(
+    engine: &Engine,
+    cfg: SchedConfig,
+    rx: Receiver<(Request, ReplyTx)>,
+) -> Result<()> {
+    let mut sched = Scheduler::new(engine, cfg)?;
+    let mut waiters: std::collections::HashMap<u64, ReplyTx> = Default::default();
+    let mut disconnected = false;
+    loop {
+        // Drain the inbox without blocking while there is work; block when
+        // idle to avoid spinning.
+        loop {
+            let msg = if sched.is_idle() && !disconnected {
+                match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => {
+                        disconnected = true;
+                        None
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        None
+                    }
+                }
+            };
+            match msg {
+                Some((req, reply)) => {
+                    waiters.insert(req.id, reply);
+                    sched.submit(req);
+                }
+                None => break,
+            }
+        }
+        if sched.is_idle() {
+            if disconnected {
+                return Ok(());
+            }
+            continue;
+        }
+        sched.step()?;
+        for out in sched.take_finished() {
+            if let Some(tx) = waiters.remove(&out.id) {
+                let _ = tx.send(out);
+            }
+        }
+    }
+}
+
+/// Spawn the engine loop on its own thread and return a handle.
+/// `artifacts_dir` is loaded inside the thread (Engine is not Send).
+pub fn spawn_engine(
+    artifacts_dir: std::path::PathBuf,
+    cfg: SchedConfig,
+) -> Result<(EngineHandle, std::thread::JoinHandle<()>)> {
+    let (tx, rx) = channel();
+    let (ready_tx, ready_rx) = channel();
+    let join = std::thread::Builder::new()
+        .name("engine-loop".into())
+        .spawn(move || {
+            let engine = match Engine::new(&artifacts_dir) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            if let Err(e) = engine_loop(&engine, cfg, rx) {
+                log::error!("engine loop died: {e:#}");
+            }
+        })?;
+    match ready_rx.recv() {
+        Ok(Ok(())) => Ok((EngineHandle { tx }, join)),
+        Ok(Err(msg)) => anyhow::bail!("engine init failed: {msg}"),
+        Err(_) => anyhow::bail!("engine thread vanished"),
+    }
+}
+
+/// Accept loop: JSON-lines over TCP, one thread per connection.
+pub fn serve_forever(
+    listener: TcpListener,
+    handle: EngineHandle,
+    next_id: Arc<Mutex<u64>>,
+) -> Result<()> {
+    log::info!("listening on {}", listener.local_addr()?);
+    for conn in listener.incoming() {
+        let conn = conn?;
+        let h = handle.clone();
+        let ids = next_id.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(conn, h, ids) {
+                log::debug!("connection closed: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    handle: EngineHandle,
+    next_id: Arc<Mutex<u64>>,
+) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match WireRequest::parse(&line) {
+            Ok(WireRequest(mut req)) => {
+                if req.id == 0 {
+                    let mut g = next_id.lock().unwrap();
+                    *g += 1;
+                    req.id = *g;
+                }
+                let out = handle.generate(req)?;
+                writeln!(writer, "{}", WireResponse(out).to_line())?;
+            }
+            Err(e) => {
+                writeln!(writer, "{{\"error\": \"{}\"}}", e.to_string().replace('"', "'"))?;
+            }
+        }
+    }
+    log::debug!("peer {peer} disconnected");
+    Ok(())
+}

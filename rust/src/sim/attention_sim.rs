@@ -1,0 +1,424 @@
+//! The attention-mass episode simulator.
+//!
+//! Generates a prompt whose tokens carry latent *importance* (their share
+//! of future attention mass), derives the three attention-free score
+//! channels from it with channel-specific proxy noise, then replays the
+//! production cache/eviction machinery and scores what survived.
+
+use crate::eviction::{Decision, EvictionPolicy, PrefillScores};
+use crate::kvcache::SeqCache;
+use crate::util::rng::Pcg32;
+
+use super::datasets::{DatasetProfile, ScoreKind};
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub budget: usize,
+    pub page_size: usize,
+    pub seed: u64,
+    /// Proxy fidelity per channel as a CORRELATION in [0,1] between the
+    /// proxy and the true (standardized log) attention mass:
+    /// proxy = corr * z(ln w) + sqrt(1-corr^2) * noise.
+    /// Defaults encode the paper's observed proxy-quality ordering
+    /// (V/K ratio > inverse key norm > keydiff); the ablation bench
+    /// sweeps them. 1.0 = oracle (H2O-style attention-score access).
+    pub proxy_corr: [f64; 3],
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            budget: 1024,
+            page_size: 16,
+            seed: 0,
+            proxy_corr: [0.72, 0.45, 0.30],
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EpisodeResult {
+    /// retained attention mass averaged over decode steps, in [0, 1]
+    pub coverage: f64,
+    /// fraction of needle tokens live at the end (1.0 when no needles)
+    pub needles_retained: f64,
+    /// dataset-scale score (ROUGE / F1 points)
+    pub score: f64,
+    pub partial_blocks: usize,
+    pub table_updates: u64,
+    pub mask_updates: u64,
+}
+
+/// Latent importance for each prompt position.
+fn importance_profile(
+    d: &DatasetProfile,
+    rng: &mut Pcg32,
+    needles: &[usize],
+) -> Vec<f64> {
+    let n = d.prompt_len;
+    let mut w = vec![0f64; n];
+    // heavy-tailed base mass: random permutation of zipf ranks
+    let mut ranks: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut ranks);
+    for i in 0..n {
+        w[i] = 1.0 / ((ranks[i] + 1) as f64).powf(d.zipf_s);
+    }
+    // attention sinks: first tokens get a fixed share of total mass
+    let total: f64 = w.iter().sum();
+    let sink_n = 4;
+    for i in 0..sink_n.min(n) {
+        w[i] += d.sink_mass * total / sink_n as f64;
+    }
+    // recency boost applied to the tail
+    if d.recency_halflife > 0.0 {
+        for i in 0..n {
+            let age = (n - 1 - i) as f64;
+            // recent tokens draw disproportionate attention (StreamingLLM's
+            // premise); 3x boost at age 0 decaying with the half-life
+            w[i] *= 1.0 + 3.0 * (-age / d.recency_halflife).exp();
+        }
+    }
+    // needles dominate their neighbourhood (QA answer spans)
+    let mean = w.iter().sum::<f64>() / n as f64;
+    for &p in needles {
+        w[p] = w[p].max(mean * 50.0);
+    }
+    w
+}
+
+/// Derive the three proxy channels from importance with channel-specific
+/// correlation. Channel semantics match the live system: 0 = V/K ratio
+/// (higher = keep), 1 = key L2 (lower = keep), 2 = keydiff cos (lower =
+/// keep). The proxy is corr * z + sqrt(1-corr^2) * eps over the
+/// standardized log-importance z, so `corr` IS the proxy-truth Pearson
+/// correlation regardless of the importance distribution's scale.
+fn proxy_channels(w: &[f64], corr: &[f64; 3], rng: &mut Pcg32) -> [Vec<f32>; 3] {
+    let n = w.len();
+    let logs: Vec<f64> = w.iter().map(|&wi| wi.max(1e-12).ln()).collect();
+    let mean = logs.iter().sum::<f64>() / n as f64;
+    let var = logs.iter().map(|l| (l - mean).powi(2)).sum::<f64>() / n as f64;
+    let std = var.sqrt().max(1e-9);
+    let mut chans = [Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n)];
+    for &l in &logs {
+        let z = (l - mean) / std;
+        for (c, ch) in chans.iter_mut().enumerate() {
+            let a = corr[c].clamp(0.0, 1.0);
+            let p = a * z + (1.0 - a * a).sqrt() * rng.normal();
+            // channels 1 and 2 are "lower = keep" in the live system
+            ch.push(if c == 0 { p as f32 } else { -p as f32 });
+        }
+    }
+    chans
+}
+
+/// Run one episode of `policy` on dataset `d` and score the outcome.
+pub fn simulate_episode(
+    d: &DatasetProfile,
+    policy: &dyn EvictionPolicy,
+    cfg: &SimConfig,
+) -> EpisodeResult {
+    let mut rng = Pcg32::with_stream(cfg.seed, 0x5eed + d.prompt_len as u64);
+    let bs = cfg.page_size;
+
+    // --- plant needles (QA datasets) ---
+    let needles: Vec<usize> = match d.score {
+        ScoreKind::Needle { n_needles, .. } => (0..n_needles)
+            .map(|_| {
+                // needles live in the middle 60% of the prompt — past the
+                // sinks, before the recency window
+                let lo = d.prompt_len / 5;
+                let hi = 4 * d.prompt_len / 5;
+                lo + rng.usize_below(hi - lo)
+            })
+            .collect(),
+        _ => vec![],
+    };
+
+    let w = importance_profile(d, &mut rng, &needles);
+    let channels = proxy_channels(&w, &cfg.proxy_corr, &mut rng);
+    let scores = PrefillScores { channels, len: d.prompt_len };
+
+    // --- prefill eviction (token-level, pre-pagination) ---
+    let keep = policy.prefill_keep(&scores, cfg.budget);
+    let capacity = (cfg.budget / bs + 4).max(keep.len() / bs + 4);
+    let mut cache = SeqCache::new(bs, capacity);
+    let entries: Vec<(u32, [f32; 3])> = keep
+        .iter()
+        .map(|&i| {
+            (i as u32, [
+                scores.channels[0][i],
+                scores.channels[1][i],
+                scores.channels[2][i],
+            ])
+        })
+        .collect();
+    cache.load_prefill(&entries, d.prompt_len as u32);
+
+    // --- decode loop: new tokens draw modest importance (generated text
+    // attends mostly to the prompt). Their true mass comes from the SAME
+    // lognormal model as the prompt (z = -0.5, i.e. below-average tokens),
+    // so proxies and truth stay consistent across prompt and generation. ---
+    let logs: Vec<f64> = w.iter().map(|x| x.max(1e-12).ln()).collect();
+    let ln_mean = logs.iter().sum::<f64>() / logs.len() as f64;
+    let ln_var =
+        logs.iter().map(|l| (l - ln_mean).powi(2)).sum::<f64>() / logs.len() as f64;
+    let ln_std = ln_var.sqrt().max(1e-9);
+    let gen_z = -0.5f64;
+    let gen_wi = (ln_mean + gen_z * ln_std).exp();
+    let mut total_mass: f64 = w.iter().sum();
+    let mut live_mass: f64 = keep.iter().map(|&i| w[i]).sum();
+    // positions -> importance for retention accounting
+    let mut imp = w.clone();
+    let mut coverage_acc = 0.0f64;
+    for step in 0..d.gen_len {
+        // retained share BEFORE this step's append (decision quality view)
+        coverage_acc += live_mass / total_mass;
+        if !cache.ensure_block() {
+            cache.grow(cache.capacity_blocks() + 4);
+            assert!(cache.ensure_block());
+        }
+        let wi = gen_wi;
+        let _ = step;
+        // decode-time tokens score via the same correlation model at the
+        // same z as their true mass
+        let z = gen_z;
+        let sc = [
+            (cfg.proxy_corr[0] * z + (1.0 - cfg.proxy_corr[0].powi(2)).sqrt() * rng.normal()) as f32,
+            (-(cfg.proxy_corr[1] * z + (1.0 - cfg.proxy_corr[1].powi(2)).sqrt() * rng.normal())) as f32,
+            (-(cfg.proxy_corr[2] * z + (1.0 - cfg.proxy_corr[2].powi(2)).sqrt() * rng.normal())) as f32,
+        ];
+        imp.push(wi);
+        total_mass += wi;
+        live_mass += wi;
+        cache.append(sc);
+        match policy.post_append(&cache, cfg.budget) {
+            Decision::Keep => {}
+            Decision::EvictBlock(i) => {
+                let mut lost = 0.0;
+                for (_, pos, _) in cache.blocks()[i].live_tokens() {
+                    lost += imp[pos as usize];
+                }
+                #[cfg(test)]
+                if std::env::var("SIM_DEBUG").is_ok() {
+                    let blk = &cache.blocks()[i];
+                    eprintln!(
+                        "step {step}: evict logical {i} mean_ch0 {:.3} first_pos {} lost_mass_share {:.4}",
+                        blk.mean_score(0),
+                        blk.positions[0],
+                        lost / total_mass
+                    );
+                }
+                live_mass -= lost;
+                cache.evict_block(i);
+            }
+            Decision::KillTokens(ts) => {
+                for (bi, off) in ts {
+                    let pos = cache.blocks()[bi].positions[off];
+                    live_mass -= imp[pos as usize];
+                    cache.kill_token(bi, off);
+                }
+            }
+        }
+    }
+    let coverage = coverage_acc / d.gen_len.max(1) as f64;
+    #[cfg(test)]
+    {
+        let recomputed: f64 = cache
+            .live_token_list()
+            .iter()
+            .map(|&(_, _, pos, _)| imp[pos as usize])
+            .sum();
+        if (recomputed - live_mass).abs() > 1e-6 * total_mass {
+            eprintln!(
+                "LIVE MASS DRIFT: tracked {live_mass:.4} recomputed {recomputed:.4} (total {total_mass:.4})"
+            );
+        }
+        eprintln!(
+            "end: live {} tokens, final share {:.3}, avg coverage {:.3}, evicted_blocks {}",
+            cache.live_tokens(),
+            recomputed / total_mass,
+            coverage,
+            cache.stats.blocks_evicted
+        );
+    }
+
+    let live_positions: std::collections::HashSet<u32> = cache
+        .live_token_list()
+        .iter()
+        .map(|&(_, _, p, _)| p)
+        .collect();
+    let needles_retained = if needles.is_empty() {
+        1.0
+    } else {
+        needles
+            .iter()
+            .filter(|&&p| live_positions.contains(&(p as u32)))
+            .count() as f64
+            / needles.len() as f64
+    };
+
+    let score = match d.score {
+        ScoreKind::Coverage { gamma } => d.full_score * coverage.powf(gamma),
+        ScoreKind::Needle { base, .. } => {
+            // all-or-nothing per needle, plus partial credit via coverage
+            base + (d.full_score - base)
+                * needles_retained
+                * coverage.powf(0.15)
+        }
+    };
+
+    EpisodeResult {
+        coverage,
+        needles_retained,
+        score,
+        partial_blocks: cache.partial_blocks(),
+        table_updates: cache.stats.table_updates,
+        mask_updates: cache.stats.mask_updates,
+    }
+}
+
+/// Average `n` episodes (different seeds).
+pub fn simulate_mean(
+    d: &DatasetProfile,
+    policy: &dyn EvictionPolicy,
+    cfg: &SimConfig,
+    n: usize,
+) -> EpisodeResult {
+    let mut acc = EpisodeResult {
+        coverage: 0.0,
+        needles_retained: 0.0,
+        score: 0.0,
+        partial_blocks: 0,
+        table_updates: 0,
+        mask_updates: 0,
+    };
+    for i in 0..n {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed.wrapping_add(i as u64 * 7919);
+        let r = simulate_episode(d, policy, &c);
+        acc.coverage += r.coverage;
+        acc.needles_retained += r.needles_retained;
+        acc.score += r.score;
+        acc.partial_blocks += r.partial_blocks;
+        acc.table_updates += r.table_updates;
+        acc.mask_updates += r.mask_updates;
+    }
+    acc.coverage /= n as f64;
+    acc.needles_retained /= n as f64;
+    acc.score /= n as f64;
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eviction::make_policy;
+    use crate::sim::datasets::dataset;
+
+    fn run(ds: &str, pol: &str, budget: usize) -> EpisodeResult {
+        let d = dataset(ds).unwrap();
+        let p = make_policy(pol).unwrap();
+        simulate_mean(d, p.as_ref(), &SimConfig { budget, ..Default::default() }, 8)
+    }
+
+    #[test]
+    fn full_cache_is_upper_bound() {
+        for ds in ["govreport", "hotpotqa"] {
+            let full = run(ds, "full", 1024);
+            assert!(full.coverage > 0.999, "{ds}: {}", full.coverage);
+            for pol in ["paged", "streaming", "inverse_key_norm", "keydiff"] {
+                let r = run(ds, pol, 1024);
+                assert!(
+                    r.score <= full.score + 1e-6,
+                    "{ds}/{pol}: {} > full {}",
+                    r.score,
+                    full.score
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn score_monotone_in_budget() {
+        for pol in ["paged", "streaming"] {
+            let lo = run("govreport", pol, 256);
+            let hi = run("govreport", pol, 4096);
+            assert!(
+                hi.score > lo.score,
+                "{pol}: budget 4096 ({}) should beat 256 ({})",
+                hi.score,
+                lo.score
+            );
+        }
+    }
+
+    #[test]
+    fn paged_beats_recency_on_needles() {
+        // Needles are planted mid-prompt: pure recency (StreamingLLM) loses
+        // them at tight budgets; importance-driven paged keeps them.
+        let paged = run("hotpotqa", "paged", 512);
+        let stream = run("hotpotqa", "streaming", 512);
+        assert!(
+            paged.needles_retained > stream.needles_retained,
+            "paged {} vs streaming {}",
+            paged.needles_retained,
+            stream.needles_retained
+        );
+    }
+
+    #[test]
+    fn unstructured_fragments_structured_does_not() {
+        let paged = run("govreport", "paged", 1024);
+        let ikn = run("govreport", "inverse_key_norm", 1024);
+        assert_eq!(paged.partial_blocks, 0);
+        assert!(ikn.partial_blocks > 0);
+        // paged touches metadata once per page; unstructured once per token
+        assert!(ikn.mask_updates > 4 * paged.table_updates);
+        assert_eq!(paged.mask_updates, 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = dataset("qasper").unwrap();
+        let p = make_policy("paged").unwrap();
+        let cfg = SimConfig { budget: 512, ..Default::default() };
+        let a = simulate_episode(d, p.as_ref(), &cfg);
+        let b = simulate_episode(d, p.as_ref(), &cfg);
+        assert_eq!(a.score, b.score);
+    }
+}
+
+#[cfg(test)]
+mod probe_tests {
+    use super::*;
+    use crate::eviction::make_policy;
+    use crate::sim::datasets::dataset;
+
+    #[test]
+    fn probe_episode_live_mass_consistency() {
+        let d = dataset("govreport").unwrap();
+        let p = make_policy("paged").unwrap();
+        let cfg = SimConfig { budget: 4096, ..Default::default() };
+        // re-run the episode body with recomputation at the end
+        let r = simulate_episode(d, p.as_ref(), &cfg);
+        println!("episode coverage {:.3}", r.coverage);
+    }
+
+    #[test]
+    fn probe_prefill_coverage() {
+        let d = dataset("govreport").unwrap();
+        let mut rng = Pcg32::with_stream(0, 0x5eed + d.prompt_len as u64);
+        let w = importance_profile(d, &mut rng, &[]);
+        let channels = proxy_channels(&w, &[0.72, 0.45, 0.30], &mut rng);
+        let total: f64 = w.iter().sum();
+        for budget in [256usize, 1024, 4096] {
+            for pol in ["paged", "inverse_key_norm"] {
+                let p = make_policy(pol).unwrap();
+                let scores = PrefillScores { channels: channels.clone(), len: d.prompt_len };
+                let keep = p.prefill_keep(&scores, budget);
+                let mass: f64 = keep.iter().map(|&i| w[i]).sum();
+                println!("b={budget} {pol}: keep {} cov {:.3}", keep.len(), mass / total);
+            }
+        }
+    }
+}

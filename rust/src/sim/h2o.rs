@@ -1,0 +1,126 @@
+//! H2O oracle policy (simulator-only).
+//!
+//! H2O (Zhang et al. 2023) scores tokens by cumulative attention — exactly
+//! the signal FlashAttention/PagedAttention never materialize, which is why
+//! the paper excludes it from the deployable baselines (§5.2). The
+//! simulator knows every token's true attention mass, so we expose H2O as
+//! an *oracle upper bound*: heavy hitters + recent window, scored on truth.
+
+use crate::eviction::{top_k_ascending, Decision, EvictionPolicy, PrefillScores};
+use crate::kvcache::SeqCache;
+
+pub struct H2oOracle {
+    /// true importance by original position (the sim's latent w).
+    importances: Vec<f64>,
+    /// recent-window fraction of the budget (H2O keeps recency too).
+    pub recent_frac: f64,
+}
+
+impl H2oOracle {
+    pub fn new(importances: Vec<f64>) -> Self {
+        H2oOracle { importances, recent_frac: 0.25 }
+    }
+
+    fn imp(&self, pos: usize) -> f64 {
+        self.importances.get(pos).copied().unwrap_or(1e-6)
+    }
+}
+
+impl EvictionPolicy for H2oOracle {
+    fn name(&self) -> &'static str {
+        "h2o_oracle"
+    }
+
+    fn structured(&self) -> bool {
+        false
+    }
+
+    fn prefill_keep(&self, scores: &PrefillScores, budget: usize) -> Vec<usize> {
+        let len = scores.len;
+        if len <= budget {
+            return (0..len).collect();
+        }
+        let recent = ((budget as f64 * self.recent_frac) as usize).min(budget);
+        let hh_budget = budget - recent;
+        // heavy hitters by TRUE importance over the non-recent prefix
+        let head = len - recent;
+        let truth: Vec<f32> = (0..head).map(|i| self.imp(i) as f32).collect();
+        let mut keep = top_k_ascending(&truth, hh_budget);
+        keep.extend(head..len);
+        keep
+    }
+
+    fn post_append(&self, cache: &SeqCache, budget: usize) -> Decision {
+        let live = cache.live_tokens();
+        if live <= budget {
+            return Decision::Keep;
+        }
+        let newest = cache.next_position().saturating_sub(1);
+        let recent_cut = newest.saturating_sub((budget as f64 * self.recent_frac) as u32);
+        let mut worst: Option<((usize, usize), f64)> = None;
+        let mut kills = Vec::new();
+        let mut over = live - budget;
+        // kill the lowest-truth non-recent tokens
+        let mut tokens: Vec<(usize, usize, u32)> = cache
+            .live_token_list()
+            .iter()
+            .map(|&(bi, off, pos, _)| (bi, off, pos))
+            .filter(|&(_, _, pos)| pos < recent_cut)
+            .collect();
+        tokens.sort_by(|a, b| {
+            self.imp(a.2 as usize)
+                .partial_cmp(&self.imp(b.2 as usize))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for (bi, off, _) in tokens {
+            if over == 0 {
+                break;
+            }
+            kills.push((bi, off));
+            over -= 1;
+        }
+        let _ = &mut worst;
+        if kills.is_empty() {
+            Decision::Keep
+        } else {
+            Decision::KillTokens(kills)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_keeps_heavy_hitters() {
+        let mut imp = vec![0.01; 100];
+        imp[10] = 5.0;
+        imp[40] = 4.0;
+        let o = H2oOracle::new(imp);
+        let scores = PrefillScores {
+            channels: [vec![0.0; 100], vec![0.0; 100], vec![0.0; 100]],
+            len: 100,
+        };
+        let keep = o.prefill_keep(&scores, 20);
+        assert!(keep.contains(&10));
+        assert!(keep.contains(&40));
+        assert!(keep.contains(&99), "recent window kept");
+        assert_eq!(keep.len(), 20);
+    }
+
+    #[test]
+    fn oracle_decode_kills_lowest_truth() {
+        let mut imp = vec![1.0; 8];
+        imp[2] = 1e-6;
+        let o = H2oOracle::new(imp);
+        let mut c = SeqCache::new(4, 4);
+        c.load_prefill(&(0..8).map(|i| (i, [0.0; 3])).collect::<Vec<_>>(), 8);
+        c.ensure_block();
+        c.append([0.0; 3]);
+        match o.post_append(&c, 8) {
+            Decision::KillTokens(ts) => assert_eq!(ts, vec![(0, 2)]),
+            d => panic!("{d:?}"),
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Accuracy simulator track (DESIGN.md §4): reproduces the *shape* of the
+//! paper's Figure 2 / Figure 4(d-i) accuracy-vs-budget curves at the
+//! paper's own scales (budgets 256-4096) without the unavailable Llama
+//! checkpoints and LongBench data.
+//!
+//! The simulator drives the EXACT production cache + policy code
+//! (`kvcache::SeqCache`, `eviction::*`); only the token stream and the
+//! score channels are synthetic. It encodes the paper's empirical premises
+//! explicitly (documented, tunable):
+//!
+//!  * attention importance is heavy-tailed with sinks + recency
+//!    (StreamingLLM/H2O observations);
+//!  * the attention-free channels are noisy proxies of importance, with
+//!    proxy fidelity ordered V/K-ratio > inverse-key-norm > keydiff
+//!    (Devoto et al.'s key-norm correlation + the paper's Fig. 2 outcome);
+//!
+//! and then *measures the consequence* of block-wise vs token-wise vs
+//! recency eviction under those premises — which granularity retains more
+//! of what matters, where fragmentation bites, where crossovers fall.
+//! The H2O oracle (true importance, attention-based) provides the upper
+//! bound the paper excludes for deployability reasons.
+
+pub mod attention_sim;
+pub mod datasets;
+pub mod h2o;
+pub mod rouge;
+
+pub use attention_sim::{simulate_episode, EpisodeResult, SimConfig};
+pub use datasets::{DatasetProfile, ScoreKind, DATASETS};
+pub use h2o::H2oOracle;

@@ -1,0 +1,124 @@
+//! ROUGE-1 / ROUGE-2 / ROUGE-L (F1) from scratch — the paper's
+//! summarization metric, used by the real-model track to score generated
+//! continuations against the full-cache reference generation.
+
+use std::collections::HashMap;
+
+fn ngram_counts<'a>(tokens: &'a [&'a str], n: usize) -> HashMap<Vec<&'a str>, usize> {
+    let mut m = HashMap::new();
+    if tokens.len() < n {
+        return m;
+    }
+    for w in tokens.windows(n) {
+        *m.entry(w.to_vec()).or_insert(0) += 1;
+    }
+    m
+}
+
+fn f1(overlap: usize, cand: usize, refr: usize) -> f64 {
+    if cand == 0 || refr == 0 || overlap == 0 {
+        return 0.0;
+    }
+    let p = overlap as f64 / cand as f64;
+    let r = overlap as f64 / refr as f64;
+    2.0 * p * r / (p + r)
+}
+
+/// ROUGE-N F1 between whitespace-tokenized candidate and reference.
+pub fn rouge_n(candidate: &str, reference: &str, n: usize) -> f64 {
+    let c: Vec<&str> = candidate.split_whitespace().collect();
+    let r: Vec<&str> = reference.split_whitespace().collect();
+    let cc = ngram_counts(&c, n);
+    let rc = ngram_counts(&r, n);
+    let overlap: usize = cc
+        .iter()
+        .map(|(g, &cnt)| cnt.min(rc.get(g).copied().unwrap_or(0)))
+        .sum();
+    let c_total = c.len().saturating_sub(n - 1);
+    let r_total = r.len().saturating_sub(n - 1);
+    f1(overlap, c_total, r_total)
+}
+
+/// ROUGE-L F1 (longest common subsequence).
+pub fn rouge_l(candidate: &str, reference: &str) -> f64 {
+    let c: Vec<&str> = candidate.split_whitespace().collect();
+    let r: Vec<&str> = reference.split_whitespace().collect();
+    let lcs = lcs_len(&c, &r);
+    f1(lcs, c.len(), r.len())
+}
+
+fn lcs_len(a: &[&str], b: &[&str]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        for j in 1..=b.len() {
+            cur[j] = if a[i - 1] == b[j - 1] {
+                prev[j - 1] + 1
+            } else {
+                prev[j].max(cur[j - 1])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Token-sequence variant: exact-id ROUGE-L over raw token ids (for the
+/// byte-level model where whitespace tokenization is meaningless).
+pub fn rouge_l_ids(candidate: &[u32], reference: &[u32]) -> f64 {
+    let c: Vec<String> = candidate.iter().map(|t| t.to_string()).collect();
+    let r: Vec<String> = reference.iter().map(|t| t.to_string()).collect();
+    let cs: Vec<&str> = c.iter().map(|s| s.as_str()).collect();
+    let rs: Vec<&str> = r.iter().map(|s| s.as_str()).collect();
+    f1(lcs_len(&cs, &rs), cs.len(), rs.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_one() {
+        assert!((rouge_n("a b c d", "a b c d", 1) - 1.0).abs() < 1e-12);
+        assert!((rouge_n("a b c d", "a b c d", 2) - 1.0).abs() < 1e-12);
+        assert!((rouge_l("a b c d", "a b c d") - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_is_zero() {
+        assert_eq!(rouge_n("a b", "c d", 1), 0.0);
+        assert_eq!(rouge_l("a b", "c d"), 0.0);
+    }
+
+    #[test]
+    fn rouge1_known_value() {
+        // cand: the cat sat / ref: the cat ate -> overlap 2, P=2/3, R=2/3
+        let s = rouge_n("the cat sat", "the cat ate", 1);
+        assert!((s - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge_l_subsequence_not_substring() {
+        // LCS("a x b y c", "a b c") = 3
+        let s = rouge_l("a x b y c", "a b c");
+        let expect = f1(3, 5, 3);
+        assert!((s - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clipped_counts() {
+        // candidate repeats "a" 4x but reference has it twice
+        let s = rouge_n("a a a a", "a a b b", 1);
+        assert!((s - f1(2, 4, 4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ids_variant() {
+        assert!((rouge_l_ids(&[1, 2, 3], &[1, 2, 3]) - 1.0).abs() < 1e-12);
+        assert!(rouge_l_ids(&[1, 9, 2, 8, 3], &[1, 2, 3]) > 0.7);
+        assert_eq!(rouge_l_ids(&[], &[1]), 0.0);
+    }
+}

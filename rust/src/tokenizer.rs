@@ -1,0 +1,37 @@
+//! Byte-level tokenizer: the vocabulary is exactly the 256 byte values, so
+//! any UTF-8 text round-trips losslessly and token ids never leave the
+//! model's vocab. (The recall workload instead speaks raw token ids — see
+//! `workload::recall`.)
+
+/// Encode text as byte tokens.
+pub fn encode(text: &str) -> Vec<u32> {
+    text.as_bytes().iter().map(|&b| b as u32).collect()
+}
+
+/// Decode byte tokens back to text (lossy on invalid UTF-8).
+pub fn decode(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xff) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "hello, paged eviction!";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo — 😀";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_stay_in_vocab() {
+        assert!(encode("😀€ñ").iter().all(|&t| t < 256));
+    }
+}

@@ -1,0 +1,264 @@
+//! Minimal CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! auto-generated `--help`. Declarative enough for the main binary's
+//! subcommands and all example/bench drivers.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative arg parser: declare options, then `parse` an argv tail.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(program: &str, about: &str) -> Self {
+        ArgSpec { program: program.into(), about: about.into(), specs: vec![] }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n\nOptions:", self.program, self.about);
+        for spec in &self.specs {
+            let tail = if spec.is_flag {
+                String::new()
+            } else if let Some(d) = &spec.default {
+                format!(" <value>  (default: {d})")
+            } else {
+                " <value>  (required)".to_string()
+            };
+            let _ = writeln!(s, "  --{}{}\n        {}", spec.name, tail, spec.help);
+        }
+        s
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{name} is a flag, takes no value"));
+                    }
+                    flags.push(name);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for spec in &self.specs {
+            if !spec.is_flag && !values.contains_key(&spec.name) {
+                match &spec.default {
+                    Some(d) => {
+                        values.insert(spec.name.clone(), d.clone());
+                    }
+                    None => {
+                        return Err(format!(
+                            "missing required --{}\n\n{}",
+                            spec.name,
+                            self.usage()
+                        ))
+                    }
+                }
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+
+    /// Parse the process argv (skipping argv[0] and an optional subcommand);
+    /// print usage and exit on error.
+    pub fn parse_or_exit(&self, skip: usize) -> Args {
+        let argv: Vec<String> = std::env::args().skip(skip).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    /// Comma-separated list.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect()
+    }
+
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        self.get_list(name)
+            .iter()
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name}: bad integer {s:?}")))
+            .collect()
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("t", "test")
+            .opt("budget", "1024", "cache budget")
+            .req("model", "model name")
+            .flag("verbose", "chatty")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        let a = spec().parse(&sv(&["--model", "sim-1b", "--verbose"])).unwrap();
+        assert_eq!(a.get("model"), "sim-1b");
+        assert_eq!(a.get_usize("budget"), 1024);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = spec().parse(&sv(&["--model=x", "--budget=256"])).unwrap();
+        assert_eq!(a.get("model"), "x");
+        assert_eq!(a.get_usize("budget"), 256);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(spec().parse(&sv(&["--budget", "2"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(spec().parse(&sv(&["--model", "m", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = spec().parse(&sv(&["pos1", "--model", "m", "pos2"])).unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let s = ArgSpec::new("t", "").opt("budgets", "64,128,256", "");
+        let a = s.parse(&sv(&[])).unwrap();
+        assert_eq!(a.get_usize_list("budgets"), vec![64, 128, 256]);
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let e = spec().parse(&sv(&["--help"])).unwrap_err();
+        assert!(e.contains("--budget"));
+        assert!(e.contains("cache budget"));
+    }
+}

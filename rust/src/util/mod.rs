@@ -1,0 +1,13 @@
+//! Zero-dependency utility substrates.
+//!
+//! The offline vendor set ships only `xla`, `anyhow` and `log`, so every
+//! other building block a serving framework normally pulls from crates.io
+//! (JSON, CLI parsing, RNG, statistics, property testing) is implemented
+//! here from scratch and unit-tested in place.
+
+pub mod args;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod toml;

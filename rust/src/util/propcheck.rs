@@ -1,0 +1,86 @@
+//! Mini property-based testing harness (proptest is not in the offline
+//! vendor set). Runs a property against N seeded random cases and, on
+//! failure, re-runs with the failing seed reported so the case can be
+//! reproduced by pinning `PropConfig::only_seed`.
+
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    /// Re-run exactly one case (from a failure report).
+    pub only_seed: Option<u64>,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 128, seed: 0x9e3779b97f4a7c15, only_seed: None }
+    }
+}
+
+/// Run `prop(rng)` for `cfg.cases` independent seeds; panic with the failing
+/// case seed on the first failure (property returns Err(description)).
+pub fn check<F>(name: &str, cfg: &PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let seeds: Vec<u64> = match cfg.only_seed {
+        Some(s) => vec![s],
+        None => (0..cfg.cases as u64).map(|i| cfg.seed.wrapping_add(i)).collect(),
+    };
+    for case_seed in seeds {
+        let mut rng = Pcg32::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed (reproduce with only_seed={case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: default config.
+pub fn quick<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    check(name, &PropConfig::default(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        quick("add-commutes", |rng| {
+            let a = rng.below(1000) as u64;
+            let b = rng.below(1000) as u64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "only_seed=")]
+    fn failing_property_reports_seed() {
+        quick("always-fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn only_seed_runs_single_case() {
+        let mut runs = 0;
+        check(
+            "count",
+            &PropConfig { only_seed: Some(42), ..Default::default() },
+            |_| {
+                runs += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(runs, 1);
+    }
+}

@@ -1,0 +1,243 @@
+//! Serving statistics: online summaries, percentile sketches, throughput
+//! windows. Replaces hdrhistogram/criterion's stat layer for our benches.
+
+/// Online mean/variance (Welford) plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact-percentile latency recorder. Stores every sample (fine at our
+/// request volumes); `pctl` uses the nearest-rank method.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { samples: Vec::new(), sorted: true }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Nearest-rank percentile, q in [0, 100].
+    pub fn pctl(&mut self, q: f64) -> f64 {
+        assert!(!self.samples.is_empty(), "empty histogram");
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let rank = ((q / 100.0) * n as f64).ceil().max(1.0) as usize;
+        self.samples[rank.min(n) - 1]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn report(&mut self, unit: &str) -> String {
+        if self.is_empty() {
+            return "n=0".to_string();
+        }
+        format!(
+            "n={} mean={:.3}{u} p50={:.3}{u} p90={:.3}{u} p99={:.3}{u} max={:.3}{u}",
+            self.len(),
+            self.mean(),
+            self.pctl(50.0),
+            self.pctl(90.0),
+            self.pctl(99.0),
+            self.pctl(100.0),
+            u = unit,
+        )
+    }
+}
+
+/// Tokens/sec over a measured wall-clock span.
+#[derive(Debug, Clone, Copy)]
+pub struct Throughput {
+    pub tokens: u64,
+    pub seconds: f64,
+}
+
+impl Throughput {
+    pub fn per_sec(&self) -> f64 {
+        if self.seconds <= 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.seconds
+        }
+    }
+}
+
+/// Fixed-width text table writer for paper-style bench output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.add(i as f64);
+        }
+        assert_eq!(h.pctl(50.0), 50.0);
+        assert_eq!(h.pctl(90.0), 90.0);
+        assert_eq!(h.pctl(99.0), 99.0);
+        assert_eq!(h.pctl(100.0), 100.0);
+        assert_eq!(h.pctl(1.0), 1.0);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        let mut h = Histogram::new();
+        h.add(3.25);
+        assert_eq!(h.pctl(50.0), 3.25);
+        assert_eq!(h.pctl(99.0), 3.25);
+    }
+
+    #[test]
+    fn throughput() {
+        let t = Throughput { tokens: 500, seconds: 2.0 };
+        assert_eq!(t.per_sec(), 250.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["budget", "tok/s"]);
+        t.row(vec!["256".into(), "3020.1".into()]);
+        t.row(vec!["4096".into(), "99.5".into()]);
+        let r = t.render();
+        assert!(r.contains("budget"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,203 @@
+//! Minimal TOML-subset parser for serving config files (toml/serde are not
+//! in the offline vendor set).
+//!
+//! Supported: `[section]` headers, `key = value` with string/int/float/
+//! bool/inline-array values, `#` comments, blank lines. This covers the
+//! whole `ServeConfig` surface; nested tables and multi-line values are
+//! intentionally out of scope.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize_list(&self) -> Option<Vec<usize>> {
+        match self {
+            TomlValue::Array(xs) => xs.iter().map(|x| x.as_usize()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value`; keys before any `[section]` land under `""`.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let value = parse_value(val.trim())
+            .with_context(|| format!("line {}: bad value {:?}", lineno + 1, val.trim()))?;
+        doc.entry(section.clone())
+            .or_default()
+            .insert(key.trim().to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: '#' inside quoted strings is not supported
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(body) = s.strip_prefix('"') {
+        let Some(inner) = body.strip_suffix('"') else {
+            bail!("unterminated string")
+        };
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let Some(inner) = body.strip_suffix(']') else {
+            bail!("unterminated array")
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let elems = inner
+            .split(',')
+            .map(|e| parse_value(e.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Array(elems));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("unrecognized value")
+}
+
+/// Typed accessor with section.key error messages.
+pub fn get<'d>(doc: &'d TomlDoc, section: &str, key: &str) -> Option<&'d TomlValue> {
+    doc.get(section).and_then(|s| s.get(key))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# serving config
+[server]
+model = "sim-1b"
+port = 7071
+max_concurrency = 8     # sequences
+
+[cache]
+page_size = 16
+budget = 1024
+policy = "paged"
+buckets = [128, 256, 512]
+grow = true
+load_factor = 0.75
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = parse(SAMPLE).unwrap();
+        assert_eq!(get(&d, "server", "model").unwrap().as_str(), Some("sim-1b"));
+        assert_eq!(get(&d, "server", "port").unwrap().as_usize(), Some(7071));
+        assert_eq!(get(&d, "cache", "grow").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            get(&d, "cache", "buckets").unwrap().as_usize_list(),
+            Some(vec![128, 256, 512])
+        );
+        assert_eq!(get(&d, "cache", "load_factor").unwrap().as_f64(), Some(0.75));
+    }
+
+    #[test]
+    fn comments_stripped_not_in_strings() {
+        let d = parse("x = \"a # b\" # trailing").unwrap();
+        assert_eq!(get(&d, "", "x").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("just a line").is_err());
+        assert!(parse("x = [1, 2").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+        assert!(parse("x = what").is_err());
+    }
+
+    #[test]
+    fn empty_and_blank_ok() {
+        assert!(parse("").unwrap().is_empty());
+        let d = parse("\n\n# only comments\n").unwrap();
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn negative_and_float_values() {
+        let d = parse("a = -3\nb = 2.5\nc = [1, 2.0]").unwrap();
+        assert_eq!(get(&d, "", "a").unwrap(), &TomlValue::Int(-3));
+        assert_eq!(get(&d, "", "b").unwrap().as_f64(), Some(2.5));
+        assert!(get(&d, "", "c").unwrap().as_usize_list().is_none());
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload generation: the associative-recall task the tiny model is
+//! trained on (real-model accuracy track), synthetic LongBench-shaped
+//! episodes (simulator accuracy track), and Poisson arrival traces for the
+//! serving benches.
+
+pub mod recall;
+pub mod trace;
+
+pub use recall::RecallPrompt;
+pub use trace::{ArrivalTrace, TraceConfig};

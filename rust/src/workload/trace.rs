@@ -1,0 +1,85 @@
+//! Arrival traces for the serving benches: Poisson arrivals (open loop) or
+//! all-at-once bursts (closed loop, the paper's 64-concurrent setup).
+
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub n_requests: usize,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    /// Poisson arrival rate (requests/sec); None = all arrive at t=0
+    /// (the paper's batch setup).
+    pub arrival_rate: Option<f64>,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrivalTrace {
+    /// (arrival time in seconds, prompt seed) per request.
+    pub arrivals: Vec<(f64, u64)>,
+}
+
+impl ArrivalTrace {
+    pub fn generate(cfg: &TraceConfig) -> ArrivalTrace {
+        let mut rng = Pcg32::new(cfg.seed);
+        let mut t = 0.0;
+        let arrivals = (0..cfg.n_requests)
+            .map(|_| {
+                if let Some(rate) = cfg.arrival_rate {
+                    t += rng.exp(rate);
+                }
+                (t, rng.next_u64())
+            })
+            .collect();
+        ArrivalTrace { arrivals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_trace_all_at_zero() {
+        let tr = ArrivalTrace::generate(&TraceConfig {
+            n_requests: 10,
+            prompt_len: 64,
+            max_new_tokens: 32,
+            arrival_rate: None,
+            seed: 1,
+        });
+        assert_eq!(tr.arrivals.len(), 10);
+        assert!(tr.arrivals.iter().all(|&(t, _)| t == 0.0));
+    }
+
+    #[test]
+    fn poisson_trace_monotone_and_rate() {
+        let tr = ArrivalTrace::generate(&TraceConfig {
+            n_requests: 2000,
+            prompt_len: 64,
+            max_new_tokens: 32,
+            arrival_rate: Some(50.0),
+            seed: 2,
+        });
+        let times: Vec<f64> = tr.arrivals.iter().map(|&(t, _)| t).collect();
+        assert!(times.windows(2).all(|w| w[1] >= w[0]));
+        let total = times.last().unwrap();
+        let rate = 2000.0 / total;
+        assert!((rate - 50.0).abs() < 5.0, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = TraceConfig {
+            n_requests: 5,
+            prompt_len: 64,
+            max_new_tokens: 8,
+            arrival_rate: Some(10.0),
+            seed: 3,
+        };
+        let a = ArrivalTrace::generate(&cfg);
+        let b = ArrivalTrace::generate(&cfg);
+        assert_eq!(a.arrivals, b.arrivals);
+    }
+}

