@@ -20,6 +20,9 @@ pub fn bench_args(spec: ArgSpec) -> Args {
     }
 }
 
+/// Artifact directory for the PJRT-backed sections (unused when built
+/// without the `xla` feature).
+#[allow(dead_code)]
 pub fn artifacts_dir() -> String {
     std::env::var("PAGED_EVICTION_ARTIFACTS").unwrap_or_else(|_| {
         format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))

@@ -24,7 +24,12 @@ struct Cell {
     tok_s: f64,
     tpot_ms: f64,
     updates_per_token: f64,
+    /// High-water fragmented pages across the cell's sequences
+    /// (`CacheStats::peak_partial_blocks`).
     partial_blocks_max: usize,
+    /// High-water physical block footprint across the cell's sequences
+    /// (`CacheStats::peak_live_blocks`).
+    peak_blocks_max: usize,
 }
 
 fn run_cell(
@@ -59,24 +64,21 @@ fn run_cell(
     let mut updates = 0u64;
     let mut written = 0u64;
     let mut partial_max = 0usize;
+    let mut peak_blocks = 0usize;
     for o in &outs {
         updates += o.cache_stats.table_updates + o.cache_stats.mask_updates;
         written += o.cache_stats.tokens_written;
-        partial_max = partial_max.max(o.cache_stats.blocks_evicted as usize * 0); // placeholder
+        // true high-water marks, tracked by the cache itself
+        partial_max = partial_max.max(o.cache_stats.peak_partial_blocks as usize);
+        peak_blocks = peak_blocks.max(o.cache_stats.peak_live_blocks as usize);
     }
-    // partial blocks: peak fragmentation is tracked per-sequence at retire
-    partial_max = outs
-        .iter()
-        .map(|o| (o.cache_stats.tokens_written - o.cache_stats.tokens_evicted) as usize)
-        .max()
-        .unwrap_or(0)
-        / 16; // approx live blocks at retire
     let mut tpot = sched.tpot.clone();
     Ok(Cell {
         tok_s: sched.throughput_tok_s(),
         tpot_ms: if tpot.is_empty() { 0.0 } else { tpot.pctl(50.0) },
         updates_per_token: updates as f64 / written.max(1) as f64,
         partial_blocks_max: partial_max,
+        peak_blocks_max: peak_blocks,
     })
 }
 
@@ -122,6 +124,8 @@ fn main() {
         header.extend(budgets.iter().map(|b| format!("b={b}")));
         header.push("tpot_ms@mid".into());
         header.push("upd/tok".into());
+        header.push("partial@mid".into());
+        header.push("blocks@mid".into());
         let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
         let mut full_mid = 0.0;
         let mut paged_mid = 0.0;
@@ -154,7 +158,8 @@ fn main() {
             }
             row.push(format!("{:.2}", mid.tpot_ms));
             row.push(format!("{:.3}", mid.updates_per_token));
-            let _ = mid.partial_blocks_max;
+            row.push(format!("{}", mid.partial_blocks_max));
+            row.push(format!("{}", mid.peak_blocks_max));
             t.row(row);
         }
         print!("{}", t.render());

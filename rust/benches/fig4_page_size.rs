@@ -5,25 +5,21 @@
 //!     cargo bench --bench fig4_page_size -- --models sim-1b --pages 8,16,32
 //!
 //! Accuracy has two tracks, as in Fig 2: the simulator at paper scale
-//! (GovReport/MultiNews ROUGE analogue) and the real model's full-cache
-//! fidelity (ROUGE-L over token ids of the evicted-cache generation vs the
-//! full-cache generation — the measurable analogue of "less than 3-5%
-//! degradation from Full Cache").
+//! (GovReport/MultiNews ROUGE analogue; policy x page cells fan out with
+//! `std::thread::scope`, numerically identical to a serial run) and — with
+//! `--features xla` — the real model's full-cache fidelity (ROUGE-L over
+//! token ids of the evicted-cache generation vs the full-cache generation,
+//! the measurable analogue of "less than 3-5% degradation from Full
+//! Cache") plus the throughput sweep.
 
 mod common;
 
-use common::{artifacts_dir, bench_args, section};
+use common::{bench_args, section};
 use paged_eviction::eviction::make_policy;
-use paged_eviction::runtime::model_runner::argmax;
-use paged_eviction::runtime::{Engine, ModelRunner};
-use paged_eviction::scheduler::{Request, SchedConfig, Scheduler};
 use paged_eviction::sim::attention_sim::{simulate_episode, SimConfig};
 use paged_eviction::sim::datasets::dataset;
-use paged_eviction::sim::rouge::rouge_l_ids;
 use paged_eviction::util::args::ArgSpec;
-use paged_eviction::util::rng::Pcg32;
 use paged_eviction::util::stats::Table;
-use paged_eviction::workload::recall;
 
 const POLICIES: [&str; 4] = ["full", "streaming", "inverse_key_norm", "paged"];
 
@@ -39,20 +35,83 @@ fn main() {
             .opt("episodes", "12", "sim episodes per accuracy cell")
             .opt("fidelity-prompts", "6", "real fidelity prompts per cell"),
     );
-    let engine = Engine::new(artifacts_dir()).expect("make artifacts first");
     let pages = args.get_usize_list("pages");
+
+    #[cfg(feature = "xla")]
+    throughput_track(&args, &pages);
+    #[cfg(not(feature = "xla"))]
+    println!("(throughput a-c skipped: built without --features xla)");
+
+    // ---- (d-i) accuracy vs page size: SIM track ----
+    let sim_budget = args.get_usize("sim-budget");
+    let episodes = args.get_usize("episodes");
+    for ds in ["govreport", "multinews"] {
+        let d = dataset(ds).unwrap();
+        section(&format!(
+            "Fig 4 d-i (SIM, {ds}): score vs page size, budget {sim_budget} \
+             (full-cache {:.1})",
+            d.full_score
+        ));
+        let mut cells = vec![vec![0.0f64; pages.len()]; POLICIES.len()];
+        std::thread::scope(|s| {
+            for (pi, row) in cells.iter_mut().enumerate() {
+                for (gi, slot) in row.iter_mut().enumerate() {
+                    let page = pages[gi];
+                    s.spawn(move || {
+                        let p = make_policy(POLICIES[pi]).unwrap();
+                        let mut acc = 0.0;
+                        for e in 0..episodes {
+                            let cfg = SimConfig {
+                                budget: sim_budget,
+                                page_size: page,
+                                seed: e as u64 * 101,
+                                ..Default::default()
+                            };
+                            acc += simulate_episode(d, p.as_ref(), &cfg).score;
+                        }
+                        *slot = acc / episodes as f64;
+                    });
+                }
+            }
+        });
+        let mut header = vec!["policy".to_string()];
+        header.extend(pages.iter().map(|p| format!("page={p}")));
+        let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for (pi, row) in cells.iter().enumerate() {
+            let mut out = vec![POLICIES[pi].to_string()];
+            out.extend(row.iter().map(|v| format!("{v:.1}")));
+            t.row(out);
+        }
+        print!("{}", t.render());
+    }
+
+    #[cfg(feature = "xla")]
+    fidelity_track(&args, &pages);
+    #[cfg(not(feature = "xla"))]
+    println!("\n(REAL fidelity track skipped: built without --features xla)");
+}
+
+#[cfg(feature = "xla")]
+fn throughput_track(args: &paged_eviction::util::args::Args, pages: &[usize]) {
+    use common::artifacts_dir;
+    use paged_eviction::runtime::Engine;
+    use paged_eviction::scheduler::{Request, SchedConfig, Scheduler};
+    use paged_eviction::util::rng::Pcg32;
+    use paged_eviction::workload::recall;
+
+    let engine = Engine::new(artifacts_dir()).expect("make artifacts first");
     let models = args.get_list("models");
     let budget = args.get_usize("budget");
-
-    // ---- (a-c) throughput vs page size ----
     for model in &models {
-        section(&format!("Fig 4 a-c ({model}): throughput (tok/s) vs page size, budget {budget}"));
+        section(&format!(
+            "Fig 4 a-c ({model}): throughput (tok/s) vs page size, budget {budget}"
+        ));
         let mut header = vec!["policy".to_string()];
         header.extend(pages.iter().map(|p| format!("page={p}")));
         let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
         for policy in POLICIES {
             let mut row = vec![policy.to_string()];
-            for &page in &pages {
+            for &page in pages {
                 let mut sched = Scheduler::new(
                     &engine,
                     SchedConfig {
@@ -79,42 +138,39 @@ fn main() {
         }
         print!("{}", t.render());
     }
+}
 
-    // ---- (d-i) accuracy vs page size: SIM track ----
-    let sim_budget = args.get_usize("sim-budget");
-    let episodes = args.get_usize("episodes");
-    for ds in ["govreport", "multinews"] {
-        let d = dataset(ds).unwrap();
-        section(&format!(
-            "Fig 4 d-i (SIM, {ds}): score vs page size, budget {sim_budget} \
-             (full-cache {:.1})",
-            d.full_score
-        ));
-        let mut header = vec!["policy".to_string()];
-        header.extend(pages.iter().map(|p| format!("page={p}")));
-        let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
-        for policy in POLICIES {
-            let p = make_policy(policy).unwrap();
-            let mut row = vec![policy.to_string()];
-            for &page in &pages {
-                let mut acc = 0.0;
-                for e in 0..episodes {
-                    let cfg = SimConfig {
-                        budget: sim_budget,
-                        page_size: page,
-                        seed: e as u64 * 101,
-                        ..Default::default()
-                    };
-                    acc += simulate_episode(d, p.as_ref(), &cfg).score;
-                }
-                row.push(format!("{:.1}", acc / episodes as f64));
-            }
-            t.row(row);
+#[cfg(feature = "xla")]
+fn fidelity_track(args: &paged_eviction::util::args::Args, pages: &[usize]) {
+    use common::artifacts_dir;
+    use paged_eviction::runtime::model_runner::argmax;
+    use paged_eviction::runtime::{Engine, ModelRunner};
+    use paged_eviction::sim::rouge::rouge_l_ids;
+    use paged_eviction::util::rng::Pcg32;
+    use paged_eviction::workload::recall;
+
+    fn generate(
+        runner: &ModelRunner,
+        prompt: &[u32],
+        budget: usize,
+        policy: &str,
+        len: usize,
+    ) -> Vec<u32> {
+        let (mut seq, logits) = runner
+            .prefill(prompt, budget, make_policy(policy).unwrap())
+            .unwrap();
+        let mut tok = argmax(&logits);
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(tok);
+            let o = runner.decode_step(&mut seq, tok).unwrap();
+            tok = argmax(&o.logits);
         }
-        print!("{}", t.render());
+        out
     }
 
-    // ---- (d-i) accuracy vs page size: REAL fidelity track ----
+    let engine = Engine::new(artifacts_dir()).expect("make artifacts first");
+    let budget = args.get_usize("budget");
     section(&format!(
         "Fig 4 (REAL, sim-1b): full-cache fidelity (ROUGE-L of generation \
          vs full-cache generation), budget {budget}"
@@ -127,7 +183,7 @@ fn main() {
     // reference generations per (page, prompt) under full cache
     for policy in POLICIES {
         let mut row = vec![policy.to_string()];
-        for &page in &pages {
+        for &page in pages {
             let runner = ModelRunner::new(&engine, "sim-1b", page).unwrap();
             let mut acc = 0.0;
             for i in 0..n {
@@ -144,24 +200,4 @@ fn main() {
     }
     print!("{}", t.render());
     println!("(1.00 = byte-identical to full-cache output)");
-}
-
-fn generate(
-    runner: &ModelRunner,
-    prompt: &[u32],
-    budget: usize,
-    policy: &str,
-    len: usize,
-) -> Vec<u32> {
-    let (mut seq, logits) = runner
-        .prefill(prompt, budget, make_policy(policy).unwrap())
-        .unwrap();
-    let mut tok = argmax(&logits);
-    let mut out = Vec::with_capacity(len);
-    for _ in 0..len {
-        out.push(tok);
-        let o = runner.decode_step(&mut seq, tok).unwrap();
-        tok = argmax(&o.logits);
-    }
-    out
 }

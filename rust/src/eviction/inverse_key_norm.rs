@@ -4,7 +4,9 @@
 //! scans all live tokens and hole-punches one, fragmenting pages (paper
 //! Fig. 6) — a block is freed only after all of its tokens die.
 
-use super::{bottom_k_ascending, Decision, EvictionPolicy, PrefillScores, CH_KEY_L2};
+use std::cell::RefCell;
+
+use super::{bottom_k_ascending, Decision, EvictionPolicy, LiveTok, PrefillScores, CH_KEY_L2};
 use crate::kvcache::SeqCache;
 
 #[derive(Debug, Clone, Default)]
@@ -32,8 +34,21 @@ impl EvictionPolicy for InverseKeyNorm {
     }
 }
 
+thread_local! {
+    /// Reusable live-token scan buffer for the unstructured policies:
+    /// steady-state decode refills it in place instead of allocating a
+    /// fresh list every step. Thread-local (rather than a per-policy
+    /// `Mutex`) so the parallel episode simulator — which shares one
+    /// `Sync` policy instance across threads — scans without contention
+    /// while each thread keeps the zero-allocation property.
+    static SCAN_SCRATCH: RefCell<Vec<LiveTok>> = RefCell::new(Vec::new());
+}
+
 /// Shared decode-path logic for unstructured baselines: kill the globally
 /// worst live tokens (excluding the just-appended one) until within budget.
+/// O(n) selection over a thread-local scratch buffer; the only allocation
+/// left on this path is the (usually one-element) kill list inside the
+/// returned [`Decision`].
 pub(crate) fn unstructured_evict_worst(
     cache: &SeqCache,
     budget: usize,
@@ -45,23 +60,30 @@ pub(crate) fn unstructured_evict_worst(
         return Decision::Keep;
     }
     let newest_pos = cache.next_position().saturating_sub(1);
-    let mut tokens = cache.live_token_list();
-    tokens.retain(|&(_, _, pos, _)| pos != newest_pos);
-    let mut over = live - budget;
-    over = over.min(tokens.len());
-    if over == 0 {
-        return Decision::Keep;
-    }
-    tokens.sort_by(|a, b| {
-        let (sa, sb) = (a.3[channel], b.3[channel]);
-        let ord = sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal);
-        if higher_is_worse {
-            ord.reverse()
-        } else {
-            ord
+    SCAN_SCRATCH.with(|scratch| {
+        let mut tokens = scratch.borrow_mut();
+        cache.collect_live_tokens(&mut tokens);
+        tokens.retain(|&(_, _, pos, _)| pos != newest_pos);
+        let over = (live - budget).min(tokens.len());
+        if over == 0 {
+            return Decision::Keep;
         }
-    });
-    Decision::KillTokens(tokens[..over].iter().map(|&(bi, off, _, _)| (bi, off)).collect())
+        // Worst-first total order: channel score (reversed when higher is
+        // worse), ties broken by (block, offset) so the kill set is fully
+        // deterministic and NaN scores cannot poison the partition.
+        let cmp = |a: &LiveTok, b: &LiveTok| {
+            let (sa, sb) = (a.3[channel], b.3[channel]);
+            let ord = if higher_is_worse { sb.total_cmp(&sa) } else { sa.total_cmp(&sb) };
+            ord.then_with(|| (a.0, a.1).cmp(&(b.0, b.1)))
+        };
+        if over < tokens.len() {
+            tokens.select_nth_unstable_by(over - 1, cmp);
+        }
+        // worst-first within the selected prefix, matching the order the
+        // former full sort emitted (callers apply kills in list order)
+        tokens[..over].sort_unstable_by(cmp);
+        Decision::KillTokens(tokens[..over].iter().map(|&(bi, off, _, _)| (bi, off)).collect())
+    })
 }
 
 #[cfg(test)]
@@ -78,13 +100,13 @@ mod tests {
             ],
             len: 5,
         };
-        let p = InverseKeyNorm;
+        let p = InverseKeyNorm::default();
         assert_eq!(p.prefill_keep(&s, 2), vec![1, 3]);
     }
 
     #[test]
     fn decode_kills_global_max_norm() {
-        let p = InverseKeyNorm;
+        let p = InverseKeyNorm::default();
         let bs = 4;
         let mut c = SeqCache::new(bs, 4);
         // 8 prefill tokens with norms 1..8 (token 7 = norm 8 worst)
@@ -101,7 +123,7 @@ mod tests {
 
     #[test]
     fn newest_token_never_selfevicted() {
-        let p = InverseKeyNorm;
+        let p = InverseKeyNorm::default();
         let mut c = SeqCache::new(4, 4);
         let toks: Vec<(u32, [f32; 3])> = (0..4).map(|i| (i, [0.0, 1.0, 0.0])).collect();
         c.load_prefill(&toks, 4);
@@ -119,7 +141,7 @@ mod tests {
     #[test]
     fn fragmentation_emerges() {
         // Random norms spread kills across blocks -> partial pages linger.
-        let p = InverseKeyNorm;
+        let p = InverseKeyNorm::default();
         let bs = 4;
         let budget = 12;
         let mut c = SeqCache::new(bs, 8);

@@ -47,13 +47,13 @@ mod tests {
             ],
             len: 4,
         };
-        let p = KeyDiff;
+        let p = KeyDiff::default();
         assert_eq!(p.prefill_keep(&s, 2), vec![1, 3]);
     }
 
     #[test]
     fn decode_kills_most_redundant() {
-        let p = KeyDiff;
+        let p = KeyDiff::default();
         let mut c = SeqCache::new(4, 4);
         let cos = [0.1f32, 0.95, 0.3, 0.2];
         let toks: Vec<(u32, [f32; 3])> =
@@ -69,7 +69,7 @@ mod tests {
 
     #[test]
     fn under_budget_keeps() {
-        let p = KeyDiff;
+        let p = KeyDiff::default();
         let mut c = SeqCache::new(4, 2);
         c.load_prefill(&[(0, [0.0; 3])], 1);
         assert_eq!(p.post_append(&c, 4), Decision::Keep);

@@ -91,7 +91,10 @@ pub enum Decision {
     KillTokens(Vec<(usize, usize)>),
 }
 
-pub trait EvictionPolicy: Send {
+/// `Send + Sync` so one policy instance can drive parallel episode
+/// simulation; mutable scan scratch therefore lives in thread-local
+/// storage (see `inverse_key_norm::SCAN_SCRATCH`), not in the policy.
+pub trait EvictionPolicy: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Structured policies only touch whole pages during decode.
@@ -130,26 +133,49 @@ pub const ALL_POLICIES: [&str; 5] =
 // shared helpers for the policy impls
 // ---------------------------------------------------------------------------
 
-/// Indices of the `k` highest-scoring tokens, returned ASCENDING (stable on
-/// ties: earlier token wins).
-pub(crate) fn top_k_ascending(scores: &[f32], k: usize) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..scores.len()).collect();
-    // sort by score desc, index asc
-    idx.sort_by(|&a, &b| {
-        scores[b]
-            .partial_cmp(&scores[a])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
-    let mut keep: Vec<usize> = idx.into_iter().take(k).collect();
-    keep.sort_unstable();
-    keep
+/// One live-token view row: (logical block, offset, position, [3]scores).
+/// The scratch buffers the unstructured policies reuse across decode steps
+/// hold these.
+pub(crate) type LiveTok = (usize, usize, u32, [f32; 3]);
+
+/// Shared O(n) selection core: the `k` best of `n` indices under `better`
+/// (a TOTAL order over indices), returned ascending. Uses
+/// `select_nth_unstable_by` instead of a full sort.
+fn select_k_ascending<F>(n: usize, k: usize, mut better: F) -> Vec<usize>
+where
+    F: FnMut(&usize, &usize) -> std::cmp::Ordering,
+{
+    if k == 0 {
+        return Vec::new();
+    }
+    if k >= n {
+        return (0..n).collect();
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.select_nth_unstable_by(k - 1, &mut better);
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
 }
 
-/// Indices of the `k` LOWEST-scoring tokens, ascending.
+/// Indices of the `k` highest-scoring tokens, returned ASCENDING (on score
+/// ties the earlier token wins, exactly like the former full-sort
+/// implementation). `f32::total_cmp` keeps NaN from poisoning the
+/// partition.
+pub(crate) fn top_k_ascending(scores: &[f32], k: usize) -> Vec<usize> {
+    // total order: score desc, then index asc
+    select_k_ascending(scores.len(), k, |&a, &b| {
+        scores[b].total_cmp(&scores[a]).then(a.cmp(&b))
+    })
+}
+
+/// Indices of the `k` LOWEST-scoring tokens, ascending. Direct O(n)
+/// selection — no negated-copy allocation.
 pub(crate) fn bottom_k_ascending(scores: &[f32], k: usize) -> Vec<usize> {
-    let neg: Vec<f32> = scores.iter().map(|s| -s).collect();
-    top_k_ascending(&neg, k)
+    // total order: score asc, then index asc
+    select_k_ascending(scores.len(), k, |&a, &b| {
+        scores[a].total_cmp(&scores[b]).then(a.cmp(&b))
+    })
 }
 
 #[cfg(test)]
@@ -196,6 +222,36 @@ mod tests {
         assert_eq!(top_k_ascending(&s, 2), vec![0, 3]);
         assert_eq!(top_k_ascending(&s, 3), vec![0, 2, 3]);
         assert_eq!(bottom_k_ascending(&s, 2), vec![0, 1]);
+        assert_eq!(top_k_ascending(&s, 0), Vec::<usize>::new());
+        assert_eq!(top_k_ascending(&s, 9), vec![0, 1, 2, 3]);
+        assert_eq!(bottom_k_ascending(&s, 9), vec![0, 1, 2, 3]);
+    }
+
+    /// The O(n) selection must pick exactly the set the former full sort
+    /// picked (score ties broken by earlier index).
+    #[test]
+    fn property_selection_matches_full_sort_reference() {
+        fn reference_top_k(scores: &[f32], k: usize) -> Vec<usize> {
+            let mut idx: Vec<usize> = (0..scores.len()).collect();
+            idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+            let mut keep: Vec<usize> = idx.into_iter().take(k).collect();
+            keep.sort_unstable();
+            keep
+        }
+        propcheck::quick("topk-vs-sort", |rng: &mut Pcg32| {
+            let n = 1 + rng.usize_below(200);
+            let k = rng.usize_below(n + 4);
+            // coarse grid so score ties actually occur
+            let scores: Vec<f32> = (0..n).map(|_| (rng.below(8) as f32) / 4.0).collect();
+            if top_k_ascending(&scores, k) != reference_top_k(&scores, k) {
+                return Err(format!("top_k mismatch n={n} k={k}"));
+            }
+            let neg: Vec<f32> = scores.iter().map(|s| -s).collect();
+            if bottom_k_ascending(&scores, k) != reference_top_k(&neg, k) {
+                return Err(format!("bottom_k mismatch n={n} k={k}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -67,6 +67,10 @@ impl EvictionPolicy for PagedEviction {
         if n <= protected {
             return Decision::Keep;
         }
+        // Single O(blocks * B) scan over borrowed state: no heap allocation
+        // on the steady-state decode path (the returned Decision carries
+        // only a block index). total_cmp keeps a NaN block score from
+        // winning the eviction pick.
         let candidates = &cache.blocks()[..n - protected];
         let pick = candidates
             .iter()
@@ -75,7 +79,7 @@ impl EvictionPolicy for PagedEviction {
                 let s = b.mean_score(self.channel);
                 (i, if self.higher_is_important { s } else { -s })
             })
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
             .map(|(i, _)| i);
         match pick {
             Some(i) => Decision::EvictBlock(i),

@@ -96,6 +96,21 @@ impl Block {
         }
     }
 
+    /// Raw liveness bitmap (bit `off` set = token at `off` is live).
+    pub fn live_bits(&self) -> u64 {
+        self.live
+    }
+
+    /// Write this block's validity-mask slots into `out` (length must be
+    /// the block size): 1.0 for live offsets, 0.0 otherwise. Used by the
+    /// from-scratch mask rebuild the incremental buffers are checked
+    /// against.
+    pub fn write_mask_into(&self, out: &mut [f32]) {
+        for (off, slot) in out.iter_mut().enumerate() {
+            *slot = if self.is_live(off) { 1.0 } else { 0.0 };
+        }
+    }
+
     /// Iterator over live (offset, position, [3]scores).
     pub fn live_tokens(&self) -> impl Iterator<Item = (usize, u32, [f32; 3])> + '_ {
         (0..self.fill).filter(|&o| self.is_live(o)).map(move |o| {
@@ -182,6 +197,19 @@ mod tests {
             assert!(b.kill(o));
         }
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn write_mask_into_mirrors_liveness() {
+        let mut b = Block::new(0, 4);
+        b.push(0, [0.0; 3]);
+        b.push(1, [0.0; 3]);
+        b.push(2, [0.0; 3]);
+        b.kill(1);
+        let mut m = [9.0f32; 4];
+        b.write_mask_into(&mut m);
+        assert_eq!(m, [1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(b.live_bits(), 0b101);
     }
 
     #[test]

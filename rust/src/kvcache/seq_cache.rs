@@ -1,11 +1,24 @@
 //! Per-sequence cache state: block table + validity + scores.
 //!
 //! This is the host-side single source of truth for what the decode graph
-//! sees. Every mutation (append, block eviction, token kill) updates the
-//! metadata the runtime serializes into graph inputs:
-//!   * `block_table_i32()` — logical->physical, padded to the bucket size;
-//!   * `valid_mask_f32()`  — [NB * B] 1.0/0.0 in logical order;
-//!   * `next_write_slot()` — physical flat index for the incoming token.
+//! sees. The serialization the runtime feeds the graph — the `i32` block
+//! table and the `[NB * B]` validity mask — is maintained **incrementally**
+//! as persistent buffers updated in place by every mutation:
+//!
+//!   * `append` flips one mask float;
+//!   * `evict_block` shifts a suffix of both buffers (the paper's "table
+//!     shuffle only" decode-step overhead);
+//!   * `kill_token` clears one mask float;
+//!   * `grow` zero-extends both buffers.
+//!
+//! Steady-state decode therefore serializes graph inputs with **zero heap
+//! allocations**: [`SeqCache::block_table`] / [`SeqCache::valid_mask`] are
+//! borrow-based O(1) accessors, with dirty-region tracking
+//! ([`SeqCache::table_dirty`] / [`SeqCache::mask_dirty`]) so a
+//! device-resident-metadata backend can upload only what changed. The
+//! allocating `block_table_i32` / `valid_mask_f32` methods survive as thin
+//! compatibility wrappers, and `rebuild_*` keep the original from-scratch
+//! scan as the property-test/bench baseline.
 
 use super::block::{Block, BlockPool};
 use super::stats::CacheStats;
@@ -13,6 +26,49 @@ use super::stats::CacheStats;
 /// Number of importance channels carried per token
 /// (0 = V/K ratio, 1 = key L2 norm, 2 = KeyDiff cosine).
 pub const SCORE_CHANNELS: usize = 3;
+
+/// Half-open dirty interval `[lo, hi)` over a serialization buffer.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct DirtyRange {
+    lo: usize,
+    hi: usize,
+}
+
+impl DirtyRange {
+    fn full(len: usize) -> Self {
+        DirtyRange { lo: 0, hi: len }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.lo >= self.hi
+    }
+
+    fn as_range(&self) -> Option<std::ops::Range<usize>> {
+        if self.is_empty() {
+            None
+        } else {
+            Some(self.lo..self.hi)
+        }
+    }
+
+    fn mark(&mut self, lo: usize, hi: usize) {
+        if lo >= hi {
+            return;
+        }
+        if self.is_empty() {
+            self.lo = lo;
+            self.hi = hi;
+        } else {
+            self.lo = self.lo.min(lo);
+            self.hi = self.hi.max(hi);
+        }
+    }
+
+    fn clear(&mut self) {
+        self.lo = 0;
+        self.hi = 0;
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct SeqCache {
@@ -23,6 +79,18 @@ pub struct SeqCache {
     /// Highest sequence position written so far + 1 (monotonic; survives
     /// eviction — RoPE positions are original positions).
     next_position: u32,
+    /// Running count of fragmented (partially dead) pages, maintained
+    /// incrementally so `partial_blocks()` and the per-kill peak update
+    /// are O(1) instead of an O(blocks) rescan.
+    partial_count: usize,
+    /// Persistent logical->physical table, `len == capacity_blocks()`;
+    /// entries at logical indices >= `blocks.len()` are 0 padding.
+    table: Vec<i32>,
+    /// Persistent validity mask, `len == capacity_blocks() * block_size`,
+    /// logical layout; slots outside live blocks stay 0.0.
+    mask: Vec<f32>,
+    table_dirty: DirtyRange,
+    mask_dirty: DirtyRange,
     pub stats: CacheStats,
 }
 
@@ -34,6 +102,11 @@ impl SeqCache {
             pool: BlockPool::new(capacity_blocks),
             blocks: Vec::new(),
             next_position: 0,
+            partial_count: 0,
+            table: vec![0; capacity_blocks],
+            mask: vec![0.0; capacity_blocks * block_size],
+            table_dirty: DirtyRange::full(capacity_blocks),
+            mask_dirty: DirtyRange::full(capacity_blocks * block_size),
             stats: CacheStats::default(),
         }
     }
@@ -68,9 +141,10 @@ impl SeqCache {
         self.blocks.iter().map(|b| b.fill).sum()
     }
 
-    /// Allocated-but-fragmented pages (paper Limitation 1 metric).
+    /// Allocated-but-fragmented pages (paper Limitation 1 metric). O(1):
+    /// maintained incrementally by `kill_token`/`evict_block`.
     pub fn partial_blocks(&self) -> usize {
-        self.blocks.iter().filter(|b| b.is_partial()).count()
+        self.partial_count
     }
 
     /// live / allocated-slot tokens; 1.0 = perfectly packed.
@@ -99,6 +173,34 @@ impl SeqCache {
         self.last_block_full() && self.pool.free_count() == 0
     }
 
+    /// Append `phys` as the newest logical block and mirror it into the
+    /// persistent table. The mask region for the new logical index is
+    /// already all-zero (tail invariant maintained by `remove_block_at`),
+    /// so no mask write is needed.
+    fn push_new_block(&mut self, phys: usize) {
+        let li = self.blocks.len();
+        self.blocks.push(Block::new(phys, self.block_size));
+        self.table[li] = phys as i32;
+        self.table_dirty.mark(li, li + 1);
+        self.stats.peak_live_blocks = self.stats.peak_live_blocks.max(self.blocks.len() as u64);
+    }
+
+    /// Drop logical block `idx` and shift the suffix of both persistent
+    /// buffers down by one block — the only O(blocks) metadata move in the
+    /// structured-eviction path. Restores the all-zero tail invariant.
+    fn remove_block_at(&mut self, idx: usize) -> Block {
+        let n = self.blocks.len();
+        let blk = self.blocks.remove(idx);
+        let bs = self.block_size;
+        self.table.copy_within(idx + 1..n, idx);
+        self.table[n - 1] = 0;
+        self.table_dirty.mark(idx, n);
+        self.mask.copy_within((idx + 1) * bs..n * bs, idx * bs);
+        self.mask[(n - 1) * bs..n * bs].fill(0.0);
+        self.mask_dirty.mark(idx * bs, n * bs);
+        blk
+    }
+
     // -- append path --------------------------------------------------------
 
     /// Physical flat slot (block * B + offset) where the NEXT token will be
@@ -121,7 +223,7 @@ impl SeqCache {
         }
         match self.pool.alloc() {
             Some(phys) => {
-                self.blocks.push(Block::new(phys, self.block_size));
+                self.push_new_block(phys);
                 self.stats.blocks_allocated += 1;
                 self.stats.table_updates += 1;
                 true
@@ -131,10 +233,15 @@ impl SeqCache {
     }
 
     /// Record the token the decode step just wrote at `peek_write_slot`.
+    /// Serialization cost: one mask float flip.
     pub fn append(&mut self, scores: [f32; 3]) {
         assert!(!self.last_block_full(), "append without ensure_block()");
         let pos = self.next_position;
-        self.blocks.last_mut().unwrap().push(pos, scores);
+        let li = self.blocks.len() - 1;
+        let off = self.blocks.last_mut().unwrap().push(pos, scores);
+        let slot = li * self.block_size + off;
+        self.mask[slot] = 1.0;
+        self.mask_dirty.mark(slot, slot + 1);
         self.next_position += 1;
         self.stats.tokens_written += 1;
     }
@@ -147,11 +254,14 @@ impl SeqCache {
         for (pos, sc) in tokens {
             if self.last_block_full() {
                 let phys = self.pool.alloc().expect("prefill exceeds pool");
-                self.blocks.push(Block::new(phys, self.block_size));
+                self.push_new_block(phys);
                 self.stats.blocks_allocated += 1;
             }
-            self.blocks.last_mut().unwrap().push(*pos, *sc);
+            let li = self.blocks.len() - 1;
+            let off = self.blocks.last_mut().unwrap().push(*pos, *sc);
+            self.mask[li * self.block_size + off] = 1.0;
         }
+        self.mask_dirty.mark(0, self.blocks.len() * self.block_size);
         self.stats.tokens_written += tokens.len() as u64;
         self.stats.table_updates += 1;
         self.next_position = total_prompt_len;
@@ -162,33 +272,54 @@ impl SeqCache {
     /// Structured eviction: drop logical block `idx` entirely. O(blocks)
     /// table shift, zero device-data movement. Frees the physical slot.
     pub fn evict_block(&mut self, idx: usize) {
-        let blk = self.blocks.remove(idx);
+        let blk = self.remove_block_at(idx);
+        if blk.is_partial() {
+            self.partial_count -= 1;
+        }
         self.stats.tokens_evicted += blk.live_count() as u64;
         self.stats.blocks_evicted += 1;
         self.stats.table_updates += 1;
         self.pool.release(blk.phys);
     }
 
-    /// Unstructured eviction: kill one token at (logical block, offset).
-    /// Frees the block only once every token in it is dead.
+    /// Unstructured eviction: kill one token at (logical block, offset) —
+    /// one mask float flip. Frees the block only once every token in it is
+    /// dead.
     pub fn kill_token(&mut self, block_idx: usize, off: usize) {
+        let was_partial = self.blocks[block_idx].is_partial();
         let killed = self.blocks[block_idx].kill(off);
         assert!(killed, "killing dead token ({block_idx},{off})");
+        if !was_partial {
+            // a successful kill always leaves live < fill
+            self.partial_count += 1;
+        }
+        let slot = block_idx * self.block_size + off;
+        self.mask[slot] = 0.0;
+        self.mask_dirty.mark(slot, slot + 1);
         self.stats.tokens_evicted += 1;
         self.stats.mask_updates += 1;
         if self.blocks[block_idx].is_empty() {
             // Whole page finally drained — only now can it be reused.
-            let blk = self.blocks.remove(block_idx);
+            self.partial_count -= 1;
+            let blk = self.remove_block_at(block_idx);
             self.pool.release(blk.phys);
             self.stats.blocks_evicted += 1;
             self.stats.table_updates += 1;
         }
+        self.stats.peak_partial_blocks =
+            self.stats.peak_partial_blocks.max(self.partial_count as u64);
     }
 
     /// Bucket growth: runtime migrated the device buffer to a bigger
-    /// capacity.
+    /// capacity. Zero-extends the persistent serialization buffers.
     pub fn grow(&mut self, new_capacity_blocks: usize) {
+        let old_cap = self.pool.capacity();
         self.pool.grow(new_capacity_blocks);
+        self.table.resize(new_capacity_blocks, 0);
+        self.mask.resize(new_capacity_blocks * self.block_size, 0.0);
+        self.table_dirty.mark(old_cap, new_capacity_blocks);
+        self.mask_dirty
+            .mark(old_cap * self.block_size, new_capacity_blocks * self.block_size);
         self.stats.bucket_grows += 1;
     }
 
@@ -196,35 +327,129 @@ impl SeqCache {
 
     /// Logical->physical table, padded with 0 to `nb` entries (padding is
     /// masked out via the validity mask so its value is irrelevant).
+    /// Borrow of the incrementally maintained buffer — O(1), no allocation.
+    /// `nb` must not exceed `capacity_blocks()` (use the `_i32` wrapper for
+    /// oversized pads).
+    pub fn block_table(&self, nb: usize) -> &[i32] {
+        assert!(self.blocks.len() <= nb, "table exceeds bucket");
+        assert!(
+            nb <= self.table.len(),
+            "bucket {nb} beyond capacity {}",
+            self.table.len()
+        );
+        &self.table[..nb]
+    }
+
+    /// Validity mask in logical order, flattened [nb * B]. Borrow of the
+    /// incrementally maintained buffer — O(1), no allocation. `nb` must not
+    /// exceed `capacity_blocks()`.
+    pub fn valid_mask(&self, nb: usize) -> &[f32] {
+        assert!(self.blocks.len() <= nb, "mask exceeds bucket");
+        assert!(
+            nb <= self.pool.capacity(),
+            "bucket {nb} beyond capacity {}",
+            self.pool.capacity()
+        );
+        &self.mask[..nb * self.block_size]
+    }
+
+    /// Run `f` over the validity mask (padded to `nb` blocks) with `slot`
+    /// temporarily forced to 1.0 — the decode graph's view including the
+    /// incoming token, which `append` commits for real after the step
+    /// executes. The committed value is restored before returning, so the
+    /// incremental buffers never drift; `f` borrows the persistent buffer
+    /// directly and no copy is made.
+    pub fn with_incoming_mask<R>(
+        &mut self,
+        nb: usize,
+        slot: usize,
+        f: impl FnOnce(&[f32]) -> R,
+    ) -> R {
+        let prev = self.mask[slot];
+        self.mask[slot] = 1.0;
+        let r = f(&self.mask[..nb * self.block_size]);
+        self.mask[slot] = prev;
+        r
+    }
+
+    /// Dirty region of the block table (entry indices) since the last
+    /// [`SeqCache::clear_dirty`]; `None` when nothing changed.
+    pub fn table_dirty(&self) -> Option<std::ops::Range<usize>> {
+        self.table_dirty.as_range()
+    }
+
+    /// Dirty region of the validity mask (flat slot indices) since the last
+    /// [`SeqCache::clear_dirty`]; `None` when nothing changed.
+    pub fn mask_dirty(&self) -> Option<std::ops::Range<usize>> {
+        self.mask_dirty.as_range()
+    }
+
+    /// Mark both serialization buffers as consumed (e.g. after uploading
+    /// them as graph inputs).
+    pub fn clear_dirty(&mut self) {
+        self.table_dirty.clear();
+        self.mask_dirty.clear();
+    }
+
+    /// Compatibility wrapper: owned copy of [`SeqCache::block_table`],
+    /// additionally allowing `nb > capacity_blocks()` pads.
     pub fn block_table_i32(&self, nb: usize) -> Vec<i32> {
+        if nb <= self.table.len() {
+            return self.block_table(nb).to_vec();
+        }
+        let mut t = self.table.clone();
+        t.resize(nb, 0);
+        t
+    }
+
+    /// Compatibility wrapper: owned copy of [`SeqCache::valid_mask`],
+    /// additionally allowing `nb > capacity_blocks()` pads.
+    pub fn valid_mask_f32(&self, nb: usize) -> Vec<f32> {
+        if nb <= self.pool.capacity() {
+            return self.valid_mask(nb).to_vec();
+        }
+        let mut m = self.mask.clone();
+        m.resize(nb * self.block_size, 0.0);
+        m
+    }
+
+    /// From-scratch O(NB) table rebuild — the pre-incremental code path,
+    /// kept as the property-test oracle and the micro-bench baseline.
+    pub fn rebuild_block_table(&self, nb: usize) -> Vec<i32> {
         assert!(self.blocks.len() <= nb, "table exceeds bucket");
         let mut t: Vec<i32> = self.blocks.iter().map(|b| b.phys as i32).collect();
         t.resize(nb, 0);
         t
     }
 
-    /// Validity mask in logical order, flattened [nb * B].
-    pub fn valid_mask_f32(&self, nb: usize) -> Vec<f32> {
+    /// From-scratch O(NB * B) mask rebuild — the pre-incremental code path,
+    /// kept as the property-test oracle and the micro-bench baseline.
+    pub fn rebuild_valid_mask(&self, nb: usize) -> Vec<f32> {
+        assert!(self.blocks.len() <= nb, "mask exceeds bucket");
         let mut m = vec![0.0f32; nb * self.block_size];
         for (bi, blk) in self.blocks.iter().enumerate() {
-            for off in 0..blk.fill {
-                if blk.is_live(off) {
-                    m[bi * self.block_size + off] = 1.0;
-                }
-            }
+            blk.write_mask_into(&mut m[bi * self.block_size..(bi + 1) * self.block_size]);
         }
         m
     }
 
-    /// (logical block idx, offset, position, scores) of every live token,
-    /// oldest-first — the view token-level policies scan.
-    pub fn live_token_list(&self) -> Vec<(usize, usize, u32, [f32; 3])> {
-        let mut out = Vec::with_capacity(self.live_tokens());
+    /// Fill `out` with (logical block idx, offset, position, scores) of
+    /// every live token, oldest-first — the view token-level policies scan.
+    /// Clears and reuses `out` so steady-state callers allocate nothing.
+    pub fn collect_live_tokens(&self, out: &mut Vec<(usize, usize, u32, [f32; 3])>) {
+        out.clear();
         for (bi, blk) in self.blocks.iter().enumerate() {
             for (off, pos, sc) in blk.live_tokens() {
                 out.push((bi, off, pos, sc));
             }
         }
+    }
+
+    /// Owned live-token list (allocating convenience over
+    /// [`SeqCache::collect_live_tokens`]).
+    pub fn live_token_list(&self) -> Vec<(usize, usize, u32, [f32; 3])> {
+        let mut out = Vec::with_capacity(self.live_tokens());
+        self.collect_live_tokens(&mut out);
         out
     }
 
@@ -257,6 +482,33 @@ impl SeqCache {
                 self.blocks.len()
             ));
         }
+        // incremental fragmentation counter matches a rescan
+        let scanned_partial = self.blocks.iter().filter(|b| b.is_partial()).count();
+        if self.partial_count != scanned_partial {
+            return Err(format!(
+                "partial counter {} != scanned {scanned_partial}",
+                self.partial_count
+            ));
+        }
+        // incremental serialization buffers are sized to capacity and
+        // bit-identical to a from-scratch rebuild
+        let cap = self.pool.capacity();
+        if self.table.len() != cap {
+            return Err(format!("table len {} != capacity {cap}", self.table.len()));
+        }
+        if self.mask.len() != cap * self.block_size {
+            return Err(format!(
+                "mask len {} != capacity * B = {}",
+                self.mask.len(),
+                cap * self.block_size
+            ));
+        }
+        if self.table != self.rebuild_block_table(cap) {
+            return Err("incremental block table drifted from rebuild".into());
+        }
+        if self.mask != self.rebuild_valid_mask(cap) {
+            return Err("incremental valid mask drifted from rebuild".into());
+        }
         Ok(())
     }
 }
@@ -278,9 +530,11 @@ mod tests {
         assert_eq!(c.n_blocks(), 3);
         assert_eq!(c.live_tokens(), 10);
         assert_eq!(c.block_table_i32(8), vec![0, 1, 2, 0, 0, 0, 0, 0]);
+        assert_eq!(c.block_table(8), &[0, 1, 2, 0, 0, 0, 0, 0]);
         let m = c.valid_mask_f32(8);
         assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 10);
         assert_eq!(&m[..10], &[1.0; 10]);
+        assert_eq!(c.valid_mask(8), m.as_slice());
         // next write goes to block 2 offset 2 -> phys 2*4+2
         assert_eq!(c.peek_write_slot(), Some(10));
         c.check_invariants().unwrap();
@@ -341,6 +595,7 @@ mod tests {
         c.kill_token(0, 1);
         assert_eq!(c.n_blocks(), 1, "drained block is freed");
         assert_eq!(c.stats.blocks_evicted, 1);
+        assert!(c.stats.peak_partial_blocks >= 1);
         c.check_invariants().unwrap();
     }
 
@@ -352,6 +607,7 @@ mod tests {
         let m = c.valid_mask_f32(2);
         assert_eq!(m[6], 0.0);
         assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 7);
+        assert_eq!(c.valid_mask(2), m.as_slice());
     }
 
     #[test]
@@ -364,6 +620,70 @@ mod tests {
         assert!(c.ensure_block());
         c.append(sc(0.0));
         c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oversized_pad_still_supported_by_wrappers() {
+        // Pre-incremental callers could pad past the pool capacity; the
+        // compatibility wrappers keep that working.
+        let mut c = SeqCache::new(2, 2);
+        c.load_prefill(&(0..3).map(|i| (i, sc(0.0))).collect::<Vec<_>>(), 3);
+        assert_eq!(c.block_table_i32(5), vec![0, 1, 0, 0, 0]);
+        assert_eq!(c.valid_mask_f32(5).len(), 10);
+        assert_eq!(c.valid_mask_f32(5)[..3], [1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn with_incoming_mask_stages_and_restores() {
+        let mut c = SeqCache::new(4, 4);
+        c.load_prefill(&(0..5).map(|i| (i, sc(0.0))).collect::<Vec<_>>(), 5);
+        // next append lands at logical slot 5 (block 1, offset 1)
+        assert!(c.ensure_block());
+        let seen = c.with_incoming_mask(4, 5, |m| (m.len(), m[5], m[4]));
+        assert_eq!(seen, (16, 1.0, 1.0), "staged view shows the incoming slot live");
+        assert_eq!(c.valid_mask(4)[5], 0.0, "committed buffer restored");
+        c.check_invariants().unwrap();
+        // the staged view must not disturb a previously killed slot either
+        c.kill_token(0, 2);
+        let v = c.with_incoming_mask(4, 5, |m| m[2]);
+        assert_eq!(v, 0.0);
+        assert_eq!(c.valid_mask(4)[2], 0.0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dirty_ranges_track_mutations() {
+        let mut c = SeqCache::new(4, 8);
+        // fresh cache: everything dirty (first upload sends it all)
+        assert_eq!(c.table_dirty(), Some(0..8));
+        assert_eq!(c.mask_dirty(), Some(0..32));
+        c.load_prefill(&(0..10).map(|i| (i, sc(0.0))).collect::<Vec<_>>(), 10);
+        c.clear_dirty();
+        assert_eq!(c.table_dirty(), None);
+        assert_eq!(c.mask_dirty(), None);
+
+        // append into block 2 (offsets 2..) -> one mask slot dirty
+        assert!(c.ensure_block());
+        c.append(sc(0.0));
+        assert_eq!(c.table_dirty(), None, "no new block, table untouched");
+        assert_eq!(c.mask_dirty(), Some(10..11));
+        c.clear_dirty();
+
+        // kill token at block 0, off 1 -> slot 1 dirty
+        c.kill_token(0, 1);
+        assert_eq!(c.mask_dirty(), Some(1..2));
+        c.clear_dirty();
+
+        // evict block 1 of 3 -> table suffix 1..3 and mask 4..12 dirty
+        c.evict_block(1);
+        assert_eq!(c.table_dirty(), Some(1..3));
+        assert_eq!(c.mask_dirty(), Some(4..12));
+        c.clear_dirty();
+
+        // grow -> new tail regions dirty
+        c.grow(10);
+        assert_eq!(c.table_dirty(), Some(8..10));
+        assert_eq!(c.mask_dirty(), Some(32..40));
     }
 
     #[test]
@@ -405,8 +725,8 @@ mod tests {
                 c.check_invariants().map_err(|e| e)?;
                 // serialization shapes must always be consistent
                 let nb = c.capacity_blocks();
-                let t = c.block_table_i32(nb);
-                let m = c.valid_mask_f32(nb);
+                let t = c.block_table(nb);
+                let m = c.valid_mask(nb);
                 if t.len() != nb || m.len() != nb * bs {
                     return Err("bad serialization lengths".into());
                 }

@@ -18,6 +18,13 @@ pub struct CacheStats {
     pub mask_updates: u64,
     /// Bucket migrations (device buffer reallocation + copy).
     pub bucket_grows: u64,
+    /// High-water mark of simultaneously allocated blocks — the sequence's
+    /// real physical footprint (Fig. 3's `blocks@mid` column).
+    pub peak_live_blocks: u64,
+    /// High-water mark of fragmented (partially dead) pages — the paper's
+    /// Limitation 1 quantity at its worst point, not just at retire time
+    /// (Fig. 3's `partial@mid` column).
+    pub peak_partial_blocks: u64,
 }
 
 impl CacheStats {
@@ -29,6 +36,8 @@ impl CacheStats {
         self.table_updates += o.table_updates;
         self.mask_updates += o.mask_updates;
         self.bucket_grows += o.bucket_grows;
+        self.peak_live_blocks = self.peak_live_blocks.max(o.peak_live_blocks);
+        self.peak_partial_blocks = self.peak_partial_blocks.max(o.peak_partial_blocks);
     }
 
     /// Cache-management operations per generated token — the paper's
@@ -54,5 +63,14 @@ mod tests {
         assert_eq!(a.table_updates, 1);
         assert_eq!(a.mask_updates, 4);
         assert!((a.updates_per_token() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_takes_peak_maxima() {
+        let mut a = CacheStats { peak_live_blocks: 3, peak_partial_blocks: 2, ..Default::default() };
+        let b = CacheStats { peak_live_blocks: 7, peak_partial_blocks: 1, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.peak_live_blocks, 7, "peaks merge as maxima, not sums");
+        assert_eq!(a.peak_partial_blocks, 2);
     }
 }

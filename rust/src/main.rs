@@ -11,17 +11,10 @@
 //!   paged-eviction generate --text "hello" --max-new-tokens 16
 //!   paged-eviction simulate --dataset hotpotqa --policy paged --budget 1024
 
-use std::sync::{Arc, Mutex};
-
 use anyhow::Result;
 
 use paged_eviction::eviction::make_policy;
-use paged_eviction::runtime::model_runner::argmax;
-use paged_eviction::runtime::{Engine, ModelRunner};
-use paged_eviction::scheduler::SchedConfig;
-use paged_eviction::server::serve::{serve_forever, spawn_engine};
 use paged_eviction::sim;
-use paged_eviction::tokenizer;
 use paged_eviction::util::args::ArgSpec;
 
 fn main() {
@@ -70,11 +63,43 @@ fn env_logger_init() {
     log::set_max_level(level.to_level_filter());
 }
 
+#[cfg(feature = "xla")]
 fn artifacts_flag(spec: ArgSpec) -> ArgSpec {
     spec.opt("artifacts", "artifacts", "artifact directory (make artifacts)")
 }
 
+/// The PJRT-backed subcommands need the `xla` feature (real bindings).
+#[cfg(not(feature = "xla"))]
 fn cmd_serve() -> Result<()> {
+    no_xla("serve")
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_generate() -> Result<()> {
+    no_xla("generate")
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_info() -> Result<()> {
+    no_xla("info")
+}
+
+#[cfg(not(feature = "xla"))]
+fn no_xla(cmd: &str) -> Result<()> {
+    anyhow::bail!(
+        "`{cmd}` needs the PJRT runtime: rebuild with `cargo build --features xla` \
+         (and link the real xla-rs bindings — see rust/vendor/README.md). \
+         The `simulate` subcommand works without it."
+    )
+}
+
+#[cfg(feature = "xla")]
+fn cmd_serve() -> Result<()> {
+    use std::sync::{Arc, Mutex};
+
+    use paged_eviction::scheduler::SchedConfig;
+    use paged_eviction::server::serve::{serve_forever, spawn_engine};
+
     let args = artifacts_flag(
         ArgSpec::new("paged-eviction serve", "JSON-lines TCP serving frontend")
             .opt("model", "sim-1b", "model name from the manifest")
@@ -115,7 +140,12 @@ fn cmd_serve() -> Result<()> {
     serve_forever(listener, handle, Arc::new(Mutex::new(0)))
 }
 
+#[cfg(feature = "xla")]
 fn cmd_generate() -> Result<()> {
+    use paged_eviction::runtime::model_runner::argmax;
+    use paged_eviction::runtime::{Engine, ModelRunner};
+    use paged_eviction::tokenizer;
+
     let args = artifacts_flag(
         ArgSpec::new("paged-eviction generate", "one-shot generation")
             .opt("model", "sim-1b", "model name")
@@ -159,7 +189,10 @@ fn cmd_generate() -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_info() -> Result<()> {
+    use paged_eviction::runtime::Engine;
+
     let args = artifacts_flag(ArgSpec::new("paged-eviction info", "artifact summary"))
         .parse_or_exit(2);
     let engine = Engine::new(args.get("artifacts"))?;

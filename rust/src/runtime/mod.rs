@@ -1,12 +1,20 @@
 //! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
 //! `manifest.json` + `*.weights.bin`) and executes them on the CPU PJRT
 //! client from the serving hot path. Python never runs here.
+//!
+//! The manifest and weights parsers are pure host code and always built;
+//! the PJRT execution engine and the model runner's execute paths need the
+//! XLA shared library and are gated behind the `xla` cargo feature
+//! (off by default so a plain toolchain builds and tests the crate).
 
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
 pub mod model_runner;
 pub mod weights;
 
+#[cfg(feature = "xla")]
 pub use engine::Engine;
 pub use manifest::{GraphInfo, GraphKind, Manifest, ModelInfo};
+#[cfg(feature = "xla")]
 pub use model_runner::{ModelRunner, Sequence, StepOutput};

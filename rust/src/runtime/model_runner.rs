@@ -4,287 +4,321 @@
 //! The device-side cache literals round-trip through each decode call (the
 //! graph scatters the new token and returns the updated cache); eviction
 //! never touches them — it only rewrites the block table and validity mask,
-//! which is the paper's central systems claim.
+//! which is the paper's central systems claim. Those two graph inputs are
+//! borrowed straight out of `SeqCache`'s incrementally maintained buffers
+//! (the incoming token's mask bit is staged in place for the literal build
+//! and restored), so steady-state decode performs no heap allocation and
+//! no buffer copy on the metadata path.
+//!
+//! Everything that executes through PJRT is gated behind the `xla` cargo
+//! feature; [`argmax`] is pure host code and always available.
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "xla")]
+mod pjrt {
+    use anyhow::{bail, Context, Result};
 
-use super::engine::{lit_f32, lit_i32, scalar_i32, Engine};
-use super::manifest::ModelInfo;
-use crate::eviction::{aggregate_decode_scores, Decision, EvictionPolicy, PrefillScores};
-use crate::kvcache::SeqCache;
+    use crate::eviction::{
+        aggregate_decode_scores, Decision, EvictionPolicy, PrefillScores,
+    };
+    use crate::kvcache::SeqCache;
+    use crate::runtime::engine::{lit_f32, lit_i32, scalar_i32, Engine};
+    use crate::runtime::manifest::ModelInfo;
 
-pub struct ModelRunner<'e> {
-    pub engine: &'e Engine,
-    pub model: ModelInfo,
-    pub page_size: usize,
-}
-
-/// One in-flight generation.
-pub struct Sequence {
-    pub cache: SeqCache,
-    k_lit: xla::Literal,
-    v_lit: xla::Literal,
-    pub budget: usize,
-    pub policy: Box<dyn EvictionPolicy>,
-    pub prompt_len: usize,
-    pub generated: Vec<u32>,
-    /// wall time spent inside PJRT execute for this sequence (perf metric)
-    pub exec_seconds: f64,
-}
-
-pub struct StepOutput {
-    pub logits: Vec<f32>,
-    pub scores: [f32; 3],
-}
-
-impl<'e> ModelRunner<'e> {
-    pub fn new(engine: &'e Engine, model: &str, page_size: usize) -> Result<Self> {
-        let info = engine.manifest.model(model)?.clone();
-        anyhow::ensure!(
-            engine.manifest.page_sizes(model).contains(&page_size),
-            "no decode artifacts for {model} @ page size {page_size}"
-        );
-        Ok(ModelRunner { engine, model: info, page_size })
+    pub struct ModelRunner<'e> {
+        pub engine: &'e Engine,
+        pub model: ModelInfo,
+        pub page_size: usize,
     }
 
-    /// Run the prompt, apply prefill token eviction, pack the retained
-    /// tokens into a fresh paged cache. Returns the sequence and the
-    /// last-position logits.
-    pub fn prefill(
-        &self,
-        prompt: &[u32],
-        budget: usize,
-        policy: Box<dyn EvictionPolicy>,
-    ) -> Result<(Sequence, Vec<f32>)> {
-        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
-        anyhow::ensure!(budget >= self.page_size, "budget below one page");
-        let len = prompt.len();
-        let g = self.engine.manifest.prefill_graph(&self.model.name, len)?;
-        let p = g.seq_bucket;
-        let mut toks = vec![0i32; p];
-        for (i, t) in prompt.iter().enumerate() {
-            toks[i] = *t as i32;
-        }
-        let t0 = std::time::Instant::now();
-        let outs = self
-            .engine
-            .run(g, &[lit_i32(&toks, &[p])?, scalar_i32(len as i32)])?;
-        let exec_s = t0.elapsed().as_secs_f64();
-        let [logits_l, k_l, v_l, sc_l]: [xla::Literal; 4] = outs
-            .try_into()
-            .map_err(|_| anyhow::anyhow!("prefill returned wrong tuple arity"))?;
-        let logits = logits_l.to_vec::<f32>()?;
-        let sc_flat = sc_l.to_vec::<f32>()?;
-        let scores = PrefillScores::from_graph_output(&sc_flat, self.model.n_layers, p, len);
-
-        // --- prefill-phase token eviction (paper Alg. 2) ---
-        let keep = policy.prefill_keep(&scores, budget);
-        anyhow::ensure!(!keep.is_empty(), "policy kept zero tokens");
-
-        // --- host-side pack into the paged layout ---
-        let bs = self.page_size;
-        let nb = self.initial_bucket_blocks(keep.len(), &policy)?;
-        let (k_lit, v_lit) = self.pack_cache(&k_l, &v_l, &keep, p, nb)?;
-        let mut cache = SeqCache::new(bs, nb);
-        let entries: Vec<(u32, [f32; 3])> = keep
-            .iter()
-            .map(|&i| {
-                (
-                    i as u32,
-                    [
-                        scores.channels[0][i],
-                        scores.channels[1][i],
-                        scores.channels[2][i],
-                    ],
-                )
-            })
-            .collect();
-        cache.load_prefill(&entries, len as u32);
-        let seq = Sequence {
-            cache,
-            k_lit,
-            v_lit,
-            budget,
-            policy,
-            prompt_len: len,
-            generated: Vec::new(),
-            exec_seconds: exec_s,
-        };
-        Ok((seq, logits))
+    /// One in-flight generation.
+    pub struct Sequence {
+        pub cache: SeqCache,
+        k_lit: xla::Literal,
+        v_lit: xla::Literal,
+        pub budget: usize,
+        pub policy: Box<dyn EvictionPolicy>,
+        pub prompt_len: usize,
+        pub generated: Vec<u32>,
+        /// wall time spent inside PJRT execute for this sequence (perf metric)
+        pub exec_seconds: f64,
     }
 
-    /// One decode step: feed `token`, get next-token logits. Applies the
-    /// eviction policy afterwards.
-    pub fn decode_step(&self, seq: &mut Sequence, token: u32) -> Result<StepOutput> {
-        let bs = self.page_size;
-        if !seq.cache.ensure_block() {
-            self.grow(seq)?;
-            anyhow::ensure!(seq.cache.ensure_block(), "grow did not free a block");
-        }
-        let write_slot = seq
-            .cache
-            .peek_write_slot()
-            .context("no write slot after ensure_block")?;
-        let nb = seq.cache.capacity_blocks();
-        let g = self
-            .engine
-            .manifest
-            .decode_graph(&self.model.name, bs, nb * bs)?;
-        debug_assert_eq!(g.n_blocks, nb, "bucket/capacity drift");
-
-        let table = seq.cache.block_table_i32(nb);
-        let mut mask = seq.cache.valid_mask_f32(nb);
-        // The incoming token occupies the next logical slot: mark it live.
-        let logical_slot = (seq.cache.n_blocks() - 1) * bs
-            + seq.cache.blocks().last().unwrap().fill;
-        mask[logical_slot] = 1.0;
-
-        let pos = seq.cache.next_position() as i32;
-        let inputs = [
-            scalar_i32(token as i32),
-            scalar_i32(pos),
-            std::mem::replace(&mut seq.k_lit, xla::Literal::from(0f32)),
-            std::mem::replace(&mut seq.v_lit, xla::Literal::from(0f32)),
-            lit_i32(&table, &[nb])?,
-            scalar_i32(write_slot as i32),
-            lit_f32(&mask, &[nb, bs])?,
-        ];
-        let t0 = std::time::Instant::now();
-        let outs = self.engine.run(g, &inputs)?;
-        seq.exec_seconds += t0.elapsed().as_secs_f64();
-        let [logits_l, k_l, v_l, sc_l]: [xla::Literal; 4] = outs
-            .try_into()
-            .map_err(|_| anyhow::anyhow!("decode returned wrong tuple arity"))?;
-        seq.k_lit = k_l;
-        seq.v_lit = v_l;
-        let logits = logits_l.to_vec::<f32>()?;
-        let sc = aggregate_decode_scores(&sc_l.to_vec::<f32>()?, self.model.n_layers);
-
-        seq.cache.append(sc);
-        seq.generated.push(token);
-        match seq.policy.post_append(&seq.cache, seq.budget) {
-            Decision::Keep => {}
-            Decision::EvictBlock(i) => seq.cache.evict_block(i),
-            Decision::KillTokens(ts) => {
-                for (bi, off) in ts {
-                    seq.cache.kill_token(bi, off);
-                }
-            }
-        }
-        Ok(StepOutput { logits, scores: sc })
+    pub struct StepOutput {
+        pub logits: Vec<f32>,
+        pub scores: [f32; 3],
     }
 
-    /// Initial decode bucket for a packed prompt: room for the retained
-    /// tokens plus the eviction-oscillation slack (budget + 2 pages for
-    /// bounded policies), or just prompt+1 page for FullCache which grows
-    /// on demand.
-    fn initial_bucket_blocks(
-        &self,
-        kept_tokens: usize,
-        policy: &Box<dyn EvictionPolicy>,
-    ) -> Result<usize> {
-        let bs = self.page_size;
-        let need_tokens = if policy.name() == "full" {
-            kept_tokens + bs
-        } else {
-            kept_tokens.max(/* budget slack */ 0) + 2 * bs
-        };
-        let g = self
-            .engine
-            .manifest
-            .decode_graph(&self.model.name, bs, need_tokens)?;
-        Ok(g.n_blocks)
-    }
-
-    /// Bucket migration: move the cache literals into the next larger
-    /// decode bucket (host roundtrip — rare; counted in CacheStats).
-    fn grow(&self, seq: &mut Sequence) -> Result<()> {
-        let bs = self.page_size;
-        let old_nb = seq.cache.capacity_blocks();
-        let max_tokens = self.engine.manifest.max_decode_tokens(&self.model.name, bs);
-        if (old_nb + 1) * bs > max_tokens {
-            bail!(
-                "cache exhausted: {} blocks @ page {bs} is the largest bucket \
-                 (policy {} never evicts enough)",
-                old_nb,
-                seq.policy.name()
+    impl<'e> ModelRunner<'e> {
+        pub fn new(engine: &'e Engine, model: &str, page_size: usize) -> Result<Self> {
+            let info = engine.manifest.model(model)?.clone();
+            anyhow::ensure!(
+                engine.manifest.page_sizes(model).contains(&page_size),
+                "no decode artifacts for {model} @ page size {page_size}"
             );
+            Ok(ModelRunner { engine, model: info, page_size })
         }
-        let g = self
-            .engine
-            .manifest
-            .decode_graph(&self.model.name, bs, (old_nb + 1) * bs)?;
-        let new_nb = g.n_blocks;
-        let l = self.model.n_layers;
-        let hkv = self.model.n_kv_heads;
-        let dh = self.model.d_head;
-        for lit in [&mut seq.k_lit, &mut seq.v_lit] {
-            let old = lit.to_vec::<f32>()?;
-            let mut new = vec![0f32; l * hkv * new_nb * bs * dh];
-            let chunk = bs * dh;
-            for li in 0..l {
-                for h in 0..hkv {
-                    for b in 0..old_nb {
-                        let src = ((li * hkv + h) * old_nb + b) * chunk;
-                        let dst = ((li * hkv + h) * new_nb + b) * chunk;
-                        new[dst..dst + chunk].copy_from_slice(&old[src..src + chunk]);
+
+        /// Run the prompt, apply prefill token eviction, pack the retained
+        /// tokens into a fresh paged cache. Returns the sequence and the
+        /// last-position logits.
+        pub fn prefill(
+            &self,
+            prompt: &[u32],
+            budget: usize,
+            policy: Box<dyn EvictionPolicy>,
+        ) -> Result<(Sequence, Vec<f32>)> {
+            anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+            anyhow::ensure!(budget >= self.page_size, "budget below one page");
+            let len = prompt.len();
+            let g = self.engine.manifest.prefill_graph(&self.model.name, len)?;
+            let p = g.seq_bucket;
+            let mut toks = vec![0i32; p];
+            for (i, t) in prompt.iter().enumerate() {
+                toks[i] = *t as i32;
+            }
+            let t0 = std::time::Instant::now();
+            let outs = self
+                .engine
+                .run(g, &[lit_i32(&toks, &[p])?, scalar_i32(len as i32)])?;
+            let exec_s = t0.elapsed().as_secs_f64();
+            let [logits_l, k_l, v_l, sc_l]: [xla::Literal; 4] = outs
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("prefill returned wrong tuple arity"))?;
+            let logits = logits_l.to_vec::<f32>()?;
+            let sc_flat = sc_l.to_vec::<f32>()?;
+            let scores =
+                PrefillScores::from_graph_output(&sc_flat, self.model.n_layers, p, len);
+
+            // --- prefill-phase token eviction (paper Alg. 2) ---
+            let keep = policy.prefill_keep(&scores, budget);
+            anyhow::ensure!(!keep.is_empty(), "policy kept zero tokens");
+
+            // --- host-side pack into the paged layout ---
+            let bs = self.page_size;
+            let nb = self.initial_bucket_blocks(keep.len(), &policy)?;
+            let (k_lit, v_lit) = self.pack_cache(&k_l, &v_l, &keep, p, nb)?;
+            let mut cache = SeqCache::new(bs, nb);
+            let entries: Vec<(u32, [f32; 3])> = keep
+                .iter()
+                .map(|&i| {
+                    (
+                        i as u32,
+                        [
+                            scores.channels[0][i],
+                            scores.channels[1][i],
+                            scores.channels[2][i],
+                        ],
+                    )
+                })
+                .collect();
+            cache.load_prefill(&entries, len as u32);
+            let seq = Sequence {
+                cache,
+                k_lit,
+                v_lit,
+                budget,
+                policy,
+                prompt_len: len,
+                generated: Vec::new(),
+                exec_seconds: exec_s,
+            };
+            Ok((seq, logits))
+        }
+
+        /// One decode step: feed `token`, get next-token logits. Applies the
+        /// eviction policy afterwards.
+        pub fn decode_step(&self, seq: &mut Sequence, token: u32) -> Result<StepOutput> {
+            let bs = self.page_size;
+            if !seq.cache.ensure_block() {
+                self.grow(seq)?;
+                anyhow::ensure!(seq.cache.ensure_block(), "grow did not free a block");
+            }
+            let write_slot = seq
+                .cache
+                .peek_write_slot()
+                .context("no write slot after ensure_block")?;
+            let nb = seq.cache.capacity_blocks();
+            let g = self
+                .engine
+                .manifest
+                .decode_graph(&self.model.name, bs, nb * bs)?;
+            debug_assert_eq!(g.n_blocks, nb, "bucket/capacity drift");
+
+            // Graph inputs come straight from the incrementally maintained
+            // buffers: the table is borrowed as-is; the mask is borrowed
+            // with the incoming token's slot staged live for just the
+            // literal build (`append` commits it for real after the step),
+            // so no host-side copy happens beyond the literal's own.
+            let table_lit = lit_i32(seq.cache.block_table(nb), &[nb])?;
+            let logical_slot = (seq.cache.n_blocks() - 1) * bs
+                + seq.cache.blocks().last().unwrap().fill;
+            let mask_lit = seq
+                .cache
+                .with_incoming_mask(nb, logical_slot, |m| lit_f32(m, &[nb, bs]))?;
+            // this backend uploads both buffers whole; a device-resident
+            // metadata backend would consume table_dirty()/mask_dirty() here
+            seq.cache.clear_dirty();
+
+            let pos = seq.cache.next_position() as i32;
+            let inputs = [
+                scalar_i32(token as i32),
+                scalar_i32(pos),
+                std::mem::replace(&mut seq.k_lit, xla::Literal::from(0f32)),
+                std::mem::replace(&mut seq.v_lit, xla::Literal::from(0f32)),
+                table_lit,
+                scalar_i32(write_slot as i32),
+                mask_lit,
+            ];
+            let t0 = std::time::Instant::now();
+            let outs = self.engine.run(g, &inputs)?;
+            seq.exec_seconds += t0.elapsed().as_secs_f64();
+            let [logits_l, k_l, v_l, sc_l]: [xla::Literal; 4] = outs
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("decode returned wrong tuple arity"))?;
+            seq.k_lit = k_l;
+            seq.v_lit = v_l;
+            let logits = logits_l.to_vec::<f32>()?;
+            let sc = aggregate_decode_scores(&sc_l.to_vec::<f32>()?, self.model.n_layers);
+
+            seq.cache.append(sc);
+            seq.generated.push(token);
+            match seq.policy.post_append(&seq.cache, seq.budget) {
+                Decision::Keep => {}
+                Decision::EvictBlock(i) => seq.cache.evict_block(i),
+                Decision::KillTokens(ts) => {
+                    for (bi, off) in ts {
+                        seq.cache.kill_token(bi, off);
                     }
                 }
             }
-            *lit = lit_f32(&new, &[l, hkv, new_nb, bs, dh])?;
+            Ok(StepOutput { logits, scores: sc })
         }
-        seq.cache.grow(new_nb);
-        log::debug!("bucket grow {} -> {} blocks", old_nb, new_nb);
-        Ok(())
-    }
 
-    /// Host-side pack (prefill -> paged layout): retained token j goes to
-    /// physical slot (j / B, j % B). k/v literals are [L, Hkv, P, dh].
-    fn pack_cache(
-        &self,
-        k_l: &xla::Literal,
-        v_l: &xla::Literal,
-        keep: &[usize],
-        p: usize,
-        nb: usize,
-    ) -> Result<(xla::Literal, xla::Literal)> {
-        let l = self.model.n_layers;
-        let hkv = self.model.n_kv_heads;
-        let dh = self.model.d_head;
-        let bs = self.page_size;
-        let kf = k_l.to_vec::<f32>()?;
-        let vf = v_l.to_vec::<f32>()?;
-        anyhow::ensure!(kf.len() == l * hkv * p * dh, "prefill K shape mismatch");
-        let mut kc = vec![0f32; l * hkv * nb * bs * dh];
-        let mut vc = vec![0f32; l * hkv * nb * bs * dh];
-        for li in 0..l {
-            for h in 0..hkv {
-                let src_base = (li * hkv + h) * p * dh;
-                let dst_base = (li * hkv + h) * nb * bs * dh;
-                for (j, &tok) in keep.iter().enumerate() {
-                    let src = src_base + tok * dh;
-                    let dst = dst_base + j * dh;
-                    kc[dst..dst + dh].copy_from_slice(&kf[src..src + dh]);
-                    vc[dst..dst + dh].copy_from_slice(&vf[src..src + dh]);
+        /// Initial decode bucket for a packed prompt: room for the retained
+        /// tokens plus the eviction-oscillation slack (budget + 2 pages for
+        /// bounded policies), or just prompt+1 page for FullCache which grows
+        /// on demand.
+        fn initial_bucket_blocks(
+            &self,
+            kept_tokens: usize,
+            policy: &Box<dyn EvictionPolicy>,
+        ) -> Result<usize> {
+            let bs = self.page_size;
+            let need_tokens = if policy.name() == "full" {
+                kept_tokens + bs
+            } else {
+                kept_tokens.max(/* budget slack */ 0) + 2 * bs
+            };
+            let g = self
+                .engine
+                .manifest
+                .decode_graph(&self.model.name, bs, need_tokens)?;
+            Ok(g.n_blocks)
+        }
+
+        /// Bucket migration: move the cache literals into the next larger
+        /// decode bucket (host roundtrip — rare; counted in CacheStats).
+        fn grow(&self, seq: &mut Sequence) -> Result<()> {
+            let bs = self.page_size;
+            let old_nb = seq.cache.capacity_blocks();
+            let max_tokens = self.engine.manifest.max_decode_tokens(&self.model.name, bs);
+            if (old_nb + 1) * bs > max_tokens {
+                bail!(
+                    "cache exhausted: {} blocks @ page {bs} is the largest bucket \
+                     (policy {} never evicts enough)",
+                    old_nb,
+                    seq.policy.name()
+                );
+            }
+            let g = self
+                .engine
+                .manifest
+                .decode_graph(&self.model.name, bs, (old_nb + 1) * bs)?;
+            let new_nb = g.n_blocks;
+            let l = self.model.n_layers;
+            let hkv = self.model.n_kv_heads;
+            let dh = self.model.d_head;
+            for lit in [&mut seq.k_lit, &mut seq.v_lit] {
+                let old = lit.to_vec::<f32>()?;
+                let mut new = vec![0f32; l * hkv * new_nb * bs * dh];
+                let chunk = bs * dh;
+                for li in 0..l {
+                    for h in 0..hkv {
+                        for b in 0..old_nb {
+                            let src = ((li * hkv + h) * old_nb + b) * chunk;
+                            let dst = ((li * hkv + h) * new_nb + b) * chunk;
+                            new[dst..dst + chunk].copy_from_slice(&old[src..src + chunk]);
+                        }
+                    }
+                }
+                *lit = lit_f32(&new, &[l, hkv, new_nb, bs, dh])?;
+            }
+            seq.cache.grow(new_nb);
+            log::debug!("bucket grow {} -> {} blocks", old_nb, new_nb);
+            Ok(())
+        }
+
+        /// Host-side pack (prefill -> paged layout): retained token j goes to
+        /// physical slot (j / B, j % B). k/v literals are [L, Hkv, P, dh].
+        fn pack_cache(
+            &self,
+            k_l: &xla::Literal,
+            v_l: &xla::Literal,
+            keep: &[usize],
+            p: usize,
+            nb: usize,
+        ) -> Result<(xla::Literal, xla::Literal)> {
+            let l = self.model.n_layers;
+            let hkv = self.model.n_kv_heads;
+            let dh = self.model.d_head;
+            let bs = self.page_size;
+            let kf = k_l.to_vec::<f32>()?;
+            let vf = v_l.to_vec::<f32>()?;
+            anyhow::ensure!(kf.len() == l * hkv * p * dh, "prefill K shape mismatch");
+            let mut kc = vec![0f32; l * hkv * nb * bs * dh];
+            let mut vc = vec![0f32; l * hkv * nb * bs * dh];
+            for li in 0..l {
+                for h in 0..hkv {
+                    let src_base = (li * hkv + h) * p * dh;
+                    let dst_base = (li * hkv + h) * nb * bs * dh;
+                    for (j, &tok) in keep.iter().enumerate() {
+                        let src = src_base + tok * dh;
+                        let dst = dst_base + j * dh;
+                        kc[dst..dst + dh].copy_from_slice(&kf[src..src + dh]);
+                        vc[dst..dst + dh].copy_from_slice(&vf[src..src + dh]);
+                    }
                 }
             }
+            Ok((
+                lit_f32(&kc, &[l, hkv, nb, bs, dh])?,
+                lit_f32(&vc, &[l, hkv, nb, bs, dh])?,
+            ))
         }
-        Ok((
-            lit_f32(&kc, &[l, hkv, nb, bs, dh])?,
-            lit_f32(&vc, &[l, hkv, nb, bs, dh])?,
-        ))
     }
 }
 
-/// Greedy decode helper.
+#[cfg(feature = "xla")]
+pub use pjrt::{ModelRunner, Sequence, StepOutput};
+
+/// Greedy decode helper: index of the largest logit. Single fold over
+/// `f32::total_cmp`; NaN logits are skipped outright so a poisoned logit
+/// can never silently win (the old `>`-based scan returned index 0
+/// whenever `logits[0]` was NaN). Ties keep the earliest index; an empty
+/// or all-NaN slice returns 0.
 pub fn argmax(logits: &[f32]) -> u32 {
-    let mut best = 0usize;
-    for i in 1..logits.len() {
-        if logits[i] > logits[best] {
-            best = i;
-        }
-    }
-    best as u32
+    logits
+        .iter()
+        .enumerate()
+        .fold(None::<(usize, f32)>, |best, (i, &v)| {
+            if v.is_nan() {
+                return best;
+            }
+            match best {
+                Some((_, bv)) if bv.total_cmp(&v) != std::cmp::Ordering::Less => best,
+                _ => Some((i, v)),
+            }
+        })
+        .map_or(0, |(i, _)| i as u32)
 }
 
 #[cfg(test)]
@@ -295,5 +329,22 @@ mod tests {
     fn argmax_picks_max() {
         assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.9]), 1);
         assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[-3.0, -1.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn argmax_ties_keep_earliest() {
+        assert_eq!(argmax(&[1.0, 7.0, 7.0, 7.0]), 1);
+        assert_eq!(argmax(&[0.0, -0.0]), 0);
+    }
+
+    #[test]
+    fn argmax_never_picks_nan() {
+        assert_eq!(argmax(&[f32::NAN, 1.0, 3.0]), 2, "NaN at index 0 must not win");
+        assert_eq!(argmax(&[2.0, f32::NAN, 1.0]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN, 0.5]), 2);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0, "all-NaN degrades to 0");
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NAN, f32::INFINITY]), 2);
     }
 }

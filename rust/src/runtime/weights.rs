@@ -115,6 +115,7 @@ mod tests {
         assert!(parse(&bytes).is_err());
     }
 
+    #[cfg_attr(not(feature = "xla"), ignore = "needs `make artifacts` (xla feature)")]
     #[test]
     fn loads_real_artifact() {
         let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))

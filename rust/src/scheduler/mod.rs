@@ -1,18 +1,25 @@
 //! Serving coordinator: request lifecycle + continuous batching.
 //!
 //! The scheduler owns the `ModelRunner` and interleaves many in-flight
-//! sequences vLLM-style: at most one prefill per scheduling round (prefill
-//! is the long pole), then one decode step for every running sequence.
-//! Eviction policy + cache budget are per-request, so a single server can
-//! serve mixed policies (that is how the comparison benches run).
+//! sequences vLLM-style: each round admits prefills until the concurrency
+//! or global-block budget is exhausted, then runs one decode step for
+//! every running sequence. Eviction policy + cache budget are per-request,
+//! so a single server can serve mixed policies (that is how the comparison
+//! benches run).
 //!
 //! On this testbed PJRT executes on a single CPU core, so "batching" is
 //! round-robin interleave rather than a batched kernel launch; admission,
 //! preemption and block accounting are the same logic a parallel backend
 //! would use (DESIGN.md §4, substitution table).
+//!
+//! The scheduler drives the PJRT runtime, so `sched` is gated behind the
+//! `xla` feature; the request/response types are always available (the
+//! wire protocol depends on them).
 
 pub mod request;
+#[cfg(feature = "xla")]
 pub mod sched;
 
 pub use request::{FinishReason, Request, RequestOutput, RequestState};
+#[cfg(feature = "xla")]
 pub use sched::{SchedConfig, Scheduler, StepReport};

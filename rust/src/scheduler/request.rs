@@ -1,5 +1,6 @@
 //! Request descriptors and lifecycle state.
 
+#[cfg(feature = "xla")]
 use std::time::Instant;
 
 #[derive(Debug, Clone)]
@@ -58,6 +59,7 @@ pub struct RequestOutput {
 }
 
 /// Book-keeping for an in-flight request.
+#[cfg(feature = "xla")]
 pub(crate) struct Inflight {
     pub req: Request,
     pub seq: crate::runtime::Sequence,

@@ -99,28 +99,32 @@ impl<'e> Scheduler<'e> {
         std::mem::take(&mut self.finished)
     }
 
-    /// One scheduling round: admit (at most one prefill), then one decode
-    /// step per running sequence, retiring finished ones.
+    /// One scheduling round: admit prefills until the concurrency and
+    /// global-block budgets are exhausted, then one decode step per running
+    /// sequence, retiring finished ones.
     pub fn step(&mut self) -> Result<StepReport> {
         if self.started.is_none() {
             self.started = Some(Instant::now());
         }
         let mut report = StepReport::default();
 
-        // --- admission: one prefill per round, gated on capacity ---
-        if self.running.len() < self.cfg.max_concurrency {
-            if let Some((req, enq)) = self.queue.pop_front() {
-                let needed_blocks = (req.budget + 2 * self.cfg.page_size)
-                    / self.cfg.page_size;
-                if self.live_blocks() + needed_blocks > self.cfg.max_live_blocks {
-                    // not enough global KV memory — requeue (head-of-line)
-                    self.queue.push_front((req, enq));
-                } else {
-                    match self.admit(req, enq) {
-                        Ok(()) => report.prefilled = 1,
-                        Err(e) => log::warn!("prefill failed: {e:#}"),
-                    }
-                }
+        // --- admission: fill every free concurrency slot, gated on
+        // capacity. Admitting only one prefill per round (the old
+        // behaviour) throttled cold starts head-of-line for no reason:
+        // with C free slots and a deep queue it took C rounds — C decode
+        // sweeps of every running sequence — to saturate the batch. ---
+        while self.running.len() < self.cfg.max_concurrency {
+            let Some((req, enq)) = self.queue.pop_front() else { break };
+            let needed_blocks =
+                (req.budget + 2 * self.cfg.page_size) / self.cfg.page_size;
+            if self.live_blocks() + needed_blocks > self.cfg.max_live_blocks {
+                // not enough global KV memory — requeue (head-of-line)
+                self.queue.push_front((req, enq));
+                break;
+            }
+            match self.admit(req, enq) {
+                Ok(()) => report.prefilled += 1,
+                Err(e) => log::warn!("prefill failed: {e:#}"),
             }
         }
 

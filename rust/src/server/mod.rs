@@ -5,8 +5,14 @@
 //! and exchange them with the loop over std mpsc channels — the same
 //! process split vLLM makes between its API server and the worker.
 
+//! The wire protocol is pure host code and always built; the engine loop
+//! and TCP frontend drive the PJRT scheduler and are gated behind the
+//! `xla` feature.
+
 pub mod protocol;
+#[cfg(feature = "xla")]
 pub mod serve;
 
 pub use protocol::{WireRequest, WireResponse};
+#[cfg(feature = "xla")]
 pub use serve::{serve_forever, EngineHandle};

@@ -277,13 +277,75 @@ pub fn simulate_episode(
     }
 }
 
-/// Average `n` episodes (different seeds).
+/// Run `n` episodes (seed `i` = `cfg.seed + i * 7919`, matching the
+/// historical serial derivation) and return their results in episode
+/// order. Episodes are seed-deterministic and fully independent, so they
+/// are fanned out across up to `threads` OS threads with
+/// `std::thread::scope`; every episode's RNG depends only on its own seed,
+/// so the returned vector is bit-identical for any thread count.
+pub fn simulate_episodes(
+    d: &DatasetProfile,
+    policy: &dyn EvictionPolicy,
+    cfg: &SimConfig,
+    n: usize,
+    threads: usize,
+) -> Vec<EpisodeResult> {
+    let run_one = |i: usize| {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed.wrapping_add(i as u64 * 7919);
+        simulate_episode(d, policy, &c)
+    };
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return (0..n).map(run_one).collect();
+    }
+    let chunk = (n + threads - 1) / threads;
+    let mut out: Vec<Option<EpisodeResult>> = vec![None; n];
+    std::thread::scope(|s| {
+        for (t, slots) in out.chunks_mut(chunk).enumerate() {
+            let run_one = &run_one;
+            s.spawn(move || {
+                for (j, slot) in slots.iter_mut().enumerate() {
+                    *slot = Some(run_one(t * chunk + j));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("episode worker died")).collect()
+}
+
+/// Average `n` episodes (different seeds) across all available cores.
+/// Bit-identical to the serial path: episodes are computed independently
+/// and accumulated in episode order on the calling thread.
 pub fn simulate_mean(
     d: &DatasetProfile,
     policy: &dyn EvictionPolicy,
     cfg: &SimConfig,
     n: usize,
 ) -> EpisodeResult {
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    simulate_mean_threads(d, policy, cfg, n, threads)
+}
+
+/// Serial reference for [`simulate_mean`] (used by the determinism tests).
+pub fn simulate_mean_serial(
+    d: &DatasetProfile,
+    policy: &dyn EvictionPolicy,
+    cfg: &SimConfig,
+    n: usize,
+) -> EpisodeResult {
+    simulate_mean_threads(d, policy, cfg, n, 1)
+}
+
+/// [`simulate_mean`] with an explicit thread count.
+pub fn simulate_mean_threads(
+    d: &DatasetProfile,
+    policy: &dyn EvictionPolicy,
+    cfg: &SimConfig,
+    n: usize,
+    threads: usize,
+) -> EpisodeResult {
+    let results = simulate_episodes(d, policy, cfg, n, threads);
     let mut acc = EpisodeResult {
         coverage: 0.0,
         needles_retained: 0.0,
@@ -292,10 +354,7 @@ pub fn simulate_mean(
         table_updates: 0,
         mask_updates: 0,
     };
-    for i in 0..n {
-        let mut c = cfg.clone();
-        c.seed = cfg.seed.wrapping_add(i as u64 * 7919);
-        let r = simulate_episode(d, policy, &c);
+    for r in &results {
         acc.coverage += r.coverage;
         acc.needles_retained += r.needles_retained;
         acc.score += r.score;
@@ -375,6 +434,42 @@ mod tests {
         // paged touches metadata once per page; unstructured once per token
         assert!(ikn.mask_updates > 4 * paged.table_updates);
         assert_eq!(paged.mask_updates, 0);
+    }
+
+    #[test]
+    fn parallel_mean_is_bit_identical_to_serial() {
+        let d = dataset("qasper").unwrap();
+        for pol in ["paged", "streaming", "inverse_key_norm"] {
+            let p = make_policy(pol).unwrap();
+            let cfg = SimConfig { budget: 512, ..Default::default() };
+            let a = simulate_mean_threads(d, p.as_ref(), &cfg, 6, 1);
+            let b = simulate_mean_threads(d, p.as_ref(), &cfg, 6, 4);
+            assert_eq!(a.score.to_bits(), b.score.to_bits(), "{pol}: score drifted");
+            assert_eq!(a.coverage.to_bits(), b.coverage.to_bits(), "{pol}");
+            assert_eq!(a.needles_retained.to_bits(), b.needles_retained.to_bits(), "{pol}");
+            assert_eq!(
+                (a.partial_blocks, a.table_updates, a.mask_updates),
+                (b.partial_blocks, b.table_updates, b.mask_updates),
+                "{pol}"
+            );
+            let c = simulate_mean_serial(d, p.as_ref(), &cfg, 6);
+            assert_eq!(a.score.to_bits(), c.score.to_bits(), "{pol}: serial alias");
+        }
+    }
+
+    #[test]
+    fn episode_order_is_thread_count_invariant() {
+        let d = dataset("multifieldqa").unwrap();
+        let p = make_policy("paged").unwrap();
+        let cfg = SimConfig { budget: 256, ..Default::default() };
+        let serial = simulate_episodes(d, p.as_ref(), &cfg, 5, 1);
+        for threads in [2usize, 3, 8] {
+            let par = simulate_episodes(d, p.as_ref(), &cfg, 5, threads);
+            assert_eq!(par.len(), serial.len());
+            for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
+                assert_eq!(a.score.to_bits(), b.score.to_bits(), "episode {i} @ {threads}t");
+            }
+        }
     }
 
     #[test]

@@ -67,11 +67,7 @@ impl EvictionPolicy for H2oOracle {
             .map(|&(bi, off, pos, _)| (bi, off, pos))
             .filter(|&(_, _, pos)| pos < recent_cut)
             .collect();
-        tokens.sort_by(|a, b| {
-            self.imp(a.2 as usize)
-                .partial_cmp(&self.imp(b.2 as usize))
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
+        tokens.sort_by(|a, b| self.imp(a.2 as usize).total_cmp(&self.imp(b.2 as usize)));
         for (bi, off, _) in tokens {
             if over == 0 {
                 break;

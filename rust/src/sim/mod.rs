@@ -25,6 +25,9 @@ pub mod datasets;
 pub mod h2o;
 pub mod rouge;
 
-pub use attention_sim::{simulate_episode, EpisodeResult, SimConfig};
+pub use attention_sim::{
+    simulate_episode, simulate_episodes, simulate_mean, simulate_mean_serial,
+    simulate_mean_threads, EpisodeResult, SimConfig,
+};
 pub use datasets::{DatasetProfile, ScoreKind, DATASETS};
 pub use h2o::H2oOracle;

@@ -1,0 +1,127 @@
+//! Proof that the steady-state decode metadata path performs **zero heap
+//! allocations**: a counting global allocator wraps the system allocator
+//! (this test binary only), and the block-table / validity-mask accessors
+//! plus the structured `post_append` scan are asserted to allocate nothing
+//! per decode step. The unstructured scan is allowed exactly the one
+//! unavoidable allocation: the kill list carried inside `Decision`.
+//!
+//! Kept in its own integration-test binary so the global allocator and the
+//! single-threaded measurement cannot interfere with other tests.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use paged_eviction::eviction::{make_policy, Decision};
+use paged_eviction::kvcache::SeqCache;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_decode_metadata_path_is_allocation_free() {
+    let bs = 16usize;
+    let cap = 64usize;
+    let budget = 256usize;
+    let mut cache = SeqCache::new(bs, cap);
+    let pre: Vec<(u32, [f32; 3])> =
+        (0..budget as u32).map(|i| (i, [0.5 + (i % 7) as f32 * 0.01; 3])).collect();
+    cache.load_prefill(&pre, budget as u32);
+
+    // --- structured (paged) path: strictly zero allocations ---
+    let paged = make_policy("paged").unwrap();
+    // warm up one full block cycle so every buffer reaches steady state
+    for _ in 0..(2 * bs) {
+        assert!(cache.ensure_block());
+        cache.append([0.4; 3]);
+        if let Decision::EvictBlock(i) = paged.post_append(&cache, budget) {
+            cache.evict_block(i);
+        }
+    }
+    let mut total_serialize = 0u64;
+    let mut total_scan = 0u64;
+    for step in 0..(4 * bs) {
+        assert!(cache.ensure_block(), "step {step}: pool exhausted");
+        cache.append([0.4 + (step % 5) as f32 * 0.01; 3]);
+
+        let nb = cache.capacity_blocks();
+        let before = allocs();
+        let table = cache.block_table(nb);
+        let mask = cache.valid_mask(nb);
+        let sum = table.iter().map(|&x| x as i64).sum::<i64>()
+            + mask.iter().map(|&x| x as i64).sum::<i64>();
+        let after_serialize = allocs();
+        let decision = paged.post_append(&cache, budget);
+        let after_scan = allocs();
+        std::hint::black_box(sum);
+
+        total_serialize += after_serialize - before;
+        total_scan += after_scan - after_serialize;
+        if let Decision::EvictBlock(i) = decision {
+            cache.evict_block(i);
+        }
+    }
+    assert_eq!(total_serialize, 0, "block_table/valid_mask must not allocate");
+    assert_eq!(total_scan, 0, "paged post_append scan must not allocate");
+
+    // --- unstructured (inverse_key_norm) path: the reusable scratch keeps
+    // the global scan allocation-free; only the kill list inside the
+    // returned Decision may allocate (one Vec per step) ---
+    let ikn = make_policy("inverse_key_norm").unwrap();
+    let mut cache = SeqCache::new(bs, cap);
+    let pre: Vec<(u32, [f32; 3])> =
+        (0..budget as u32).map(|i| (i, [0.0, ((i * 7919) % 97) as f32, 0.0])).collect();
+    cache.load_prefill(&pre, budget as u32);
+    for step in 0..8 {
+        // warm-up: grows the scratch buffer to its steady-state capacity
+        assert!(cache.ensure_block(), "warmup {step}");
+        cache.append([0.0, ((step * 31) % 13) as f32, 0.0]);
+        if let Decision::KillTokens(ts) = ikn.post_append(&cache, budget) {
+            for (bi, off) in ts {
+                cache.kill_token(bi, off);
+            }
+        }
+    }
+    let mut worst_step = 0u64;
+    for step in 0..(2 * bs) {
+        assert!(cache.ensure_block(), "step {step}");
+        cache.append([0.0, ((step * 31) % 13) as f32, 0.0]);
+        let before = allocs();
+        let decision = ikn.post_append(&cache, budget);
+        let spent = allocs() - before;
+        worst_step = worst_step.max(spent);
+        if let Decision::KillTokens(ts) = decision {
+            for (bi, off) in ts {
+                cache.kill_token(bi, off);
+            }
+        }
+    }
+    assert!(
+        worst_step <= 1,
+        "unstructured post_append must only allocate the Decision kill list, \
+         saw {worst_step} allocations in one step"
+    );
+}

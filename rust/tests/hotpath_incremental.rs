@@ -1,0 +1,190 @@
+//! Hot-path regression suite for the zero-allocation decode path:
+//!
+//!  * the incrementally maintained block-table / validity-mask buffers must
+//!    stay **bit-identical** to a from-scratch rebuild across arbitrary
+//!    append / evict_block / kill_token / grow sequences — both random op
+//!    soup and real policy-driven decode loops;
+//!  * the dirty-region tracking must cover every write (patching a stale
+//!    copy through the reported ranges reproduces the live buffers);
+//!  * the parallel episode simulator must be bit-identical to the serial
+//!    path (episodes are seed-deterministic and order-accumulated).
+
+use paged_eviction::eviction::{make_policy, Decision, ALL_POLICIES};
+use paged_eviction::kvcache::SeqCache;
+use paged_eviction::sim::attention_sim::{simulate_mean, simulate_mean_serial, SimConfig};
+use paged_eviction::sim::datasets::dataset;
+use paged_eviction::util::propcheck;
+use paged_eviction::util::rng::Pcg32;
+
+fn rsc(rng: &mut Pcg32) -> [f32; 3] {
+    [rng.f32(), rng.f32(), rng.f32()]
+}
+
+/// One random cache mutation, shared by the properties below.
+fn random_op(c: &mut SeqCache, rng: &mut Pcg32) {
+    match rng.below(10) {
+        0..=5 => {
+            if c.ensure_block() {
+                let sc = rsc(rng);
+                c.append(sc);
+            } else if c.capacity_blocks() < 64 {
+                c.grow(c.capacity_blocks() + 2);
+            }
+        }
+        6..=7 => {
+            if c.n_blocks() > 1 {
+                let idx = rng.usize_below(c.n_blocks() - 1);
+                c.evict_block(idx);
+            }
+        }
+        _ => {
+            let live = c.live_token_list();
+            if live.len() > 1 {
+                let (bi, off, _, _) = live[rng.usize_below(live.len())];
+                c.kill_token(bi, off);
+            }
+        }
+    }
+}
+
+#[test]
+fn incremental_buffers_match_rebuild_under_random_ops() {
+    propcheck::quick("incremental-vs-rebuild", |rng: &mut Pcg32| {
+        let bs = *rng.choose(&[2usize, 4, 8, 16]);
+        let cap = 4 + rng.usize_below(12);
+        let mut c = SeqCache::new(bs, cap);
+        let pre = rng.usize_below(cap * bs / 2) + 1;
+        let toks: Vec<(u32, [f32; 3])> =
+            (0..pre as u32).map(|i| (i, [0.1, 0.2, 0.3])).collect();
+        c.load_prefill(&toks, pre as u32);
+        for step in 0..200 {
+            random_op(&mut c, rng);
+            let nb = c.capacity_blocks();
+            if c.block_table(nb) != c.rebuild_block_table(nb).as_slice() {
+                return Err(format!("step {step}: block table drifted from rebuild"));
+            }
+            if c.valid_mask(nb) != c.rebuild_valid_mask(nb).as_slice() {
+                return Err(format!("step {step}: valid mask drifted from rebuild"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn incremental_buffers_survive_every_policy_decode_loop() {
+    propcheck::quick("policy-decode-incremental", |rng: &mut Pcg32| {
+        let bs = *rng.choose(&[4usize, 8, 16]);
+        let budget_blocks = 2 + rng.usize_below(4);
+        let budget = budget_blocks * bs;
+        for name in ALL_POLICIES {
+            if name == "full" {
+                continue; // unbounded; covered by the random-op property
+            }
+            let p = make_policy(name).unwrap();
+            let cap = budget_blocks + 3;
+            let mut c = SeqCache::new(bs, cap);
+            let pre: Vec<(u32, [f32; 3])> =
+                (0..budget as u32).map(|i| (i, rsc(rng))).collect();
+            c.load_prefill(&pre, budget as u32);
+            for step in 0..(3 * bs) {
+                if !c.ensure_block() {
+                    // unstructured fragmentation can exceed the nominal
+                    // block budget (paper Limitation 1) — grow the bucket
+                    c.grow(c.capacity_blocks() + 2);
+                    assert!(c.ensure_block());
+                }
+                let sc = rsc(rng);
+                c.append(sc);
+                match p.post_append(&c, budget) {
+                    Decision::Keep => {}
+                    Decision::EvictBlock(i) => c.evict_block(i),
+                    Decision::KillTokens(ts) => {
+                        for (bi, off) in ts {
+                            c.kill_token(bi, off);
+                        }
+                    }
+                }
+                let nb = c.capacity_blocks();
+                if c.block_table(nb) != c.rebuild_block_table(nb).as_slice() {
+                    return Err(format!("{name} step {step}: table drift"));
+                }
+                if c.valid_mask(nb) != c.rebuild_valid_mask(nb).as_slice() {
+                    return Err(format!("{name} step {step}: mask drift"));
+                }
+                c.check_invariants().map_err(|e| format!("{name} step {step}: {e}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dirty_regions_patch_a_stale_copy_exactly() {
+    propcheck::quick("dirty-region-patch", |rng: &mut Pcg32| {
+        let bs = *rng.choose(&[2usize, 4, 8]);
+        let cap = 4 + rng.usize_below(8);
+        let mut c = SeqCache::new(bs, cap);
+        let pre = rng.usize_below(cap * bs / 2) + 1;
+        let toks: Vec<(u32, [f32; 3])> =
+            (0..pre as u32).map(|i| (i, [0.5, 0.5, 0.5])).collect();
+        c.load_prefill(&toks, pre as u32);
+        let mut nb = c.capacity_blocks();
+        let mut shadow_t = c.block_table(nb).to_vec();
+        let mut shadow_m = c.valid_mask(nb).to_vec();
+        c.clear_dirty();
+        for step in 0..120 {
+            random_op(&mut c, rng);
+            nb = c.capacity_blocks();
+            // poison any grown region; the dirty range must cover it
+            shadow_t.resize(nb, -1);
+            shadow_m.resize(nb * bs, -1.0);
+            if let Some(r) = c.table_dirty() {
+                shadow_t[r.clone()].copy_from_slice(&c.block_table(nb)[r]);
+            }
+            if let Some(r) = c.mask_dirty() {
+                shadow_m[r.clone()].copy_from_slice(&c.valid_mask(nb)[r]);
+            }
+            c.clear_dirty();
+            if shadow_t != c.block_table(nb) {
+                return Err(format!("step {step}: table dirty range missed a write"));
+            }
+            if shadow_m != c.valid_mask(nb) {
+                return Err(format!("step {step}: mask dirty range missed a write"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_simulate_mean_is_bit_identical_to_serial() {
+    for (ds, pol) in [
+        ("govreport", "paged"),
+        ("hotpotqa", "streaming"),
+        ("qasper", "keydiff"),
+        ("multifieldqa", "inverse_key_norm"),
+    ] {
+        let d = dataset(ds).unwrap();
+        let p = make_policy(pol).unwrap();
+        let cfg = SimConfig { budget: 512, ..Default::default() };
+        let serial = simulate_mean_serial(d, p.as_ref(), &cfg, 8);
+        let parallel = simulate_mean(d, p.as_ref(), &cfg, 8);
+        assert_eq!(
+            serial.score.to_bits(),
+            parallel.score.to_bits(),
+            "{ds}/{pol}: parallel score differs from serial"
+        );
+        assert_eq!(serial.coverage.to_bits(), parallel.coverage.to_bits(), "{ds}/{pol}");
+        assert_eq!(
+            serial.needles_retained.to_bits(),
+            parallel.needles_retained.to_bits(),
+            "{ds}/{pol}"
+        );
+        assert_eq!(
+            (serial.partial_blocks, serial.table_updates, serial.mask_updates),
+            (parallel.partial_blocks, parallel.table_updates, parallel.mask_updates),
+            "{ds}/{pol}"
+        );
+    }
+}

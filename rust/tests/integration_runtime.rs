@@ -1,8 +1,9 @@
 //! End-to-end runtime integration: PJRT loads the AOT artifacts and the
 //! full prefill -> pack -> decode pipeline reproduces consistent numerics.
 //!
-//! Requires `make artifacts` (the test fails with a clear message if the
-//! artifacts are missing).
+//! Requires the `xla` feature (real PJRT bindings) and `make artifacts`
+//! (the test fails with a clear message if the artifacts are missing).
+#![cfg(feature = "xla")]
 
 use paged_eviction::eviction::make_policy;
 use paged_eviction::runtime::model_runner::argmax;

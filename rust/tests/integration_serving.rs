@@ -1,5 +1,8 @@
 //! Serving-stack integration: scheduler (continuous batching), engine loop
 //! thread, and the TCP JSON-lines frontend.
+//!
+//! Requires the `xla` feature (real PJRT bindings) and `make artifacts`.
+#![cfg(feature = "xla")]
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};

@@ -1,0 +1,243 @@
+//! Offline shim for the subset of the `anyhow` crate this workspace uses
+//! (the vendor set has no crates.io access — see `rust/vendor/README.md`).
+//!
+//! Provides [`Error`] with a context chain, [`Result`], the
+//! [`anyhow!`]/[`bail!`]/[`ensure!`] macros and the [`Context`] extension
+//! trait for `Result` and `Option`. Formatting matches real `anyhow` where
+//! it matters to this repo: `{}` prints the outermost message, `{:#}`
+//! prints the whole chain separated by `": "`, and `{:?}` prints the
+//! message plus a "Caused by:" list.
+
+use std::fmt::{self, Debug, Display};
+
+/// Error with an optional chain of causes (outermost context first).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message (no cause).
+    pub fn msg<M: Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    fn wrap<C: Display>(self, ctx: C) -> Error {
+        Error { msg: ctx.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The outermost message.
+    pub fn to_msg(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// Identity wrapper matching `anyhow::Error::new`-ish call sites.
+    pub fn context<C: Display>(self, ctx: C) -> Error {
+        self.wrap(ctx)
+    }
+}
+
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        let mut i = 0usize;
+        while let Some(e) = cur {
+            write!(f, "\n    {i}: {}", e.msg)?;
+            cur = e.source.as_deref();
+            i += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts into `Error`, preserving its source chain as
+/// context layers. (Error itself deliberately does NOT implement
+/// `std::error::Error`, exactly like real anyhow, so this blanket impl
+/// cannot overlap the reflexive `From<Error> for Error`.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, source: err.map(Box::new) });
+        }
+        err.expect("at least one message")
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string or any displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file gone")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("loading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: file gone");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing 7");
+        assert_eq!(Some(3).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn context_on_anyhow_result_adds_layer() {
+        let r: Result<()> = Err(anyhow!("inner {}", 1));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 1");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(fail: bool) -> Result<u32> {
+            ensure!(!fail, "failed with code {}", 2);
+            Ok(1)
+        }
+        fn g() -> Result<u32> {
+            bail!("nope");
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{:#}", f(true).unwrap_err()), "failed with code 2");
+        assert_eq!(format!("{}", g().unwrap_err()), "nope");
+        let key = "k";
+        assert_eq!(format!("{}", anyhow!("missing {key:?}")), "missing \"k\"");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! API stub for the `xla` (xla-rs 0.1.6) PJRT bindings.
+//!
+//! The real bindings need the XLA C library, which is not present in the
+//! offline build environment. This stub mirrors exactly the API surface
+//! `paged_eviction`'s `runtime` module uses so the PJRT code keeps
+//! type-checking under `--features xla`; every entry point fails with
+//! [`Error::StubRuntime`] at runtime. Deployments with the real library
+//! swap this path dependency for actual xla-rs (same signatures).
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// Raised by every stub entry point.
+    StubRuntime(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::StubRuntime(what) => write!(
+                f,
+                "xla stub: {what} unavailable (built against the in-tree API stub; \
+                 link the real xla-rs bindings to execute PJRT graphs)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub<T>(what: &'static str) -> Result<T> {
+    Err(Error::StubRuntime(what))
+}
+
+/// Element types a [`Literal`] can carry.
+pub trait ArrayElement: Copy + 'static {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+impl ArrayElement for i32 {}
+impl ArrayElement for i64 {}
+impl ArrayElement for u32 {}
+
+/// Host-side literal (stub: never holds device-ready data).
+#[derive(Debug, Clone, Default)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T: ArrayElement>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal(()))
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        stub("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        stub("Literal::to_tuple")
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(_v: f32) -> Literal {
+        Literal(())
+    }
+}
+
+impl From<i32> for Literal {
+    fn from(_v: i32) -> Literal {
+        Literal(())
+    }
+}
+
+impl From<i64> for Literal {
+    fn from(_v: i64) -> Literal {
+        Literal(())
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub("HloModuleProto::from_text_file")
+    }
+}
+
+/// Computation wrapper accepted by `PjRtClient::compile`.
+#[derive(Debug, Clone)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+/// Device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        stub("PjRtClient::buffer_from_host_buffer")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        stub("PjRtClient::buffer_from_host_literal")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_stub() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        let msg = format!("{}", PjRtClient::cpu().unwrap_err());
+        assert!(msg.contains("xla stub"), "{msg}");
+    }
+}
