@@ -63,6 +63,26 @@ def lower_decode(cfg: configs.ModelConfig, nb: int, page: int,
                              *_weight_specs(cfg))
 
 
+def lower_decode_batch(cfg: configs.ModelConfig, nb: int, page: int,
+                       batch: int, use_pallas: bool = True):
+    """Batched decode: vmap the single-sequence decode over a leading batch
+    axis on every runtime input (token, pos, caches, table, write slot,
+    validity mask), broadcasting the weights. One dispatch steps `batch`
+    independent sequences — the serving scheduler's whole running set."""
+    fn = functools.partial(model.decode_fn, cfg, use_pallas=use_pallas)
+    n_w = len(cfg.weight_shapes())
+    bfn = jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, 0, 0) + (None,) * n_w)
+    i32v = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    cache = jax.ShapeDtypeStruct(
+        (batch, cfg.n_layers, cfg.n_kv_heads, nb, page, cfg.d_head),
+        jnp.float32,
+    )
+    tbl = jax.ShapeDtypeStruct((batch, nb), jnp.int32)
+    vmask = jax.ShapeDtypeStruct((batch, nb, page), jnp.float32)
+    return jax.jit(bfn).lower(i32v, i32v, cache, cache, tbl, i32v, vmask,
+                              *_weight_specs(cfg))
+
+
 def graph_signature(spec: configs.GraphSpec, cfg: configs.ModelConfig):
     """Runtime-facing input/output signature (before the *weights tail)."""
     dh, l, hkv = cfg.d_head, cfg.n_layers, cfg.n_kv_heads
@@ -81,6 +101,26 @@ def graph_signature(spec: configs.GraphSpec, cfg: configs.ModelConfig):
             ],
         }
     nb, b = spec.n_blocks, spec.page_size
+    if spec.kind == "decode_batch":
+        s = spec.batch
+        cache = [s, l, hkv, nb, b, dh]
+        return {
+            "inputs": [
+                {"name": "tokens", "dtype": "i32", "shape": [s]},
+                {"name": "pos", "dtype": "i32", "shape": [s]},
+                {"name": "k_cache", "dtype": "f32", "shape": cache},
+                {"name": "v_cache", "dtype": "f32", "shape": cache},
+                {"name": "block_table", "dtype": "i32", "shape": [s, nb]},
+                {"name": "write_slot", "dtype": "i32", "shape": [s]},
+                {"name": "valid_mask", "dtype": "f32", "shape": [s, nb, b]},
+            ],
+            "outputs": [
+                {"name": "logits", "dtype": "f32", "shape": [s, cfg.vocab_size]},
+                {"name": "k_cache", "dtype": "f32", "shape": cache},
+                {"name": "v_cache", "dtype": "f32", "shape": cache},
+                {"name": "scores", "dtype": "f32", "shape": [s, 3, l]},
+            ],
+        }
     cache = [l, hkv, nb, b, dh]
     return {
         "inputs": [
@@ -142,6 +182,9 @@ def build(out_dir: str, models=None, use_pallas: bool = True,
         cfg = configs.MODELS[spec.model]
         if spec.kind == "prefill":
             lowered = lower_prefill(cfg, spec.seq_bucket, use_pallas)
+        elif spec.kind == "decode_batch":
+            lowered = lower_decode_batch(cfg, spec.n_blocks, spec.page_size,
+                                         spec.batch, use_pallas)
         else:
             lowered = lower_decode(cfg, spec.n_blocks, spec.page_size,
                                    use_pallas)
@@ -154,9 +197,11 @@ def build(out_dir: str, models=None, use_pallas: bool = True,
             "model": spec.model, "path": fname,
             "seq_bucket": spec.seq_bucket,
         }
-        if spec.kind == "decode":
+        if spec.kind in ("decode", "decode_batch"):
             entry["page_size"] = spec.page_size
             entry["n_blocks"] = spec.n_blocks
+        if spec.kind == "decode_batch":
+            entry["batch"] = spec.batch
         entry.update(graph_signature(spec, cfg))
         manifest["graphs"].append(entry)
         if verbose:

@@ -101,19 +101,24 @@ DEFAULT_PAGE_SIZE = 16
 ABLATION_PAGE_SIZES = [8, 32]
 # Decode buckets lowered for the ablation page sizes (keep the matrix small).
 ABLATION_DECODE_BUCKETS = [256, 512, 1024]
+# Batched decode (one padded dispatch for the whole running set): lanes per
+# dispatch and the context buckets lowered at the default page size.
+DECODE_BATCH_LANES = 8
+DECODE_BATCH_BUCKETS = [256, 512]
 
 
 @dataclass(frozen=True)
 class GraphSpec:
     """One AOT-lowered graph: (kind, model, static shape params)."""
-    kind: str           # "prefill" | "decode"
+    kind: str           # "prefill" | "decode" | "decode_batch"
     model: str
     seq_bucket: int     # prefill: P; decode: context-token bucket
     page_size: int = DEFAULT_PAGE_SIZE  # decode only
+    batch: int = 0      # decode_batch only: lanes per dispatch
 
     @property
     def n_blocks(self) -> int:
-        assert self.kind == "decode"
+        assert self.kind in ("decode", "decode_batch")
         assert self.seq_bucket % self.page_size == 0
         return self.seq_bucket // self.page_size
 
@@ -121,6 +126,9 @@ class GraphSpec:
     def artifact_name(self) -> str:
         if self.kind == "prefill":
             return f"prefill_{self.model}_p{self.seq_bucket}"
+        if self.kind == "decode_batch":
+            return (f"decodeb{self.batch}_{self.model}"
+                    f"_c{self.seq_bucket}_b{self.page_size}")
         return f"decode_{self.model}_c{self.seq_bucket}_b{self.page_size}"
 
 
@@ -134,4 +142,7 @@ def artifact_matrix(models=None) -> List[GraphSpec]:
         for ps in ABLATION_PAGE_SIZES:
             for c in ABLATION_DECODE_BUCKETS:
                 specs.append(GraphSpec("decode", m, c, ps))
+        for c in DECODE_BATCH_BUCKETS:
+            specs.append(GraphSpec("decode_batch", m, c, DEFAULT_PAGE_SIZE,
+                                   batch=DECODE_BATCH_LANES))
     return specs

@@ -37,6 +37,13 @@ class TestLowering:
         )
         assert text.startswith("HloModule")
 
+    def test_decode_batch_hlo_text(self):
+        lowered = aot.lower_decode_batch(configs.SIM_1B, 4, 16, batch=2)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        # same runtime ABI as single decode, batch-stacked
+        assert _entry_param_count(text) == 7 + len(configs.SIM_1B.weight_names())
+
 
 class TestArtifactMatrix:
     def test_matrix_covers_paper_settings(self):
@@ -50,10 +57,14 @@ class TestArtifactMatrix:
             # fig-4 ablation page sizes
             for ps in configs.ABLATION_PAGE_SIZES:
                 assert f"decode_{m}_c512_b{ps}" in names
+            # batched decode lanes for the serving scheduler
+            for c in configs.DECODE_BATCH_BUCKETS:
+                lanes = configs.DECODE_BATCH_LANES
+                assert f"decodeb{lanes}_{m}_c{c}_b16" in names
 
     def test_block_math(self):
         for s in configs.artifact_matrix():
-            if s.kind == "decode":
+            if s.kind in ("decode", "decode_batch"):
                 assert s.n_blocks * s.page_size == s.seq_bucket
 
     def test_signatures_match_configs(self):
@@ -63,6 +74,10 @@ class TestArtifactMatrix:
             if spec.kind == "decode":
                 cache = sig["inputs"][2]["shape"]
                 assert cache == [cfg.n_layers, cfg.n_kv_heads,
+                                 spec.n_blocks, spec.page_size, cfg.d_head]
+            if spec.kind == "decode_batch":
+                cache = sig["inputs"][2]["shape"]
+                assert cache == [spec.batch, cfg.n_layers, cfg.n_kv_heads,
                                  spec.n_blocks, spec.page_size, cfg.d_head]
 
 

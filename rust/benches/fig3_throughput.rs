@@ -24,6 +24,8 @@ struct Cell {
     tok_s: f64,
     tpot_ms: f64,
     updates_per_token: f64,
+    /// Sequences preempted (shared arena ran dry mid-decode).
+    preemptions: u64,
     /// High-water fragmented pages across the cell's sequences
     /// (`CacheStats::peak_partial_blocks`).
     partial_blocks_max: usize,
@@ -41,6 +43,7 @@ fn run_cell(
     prompt_len: usize,
     gen: usize,
     concurrency: usize,
+    arena_blocks: usize,
 ) -> anyhow::Result<Cell> {
     let mut sched = Scheduler::new(
         engine,
@@ -48,7 +51,7 @@ fn run_cell(
             model: model.into(),
             page_size: 16,
             max_concurrency: concurrency,
-            max_live_blocks: 100_000,
+            max_live_blocks: arena_blocks,
         },
     )?;
     let mut rng = Pcg32::with_stream(99, budget as u64);
@@ -77,6 +80,7 @@ fn run_cell(
         tok_s: sched.throughput_tok_s(),
         tpot_ms: if tpot.is_empty() { 0.0 } else { tpot.pctl(50.0) },
         updates_per_token: updates as f64 / written.max(1) as f64,
+        preemptions: sched.preemptions,
         partial_blocks_max: partial_max,
         peak_blocks_max: peak_blocks,
     })
@@ -91,7 +95,9 @@ fn main() {
             .opt("requests", "2", "requests per cell")
             .opt("prompt-len", "384", "prompt tokens")
             .opt("gen", "256", "output tokens per request")
-            .opt("concurrency", "2", "concurrent sequences"),
+            .opt("concurrency", "2", "concurrent sequences")
+            .opt("arena-blocks", "100000", "shared arena capacity in blocks \
+                 (shrink to exercise preemption under memory pressure)"),
     );
     let engine = Engine::new(artifacts_dir()).expect("make artifacts first");
     let models = args.get_list("models");
@@ -101,6 +107,7 @@ fn main() {
     let plen = args.get_usize("prompt-len");
     let gen = args.get_usize("gen");
     let conc = args.get_usize("concurrency");
+    let arena_blocks = args.get_usize("arena-blocks");
 
     println!(
         "setup: {n_req} reqs x (in {plen} + out {gen}), {conc} concurrent, page 16 \
@@ -116,7 +123,7 @@ fn main() {
         for (policy, budget, wgen) in
             [("full", 100_000usize, gen), ("paged", budgets[0], 2 * 16)]
         {
-            let _ = run_cell(&engine, model, policy, budget, 1, plen, wgen, 1)
+            let _ = run_cell(&engine, model, policy, budget, 1, plen, wgen, 1, 100_000)
                 .expect("warmup failed");
         }
         section(&format!("Fig 3 ({model}): throughput (tok/s) vs budget"));
@@ -126,6 +133,7 @@ fn main() {
         header.push("upd/tok".into());
         header.push("partial@mid".into());
         header.push("blocks@mid".into());
+        header.push("preempt".into());
         let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
         let mut full_mid = 0.0;
         let mut paged_mid = 0.0;
@@ -138,10 +146,14 @@ fn main() {
                 // best of 2 runs: this vCPU testbed has double-digit-percent
                 // steal-time jitter; max-throughput-of-N is the standard
                 // noisy-testbed protocol
-                let a = run_cell(&engine, model, policy, budget, n_req, plen, gen, conc)
-                    .expect("cell failed");
-                let b = run_cell(&engine, model, policy, budget, n_req, plen, gen, conc)
-                    .expect("cell failed");
+                let a = run_cell(
+                    &engine, model, policy, budget, n_req, plen, gen, conc, arena_blocks,
+                )
+                .expect("cell failed");
+                let b = run_cell(
+                    &engine, model, policy, budget, n_req, plen, gen, conc, arena_blocks,
+                )
+                .expect("cell failed");
                 let cell = if a.tok_s >= b.tok_s { a } else { b };
                 row.push(format!("{:.0}", cell.tok_s));
                 if bi == budgets.len() / 2 {
@@ -160,6 +172,7 @@ fn main() {
             row.push(format!("{:.3}", mid.updates_per_token));
             row.push(format!("{}", mid.partial_blocks_max));
             row.push(format!("{}", mid.peak_blocks_max));
+            row.push(format!("{}", mid.preemptions));
             t.row(row);
         }
         print!("{}", t.render());

@@ -6,7 +6,9 @@
 
 use std::cell::RefCell;
 
-use super::{bottom_k_ascending, Decision, EvictionPolicy, LiveTok, PrefillScores, CH_KEY_L2};
+use super::{
+    bottom_k_ascending, Decision, EvictionPolicy, KillList, LiveTok, PrefillScores, CH_KEY_L2,
+};
 use crate::kvcache::SeqCache;
 
 #[derive(Debug, Clone, Default)]
@@ -46,9 +48,9 @@ thread_local! {
 
 /// Shared decode-path logic for unstructured baselines: kill the globally
 /// worst live tokens (excluding the just-appended one) until within budget.
-/// O(n) selection over a thread-local scratch buffer; the only allocation
-/// left on this path is the (usually one-element) kill list inside the
-/// returned [`Decision`].
+/// O(n) selection over a thread-local scratch buffer; the kill list rides
+/// inline in the returned [`Decision`] (`KillList` small-vec), so the
+/// steady-state path performs zero heap allocations end to end.
 pub(crate) fn unstructured_evict_worst(
     cache: &SeqCache,
     budget: usize,
@@ -82,7 +84,11 @@ pub(crate) fn unstructured_evict_worst(
         // worst-first within the selected prefix, matching the order the
         // former full sort emitted (callers apply kills in list order)
         tokens[..over].sort_unstable_by(cmp);
-        Decision::KillTokens(tokens[..over].iter().map(|&(bi, off, _, _)| (bi, off)).collect())
+        let mut kills = KillList::new();
+        for &(bi, off, _, _) in &tokens[..over] {
+            kills.push(bi, off);
+        }
+        Decision::KillTokens(kills)
     })
 }
 
@@ -132,7 +138,7 @@ mod tests {
         match p.post_append(&c, 4) {
             Decision::KillTokens(ts) => {
                 assert_eq!(ts.len(), 1);
-                assert_ne!(ts[0], (1, 0), "must not kill the newest token");
+                assert_ne!(ts.get(0), (1, 0), "must not kill the newest token");
             }
             d => panic!("{d:?}"),
         }

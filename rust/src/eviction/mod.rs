@@ -80,6 +80,129 @@ pub fn aggregate_decode_scores(flat: &[f32], n_layers: usize) -> [f32; 3] {
     out
 }
 
+/// Kill list carried by [`Decision::KillTokens`]: (logical block, offset)
+/// pairs in kill order. Inline small-vec — steady-state unstructured
+/// eviction kills exactly `live - budget` tokens per step (normally one),
+/// so the common case fits inline and the whole decode decision path is
+/// allocation-free end to end; rare bursts spill to the heap.
+const KILL_INLINE: usize = 8;
+
+#[derive(Debug, Clone)]
+pub struct KillList {
+    inline: [(u32, u32); KILL_INLINE],
+    spill: Vec<(u32, u32)>,
+    len: usize,
+}
+
+impl KillList {
+    pub const INLINE: usize = KILL_INLINE;
+
+    pub fn new() -> KillList {
+        KillList { inline: [(0, 0); KILL_INLINE], spill: Vec::new(), len: 0 }
+    }
+
+    pub fn push(&mut self, block_idx: usize, off: usize) {
+        let entry = (block_idx as u32, off as u32);
+        if self.len < Self::INLINE {
+            self.inline[self.len] = entry;
+        } else {
+            self.spill.push(entry);
+        }
+        self.len += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn get(&self, i: usize) -> (usize, usize) {
+        assert!(i < self.len, "kill index {i} out of range {}", self.len);
+        let (b, o) = if i < Self::INLINE {
+            self.inline[i]
+        } else {
+            self.spill[i - Self::INLINE]
+        };
+        (b as usize, o as usize)
+    }
+
+    pub fn iter(&self) -> KillListIter<'_> {
+        KillListIter { list: self, i: 0 }
+    }
+}
+
+pub struct KillListIter<'a> {
+    list: &'a KillList,
+    i: usize,
+}
+
+impl<'a> Iterator for KillListIter<'a> {
+    type Item = (usize, usize);
+    fn next(&mut self) -> Option<(usize, usize)> {
+        if self.i >= self.list.len() {
+            return None;
+        }
+        let item = self.list.get(self.i);
+        self.i += 1;
+        Some(item)
+    }
+}
+
+impl Default for KillList {
+    fn default() -> KillList {
+        KillList::new()
+    }
+}
+
+impl PartialEq for KillList {
+    fn eq(&self, other: &KillList) -> bool {
+        self.len == other.len && self.iter().eq(other.iter())
+    }
+}
+
+/// Equality against plain vectors keeps the historical test assertions.
+impl PartialEq<Vec<(usize, usize)>> for KillList {
+    fn eq(&self, other: &Vec<(usize, usize)>) -> bool {
+        self.len == other.len() && self.iter().eq(other.iter().copied())
+    }
+}
+
+pub struct KillListIntoIter {
+    list: KillList,
+    i: usize,
+}
+
+impl Iterator for KillListIntoIter {
+    type Item = (usize, usize);
+    fn next(&mut self) -> Option<(usize, usize)> {
+        if self.i >= self.list.len() {
+            return None;
+        }
+        let item = self.list.get(self.i);
+        self.i += 1;
+        Some(item)
+    }
+}
+
+impl IntoIterator for KillList {
+    type Item = (usize, usize);
+    type IntoIter = KillListIntoIter;
+    fn into_iter(self) -> KillListIntoIter {
+        KillListIntoIter { list: self, i: 0 }
+    }
+}
+
+impl<'a> IntoIterator for &'a KillList {
+    type Item = (usize, usize);
+    type IntoIter = KillListIter<'a>;
+    fn into_iter(self) -> KillListIter<'a> {
+        self.iter()
+    }
+}
+
 /// What a policy wants done after a decode-step append.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Decision {
@@ -88,7 +211,7 @@ pub enum Decision {
     /// Structured: drop this logical block entirely (table shuffle only).
     EvictBlock(usize),
     /// Unstructured: hole-punch these (logical block, offset) tokens.
-    KillTokens(Vec<(usize, usize)>),
+    KillTokens(KillList),
 }
 
 /// `Send + Sync` so one policy instance can drive parallel episode
@@ -252,6 +375,28 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn kill_list_inline_and_spill() {
+        let mut k = KillList::new();
+        assert!(k.is_empty());
+        for i in 0..(KillList::INLINE + 4) {
+            k.push(i, i + 1);
+        }
+        assert_eq!(k.len(), KillList::INLINE + 4);
+        for i in 0..k.len() {
+            assert_eq!(k.get(i), (i, i + 1), "index {i} spans inline/spill");
+        }
+        let v: Vec<(usize, usize)> = (0..k.len()).map(|i| (i, i + 1)).collect();
+        assert_eq!(k, v);
+        let collected: Vec<(usize, usize)> = k.clone().into_iter().collect();
+        assert_eq!(collected, v);
+        let by_ref: Vec<(usize, usize)> = (&k).into_iter().collect();
+        assert_eq!(by_ref, v);
+        let mut other = KillList::new();
+        other.push(0, 1);
+        assert_ne!(k, other);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! freed once empty — cheap to decide, but it touches the cache metadata
 //! every single step (the overhead the paper contrasts with PagedEviction).
 
-use super::{Decision, EvictionPolicy, PrefillScores};
+use super::{Decision, EvictionPolicy, KillList, PrefillScores};
 use crate::kvcache::SeqCache;
 
 #[derive(Debug, Clone)]
@@ -51,14 +51,14 @@ impl EvictionPolicy for StreamingLlm {
         }
         // Evict the oldest live non-sink token (one per step — recency
         // order, not scores).
-        let mut kills = Vec::with_capacity(cache.live_tokens() - budget);
+        let mut kills = KillList::new();
         let mut over = cache.live_tokens() - budget;
         'outer: for (bi, blk) in cache.blocks().iter().enumerate() {
             for (off, pos, _) in blk.live_tokens() {
                 if (pos as usize) < self.sinks {
                     continue; // pinned sink
                 }
-                kills.push((bi, off));
+                kills.push(bi, off);
                 over -= 1;
                 if over == 0 {
                     break 'outer;

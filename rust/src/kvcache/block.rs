@@ -1,4 +1,5 @@
-//! Physical block pool + per-block metadata.
+//! Per-block (page) metadata. Physical slot allocation lives in the
+//! shared arena (`block_manager::BlockManager`).
 
 /// Maximum page size supported by the `u64` live-token bitmaps.
 pub const MAX_BLOCK_SIZE: usize = 64;
@@ -12,6 +13,11 @@ pub const MAX_BLOCK_SIZE: usize = 64;
 #[derive(Debug, Clone)]
 pub struct Block {
     pub phys: usize,
+    /// Global page id in the shared `BlockManager` arena backing this
+    /// block (`phys` stays the slot inside the sequence's own device
+    /// bucket — the value the block table serializes). In a standalone
+    /// cache the two coincide.
+    pub arena_slot: usize,
     pub fill: usize,
     live: u64,
     /// Per-token importance channels (aggregated over layers by the score
@@ -28,6 +34,7 @@ impl Block {
         assert!(block_size <= MAX_BLOCK_SIZE, "page size > 64 unsupported");
         Block {
             phys,
+            arena_slot: phys,
             fill: 0,
             live: 0,
             scores: [
@@ -119,55 +126,9 @@ impl Block {
     }
 }
 
-/// Free-list allocator over a sequence's physical slots.
-///
-/// Also does the global accounting the scheduler needs: `capacity` is the
-/// number of physical slots in the current device buffer (one bucket), and
-/// `grow` extends it when the runtime migrates to a larger bucket.
-#[derive(Debug, Clone)]
-pub struct BlockPool {
-    capacity: usize,
-    free: Vec<usize>,
-}
-
-impl BlockPool {
-    pub fn new(capacity: usize) -> Self {
-        // LIFO free list; reverse so slot 0 is handed out first (makes the
-        // initial layout identity, which tests and traces rely on).
-        BlockPool { capacity, free: (0..capacity).rev().collect() }
-    }
-
-    pub fn capacity(&self) -> usize {
-        self.capacity
-    }
-
-    pub fn free_count(&self) -> usize {
-        self.free.len()
-    }
-
-    pub fn used(&self) -> usize {
-        self.capacity - self.free.len()
-    }
-
-    pub fn alloc(&mut self) -> Option<usize> {
-        self.free.pop()
-    }
-
-    pub fn release(&mut self, phys: usize) {
-        debug_assert!(phys < self.capacity);
-        debug_assert!(!self.free.contains(&phys), "double free of block {phys}");
-        self.free.push(phys);
-    }
-
-    /// Extend capacity to `new_capacity` slots (bucket growth).
-    pub fn grow(&mut self, new_capacity: usize) {
-        assert!(new_capacity >= self.capacity);
-        for p in (self.capacity..new_capacity).rev() {
-            self.free.push(p);
-        }
-        self.capacity = new_capacity;
-    }
-}
+// NOTE: the former per-sequence `BlockPool` free-list allocator lived here;
+// it is superseded by the process-wide shared arena in `block_manager.rs`
+// (every sequence now allocates through a `BlockManager` handle).
 
 #[cfg(test)]
 mod tests {
@@ -231,37 +192,4 @@ mod tests {
         assert_eq!(b.mean_score(0), f32::INFINITY);
     }
 
-    #[test]
-    fn pool_alloc_release() {
-        let mut p = BlockPool::new(3);
-        assert_eq!(p.alloc(), Some(0));
-        assert_eq!(p.alloc(), Some(1));
-        assert_eq!(p.alloc(), Some(2));
-        assert_eq!(p.alloc(), None);
-        p.release(1);
-        assert_eq!(p.alloc(), Some(1));
-        assert_eq!(p.used(), 3);
-    }
-
-    #[test]
-    fn pool_grow() {
-        let mut p = BlockPool::new(2);
-        p.alloc();
-        p.alloc();
-        p.grow(4);
-        assert_eq!(p.capacity(), 4);
-        assert_eq!(p.alloc(), Some(2));
-        assert_eq!(p.alloc(), Some(3));
-        assert_eq!(p.alloc(), None);
-    }
-
-    #[test]
-    #[should_panic(expected = "double free")]
-    #[cfg(debug_assertions)] // debug_assert!-backed; release builds skip it
-    fn pool_double_free_panics_in_debug() {
-        let mut p = BlockPool::new(2);
-        let s = p.alloc().unwrap();
-        p.release(s);
-        p.release(s);
-    }
 }

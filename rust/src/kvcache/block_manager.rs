@@ -1,0 +1,326 @@
+//! Process-wide physical block arena.
+//!
+//! One `BlockManager` owns every physical KV slot in the server; each live
+//! sequence ([`crate::kvcache::SeqCache`]) registers for a [`SeqId`] and
+//! allocates/releases blocks through the shared handle. This replaces the
+//! old per-sequence `BlockPool`: capacity is a single real number the
+//! scheduler reads in O(1) (`used()` / `free_count()`), not an estimate
+//! summed over running sequences, which is what makes admission gating and
+//! preemption-under-memory-pressure expressible at all.
+//!
+//! Ownership is tracked per slot (`owner[phys]`), so double frees and
+//! foreign frees (sequence A releasing a block held by sequence B) are hard
+//! errors in every build, in O(1) — the old pool only caught double frees
+//! with a `debug_assert!` over an O(n) `contains` scan.
+//!
+//! The handle is `Clone + Send + Sync` (an `Arc<Mutex<..>>`): the lock is
+//! only taken on block allocation/release — once every `page_size` decode
+//! steps per sequence — never on the per-token metadata path.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Sentinel owner value for a free slot.
+const NO_OWNER: u32 = u32::MAX;
+
+/// Identity of a registered sequence within one arena. Obtained from
+/// [`BlockManager::register`]; ids are recycled after `unregister`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SeqId(u32);
+
+impl SeqId {
+    pub fn raw(self) -> u32 {
+        self.0
+    }
+}
+
+/// Arena-wide accounting snapshot (all O(1) counters).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    pub capacity: usize,
+    pub used: usize,
+    /// High-water mark of simultaneously allocated blocks — the real
+    /// physical-memory footprint of the whole server.
+    pub peak_used: usize,
+    pub allocs: u64,
+    pub frees: u64,
+    pub grows: u64,
+    /// Live registered sequences.
+    pub sequences: usize,
+}
+
+#[derive(Debug)]
+struct Inner {
+    /// LIFO free list; initialized in reverse so slot 0 is handed out
+    /// first (keeps the single-tenant layout identity tests rely on).
+    free: Vec<usize>,
+    /// `owner[phys]`: raw `SeqId` holding the slot, or `NO_OWNER`.
+    owner: Vec<u32>,
+    /// Blocks held per registered id (indexed by raw id).
+    owned: Vec<usize>,
+    registered: Vec<bool>,
+    free_ids: Vec<u32>,
+    peak_used: usize,
+    allocs: u64,
+    frees: u64,
+    grows: u64,
+}
+
+impl Inner {
+    fn capacity(&self) -> usize {
+        self.owner.len()
+    }
+
+    fn used(&self) -> usize {
+        self.capacity() - self.free.len()
+    }
+}
+
+/// Cloneable handle to the shared arena.
+#[derive(Debug, Clone)]
+pub struct BlockManager(Arc<Mutex<Inner>>);
+
+impl BlockManager {
+    pub fn new(capacity_blocks: usize) -> Self {
+        BlockManager(Arc::new(Mutex::new(Inner {
+            free: (0..capacity_blocks).rev().collect(),
+            owner: vec![NO_OWNER; capacity_blocks],
+            owned: Vec::new(),
+            registered: Vec::new(),
+            free_ids: Vec::new(),
+            peak_used: 0,
+            allocs: 0,
+            frees: 0,
+            grows: 0,
+        })))
+    }
+
+    /// Lock helper. Ignores poisoning: the arena's invariants are restored
+    /// before any panic below, and `SeqCache::drop` must still be able to
+    /// return blocks while unwinding from an unrelated panic.
+    fn inner(&self) -> MutexGuard<'_, Inner> {
+        self.0.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Register a new sequence and return its arena identity.
+    pub fn register(&self) -> SeqId {
+        let mut g = self.inner();
+        let id = match g.free_ids.pop() {
+            Some(id) => id,
+            None => {
+                let id = g.owned.len() as u32;
+                g.owned.push(0);
+                g.registered.push(false);
+                id
+            }
+        };
+        g.owned[id as usize] = 0;
+        g.registered[id as usize] = true;
+        SeqId(id)
+    }
+
+    /// Drop a sequence: its id is recycled, and any block it still holds
+    /// returns to the free list. Callers that know their slots (e.g.
+    /// `SeqCache::drop`) release them first so the O(capacity) ownership
+    /// scan below only runs as a leak-proofing fallback.
+    pub fn unregister(&self, seq: SeqId) {
+        let mut g = self.inner();
+        let id = seq.0 as usize;
+        if id >= g.registered.len() || !g.registered[id] {
+            return; // already gone — unregister is idempotent for Drop
+        }
+        if g.owned[id] > 0 {
+            for phys in 0..g.owner.len() {
+                if g.owner[phys] == seq.0 {
+                    g.owner[phys] = NO_OWNER;
+                    g.free.push(phys);
+                    g.frees += 1;
+                }
+            }
+            g.owned[id] = 0;
+        }
+        g.registered[id] = false;
+        g.free_ids.push(seq.0);
+    }
+
+    /// Allocate one block for `seq`. `None` when the arena is dry (the
+    /// scheduler's preemption trigger).
+    pub fn alloc(&self, seq: SeqId) -> Option<usize> {
+        let mut g = self.inner();
+        debug_assert!(g.registered[seq.0 as usize], "alloc on unregistered seq");
+        let phys = g.free.pop()?;
+        g.owner[phys] = seq.0;
+        g.owned[seq.0 as usize] += 1;
+        g.allocs += 1;
+        let used = g.used();
+        g.peak_used = g.peak_used.max(used);
+        Some(phys)
+    }
+
+    /// Return one block. Panics on double free (slot already free) and on
+    /// foreign free (slot held by another sequence) — both are memory-
+    /// safety bugs in the caller, checked in O(1) in every build.
+    pub fn release(&self, seq: SeqId, phys: usize) {
+        let mut g = self.inner();
+        let violation = if phys >= g.owner.len() {
+            Some(format!("release of out-of-range block {phys}"))
+        } else if g.owner[phys] == NO_OWNER {
+            Some(format!("double free of block {phys}"))
+        } else if g.owner[phys] != seq.0 {
+            Some(format!(
+                "foreign free: seq {} releasing block {phys} owned by seq {}",
+                seq.0, g.owner[phys]
+            ))
+        } else {
+            None
+        };
+        match violation {
+            None => {
+                g.owner[phys] = NO_OWNER;
+                g.owned[seq.0 as usize] -= 1;
+                g.free.push(phys);
+                g.frees += 1;
+            }
+            Some(msg) => {
+                drop(g); // release the lock before unwinding
+                panic!("{msg}");
+            }
+        }
+    }
+
+    /// Extend the arena to `new_capacity` slots (device memory growth).
+    pub fn grow(&self, new_capacity: usize) {
+        let mut g = self.inner();
+        let old = g.capacity();
+        assert!(new_capacity >= old, "arena cannot shrink");
+        for p in (old..new_capacity).rev() {
+            g.free.push(p);
+        }
+        g.owner.resize(new_capacity, NO_OWNER);
+        g.grows += 1;
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner().capacity()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.inner().free.len()
+    }
+
+    pub fn used(&self) -> usize {
+        self.inner().used()
+    }
+
+    /// Blocks currently held by `seq`.
+    pub fn owned_by(&self, seq: SeqId) -> usize {
+        let g = self.inner();
+        g.owned.get(seq.0 as usize).copied().unwrap_or(0)
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        let g = self.inner();
+        ArenaStats {
+            capacity: g.capacity(),
+            used: g.used(),
+            peak_used: g.peak_used,
+            allocs: g.allocs,
+            frees: g.frees,
+            grows: g.grows,
+            sequences: g.registered.iter().filter(|&&r| r).count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let m = BlockManager::new(3);
+        let s = m.register();
+        assert_eq!(m.alloc(s), Some(0));
+        assert_eq!(m.alloc(s), Some(1));
+        assert_eq!(m.alloc(s), Some(2));
+        assert_eq!(m.alloc(s), None);
+        assert_eq!(m.used(), 3);
+        m.release(s, 1);
+        assert_eq!(m.alloc(s), Some(1), "LIFO reuse of the freed slot");
+        assert_eq!(m.stats().peak_used, 3);
+    }
+
+    #[test]
+    fn per_seq_ownership_is_tracked() {
+        let m = BlockManager::new(4);
+        let a = m.register();
+        let b = m.register();
+        let p0 = m.alloc(a).unwrap();
+        let _p1 = m.alloc(b).unwrap();
+        let _p2 = m.alloc(b).unwrap();
+        assert_eq!(m.owned_by(a), 1);
+        assert_eq!(m.owned_by(b), 2);
+        assert_eq!(m.used(), 3);
+        m.release(a, p0);
+        assert_eq!(m.owned_by(a), 0);
+        assert_eq!(m.free_count(), 2);
+    }
+
+    #[test]
+    fn unregister_releases_everything() {
+        let m = BlockManager::new(4);
+        let a = m.register();
+        let b = m.register();
+        m.alloc(a).unwrap();
+        m.alloc(a).unwrap();
+        m.alloc(b).unwrap();
+        m.unregister(a);
+        assert_eq!(m.used(), 1, "a's blocks returned to the arena");
+        assert_eq!(m.stats().sequences, 1);
+        m.unregister(a); // idempotent
+        assert_eq!(m.used(), 1);
+    }
+
+    #[test]
+    fn grow_extends_capacity() {
+        let m = BlockManager::new(2);
+        let s = m.register();
+        m.alloc(s).unwrap();
+        m.alloc(s).unwrap();
+        assert_eq!(m.alloc(s), None);
+        m.grow(4);
+        assert_eq!(m.capacity(), 4);
+        assert_eq!(m.alloc(s), Some(2));
+        assert_eq!(m.alloc(s), Some(3));
+        assert_eq!(m.stats().grows, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let m = BlockManager::new(2);
+        let s = m.register();
+        let p = m.alloc(s).unwrap();
+        m.release(s, p);
+        m.release(s, p);
+    }
+
+    #[test]
+    #[should_panic(expected = "foreign free")]
+    fn foreign_free_panics() {
+        let m = BlockManager::new(2);
+        let a = m.register();
+        let b = m.register();
+        let p = m.alloc(a).unwrap();
+        m.release(b, p);
+    }
+
+    #[test]
+    fn id_recycling() {
+        let m = BlockManager::new(2);
+        let a = m.register();
+        let raw = a.raw();
+        m.unregister(a);
+        let b = m.register();
+        assert_eq!(b.raw(), raw, "freed id is recycled");
+    }
+}

@@ -1,8 +1,10 @@
 //! Paged KV-cache substrate (the vLLM-style memory manager the paper
 //! builds on).
 //!
-//! A sequence's cache is a pool of fixed-size physical *blocks* (pages)
-//! addressed through a *block table*: `table[logical] = physical`. All
+//! Physical fixed-size *blocks* (pages) live in one process-wide shared
+//! arena (`block_manager::BlockManager`); each sequence's cache allocates
+//! from it and addresses its blocks through a *block table*:
+//! `table[logical] = physical`. All
 //! eviction mechanisms — the paper's PagedEviction and every baseline —
 //! operate purely on this host-side metadata; the device-side K/V buffers
 //! are never moved or compacted. The decode graph receives the table plus a
@@ -15,9 +17,11 @@
 //!     (the fragmentation the paper's Figures 5/6 illustrate).
 
 pub mod block;
+pub mod block_manager;
 pub mod seq_cache;
 pub mod stats;
 
-pub use block::{Block, BlockPool};
-pub use seq_cache::{SeqCache, SCORE_CHANNELS};
+pub use block::Block;
+pub use block_manager::{ArenaStats, BlockManager, SeqId};
+pub use seq_cache::{BlockAlloc, SeqCache, SCORE_CHANNELS};
 pub use stats::CacheStats;

@@ -20,7 +20,8 @@
 //! compatibility wrappers, and `rebuild_*` keep the original from-scratch
 //! scan as the property-test/bench baseline.
 
-use super::block::{Block, BlockPool};
+use super::block::Block;
+use super::block_manager::{BlockManager, SeqId};
 use super::stats::CacheStats;
 
 /// Number of importance channels carried per token
@@ -70,10 +71,39 @@ impl DirtyRange {
     }
 }
 
-#[derive(Debug, Clone)]
+/// Why an append cannot proceed right now (see
+/// [`SeqCache::try_ensure_block`]). The two failure modes demand different
+/// remedies: a full bucket needs the runtime to migrate the sequence to a
+/// larger device buffer; a dry arena needs the scheduler to preempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockAlloc {
+    /// A write slot exists (possibly just allocated).
+    Ready,
+    /// The sequence's serialization bucket is full — grow the bucket.
+    BucketFull,
+    /// The shared arena has no free block — preempt or wait.
+    ArenaDry,
+}
+
+#[derive(Debug)]
 pub struct SeqCache {
     block_size: usize,
-    pool: BlockPool,
+    /// Shared physical arena this sequence allocates from.
+    mgr: BlockManager,
+    seq: SeqId,
+    /// Serialization capacity in blocks (= the device bucket the graphs
+    /// see). Distinct from the arena capacity: a sequence's bucket can be
+    /// smaller or larger than the globally free block count.
+    bucket_blocks: usize,
+    /// True when this cache was created with its own single-tenant arena
+    /// (`SeqCache::new`); `grow` then extends the arena alongside the
+    /// bucket, preserving the historical standalone semantics.
+    owns_arena: bool,
+    /// Free slots inside this sequence's device bucket (LIFO, seeded in
+    /// reverse so slot 0 is handed out first). Block-table entries index
+    /// the sequence's own device buffer, so they come from here; the
+    /// arena's global page ids ride along in `Block::arena_slot`.
+    local_free: Vec<usize>,
     /// Logical block order (oldest first). `blocks[i].phys` is the slot.
     blocks: Vec<Block>,
     /// Highest sequence position written so far + 1 (monotonic; survives
@@ -95,18 +125,35 @@ pub struct SeqCache {
 }
 
 impl SeqCache {
-    /// `capacity_blocks` = physical slots in the current device bucket.
+    /// Standalone cache with a private single-tenant arena of
+    /// `capacity_blocks` slots — the historical constructor, used by the
+    /// simulator, policy unit tests and one-shot generation.
     pub fn new(block_size: usize, capacity_blocks: usize) -> Self {
+        let mgr = BlockManager::new(capacity_blocks);
+        let mut c = Self::new_shared(block_size, capacity_blocks, &mgr);
+        c.owns_arena = true;
+        c
+    }
+
+    /// Cache allocating from a shared `arena`, with a serialization bucket
+    /// of `bucket_blocks` (the device-buffer capacity the decode graphs
+    /// are padded to). The sequence's blocks return to the arena when the
+    /// cache is dropped (retire or preemption).
+    pub fn new_shared(block_size: usize, bucket_blocks: usize, arena: &BlockManager) -> Self {
         SeqCache {
             block_size,
-            pool: BlockPool::new(capacity_blocks),
+            mgr: arena.clone(),
+            seq: arena.register(),
+            bucket_blocks,
+            owns_arena: false,
+            local_free: (0..bucket_blocks).rev().collect(),
             blocks: Vec::new(),
             next_position: 0,
             partial_count: 0,
-            table: vec![0; capacity_blocks],
-            mask: vec![0.0; capacity_blocks * block_size],
-            table_dirty: DirtyRange::full(capacity_blocks),
-            mask_dirty: DirtyRange::full(capacity_blocks * block_size),
+            table: vec![0; bucket_blocks],
+            mask: vec![0.0; bucket_blocks * block_size],
+            table_dirty: DirtyRange::full(bucket_blocks),
+            mask_dirty: DirtyRange::full(bucket_blocks * block_size),
             stats: CacheStats::default(),
         }
     }
@@ -116,7 +163,16 @@ impl SeqCache {
     }
 
     pub fn capacity_blocks(&self) -> usize {
-        self.pool.capacity()
+        self.bucket_blocks
+    }
+
+    /// Handle to the arena this sequence allocates from.
+    pub fn arena(&self) -> &BlockManager {
+        &self.mgr
+    }
+
+    pub fn seq_id(&self) -> SeqId {
+        self.seq
     }
 
     pub fn n_blocks(&self) -> usize {
@@ -127,8 +183,9 @@ impl SeqCache {
         &self.blocks
     }
 
+    /// Free blocks in the (shared) arena — O(1).
     pub fn free_blocks(&self) -> usize {
-        self.pool.free_count()
+        self.mgr.free_count()
     }
 
     /// Live (attention-visible) tokens.
@@ -167,20 +224,23 @@ impl SeqCache {
         self.blocks.last().map_or(true, |b| b.fill == self.block_size)
     }
 
-    /// Whether an append right now would need an allocation that the pool
-    /// cannot satisfy (runtime must grow the bucket or scheduler preempt).
+    /// Whether an append right now would need a block the current bucket
+    /// cannot hold (runtime must migrate to a larger device bucket).
     pub fn needs_grow(&self) -> bool {
-        self.last_block_full() && self.pool.free_count() == 0
+        self.last_block_full() && self.blocks.len() == self.bucket_blocks
     }
 
-    /// Append `phys` as the newest logical block and mirror it into the
-    /// persistent table. The mask region for the new logical index is
-    /// already all-zero (tail invariant maintained by `remove_block_at`),
-    /// so no mask write is needed.
-    fn push_new_block(&mut self, phys: usize) {
+    /// Append a new logical block at device slot `local`, backed by arena
+    /// page `arena_slot`, and mirror it into the persistent table. The
+    /// mask region for the new logical index is already all-zero (tail
+    /// invariant maintained by `remove_block_at`), so no mask write is
+    /// needed.
+    fn push_new_block(&mut self, local: usize, arena_slot: usize) {
         let li = self.blocks.len();
-        self.blocks.push(Block::new(phys, self.block_size));
-        self.table[li] = phys as i32;
+        let mut blk = Block::new(local, self.block_size);
+        blk.arena_slot = arena_slot;
+        self.blocks.push(blk);
+        self.table[li] = local as i32;
         self.table_dirty.mark(li, li + 1);
         self.stats.peak_live_blocks = self.stats.peak_live_blocks.max(self.blocks.len() as u64);
     }
@@ -215,21 +275,34 @@ impl SeqCache {
         }
     }
 
-    /// Make sure a block with a free slot exists. Returns false if the pool
-    /// is exhausted (caller grows/preempts).
-    pub fn ensure_block(&mut self) -> bool {
+    /// Make sure a block with a free slot exists, allocating from the
+    /// arena when the newest block is full. The two failure modes are
+    /// distinct: [`BlockAlloc::BucketFull`] means the serialization bucket
+    /// must grow (device-buffer migration), [`BlockAlloc::ArenaDry`] means
+    /// global KV memory is exhausted (scheduler preempts).
+    pub fn try_ensure_block(&mut self) -> BlockAlloc {
         if !self.last_block_full() {
-            return true;
+            return BlockAlloc::Ready;
         }
-        match self.pool.alloc() {
-            Some(phys) => {
-                self.push_new_block(phys);
+        if self.local_free.is_empty() {
+            return BlockAlloc::BucketFull;
+        }
+        match self.mgr.alloc(self.seq) {
+            Some(arena_slot) => {
+                let local = self.local_free.pop().expect("bucket accounting broken");
+                self.push_new_block(local, arena_slot);
                 self.stats.blocks_allocated += 1;
                 self.stats.table_updates += 1;
-                true
+                BlockAlloc::Ready
             }
-            None => false,
+            None => BlockAlloc::ArenaDry,
         }
+    }
+
+    /// Boolean convenience over [`SeqCache::try_ensure_block`]: `false` on
+    /// either failure mode (callers that grow-on-demand keep working).
+    pub fn ensure_block(&mut self) -> bool {
+        self.try_ensure_block() == BlockAlloc::Ready
     }
 
     /// Record the token the decode step just wrote at `peek_write_slot`.
@@ -247,14 +320,28 @@ impl SeqCache {
     }
 
     /// Bulk-load a prefilled, already-evicted prompt: `tokens[i]` is
-    /// (original_position, [3]scores), laid out contiguously from physical
-    /// slot 0 in logical order (matching the runtime's host-side pack).
-    pub fn load_prefill(&mut self, tokens: &[(u32, [f32; 3])], total_prompt_len: u32) {
+    /// (original_position, [3]scores), laid out contiguously in logical
+    /// order (matching the runtime's host-side pack). Fails without side
+    /// effects visible to other tenants when the bucket or the shared
+    /// arena cannot hold the prompt — blocks already claimed stay owned by
+    /// this sequence (the caller drops the cache, which returns them).
+    pub fn try_load_prefill(
+        &mut self,
+        tokens: &[(u32, [f32; 3])],
+        total_prompt_len: u32,
+    ) -> Result<(), BlockAlloc> {
         assert!(self.blocks.is_empty(), "load_prefill on non-empty cache");
         for (pos, sc) in tokens {
             if self.last_block_full() {
-                let phys = self.pool.alloc().expect("prefill exceeds pool");
-                self.push_new_block(phys);
+                if self.local_free.is_empty() {
+                    return Err(BlockAlloc::BucketFull);
+                }
+                let arena_slot = match self.mgr.alloc(self.seq) {
+                    Some(p) => p,
+                    None => return Err(BlockAlloc::ArenaDry),
+                };
+                let local = self.local_free.pop().expect("bucket accounting broken");
+                self.push_new_block(local, arena_slot);
                 self.stats.blocks_allocated += 1;
             }
             let li = self.blocks.len() - 1;
@@ -265,6 +352,14 @@ impl SeqCache {
         self.stats.tokens_written += tokens.len() as u64;
         self.stats.table_updates += 1;
         self.next_position = total_prompt_len;
+        Ok(())
+    }
+
+    /// Panicking convenience over [`SeqCache::try_load_prefill`] for
+    /// callers that sized the bucket themselves (simulator, tests).
+    pub fn load_prefill(&mut self, tokens: &[(u32, [f32; 3])], total_prompt_len: u32) {
+        self.try_load_prefill(tokens, total_prompt_len)
+            .expect("prefill exceeds bucket/arena");
     }
 
     // -- eviction primitives -------------------------------------------------
@@ -279,7 +374,8 @@ impl SeqCache {
         self.stats.tokens_evicted += blk.live_count() as u64;
         self.stats.blocks_evicted += 1;
         self.stats.table_updates += 1;
-        self.pool.release(blk.phys);
+        self.mgr.release(self.seq, blk.arena_slot);
+        self.local_free.push(blk.phys);
     }
 
     /// Unstructured eviction: kill one token at (logical block, offset) —
@@ -302,7 +398,8 @@ impl SeqCache {
             // Whole page finally drained — only now can it be reused.
             self.partial_count -= 1;
             let blk = self.remove_block_at(block_idx);
-            self.pool.release(blk.phys);
+            self.mgr.release(self.seq, blk.arena_slot);
+            self.local_free.push(blk.phys);
             self.stats.blocks_evicted += 1;
             self.stats.table_updates += 1;
         }
@@ -311,10 +408,20 @@ impl SeqCache {
     }
 
     /// Bucket growth: runtime migrated the device buffer to a bigger
-    /// capacity. Zero-extends the persistent serialization buffers.
+    /// capacity. Zero-extends the persistent serialization buffers. Does
+    /// NOT create arena capacity in shared mode — physical memory is the
+    /// scheduler's to manage; a standalone cache (private arena) grows its
+    /// arena alongside, preserving the historical semantics.
     pub fn grow(&mut self, new_capacity_blocks: usize) {
-        let old_cap = self.pool.capacity();
-        self.pool.grow(new_capacity_blocks);
+        let old_cap = self.bucket_blocks;
+        assert!(new_capacity_blocks >= old_cap, "bucket cannot shrink");
+        self.bucket_blocks = new_capacity_blocks;
+        for p in (old_cap..new_capacity_blocks).rev() {
+            self.local_free.push(p);
+        }
+        if self.owns_arena {
+            self.mgr.grow(new_capacity_blocks);
+        }
         self.table.resize(new_capacity_blocks, 0);
         self.mask.resize(new_capacity_blocks * self.block_size, 0.0);
         self.table_dirty.mark(old_cap, new_capacity_blocks);
@@ -346,9 +453,9 @@ impl SeqCache {
     pub fn valid_mask(&self, nb: usize) -> &[f32] {
         assert!(self.blocks.len() <= nb, "mask exceeds bucket");
         assert!(
-            nb <= self.pool.capacity(),
+            nb <= self.bucket_blocks,
             "bucket {nb} beyond capacity {}",
-            self.pool.capacity()
+            self.bucket_blocks
         );
         &self.mask[..nb * self.block_size]
     }
@@ -405,7 +512,7 @@ impl SeqCache {
     /// Compatibility wrapper: owned copy of [`SeqCache::valid_mask`],
     /// additionally allowing `nb > capacity_blocks()` pads.
     pub fn valid_mask_f32(&self, nb: usize) -> Vec<f32> {
-        if nb <= self.pool.capacity() {
+        if nb <= self.bucket_blocks {
             return self.valid_mask(nb).to_vec();
         }
         let mut m = self.mask.clone();
@@ -455,18 +562,35 @@ impl SeqCache {
 
     /// Consistency invariants — called by tests and debug assertions.
     pub fn check_invariants(&self) -> Result<(), String> {
-        // physical slots unique and within capacity
+        // device slots unique within the bucket; arena pages unique and
+        // within the arena
         let mut seen = std::collections::HashSet::new();
+        let mut seen_arena = std::collections::HashSet::new();
         for b in &self.blocks {
-            if b.phys >= self.pool.capacity() {
-                return Err(format!("phys {} out of capacity", b.phys));
+            if b.phys >= self.bucket_blocks {
+                return Err(format!("phys {} out of bucket", b.phys));
             }
             if !seen.insert(b.phys) {
                 return Err(format!("duplicate phys slot {}", b.phys));
             }
+            if b.arena_slot >= self.mgr.capacity() {
+                return Err(format!("arena slot {} out of arena", b.arena_slot));
+            }
+            if !seen_arena.insert(b.arena_slot) {
+                return Err(format!("duplicate arena slot {}", b.arena_slot));
+            }
             if b.fill > self.block_size {
                 return Err("overfull block".into());
             }
+        }
+        // local slot free list accounts for every bucket slot exactly once
+        if self.local_free.len() + self.blocks.len() != self.bucket_blocks {
+            return Err(format!(
+                "local free {} + blocks {} != bucket {}",
+                self.local_free.len(),
+                self.blocks.len(),
+                self.bucket_blocks
+            ));
         }
         // only the last block may be partially filled
         for (i, b) in self.blocks.iter().enumerate() {
@@ -474,11 +598,11 @@ impl SeqCache {
                 return Err(format!("non-terminal block {i} not full"));
             }
         }
-        // pool accounting adds up
-        if self.pool.used() != self.blocks.len() {
+        // arena ownership accounting adds up
+        if self.mgr.owned_by(self.seq) != self.blocks.len() {
             return Err(format!(
-                "pool used {} != live blocks {}",
-                self.pool.used(),
+                "arena owned {} != live blocks {}",
+                self.mgr.owned_by(self.seq),
                 self.blocks.len()
             ));
         }
@@ -490,9 +614,9 @@ impl SeqCache {
                 self.partial_count
             ));
         }
-        // incremental serialization buffers are sized to capacity and
+        // incremental serialization buffers are sized to the bucket and
         // bit-identical to a from-scratch rebuild
-        let cap = self.pool.capacity();
+        let cap = self.bucket_blocks;
         if self.table.len() != cap {
             return Err(format!("table len {} != capacity {cap}", self.table.len()));
         }
@@ -510,6 +634,20 @@ impl SeqCache {
             return Err("incremental valid mask drifted from rebuild".into());
         }
         Ok(())
+    }
+}
+
+/// Retiring or preempting a sequence is just dropping its cache: every
+/// block it still holds returns to the shared arena. Blocks are released
+/// explicitly (O(blocks held)) so `unregister` never needs its
+/// O(arena-capacity) ownership-scan fallback on the hot retire/preempt
+/// path.
+impl Drop for SeqCache {
+    fn drop(&mut self) {
+        for blk in self.blocks.drain(..) {
+            self.mgr.release(self.seq, blk.arena_slot);
+        }
+        self.mgr.unregister(self.seq);
     }
 }
 
@@ -684,6 +822,51 @@ mod tests {
         c.grow(10);
         assert_eq!(c.table_dirty(), Some(8..10));
         assert_eq!(c.mask_dirty(), Some(32..40));
+    }
+
+    #[test]
+    fn shared_arena_two_tenants_account_globally() {
+        use crate::kvcache::block_manager::BlockManager;
+        let arena = BlockManager::new(4);
+        let mut a = SeqCache::new_shared(2, 4, &arena);
+        let mut b = SeqCache::new_shared(2, 4, &arena);
+        a.load_prefill(&(0..4).map(|i| (i, sc(0.0))).collect::<Vec<_>>(), 4);
+        b.load_prefill(&(0..2).map(|i| (i, sc(0.0))).collect::<Vec<_>>(), 2);
+        assert_eq!(arena.used(), 3);
+        assert!(b.ensure_block(), "4th arena block");
+        assert_eq!(arena.free_count(), 0);
+        assert_eq!(a.try_ensure_block(), BlockAlloc::ArenaDry);
+        a.check_invariants().unwrap();
+        b.check_invariants().unwrap();
+        drop(b);
+        assert_eq!(arena.used(), 2, "dropping a tenant returns its blocks");
+        assert_eq!(a.try_ensure_block(), BlockAlloc::Ready);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn bucket_full_and_arena_dry_are_distinct_failures() {
+        use crate::kvcache::block_manager::BlockManager;
+        let arena = BlockManager::new(8);
+        let mut c = SeqCache::new_shared(2, 1, &arena); // one-block bucket
+        c.load_prefill(&[(0, sc(0.0)), (1, sc(0.0))], 2);
+        assert_eq!(c.try_ensure_block(), BlockAlloc::BucketFull);
+        c.grow(2); // bucket growth, arena untouched
+        assert_eq!(arena.capacity(), 8);
+        assert_eq!(c.try_ensure_block(), BlockAlloc::Ready);
+        assert_eq!(arena.used(), 2);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn try_load_prefill_reports_arena_dry_and_drop_reclaims() {
+        use crate::kvcache::block_manager::BlockManager;
+        let arena = BlockManager::new(1);
+        let mut c = SeqCache::new_shared(2, 4, &arena);
+        let toks: Vec<(u32, [f32; 3])> = (0..4).map(|i| (i, sc(0.0))).collect();
+        assert_eq!(c.try_load_prefill(&toks, 4), Err(BlockAlloc::ArenaDry));
+        drop(c);
+        assert_eq!(arena.used(), 0, "partially loaded blocks returned on drop");
     }
 
     #[test]

@@ -25,6 +25,14 @@ pub struct CacheStats {
     /// Limitation 1 quantity at its worst point, not just at retire time
     /// (Fig. 3's `partial@mid` column).
     pub peak_partial_blocks: u64,
+    /// Times this sequence was preempted (blocks freed, recomputed on
+    /// readmission) because the shared arena ran dry.
+    pub preemptions: u64,
+    /// Server-lifetime high-water mark of the WHOLE shared arena's
+    /// allocated blocks, snapshotted when this sequence retired (folded in
+    /// from `BlockManager::stats`) — the server-wide physical footprint,
+    /// not a per-sequence window.
+    pub peak_arena_blocks: u64,
 }
 
 impl CacheStats {
@@ -38,6 +46,8 @@ impl CacheStats {
         self.bucket_grows += o.bucket_grows;
         self.peak_live_blocks = self.peak_live_blocks.max(o.peak_live_blocks);
         self.peak_partial_blocks = self.peak_partial_blocks.max(o.peak_partial_blocks);
+        self.preemptions += o.preemptions;
+        self.peak_arena_blocks = self.peak_arena_blocks.max(o.peak_arena_blocks);
     }
 
     /// Cache-management operations per generated token — the paper's
@@ -67,10 +77,24 @@ mod tests {
 
     #[test]
     fn merge_takes_peak_maxima() {
-        let mut a = CacheStats { peak_live_blocks: 3, peak_partial_blocks: 2, ..Default::default() };
-        let b = CacheStats { peak_live_blocks: 7, peak_partial_blocks: 1, ..Default::default() };
+        let mut a = CacheStats {
+            peak_live_blocks: 3,
+            peak_partial_blocks: 2,
+            peak_arena_blocks: 10,
+            preemptions: 1,
+            ..Default::default()
+        };
+        let b = CacheStats {
+            peak_live_blocks: 7,
+            peak_partial_blocks: 1,
+            peak_arena_blocks: 4,
+            preemptions: 2,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.peak_live_blocks, 7, "peaks merge as maxima, not sums");
         assert_eq!(a.peak_partial_blocks, 2);
+        assert_eq!(a.peak_arena_blocks, 10);
+        assert_eq!(a.preemptions, 3, "preemption counts are additive");
     }
 }

@@ -5,11 +5,14 @@
 //!   generate  one-shot generation (text or token ids)
 //!   info      artifact/manifest summary
 //!   simulate  one accuracy-simulator sweep row
+//!   schedule  batched-scheduler demo on the deterministic sim backend
+//!             (shared arena, preemption under pressure; no PJRT needed)
 //!
 //! Examples:
 //!   paged-eviction serve --model sim-1b --port 7071
 //!   paged-eviction generate --text "hello" --max-new-tokens 16
 //!   paged-eviction simulate --dataset hotpotqa --policy paged --budget 1024
+//!   paged-eviction schedule --requests 16 --arena-blocks 64 --gen 48
 
 use anyhow::Result;
 
@@ -25,9 +28,10 @@ fn main() {
         "generate" => cmd_generate(),
         "info" => cmd_info(),
         "simulate" => cmd_simulate(),
+        "schedule" => cmd_schedule(),
         _ => {
             eprintln!(
-                "usage: paged-eviction <serve|generate|info|simulate> [options]\n\
+                "usage: paged-eviction <serve|generate|info|simulate|schedule> [options]\n\
                  run `paged-eviction <cmd> --help` for details"
             );
             std::process::exit(2);
@@ -208,6 +212,65 @@ fn cmd_info() -> Result<()> {
     println!("graphs: {}", engine.manifest.graphs.len());
     for g in &engine.manifest.graphs {
         println!("  {}", g.name);
+    }
+    Ok(())
+}
+
+/// Batched-scheduler demo: synthetic requests through the full admission /
+/// batched-decode / preemption pipeline on the deterministic sim backend.
+fn cmd_schedule() -> Result<()> {
+    use paged_eviction::scheduler::{Request, SchedConfig, Scheduler};
+    use paged_eviction::util::rng::Pcg32;
+    use paged_eviction::workload::recall;
+
+    let args = ArgSpec::new(
+        "paged-eviction schedule",
+        "batched continuous-batching rounds over a shared block arena (sim backend)",
+    )
+    .opt("requests", "16", "synthetic requests to submit")
+    .opt("prompt-len", "96", "prompt tokens per request")
+    .opt("gen", "48", "output tokens per request")
+    .opt("budget", "64", "KV cache budget (tokens)")
+    .opt("policy", "paged", "eviction policy")
+    .opt("page-size", "8", "KV page size")
+    .opt("concurrency", "4", "max concurrent sequences")
+    .opt("arena-blocks", "96", "shared arena capacity (blocks)")
+    .opt("seed", "7", "prompt RNG seed")
+    .parse_or_exit(2);
+
+    let cfg = SchedConfig {
+        model: "sim".into(),
+        page_size: args.get_usize("page-size"),
+        max_concurrency: args.get_usize("concurrency"),
+        max_live_blocks: args.get_usize("arena-blocks"),
+    };
+    let mut sched = Scheduler::new_sim(cfg);
+    let mut rng = Pcg32::new(args.get_u64("seed"));
+    for i in 0..args.get_usize("requests") {
+        let p = recall::make_prompt(&mut rng, args.get_usize("prompt-len"), 0.4);
+        let mut req = Request::new(i as u64 + 1, p.tokens, args.get_usize("gen"));
+        req.budget = args.get_usize("budget");
+        req.policy = args.get("policy").to_string();
+        sched.submit(req);
+    }
+    let outs = sched.run_to_completion()?;
+    println!(
+        "{} requests done: {:.0} tok/s, {} preemptions, peak arena {} / {} blocks",
+        outs.len(),
+        sched.throughput_tok_s(),
+        sched.preemptions,
+        sched.arena().stats().peak_used,
+        sched.arena().capacity(),
+    );
+    for o in &outs {
+        println!(
+            "  req {:>3}: {:>3} tokens, finish {:?}, ttft {:.2} ms, preempted {}x",
+            o.id,
+            o.tokens.len(),
+            o.finish,
+            o.ttft_s * 1e3,
+            o.preemptions,
+        );
     }
     Ok(())
 }

@@ -12,6 +12,11 @@ use crate::util::json::Json;
 pub enum GraphKind {
     Prefill,
     Decode,
+    /// Batched decode: one dispatch stepping `batch` sequences, each with
+    /// its own block table / validity mask / cache, padded to a common
+    /// context bucket. Lowered by `python/compile/aot.py` as a `vmap` of
+    /// the single-sequence decode graph.
+    DecodeBatch,
 }
 
 #[derive(Debug, Clone)]
@@ -25,6 +30,8 @@ pub struct GraphInfo {
     /// decode only
     pub page_size: usize,
     pub n_blocks: usize,
+    /// decode_batch only: batch lanes the graph steps per dispatch.
+    pub batch: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -108,6 +115,7 @@ impl Manifest {
             let kind = match g.req("kind")?.as_str() {
                 Some("prefill") => GraphKind::Prefill,
                 Some("decode") => GraphKind::Decode,
+                Some("decode_batch") => GraphKind::DecodeBatch,
                 k => bail!("unknown graph kind {k:?}"),
             };
             graphs.push(GraphInfo {
@@ -118,6 +126,7 @@ impl Manifest {
                 seq_bucket: g.req("seq_bucket")?.as_usize().context("seq_bucket")?,
                 page_size: g.get("page_size").and_then(|v| v.as_usize()).unwrap_or(0),
                 n_blocks: g.get("n_blocks").and_then(|v| v.as_usize()).unwrap_or(0),
+                batch: g.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
             });
         }
 
@@ -163,6 +172,28 @@ impl Manifest {
             .with_context(|| {
                 format!("no decode bucket >= {tokens} tokens for {model} @ page {page_size}")
             })
+    }
+
+    /// Smallest batched decode graph covering `tokens` context at `batch`
+    /// lanes, if the artifact set provides one (`None` = the runtime falls
+    /// back to per-sequence dispatch).
+    pub fn decode_batch_graph(
+        &self,
+        model: &str,
+        page_size: usize,
+        tokens: usize,
+        batch: usize,
+    ) -> Option<&GraphInfo> {
+        self.graphs
+            .iter()
+            .filter(|g| {
+                g.kind == GraphKind::DecodeBatch
+                    && g.model == model
+                    && g.page_size == page_size
+                    && g.seq_bucket >= tokens
+                    && g.batch >= batch
+            })
+            .min_by_key(|g| (g.batch, g.seq_bucket))
     }
 
     /// Largest decode bucket available (FullCache capacity ceiling).

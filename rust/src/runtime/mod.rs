@@ -11,6 +11,7 @@
 pub mod engine;
 pub mod manifest;
 pub mod model_runner;
+pub mod sim_backend;
 pub mod weights;
 
 #[cfg(feature = "xla")]
@@ -18,3 +19,4 @@ pub use engine::Engine;
 pub use manifest::{GraphInfo, GraphKind, Manifest, ModelInfo};
 #[cfg(feature = "xla")]
 pub use model_runner::{ModelRunner, Sequence, StepOutput};
+pub use sim_backend::{SimBackend, SimSeq};

@@ -20,9 +20,10 @@ mod pjrt {
     use crate::eviction::{
         aggregate_decode_scores, Decision, EvictionPolicy, PrefillScores,
     };
-    use crate::kvcache::SeqCache;
+    use crate::kvcache::{BlockAlloc, BlockManager, SeqCache};
     use crate::runtime::engine::{lit_f32, lit_i32, scalar_i32, Engine};
     use crate::runtime::manifest::ModelInfo;
+    use crate::scheduler::backend::{DecodeBackend, Prefilled};
 
     pub struct ModelRunner<'e> {
         pub engine: &'e Engine,
@@ -58,15 +59,32 @@ mod pjrt {
             Ok(ModelRunner { engine, model: info, page_size })
         }
 
-        /// Run the prompt, apply prefill token eviction, pack the retained
-        /// tokens into a fresh paged cache. Returns the sequence and the
-        /// last-position logits.
+        /// Standalone prefill with a private single-tenant arena (one-shot
+        /// generation, benches). See [`ModelRunner::prefill_shared`].
         pub fn prefill(
             &self,
             prompt: &[u32],
             budget: usize,
             policy: Box<dyn EvictionPolicy>,
         ) -> Result<(Sequence, Vec<f32>)> {
+            match self.prefill_shared(None, prompt, budget, policy)? {
+                Prefilled::Ready { seq, logits } => Ok((seq, logits)),
+                Prefilled::OutOfMemory => bail!("private arena cannot be out of memory"),
+            }
+        }
+
+        /// Run the prompt, apply prefill token eviction, pack the retained
+        /// tokens into a paged cache allocated from `arena` (or a private
+        /// arena when `None`). Returns `Prefilled::OutOfMemory` — with all
+        /// partially claimed blocks returned — when the shared arena
+        /// cannot hold the packed prompt.
+        pub fn prefill_shared(
+            &self,
+            arena: Option<&BlockManager>,
+            prompt: &[u32],
+            budget: usize,
+            policy: Box<dyn EvictionPolicy>,
+        ) -> Result<Prefilled<Sequence>> {
             anyhow::ensure!(!prompt.is_empty(), "empty prompt");
             anyhow::ensure!(budget >= self.page_size, "budget below one page");
             let len = prompt.len();
@@ -97,7 +115,10 @@ mod pjrt {
             let bs = self.page_size;
             let nb = self.initial_bucket_blocks(keep.len(), &policy)?;
             let (k_lit, v_lit) = self.pack_cache(&k_l, &v_l, &keep, p, nb)?;
-            let mut cache = SeqCache::new(bs, nb);
+            let mut cache = match arena {
+                Some(a) => SeqCache::new_shared(bs, nb, a),
+                None => SeqCache::new(bs, nb),
+            };
             let entries: Vec<(u32, [f32; 3])> = keep
                 .iter()
                 .map(|&i| {
@@ -111,7 +132,10 @@ mod pjrt {
                     )
                 })
                 .collect();
-            cache.load_prefill(&entries, len as u32);
+            if cache.try_load_prefill(&entries, len as u32).is_err() {
+                // dropping `cache` returns any partially claimed blocks
+                return Ok(Prefilled::OutOfMemory);
+            }
             let seq = Sequence {
                 cache,
                 k_lit,
@@ -122,16 +146,23 @@ mod pjrt {
                 generated: Vec::new(),
                 exec_seconds: exec_s,
             };
-            Ok((seq, logits))
+            Ok(Prefilled::Ready { seq, logits })
         }
 
         /// One decode step: feed `token`, get next-token logits. Applies the
-        /// eviction policy afterwards.
+        /// eviction policy afterwards. Self-managing single-sequence path:
+        /// grows the bucket on demand; a dry shared arena is an error here
+        /// (the scheduler's reservation pass preempts before dispatching).
         pub fn decode_step(&self, seq: &mut Sequence, token: u32) -> Result<StepOutput> {
             let bs = self.page_size;
-            if !seq.cache.ensure_block() {
-                self.grow(seq)?;
-                anyhow::ensure!(seq.cache.ensure_block(), "grow did not free a block");
+            loop {
+                match seq.cache.try_ensure_block() {
+                    BlockAlloc::Ready => break,
+                    BlockAlloc::BucketFull => self.grow(seq)?,
+                    BlockAlloc::ArenaDry => {
+                        bail!("shared KV arena exhausted — scheduler must preempt")
+                    }
+                }
             }
             let write_slot = seq
                 .cache
@@ -293,6 +324,188 @@ mod pjrt {
                 lit_f32(&kc, &[l, hkv, nb, bs, dh])?,
                 lit_f32(&vc, &[l, hkv, nb, bs, dh])?,
             ))
+        }
+
+        /// One padded batched dispatch for the whole running set, when the
+        /// artifact matrix provides a `decode_batch` graph covering this
+        /// (page size, context bucket, batch) cell. Every member sequence
+        /// is first grown to the graph's common bucket so the stacked
+        /// cache tensor is rectangular; lanes `>= batch.len()` are padding
+        /// (all-zero validity masks, token 0). Returns `Ok(None)` when no
+        /// batched graph exists and the caller should fall back to
+        /// per-sequence dispatch.
+        ///
+        /// NOTE: this backend round-trips the per-sequence cache literals
+        /// through the host to stack them; a device-resident batched cache
+        /// (ROADMAP "device-resident KV metadata") removes that copy.
+        fn try_decode_batch_fused(
+            &self,
+            batch: &mut [(&mut Sequence, u32)],
+        ) -> Result<Option<Vec<Result<Vec<f32>>>>> {
+            let bs = self.page_size;
+            let n = batch.len();
+            let want_nb = batch
+                .iter()
+                .map(|(s, _)| s.cache.capacity_blocks())
+                .max()
+                .unwrap_or(1);
+            let g = match self.engine.manifest.decode_batch_graph(
+                &self.model.name,
+                bs,
+                want_nb * bs,
+                n,
+            ) {
+                Some(g) => g,
+                None => return Ok(None),
+            };
+            let nb = g.n_blocks;
+            let lanes = g.batch;
+            for (s, _) in batch.iter_mut() {
+                while s.cache.capacity_blocks() < nb {
+                    self.grow(s)?;
+                }
+                anyhow::ensure!(
+                    s.cache.capacity_blocks() == nb,
+                    "bucket ladder misaligned with batch graph ({} vs {nb})",
+                    s.cache.capacity_blocks()
+                );
+            }
+            let (l, hkv, dh) = (self.model.n_layers, self.model.n_kv_heads, self.model.d_head);
+            let per = l * hkv * nb * bs * dh;
+            let mut kf = vec![0f32; lanes * per];
+            let mut vf = vec![0f32; lanes * per];
+            let mut toks = vec![0i32; lanes];
+            let mut poss = vec![0i32; lanes];
+            let mut slots = vec![0i32; lanes];
+            let mut tables = vec![0i32; lanes * nb];
+            let mut masks = vec![0f32; lanes * nb * bs];
+            for (j, (s, tok)) in batch.iter_mut().enumerate() {
+                kf[j * per..(j + 1) * per].copy_from_slice(&s.k_lit.to_vec::<f32>()?);
+                vf[j * per..(j + 1) * per].copy_from_slice(&s.v_lit.to_vec::<f32>()?);
+                toks[j] = *tok as i32;
+                poss[j] = s.cache.next_position() as i32;
+                slots[j] = s
+                    .cache
+                    .peek_write_slot()
+                    .context("no write slot reserved for batched decode")?
+                    as i32;
+                tables[j * nb..(j + 1) * nb].copy_from_slice(s.cache.block_table(nb));
+                let logical_slot = (s.cache.n_blocks() - 1) * bs
+                    + s.cache.blocks().last().unwrap().fill;
+                s.cache.with_incoming_mask(nb, logical_slot, |m| {
+                    masks[j * nb * bs..(j + 1) * nb * bs].copy_from_slice(m)
+                });
+            }
+            let inputs = [
+                lit_i32(&toks, &[lanes])?,
+                lit_i32(&poss, &[lanes])?,
+                lit_f32(&kf, &[lanes, l, hkv, nb, bs, dh])?,
+                lit_f32(&vf, &[lanes, l, hkv, nb, bs, dh])?,
+                lit_i32(&tables, &[lanes, nb])?,
+                lit_i32(&slots, &[lanes])?,
+                lit_f32(&masks, &[lanes, nb, bs])?,
+            ];
+            let t0 = std::time::Instant::now();
+            let outs = self.engine.run(g, &inputs)?;
+            let exec_s = t0.elapsed().as_secs_f64() / n as f64;
+            let [logits_l, k_l, v_l, sc_l]: [xla::Literal; 4] = outs
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("batched decode returned wrong tuple arity"))?;
+            let logits_all = logits_l.to_vec::<f32>()?;
+            let k_all = k_l.to_vec::<f32>()?;
+            let v_all = v_l.to_vec::<f32>()?;
+            let sc_all = sc_l.to_vec::<f32>()?;
+            let vsize = self.model.vocab_size;
+            anyhow::ensure!(logits_all.len() == lanes * vsize, "batched logits shape");
+            // Convert-then-commit: finish every fallible conversion BEFORE
+            // mutating any sequence, so an error anywhere leaves all lanes
+            // untouched and the caller can safely fall back to
+            // per-sequence dispatch.
+            let mut converted = Vec::with_capacity(n);
+            for j in 0..n {
+                converted.push((
+                    lit_f32(&k_all[j * per..(j + 1) * per], &[l, hkv, nb, bs, dh])?,
+                    lit_f32(&v_all[j * per..(j + 1) * per], &[l, hkv, nb, bs, dh])?,
+                ));
+            }
+            let mut results = Vec::with_capacity(n);
+            for ((j, (s, tok)), (k_new, v_new)) in
+                batch.iter_mut().enumerate().zip(converted)
+            {
+                s.k_lit = k_new;
+                s.v_lit = v_new;
+                s.exec_seconds += exec_s;
+                s.cache.clear_dirty(); // buffers were uploaded whole above
+                let sc =
+                    aggregate_decode_scores(&sc_all[j * 3 * l..(j + 1) * 3 * l], l);
+                s.cache.append(sc);
+                s.generated.push(*tok);
+                match s.policy.post_append(&s.cache, s.budget) {
+                    Decision::Keep => {}
+                    Decision::EvictBlock(i) => s.cache.evict_block(i),
+                    Decision::KillTokens(ts) => {
+                        for (bi, off) in ts {
+                            s.cache.kill_token(bi, off);
+                        }
+                    }
+                }
+                results.push(Ok(logits_all[j * vsize..(j + 1) * vsize].to_vec()));
+            }
+            Ok(Some(results))
+        }
+    }
+
+    impl<'e> DecodeBackend for ModelRunner<'e> {
+        type Seq = Sequence;
+
+        fn prefill(
+            &mut self,
+            arena: &BlockManager,
+            prompt: &[u32],
+            budget: usize,
+            policy: Box<dyn EvictionPolicy>,
+        ) -> Result<Prefilled<Sequence>> {
+            ModelRunner::prefill_shared(self, Some(arena), prompt, budget, policy)
+        }
+
+        fn cache(seq: &Sequence) -> &SeqCache {
+            &seq.cache
+        }
+
+        fn cache_mut(seq: &mut Sequence) -> &mut SeqCache {
+            &mut seq.cache
+        }
+
+        fn grow_bucket(&mut self, seq: &mut Sequence) -> Result<()> {
+            ModelRunner::grow(self, seq)
+        }
+
+        fn decode_batch(&mut self, batch: &mut [(&mut Sequence, u32)]) -> Vec<Result<Vec<f32>>> {
+            // Prefer the single padded batched dispatch; fall back to
+            // per-sequence dispatch when the artifact set has no batched
+            // graph for this cell.
+            if batch.len() > 1 {
+                match self.try_decode_batch_fused(batch) {
+                    Ok(Some(results)) => return results,
+                    Ok(None) => {}
+                    Err(e) => {
+                        // The fused path commits nothing before erroring
+                        // (convert-then-commit), so per-sequence dispatch
+                        // below is a safe recovery — one bad lane must not
+                        // retire the whole running set.
+                        log::warn!(
+                            "batched dispatch failed; falling back to \
+                             per-sequence decode: {e:#}"
+                        );
+                    }
+                }
+            }
+            batch
+                .iter_mut()
+                .map(|entry| {
+                    self.decode_step(&mut *entry.0, entry.1).map(|o| o.logits)
+                })
+                .collect()
         }
     }
 }

@@ -1,0 +1,264 @@
+//! Deterministic in-process decode backend (no PJRT, always built).
+//!
+//! Drives the REAL paged cache + eviction machinery (`SeqCache` allocating
+//! from the shared `BlockManager` arena, real `EvictionPolicy` decisions)
+//! under a toy "language model" whose next-token logits are a pure
+//! function of the token history fed so far. Two consequences the
+//! scheduler tests lean on:
+//!
+//!   * greedy decode is bit-deterministic, and **independent of physical
+//!     block layout** — so a preempted sequence that is readmitted and
+//!     recomputed (prefill + replay of its produced tokens) continues with
+//!     exactly the tokens an uncontended run produces;
+//!   * decoding a batch is equivalent to decoding each sequence alone —
+//!     the batched-round scheduler can be pinned bit-identical to the old
+//!     one-sequence-at-a-time loop.
+//!
+//! Importance scores are a deterministic hash of (position, token), so
+//! eviction pressure is realistic (blocks fill, evict, fragment) without
+//! any RNG state that replay could desynchronize.
+
+use anyhow::Result;
+
+use crate::eviction::{Decision, EvictionPolicy, PrefillScores};
+use crate::kvcache::{BlockManager, SeqCache};
+use crate::scheduler::backend::{DecodeBackend, Prefilled};
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Fold one fed token into the history hash.
+fn fold(state: u64, tok: u32) -> u64 {
+    splitmix64(state ^ (tok as u64 + 1))
+}
+
+/// One in-flight generation on the sim backend.
+pub struct SimSeq {
+    pub cache: SeqCache,
+    pub budget: usize,
+    pub policy: Box<dyn EvictionPolicy>,
+    pub prompt_len: usize,
+    /// Rolling hash of every token fed so far (prompt, then decode feeds).
+    state: u64,
+}
+
+pub struct SimBackend {
+    pub page_size: usize,
+    /// Toy vocabulary size (logit vector length).
+    pub vocab: usize,
+}
+
+impl SimBackend {
+    pub fn new(page_size: usize) -> SimBackend {
+        SimBackend { page_size, vocab: 211 }
+    }
+
+    /// Deterministic importance channels for the token at `pos`. Channel
+    /// semantics match the live system (0: higher = keep; 1/2: lower =
+    /// keep); values are uniform-ish in [0, 1].
+    fn tok_scores(pos: u32, tok: u32) -> [f32; 3] {
+        let h = splitmix64(((pos as u64) << 32) | tok as u64);
+        [
+            ((h & 0xffff) as f32) / 65535.0,
+            (((h >> 16) & 0xffff) as f32) / 65535.0,
+            (((h >> 32) & 0xffff) as f32) / 65535.0,
+        ]
+    }
+
+    /// Logits for the current history hash: a deterministic sub-0.5 floor
+    /// everywhere plus a 1.0 winner at `mix(state) % vocab`.
+    fn logits(&self, state: u64) -> Vec<f32> {
+        let winner = (splitmix64(state) % self.vocab as u64) as usize;
+        let mut v = Vec::with_capacity(self.vocab);
+        for i in 0..self.vocab {
+            v.push(((splitmix64(state ^ ((i as u64) << 17)) & 0xfff) as f32) / 8192.0);
+        }
+        v[winner] = 1.0;
+        v
+    }
+}
+
+impl DecodeBackend for SimBackend {
+    type Seq = SimSeq;
+
+    fn prefill(
+        &mut self,
+        arena: &BlockManager,
+        prompt: &[u32],
+        budget: usize,
+        policy: Box<dyn EvictionPolicy>,
+    ) -> Result<Prefilled<SimSeq>> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(budget >= self.page_size, "budget below one page");
+        let bs = self.page_size;
+        let len = prompt.len();
+        let mut channels = [
+            Vec::with_capacity(len),
+            Vec::with_capacity(len),
+            Vec::with_capacity(len),
+        ];
+        for (i, &t) in prompt.iter().enumerate() {
+            let sc = Self::tok_scores(i as u32, t);
+            for (c, ch) in channels.iter_mut().enumerate() {
+                ch.push(sc[c]);
+            }
+        }
+        let scores = PrefillScores { channels, len };
+        let keep = policy.prefill_keep(&scores, budget);
+        anyhow::ensure!(!keep.is_empty(), "policy kept zero tokens");
+
+        // bucket: kept tokens plus two pages of eviction-oscillation slack
+        let bucket = (keep.len() + bs - 1) / bs + 2;
+        let mut cache = SeqCache::new_shared(bs, bucket, arena);
+        let entries: Vec<(u32, [f32; 3])> = keep
+            .iter()
+            .map(|&i| {
+                (
+                    i as u32,
+                    [
+                        scores.channels[0][i],
+                        scores.channels[1][i],
+                        scores.channels[2][i],
+                    ],
+                )
+            })
+            .collect();
+        if cache.try_load_prefill(&entries, len as u32).is_err() {
+            // dropping `cache` returns any partially claimed blocks
+            return Ok(Prefilled::OutOfMemory);
+        }
+        let mut state = 0u64;
+        for &t in prompt {
+            state = fold(state, t);
+        }
+        let logits = self.logits(state);
+        Ok(Prefilled::Ready {
+            seq: SimSeq { cache, budget, policy, prompt_len: len, state },
+            logits,
+        })
+    }
+
+    fn cache(seq: &SimSeq) -> &SeqCache {
+        &seq.cache
+    }
+
+    fn cache_mut(seq: &mut SimSeq) -> &mut SeqCache {
+        &mut seq.cache
+    }
+
+    fn grow_bucket(&mut self, seq: &mut SimSeq) -> Result<()> {
+        let nb = seq.cache.capacity_blocks() + 2;
+        seq.cache.grow(nb);
+        Ok(())
+    }
+
+    fn decode_batch(&mut self, batch: &mut [(&mut SimSeq, u32)]) -> Vec<Result<Vec<f32>>> {
+        batch
+            .iter_mut()
+            .map(|entry| {
+                let seq: &mut SimSeq = &mut *entry.0;
+                let tok = entry.1;
+                if seq.cache.last_block_full() {
+                    return Err(anyhow::anyhow!("no write slot reserved for decode"));
+                }
+                seq.state = fold(seq.state, tok);
+                let pos = seq.cache.next_position();
+                seq.cache.append(Self::tok_scores(pos, tok));
+                match seq.policy.post_append(&seq.cache, seq.budget) {
+                    Decision::Keep => {}
+                    Decision::EvictBlock(i) => seq.cache.evict_block(i),
+                    Decision::KillTokens(ts) => {
+                        for (bi, off) in ts {
+                            seq.cache.kill_token(bi, off);
+                        }
+                    }
+                }
+                Ok(self.logits(seq.state))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eviction::make_policy;
+    use crate::runtime::model_runner::argmax;
+
+    fn drive(prompt: &[u32], gen: usize, budget: usize, policy: &str) -> Vec<u32> {
+        let arena = BlockManager::new(4096);
+        let mut be = SimBackend::new(4);
+        let pre = be
+            .prefill(&arena, prompt, budget, make_policy(policy).unwrap())
+            .unwrap();
+        let Prefilled::Ready { mut seq, logits } = pre else {
+            panic!("unexpected OOM")
+        };
+        let mut tok = argmax(&logits);
+        let mut out = Vec::new();
+        for _ in 0..gen {
+            out.push(tok);
+            while !seq.cache.ensure_block() {
+                be.grow_bucket(&mut seq).unwrap();
+            }
+            let mut b = [(&mut seq, tok)];
+            let r = be.decode_batch(&mut b).pop().unwrap().unwrap();
+            tok = argmax(&r);
+        }
+        out
+    }
+
+    #[test]
+    fn decode_is_deterministic_and_policy_invariant_tokens() {
+        let prompt: Vec<u32> = (0..40).map(|i| (i * 7) % 100).collect();
+        let a = drive(&prompt, 16, 16, "paged");
+        let b = drive(&prompt, 16, 16, "paged");
+        assert_eq!(a, b, "same history must produce the same tokens");
+        // logits depend only on history, so a different eviction policy
+        // (different cache layout) still yields the same greedy tokens
+        let c = drive(&prompt, 16, 16, "streaming");
+        assert_eq!(a, c, "tokens are layout-independent by construction");
+    }
+
+    #[test]
+    fn budgeted_policy_keeps_cache_bounded() {
+        let prompt: Vec<u32> = (0..64).map(|i| i as u32).collect();
+        let arena = BlockManager::new(4096);
+        let mut be = SimBackend::new(4);
+        let Prefilled::Ready { mut seq, logits } = be
+            .prefill(&arena, &prompt, 16, make_policy("paged").unwrap())
+            .unwrap()
+        else {
+            panic!("OOM")
+        };
+        let mut tok = argmax(&logits);
+        for _ in 0..32 {
+            while !seq.cache.ensure_block() {
+                be.grow_bucket(&mut seq).unwrap();
+            }
+            let mut b = [(&mut seq, tok)];
+            tok = argmax(&be.decode_batch(&mut b).pop().unwrap().unwrap());
+            assert!(seq.cache.live_tokens() <= 16 + 4, "budget + one page");
+            seq.cache.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn prefill_reports_oom_on_tiny_arena() {
+        let arena = BlockManager::new(1);
+        let mut be = SimBackend::new(4);
+        let prompt: Vec<u32> = (0..32).map(|i| i as u32).collect();
+        match be
+            .prefill(&arena, &prompt, 32, make_policy("paged").unwrap())
+            .unwrap()
+        {
+            Prefilled::OutOfMemory => {}
+            Prefilled::Ready { .. } => panic!("1-block arena cannot hold 32 tokens"),
+        }
+        assert_eq!(arena.used(), 0, "failed prefill leaks no blocks");
+    }
+}

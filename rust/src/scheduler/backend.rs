@@ -1,0 +1,58 @@
+//! The decode-backend abstraction the scheduler drives.
+//!
+//! The scheduler owns request lifecycle, the shared [`BlockManager`] arena,
+//! batched decode rounds and preemption; a backend owns model execution.
+//! Two implementations exist:
+//!
+//!   * [`crate::runtime::SimBackend`] — always built; a deterministic toy
+//!     LM over the REAL cache/eviction machinery, so the whole scheduling
+//!     stack is exercised by plain `cargo test`;
+//!   * `crate::runtime::ModelRunner` (behind the `xla` feature) — the PJRT
+//!     runtime, dispatching one padded batched decode graph per round when
+//!     the artifact set provides one.
+
+use anyhow::Result;
+
+use crate::eviction::EvictionPolicy;
+use crate::kvcache::{BlockManager, SeqCache};
+
+/// Outcome of a prefill attempt against the shared arena.
+pub enum Prefilled<S> {
+    /// Prompt processed; `logits` are the last-position logits (the first
+    /// generated token exists as soon as this returns — TTFT stops here).
+    Ready { seq: S, logits: Vec<f32> },
+    /// The arena cannot hold the packed prompt right now. Not an error:
+    /// the scheduler requeues the request and retries once capacity frees.
+    OutOfMemory,
+}
+
+pub trait DecodeBackend {
+    /// Backend-owned per-sequence state (cache + model-side buffers).
+    type Seq;
+
+    /// Run the prompt, apply prefill eviction, pack the survivors into a
+    /// paged cache allocated from `arena`.
+    fn prefill(
+        &mut self,
+        arena: &BlockManager,
+        prompt: &[u32],
+        budget: usize,
+        policy: Box<dyn EvictionPolicy>,
+    ) -> Result<Prefilled<Self::Seq>>;
+
+    fn cache(seq: &Self::Seq) -> &SeqCache;
+
+    fn cache_mut(seq: &mut Self::Seq) -> &mut SeqCache;
+
+    /// Migrate `seq` to a larger device bucket (its serialization bucket
+    /// is full). Must strictly enlarge the bucket or error.
+    fn grow_bucket(&mut self, seq: &mut Self::Seq) -> Result<()>;
+
+    /// One decode step for every `(sequence, token-to-feed)` entry — the
+    /// scheduler issues exactly one call per round for the whole running
+    /// set. Every entry has a write slot reserved by the scheduler
+    /// beforehand. Returns next-token logits per entry, same order;
+    /// per-entry errors let the scheduler retire one sequence without
+    /// failing the round.
+    fn decode_batch(&mut self, batch: &mut [(&mut Self::Seq, u32)]) -> Vec<Result<Vec<f32>>>;
+}

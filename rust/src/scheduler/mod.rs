@@ -1,25 +1,24 @@
 //! Serving coordinator: request lifecycle + continuous batching.
 //!
-//! The scheduler owns the `ModelRunner` and interleaves many in-flight
-//! sequences vLLM-style: each round admits prefills until the concurrency
-//! or global-block budget is exhausted, then runs one decode step for
-//! every running sequence. Eviction policy + cache budget are per-request,
-//! so a single server can serve mixed policies (that is how the comparison
-//! benches run).
+//! The scheduler interleaves many in-flight sequences vLLM-style: each
+//! round admits prefills until the concurrency or shared-arena capacity is
+//! exhausted, reserves this round's blocks (preempting the youngest
+//! sequence when the arena runs dry), then issues ONE batched decode call
+//! for the whole running set. Eviction policy + cache budget are
+//! per-request, so a single server can serve mixed policies (that is how
+//! the comparison benches run).
 //!
-//! On this testbed PJRT executes on a single CPU core, so "batching" is
-//! round-robin interleave rather than a batched kernel launch; admission,
-//! preemption and block accounting are the same logic a parallel backend
-//! would use (DESIGN.md §4, substitution table).
-//!
-//! The scheduler drives the PJRT runtime, so `sched` is gated behind the
-//! `xla` feature; the request/response types are always available (the
-//! wire protocol depends on them).
+//! The scheduler is generic over [`backend::DecodeBackend`], so the whole
+//! lifecycle — admission gating on the shared `BlockManager` arena,
+//! batched decode rounds, preemption under memory pressure, retirement —
+//! is identical between the always-built deterministic sim backend and the
+//! PJRT runtime (`--features xla`), and is exercised by plain
+//! `cargo test`.
 
+pub mod backend;
 pub mod request;
-#[cfg(feature = "xla")]
 pub mod sched;
 
+pub use backend::{DecodeBackend, Prefilled};
 pub use request::{FinishReason, Request, RequestOutput, RequestState};
-#[cfg(feature = "xla")]
 pub use sched::{SchedConfig, Scheduler, StepReport};

@@ -1,8 +1,5 @@
 //! Request descriptors and lifecycle state.
 
-#[cfg(feature = "xla")]
-use std::time::Instant;
-
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -55,18 +52,8 @@ pub struct RequestOutput {
     pub tpot_s: f64,
     pub prompt_len: usize,
     pub live_cache_tokens: usize,
+    /// Times this request was preempted (blocks freed under memory
+    /// pressure) and recomputed before completing.
+    pub preemptions: u32,
     pub cache_stats: crate::kvcache::CacheStats,
-}
-
-/// Book-keeping for an in-flight request.
-#[cfg(feature = "xla")]
-pub(crate) struct Inflight {
-    pub req: Request,
-    pub seq: crate::runtime::Sequence,
-    pub next_token: u32,
-    pub enqueued: Instant,
-    pub first_token_at: Option<Instant>,
-    pub last_token_at: Instant,
-    pub decode_seconds: f64,
-    pub produced: Vec<u32>,
 }

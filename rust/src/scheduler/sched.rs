@@ -1,14 +1,39 @@
-//! The continuous-batching scheduler.
+//! The continuous-batching scheduler: batched decode rounds over a shared
+//! physical block arena, with preemption under memory pressure.
+//!
+//! Each round:
+//!
+//!  1. **admission** — fill free concurrency slots from the queue, gated
+//!     on the REAL arena (`BlockManager::free_count`, O(1)), estimating
+//!     `ceil((min(prompt, budget) + max_new_tokens) / page_size)` blocks
+//!     per request;
+//!  2. **reservation** — every running sequence that needs a fresh block
+//!     for this round's token claims it up front; if the arena runs dry,
+//!     the scheduler victim-selects the **youngest** running sequence,
+//!     frees its blocks and requeues it (recompute-on-readmission);
+//!  3. **batched decode** — one `DecodeBackend::decode_batch` call for the
+//!     whole running set; finished sequences retire from the results.
+//!
+//! A preempted request keeps its produced tokens; on readmission the
+//! backend re-prefills the prompt and the scheduler *replays* those tokens
+//! through the decode path, reconstructing the cache state the original
+//! run had (greedy decode is deterministic), then continues generating.
+//!
+//! The scheduler is generic over [`DecodeBackend`], so the identical
+//! admission/reservation/preemption/retire logic runs on the always-built
+//! deterministic sim backend (tier-1 tests) and on the PJRT runner
+//! (`--features xla`).
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::request::{FinishReason, Inflight, Request, RequestOutput};
+use super::backend::{DecodeBackend, Prefilled};
+use super::request::{FinishReason, Request, RequestOutput};
 use crate::eviction::make_policy;
+use crate::kvcache::{BlockAlloc, BlockManager};
 use crate::runtime::model_runner::argmax;
-use crate::runtime::{Engine, ModelRunner};
 use crate::util::stats::{Histogram, Summary};
 
 #[derive(Debug, Clone)]
@@ -17,8 +42,8 @@ pub struct SchedConfig {
     pub page_size: usize,
     /// Max sequences decoded concurrently (vLLM "max_num_seqs").
     pub max_concurrency: usize,
-    /// Global cap on live KV blocks across all sequences — admission gate
-    /// (stands in for GPU memory capacity).
+    /// Capacity of the shared physical block arena — the real global KV
+    /// memory every sequence allocates from (stands in for GPU memory).
     pub max_live_blocks: usize,
 }
 
@@ -39,13 +64,68 @@ pub struct StepReport {
     pub prefilled: usize,
     pub decoded_tokens: usize,
     pub finished: usize,
+    /// Sequences preempted this round (arena ran dry mid-decode).
+    pub preempted: usize,
+    /// Requests rejected outright (can never fit / bad policy / failed).
+    pub rejected: usize,
 }
 
-pub struct Scheduler<'e> {
+/// Queued request plus everything needed to resume it after preemption.
+struct QueueEntry {
+    req: Request,
+    enqueued: Instant,
+    /// Tokens produced before preemption, replayed on readmission.
+    resume: Vec<u32>,
+    first_token_at: Option<Instant>,
+    decode_seconds: f64,
+    preemptions: u32,
+}
+
+impl QueueEntry {
+    fn fresh(req: Request) -> QueueEntry {
+        QueueEntry {
+            req,
+            enqueued: Instant::now(),
+            resume: Vec::new(),
+            first_token_at: None,
+            decode_seconds: 0.0,
+            preemptions: 0,
+        }
+    }
+}
+
+/// Book-keeping for an in-flight request.
+struct Inflight<S> {
+    req: Request,
+    seq: S,
+    next_token: u32,
+    enqueued: Instant,
+    first_token_at: Option<Instant>,
+    decode_seconds: f64,
+    /// All tokens produced (including pre-preemption history).
+    produced: Vec<u32>,
+    /// How many of `produced` have been fed back through decode; while
+    /// `fed < produced.len()` the sequence is replaying after preemption.
+    fed: usize,
+    /// Monotonic admission number — preemption victims are the youngest.
+    admit_serial: u64,
+    preemptions: u32,
+}
+
+enum AdmitOutcome {
+    Admitted,
+    /// Arena too full right now; entry comes back for a later round.
+    OutOfMemory(QueueEntry),
+    /// Request failed hard (error output already emitted).
+    Failed,
+}
+
+pub struct Scheduler<B: DecodeBackend> {
     pub cfg: SchedConfig,
-    runner: ModelRunner<'e>,
-    queue: VecDeque<(Request, Instant)>,
-    running: Vec<Inflight>,
+    backend: B,
+    arena: BlockManager,
+    queue: VecDeque<QueueEntry>,
+    running: Vec<Inflight<B::Seq>>,
     finished: Vec<RequestOutput>,
     // aggregate serving metrics
     pub ttft: Histogram,
@@ -53,15 +133,21 @@ pub struct Scheduler<'e> {
     pub decode_step_s: Summary,
     pub total_generated: u64,
     pub total_prompt_tokens: u64,
+    /// Total sequences preempted (arena pressure) since start.
+    pub preemptions: u64,
     started: Option<Instant>,
+    admit_counter: u64,
 }
 
-impl<'e> Scheduler<'e> {
-    pub fn new(engine: &'e Engine, cfg: SchedConfig) -> Result<Self> {
-        let runner = ModelRunner::new(engine, &cfg.model, cfg.page_size)?;
-        Ok(Scheduler {
+impl<B: DecodeBackend> Scheduler<B> {
+    /// Build a scheduler around an existing backend. The shared arena is
+    /// sized by `cfg.max_live_blocks`.
+    pub fn with_backend(backend: B, cfg: SchedConfig) -> Self {
+        let arena = BlockManager::new(cfg.max_live_blocks);
+        Scheduler {
             cfg,
-            runner,
+            backend,
+            arena,
             queue: VecDeque::new(),
             running: Vec::new(),
             finished: Vec::new(),
@@ -70,12 +156,37 @@ impl<'e> Scheduler<'e> {
             decode_step_s: Summary::new(),
             total_generated: 0,
             total_prompt_tokens: 0,
+            preemptions: 0,
             started: None,
-        })
+            admit_counter: 0,
+        }
     }
 
-    pub fn submit(&mut self, req: Request) {
-        self.queue.push_back((req, Instant::now()));
+    /// The shared physical block arena (O(1) global accounting).
+    pub fn arena(&self) -> &BlockManager {
+        &self.arena
+    }
+
+    pub fn submit(&mut self, mut req: Request) {
+        if req.budget == 0 {
+            // A zero-token cache cannot hold even the incoming token; the
+            // old code silently floored this to 2 blocks. Reject it.
+            log::warn!("req {}: zero cache budget — rejected", req.id);
+            self.finished.push(Self::error_output(&req));
+            return;
+        }
+        if req.budget < self.cfg.page_size {
+            // Sub-page budgets are clamped up: one page is the smallest
+            // unit the paged layout can serve.
+            log::debug!(
+                "req {}: budget {} below page size {} — clamped",
+                req.id,
+                req.budget,
+                self.cfg.page_size
+            );
+            req.budget = self.cfg.page_size;
+        }
+        self.queue.push_back(QueueEntry::fresh(req));
     }
 
     pub fn pending(&self) -> usize {
@@ -86,8 +197,10 @@ impl<'e> Scheduler<'e> {
         self.running.len()
     }
 
+    /// Allocated blocks across ALL sequences — O(1) from the arena, not a
+    /// scan over running sequences.
     pub fn live_blocks(&self) -> usize {
-        self.running.iter().map(|f| f.seq.cache.n_blocks()).sum()
+        self.arena.used()
     }
 
     pub fn is_idle(&self) -> bool {
@@ -99,49 +212,176 @@ impl<'e> Scheduler<'e> {
         std::mem::take(&mut self.finished)
     }
 
-    /// One scheduling round: admit prefills until the concurrency and
-    /// global-block budgets are exhausted, then one decode step per running
-    /// sequence, retiring finished ones.
+    /// Worst-case block need of a request: its prompt can retain at most
+    /// `min(prompt, budget)` tokens and generation appends `max_new` more,
+    /// ceiling-divided into pages. (Unstructured fragmentation can exceed
+    /// this; the reservation pass preempts when it does.)
+    fn needed_blocks(req: &Request, page_size: usize) -> usize {
+        let tokens = req.prompt.len().min(req.budget) + req.max_new_tokens;
+        (tokens + page_size - 1) / page_size
+    }
+
+    fn error_output(req: &Request) -> RequestOutput {
+        RequestOutput {
+            id: req.id,
+            tokens: Vec::new(),
+            finish: FinishReason::Error,
+            ttft_s: 0.0,
+            tpot_s: 0.0,
+            prompt_len: req.prompt.len(),
+            live_cache_tokens: 0,
+            preemptions: 0,
+            cache_stats: Default::default(),
+        }
+    }
+
+    /// One scheduling round: admit, reserve (preempting under pressure),
+    /// one batched decode for the whole running set, retire finished.
     pub fn step(&mut self) -> Result<StepReport> {
         if self.started.is_none() {
             self.started = Some(Instant::now());
         }
         let mut report = StepReport::default();
 
-        // --- admission: fill every free concurrency slot, gated on
-        // capacity. Admitting only one prefill per round (the old
-        // behaviour) throttled cold starts head-of-line for no reason:
-        // with C free slots and a deep queue it took C rounds — C decode
-        // sweeps of every running sequence — to saturate the batch. ---
+        // --- admission: fill every free concurrency slot, gated on the
+        // arena's real free-block count ---
         while self.running.len() < self.cfg.max_concurrency {
-            let Some((req, enq)) = self.queue.pop_front() else { break };
-            let needed_blocks =
-                (req.budget + 2 * self.cfg.page_size) / self.cfg.page_size;
-            if self.live_blocks() + needed_blocks > self.cfg.max_live_blocks {
-                // not enough global KV memory — requeue (head-of-line)
-                self.queue.push_front((req, enq));
+            let Some(entry) = self.queue.pop_front() else { break };
+            // The estimate is deliberately worst-case; budgeted policies
+            // evict during decode and can finish long generations inside a
+            // much smaller footprint, so an estimate beyond the whole
+            // arena gates on a fully idle arena rather than rejecting.
+            // Truly impossible prompts are rejected below, when their
+            // prefill runs the arena dry with nothing left to preempt.
+            let needed = Self::needed_blocks(&entry.req, self.cfg.page_size)
+                .min(self.arena.capacity());
+            if needed > self.arena.free_count() {
+                // not enough global KV memory yet — head-of-line wait
+                self.queue.push_front(entry);
                 break;
             }
-            match self.admit(req, enq) {
-                Ok(()) => report.prefilled += 1,
-                Err(e) => log::warn!("prefill failed: {e:#}"),
+            match self.admit(entry) {
+                AdmitOutcome::Admitted => report.prefilled += 1,
+                AdmitOutcome::OutOfMemory(entry) => {
+                    if self.running.is_empty() {
+                        // nothing in flight can ever free blocks for it:
+                        // the packed prompt simply does not fit the arena
+                        log::warn!(
+                            "req {}: prefill exceeds the {}-block arena — rejected",
+                            entry.req.id,
+                            self.arena.capacity()
+                        );
+                        self.finished.push(Self::error_output(&entry.req));
+                        report.rejected += 1;
+                        continue;
+                    }
+                    self.queue.push_front(entry);
+                    break;
+                }
+                AdmitOutcome::Failed => report.rejected += 1,
             }
         }
 
-        // --- decode: one token for every running sequence ---
+        // --- reservation + preemption: every sequence that needs a fresh
+        // block for this round claims it now, so the batched decode below
+        // cannot fail on memory ---
         let mut i = 0;
         while i < self.running.len() {
-            let t0 = Instant::now();
-            let fin = self.decode_one(i)?;
-            self.decode_step_s.add(t0.elapsed().as_secs_f64());
-            report.decoded_tokens += 1;
-            if fin {
-                let f = self.running.swap_remove(i);
-                self.retire(f);
-                report.finished += 1;
-            } else {
-                i += 1;
+            let outcome = B::cache_mut(&mut self.running[i].seq).try_ensure_block();
+            match outcome {
+                BlockAlloc::Ready => i += 1,
+                BlockAlloc::BucketFull => {
+                    if let Err(e) = self.backend.grow_bucket(&mut self.running[i].seq) {
+                        log::warn!(
+                            "req {}: bucket growth failed: {e:#}",
+                            self.running[i].req.id
+                        );
+                        let f = self.running.remove(i);
+                        self.retire(f, true);
+                        report.finished += 1;
+                    }
+                    // retry the same index (grown) or the shifted one
+                }
+                BlockAlloc::ArenaDry => {
+                    if self.running.len() == 1 {
+                        // no victim can free memory for this sequence
+                        log::warn!(
+                            "req {}: arena exhausted with no preemption victim",
+                            self.running[i].req.id
+                        );
+                        let f = self.running.remove(i);
+                        self.retire(f, true);
+                        report.finished += 1;
+                    } else {
+                        let victim = self.youngest_idx();
+                        self.preempt(victim);
+                        report.preempted += 1;
+                        i = 0; // indices shifted and capacity freed: rescan
+                    }
+                }
             }
+        }
+
+        // --- batched decode: ONE backend call for the whole running set ---
+        if self.running.is_empty() {
+            return Ok(report);
+        }
+        let t0 = Instant::now();
+        let toks: Vec<u32> = self
+            .running
+            .iter()
+            .map(|f| if f.fed < f.produced.len() { f.produced[f.fed] } else { f.next_token })
+            .collect();
+        let mut batch: Vec<(&mut B::Seq, u32)> = self
+            .running
+            .iter_mut()
+            .zip(toks.iter().copied())
+            .map(|(f, t)| (&mut f.seq, t))
+            .collect();
+        let results = self.backend.decode_batch(&mut batch);
+        drop(batch);
+        let round_s = t0.elapsed().as_secs_f64();
+        self.decode_step_s.add(round_s);
+        let per_seq_s = round_s / self.running.len() as f64;
+        debug_assert_eq!(results.len(), self.running.len(), "backend dropped entries");
+
+        let mut done: Vec<(usize, bool)> = Vec::new();
+        for (j, res) in results.into_iter().enumerate() {
+            let f = &mut self.running[j];
+            let tok = toks[j];
+            report.decoded_tokens += 1;
+            f.decode_seconds += per_seq_s;
+            match res {
+                Err(e) => {
+                    log::warn!("req {}: decode error: {e:#}", f.req.id);
+                    if f.fed >= f.produced.len() {
+                        f.produced.push(tok); // retire with what we have
+                    }
+                    done.push((j, true));
+                }
+                Ok(logits) => {
+                    let replaying = f.fed < f.produced.len();
+                    if replaying {
+                        f.fed += 1;
+                    } else {
+                        f.produced.push(tok);
+                        f.fed = f.produced.len();
+                        self.total_generated += 1;
+                    }
+                    f.next_token = argmax(&logits);
+                    if !replaying {
+                        let eos_hit = f.req.eos_token.map_or(false, |e| tok == e);
+                        if eos_hit || f.produced.len() >= f.req.max_new_tokens {
+                            done.push((j, false));
+                        }
+                    }
+                }
+            }
+        }
+        for &(j, errored) in done.iter().rev() {
+            let f = self.running.remove(j);
+            self.retire(f, errored);
+            report.finished += 1;
         }
         Ok(report)
     }
@@ -166,50 +406,101 @@ impl<'e> Scheduler<'e> {
         }
     }
 
-    fn admit(&mut self, req: Request, enqueued: Instant) -> Result<()> {
-        let policy = make_policy(&req.policy)?;
-        let (seq, logits) = self.runner.prefill(&req.prompt, req.budget, policy)?;
-        self.total_prompt_tokens += req.prompt.len() as u64;
-        let next = argmax(&logits);
-        self.running.push(Inflight {
-            req,
-            seq,
-            next_token: next,
-            enqueued,
-            first_token_at: None,
-            last_token_at: Instant::now(),
-            decode_seconds: 0.0,
-            produced: Vec::new(),
-        });
-        Ok(())
-    }
-
-    /// Decode one token for running[i]; returns true when finished.
-    fn decode_one(&mut self, i: usize) -> Result<bool> {
-        let f = &mut self.running[i];
-        let tok = f.next_token;
-        let t0 = Instant::now();
-        let out = match self.runner.decode_step(&mut f.seq, tok) {
-            Ok(o) => o,
+    fn admit(&mut self, entry: QueueEntry) -> AdmitOutcome {
+        let policy = match make_policy(&entry.req.policy) {
+            Ok(p) => p,
             Err(e) => {
-                log::warn!("req {}: decode error: {e:#}", f.req.id);
-                f.produced.push(tok);
-                return Ok(true); // retire with what we have
+                log::warn!("req {}: {e:#}", entry.req.id);
+                self.finished.push(Self::error_output(&entry.req));
+                return AdmitOutcome::Failed;
             }
         };
-        f.decode_seconds += t0.elapsed().as_secs_f64();
-        f.produced.push(tok);
-        if f.first_token_at.is_none() {
-            f.first_token_at = Some(Instant::now());
+        let prefilled = self
+            .backend
+            .prefill(&self.arena, &entry.req.prompt, entry.req.budget, policy);
+        match prefilled {
+            Ok(Prefilled::Ready { seq, logits }) => {
+                let now = Instant::now();
+                if entry.preemptions == 0 {
+                    // first admission only: recompute-on-readmission must
+                    // not double count useful prompt work (a victim can be
+                    // preempted before producing anything, so an empty
+                    // resume list does not imply a first admission)
+                    self.total_prompt_tokens += entry.req.prompt.len() as u64;
+                }
+                self.admit_counter += 1;
+                self.running.push(Inflight {
+                    next_token: argmax(&logits),
+                    // The first generated token exists the moment prefill
+                    // returns, so TTFT is measured to admission, not to
+                    // the end of the first decode step (matches vLLM).
+                    // A preempted request keeps its original first-token
+                    // time.
+                    first_token_at: Some(entry.first_token_at.unwrap_or(now)),
+                    enqueued: entry.enqueued,
+                    decode_seconds: entry.decode_seconds,
+                    produced: entry.resume,
+                    fed: 0,
+                    admit_serial: self.admit_counter,
+                    preemptions: entry.preemptions,
+                    req: entry.req,
+                    seq,
+                });
+                AdmitOutcome::Admitted
+            }
+            Ok(Prefilled::OutOfMemory) => AdmitOutcome::OutOfMemory(entry),
+            Err(e) => {
+                log::warn!("req {}: prefill failed: {e:#}", entry.req.id);
+                self.finished.push(Self::error_output(&entry.req));
+                AdmitOutcome::Failed
+            }
         }
-        f.last_token_at = Instant::now();
-        self.total_generated += 1;
-        f.next_token = argmax(&out.logits);
-        let eos_hit = f.req.eos_token.map_or(false, |e| tok == e);
-        Ok(eos_hit || f.produced.len() >= f.req.max_new_tokens)
     }
 
-    fn retire(&mut self, f: Inflight) {
+    /// Index of the most recently admitted running sequence — the
+    /// preemption victim (oldest sequences are closest to finishing, so
+    /// evicting the youngest wastes the least completed work).
+    fn youngest_idx(&self) -> usize {
+        self.running
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, f)| f.admit_serial)
+            .map(|(i, _)| i)
+            .expect("youngest_idx on empty running set")
+    }
+
+    /// Free a running sequence's blocks and requeue it for recompute.
+    fn preempt(&mut self, idx: usize) {
+        let f = self.running.remove(idx);
+        self.preemptions += 1;
+        log::info!(
+            "req {}: preempted under memory pressure (freeing {} blocks, {} tokens kept for replay)",
+            f.req.id,
+            B::cache(&f.seq).n_blocks(),
+            f.produced.len()
+        );
+        let Inflight {
+            req,
+            seq,
+            enqueued,
+            first_token_at,
+            decode_seconds,
+            produced,
+            preemptions,
+            ..
+        } = f;
+        drop(seq); // returns every block the victim held to the arena
+        self.queue.push_front(QueueEntry {
+            req,
+            enqueued,
+            resume: produced,
+            first_token_at,
+            decode_seconds,
+            preemptions: preemptions + 1,
+        });
+    }
+
+    fn retire(&mut self, f: Inflight<B::Seq>, errored: bool) {
         let ttft = f
             .first_token_at
             .map(|t| t.duration_since(f.enqueued).as_secs_f64())
@@ -222,13 +513,18 @@ impl<'e> Scheduler<'e> {
         };
         self.ttft.add(ttft * 1e3);
         self.tpot.add(tpot * 1e3);
-        let finish = if f.req.eos_token.is_some()
-            && f.produced.last() == f.req.eos_token.as_ref()
-        {
+        let finish = if errored {
+            FinishReason::Error
+        } else if f.req.eos_token.is_some() && f.produced.last() == f.req.eos_token.as_ref() {
             FinishReason::Eos
         } else {
             FinishReason::MaxTokens
         };
+        let cache = B::cache(&f.seq);
+        let live_cache_tokens = cache.live_tokens();
+        let mut cache_stats = cache.stats.clone();
+        cache_stats.preemptions = f.preemptions as u64;
+        cache_stats.peak_arena_blocks = self.arena.stats().peak_used as u64;
         self.finished.push(RequestOutput {
             id: f.req.id,
             tokens: f.produced,
@@ -236,8 +532,27 @@ impl<'e> Scheduler<'e> {
             ttft_s: ttft,
             tpot_s: tpot,
             prompt_len: f.req.prompt.len(),
-            live_cache_tokens: f.seq.cache.live_tokens(),
-            cache_stats: f.seq.cache.stats.clone(),
+            live_cache_tokens,
+            preemptions: f.preemptions,
+            cache_stats,
         });
+        // f.seq drops here, returning its blocks to the arena
+    }
+}
+
+impl Scheduler<crate::runtime::SimBackend> {
+    /// Scheduler over the always-built deterministic sim backend.
+    pub fn new_sim(cfg: SchedConfig) -> Self {
+        let backend = crate::runtime::SimBackend::new(cfg.page_size);
+        Self::with_backend(backend, cfg)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl<'e> Scheduler<crate::runtime::ModelRunner<'e>> {
+    /// Scheduler over the PJRT runtime (historical constructor).
+    pub fn new(engine: &'e crate::runtime::Engine, cfg: SchedConfig) -> Result<Self> {
+        let runner = crate::runtime::ModelRunner::new(engine, &cfg.model, cfg.page_size)?;
+        Ok(Self::with_backend(runner, cfg))
     }
 }

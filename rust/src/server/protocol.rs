@@ -82,6 +82,7 @@ impl WireResponse {
             ("tpot_ms", Json::num(o.tpot_s * 1e3)),
             ("prompt_len", Json::num(o.prompt_len as f64)),
             ("live_cache_tokens", Json::num(o.live_cache_tokens as f64)),
+            ("preemptions", Json::num(o.preemptions as f64)),
         ])
         .to_string()
     }
@@ -130,6 +131,7 @@ mod tests {
             tpot_s: 0.002,
             prompt_len: 5,
             live_cache_tokens: 64,
+            preemptions: 2,
             cache_stats: CacheStats::default(),
         };
         let line = WireResponse(out).to_line();
@@ -137,5 +139,6 @@ mod tests {
         assert_eq!(j.get("id").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("text").unwrap().as_str(), Some("hi"));
         assert_eq!(j.get("finish").unwrap().as_str(), Some("length"));
+        assert_eq!(j.get("preemptions").unwrap().as_usize(), Some(2));
     }
 }

@@ -6,7 +6,7 @@
 //! simulator knows every token's true attention mass, so we expose H2O as
 //! an *oracle upper bound*: heavy hitters + recent window, scored on truth.
 
-use crate::eviction::{top_k_ascending, Decision, EvictionPolicy, PrefillScores};
+use crate::eviction::{top_k_ascending, Decision, EvictionPolicy, KillList, PrefillScores};
 use crate::kvcache::SeqCache;
 
 pub struct H2oOracle {
@@ -58,7 +58,7 @@ impl EvictionPolicy for H2oOracle {
         let newest = cache.next_position().saturating_sub(1);
         let recent_cut = newest.saturating_sub((budget as f64 * self.recent_frac) as u32);
         let mut worst: Option<((usize, usize), f64)> = None;
-        let mut kills = Vec::new();
+        let mut kills = KillList::new();
         let mut over = live - budget;
         // kill the lowest-truth non-recent tokens
         let mut tokens: Vec<(usize, usize, u32)> = cache
@@ -72,7 +72,7 @@ impl EvictionPolicy for H2oOracle {
             if over == 0 {
                 break;
             }
-            kills.push((bi, off));
+            kills.push(bi, off);
             over -= 1;
         }
         let _ = &mut worst;

@@ -2,8 +2,9 @@
 //! allocations**: a counting global allocator wraps the system allocator
 //! (this test binary only), and the block-table / validity-mask accessors
 //! plus the structured `post_append` scan are asserted to allocate nothing
-//! per decode step. The unstructured scan is allowed exactly the one
-//! unavoidable allocation: the kill list carried inside `Decision`.
+//! per decode step. The unstructured scan is now also strictly
+//! allocation-free: the kill list rides inline in the returned `Decision`
+//! (`KillList` small-vec) instead of a per-step `Vec`.
 //!
 //! Kept in its own integration-test binary so the global allocator and the
 //! single-threaded measurement cannot interfere with other tests.
@@ -88,8 +89,8 @@ fn steady_state_decode_metadata_path_is_allocation_free() {
     assert_eq!(total_scan, 0, "paged post_append scan must not allocate");
 
     // --- unstructured (inverse_key_norm) path: the reusable scratch keeps
-    // the global scan allocation-free; only the kill list inside the
-    // returned Decision may allocate (one Vec per step) ---
+    // the global scan allocation-free, and the kill list is an inline
+    // small-vec — zero allocations per step, end to end ---
     let ikn = make_policy("inverse_key_norm").unwrap();
     let mut cache = SeqCache::new(bs, cap);
     let pre: Vec<(u32, [f32; 3])> =
@@ -119,9 +120,9 @@ fn steady_state_decode_metadata_path_is_allocation_free() {
             }
         }
     }
-    assert!(
-        worst_step <= 1,
-        "unstructured post_append must only allocate the Decision kill list, \
-         saw {worst_step} allocations in one step"
+    assert_eq!(
+        worst_step, 0,
+        "unstructured post_append must be allocation-free end to end \
+         (inline KillList), saw {worst_step} allocations in one step"
     );
 }

@@ -1,0 +1,261 @@
+//! Scheduler integration on the deterministic sim backend (no PJRT):
+//! batched decode rounds, O(1) shared-arena accounting, preemption under
+//! memory pressure with recompute-on-readmission.
+//!
+//! The sim backend's logits are a pure function of token history, so
+//! greedy outputs are bit-deterministic and independent of physical block
+//! layout — which is what lets these tests pin (a) the batched round loop
+//! against a per-sequence reference and (b) a contended, preempting run
+//! against an uncontended one.
+
+use paged_eviction::eviction::make_policy;
+use paged_eviction::kvcache::BlockManager;
+use paged_eviction::runtime::model_runner::argmax;
+use paged_eviction::runtime::SimBackend;
+use paged_eviction::scheduler::backend::{DecodeBackend, Prefilled};
+use paged_eviction::scheduler::{FinishReason, Request, SchedConfig, Scheduler};
+use paged_eviction::util::rng::Pcg32;
+
+fn cfg(page: usize, conc: usize, arena_blocks: usize) -> SchedConfig {
+    SchedConfig {
+        model: "sim".into(),
+        page_size: page,
+        max_concurrency: conc,
+        max_live_blocks: arena_blocks,
+    }
+}
+
+fn mk_req(id: u64, prompt: Vec<u32>, gen: usize, budget: usize, policy: &str) -> Request {
+    let mut r = Request::new(id, prompt, gen);
+    r.budget = budget;
+    r.policy = policy.to_string();
+    r
+}
+
+fn rand_prompt(rng: &mut Pcg32, len: usize) -> Vec<u32> {
+    (0..len).map(|_| rng.below(200)).collect()
+}
+
+/// Per-sequence reference: drive the backend directly, one sequence at a
+/// time, decoding through singleton `decode_batch` calls — the shape of
+/// the old scheduler loop.
+fn reference_tokens(page: usize, prompt: &[u32], gen: usize, budget: usize, policy: &str) -> Vec<u32> {
+    let arena = BlockManager::new(100_000);
+    let mut be = SimBackend::new(page);
+    let Prefilled::Ready { mut seq, logits } = be
+        .prefill(&arena, prompt, budget, make_policy(policy).unwrap())
+        .unwrap()
+    else {
+        panic!("reference prefill OOM")
+    };
+    let mut tok = argmax(&logits);
+    let mut out = Vec::new();
+    for _ in 0..gen {
+        out.push(tok);
+        while !seq.cache.ensure_block() {
+            be.grow_bucket(&mut seq).unwrap();
+        }
+        let mut batch = [(&mut seq, tok)];
+        let logits = be.decode_batch(&mut batch).pop().unwrap().unwrap();
+        tok = argmax(&logits);
+    }
+    out
+}
+
+#[test]
+fn batched_rounds_match_per_sequence_reference() {
+    // Mixed policies and budgets in one batch; ample arena so no
+    // preemption muddies the comparison.
+    let page = 4;
+    let mut rng = Pcg32::new(42);
+    let specs: Vec<(Vec<u32>, usize, usize, &str)> = vec![
+        (rand_prompt(&mut rng, 33), 12, 16, "paged"),
+        (rand_prompt(&mut rng, 48), 9, 24, "streaming"),
+        (rand_prompt(&mut rng, 21), 15, 16, "inverse_key_norm"),
+        (rand_prompt(&mut rng, 40), 7, 64, "full"),
+        (rand_prompt(&mut rng, 27), 11, 16, "keydiff"),
+    ];
+    let mut sched = Scheduler::new_sim(cfg(page, 8, 10_000));
+    for (i, (p, gen, budget, pol)) in specs.iter().enumerate() {
+        sched.submit(mk_req(i as u64 + 1, p.clone(), *gen, *budget, pol));
+    }
+    let mut outs = sched.run_to_completion().unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), specs.len());
+    assert_eq!(sched.preemptions, 0, "ample arena must not preempt");
+    for (o, (p, gen, budget, pol)) in outs.iter().zip(&specs) {
+        let want = reference_tokens(page, p, *gen, *budget, pol);
+        assert_eq!(
+            o.tokens, want,
+            "req {} ({pol}): batched rounds drifted from the per-sequence loop",
+            o.id
+        );
+        assert_eq!(o.finish, FinishReason::MaxTokens);
+    }
+    assert_eq!(sched.live_blocks(), 0, "retired sequences freed the arena");
+}
+
+/// Engineered exhaustion: two "full"-policy sequences whose caches grow
+/// every `page` steps, in an arena sized so mid-decode growth MUST run
+/// dry. The youngest is preempted, the oldest finishes, the victim is
+/// readmitted (recompute + replay) and must produce bit-identical tokens
+/// to an uncontended run.
+#[test]
+fn exhaustion_preempts_youngest_and_readmission_reproduces_tokens() {
+    let page = 4;
+    let gen = 24;
+    let mut rng = Pcg32::new(7);
+    let pa = rand_prompt(&mut rng, 64); // 16 full blocks at prefill
+    let pb = rand_prompt(&mut rng, 64);
+    // budget 16 understates the full policy's real footprint on purpose
+    // (the admission gate passes; reality exceeds it): prompt 64 tokens =
+    // 16 blocks each, + ceil(24/4) = 6 blocks of generation each. Arena of
+    // 36 admits both prefills (32 blocks) but cannot absorb 12 more.
+    let uncontended = {
+        let mut s = Scheduler::new_sim(cfg(page, 2, 10_000));
+        s.submit(mk_req(1, pa.clone(), gen, 16, "full"));
+        s.submit(mk_req(2, pb.clone(), gen, 16, "full"));
+        let mut outs = s.run_to_completion().unwrap();
+        assert_eq!(s.preemptions, 0);
+        outs.sort_by_key(|o| o.id);
+        outs
+    };
+
+    let mut sched = Scheduler::new_sim(cfg(page, 2, 36));
+    sched.submit(mk_req(1, pa, gen, 16, "full"));
+    sched.submit(mk_req(2, pb, gen, 16, "full"));
+    let mut outs = sched.run_to_completion().unwrap();
+    outs.sort_by_key(|o| o.id);
+
+    assert!(
+        sched.preemptions >= 1,
+        "a 36-block arena cannot hold two growing 22-block sequences"
+    );
+    assert_eq!(outs.len(), 2);
+    for (o, want) in outs.iter().zip(&uncontended) {
+        assert_eq!(o.id, want.id);
+        assert_eq!(o.finish, FinishReason::MaxTokens, "req {}", o.id);
+        assert_eq!(
+            o.tokens, want.tokens,
+            "req {}: preempt -> requeue -> readmit must reproduce the uncontended output",
+            o.id
+        );
+    }
+    // the youngest (req 2) was the victim; the elder ran through
+    assert_eq!(outs[0].preemptions, 0, "oldest sequence is never the victim");
+    assert!(outs[1].preemptions >= 1, "youngest sequence was preempted");
+    assert_eq!(outs[1].cache_stats.preemptions, outs[1].preemptions as u64);
+    assert!(
+        sched.arena().stats().peak_used <= 36,
+        "arena capacity is a hard bound, not an estimate"
+    );
+    assert_eq!(sched.live_blocks(), 0);
+}
+
+#[test]
+fn preemptions_surface_in_step_report() {
+    let page = 4;
+    let mut rng = Pcg32::new(9);
+    let mut sched = Scheduler::new_sim(cfg(page, 2, 36));
+    sched.submit(mk_req(1, rand_prompt(&mut rng, 64), 24, 16, "full"));
+    sched.submit(mk_req(2, rand_prompt(&mut rng, 64), 24, 16, "full"));
+    let mut preempted = 0;
+    let mut decoded = 0;
+    while !sched.is_idle() {
+        let rep = sched.step().unwrap();
+        preempted += rep.preempted;
+        decoded += rep.decoded_tokens;
+    }
+    assert!(preempted >= 1, "StepReport must surface preemptions");
+    assert!(decoded > 2 * 24, "replay decode work is reported too");
+    assert_eq!(sched.preemptions, preempted as u64);
+}
+
+#[test]
+fn zero_budget_requests_are_rejected_not_floored() {
+    let mut sched = Scheduler::new_sim(cfg(4, 2, 64));
+    sched.submit(mk_req(1, vec![1, 2, 3], 4, 0, "paged"));
+    let outs = sched.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].finish, FinishReason::Error);
+    assert!(outs[0].tokens.is_empty());
+}
+
+#[test]
+fn sub_page_budgets_are_clamped_to_one_page() {
+    let mut rng = Pcg32::new(3);
+    let mut sched = Scheduler::new_sim(cfg(4, 2, 64));
+    sched.submit(mk_req(1, rand_prompt(&mut rng, 12), 4, 1, "paged"));
+    let outs = sched.run_to_completion().unwrap();
+    assert_eq!(outs[0].finish, FinishReason::MaxTokens);
+    assert_eq!(outs[0].tokens.len(), 4);
+}
+
+#[test]
+fn impossible_requests_error_instead_of_livelocking() {
+    // The packed prompt (min(400, 400) = 400 tokens = 100 blocks) can
+    // never fit a 16-block arena. The estimate gate admits it once the
+    // arena is idle, prefill reports OutOfMemory, and — with nothing
+    // running that could ever free blocks — the scheduler must reject it
+    // with an error instead of requeueing forever.
+    let mut rng = Pcg32::new(4);
+    let mut sched = Scheduler::new_sim(cfg(4, 2, 16));
+    sched.submit(mk_req(1, rand_prompt(&mut rng, 400), 100, 400, "paged"));
+    let outs = sched.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].finish, FinishReason::Error);
+}
+
+#[test]
+fn long_generation_with_small_budget_is_served_not_rejected() {
+    // Worst-case estimate ceil((16 + 120) / 4) = 34 blocks exceeds the
+    // 20-block arena, but the paged policy evicts during decode and never
+    // actually needs more than ~budget/B + slack blocks — the request
+    // must run to completion (gated on an idle arena), not error out.
+    let mut rng = Pcg32::new(8);
+    let mut sched = Scheduler::new_sim(cfg(4, 2, 20));
+    sched.submit(mk_req(1, rand_prompt(&mut rng, 32), 120, 16, "paged"));
+    let outs = sched.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].finish, FinishReason::MaxTokens);
+    assert_eq!(outs[0].tokens.len(), 120);
+    assert_eq!(outs[0].preemptions, 0, "bounded footprint never preempts");
+}
+
+#[test]
+fn ttft_is_recorded_at_admission_even_for_single_token_outputs() {
+    let mut rng = Pcg32::new(5);
+    let mut sched = Scheduler::new_sim(cfg(4, 2, 64));
+    sched.submit(mk_req(1, rand_prompt(&mut rng, 16), 1, 16, "paged"));
+    let outs = sched.run_to_completion().unwrap();
+    assert_eq!(outs[0].tokens.len(), 1);
+    assert!(
+        outs[0].ttft_s > 0.0,
+        "prefill produced the first token, so TTFT must be positive"
+    );
+}
+
+#[test]
+fn admission_gates_on_real_arena_capacity() {
+    // Arena of 12 blocks; each request estimates ceil((16 + 24) / 4) = 10
+    // blocks. After the first admission (4 blocks held) only 8 are free,
+    // so the second request must wait head-of-line: the gate reads the
+    // arena's real free count, not a per-sequence scan.
+    let page = 4;
+    let mut rng = Pcg32::new(6);
+    let mut sched = Scheduler::new_sim(cfg(page, 4, 12));
+    for i in 0..3 {
+        sched.submit(mk_req(i + 1, rand_prompt(&mut rng, 24), 24, 16, "paged"));
+    }
+    let rep = sched.step().unwrap();
+    assert_eq!(rep.prefilled, 1, "only one request fits the arena at a time");
+    assert!(sched.live_blocks() > 0);
+    assert!(sched.live_blocks() <= 12);
+    let outs = sched.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 3);
+    for o in &outs {
+        assert_eq!(o.finish, FinishReason::MaxTokens, "req {}", o.id);
+        assert_eq!(o.tokens.len(), 24);
+    }
+    assert_eq!(sched.live_blocks(), 0);
+}

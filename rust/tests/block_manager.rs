@@ -1,0 +1,167 @@
+//! Property tests for the shared `BlockManager` arena under concurrent
+//! multi-tenant use: random alloc / evict / kill / grow / drop traffic
+//! across N `SeqCache` tenants must never double-free, never exceed
+//! capacity, and keep per-tenant ownership exactly consistent with the
+//! arena's O(1) global accounting.
+
+use paged_eviction::eviction::make_policy;
+use paged_eviction::kvcache::{BlockAlloc, BlockManager, SeqCache};
+use paged_eviction::util::propcheck;
+use paged_eviction::util::rng::Pcg32;
+
+fn sc(rng: &mut Pcg32) -> [f32; 3] {
+    [rng.f32(), rng.f32(), rng.f32()]
+}
+
+#[test]
+fn property_multi_tenant_arena_stays_consistent() {
+    propcheck::quick("arena-multi-tenant", |rng: &mut Pcg32| {
+        let bs = *rng.choose(&[2usize, 4, 8]);
+        let capacity = 6 + rng.usize_below(26);
+        let arena = BlockManager::new(capacity);
+        let n_caches = 2 + rng.usize_below(4);
+        let mut caches: Vec<Option<SeqCache>> = (0..n_caches)
+            .map(|_| Some(SeqCache::new_shared(bs, capacity, &arena)))
+            .collect();
+        // seed each tenant with a small prefill if the arena allows
+        for slot in caches.iter_mut() {
+            let c = slot.as_mut().unwrap();
+            let want = 1 + rng.usize_below(2 * bs);
+            let toks: Vec<(u32, [f32; 3])> =
+                (0..want as u32).map(|i| (i, [rng.f32(); 3])).collect();
+            if c.try_load_prefill(&toks, want as u32).is_err() {
+                *slot = None; // arena too small for this tenant — drop it
+            }
+        }
+
+        let check_all = |arena: &BlockManager,
+                         caches: &[Option<SeqCache>]|
+         -> Result<(), String> {
+            let held: usize = caches
+                .iter()
+                .flatten()
+                .map(|c| c.n_blocks())
+                .sum();
+            let stats = arena.stats();
+            if stats.used != held {
+                return Err(format!("arena used {} != tenants hold {held}", stats.used));
+            }
+            if stats.used + arena.free_count() != stats.capacity {
+                return Err("used + free != capacity".into());
+            }
+            if stats.peak_used < stats.used || stats.peak_used > stats.capacity {
+                return Err(format!(
+                    "peak {} outside [used {}, capacity {}]",
+                    stats.peak_used, stats.used, stats.capacity
+                ));
+            }
+            for c in caches.iter().flatten() {
+                c.check_invariants()?;
+                if arena.owned_by(c.seq_id()) != c.n_blocks() {
+                    return Err("per-seq ownership drifted".into());
+                }
+            }
+            Ok(())
+        };
+
+        for _ in 0..150 {
+            let pick = rng.usize_below(caches.len());
+            match rng.below(10) {
+                // append a token (allocating a block when needed)
+                0..=5 => {
+                    let outcome = caches[pick].as_mut().map(|c| c.try_ensure_block());
+                    match outcome {
+                        Some(BlockAlloc::Ready) => {
+                            let s = sc(rng);
+                            caches[pick].as_mut().unwrap().append(s);
+                        }
+                        Some(BlockAlloc::BucketFull) => {
+                            let c = caches[pick].as_mut().unwrap();
+                            let nb = c.capacity_blocks() + 2;
+                            c.grow(nb); // bucket only; arena unchanged
+                        }
+                        Some(BlockAlloc::ArenaDry) => {
+                            if arena.free_count() != 0 {
+                                return Err("ArenaDry with free blocks".into());
+                            }
+                            if rng.below(2) == 0 {
+                                // preemption stand-in: drop a tenant
+                                let victim = rng.usize_below(caches.len());
+                                let before = arena.used();
+                                let freed = caches[victim]
+                                    .as_ref()
+                                    .map(|c| c.n_blocks())
+                                    .unwrap_or(0);
+                                caches[victim] = None;
+                                if arena.used() != before - freed {
+                                    return Err("drop freed wrong count".into());
+                                }
+                            }
+                        }
+                        None => {}
+                    }
+                }
+                // structured eviction
+                6..=7 => {
+                    if let Some(c) = caches[pick].as_mut() {
+                        if c.n_blocks() > 1 {
+                            let idx = rng.usize_below(c.n_blocks() - 1);
+                            c.evict_block(idx);
+                        }
+                    }
+                }
+                // unstructured kill via a real policy decision
+                _ => {
+                    if let Some(c) = caches[pick].as_mut() {
+                        if c.live_tokens() > 2 {
+                            let p = make_policy("inverse_key_norm").unwrap();
+                            if let paged_eviction::eviction::Decision::KillTokens(ts) =
+                                p.post_append(c, c.live_tokens() - 1)
+                            {
+                                for (bi, off) in ts {
+                                    c.kill_token(bi, off);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            check_all(&arena, &caches)?;
+        }
+
+        // drop everything: the arena must drain to empty
+        for slot in caches.iter_mut() {
+            *slot = None;
+        }
+        if arena.used() != 0 {
+            return Err(format!("leak: {} blocks after dropping all tenants", arena.used()));
+        }
+        if arena.free_count() != arena.capacity() {
+            return Err("free list incomplete after drain".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn arena_capacity_is_a_hard_bound() {
+    let arena = BlockManager::new(5);
+    let mut a = SeqCache::new_shared(2, 16, &arena);
+    let mut b = SeqCache::new_shared(2, 16, &arena);
+    let mut allocated = 0;
+    loop {
+        let c = if allocated % 2 == 0 { &mut a } else { &mut b };
+        match c.try_ensure_block() {
+            BlockAlloc::Ready => {
+                c.append([0.5; 3]);
+                c.append([0.5; 3]); // fill the page (bs = 2)
+                allocated += 1;
+            }
+            BlockAlloc::ArenaDry => break,
+            BlockAlloc::BucketFull => unreachable!("bucket 16 > capacity 5"),
+        }
+    }
+    assert_eq!(allocated, 5, "exactly capacity blocks were ever handed out");
+    assert_eq!(arena.used(), 5);
+    assert_eq!(arena.stats().peak_used, 5);
+}
