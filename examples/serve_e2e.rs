@@ -42,6 +42,7 @@ fn main() -> Result<()> {
         page_size: 16,
         max_concurrency: args.get_usize("concurrency"),
         max_live_blocks: 4096,
+        ..SchedConfig::default()
     };
     let (handle, _join) = spawn_engine(args.get("artifacts").into(), cfg)?;
     let listener = TcpListener::bind("127.0.0.1:0")?;

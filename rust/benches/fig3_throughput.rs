@@ -24,8 +24,14 @@ struct Cell {
     tok_s: f64,
     tpot_ms: f64,
     updates_per_token: f64,
-    /// Sequences preempted (shared arena ran dry mid-decode).
+    /// Sequences preempted (watermark crossed or shared arena ran dry).
     preemptions: u64,
+    /// Preemption readmissions served by restoring a swap-to-host
+    /// snapshot; `preemptions - swap_restores` went the recompute path.
+    /// (The PJRT backend opts out of snapshots today, so this column
+    /// reads 0 until the device-resident cache lands — the sim-backed
+    /// tests in tests/swap_preempt.rs exercise the live path.)
+    swap_restores: u64,
     /// High-water fragmented pages across the cell's sequences
     /// (`CacheStats::peak_partial_blocks`).
     partial_blocks_max: usize,
@@ -34,6 +40,7 @@ struct Cell {
     peak_blocks_max: usize,
 }
 
+#[allow(clippy::too_many_arguments)] // bench driver: one flag per knob
 fn run_cell(
     engine: &Engine,
     model: &str,
@@ -44,6 +51,7 @@ fn run_cell(
     gen: usize,
     concurrency: usize,
     arena_blocks: usize,
+    swap_bytes: usize,
 ) -> anyhow::Result<Cell> {
     let mut sched = Scheduler::new(
         engine,
@@ -52,6 +60,8 @@ fn run_cell(
             page_size: 16,
             max_concurrency: concurrency,
             max_live_blocks: arena_blocks,
+            swap_bytes,
+            ..SchedConfig::default()
         },
     )?;
     let mut rng = Pcg32::with_stream(99, budget as u64);
@@ -81,6 +91,7 @@ fn run_cell(
         tpot_ms: if tpot.is_empty() { 0.0 } else { tpot.pctl(50.0) },
         updates_per_token: updates as f64 / written.max(1) as f64,
         preemptions: sched.preemptions,
+        swap_restores: sched.swap_restores,
         partial_blocks_max: partial_max,
         peak_blocks_max: peak_blocks,
     })
@@ -97,7 +108,9 @@ fn main() {
             .opt("gen", "256", "output tokens per request")
             .opt("concurrency", "2", "concurrent sequences")
             .opt("arena-blocks", "100000", "shared arena capacity in blocks \
-                 (shrink to exercise preemption under memory pressure)"),
+                 (shrink to exercise preemption under memory pressure)")
+            .opt("swap-bytes", "67108864", "host swap pool byte cap \
+                 (0 = recompute-only preemption)"),
     );
     let engine = Engine::new(artifacts_dir()).expect("make artifacts first");
     let models = args.get_list("models");
@@ -108,6 +121,7 @@ fn main() {
     let gen = args.get_usize("gen");
     let conc = args.get_usize("concurrency");
     let arena_blocks = args.get_usize("arena-blocks");
+    let swap_bytes = args.get_usize("swap-bytes");
 
     println!(
         "setup: {n_req} reqs x (in {plen} + out {gen}), {conc} concurrent, page 16 \
@@ -123,7 +137,7 @@ fn main() {
         for (policy, budget, wgen) in
             [("full", 100_000usize, gen), ("paged", budgets[0], 2 * 16)]
         {
-            let _ = run_cell(&engine, model, policy, budget, 1, plen, wgen, 1, 100_000)
+            let _ = run_cell(&engine, model, policy, budget, 1, plen, wgen, 1, 100_000, 0)
                 .expect("warmup failed");
         }
         section(&format!("Fig 3 ({model}): throughput (tok/s) vs budget"));
@@ -134,6 +148,7 @@ fn main() {
         header.push("partial@mid".into());
         header.push("blocks@mid".into());
         header.push("preempt".into());
+        header.push("swap".into());
         let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
         let mut full_mid = 0.0;
         let mut paged_mid = 0.0;
@@ -148,10 +163,12 @@ fn main() {
                 // noisy-testbed protocol
                 let a = run_cell(
                     &engine, model, policy, budget, n_req, plen, gen, conc, arena_blocks,
+                    swap_bytes,
                 )
                 .expect("cell failed");
                 let b = run_cell(
                     &engine, model, policy, budget, n_req, plen, gen, conc, arena_blocks,
+                    swap_bytes,
                 )
                 .expect("cell failed");
                 let cell = if a.tok_s >= b.tok_s { a } else { b };
@@ -173,6 +190,7 @@ fn main() {
             row.push(format!("{}", mid.partial_blocks_max));
             row.push(format!("{}", mid.peak_blocks_max));
             row.push(format!("{}", mid.preemptions));
+            row.push(format!("{}", mid.swap_restores));
             t.row(row);
         }
         print!("{}", t.render());

@@ -119,6 +119,7 @@ fn throughput_track(args: &paged_eviction::util::args::Args, pages: &[usize]) {
                         page_size: page,
                         max_concurrency: 5,
                         max_live_blocks: 100_000,
+                        ..SchedConfig::default()
                     },
                 )
                 .expect("scheduler");

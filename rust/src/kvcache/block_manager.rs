@@ -63,6 +63,12 @@ struct Inner {
     allocs: u64,
     frees: u64,
     grows: u64,
+    /// Admission watermark as a fraction of capacity (see
+    /// [`BlockManager::set_watermarks`]). Stored as fractions so `grow`
+    /// rescales the block thresholds automatically.
+    low_frac: f64,
+    /// Preemption watermark as a fraction of capacity.
+    high_frac: f64,
 }
 
 impl Inner {
@@ -72,6 +78,14 @@ impl Inner {
 
     fn used(&self) -> usize {
         self.capacity() - self.free.len()
+    }
+
+    fn low_blocks(&self) -> usize {
+        (self.low_frac * self.capacity() as f64).floor() as usize
+    }
+
+    fn high_blocks(&self) -> usize {
+        (self.high_frac * self.capacity() as f64).floor() as usize
     }
 }
 
@@ -91,6 +105,11 @@ impl BlockManager {
             allocs: 0,
             frees: 0,
             grows: 0,
+            // Default watermarks sit at capacity: admission gates on raw
+            // physical headroom and proactive preemption never fires —
+            // the historical hard-capacity semantics.
+            low_frac: 1.0,
+            high_frac: 1.0,
         })))
     }
 
@@ -197,6 +216,43 @@ impl BlockManager {
         }
         g.owner.resize(new_capacity, NO_OWNER);
         g.grows += 1;
+    }
+
+    /// Configure the admission/preemption hysteresis band as fractions of
+    /// capacity (rescaled automatically on `grow`). The scheduler admits a
+    /// sequence only while usage would stay at or below the LOW mark and
+    /// preempts once usage exceeds the HIGH mark; the gap between them
+    /// absorbs decode-time growth so optimistic admission cannot thrash.
+    pub fn set_watermarks(&self, low: f64, high: f64) {
+        assert!(
+            low > 0.0 && low <= high && high <= 1.0,
+            "watermarks must satisfy 0 < low <= high <= 1 (got {low}, {high})"
+        );
+        let mut g = self.inner();
+        g.low_frac = low;
+        g.high_frac = high;
+    }
+
+    /// `(low, high)` watermarks in blocks at the current capacity.
+    pub fn watermark_blocks(&self) -> (usize, usize) {
+        let g = self.inner();
+        (g.low_blocks(), g.high_blocks())
+    }
+
+    /// True when allocating `incoming` more blocks keeps usage at or below
+    /// the low watermark — the scheduler's admission gate. With default
+    /// watermarks (1.0) this degenerates to "fits physical capacity".
+    pub fn below_low_watermark(&self, incoming: usize) -> bool {
+        let g = self.inner();
+        g.used() + incoming <= g.low_blocks()
+    }
+
+    /// True when usage exceeds the high watermark — the scheduler's
+    /// proactive preemption trigger (reclaims the optimism the low-mark
+    /// admission gate extends). Never true with default watermarks.
+    pub fn above_high_watermark(&self) -> bool {
+        let g = self.inner();
+        g.used() > g.high_blocks()
     }
 
     pub fn capacity(&self) -> usize {
@@ -312,6 +368,52 @@ mod tests {
         let b = m.register();
         let p = m.alloc(a).unwrap();
         m.release(b, p);
+    }
+
+    #[test]
+    fn default_watermarks_are_hard_capacity() {
+        let m = BlockManager::new(10);
+        assert_eq!(m.watermark_blocks(), (10, 10));
+        let s = m.register();
+        for _ in 0..10 {
+            m.alloc(s).unwrap();
+        }
+        assert!(!m.above_high_watermark(), "high mark at capacity never trips");
+        assert!(m.below_low_watermark(0));
+        assert!(!m.below_low_watermark(1));
+    }
+
+    #[test]
+    fn watermark_band_gates_and_trips() {
+        let m = BlockManager::new(20);
+        m.set_watermarks(0.5, 0.75); // low = 10 blocks, high = 15 blocks
+        assert_eq!(m.watermark_blocks(), (10, 15));
+        let s = m.register();
+        for _ in 0..8 {
+            m.alloc(s).unwrap();
+        }
+        assert!(m.below_low_watermark(2), "8 + 2 == low");
+        assert!(!m.below_low_watermark(3), "8 + 3 crosses the low mark");
+        assert!(!m.above_high_watermark());
+        for _ in 0..8 {
+            m.alloc(s).unwrap();
+        }
+        assert!(m.above_high_watermark(), "16 > high mark 15");
+    }
+
+    #[test]
+    fn watermarks_rescale_on_grow() {
+        let m = BlockManager::new(10);
+        m.set_watermarks(0.5, 0.8);
+        assert_eq!(m.watermark_blocks(), (5, 8));
+        m.grow(20);
+        assert_eq!(m.watermark_blocks(), (10, 16), "fractions track capacity");
+    }
+
+    #[test]
+    #[should_panic(expected = "watermarks must satisfy")]
+    fn inverted_watermarks_rejected() {
+        BlockManager::new(4).set_watermarks(0.9, 0.5);
     }
 
     #[test]

@@ -23,5 +23,5 @@ pub mod stats;
 
 pub use block::Block;
 pub use block_manager::{ArenaStats, BlockManager, SeqId};
-pub use seq_cache::{BlockAlloc, SeqCache, SCORE_CHANNELS};
+pub use seq_cache::{BlockAlloc, KvSnapshot, SeqCache, SCORE_CHANNELS};
 pub use stats::CacheStats;

@@ -71,6 +71,60 @@ impl DirtyRange {
     }
 }
 
+/// Host-side snapshot of a sequence's complete cache state — block
+/// contents (per-token scores, positions, liveness bitmaps), the
+/// incrementally maintained block table and validity mask, the local
+/// free-slot list and the cache counters. Captured by
+/// [`SeqCache::snapshot`] when the scheduler swaps a preemption victim to
+/// host instead of discarding it, and rebuilt by
+/// [`SeqCache::restore_from`] against fresh arena pages on readmission.
+///
+/// The snapshot never touches the device path: it holds exactly the
+/// host-side metadata the eviction machinery runs on. Local device slots
+/// (`Block::phys`) are preserved verbatim, so the restored block table and
+/// mask are bit-identical to the suspended ones; only the global arena
+/// pages (`Block::arena_slot`) are reassigned at restore time.
+#[derive(Debug, Clone)]
+pub struct KvSnapshot {
+    block_size: usize,
+    bucket_blocks: usize,
+    blocks: Vec<Block>,
+    local_free: Vec<usize>,
+    next_position: u32,
+    partial_count: usize,
+    table: Vec<i32>,
+    mask: Vec<f32>,
+    stats: CacheStats,
+}
+
+impl KvSnapshot {
+    /// Arena blocks a restore will claim.
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn bucket_blocks(&self) -> usize {
+        self.bucket_blocks
+    }
+
+    /// Approximate host bytes this snapshot pins — what a bounded swap
+    /// pool accounts. Dominated by the per-block token payload (3 score
+    /// channels + positions) and the serialization buffers.
+    pub fn host_bytes(&self) -> usize {
+        let per_block = std::mem::size_of::<Block>()
+            + self.block_size * (SCORE_CHANNELS + 1) * std::mem::size_of::<f32>();
+        std::mem::size_of::<Self>()
+            + self.blocks.len() * per_block
+            + self.table.len() * std::mem::size_of::<i32>()
+            + self.mask.len() * std::mem::size_of::<f32>()
+            + self.local_free.len() * std::mem::size_of::<usize>()
+    }
+}
+
 /// Why an append cannot proceed right now (see
 /// [`SeqCache::try_ensure_block`]). The two failure modes demand different
 /// remedies: a full bucket needs the runtime to migrate the sequence to a
@@ -560,6 +614,65 @@ impl SeqCache {
         out
     }
 
+    // -- swap-to-host --------------------------------------------------------
+
+    /// Capture the full host-side cache state for swap-to-host preemption.
+    /// Pure copy: the cache keeps running (or is dropped by the caller,
+    /// returning its arena pages) and the snapshot stays valid either way.
+    pub fn snapshot(&self) -> KvSnapshot {
+        KvSnapshot {
+            block_size: self.block_size,
+            bucket_blocks: self.bucket_blocks,
+            blocks: self.blocks.clone(),
+            local_free: self.local_free.clone(),
+            next_position: self.next_position,
+            partial_count: self.partial_count,
+            table: self.table.clone(),
+            mask: self.mask.clone(),
+            stats: self.stats.clone(),
+        }
+    }
+
+    /// Rebuild a cache from a snapshot, claiming fresh pages from `arena`
+    /// (one per snapshotted block). Local device slots are preserved, so
+    /// the restored block table / validity mask are bit-identical to the
+    /// suspended cache's; both are marked fully dirty because a restored
+    /// sequence's device buffers need a complete upload.
+    ///
+    /// Fails with [`BlockAlloc::ArenaDry`] — claiming nothing — when the
+    /// arena cannot hold the snapshot right now; the caller retries later
+    /// or falls back to recompute.
+    pub fn restore_from(snap: &KvSnapshot, arena: &BlockManager) -> Result<SeqCache, BlockAlloc> {
+        let seq = arena.register();
+        let mut blocks = snap.blocks.clone();
+        for blk in blocks.iter_mut() {
+            match arena.alloc(seq) {
+                Some(page) => blk.arena_slot = page,
+                None => {
+                    // unregister releases every page claimed so far
+                    arena.unregister(seq);
+                    return Err(BlockAlloc::ArenaDry);
+                }
+            }
+        }
+        Ok(SeqCache {
+            block_size: snap.block_size,
+            mgr: arena.clone(),
+            seq,
+            bucket_blocks: snap.bucket_blocks,
+            owns_arena: false,
+            local_free: snap.local_free.clone(),
+            blocks,
+            next_position: snap.next_position,
+            partial_count: snap.partial_count,
+            table: snap.table.clone(),
+            mask: snap.mask.clone(),
+            table_dirty: DirtyRange::full(snap.table.len()),
+            mask_dirty: DirtyRange::full(snap.mask.len()),
+            stats: snap.stats.clone(),
+        })
+    }
+
     /// Consistency invariants — called by tests and debug assertions.
     pub fn check_invariants(&self) -> Result<(), String> {
         // device slots unique within the bucket; arena pages unique and
@@ -869,6 +982,87 @@ mod tests {
         assert_eq!(arena.used(), 0, "partially loaded blocks returned on drop");
     }
 
+    /// The serialization-relevant state two caches must agree on for the
+    /// decode graph (and the policies) to behave identically.
+    fn assert_same_state(a: &SeqCache, b: &SeqCache) {
+        let nb = a.capacity_blocks();
+        assert_eq!(b.capacity_blocks(), nb);
+        assert_eq!(a.block_table(nb), b.block_table(nb));
+        assert_eq!(a.valid_mask(nb), b.valid_mask(nb));
+        assert_eq!(a.live_token_list(), b.live_token_list());
+        assert_eq!(a.next_position(), b.next_position());
+        assert_eq!(a.partial_blocks(), b.partial_blocks());
+        assert_eq!(a.stats, b.stats);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_preserves_state_and_arena_accounting() {
+        let arena = BlockManager::new(32);
+        let mut c = SeqCache::new_shared(4, 8, &arena);
+        c.load_prefill(&(0..14).map(|i| (i, sc(i as f32))).collect::<Vec<_>>(), 14);
+        c.kill_token(1, 2); // fragment a page so the mask is non-trivial
+        c.evict_block(0); // shift the table so phys != logical
+        assert!(c.ensure_block());
+        c.append(sc(9.0));
+        let snap = c.snapshot();
+        assert_eq!(snap.n_blocks(), c.n_blocks());
+        assert!(snap.host_bytes() > 0);
+
+        let used_before = arena.used();
+        let r = SeqCache::restore_from(&snap, &arena).expect("arena has room");
+        assert_eq!(arena.used(), used_before + snap.n_blocks());
+        r.check_invariants().unwrap();
+        assert_same_state(&c, &r);
+        // restored buffers need a full device upload
+        assert_eq!(r.table_dirty(), Some(0..r.capacity_blocks()));
+        drop(r);
+        assert_eq!(arena.used(), used_before, "restored blocks return on drop");
+        // the original cache is untouched by snapshotting
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn restore_from_dry_arena_claims_nothing() {
+        let arena = BlockManager::new(8);
+        let mut c = SeqCache::new_shared(4, 8, &arena);
+        c.load_prefill(&(0..20).map(|i| (i, sc(0.0))).collect::<Vec<_>>(), 20);
+        let snap = c.snapshot();
+        // 5 blocks held, 3 free: a second copy cannot fit
+        assert_eq!(
+            SeqCache::restore_from(&snap, &arena).err(),
+            Some(BlockAlloc::ArenaDry)
+        );
+        assert_eq!(arena.used(), 5, "failed restore leaks no blocks");
+        assert_eq!(arena.stats().sequences, 1, "failed restore leaks no seq id");
+        // after the original drops (preemption), the restore succeeds
+        drop(c);
+        let r = SeqCache::restore_from(&snap, &arena).expect("now it fits");
+        r.check_invariants().unwrap();
+        assert_eq!(r.live_tokens(), 20);
+    }
+
+    #[test]
+    fn restored_cache_continues_decoding_identically() {
+        let arena = BlockManager::new(64);
+        let mut c = SeqCache::new_shared(4, 12, &arena);
+        c.load_prefill(&(0..10).map(|i| (i, sc(i as f32))).collect::<Vec<_>>(), 10);
+        let snap = c.snapshot();
+        let mut r = SeqCache::restore_from(&snap, &arena).unwrap();
+        // identical mutation streams must keep the two caches identical
+        for step in 0..20u32 {
+            for cache in [&mut c, &mut r] {
+                assert!(cache.ensure_block());
+                cache.append(sc(step as f32));
+                if step % 5 == 4 {
+                    cache.kill_token(1, (step as usize / 5) % 4);
+                }
+            }
+            assert_same_state(&c, &r);
+        }
+        c.check_invariants().unwrap();
+        r.check_invariants().unwrap();
+    }
+
     #[test]
     fn property_random_op_sequences_keep_invariants() {
         propcheck::quick("seqcache-invariants", |rng| {
@@ -905,7 +1099,7 @@ mod tests {
                         }
                     }
                 }
-                c.check_invariants().map_err(|e| e)?;
+                c.check_invariants()?;
                 // serialization shapes must always be consistent
                 let nb = c.capacity_blocks();
                 let t = c.block_table(nb);

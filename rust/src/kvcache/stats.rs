@@ -25,9 +25,14 @@ pub struct CacheStats {
     /// Limitation 1 quantity at its worst point, not just at retire time
     /// (Fig. 3's `partial@mid` column).
     pub peak_partial_blocks: u64,
-    /// Times this sequence was preempted (blocks freed, recomputed on
-    /// readmission) because the shared arena ran dry.
+    /// Times this sequence was preempted (blocks freed under memory
+    /// pressure) — counts BOTH readmission paths; `swaps` is the subset
+    /// that restored from a host snapshot instead of recomputing.
     pub preemptions: u64,
+    /// Times this sequence was readmitted by restoring a swap-to-host
+    /// snapshot (no prompt recompute, no token replay). Always
+    /// `<= preemptions`; the difference is recompute readmissions.
+    pub swaps: u64,
     /// Server-lifetime high-water mark of the WHOLE shared arena's
     /// allocated blocks, snapshotted when this sequence retired (folded in
     /// from `BlockManager::stats`) — the server-wide physical footprint,
@@ -47,6 +52,7 @@ impl CacheStats {
         self.peak_live_blocks = self.peak_live_blocks.max(o.peak_live_blocks);
         self.peak_partial_blocks = self.peak_partial_blocks.max(o.peak_partial_blocks);
         self.preemptions += o.preemptions;
+        self.swaps += o.swaps;
         self.peak_arena_blocks = self.peak_arena_blocks.max(o.peak_arena_blocks);
     }
 
@@ -82,6 +88,7 @@ mod tests {
             peak_partial_blocks: 2,
             peak_arena_blocks: 10,
             preemptions: 1,
+            swaps: 1,
             ..Default::default()
         };
         let b = CacheStats {
@@ -89,6 +96,7 @@ mod tests {
             peak_partial_blocks: 1,
             peak_arena_blocks: 4,
             preemptions: 2,
+            swaps: 1,
             ..Default::default()
         };
         a.merge(&b);
@@ -96,5 +104,6 @@ mod tests {
         assert_eq!(a.peak_partial_blocks, 2);
         assert_eq!(a.peak_arena_blocks, 10);
         assert_eq!(a.preemptions, 3, "preemption counts are additive");
+        assert_eq!(a.swaps, 2, "swap counts are additive");
     }
 }

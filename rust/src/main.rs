@@ -72,6 +72,21 @@ fn artifacts_flag(spec: ArgSpec) -> ArgSpec {
     spec.opt("artifacts", "artifacts", "artifact directory (make artifacts)")
 }
 
+/// Parse a `--watermarks low,high` value (fractions of the arena).
+fn parse_watermarks(s: &str) -> Result<(f64, f64)> {
+    let (lo, hi) = s
+        .split_once(',')
+        .ok_or_else(|| anyhow::anyhow!("--watermarks wants low,high (e.g. 0.85,0.95)"))?;
+    let low: f64 = lo.trim().parse().map_err(|_| anyhow::anyhow!("bad low watermark {lo:?}"))?;
+    let high: f64 =
+        hi.trim().parse().map_err(|_| anyhow::anyhow!("bad high watermark {hi:?}"))?;
+    anyhow::ensure!(
+        low > 0.0 && low <= high && high <= 1.0,
+        "watermarks must satisfy 0 < low <= high <= 1 (got {low}, {high})"
+    );
+    Ok((low, high))
+}
+
 /// The PJRT-backed subcommands need the `xla` feature (real bindings).
 #[cfg(not(feature = "xla"))]
 fn cmd_serve() -> Result<()> {
@@ -111,15 +126,23 @@ fn cmd_serve() -> Result<()> {
             .opt("page-size", "16", "KV page size (8|16|32)")
             .opt("max-concurrency", "8", "max sequences decoded concurrently")
             .opt("max-live-blocks", "4096", "global KV block capacity")
+            .opt("swap-bytes", "67108864", "host swap pool byte cap \
+                 (0 = recompute-only preemption)")
+            .opt("watermarks", "0.85,0.95", "admission/preemption watermarks \
+                 as low,high fractions of the arena")
             .opt("config", "", "TOML config file ([server]/[cache] sections \
                  override the flags; see docs in util::toml)"),
     )
     .parse_or_exit(2);
+    let (watermark_low, watermark_high) = parse_watermarks(args.get("watermarks"))?;
     let mut cfg = SchedConfig {
         model: args.get("model").to_string(),
         page_size: args.get_usize("page-size"),
         max_concurrency: args.get_usize("max-concurrency"),
         max_live_blocks: args.get_usize("max-live-blocks"),
+        watermark_low,
+        watermark_high,
+        swap_bytes: args.get_usize("swap-bytes"),
     };
     if !args.get("config").is_empty() {
         use paged_eviction::util::toml;
@@ -235,14 +258,22 @@ fn cmd_schedule() -> Result<()> {
     .opt("page-size", "8", "KV page size")
     .opt("concurrency", "4", "max concurrent sequences")
     .opt("arena-blocks", "96", "shared arena capacity (blocks)")
+    .opt("swap-bytes", "67108864", "host swap pool byte cap \
+         (0 = recompute-only preemption)")
+    .opt("watermarks", "0.85,0.95", "admission/preemption watermarks \
+         as low,high fractions of the arena")
     .opt("seed", "7", "prompt RNG seed")
     .parse_or_exit(2);
 
+    let (watermark_low, watermark_high) = parse_watermarks(args.get("watermarks"))?;
     let cfg = SchedConfig {
         model: "sim".into(),
         page_size: args.get_usize("page-size"),
         max_concurrency: args.get_usize("concurrency"),
         max_live_blocks: args.get_usize("arena-blocks"),
+        watermark_low,
+        watermark_high,
+        swap_bytes: args.get_usize("swap-bytes"),
     };
     let mut sched = Scheduler::new_sim(cfg);
     let mut rng = Pcg32::new(args.get_u64("seed"));
@@ -255,21 +286,27 @@ fn cmd_schedule() -> Result<()> {
     }
     let outs = sched.run_to_completion()?;
     println!(
-        "{} requests done: {:.0} tok/s, {} preemptions, peak arena {} / {} blocks",
+        "{} requests done: {:.0} tok/s, {} preemptions ({} swapped out, {} restored, \
+         {} dropped), peak arena {} / {} blocks",
         outs.len(),
         sched.throughput_tok_s(),
         sched.preemptions,
+        sched.swap_outs,
+        sched.swap_restores,
+        sched.swap_pool().dropped(),
         sched.arena().stats().peak_used,
         sched.arena().capacity(),
     );
     for o in &outs {
         println!(
-            "  req {:>3}: {:>3} tokens, finish {:?}, ttft {:.2} ms, preempted {}x",
+            "  req {:>3}: {:>3} tokens, finish {:?}, ttft {:.2} ms, preempted {}x \
+             (swap-restored {}x)",
             o.id,
             o.tokens.len(),
             o.finish,
             o.ttft_s * 1e3,
             o.preemptions,
+            o.swaps,
         );
     }
     Ok(())

@@ -19,4 +19,4 @@ pub use engine::Engine;
 pub use manifest::{GraphInfo, GraphKind, Manifest, ModelInfo};
 #[cfg(feature = "xla")]
 pub use model_runner::{ModelRunner, Sequence, StepOutput};
-pub use sim_backend::{SimBackend, SimSeq};
+pub use sim_backend::{SimBackend, SimSeq, SimSnapshot};

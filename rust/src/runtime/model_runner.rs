@@ -23,7 +23,7 @@ mod pjrt {
     use crate::kvcache::{BlockAlloc, BlockManager, SeqCache};
     use crate::runtime::engine::{lit_f32, lit_i32, scalar_i32, Engine};
     use crate::runtime::manifest::ModelInfo;
-    use crate::scheduler::backend::{DecodeBackend, Prefilled};
+    use crate::scheduler::backend::{DecodeBackend, NoSwap, Prefilled, Restored};
 
     pub struct ModelRunner<'e> {
         pub engine: &'e Engine,
@@ -458,6 +458,8 @@ mod pjrt {
     impl<'e> DecodeBackend for ModelRunner<'e> {
         type Seq = Sequence;
 
+        type Snapshot = NoSwap;
+
         fn prefill(
             &mut self,
             arena: &BlockManager,
@@ -478,6 +480,24 @@ mod pjrt {
 
         fn grow_bucket(&mut self, seq: &mut Sequence) -> Result<()> {
             ModelRunner::grow(self, seq)
+        }
+
+        /// The runner's K/V literals stand in for device-resident buffers;
+        /// downloading them on every preemption would defeat swapping's
+        /// purpose, so this backend opts out and the scheduler keeps the
+        /// recompute-on-readmission path for its victims. Swap support
+        /// arrives with the device-resident batched cache (ROADMAP), where
+        /// a single bounded copy per victim becomes meaningful.
+        fn snapshot(&self, _seq: &Sequence) -> Option<NoSwap> {
+            None
+        }
+
+        fn restore(
+            &mut self,
+            _arena: &BlockManager,
+            _snap: &NoSwap,
+        ) -> Result<Restored<Sequence>> {
+            bail!("the PJRT backend never snapshots, so there is nothing to restore")
         }
 
         fn decode_batch(&mut self, batch: &mut [(&mut Sequence, u32)]) -> Vec<Result<Vec<f32>>> {

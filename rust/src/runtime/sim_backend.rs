@@ -20,9 +20,9 @@
 
 use anyhow::Result;
 
-use crate::eviction::{Decision, EvictionPolicy, PrefillScores};
-use crate::kvcache::{BlockManager, SeqCache};
-use crate::scheduler::backend::{DecodeBackend, Prefilled};
+use crate::eviction::{make_policy, Decision, EvictionPolicy, PrefillScores};
+use crate::kvcache::{BlockAlloc, BlockManager, KvSnapshot, SeqCache};
+use crate::scheduler::backend::{DecodeBackend, HostSnapshot, Prefilled, Restored};
 
 fn splitmix64(x: u64) -> u64 {
     let mut z = x.wrapping_add(0x9e3779b97f4a7c15);
@@ -44,6 +44,31 @@ pub struct SimSeq {
     pub prompt_len: usize,
     /// Rolling hash of every token fed so far (prompt, then decode feeds).
     state: u64,
+}
+
+/// Swap-to-host snapshot of a [`SimSeq`]: the full cache state plus the
+/// backend's continuation state (the rolling history hash) and the policy
+/// identity. Policies are stateless configuration (`make_policy` rebuilds
+/// them by name; their per-sequence statistics live in the cache's
+/// `CacheStats`, carried inside the [`KvSnapshot`]), so the snapshot is
+/// complete: a restored sequence decodes bit-identically to one that was
+/// never suspended.
+pub struct SimSnapshot {
+    kv: KvSnapshot,
+    budget: usize,
+    prompt_len: usize,
+    policy: &'static str,
+    state: u64,
+}
+
+impl HostSnapshot for SimSnapshot {
+    fn host_bytes(&self) -> usize {
+        self.kv.host_bytes() + std::mem::size_of::<Self>()
+    }
+
+    fn arena_blocks(&self) -> usize {
+        self.kv.n_blocks()
+    }
 }
 
 pub struct SimBackend {
@@ -84,6 +109,8 @@ impl SimBackend {
 
 impl DecodeBackend for SimBackend {
     type Seq = SimSeq;
+
+    type Snapshot = SimSnapshot;
 
     fn prefill(
         &mut self,
@@ -154,6 +181,32 @@ impl DecodeBackend for SimBackend {
         let nb = seq.cache.capacity_blocks() + 2;
         seq.cache.grow(nb);
         Ok(())
+    }
+
+    fn snapshot(&self, seq: &SimSeq) -> Option<SimSnapshot> {
+        Some(SimSnapshot {
+            kv: seq.cache.snapshot(),
+            budget: seq.budget,
+            prompt_len: seq.prompt_len,
+            policy: seq.policy.name(),
+            state: seq.state,
+        })
+    }
+
+    fn restore(&mut self, arena: &BlockManager, snap: &SimSnapshot) -> Result<Restored<SimSeq>> {
+        let cache = match SeqCache::restore_from(&snap.kv, arena) {
+            Ok(c) => c,
+            Err(BlockAlloc::ArenaDry) => return Ok(Restored::OutOfMemory),
+            Err(e) => anyhow::bail!("snapshot restore failed: {e:?}"),
+        };
+        let policy = make_policy(snap.policy)?;
+        Ok(Restored::Ready(SimSeq {
+            cache,
+            budget: snap.budget,
+            policy,
+            prompt_len: snap.prompt_len,
+            state: snap.state,
+        }))
     }
 
     fn decode_batch(&mut self, batch: &mut [(&mut SimSeq, u32)]) -> Vec<Result<Vec<f32>>> {

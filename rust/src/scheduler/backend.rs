@@ -26,9 +26,50 @@ pub enum Prefilled<S> {
     OutOfMemory,
 }
 
+/// Outcome of a swap-restore attempt against the shared arena.
+pub enum Restored<S> {
+    /// Sequence rebuilt from the host snapshot; decode continues exactly
+    /// where it stopped (no recompute, no replay).
+    Ready(S),
+    /// The arena cannot hold the snapshot's blocks right now. Not an
+    /// error: the scheduler keeps the snapshot and retries later.
+    OutOfMemory,
+}
+
+/// What the scheduler's bounded host-side swap pool accounts for a
+/// backend snapshot.
+pub trait HostSnapshot {
+    /// Approximate host bytes the snapshot pins while parked in the pool.
+    fn host_bytes(&self) -> usize;
+
+    /// Arena blocks a restore will claim — the admission estimate for a
+    /// swapped victim (exact, unlike the prompt-based estimate for fresh
+    /// admissions).
+    fn arena_blocks(&self) -> usize;
+}
+
+/// Placeholder snapshot type for backends that cannot swap to host:
+/// `snapshot()` always returns `None`, so `restore()` is unreachable and
+/// the scheduler uses recompute-on-readmission for every victim.
+pub struct NoSwap;
+
+impl HostSnapshot for NoSwap {
+    fn host_bytes(&self) -> usize {
+        0
+    }
+
+    fn arena_blocks(&self) -> usize {
+        0
+    }
+}
+
 pub trait DecodeBackend {
     /// Backend-owned per-sequence state (cache + model-side buffers).
     type Seq;
+
+    /// Host-side snapshot of a suspended sequence (swap-to-host). Use
+    /// [`NoSwap`] when the backend cannot produce one.
+    type Snapshot: HostSnapshot;
 
     /// Run the prompt, apply prefill eviction, pack the survivors into a
     /// paged cache allocated from `arena`.
@@ -47,6 +88,21 @@ pub trait DecodeBackend {
     /// Migrate `seq` to a larger device bucket (its serialization bucket
     /// is full). Must strictly enlarge the bucket or error.
     fn grow_bucket(&mut self, seq: &mut Self::Seq) -> Result<()>;
+
+    /// Capture everything needed to rebuild `seq` later WITHOUT
+    /// recompute — cache metadata, eviction-policy state, model-side
+    /// continuation state. `None` when this backend cannot swap (e.g. the
+    /// PJRT runner, whose K/V lives on device); the scheduler then falls
+    /// back to recompute-on-readmission for this victim.
+    fn snapshot(&self, seq: &Self::Seq) -> Option<Self::Snapshot>;
+
+    /// Rebuild a sequence from a host snapshot, claiming fresh blocks from
+    /// `arena`. Must claim nothing on [`Restored::OutOfMemory`].
+    fn restore(
+        &mut self,
+        arena: &BlockManager,
+        snap: &Self::Snapshot,
+    ) -> Result<Restored<Self::Seq>>;
 
     /// One decode step for every `(sequence, token-to-feed)` entry — the
     /// scheduler issues exactly one call per round for the whole running

@@ -1,12 +1,15 @@
 //! Serving coordinator: request lifecycle + continuous batching.
 //!
 //! The scheduler interleaves many in-flight sequences vLLM-style: each
-//! round admits prefills until the concurrency or shared-arena capacity is
-//! exhausted, reserves this round's blocks (preempting the youngest
-//! sequence when the arena runs dry), then issues ONE batched decode call
-//! for the whole running set. Eviction policy + cache budget are
-//! per-request, so a single server can serve mixed policies (that is how
-//! the comparison benches run).
+//! round admits work while the shared arena sits below its LOW watermark,
+//! preempts the youngest sequence when usage crosses the HIGH watermark
+//! (or an allocation hard-fails), reserves this round's blocks, then
+//! issues ONE batched decode call for the whole running set. Preemption
+//! victims are swapped to a bounded host [`swap::SwapPool`] when the
+//! backend can snapshot them — readmission restores instead of
+//! recomputing — and fall back to recompute-and-replay otherwise.
+//! Eviction policy + cache budget are per-request, so a single server can
+//! serve mixed policies (that is how the comparison benches run).
 //!
 //! The scheduler is generic over [`backend::DecodeBackend`], so the whole
 //! lifecycle — admission gating on the shared `BlockManager` arena,
@@ -18,7 +21,9 @@
 pub mod backend;
 pub mod request;
 pub mod sched;
+pub mod swap;
 
-pub use backend::{DecodeBackend, Prefilled};
+pub use backend::{DecodeBackend, HostSnapshot, Prefilled, Restored};
 pub use request::{FinishReason, Request, RequestOutput, RequestState};
 pub use sched::{SchedConfig, Scheduler, StepReport};
+pub use swap::SwapPool;

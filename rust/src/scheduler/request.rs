@@ -53,7 +53,10 @@ pub struct RequestOutput {
     pub prompt_len: usize,
     pub live_cache_tokens: usize,
     /// Times this request was preempted (blocks freed under memory
-    /// pressure) and recomputed before completing.
+    /// pressure) before completing — both readmission paths.
     pub preemptions: u32,
+    /// Times this request was readmitted by restoring a swap-to-host
+    /// snapshot instead of recomputing (`swaps <= preemptions`).
+    pub swaps: u32,
     pub cache_stats: crate::kvcache::CacheStats,
 }

@@ -1,26 +1,38 @@
 //! The continuous-batching scheduler: batched decode rounds over a shared
-//! physical block arena, with preemption under memory pressure.
+//! physical block arena, with watermark admission and swap-to-host
+//! preemption under memory pressure.
 //!
 //! Each round:
 //!
 //!  1. **admission** — fill free concurrency slots from the queue, gated
-//!     on the REAL arena (`BlockManager::free_count`, O(1)), estimating
-//!     `ceil((min(prompt, budget) + max_new_tokens) / page_size)` blocks
-//!     per request;
-//!  2. **reservation** — every running sequence that needs a fresh block
-//!     for this round's token claims it up front; if the arena runs dry,
-//!     the scheduler victim-selects the **youngest** running sequence,
-//!     frees its blocks and requeues it (recompute-on-readmission);
-//!  3. **batched decode** — one `DecodeBackend::decode_batch` call for the
+//!     on the arena's LOW watermark
+//!     (`BlockManager::below_low_watermark`, O(1)) against the blocks the
+//!     admission claims *immediately*: the packed prompt for a fresh
+//!     request, the exact snapshot size for a swapped victim. Decode-time
+//!     growth is no longer reserved up front — worst-case estimates
+//!     over-reserve precisely when unstructured policies fragment pages
+//!     (the paper's Limitation 1); the low/high hysteresis band absorbs
+//!     the optimism instead;
+//!  2. **watermark preemption** — while usage exceeds the HIGH watermark,
+//!     victim-select the **youngest** running sequence and evict it
+//!     proactively, before allocation hard-fails;
+//!  3. **reservation** — every running sequence that needs a fresh block
+//!     for this round's token claims it up front; if the arena still runs
+//!     dry, preemption repeats until the round fits;
+//!  4. **batched decode** — one `DecodeBackend::decode_batch` call for the
 //!     whole running set; finished sequences retire from the results.
 //!
-//! A preempted request keeps its produced tokens; on readmission the
-//! backend re-prefills the prompt and the scheduler *replays* those tokens
-//! through the decode path, reconstructing the cache state the original
-//! run had (greedy decode is deterministic), then continues generating.
+//! A preemption victim is parked in a bounded host [`SwapPool`] when the
+//! backend can snapshot it (swap-to-host): readmission from the queue
+//! front *restores* the snapshot — no prompt recompute, no token replay.
+//! When the backend cannot snapshot, the snapshot no longer fits the
+//! pool, or the pool LRU-dropped it to make room, the victim falls back
+//! to the PR 2 recompute path: the prompt is re-prefilled and the
+//! produced tokens are replayed through decode (greedy decode is
+//! deterministic, so both paths yield bit-identical outputs).
 //!
 //! The scheduler is generic over [`DecodeBackend`], so the identical
-//! admission/reservation/preemption/retire logic runs on the always-built
+//! admission/preemption/reservation/retire logic runs on the always-built
 //! deterministic sim backend (tier-1 tests) and on the PJRT runner
 //! (`--features xla`).
 
@@ -29,8 +41,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::backend::{DecodeBackend, Prefilled};
+use super::backend::{DecodeBackend, Prefilled, Restored};
 use super::request::{FinishReason, Request, RequestOutput};
+use super::swap::SwapPool;
 use crate::eviction::make_policy;
 use crate::kvcache::{BlockAlloc, BlockManager};
 use crate::runtime::model_runner::argmax;
@@ -45,6 +58,17 @@ pub struct SchedConfig {
     /// Capacity of the shared physical block arena — the real global KV
     /// memory every sequence allocates from (stands in for GPU memory).
     pub max_live_blocks: usize,
+    /// Admission watermark as a fraction of the arena: new work is
+    /// admitted only while usage stays at or below it. `1.0` = admit up
+    /// to raw capacity.
+    pub watermark_low: f64,
+    /// Preemption watermark as a fraction of the arena: usage above it
+    /// triggers proactive preemption. Must be `>= watermark_low`; the gap
+    /// is the hysteresis band that absorbs decode-time growth.
+    pub watermark_high: f64,
+    /// Byte cap of the host-side swap pool preemption victims are parked
+    /// in. `0` disables swap: every victim recomputes on readmission.
+    pub swap_bytes: usize,
 }
 
 impl Default for SchedConfig {
@@ -54,6 +78,9 @@ impl Default for SchedConfig {
             page_size: 16,
             max_concurrency: 8,
             max_live_blocks: 4096,
+            watermark_low: 0.85,
+            watermark_high: 0.95,
+            swap_bytes: 64 << 20,
         }
     }
 }
@@ -64,13 +91,19 @@ pub struct StepReport {
     pub prefilled: usize,
     pub decoded_tokens: usize,
     pub finished: usize,
-    /// Sequences preempted this round (arena ran dry mid-decode).
+    /// Sequences preempted this round (watermark crossed or arena dry).
     pub preempted: usize,
+    /// Sequences readmitted this round by restoring a swap-to-host
+    /// snapshot (the `prefilled` count covers recompute readmissions).
+    pub swap_restored: usize,
     /// Requests rejected outright (can never fit / bad policy / failed).
     pub rejected: usize,
 }
 
-/// Queued request plus everything needed to resume it after preemption.
+/// Queued request plus everything needed to resume it after preemption —
+/// by either path: `resume`/`swap_fed` keep the recompute replay valid
+/// even while a snapshot is parked in the swap pool, so an LRU-dropped
+/// snapshot silently degrades to recompute instead of losing work.
 struct QueueEntry {
     req: Request,
     enqueued: Instant,
@@ -79,6 +112,15 @@ struct QueueEntry {
     first_token_at: Option<Instant>,
     decode_seconds: f64,
     preemptions: u32,
+    /// Swap-restore readmissions so far.
+    swaps: u32,
+    /// How many of `resume` were already fed through decode when the
+    /// sequence was preempted — the restore point for a swap readmission
+    /// (recompute readmissions replay from 0).
+    swap_fed: usize,
+    /// Pending next token at preemption time, consumed by a swap restore
+    /// once `swap_fed == resume.len()` (recompute recomputes it).
+    next_token: u32,
 }
 
 impl QueueEntry {
@@ -90,6 +132,9 @@ impl QueueEntry {
             first_token_at: None,
             decode_seconds: 0.0,
             preemptions: 0,
+            swaps: 0,
+            swap_fed: 0,
+            next_token: 0,
         }
     }
 }
@@ -110,10 +155,14 @@ struct Inflight<S> {
     /// Monotonic admission number — preemption victims are the youngest.
     admit_serial: u64,
     preemptions: u32,
+    /// Swap-restore readmissions for this request.
+    swaps: u32,
 }
 
 enum AdmitOutcome {
-    Admitted,
+    /// `restored` distinguishes a swap-pool restore from a prefill (fresh
+    /// or recompute) for the round report.
+    Admitted { restored: bool },
     /// Arena too full right now; entry comes back for a later round.
     OutOfMemory(QueueEntry),
     /// Request failed hard (error output already emitted).
@@ -127,23 +176,33 @@ pub struct Scheduler<B: DecodeBackend> {
     queue: VecDeque<QueueEntry>,
     running: Vec<Inflight<B::Seq>>,
     finished: Vec<RequestOutput>,
+    /// Host-side pool of swapped-out victims (byte-capped LRU).
+    swap: SwapPool<B::Snapshot>,
     // aggregate serving metrics
     pub ttft: Histogram,
     pub tpot: Histogram,
     pub decode_step_s: Summary,
     pub total_generated: u64,
     pub total_prompt_tokens: u64,
-    /// Total sequences preempted (arena pressure) since start.
+    /// Total sequences preempted (memory pressure) since start — both
+    /// readmission paths.
     pub preemptions: u64,
+    /// Preemption victims successfully parked in the swap pool.
+    pub swap_outs: u64,
+    /// Readmissions served by restoring a snapshot (no recompute).
+    pub swap_restores: u64,
     started: Option<Instant>,
     admit_counter: u64,
 }
 
 impl<B: DecodeBackend> Scheduler<B> {
     /// Build a scheduler around an existing backend. The shared arena is
-    /// sized by `cfg.max_live_blocks`.
+    /// sized by `cfg.max_live_blocks` with the configured admission /
+    /// preemption watermark band.
     pub fn with_backend(backend: B, cfg: SchedConfig) -> Self {
         let arena = BlockManager::new(cfg.max_live_blocks);
+        arena.set_watermarks(cfg.watermark_low, cfg.watermark_high);
+        let swap = SwapPool::new(cfg.swap_bytes);
         Scheduler {
             cfg,
             backend,
@@ -151,12 +210,15 @@ impl<B: DecodeBackend> Scheduler<B> {
             queue: VecDeque::new(),
             running: Vec::new(),
             finished: Vec::new(),
+            swap,
             ttft: Histogram::new(),
             tpot: Histogram::new(),
             decode_step_s: Summary::new(),
             total_generated: 0,
             total_prompt_tokens: 0,
             preemptions: 0,
+            swap_outs: 0,
+            swap_restores: 0,
             started: None,
             admit_counter: 0,
         }
@@ -165,6 +227,11 @@ impl<B: DecodeBackend> Scheduler<B> {
     /// The shared physical block arena (O(1) global accounting).
     pub fn arena(&self) -> &BlockManager {
         &self.arena
+    }
+
+    /// The host-side swap pool (byte accounting, LRU drop count).
+    pub fn swap_pool(&self) -> &SwapPool<B::Snapshot> {
+        &self.swap
     }
 
     pub fn submit(&mut self, mut req: Request) {
@@ -212,12 +279,16 @@ impl<B: DecodeBackend> Scheduler<B> {
         std::mem::take(&mut self.finished)
     }
 
-    /// Worst-case block need of a request: its prompt can retain at most
-    /// `min(prompt, budget)` tokens and generation appends `max_new` more,
-    /// ceiling-divided into pages. (Unstructured fragmentation can exceed
-    /// this; the reservation pass preempts when it does.)
-    fn needed_blocks(req: &Request, page_size: usize) -> usize {
-        let tokens = req.prompt.len().min(req.budget) + req.max_new_tokens;
+    /// Blocks a fresh admission claims IMMEDIATELY: the packed prompt
+    /// (`min(prompt, budget)` tokens), ceiling-divided into pages. The old
+    /// gate also reserved `max_new_tokens` of worst-case growth up front —
+    /// over-reserving exactly when policies evict during decode, and
+    /// under-reserving when unstructured fragmentation exceeds the token
+    /// count (the paper's Limitation 1). Watermark admission drops the
+    /// guess: growth is absorbed by the low/high hysteresis band and
+    /// reclaimed by preemption above the high mark.
+    fn prefill_blocks(req: &Request, page_size: usize) -> usize {
+        let tokens = req.prompt.len().min(req.budget);
         (tokens + page_size - 1) / page_size
     }
 
@@ -231,6 +302,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             prompt_len: req.prompt.len(),
             live_cache_tokens: 0,
             preemptions: 0,
+            swaps: 0,
             cache_stats: Default::default(),
         }
     }
@@ -244,24 +316,31 @@ impl<B: DecodeBackend> Scheduler<B> {
         let mut report = StepReport::default();
 
         // --- admission: fill every free concurrency slot, gated on the
-        // arena's real free-block count ---
+        // arena's low watermark against what the admission claims NOW
+        // (packed prompt, or a swapped victim's exact snapshot size) ---
         while self.running.len() < self.cfg.max_concurrency {
             let Some(entry) = self.queue.pop_front() else { break };
-            // The estimate is deliberately worst-case; budgeted policies
-            // evict during decode and can finish long generations inside a
-            // much smaller footprint, so an estimate beyond the whole
-            // arena gates on a fully idle arena rather than rejecting.
-            // Truly impossible prompts are rejected below, when their
-            // prefill runs the arena dry with nothing left to preempt.
-            let needed = Self::needed_blocks(&entry.req, self.cfg.page_size)
-                .min(self.arena.capacity());
-            if needed > self.arena.free_count() {
-                // not enough global KV memory yet — head-of-line wait
+            let incoming = self
+                .swap
+                .arena_blocks_of(entry.req.id)
+                .unwrap_or_else(|| Self::prefill_blocks(&entry.req, self.cfg.page_size));
+            // With nothing running the gate is bypassed: no sequence can
+            // ever free blocks, so either the admission fits the raw
+            // capacity now or the request can never run (rejected below
+            // when its prefill runs the arena dry).
+            if !self.arena.below_low_watermark(incoming) && !self.running.is_empty() {
+                // not enough global KV headroom yet — head-of-line wait
                 self.queue.push_front(entry);
                 break;
             }
             match self.admit(entry) {
-                AdmitOutcome::Admitted => report.prefilled += 1,
+                AdmitOutcome::Admitted { restored } => {
+                    if restored {
+                        report.swap_restored += 1;
+                    } else {
+                        report.prefilled += 1;
+                    }
+                }
                 AdmitOutcome::OutOfMemory(entry) => {
                     if self.running.is_empty() {
                         // nothing in flight can ever free blocks for it:
@@ -271,6 +350,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                             entry.req.id,
                             self.arena.capacity()
                         );
+                        self.swap.discard(entry.req.id);
                         self.finished.push(Self::error_output(&entry.req));
                         report.rejected += 1;
                         continue;
@@ -280,6 +360,15 @@ impl<B: DecodeBackend> Scheduler<B> {
                 }
                 AdmitOutcome::Failed => report.rejected += 1,
             }
+        }
+
+        // --- high-watermark preemption: reclaim the admission optimism
+        // proactively, before allocation hard-fails (the hysteresis
+        // partner of the low-mark admission gate) ---
+        while self.arena.above_high_watermark() && self.running.len() > 1 {
+            let victim = self.youngest_idx();
+            self.preempt(victim);
+            report.preempted += 1;
         }
 
         // --- reservation + preemption: every sequence that needs a fresh
@@ -407,6 +496,50 @@ impl<B: DecodeBackend> Scheduler<B> {
     }
 
     fn admit(&mut self, entry: QueueEntry) -> AdmitOutcome {
+        // A swapped-out victim readmits by restoring its snapshot: the
+        // cache, policy state and model continuation come back exactly as
+        // suspended — no prompt recompute, no token replay.
+        if let Some(snap) = self.swap.take(entry.req.id) {
+            match self.backend.restore(&self.arena, &snap) {
+                Ok(Restored::Ready(seq)) => {
+                    self.swap_restores += 1;
+                    self.admit_counter += 1;
+                    let fed = entry.swap_fed.min(entry.resume.len());
+                    log::info!(
+                        "req {}: restored from swap ({} tokens kept, {} to replay)",
+                        entry.req.id,
+                        entry.resume.len(),
+                        entry.resume.len() - fed
+                    );
+                    self.running.push(Inflight {
+                        next_token: entry.next_token,
+                        first_token_at: entry.first_token_at,
+                        enqueued: entry.enqueued,
+                        decode_seconds: entry.decode_seconds,
+                        produced: entry.resume,
+                        fed,
+                        admit_serial: self.admit_counter,
+                        preemptions: entry.preemptions,
+                        swaps: entry.swaps + 1,
+                        req: entry.req,
+                        seq,
+                    });
+                    return AdmitOutcome::Admitted { restored: true };
+                }
+                Ok(Restored::OutOfMemory) => {
+                    // keep the snapshot parked for a later retry
+                    self.swap.insert(entry.req.id, snap);
+                    return AdmitOutcome::OutOfMemory(entry);
+                }
+                Err(e) => {
+                    log::warn!(
+                        "req {}: swap restore failed — falling back to recompute: {e:#}",
+                        entry.req.id
+                    );
+                    // fall through to the prefill + replay path below
+                }
+            }
+        }
         let policy = match make_policy(&entry.req.policy) {
             Ok(p) => p,
             Err(e) => {
@@ -443,10 +576,11 @@ impl<B: DecodeBackend> Scheduler<B> {
                     fed: 0,
                     admit_serial: self.admit_counter,
                     preemptions: entry.preemptions,
+                    swaps: entry.swaps,
                     req: entry.req,
                     seq,
                 });
-                AdmitOutcome::Admitted
+                AdmitOutcome::Admitted { restored: false }
             }
             Ok(Prefilled::OutOfMemory) => AdmitOutcome::OutOfMemory(entry),
             Err(e) => {
@@ -469,16 +603,15 @@ impl<B: DecodeBackend> Scheduler<B> {
             .expect("youngest_idx on empty running set")
     }
 
-    /// Free a running sequence's blocks and requeue it for recompute.
+    /// Evict a running sequence: park its snapshot in the swap pool when
+    /// the backend can produce one (swap-to-host), free its blocks, and
+    /// requeue it at the queue front. The produced tokens ride along in
+    /// the queue entry either way, so a snapshot later LRU-dropped from
+    /// the pool degrades to the recompute path without losing work.
     fn preempt(&mut self, idx: usize) {
         let f = self.running.remove(idx);
         self.preemptions += 1;
-        log::info!(
-            "req {}: preempted under memory pressure (freeing {} blocks, {} tokens kept for replay)",
-            f.req.id,
-            B::cache(&f.seq).n_blocks(),
-            f.produced.len()
-        );
+        let n_blocks = B::cache(&f.seq).n_blocks();
         let Inflight {
             req,
             seq,
@@ -486,9 +619,31 @@ impl<B: DecodeBackend> Scheduler<B> {
             first_token_at,
             decode_seconds,
             produced,
+            fed,
             preemptions,
+            swaps,
+            next_token,
             ..
         } = f;
+        let mut swapped = false;
+        if self.swap.capacity_bytes() > 0 {
+            if let Some(snap) = self.backend.snapshot(&seq) {
+                swapped = self.swap.insert(req.id, snap);
+            }
+        }
+        if swapped {
+            self.swap_outs += 1;
+        }
+        log::info!(
+            "req {}: preempted under memory pressure (freeing {} blocks, {})",
+            req.id,
+            n_blocks,
+            if swapped {
+                "snapshot swapped to host"
+            } else {
+                "produced tokens kept for replay"
+            }
+        );
         drop(seq); // returns every block the victim held to the arena
         self.queue.push_front(QueueEntry {
             req,
@@ -497,6 +652,9 @@ impl<B: DecodeBackend> Scheduler<B> {
             first_token_at,
             decode_seconds,
             preemptions: preemptions + 1,
+            swaps,
+            swap_fed: fed,
+            next_token,
         });
     }
 
@@ -524,6 +682,7 @@ impl<B: DecodeBackend> Scheduler<B> {
         let live_cache_tokens = cache.live_tokens();
         let mut cache_stats = cache.stats.clone();
         cache_stats.preemptions = f.preemptions as u64;
+        cache_stats.swaps = f.swaps as u64;
         cache_stats.peak_arena_blocks = self.arena.stats().peak_used as u64;
         self.finished.push(RequestOutput {
             id: f.req.id,
@@ -534,6 +693,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             prompt_len: f.req.prompt.len(),
             live_cache_tokens,
             preemptions: f.preemptions,
+            swaps: f.swaps,
             cache_stats,
         });
         // f.seq drops here, returning its blocks to the arena

@@ -1,0 +1,198 @@
+//! Bounded host-side pool of swapped-out sequence snapshots.
+//!
+//! When the scheduler preempts a victim it prefers parking the victim's
+//! full state here (swap-to-host) over discarding it: readmission then
+//! restores the snapshot instead of re-prefilling the prompt and replaying
+//! every produced token — the recompute cost vLLM's swapping path avoids.
+//!
+//! The pool is byte-accounted and LRU-capped: inserting past the cap drops
+//! the OLDEST parked snapshots first (their victims transparently fall
+//! back to the recompute path, which is always kept valid — the queue
+//! entry retains the produced tokens), so host memory for swap is a hard
+//! bound, not a hope.
+
+use std::collections::VecDeque;
+
+use super::backend::HostSnapshot;
+
+/// Byte-capped LRU store of per-request snapshots, keyed by request id.
+#[derive(Debug)]
+pub struct SwapPool<S> {
+    cap_bytes: usize,
+    used_bytes: usize,
+    /// Insertion order, oldest first — the front is the next LRU victim.
+    entries: VecDeque<(u64, usize, S)>,
+    dropped: u64,
+}
+
+impl<S: HostSnapshot> SwapPool<S> {
+    /// A pool with `cap_bytes == 0` is disabled: every insert fails and
+    /// the scheduler preempts by recompute only.
+    pub fn new(cap_bytes: usize) -> Self {
+        SwapPool { cap_bytes, used_bytes: 0, entries: VecDeque::new(), dropped: 0 }
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.cap_bytes
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Snapshots LRU-dropped (or displaced by a re-insert for the same
+    /// request) never restored — their victims fell back to recompute.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.entries.iter().any(|(i, _, _)| *i == id)
+    }
+
+    /// Arena blocks the parked snapshot for `id` would claim on restore —
+    /// the scheduler's admission estimate for a swapped victim.
+    pub fn arena_blocks_of(&self, id: u64) -> Option<usize> {
+        self.entries
+            .iter()
+            .find(|(i, _, _)| *i == id)
+            .map(|(_, _, s)| s.arena_blocks())
+    }
+
+    /// Park a snapshot, evicting oldest entries until it fits. Returns
+    /// `false` — and stores nothing — when the snapshot alone exceeds the
+    /// pool cap (or the pool is disabled); the caller falls back to
+    /// recompute. A snapshot already parked for the same id is replaced
+    /// (counted in `dropped` only when a DIFFERENT id is evicted).
+    pub fn insert(&mut self, id: u64, snap: S) -> bool {
+        self.remove(id);
+        let bytes = snap.host_bytes();
+        if self.cap_bytes == 0 || bytes > self.cap_bytes {
+            return false;
+        }
+        while self.used_bytes + bytes > self.cap_bytes {
+            let (_, b, _) = self.entries.pop_front().expect("byte accounting broken");
+            self.used_bytes -= b;
+            self.dropped += 1;
+        }
+        self.used_bytes += bytes;
+        self.entries.push_back((id, bytes, snap));
+        true
+    }
+
+    /// Remove and return the snapshot for `id` (readmission restore).
+    pub fn take(&mut self, id: u64) -> Option<S> {
+        let pos = self.entries.iter().position(|(i, _, _)| *i == id)?;
+        let (_, bytes, snap) = self.entries.remove(pos).expect("position just found");
+        self.used_bytes -= bytes;
+        Some(snap)
+    }
+
+    /// Drop the snapshot for `id` if parked (e.g. its request was
+    /// rejected). Not counted as an LRU drop.
+    pub fn discard(&mut self, id: u64) {
+        self.remove(id);
+    }
+
+    fn remove(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.entries.iter().position(|(i, _, _)| *i == id) {
+            let (_, bytes, _) = self.entries.remove(pos).expect("position just found");
+            self.used_bytes -= bytes;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Test snapshot with a settable footprint.
+    struct Fake(usize);
+
+    impl HostSnapshot for Fake {
+        fn host_bytes(&self) -> usize {
+            self.0
+        }
+
+        fn arena_blocks(&self) -> usize {
+            self.0 / 100
+        }
+    }
+
+    #[test]
+    fn insert_take_roundtrip_accounts_bytes() {
+        let mut p = SwapPool::new(1000);
+        assert!(p.insert(1, Fake(400)));
+        assert!(p.insert(2, Fake(500)));
+        assert_eq!(p.used_bytes(), 900);
+        assert_eq!(p.arena_blocks_of(1), Some(4));
+        assert!(p.take(1).is_some());
+        assert_eq!(p.used_bytes(), 500);
+        assert!(p.take(1).is_none(), "take removes");
+        assert_eq!(p.dropped(), 0);
+    }
+
+    #[test]
+    fn cap_evicts_oldest_first() {
+        let mut p = SwapPool::new(1000);
+        assert!(p.insert(1, Fake(400)));
+        assert!(p.insert(2, Fake(400)));
+        // 400 + 400 + 600 > 1000: both elder snapshots must go
+        assert!(p.insert(3, Fake(600)));
+        assert_eq!(p.dropped(), 2);
+        assert!(!p.contains(1) && !p.contains(2));
+        assert!(p.contains(3));
+        assert_eq!(p.used_bytes(), 600);
+    }
+
+    #[test]
+    fn partial_eviction_keeps_newer_entries() {
+        let mut p = SwapPool::new(1000);
+        assert!(p.insert(1, Fake(400)));
+        assert!(p.insert(2, Fake(400)));
+        assert!(p.insert(3, Fake(300)));
+        assert_eq!(p.dropped(), 1, "only the oldest (1) needed to go");
+        assert!(!p.contains(1));
+        assert!(p.contains(2) && p.contains(3));
+    }
+
+    #[test]
+    fn oversized_or_disabled_insert_fails_cleanly() {
+        let mut p = SwapPool::new(100);
+        assert!(!p.insert(1, Fake(101)), "snapshot bigger than the pool");
+        assert_eq!(p.len(), 0);
+        let mut off: SwapPool<Fake> = SwapPool::new(0);
+        assert!(!off.insert(1, Fake(0)), "disabled pool parks nothing");
+    }
+
+    #[test]
+    fn reinsert_same_id_replaces_without_drop() {
+        let mut p = SwapPool::new(1000);
+        assert!(p.insert(1, Fake(600)));
+        assert!(p.insert(1, Fake(700)), "own entry is displaced, not counted");
+        assert_eq!(p.dropped(), 0);
+        assert_eq!(p.used_bytes(), 700);
+        assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn discard_is_silent() {
+        let mut p = SwapPool::new(1000);
+        assert!(p.insert(1, Fake(500)));
+        p.discard(1);
+        p.discard(2); // absent: no-op
+        assert!(p.is_empty());
+        assert_eq!(p.dropped(), 0);
+    }
+}

@@ -83,6 +83,7 @@ impl WireResponse {
             ("prompt_len", Json::num(o.prompt_len as f64)),
             ("live_cache_tokens", Json::num(o.live_cache_tokens as f64)),
             ("preemptions", Json::num(o.preemptions as f64)),
+            ("swaps", Json::num(o.swaps as f64)),
         ])
         .to_string()
     }
@@ -132,6 +133,7 @@ mod tests {
             prompt_len: 5,
             live_cache_tokens: 64,
             preemptions: 2,
+            swaps: 1,
             cache_stats: CacheStats::default(),
         };
         let line = WireResponse(out).to_line();
@@ -140,5 +142,6 @@ mod tests {
         assert_eq!(j.get("text").unwrap().as_str(), Some("hi"));
         assert_eq!(j.get("finish").unwrap().as_str(), Some("length"));
         assert_eq!(j.get("preemptions").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("swaps").unwrap().as_usize(), Some(1));
     }
 }

@@ -139,9 +139,9 @@ impl Json {
             Json::Bool(false) => out.push_str("false"),
             Json::Num(n) => {
                 if n.fract() == 0.0 && n.abs() < 9e15 {
-                    out.push_str(&format!("{}", *n as i64));
+                    out.push_str(&(*n as i64).to_string());
                 } else {
-                    out.push_str(&format!("{n}"));
+                    out.push_str(&n.to_string());
                 }
             }
             Json::Str(s) => write_escaped(s, out),

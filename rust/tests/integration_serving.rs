@@ -25,6 +25,7 @@ fn cfg() -> SchedConfig {
         page_size: 16,
         max_concurrency: 4,
         max_live_blocks: 512,
+        ..SchedConfig::default()
     }
 }
 
@@ -93,10 +94,11 @@ fn admission_respects_block_capacity() {
     for i in 0..2 {
         let p = recall::make_prompt(&mut rng, 64, 0.5);
         let mut req = Request::new(i + 1, p.tokens, 4);
-        req.budget = 64; // needs ~6 blocks incl. slack
+        req.budget = 64; // prefill claims 4 blocks per request
         sched.submit(req);
     }
-    // first round admits exactly one (capacity), second stays queued
+    // low watermark = floor(0.85 * 8) = 6 blocks: the first admission
+    // (4 blocks) fits, the second (4 + 4 > 6) stays queued
     sched.step().unwrap();
     assert_eq!(sched.running(), 1);
     assert_eq!(sched.pending(), 1);

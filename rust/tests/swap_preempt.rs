@@ -1,0 +1,378 @@
+//! Swap-to-host preemption + watermark admission on the deterministic sim
+//! backend (no PJRT).
+//!
+//! The sim backend's logits are a pure function of token history, so
+//! greedy outputs are bit-deterministic and independent of physical block
+//! layout. That lets these tests pin the strongest property the swap path
+//! must have: a sequence that is preempted, parked in the host swap pool
+//! and later RESTORED produces bit-identical output to (a) the same
+//! contended run readmitted through the recompute-and-replay path and
+//! (b) an uncontended run that was never preempted at all — while
+//! `CacheStats`/`RequestOutput` distinguish `swaps` (restored) from
+//! `preemptions` (total evictions).
+
+use paged_eviction::eviction::make_policy;
+use paged_eviction::kvcache::{BlockManager, SeqCache};
+use paged_eviction::runtime::model_runner::argmax;
+use paged_eviction::runtime::SimBackend;
+use paged_eviction::scheduler::backend::{DecodeBackend, HostSnapshot, Prefilled, Restored};
+use paged_eviction::scheduler::{FinishReason, Request, RequestOutput, SchedConfig, Scheduler};
+use paged_eviction::util::propcheck;
+use paged_eviction::util::rng::Pcg32;
+
+fn cfg(page: usize, conc: usize, arena_blocks: usize) -> SchedConfig {
+    SchedConfig {
+        model: "sim".into(),
+        page_size: page,
+        max_concurrency: conc,
+        max_live_blocks: arena_blocks,
+        // hard-capacity band by default; individual tests open it up
+        watermark_low: 1.0,
+        watermark_high: 1.0,
+        swap_bytes: 0,
+    }
+}
+
+fn mk_req(id: u64, prompt: Vec<u32>, gen: usize, budget: usize, policy: &str) -> Request {
+    let mut r = Request::new(id, prompt, gen);
+    r.budget = budget;
+    r.policy = policy.to_string();
+    r
+}
+
+fn rand_prompt(rng: &mut Pcg32, len: usize) -> Vec<u32> {
+    (0..len).map(|_| rng.below(200)).collect()
+}
+
+/// Run a request set to completion and return outputs sorted by id.
+fn run(cfg: SchedConfig, reqs: &[Request]) -> (Vec<RequestOutput>, Scheduler<SimBackend>) {
+    let mut sched = Scheduler::new_sim(cfg);
+    for r in reqs {
+        sched.submit(r.clone());
+    }
+    let mut outs = sched.run_to_completion().unwrap();
+    outs.sort_by_key(|o| o.id);
+    (outs, sched)
+}
+
+/// Two "full"-policy sequences in an arena that cannot absorb both of
+/// their growth ladders: the youngest gets preempted mid-decode.
+fn contended_pair() -> Vec<Request> {
+    let mut rng = Pcg32::new(7);
+    let pa = rand_prompt(&mut rng, 64);
+    let pb = rand_prompt(&mut rng, 64);
+    vec![
+        mk_req(1, pa, 24, 1024, "full"),
+        mk_req(2, pb, 24, 1024, "full"),
+    ]
+}
+
+/// The acceptance property: swap-restored output == recompute output ==
+/// uncontended output, bit for bit, with swaps/preemptions distinguished.
+#[test]
+fn swap_restore_matches_recompute_and_uncontended_bit_for_bit() {
+    let reqs = contended_pair();
+
+    let (uncontended, s0) = run(cfg(4, 2, 10_000), &reqs);
+    assert_eq!(s0.preemptions, 0, "ample arena must not preempt");
+
+    // recompute leg: swap disabled, 36-block arena forces a preemption
+    let (recompute, s1) = run(cfg(4, 2, 36), &reqs);
+    assert!(s1.preemptions >= 1, "36 blocks cannot hold both ladders");
+    assert_eq!(s1.swap_outs, 0, "swap disabled parks nothing");
+    assert_eq!(s1.swap_restores, 0);
+
+    // swap leg: same pressure, victims park in a roomy host pool
+    let (swapped, s2) = run(
+        SchedConfig { swap_bytes: 16 << 20, ..cfg(4, 2, 36) },
+        &reqs,
+    );
+    assert!(s2.preemptions >= 1);
+    assert!(s2.swap_outs >= 1, "the victim must be parked in the pool");
+    assert!(s2.swap_restores >= 1, "and readmitted by restore");
+    assert_eq!(s2.swap_pool().len(), 0, "restore drains the pool");
+
+    for ((u, r), s) in uncontended.iter().zip(&recompute).zip(&swapped) {
+        assert_eq!(u.id, r.id);
+        assert_eq!(u.id, s.id);
+        assert_eq!(u.finish, FinishReason::MaxTokens);
+        assert_eq!(
+            r.tokens, u.tokens,
+            "req {}: recompute readmission drifted from the uncontended run",
+            u.id
+        );
+        assert_eq!(
+            s.tokens, u.tokens,
+            "req {}: swap-restored readmission drifted from the uncontended run",
+            u.id
+        );
+    }
+
+    // stats distinguish the paths: the recompute victim has preemptions
+    // but no swaps; the swap victim has both, and CacheStats agrees.
+    let rv = &recompute[1];
+    assert!(rv.preemptions >= 1, "youngest sequence was the victim");
+    assert_eq!(rv.swaps, 0, "recompute leg restored nothing");
+    let sv = &swapped[1];
+    assert!(sv.preemptions >= 1);
+    assert!(sv.swaps >= 1, "swap leg restored the victim");
+    assert_eq!(sv.cache_stats.preemptions, sv.preemptions as u64);
+    assert_eq!(sv.cache_stats.swaps, sv.swaps as u64);
+    assert!(sv.swaps <= sv.preemptions, "swaps is a subset of preemptions");
+    // the elder sequence ran through untouched in both legs
+    assert_eq!(recompute[0].preemptions, 0);
+    assert_eq!(swapped[0].preemptions, 0);
+    assert_eq!(swapped[0].swaps, 0);
+}
+
+/// A pool too small for even one snapshot parks nothing: every victim
+/// falls back to recompute, and outputs are still bit-identical.
+#[test]
+fn undersized_swap_pool_falls_back_to_recompute() {
+    let reqs = contended_pair();
+    let (uncontended, _) = run(cfg(4, 2, 10_000), &reqs);
+    let (outs, sched) = run(
+        SchedConfig { swap_bytes: 64, ..cfg(4, 2, 36) }, // 64 BYTES
+        &reqs,
+    );
+    assert!(sched.preemptions >= 1);
+    assert_eq!(sched.swap_outs, 0, "nothing fits a 64-byte pool");
+    assert_eq!(sched.swap_restores, 0);
+    for (o, u) in outs.iter().zip(&uncontended) {
+        assert_eq!(o.tokens, u.tokens, "req {}: fallback lost work", o.id);
+    }
+    assert_eq!(outs[1].swaps, 0);
+    assert!(outs[1].preemptions >= 1);
+}
+
+/// Measure the host bytes of a full-policy sim sequence snapshotted at
+/// `blocks` blocks, by driving the identical prefill/decode/grow path the
+/// scheduler drives.
+fn snapshot_bytes_at_blocks(prompt: &[u32], blocks: usize) -> usize {
+    let arena = BlockManager::new(10_000);
+    let mut be = SimBackend::new(4);
+    let Prefilled::Ready { mut seq, logits } = be
+        .prefill(&arena, prompt, 1024, make_policy("full").unwrap())
+        .unwrap()
+    else {
+        panic!("prefill OOM on a 10k arena")
+    };
+    let mut tok = argmax(&logits);
+    while seq.cache.n_blocks() < blocks {
+        while !seq.cache.ensure_block() {
+            be.grow_bucket(&mut seq).unwrap();
+        }
+        let mut b = [(&mut seq, tok)];
+        tok = argmax(&be.decode_batch(&mut b).pop().unwrap().unwrap());
+    }
+    be.snapshot(&seq).expect("sim backend always snapshots").host_bytes()
+}
+
+/// SwapPool byte-cap eviction end to end: two victims contend for a pool
+/// sized to hold only one snapshot. The OLDEST parked snapshot is
+/// LRU-dropped, its victim transparently falls back to recompute, and
+/// every output is still bit-identical to the uncontended run.
+#[test]
+fn lru_dropped_snapshot_falls_back_to_recompute_with_identical_output() {
+    let mut rng = Pcg32::new(21);
+    let reqs = vec![
+        mk_req(1, rand_prompt(&mut rng, 64), 40, 1024, "full"),
+        mk_req(2, rand_prompt(&mut rng, 64), 40, 1024, "full"),
+        mk_req(3, rand_prompt(&mut rng, 64), 8, 1024, "full"),
+    ];
+    let (uncontended, s0) = run(cfg(4, 3, 10_000), &reqs);
+    assert_eq!(s0.preemptions, 0);
+
+    // Pool sized for ~1.25x the bigger victim's snapshot (#2 is preempted
+    // at ~24 blocks): it holds one snapshot, never two.
+    let cap = snapshot_bytes_at_blocks(&reqs[1].prompt, 24) * 5 / 4;
+    // 48 blocks: all three 16-block prefills fit exactly; round 1 already
+    // preempts #3 (reservation finds the arena dry), and the ladders of
+    // #1/#2 (26 blocks each) force a second preemption later.
+    let (outs, sched) = run(SchedConfig { swap_bytes: cap, ..cfg(4, 3, 48) }, &reqs);
+
+    assert!(sched.preemptions >= 2, "two victims under this pressure");
+    assert!(sched.swap_outs >= 2, "both victims were parked");
+    assert!(
+        sched.swap_pool().dropped() >= 1,
+        "the byte cap must LRU-drop the older snapshot"
+    );
+    assert!(sched.swap_restores >= 1, "the surviving snapshot restores");
+    assert!(
+        sched.preemptions > sched.swap_restores,
+        "the dropped victim's readmission went the recompute path"
+    );
+    for (o, u) in outs.iter().zip(&uncontended) {
+        assert_eq!(o.id, u.id);
+        assert_eq!(o.finish, FinishReason::MaxTokens);
+        assert_eq!(
+            o.tokens, u.tokens,
+            "req {}: a dropped snapshot must degrade to recompute, not lose work",
+            o.id
+        );
+    }
+}
+
+/// Watermark admission (the paper's Limitation-1 fix): a request whose
+/// WORST-CASE estimate exceeds free memory is admitted anyway, because
+/// the gate charges only the blocks prefill claims now and usage sits
+/// below the low watermark. Bounded policies then never grow into the
+/// band, so the optimism is free.
+#[test]
+fn watermark_admission_admits_what_worst_case_estimates_reject() {
+    let page = 4;
+    let mut rng = Pcg32::new(8);
+    let reqs = vec![
+        mk_req(1, rand_prompt(&mut rng, 32), 60, 16, "paged"),
+        mk_req(2, rand_prompt(&mut rng, 32), 60, 16, "paged"),
+    ];
+    // Worst case per request: ceil((16 + 60) / 4) = 19 blocks. After the
+    // first admission (4 blocks) only 16 are free, so a worst-case gate
+    // serializes the pair; the watermark gate sees 4 + 4 <= low mark
+    // floor(0.85 * 20) = 17 and admits both at once.
+    let mut sched = Scheduler::new_sim(SchedConfig {
+        watermark_low: 0.85,
+        watermark_high: 0.95,
+        ..cfg(page, 2, 20)
+    });
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let rep = sched.step().unwrap();
+    assert_eq!(rep.prefilled, 2, "both admitted below the low watermark");
+    let mut outs = sched.run_to_completion().unwrap();
+    outs.sort_by_key(|o| o.id);
+    for o in &outs {
+        assert_eq!(o.finish, FinishReason::MaxTokens, "req {}", o.id);
+        assert_eq!(o.tokens.len(), 60);
+        assert_eq!(o.preemptions, 0, "bounded budgets never cross the band");
+    }
+    assert_eq!(sched.preemptions, 0);
+}
+
+/// Above the high watermark the scheduler preempts PROACTIVELY: pressure
+/// is relieved before the arena ever runs hard dry, and the victim's
+/// restored output is still bit-identical.
+#[test]
+fn high_watermark_preempts_before_exhaustion() {
+    let mut rng = Pcg32::new(9);
+    let reqs = vec![
+        mk_req(1, rand_prompt(&mut rng, 32), 24, 1024, "full"),
+        mk_req(2, rand_prompt(&mut rng, 32), 24, 1024, "full"),
+    ];
+    let (uncontended, _) = run(cfg(4, 2, 10_000), &reqs);
+    // low = 16 blocks, high = 24 blocks, capacity 32. Both 8-block
+    // prefills are admitted at the low mark; joint growth (14 blocks
+    // each) crosses the high mark long before raw capacity.
+    let (outs, sched) = run(
+        SchedConfig {
+            watermark_low: 0.5,
+            watermark_high: 0.75,
+            swap_bytes: 16 << 20,
+            ..cfg(4, 2, 32)
+        },
+        &reqs,
+    );
+    assert!(sched.preemptions >= 1, "the high watermark must trip");
+    assert!(sched.swap_restores >= 1, "victim comes back via restore");
+    let peak = sched.arena().stats().peak_used;
+    assert!(
+        peak < 32,
+        "proactive preemption must fire before exhaustion (peak {peak})"
+    );
+    for (o, u) in outs.iter().zip(&uncontended) {
+        assert_eq!(o.tokens, u.tokens, "req {}: watermark path lost work", o.id);
+    }
+}
+
+/// Snapshot/restore round-trips for EVERY eviction policy: a sequence
+/// suspended mid-decode and restored into a fresh arena continues with
+/// bit-identical logits, cache serialization and policy decisions.
+#[test]
+fn property_snapshot_restore_roundtrip_every_policy() {
+    propcheck::quick("swap-roundtrip", |rng: &mut Pcg32| {
+        let page = *rng.choose(&[2usize, 4, 8]);
+        let plen = page * (2 + rng.usize_below(8)) + rng.usize_below(page);
+        let budget = page * (2 + rng.usize_below(6));
+        let warm = rng.usize_below(3 * page);
+        let tail = 1 + rng.usize_below(2 * page);
+        let prompt: Vec<u32> = (0..plen).map(|_| rng.below(200)).collect();
+        for policy in ["paged", "full", "streaming", "inverse_key_norm", "keydiff"] {
+            let arena = BlockManager::new(10_000);
+            let mut be = SimBackend::new(page);
+            let Prefilled::Ready { mut seq, logits } = be
+                .prefill(&arena, &prompt, budget, make_policy(policy).unwrap())
+                .map_err(|e| format!("{policy}: prefill failed: {e:#}"))?
+            else {
+                return Err(format!("{policy}: unexpected prefill OOM"));
+            };
+            let mut tok = argmax(&logits);
+            for _ in 0..warm {
+                while !seq.cache.ensure_block() {
+                    be.grow_bucket(&mut seq).unwrap();
+                }
+                let mut b = [(&mut seq, tok)];
+                tok = argmax(&be.decode_batch(&mut b).pop().unwrap().unwrap());
+            }
+
+            // suspend into a DIFFERENT arena, as a real swap would
+            let snap = be.snapshot(&seq).expect("sim backend always snapshots");
+            if snap.arena_blocks() != seq.cache.n_blocks() {
+                return Err(format!("{policy}: snapshot block count drifted"));
+            }
+            let arena2 = BlockManager::new(10_000);
+            let Restored::Ready(mut twin) = be
+                .restore(&arena2, &snap)
+                .map_err(|e| format!("{policy}: restore failed: {e:#}"))?
+            else {
+                return Err(format!("{policy}: unexpected restore OOM"));
+            };
+            twin.cache
+                .check_invariants()
+                .map_err(|e| format!("{policy}: restored invariants: {e}"))?;
+            assert_same_cache(policy, &seq.cache, &twin.cache)?;
+
+            // both must continue bit-identically
+            let mut tok2 = tok;
+            for step in 0..tail {
+                for (s, t) in [(&mut seq, &mut tok), (&mut twin, &mut tok2)] {
+                    while !s.cache.ensure_block() {
+                        be.grow_bucket(s).unwrap();
+                    }
+                    let mut b = [(&mut *s, *t)];
+                    *t = argmax(&be.decode_batch(&mut b).pop().unwrap().unwrap());
+                }
+                if tok != tok2 {
+                    return Err(format!("{policy}: tokens diverged at step {step}"));
+                }
+                assert_same_cache(policy, &seq.cache, &twin.cache)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Serialization-relevant equality between two caches (what the decode
+/// graph and the policies can observe).
+fn assert_same_cache(policy: &str, a: &SeqCache, b: &SeqCache) -> Result<(), String> {
+    if a.capacity_blocks() != b.capacity_blocks() {
+        return Err(format!("{policy}: bucket drifted"));
+    }
+    let nb = a.capacity_blocks();
+    if a.block_table(nb) != b.block_table(nb) {
+        return Err(format!("{policy}: block table drifted"));
+    }
+    if a.valid_mask(nb) != b.valid_mask(nb) {
+        return Err(format!("{policy}: validity mask drifted"));
+    }
+    if a.live_token_list() != b.live_token_list() {
+        return Err(format!("{policy}: live token view drifted"));
+    }
+    if a.next_position() != b.next_position() {
+        return Err(format!("{policy}: next_position drifted"));
+    }
+    if a.stats != b.stats {
+        return Err(format!("{policy}: cache stats drifted"));
+    }
+    Ok(())
+}

@@ -1,0 +1,131 @@
+#!/usr/bin/env python3
+"""CI regression gate over the hot-path microbench output.
+
+Reads the ``BENCH_hotpath.json`` emitted by ``cargo bench --bench
+micro_hotpath`` (a flat ``{op name: microseconds/op}`` object) and FAILS
+(exit 1) when:
+
+  * the incremental block-table serialization is not at least
+    ``--min-table-speedup`` (default 5x) faster than the legacy
+    from-scratch rebuild — the bar PR 1 introduced and ROADMAP records;
+  * the incremental validity-mask serialization is not at least
+    ``--min-mask-speedup`` (default 1.2x) faster than its rebuild. Both
+    mask rows end in the same O(NB*B) consume pass (which dominates), so
+    the achievable ratio is structurally far below the table pair's; the
+    gate asserts the incremental path never regresses BELOW the rebuild
+    rather than an unreachable 5x;
+  * any gated op exceeds its absolute ceiling in ``CEILINGS_US`` —
+    generous catastrophic-regression bounds (10-100x expected values),
+    sized for noisy shared CI runners, not laptops;
+  * any row the gate needs is missing (a silently renamed bench row must
+    not turn the gate into a no-op).
+
+Stdlib only — runs on a bare CI python with no installs.
+
+Usage:
+    python3 tools/bench_gate.py rust/BENCH_hotpath.json
+    python3 tools/bench_gate.py --min-table-speedup 5 bench.json
+"""
+
+import argparse
+import json
+import sys
+
+TABLE_REBUILD = "block_table rebuild+consume (64 blocks)"
+TABLE_INCR = "block_table incremental+consume (64 blocks)"
+MASK_REBUILD = "valid_mask rebuild+consume (1024 slots)"
+MASK_INCR = "valid_mask incremental+consume (1024 slots)"
+
+# Absolute per-op ceilings in microseconds. Deliberately loose: they exist
+# to catch an accidental O(n) -> O(n^2) (or a stray allocation storm), not
+# to police single-digit-percent noise.
+CEILINGS_US = {
+    TABLE_INCR: 5.0,
+    MASK_INCR: 50.0,
+    TABLE_REBUILD: 100.0,
+    MASK_REBUILD: 500.0,
+    "decode-step metadata cycle (paged, incremental)": 250.0,
+    "paged post_append scan (32 blocks)": 250.0,
+    "inverse_key_norm global scan (512 tokens)": 2000.0,
+    "JSON request parse": 500.0,
+    "argmax (4096 logits)": 250.0,
+}
+
+
+def check(rows, min_table_speedup, min_mask_speedup):
+    """Return (failures, report_lines) for a {op: us/op} mapping."""
+    failures = []
+    report = []
+    bad_rows = set()  # report each missing/bad row once, not per consumer
+
+    def lookup(name):
+        v = rows.get(name)
+        if v is None:
+            if name not in bad_rows:
+                bad_rows.add(name)
+                failures.append(f"missing bench row: {name!r}")
+        elif not isinstance(v, (int, float)) or v != v or v < 0:
+            if name not in bad_rows:
+                bad_rows.add(name)
+                failures.append(f"non-numeric bench row: {name!r} = {v!r}")
+            return None
+        return v
+
+    pairs = [
+        ("block_table", TABLE_REBUILD, TABLE_INCR, min_table_speedup),
+        ("valid_mask", MASK_REBUILD, MASK_INCR, min_mask_speedup),
+    ]
+    for label, rebuild_row, incr_row, floor in pairs:
+        rebuild, incr = lookup(rebuild_row), lookup(incr_row)
+        if rebuild is None or incr is None:
+            continue
+        speedup = rebuild / max(incr, 1e-9)
+        line = f"{label}: rebuild {rebuild:.3f} us -> incremental {incr:.3f} us ({speedup:.1f}x, need >= {floor:.1f}x)"
+        report.append(line)
+        if speedup < floor:
+            failures.append(f"speedup regression: {line}")
+
+    for name, ceiling in sorted(CEILINGS_US.items()):
+        v = lookup(name)
+        if v is None:
+            continue
+        report.append(f"ceiling: {name}: {v:.3f} us (<= {ceiling:.1f} us)")
+        if v > ceiling:
+            failures.append(
+                f"absolute regression: {name}: {v:.3f} us exceeds the {ceiling:.1f} us ceiling"
+            )
+
+    return failures, report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("json_path", help="path to BENCH_hotpath.json")
+    ap.add_argument("--min-table-speedup", type=float, default=5.0)
+    ap.add_argument("--min-mask-speedup", type=float, default=1.2)
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.json_path, "r", encoding="utf-8") as f:
+            rows = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench gate: cannot read {args.json_path}: {e}", file=sys.stderr)
+        return 1
+    if not isinstance(rows, dict):
+        print("bench gate: bench JSON must be an object of op -> us/op", file=sys.stderr)
+        return 1
+
+    failures, report = check(rows, args.min_table_speedup, args.min_mask_speedup)
+    for line in report:
+        print(f"  {line}")
+    if failures:
+        print(f"\nbench gate FAILED ({len(failures)} problem(s)):", file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL: {f}", file=sys.stderr)
+        return 1
+    print("\nbench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Unit tests for the CI bench regression gate (stdlib unittest).
+
+Doctored BENCH_hotpath.json payloads prove the gate actually asserts:
+a healthy run passes, a sub-5x table speedup fails, a ceiling breach
+fails, and a silently missing row fails instead of skipping.
+
+Run:  python3 tools/test_bench_gate.py
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import bench_gate
+
+
+def healthy_rows():
+    rows = {
+        bench_gate.TABLE_REBUILD: 0.500,
+        bench_gate.TABLE_INCR: 0.050,  # 10x
+        bench_gate.MASK_REBUILD: 3.000,
+        bench_gate.MASK_INCR: 1.200,  # 2.5x
+        "decode-step metadata cycle (paged, incremental)": 2.0,
+        "paged post_append scan (32 blocks)": 1.0,
+        "inverse_key_norm global scan (512 tokens)": 20.0,
+        "JSON request parse": 3.0,
+        "argmax (4096 logits)": 4.0,
+    }
+    return rows
+
+
+class CheckTests(unittest.TestCase):
+    def run_check(self, rows, **kw):
+        table = kw.pop("min_table_speedup", 5.0)
+        mask = kw.pop("min_mask_speedup", 1.2)
+        assert not kw
+        return bench_gate.check(rows, table, mask)
+
+    def test_healthy_run_passes(self):
+        failures, report = self.run_check(healthy_rows())
+        self.assertEqual(failures, [])
+        self.assertTrue(any("10.0x" in line for line in report))
+
+    def test_table_speedup_below_bar_fails(self):
+        rows = healthy_rows()
+        rows[bench_gate.TABLE_INCR] = rows[bench_gate.TABLE_REBUILD] / 4.0  # 4x < 5x
+        failures, _ = self.run_check(rows)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("speedup regression", failures[0])
+        self.assertIn("block_table", failures[0])
+
+    def test_mask_slower_than_rebuild_fails(self):
+        rows = healthy_rows()
+        rows[bench_gate.MASK_INCR] = rows[bench_gate.MASK_REBUILD] * 1.1
+        failures, _ = self.run_check(rows)
+        self.assertTrue(any("valid_mask" in f for f in failures))
+
+    def test_absolute_ceiling_breach_fails(self):
+        rows = healthy_rows()
+        rows["argmax (4096 logits)"] = 9999.0
+        failures, _ = self.run_check(rows)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("absolute regression", failures[0])
+        self.assertIn("argmax", failures[0])
+
+    def test_missing_row_fails_instead_of_skipping(self):
+        rows = healthy_rows()
+        del rows[bench_gate.TABLE_INCR]
+        failures, _ = self.run_check(rows)
+        self.assertTrue(any("missing bench row" in f for f in failures))
+
+    def test_non_numeric_row_fails(self):
+        rows = healthy_rows()
+        rows[bench_gate.MASK_INCR] = "fast"
+        failures, _ = self.run_check(rows)
+        self.assertTrue(any("non-numeric" in f for f in failures))
+
+
+class MainTests(unittest.TestCase):
+    def write_json(self, payload):
+        f = tempfile.NamedTemporaryFile(
+            "w", suffix=".json", delete=False, encoding="utf-8"
+        )
+        self.addCleanup(os.unlink, f.name)
+        with f:
+            if isinstance(payload, str):
+                f.write(payload)
+            else:
+                json.dump(payload, f)
+        return f.name
+
+    def test_main_pass_and_fail_exit_codes(self):
+        good = self.write_json(healthy_rows())
+        self.assertEqual(bench_gate.main([good]), 0)
+        doctored = healthy_rows()
+        doctored[bench_gate.TABLE_INCR] = doctored[bench_gate.TABLE_REBUILD]  # 1x
+        bad = self.write_json(doctored)
+        self.assertEqual(bench_gate.main([bad]), 1)
+
+    def test_main_threshold_flags(self):
+        rows = healthy_rows()
+        rows[bench_gate.TABLE_INCR] = rows[bench_gate.TABLE_REBUILD] / 4.0
+        path = self.write_json(rows)
+        self.assertEqual(bench_gate.main([path]), 1)
+        self.assertEqual(bench_gate.main(["--min-table-speedup", "3", path]), 0)
+
+    def test_main_rejects_garbage_input(self):
+        self.assertEqual(bench_gate.main([self.write_json("not json")]), 1)
+        self.assertEqual(bench_gate.main([self.write_json([1, 2])]), 1)
+        self.assertEqual(bench_gate.main(["/nonexistent/bench.json"]), 1)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
