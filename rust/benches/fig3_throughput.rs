@@ -38,6 +38,14 @@ struct Cell {
     /// High-water physical block footprint across the cell's sequences
     /// (`CacheStats::peak_live_blocks`).
     peak_blocks_max: usize,
+    /// Prompt blocks served from the prefix index across the cell.
+    /// (Reads 0 on the PJRT backend until it implements prefix caching —
+    /// the column exists so the first device-resident-cache PR lights it
+    /// up without touching the bench.)
+    prefix_hits: u64,
+    /// Copy-on-write page copies across the cell (nonzero only for
+    /// token-killing policies, which hole-punch shared pages).
+    cow_copies: u64,
 }
 
 #[allow(clippy::too_many_arguments)] // bench driver: one flag per knob
@@ -52,6 +60,7 @@ fn run_cell(
     concurrency: usize,
     arena_blocks: usize,
     swap_bytes: usize,
+    prefix_cache: bool,
 ) -> anyhow::Result<Cell> {
     let mut sched = Scheduler::new(
         engine,
@@ -61,6 +70,7 @@ fn run_cell(
             max_concurrency: concurrency,
             max_live_blocks: arena_blocks,
             swap_bytes,
+            prefix_cache,
             ..SchedConfig::default()
         },
     )?;
@@ -78,9 +88,11 @@ fn run_cell(
     let mut written = 0u64;
     let mut partial_max = 0usize;
     let mut peak_blocks = 0usize;
+    let mut cow = 0u64;
     for o in &outs {
         updates += o.cache_stats.table_updates + o.cache_stats.mask_updates;
         written += o.cache_stats.tokens_written;
+        cow += o.cache_stats.cow_copies;
         // true high-water marks, tracked by the cache itself
         partial_max = partial_max.max(o.cache_stats.peak_partial_blocks as usize);
         peak_blocks = peak_blocks.max(o.cache_stats.peak_live_blocks as usize);
@@ -94,6 +106,8 @@ fn run_cell(
         swap_restores: sched.swap_restores,
         partial_blocks_max: partial_max,
         peak_blocks_max: peak_blocks,
+        prefix_hits: sched.prefix_hit_blocks,
+        cow_copies: cow,
     })
 }
 
@@ -110,7 +124,12 @@ fn main() {
             .opt("arena-blocks", "100000", "shared arena capacity in blocks \
                  (shrink to exercise preemption under memory pressure)")
             .opt("swap-bytes", "67108864", "host swap pool byte cap \
-                 (0 = recompute-only preemption)"),
+                 (0 = recompute-only preemption)")
+            .opt("prefix-cache", "on", "refcounted prompt-prefix sharing \
+                 across requests (on|off). NOTE: the PJRT backend does not \
+                 implement prefix caching yet (ROADMAP), so hit/cow read 0 \
+                 here until it does — the sim-backed scheduler paths and \
+                 `schedule` CLI exercise the live feature"),
     );
     let engine = Engine::new(artifacts_dir()).expect("make artifacts first");
     let models = args.get_list("models");
@@ -122,6 +141,7 @@ fn main() {
     let conc = args.get_usize("concurrency");
     let arena_blocks = args.get_usize("arena-blocks");
     let swap_bytes = args.get_usize("swap-bytes");
+    let prefix_cache = args.get("prefix-cache") != "off";
 
     println!(
         "setup: {n_req} reqs x (in {plen} + out {gen}), {conc} concurrent, page 16 \
@@ -137,8 +157,9 @@ fn main() {
         for (policy, budget, wgen) in
             [("full", 100_000usize, gen), ("paged", budgets[0], 2 * 16)]
         {
-            let _ = run_cell(&engine, model, policy, budget, 1, plen, wgen, 1, 100_000, 0)
-                .expect("warmup failed");
+            let _ =
+                run_cell(&engine, model, policy, budget, 1, plen, wgen, 1, 100_000, 0, false)
+                    .expect("warmup failed");
         }
         section(&format!("Fig 3 ({model}): throughput (tok/s) vs budget"));
         let mut header = vec!["policy".to_string()];
@@ -149,6 +170,8 @@ fn main() {
         header.push("blocks@mid".into());
         header.push("preempt".into());
         header.push("swap".into());
+        header.push("hit".into());
+        header.push("cow".into());
         let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
         let mut full_mid = 0.0;
         let mut paged_mid = 0.0;
@@ -163,12 +186,12 @@ fn main() {
                 // noisy-testbed protocol
                 let a = run_cell(
                     &engine, model, policy, budget, n_req, plen, gen, conc, arena_blocks,
-                    swap_bytes,
+                    swap_bytes, prefix_cache,
                 )
                 .expect("cell failed");
                 let b = run_cell(
                     &engine, model, policy, budget, n_req, plen, gen, conc, arena_blocks,
-                    swap_bytes,
+                    swap_bytes, prefix_cache,
                 )
                 .expect("cell failed");
                 let cell = if a.tok_s >= b.tok_s { a } else { b };
@@ -191,6 +214,8 @@ fn main() {
             row.push(format!("{}", mid.peak_blocks_max));
             row.push(format!("{}", mid.preemptions));
             row.push(format!("{}", mid.swap_restores));
+            row.push(format!("{}", mid.prefix_hits));
+            row.push(format!("{}", mid.cow_copies));
             t.row(row);
         }
         print!("{}", t.render());

@@ -20,7 +20,7 @@ use std::time::Instant;
 
 use common::{bench_args, section};
 use paged_eviction::eviction::{make_policy, Decision};
-use paged_eviction::kvcache::SeqCache;
+use paged_eviction::kvcache::{prefix_block_hashes, BlockManager, SeqCache};
 use paged_eviction::runtime::model_runner::argmax;
 use paged_eviction::server::protocol::WireRequest;
 use paged_eviction::util::args::ArgSpec;
@@ -137,6 +137,33 @@ fn main() {
         std::hint::black_box(argmax(&logits));
     }) * 1e6;
     record(&mut t, &mut rows, "argmax (4096 logits)", us);
+
+    // prefix cache: the per-prefill cost of hashing a prompt's block chain
+    // and probing the arena index (read-only, what admission pays) ...
+    let arena = BlockManager::new(256);
+    let entries: Vec<(u32, [f32; 3])> = (0..64u32).map(|i| (i, [0.25; 3])).collect();
+    let keys: Vec<u64> = (0..64u64).map(|i| i.wrapping_mul(0x9e3779b97f4a7c15)).collect();
+    let mut publisher = SeqCache::new_shared(16, 8, &arena);
+    publisher
+        .try_load_prefill_cached(&entries, &keys, 64)
+        .expect("publisher prefill fits");
+    let us = time_it(iters * 100, || {
+        let hashes = prefix_block_hashes(16, &entries, &keys);
+        std::hint::black_box(arena.count_leading_hits(&hashes));
+    }) * 1e6;
+    record(&mut t, &mut rows, "prefix_lookup chain+probe (4 blocks of 16)", us);
+
+    // ... and the copy-on-write cycle: map 4 published blocks by refcount,
+    // unshare one ahead of an in-place write, drop (release by refcount)
+    let us = time_it(iters * 10, || {
+        let mut borrower = SeqCache::new_shared(16, 8, &arena);
+        let hits = borrower
+            .try_load_prefill_cached(&entries, &keys, 64)
+            .expect("borrower prefill fits");
+        assert_eq!(hits, 4, "publisher's chain must hit");
+        borrower.make_private(0).expect("arena has CoW headroom");
+    }) * 1e6;
+    record(&mut t, &mut rows, "cow_copy cycle (hit 4 blocks + make_private)", us);
 
     print!("{}", t.render());
 

@@ -24,6 +24,12 @@ impl EvictionPolicy for FullCache {
     fn post_append(&self, _cache: &SeqCache, _budget: usize) -> Decision {
         Decision::Keep
     }
+
+    /// The whole prompt stays resident: admission must charge it even when
+    /// `budget < prompt_len` (the budget is ignored above, too).
+    fn prefill_resident(&self, prompt_len: usize, _budget: usize) -> usize {
+        prompt_len
+    }
 }
 
 #[cfg(test)]

@@ -34,6 +34,12 @@ impl EvictionPolicy for InverseKeyNorm {
     fn post_append(&self, cache: &SeqCache, budget: usize) -> Decision {
         unstructured_evict_worst(cache, budget, CH_KEY_L2, /*higher_is_worse=*/ true)
     }
+
+    /// Hole-punches tokens inside pages: shared prefix pages must be
+    /// copied-on-write before this policy's decode decisions run.
+    fn kills_tokens(&self) -> bool {
+        true
+    }
 }
 
 thread_local! {

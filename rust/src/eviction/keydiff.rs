@@ -31,6 +31,12 @@ impl EvictionPolicy for KeyDiff {
         // highest cosine = most redundant = evict first
         unstructured_evict_worst(cache, budget, CH_KEYDIFF, true)
     }
+
+    /// Hole-punches tokens inside pages: shared prefix pages must be
+    /// copied-on-write before this policy's decode decisions run.
+    fn kills_tokens(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

@@ -231,6 +231,29 @@ pub trait EvictionPolicy: Send + Sync {
     /// Decode-phase eviction decision after a token append. `budget` is the
     /// cache budget in tokens.
     fn post_append(&self, cache: &SeqCache, budget: usize) -> Decision;
+
+    /// Tokens resident in the cache immediately after prefill for a prompt
+    /// of `prompt_len` under `budget` — what policy-aware admission
+    /// charges. The default is the budgeted pack; `FullCache` keeps the
+    /// whole prompt regardless of budget and overrides accordingly.
+    fn prefill_resident(&self, prompt_len: usize, budget: usize) -> usize {
+        prompt_len.min(budget)
+    }
+
+    /// True when decode-phase decisions hole-punch tokens INSIDE existing
+    /// pages ([`Decision::KillTokens`]) rather than dropping whole pages.
+    /// Such in-place writes must never land on a shared (refcount > 1)
+    /// page, so the scheduler copies-on-write every shared page these
+    /// policies hold during round reservation — while it can still
+    /// preempt on a dry arena (`DecodeBackend::prepare_round`). Any policy
+    /// that can return `Decision::KillTokens` MUST override this to
+    /// `true` (today: InverseKeyNorm, KeyDiff, and StreamingLLM, whose
+    /// sliding window drains the oldest page token-by-token); policies
+    /// that only ever RELEASE whole pages (`Decision::EvictBlock`) are
+    /// refcount-safe without copies.
+    fn kills_tokens(&self) -> bool {
+        false
+    }
 }
 
 /// Instantiate a policy by its CLI/bench name.

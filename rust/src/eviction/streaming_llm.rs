@@ -71,6 +71,14 @@ impl EvictionPolicy for StreamingLlm {
             Decision::KillTokens(kills)
         }
     }
+
+    /// Structured in the paper's taxonomy, but the sliding window is
+    /// maintained by killing the oldest non-sink token IN PLACE — so
+    /// shared prefix pages must be copied-on-write before its decode
+    /// decisions run, exactly like the unstructured baselines.
+    fn kills_tokens(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

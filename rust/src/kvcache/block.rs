@@ -18,6 +18,14 @@ pub struct Block {
     /// bucket — the value the block table serializes). In a standalone
     /// cache the two coincide.
     pub arena_slot: usize,
+    /// True when `arena_slot` may be visible through the arena's prefix
+    /// index — the block was published by this sequence or mapped from a
+    /// hit, so other sequences can hold (or later acquire) references to
+    /// the same physical page. In-place mutations must consult the arena
+    /// first (`SeqCache::make_private`: copy-on-write while refcount > 1,
+    /// unpublish otherwise). Blocks that never touched the index keep the
+    /// flag false and skip the arena entirely on the hot mutation path.
+    pub prefix_tracked: bool,
     pub fill: usize,
     live: u64,
     /// Per-token importance channels (aggregated over layers by the score
@@ -35,6 +43,7 @@ impl Block {
         Block {
             phys,
             arena_slot: phys,
+            prefix_tracked: false,
             fill: 0,
             live: 0,
             scores: [

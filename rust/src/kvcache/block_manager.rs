@@ -1,4 +1,5 @@
-//! Process-wide physical block arena.
+//! Process-wide physical block arena with refcounted sharing and a
+//! content-hash prefix index.
 //!
 //! One `BlockManager` owns every physical KV slot in the server; each live
 //! sequence ([`crate::kvcache::SeqCache`]) registers for a [`SeqId`] and
@@ -8,19 +9,36 @@
 //! summed over running sequences, which is what makes admission gating and
 //! preemption-under-memory-pressure expressible at all.
 //!
-//! Ownership is tracked per slot (`owner[phys]`), so double frees and
-//! foreign frees (sequence A releasing a block held by sequence B) are hard
-//! errors in every build, in O(1) — the old pool only caught double frees
-//! with a `debug_assert!` over an O(n) `contains` scan.
+//! **Sharing.** A slot can be held by several sequences at once: `alloc`
+//! creates a private (refcount 1) claim, [`BlockManager::acquire_shared`]
+//! adds another holder to a slot found through the prefix index, and
+//! [`BlockManager::release`] drops one holder's claim — the slot returns
+//! to the free list only when the LAST holder releases it (refcount 0).
+//! `used()`/watermarks count a shared slot ONCE, which is the whole
+//! memory win of prefix caching.
+//!
+//! **Prefix index.** [`BlockManager::publish`] maps a chained content hash
+//! (see `seq_cache::prefix_block_hashes`) to a slot holding a FULL prompt
+//! block. Later prefills walk their own chain through
+//! [`BlockManager::acquire_shared`] and map the hits instead of
+//! re-materializing them. An index entry is removed when its slot is freed
+//! (refcount 0) or when the sole holder is about to mutate the content in
+//! place ([`BlockManager::unpublish_slot`], driven by
+//! `SeqCache::make_private`). Shared (refcount > 1) slots are FROZEN:
+//! holders must copy-on-write before any in-place mutation, so an index
+//! entry always describes the live content of its slot.
+//!
+//! Per-slot holder lists keep double frees and foreign frees (sequence A
+//! releasing a claim it does not hold) hard errors in every build.
 //!
 //! The handle is `Clone + Send + Sync` (an `Arc<Mutex<..>>`): the lock is
-//! only taken on block allocation/release — once every `page_size` decode
-//! steps per sequence — never on the per-token metadata path.
+//! only taken on block allocation/release/publish — once every `page_size`
+//! decode steps per sequence — never on the per-token metadata path
+//! (blocks that never touched the prefix index skip it entirely, see
+//! `Block::prefix_tracked`).
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex, MutexGuard};
-
-/// Sentinel owner value for a free slot.
-const NO_OWNER: u32 = u32::MAX;
 
 /// Identity of a registered sequence within one arena. Obtained from
 /// [`BlockManager::register`]; ids are recycled after `unregister`.
@@ -39,13 +57,22 @@ pub struct ArenaStats {
     pub capacity: usize,
     pub used: usize,
     /// High-water mark of simultaneously allocated blocks — the real
-    /// physical-memory footprint of the whole server.
+    /// physical-memory footprint of the whole server. A shared slot
+    /// counts once, so prefix caching lowers this directly.
     pub peak_used: usize,
+    /// Private allocations (`alloc`); shared acquisitions are counted in
+    /// `prefix_hits` instead.
     pub allocs: u64,
+    /// Holder releases (both private frees and shared refcount drops).
     pub frees: u64,
     pub grows: u64,
     /// Live registered sequences.
     pub sequences: usize,
+    /// Successful `acquire_shared` calls — prompt blocks served from the
+    /// prefix index instead of allocated.
+    pub prefix_hits: u64,
+    /// Slots currently published in the prefix index.
+    pub published_blocks: usize,
 }
 
 #[derive(Debug)]
@@ -53,16 +80,23 @@ struct Inner {
     /// LIFO free list; initialized in reverse so slot 0 is handed out
     /// first (keeps the single-tenant layout identity tests rely on).
     free: Vec<usize>,
-    /// `owner[phys]`: raw `SeqId` holding the slot, or `NO_OWNER`.
-    owner: Vec<u32>,
-    /// Blocks held per registered id (indexed by raw id).
+    /// `holders[phys]`: raw `SeqId`s holding a claim on the slot, empty =
+    /// free. Refcount == `holders[phys].len()`; almost always 0 or 1, so
+    /// the membership scans below are effectively O(1).
+    holders: Vec<Vec<u32>>,
+    /// Claims held per registered id (indexed by raw id).
     owned: Vec<usize>,
     registered: Vec<bool>,
     free_ids: Vec<u32>,
+    /// Content hash -> slot, full prompt blocks only (the prefix index).
+    prefix: HashMap<u64, usize>,
+    /// `slot_hash[phys]`: the hash this slot is published under, if any.
+    slot_hash: Vec<Option<u64>>,
     peak_used: usize,
     allocs: u64,
     frees: u64,
     grows: u64,
+    prefix_hits: u64,
     /// Admission watermark as a fraction of capacity (see
     /// [`BlockManager::set_watermarks`]). Stored as fractions so `grow`
     /// rescales the block thresholds automatically.
@@ -73,7 +107,7 @@ struct Inner {
 
 impl Inner {
     fn capacity(&self) -> usize {
-        self.owner.len()
+        self.holders.len()
     }
 
     fn used(&self) -> usize {
@@ -87,6 +121,38 @@ impl Inner {
     fn high_blocks(&self) -> usize {
         (self.high_frac * self.capacity() as f64).floor() as usize
     }
+
+    /// Remove the index entry of `phys`, if any. Idempotent.
+    fn unpublish(&mut self, phys: usize) {
+        if let Some(h) = self.slot_hash[phys].take() {
+            self.prefix.remove(&h);
+        }
+    }
+
+    /// Drop one claim of `seq` on `phys`; frees (and unpublishes) the slot
+    /// when the last claim goes. Returns an error message on a violation.
+    fn drop_claim(&mut self, seq: u32, phys: usize) -> Result<(), String> {
+        if phys >= self.holders.len() {
+            return Err(format!("release of out-of-range block {phys}"));
+        }
+        if self.holders[phys].is_empty() {
+            return Err(format!("double free of block {phys}"));
+        }
+        let Some(pos) = self.holders[phys].iter().position(|&h| h == seq) else {
+            return Err(format!(
+                "foreign free: seq {seq} releasing block {phys} held by seqs {:?}",
+                self.holders[phys]
+            ));
+        };
+        self.holders[phys].swap_remove(pos);
+        self.owned[seq as usize] -= 1;
+        self.frees += 1;
+        if self.holders[phys].is_empty() {
+            self.unpublish(phys);
+            self.free.push(phys);
+        }
+        Ok(())
+    }
 }
 
 /// Cloneable handle to the shared arena.
@@ -97,14 +163,17 @@ impl BlockManager {
     pub fn new(capacity_blocks: usize) -> Self {
         BlockManager(Arc::new(Mutex::new(Inner {
             free: (0..capacity_blocks).rev().collect(),
-            owner: vec![NO_OWNER; capacity_blocks],
+            holders: (0..capacity_blocks).map(|_| Vec::new()).collect(),
             owned: Vec::new(),
             registered: Vec::new(),
             free_ids: Vec::new(),
+            prefix: HashMap::new(),
+            slot_hash: vec![None; capacity_blocks],
             peak_used: 0,
             allocs: 0,
             frees: 0,
             grows: 0,
+            prefix_hits: 0,
             // Default watermarks sit at capacity: admission gates on raw
             // physical headroom and proactive preemption never fires —
             // the historical hard-capacity semantics.
@@ -137,10 +206,10 @@ impl BlockManager {
         SeqId(id)
     }
 
-    /// Drop a sequence: its id is recycled, and any block it still holds
-    /// returns to the free list. Callers that know their slots (e.g.
-    /// `SeqCache::drop`) release them first so the O(capacity) ownership
-    /// scan below only runs as a leak-proofing fallback.
+    /// Drop a sequence: its id is recycled, and any claim it still holds
+    /// is released. Callers that know their slots (e.g. `SeqCache::drop`)
+    /// release them first so the O(capacity) holder scan below only runs
+    /// as a leak-proofing fallback.
     pub fn unregister(&self, seq: SeqId) {
         let mut g = self.inner();
         let id = seq.0 as usize;
@@ -148,26 +217,24 @@ impl BlockManager {
             return; // already gone — unregister is idempotent for Drop
         }
         if g.owned[id] > 0 {
-            for phys in 0..g.owner.len() {
-                if g.owner[phys] == seq.0 {
-                    g.owner[phys] = NO_OWNER;
-                    g.free.push(phys);
-                    g.frees += 1;
+            for phys in 0..g.holders.len() {
+                if g.holders[phys].contains(&seq.0) {
+                    g.drop_claim(seq.0, phys).expect("holder just found");
                 }
             }
-            g.owned[id] = 0;
         }
         g.registered[id] = false;
         g.free_ids.push(seq.0);
     }
 
-    /// Allocate one block for `seq`. `None` when the arena is dry (the
-    /// scheduler's preemption trigger).
+    /// Allocate one PRIVATE block for `seq` (refcount 1). `None` when the
+    /// arena is dry (the scheduler's preemption trigger).
     pub fn alloc(&self, seq: SeqId) -> Option<usize> {
         let mut g = self.inner();
         debug_assert!(g.registered[seq.0 as usize], "alloc on unregistered seq");
         let phys = g.free.pop()?;
-        g.owner[phys] = seq.0;
+        debug_assert!(g.holders[phys].is_empty() && g.slot_hash[phys].is_none());
+        g.holders[phys].push(seq.0);
         g.owned[seq.0 as usize] += 1;
         g.allocs += 1;
         let used = g.used();
@@ -175,34 +242,82 @@ impl BlockManager {
         Some(phys)
     }
 
-    /// Return one block. Panics on double free (slot already free) and on
-    /// foreign free (slot held by another sequence) — both are memory-
-    /// safety bugs in the caller, checked in O(1) in every build.
+    /// Look up `hash` in the prefix index and, on a hit, add `seq` as a
+    /// holder of the published slot (refcount + 1; `used()` unchanged —
+    /// that is the memory saving). `None` on a miss, or when `seq` already
+    /// holds the slot (a sequence maps each physical page at most once).
+    pub fn acquire_shared(&self, seq: SeqId, hash: u64) -> Option<usize> {
+        let mut g = self.inner();
+        debug_assert!(g.registered[seq.0 as usize], "acquire on unregistered seq");
+        let phys = *g.prefix.get(&hash)?;
+        if g.holders[phys].contains(&seq.0) {
+            return None;
+        }
+        g.holders[phys].push(seq.0);
+        g.owned[seq.0 as usize] += 1;
+        g.prefix_hits += 1;
+        Some(phys)
+    }
+
+    /// Publish the content hash of a FULL block held by `seq` into the
+    /// prefix index, making it shareable. First publisher wins: returns
+    /// `false` (and indexes nothing) when the hash is already mapped, when
+    /// the slot is already published under another hash, or when `seq`
+    /// does not hold the slot.
+    pub fn publish(&self, seq: SeqId, phys: usize, hash: u64) -> bool {
+        let mut g = self.inner();
+        if phys >= g.holders.len() || !g.holders[phys].contains(&seq.0) {
+            return false;
+        }
+        if g.slot_hash[phys].is_some() || g.prefix.contains_key(&hash) {
+            return false;
+        }
+        g.prefix.insert(hash, phys);
+        g.slot_hash[phys] = Some(hash);
+        true
+    }
+
+    /// Remove `phys` from the prefix index (sole holder about to mutate
+    /// the content in place). Idempotent; no-op for unpublished slots.
+    pub fn unpublish_slot(&self, phys: usize) {
+        let mut g = self.inner();
+        if phys < g.holders.len() {
+            g.unpublish(phys);
+        }
+    }
+
+    /// Current holder count of `phys` (0 = free). A result > 1 means the
+    /// slot is shared and must be copied-on-write before in-place writes.
+    pub fn refcount(&self, phys: usize) -> usize {
+        let g = self.inner();
+        g.holders.get(phys).map_or(0, |h| h.len())
+    }
+
+    /// True when `phys` is currently published in the prefix index.
+    pub fn is_published(&self, phys: usize) -> bool {
+        let g = self.inner();
+        phys < g.slot_hash.len() && g.slot_hash[phys].is_some()
+    }
+
+    /// How many LEADING entries of `hashes` are currently published — the
+    /// admission-time estimate of how many prompt blocks a prefill would
+    /// map from the index instead of allocating. Read-only: acquires
+    /// nothing (the walk in `try_load_prefill_cached` does the claiming).
+    pub fn count_leading_hits(&self, hashes: &[u64]) -> usize {
+        let g = self.inner();
+        hashes.iter().take_while(|h| g.prefix.contains_key(h)).count()
+    }
+
+    /// Release one claim of `seq` on `phys`: the slot returns to the free
+    /// list (and leaves the prefix index) only when the LAST claim goes.
+    /// Panics on double free (slot already free) and on foreign free
+    /// (`seq` holds no claim on the slot) — both are memory-safety bugs in
+    /// the caller, checked in O(holders) in every build.
     pub fn release(&self, seq: SeqId, phys: usize) {
         let mut g = self.inner();
-        let violation = if phys >= g.owner.len() {
-            Some(format!("release of out-of-range block {phys}"))
-        } else if g.owner[phys] == NO_OWNER {
-            Some(format!("double free of block {phys}"))
-        } else if g.owner[phys] != seq.0 {
-            Some(format!(
-                "foreign free: seq {} releasing block {phys} owned by seq {}",
-                seq.0, g.owner[phys]
-            ))
-        } else {
-            None
-        };
-        match violation {
-            None => {
-                g.owner[phys] = NO_OWNER;
-                g.owned[seq.0 as usize] -= 1;
-                g.free.push(phys);
-                g.frees += 1;
-            }
-            Some(msg) => {
-                drop(g); // release the lock before unwinding
-                panic!("{msg}");
-            }
+        if let Err(msg) = g.drop_claim(seq.0, phys) {
+            drop(g); // release the lock before unwinding
+            panic!("{msg}");
         }
     }
 
@@ -214,7 +329,8 @@ impl BlockManager {
         for p in (old..new_capacity).rev() {
             g.free.push(p);
         }
-        g.owner.resize(new_capacity, NO_OWNER);
+        g.holders.resize_with(new_capacity, Vec::new);
+        g.slot_hash.resize(new_capacity, None);
         g.grows += 1;
     }
 
@@ -267,7 +383,8 @@ impl BlockManager {
         self.inner().used()
     }
 
-    /// Blocks currently held by `seq`.
+    /// Claims currently held by `seq` (a shared slot counts one claim per
+    /// holder).
     pub fn owned_by(&self, seq: SeqId) -> usize {
         let g = self.inner();
         g.owned.get(seq.0 as usize).copied().unwrap_or(0)
@@ -283,6 +400,8 @@ impl BlockManager {
             frees: g.frees,
             grows: g.grows,
             sequences: g.registered.iter().filter(|&&r| r).count(),
+            prefix_hits: g.prefix_hits,
+            published_blocks: g.prefix.len(),
         }
     }
 }
@@ -368,6 +487,91 @@ mod tests {
         let b = m.register();
         let p = m.alloc(a).unwrap();
         m.release(b, p);
+    }
+
+    #[test]
+    fn shared_slot_frees_only_at_refcount_zero() {
+        let m = BlockManager::new(2);
+        let a = m.register();
+        let b = m.register();
+        let p = m.alloc(a).unwrap();
+        assert!(m.publish(a, p, 0xfeed));
+        assert_eq!(m.acquire_shared(b, 0xfeed), Some(p));
+        assert_eq!(m.refcount(p), 2);
+        assert_eq!(m.used(), 1, "a shared slot counts once");
+        assert_eq!(m.owned_by(a), 1);
+        assert_eq!(m.owned_by(b), 1);
+        m.release(a, p);
+        assert_eq!(m.refcount(p), 1, "b's claim keeps the slot alive");
+        assert_eq!(m.used(), 1);
+        assert!(m.is_published(p), "surviving holders keep the index entry");
+        m.release(b, p);
+        assert_eq!(m.refcount(p), 0);
+        assert_eq!(m.used(), 0);
+        assert!(!m.is_published(p), "freeing the slot removes it from the index");
+        assert_eq!(m.acquire_shared(b, 0xfeed), None, "stale hash no longer hits");
+    }
+
+    #[test]
+    #[should_panic(expected = "foreign free")]
+    fn released_sharer_cannot_release_twice() {
+        let m = BlockManager::new(2);
+        let a = m.register();
+        let b = m.register();
+        let p = m.alloc(a).unwrap();
+        assert!(m.publish(a, p, 7));
+        assert_eq!(m.acquire_shared(b, 7), Some(p));
+        m.release(b, p);
+        m.release(b, p); // a still holds the slot: this is a foreign free
+    }
+
+    #[test]
+    fn publish_is_first_wins_and_holder_only() {
+        let m = BlockManager::new(4);
+        let a = m.register();
+        let b = m.register();
+        let pa = m.alloc(a).unwrap();
+        let pb = m.alloc(b).unwrap();
+        assert!(!m.publish(b, pa, 1), "only a holder may publish a slot");
+        assert!(m.publish(a, pa, 1));
+        assert!(!m.publish(b, pb, 1), "hash already mapped: first publisher wins");
+        assert!(!m.publish(a, pa, 2), "slot already published under another hash");
+        assert_eq!(m.stats().published_blocks, 1);
+        m.unpublish_slot(pa);
+        assert!(!m.is_published(pa));
+        assert_eq!(m.acquire_shared(b, 1), None);
+        assert_eq!(m.refcount(pa), 1, "unpublish does not release the holder");
+    }
+
+    #[test]
+    fn count_leading_hits_walks_the_chain() {
+        let m = BlockManager::new(4);
+        let a = m.register();
+        for (i, h) in [10u64, 11, 12].iter().enumerate() {
+            let p = m.alloc(a).unwrap();
+            assert_eq!(p, i);
+            assert!(m.publish(a, p, *h));
+        }
+        assert_eq!(m.count_leading_hits(&[10, 11, 12]), 3);
+        assert_eq!(m.count_leading_hits(&[10, 99, 12]), 1, "stops at the first miss");
+        assert_eq!(m.count_leading_hits(&[99]), 0);
+        assert_eq!(m.count_leading_hits(&[]), 0);
+        assert_eq!(m.stats().prefix_hits, 0, "counting acquires nothing");
+    }
+
+    #[test]
+    fn unregister_drops_shared_claims_without_freeing_live_slots() {
+        let m = BlockManager::new(4);
+        let a = m.register();
+        let b = m.register();
+        let p = m.alloc(a).unwrap();
+        assert!(m.publish(a, p, 3));
+        assert_eq!(m.acquire_shared(b, 3), Some(p));
+        m.alloc(b).unwrap();
+        m.unregister(b);
+        assert_eq!(m.refcount(p), 1, "a's claim survives b's unregister");
+        assert_eq!(m.used(), 1, "b's private block was freed");
+        assert!(m.is_published(p));
     }
 
     #[test]

@@ -4,7 +4,11 @@
 //! Physical fixed-size *blocks* (pages) live in one process-wide shared
 //! arena (`block_manager::BlockManager`); each sequence's cache allocates
 //! from it and addresses its blocks through a *block table*:
-//! `table[logical] = physical`. All
+//! `table[logical] = physical`. Pages are REFCOUNTED: identical full
+//! prompt blocks are shared across sequences through a content-hash
+//! prefix index (automatic prefix caching), freed only when the last
+//! holder releases them, and copied-on-write before any in-place
+//! mutation. All
 //! eviction mechanisms — the paper's PagedEviction and every baseline —
 //! operate purely on this host-side metadata; the device-side K/V buffers
 //! are never moved or compacted. The decode graph receives the table plus a
@@ -23,5 +27,5 @@ pub mod stats;
 
 pub use block::Block;
 pub use block_manager::{ArenaStats, BlockManager, SeqId};
-pub use seq_cache::{BlockAlloc, KvSnapshot, SeqCache, SCORE_CHANNELS};
+pub use seq_cache::{prefix_block_hashes, BlockAlloc, KvSnapshot, SeqCache, SCORE_CHANNELS};
 pub use stats::CacheStats;

@@ -19,6 +19,21 @@
 //! allocating `block_table_i32` / `valid_mask_f32` methods survive as thin
 //! compatibility wrappers, and `rebuild_*` keep the original from-scratch
 //! scan as the property-test/bench baseline.
+//!
+//! **Prefix caching.** [`SeqCache::try_load_prefill_cached`] walks the
+//! arena's content-hash prefix index ([`prefix_block_hashes`]: a hash
+//! chained over `(parent_hash, block entries)`, full blocks only) and maps
+//! every leading hit into this sequence's local slot space read-only —
+//! refcount + 1 on a page some other sequence already holds, zero new
+//! arena blocks — then materializes only the uncached tail, publishing its
+//! full blocks for the next prompt. The table/mask serialization is
+//! bit-identical to the uncached path (property-tested): sharing is pure
+//! arena accounting, invisible to the decode graph. Any in-place content
+//! mutation (token kill) goes through [`SeqCache::make_private`] first —
+//! copy-on-write while the page is shared (refcount > 1), unpublish when
+//! this sequence is the sole holder — so no policy ever prunes a shared
+//! page in place; whole-block eviction simply releases this sequence's
+//! reference (the page lives on for its other holders).
 
 use super::block::Block;
 use super::block_manager::{BlockManager, SeqId};
@@ -27,6 +42,46 @@ use super::stats::CacheStats;
 /// Number of importance channels carried per token
 /// (0 = V/K ratio, 1 = key L2 norm, 2 = KeyDiff cosine).
 pub const SCORE_CHANNELS: usize = 3;
+
+/// SplitMix64 finalizer — the mixing core of the prefix-block hash chain.
+fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Chained content hashes of the FULL blocks of a packed prefill stream:
+/// `hash[b]` covers every entry of blocks `0..=b` (positions, score bits
+/// and the caller's per-entry content `keys` — e.g. a hash of the raw
+/// token id), so equal hashes mean equal prefix content end to end. The
+/// partial tail block (if any) is never hashed: only full, append-closed
+/// blocks are shareable. This is the key the arena's prefix index is
+/// published and probed under.
+pub fn prefix_block_hashes(
+    block_size: usize,
+    tokens: &[(u32, [f32; 3])],
+    keys: &[u64],
+) -> Vec<u64> {
+    assert_eq!(tokens.len(), keys.len(), "one content key per entry");
+    let n_full = tokens.len() / block_size;
+    let mut out = Vec::with_capacity(n_full);
+    // chain seed also binds the block size: the same entries paged
+    // differently must never collide
+    let mut chain = mix64(0x70ae_51ca_0b10_c457 ^ block_size as u64);
+    for b in 0..n_full {
+        for i in b * block_size..(b + 1) * block_size {
+            let (pos, sc) = tokens[i];
+            chain = mix64(chain ^ keys[i]);
+            chain = mix64(chain ^ (u64::from(pos) << 1) ^ 1);
+            for s in sc {
+                chain = mix64(chain ^ u64::from(s.to_bits()));
+            }
+        }
+        out.push(chain);
+    }
+    out
+}
 
 /// Half-open dirty interval `[lo, hi)` over a serialization buffer.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -416,10 +471,161 @@ impl SeqCache {
             .expect("prefill exceeds bucket/arena");
     }
 
+    /// Prefix-cached prefill: like [`SeqCache::try_load_prefill`], but
+    /// walks the arena's content-hash prefix index first. Every LEADING
+    /// full block whose chain hash ([`prefix_block_hashes`]; `keys[i]` is
+    /// the caller's per-entry content key) is already published gets
+    /// mapped into this sequence's slot space by reference — refcount + 1
+    /// on the existing page, no arena allocation, no K/V
+    /// re-materialization — and only the uncached tail is loaded the
+    /// normal way, with its own full blocks published for the next prompt.
+    ///
+    /// The resulting block table, validity mask and live-token view are
+    /// bit-identical to the uncached path (property-tested): sharing is
+    /// pure physical-page accounting. Returns the number of hit blocks
+    /// (also recorded in `stats.prefix_hit_blocks`). On failure the claims
+    /// made so far stay owned by this sequence; dropping the cache
+    /// releases them (shared pages by refcount).
+    pub fn try_load_prefill_cached(
+        &mut self,
+        tokens: &[(u32, [f32; 3])],
+        keys: &[u64],
+        total_prompt_len: u32,
+    ) -> Result<usize, BlockAlloc> {
+        assert!(self.blocks.is_empty(), "load_prefill on non-empty cache");
+        let bs = self.block_size;
+        let hashes = prefix_block_hashes(bs, tokens, keys);
+
+        // -- map every leading published block by reference --
+        let mut hits = 0usize;
+        while hits < hashes.len() {
+            if self.local_free.is_empty() {
+                return Err(BlockAlloc::BucketFull);
+            }
+            let Some(arena_slot) = self.mgr.acquire_shared(self.seq, hashes[hits]) else {
+                break;
+            };
+            let local = self.local_free.pop().expect("bucket accounting broken");
+            self.push_new_block(local, arena_slot);
+            let li = self.blocks.len() - 1;
+            let blk = self.blocks.last_mut().unwrap();
+            blk.prefix_tracked = true;
+            for (pos, sc) in &tokens[li * bs..(li + 1) * bs] {
+                let off = blk.push(*pos, *sc);
+                debug_assert_eq!(off + 1, blk.fill);
+            }
+            self.mask[li * bs..(li + 1) * bs].fill(1.0);
+            hits += 1;
+        }
+        self.stats.prefix_hit_blocks += hits as u64;
+
+        // -- materialize the uncached tail exactly like the uncached path --
+        for (pos, sc) in &tokens[hits * bs..] {
+            if self.last_block_full() {
+                if self.local_free.is_empty() {
+                    return Err(BlockAlloc::BucketFull);
+                }
+                let arena_slot = match self.mgr.alloc(self.seq) {
+                    Some(p) => p,
+                    None => return Err(BlockAlloc::ArenaDry),
+                };
+                let local = self.local_free.pop().expect("bucket accounting broken");
+                self.push_new_block(local, arena_slot);
+                self.stats.blocks_allocated += 1;
+            }
+            let li = self.blocks.len() - 1;
+            let off = self.blocks.last_mut().unwrap().push(*pos, *sc);
+            self.mask[li * bs + off] = 1.0;
+        }
+        self.mask_dirty.mark(0, self.blocks.len() * bs);
+        self.stats.tokens_written += tokens.len() as u64;
+        self.stats.table_updates += 1;
+        self.next_position = total_prompt_len;
+
+        // -- publish the freshly materialized full blocks --
+        for b in hits..hashes.len() {
+            if self.mgr.publish(self.seq, self.blocks[b].arena_slot, hashes[b]) {
+                self.blocks[b].prefix_tracked = true;
+            }
+        }
+        Ok(hits)
+    }
+
     // -- eviction primitives -------------------------------------------------
 
+    /// Copy the shared page behind block `idx` into a fresh private arena
+    /// page (the copy-on-write). `phys` — the local device slot the block
+    /// table serializes — is untouched: in the device story the sequence's
+    /// bucket-local copy already exists, only the global page claim moves.
+    fn cow_block(&mut self, idx: usize) -> Result<(), BlockAlloc> {
+        let fresh = match self.mgr.alloc(self.seq) {
+            Some(p) => p,
+            None => return Err(BlockAlloc::ArenaDry),
+        };
+        let shared = self.blocks[idx].arena_slot;
+        self.mgr.release(self.seq, shared); // other holders keep the page
+        self.blocks[idx].arena_slot = fresh;
+        self.blocks[idx].prefix_tracked = false;
+        self.stats.cow_copies += 1;
+        Ok(())
+    }
+
+    /// Make block `idx` safe for in-place content mutation: while its
+    /// arena page is shared (refcount > 1) the page is frozen, so the
+    /// writer copies-on-write onto a fresh private page; a sole holder
+    /// instead removes the page from the prefix index (the published hash
+    /// is about to stop describing the content). Returns whether a copy
+    /// was made. `Err(ArenaDry)` — with nothing changed — when the
+    /// copy-on-write cannot claim a page; the scheduler avoids this by
+    /// unsharing up front while it can still preempt (see
+    /// `DecodeBackend::prepare_round`).
+    ///
+    /// The refcount check and the unpublish/copy are separate arena-lock
+    /// acquisitions: mutation decisions assume the single engine thread
+    /// that owns every `SeqCache` of an arena (today's scheduler). A
+    /// future multi-worker engine must fold check + act into one locked
+    /// arena operation before prefills can race against writers.
+    pub fn make_private(&mut self, idx: usize) -> Result<bool, BlockAlloc> {
+        if !self.blocks[idx].prefix_tracked {
+            return Ok(false);
+        }
+        let slot = self.blocks[idx].arena_slot;
+        if self.mgr.refcount(slot) > 1 {
+            self.cow_block(idx)?;
+            Ok(true)
+        } else {
+            self.mgr.unpublish_slot(slot);
+            self.blocks[idx].prefix_tracked = false;
+            Ok(false)
+        }
+    }
+
+    /// Copy-on-write every block whose arena page is currently shared
+    /// (refcount > 1), leaving sole-holder published pages in the index
+    /// untouched (they unpublish lazily on the first actual write). Called
+    /// by backends during round reservation for policies that hole-punch
+    /// tokens inside existing pages, so the fallible part of copy-on-write
+    /// happens while the scheduler can still preempt on `ArenaDry`.
+    /// Returns the number of copies made.
+    pub fn unshare_shared_blocks(&mut self) -> Result<usize, BlockAlloc> {
+        let mut copies = 0;
+        for idx in 0..self.blocks.len() {
+            if self.blocks[idx].prefix_tracked
+                && self.mgr.refcount(self.blocks[idx].arena_slot) > 1
+            {
+                self.cow_block(idx)?;
+                copies += 1;
+            }
+        }
+        Ok(copies)
+    }
+
     /// Structured eviction: drop logical block `idx` entirely. O(blocks)
-    /// table shift, zero device-data movement. Frees the physical slot.
+    /// table shift, zero device-data movement. Releases this sequence's
+    /// claim on the physical page — a page other sequences still share
+    /// stays allocated (and published) for them; only the last holder's
+    /// eviction frees it. No copy-on-write is ever needed here: dropping a
+    /// reference mutates nothing in place.
     pub fn evict_block(&mut self, idx: usize) {
         let blk = self.remove_block_at(idx);
         if blk.is_partial() {
@@ -434,8 +640,11 @@ impl SeqCache {
 
     /// Unstructured eviction: kill one token at (logical block, offset) —
     /// one mask float flip. Frees the block only once every token in it is
-    /// dead.
-    pub fn kill_token(&mut self, block_idx: usize, off: usize) {
+    /// dead. A kill mutates page content in place, so a shared page is
+    /// copied-on-write first ([`SeqCache::make_private`]); `Err(ArenaDry)`
+    /// — with the token still alive — when that copy cannot claim a page.
+    pub fn try_kill_token(&mut self, block_idx: usize, off: usize) -> Result<(), BlockAlloc> {
+        self.make_private(block_idx)?;
         let was_partial = self.blocks[block_idx].is_partial();
         let killed = self.blocks[block_idx].kill(off);
         assert!(killed, "killing dead token ({block_idx},{off})");
@@ -459,6 +668,20 @@ impl SeqCache {
         }
         self.stats.peak_partial_blocks =
             self.stats.peak_partial_blocks.max(self.partial_count as u64);
+        Ok(())
+    }
+
+    /// Panicking convenience over [`SeqCache::try_kill_token`] for callers
+    /// that guarantee copy-on-write headroom themselves (the scheduler
+    /// unshares killing sequences during reservation; standalone/test
+    /// callers run against roomy arenas).
+    pub fn kill_token(&mut self, block_idx: usize, off: usize) {
+        if let Err(e) = self.try_kill_token(block_idx, off) {
+            panic!(
+                "kill_token({block_idx},{off}): copy-on-write of a shared page \
+                 failed ({e:?}); unshare before killing (DecodeBackend::prepare_round)"
+            );
+        }
     }
 
     /// Bucket growth: runtime migrated the device buffer to a bigger
@@ -646,6 +869,13 @@ impl SeqCache {
         let seq = arena.register();
         let mut blocks = snap.blocks.clone();
         for blk in blocks.iter_mut() {
+            // A snapshot restores onto PRIVATE copies: blocks the suspended
+            // sequence mapped from the prefix index come back as fresh
+            // unpublished pages (the published originals live on with, and
+            // are freed by, their surviving holders). Pinned by the swap
+            // bit-identity tests — sharing is arena accounting only, so
+            // the restored serialization cannot tell the difference.
+            blk.prefix_tracked = false;
             match arena.alloc(seq) {
                 Some(page) => blk.arena_slot = page,
                 None => {
@@ -694,6 +924,24 @@ impl SeqCache {
             }
             if b.fill > self.block_size {
                 return Err("overfull block".into());
+            }
+            // prefix-cache consistency: only full, append-closed blocks are
+            // ever shareable, and a block outside the index must be the
+            // sole holder of its page (nobody can acquire an unpublished
+            // page, and CoW/unpublish clear the flag together)
+            if b.prefix_tracked {
+                if b.fill != self.block_size {
+                    return Err("prefix-tracked block not full".into());
+                }
+                if self.mgr.refcount(b.arena_slot) == 0 {
+                    return Err(format!("prefix-tracked block on free page {}", b.arena_slot));
+                }
+            } else if self.mgr.refcount(b.arena_slot) != 1 {
+                return Err(format!(
+                    "untracked block shares page {} (refcount {})",
+                    b.arena_slot,
+                    self.mgr.refcount(b.arena_slot)
+                ));
             }
         }
         // local slot free list accounts for every bucket slot exactly once
@@ -751,10 +999,12 @@ impl SeqCache {
 }
 
 /// Retiring or preempting a sequence is just dropping its cache: every
-/// block it still holds returns to the shared arena. Blocks are released
+/// claim it still holds returns to the shared arena — private pages free
+/// immediately, shared pages merely drop one reference and live on for
+/// their other holders (so evicting-from-running sequence A can never
+/// corrupt sequence B's view of a shared prefix). Blocks are released
 /// explicitly (O(blocks held)) so `unregister` never needs its
-/// O(arena-capacity) ownership-scan fallback on the hot retire/preempt
-/// path.
+/// O(arena-capacity) holder-scan fallback on the hot retire/preempt path.
 impl Drop for SeqCache {
     fn drop(&mut self) {
         for blk in self.blocks.drain(..) {
@@ -1061,6 +1311,200 @@ mod tests {
         }
         c.check_invariants().unwrap();
         r.check_invariants().unwrap();
+    }
+
+    fn keys_for(n: u32) -> Vec<u64> {
+        (0..n as u64).map(|i| i.wrapping_mul(0x9e3779b97f4a7c15) ^ 0xbeef).collect()
+    }
+
+    #[test]
+    fn cached_load_matches_uncached_serialization_bit_for_bit() {
+        let arena = BlockManager::new(64);
+        let toks: Vec<(u32, [f32; 3])> = (0..14).map(|i| (i, sc(i as f32))).collect();
+        let keys = keys_for(14);
+        let mut plain = SeqCache::new_shared(4, 8, &arena);
+        plain.load_prefill(&toks, 14);
+        let mut cached = SeqCache::new_shared(4, 8, &arena);
+        assert_eq!(
+            cached.try_load_prefill_cached(&toks, &keys, 14),
+            Ok(0),
+            "no publisher yet: zero hits"
+        );
+        assert_eq!(cached.block_table(8), plain.block_table(8));
+        assert_eq!(cached.valid_mask(8), plain.valid_mask(8));
+        assert_eq!(cached.live_token_list(), plain.live_token_list());
+        assert_eq!(cached.next_position(), plain.next_position());
+        cached.check_invariants().unwrap();
+        // the full blocks are now published: a third tenant maps all three
+        // by reference and only materializes the 2-token tail
+        let used_before = arena.used();
+        let mut third = SeqCache::new_shared(4, 8, &arena);
+        assert_eq!(third.try_load_prefill_cached(&toks, &keys, 14), Ok(3));
+        assert_eq!(third.stats.prefix_hit_blocks, 3);
+        assert_eq!(arena.used(), used_before + 1, "only the tail block is new");
+        assert_eq!(third.block_table(8), plain.block_table(8));
+        assert_eq!(third.valid_mask(8), plain.valid_mask(8));
+        assert_eq!(third.live_token_list(), plain.live_token_list());
+        third.check_invariants().unwrap();
+        cached.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn kill_on_shared_page_copies_on_write() {
+        let arena = BlockManager::new(16);
+        let toks: Vec<(u32, [f32; 3])> = (0..8).map(|i| (i, sc(i as f32))).collect();
+        let keys = keys_for(8);
+        let mut a = SeqCache::new_shared(4, 4, &arena);
+        assert_eq!(a.try_load_prefill_cached(&toks, &keys, 8), Ok(0));
+        let mut b = SeqCache::new_shared(4, 4, &arena);
+        assert_eq!(b.try_load_prefill_cached(&toks, &keys, 8), Ok(2));
+        assert_eq!(arena.used(), 2, "both prompts live on two physical pages");
+        let shared = b.blocks()[0].arena_slot;
+        assert_eq!(shared, a.blocks()[0].arena_slot);
+        let a_table = a.block_table(4).to_vec();
+        let a_mask = a.valid_mask(4).to_vec();
+        b.kill_token(0, 1); // in-place write: copy-on-write fires first
+        assert_eq!(b.stats.cow_copies, 1);
+        assert_ne!(b.blocks()[0].arena_slot, shared, "writer moved to a private page");
+        assert_eq!(arena.refcount(shared), 1, "a is the sole holder again");
+        assert_eq!(arena.used(), 3);
+        assert_eq!(a.block_table(4), a_table.as_slice(), "a's view is untouched");
+        assert_eq!(a.valid_mask(4), a_mask.as_slice());
+        assert!(a.blocks()[0].is_live(1));
+        assert!(!b.blocks()[0].is_live(1));
+        a.check_invariants().unwrap();
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evicting_shared_blocks_releases_by_refcount() {
+        let arena = BlockManager::new(16);
+        let toks: Vec<(u32, [f32; 3])> = (0..8).map(|i| (i, sc(0.5))).collect();
+        let keys = keys_for(8);
+        let mut a = SeqCache::new_shared(4, 4, &arena);
+        a.try_load_prefill_cached(&toks, &keys, 8).unwrap();
+        let mut b = SeqCache::new_shared(4, 4, &arena);
+        assert_eq!(b.try_load_prefill_cached(&toks, &keys, 8), Ok(2));
+        let s0 = a.blocks()[0].arena_slot;
+        b.evict_block(0);
+        assert_eq!(arena.used(), 2, "a still holds both pages");
+        assert_eq!(arena.refcount(s0), 1);
+        a.check_invariants().unwrap();
+        b.check_invariants().unwrap();
+        a.evict_block(0);
+        assert_eq!(arena.used(), 1, "the last holder frees the page");
+        assert_eq!(arena.refcount(s0), 0);
+        // the freed page left the index: a fresh identical prompt misses on
+        // block 0 (the chain stops at the first miss) and re-materializes
+        let mut c = SeqCache::new_shared(4, 4, &arena);
+        assert_eq!(c.try_load_prefill_cached(&toks, &keys, 8), Ok(0));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn kill_on_sole_holder_published_page_unpublishes_without_copy() {
+        let arena = BlockManager::new(16);
+        let toks: Vec<(u32, [f32; 3])> = (0..8).map(|i| (i, sc(1.0))).collect();
+        let keys = keys_for(8);
+        let mut a = SeqCache::new_shared(4, 4, &arena);
+        a.try_load_prefill_cached(&toks, &keys, 8).unwrap();
+        assert!(arena.is_published(a.blocks()[0].arena_slot));
+        a.kill_token(0, 0);
+        assert_eq!(a.stats.cow_copies, 0, "sole holder writes in place");
+        assert!(
+            !arena.is_published(a.blocks()[0].arena_slot),
+            "mutated content must leave the index"
+        );
+        a.check_invariants().unwrap();
+        // block 1 is still published, but the chain breaks at block 0
+        let mut b = SeqCache::new_shared(4, 4, &arena);
+        assert_eq!(b.try_load_prefill_cached(&toks, &keys, 8), Ok(0));
+    }
+
+    #[test]
+    fn unshare_shared_blocks_copies_only_shared_pages() {
+        let arena = BlockManager::new(16);
+        let toks: Vec<(u32, [f32; 3])> = (0..8).map(|i| (i, sc(2.0))).collect();
+        let keys = keys_for(8);
+        let mut a = SeqCache::new_shared(4, 4, &arena);
+        a.try_load_prefill_cached(&toks, &keys, 8).unwrap();
+        assert_eq!(a.unshare_shared_blocks(), Ok(0), "no sharers yet: nothing to copy");
+        assert!(
+            arena.is_published(a.blocks()[0].arena_slot),
+            "sole-holder pages stay published until actually written"
+        );
+        let mut b = SeqCache::new_shared(4, 4, &arena);
+        assert_eq!(b.try_load_prefill_cached(&toks, &keys, 8), Ok(2));
+        assert_eq!(b.unshare_shared_blocks(), Ok(2), "both hit pages get private copies");
+        assert_eq!(b.stats.cow_copies, 2);
+        assert_eq!(b.unshare_shared_blocks(), Ok(0), "idempotent once private");
+        assert_eq!(arena.used(), 4);
+        a.check_invariants().unwrap();
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_reports_arena_dry_without_side_effects() {
+        let arena = BlockManager::new(2);
+        let toks: Vec<(u32, [f32; 3])> = (0..8).map(|i| (i, sc(3.0))).collect();
+        let keys = keys_for(8);
+        let mut a = SeqCache::new_shared(4, 4, &arena);
+        a.try_load_prefill_cached(&toks, &keys, 8).unwrap();
+        let mut b = SeqCache::new_shared(4, 4, &arena);
+        assert_eq!(b.try_load_prefill_cached(&toks, &keys, 8), Ok(2));
+        assert_eq!(arena.free_count(), 0, "sharing filled nothing extra");
+        assert_eq!(b.try_kill_token(0, 0), Err(BlockAlloc::ArenaDry));
+        assert!(b.blocks()[0].is_live(0), "failed copy-on-write kills nothing");
+        assert_eq!(b.stats.cow_copies, 0);
+        a.check_invariants().unwrap();
+        b.check_invariants().unwrap();
+        // once the co-holder leaves, b is the sole holder: the kill
+        // unpublishes in place and needs no copy at all
+        drop(a);
+        assert_eq!(b.try_kill_token(0, 0), Ok(()));
+        assert_eq!(b.stats.cow_copies, 0);
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn property_cached_load_is_serialization_identical_to_uncached() {
+        propcheck::quick("prefill-cached-identity", |rng| {
+            let bs = *rng.choose(&[2usize, 4, 8]);
+            let cap = 4 + rng.usize_below(8);
+            let n = 1 + rng.usize_below(cap * bs - 1);
+            let toks: Vec<(u32, [f32; 3])> = (0..n as u32)
+                .map(|i| (i, [rng.f32(), rng.f32(), rng.f32()]))
+                .collect();
+            let keys: Vec<u64> = (0..n as u64).map(|i| mix64(i ^ 0x5ca1ab1e)).collect();
+            let arena = BlockManager::new(4 * cap);
+            let mut plain = SeqCache::new_shared(bs, cap, &arena);
+            plain
+                .try_load_prefill(&toks, n as u32)
+                .map_err(|e| format!("uncached load failed: {e:?}"))?;
+            // publisher (0 hits), then a borrower (full-block hits)
+            let mut keep_alive = Vec::new();
+            for expect_hits in [0usize, n / bs] {
+                let mut c = SeqCache::new_shared(bs, cap, &arena);
+                let hits = c
+                    .try_load_prefill_cached(&toks, &keys, n as u32)
+                    .map_err(|e| format!("cached load failed: {e:?}"))?;
+                if hits != expect_hits {
+                    return Err(format!("hits {hits} != expected {expect_hits}"));
+                }
+                if c.block_table(cap) != plain.block_table(cap) {
+                    return Err("block table drifted from the uncached path".into());
+                }
+                if c.valid_mask(cap) != plain.valid_mask(cap) {
+                    return Err("validity mask drifted from the uncached path".into());
+                }
+                if c.live_token_list() != plain.live_token_list() {
+                    return Err("live-token view drifted from the uncached path".into());
+                }
+                c.check_invariants()?;
+                keep_alive.push(c); // keep the claims so the next round hits
+            }
+            Ok(())
+        });
     }
 
     #[test]

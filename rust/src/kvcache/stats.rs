@@ -36,8 +36,16 @@ pub struct CacheStats {
     /// Server-lifetime high-water mark of the WHOLE shared arena's
     /// allocated blocks, snapshotted when this sequence retired (folded in
     /// from `BlockManager::stats`) — the server-wide physical footprint,
-    /// not a per-sequence window.
+    /// not a per-sequence window. A shared page counts once, so prefix
+    /// caching lowers this directly.
     pub peak_arena_blocks: u64,
+    /// Prompt blocks this sequence mapped from the arena's prefix index at
+    /// prefill (refcount + 1 on an existing page) instead of allocating
+    /// and re-materializing — the prefix-cache hit count.
+    pub prefix_hit_blocks: u64,
+    /// Copy-on-write page copies: a planned in-place write (token kill)
+    /// found the page shared, so the writer moved to a private copy first.
+    pub cow_copies: u64,
 }
 
 impl CacheStats {
@@ -54,6 +62,8 @@ impl CacheStats {
         self.preemptions += o.preemptions;
         self.swaps += o.swaps;
         self.peak_arena_blocks = self.peak_arena_blocks.max(o.peak_arena_blocks);
+        self.prefix_hit_blocks += o.prefix_hit_blocks;
+        self.cow_copies += o.cow_copies;
     }
 
     /// Cache-management operations per generated token — the paper's

@@ -72,6 +72,29 @@ fn artifacts_flag(spec: ArgSpec) -> ArgSpec {
     spec.opt("artifacts", "artifacts", "artifact directory (make artifacts)")
 }
 
+/// Parse an `--prefix-cache on|off` style switch.
+fn parse_on_off(flag: &str, s: &str) -> Result<bool> {
+    match s {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        _ => anyhow::bail!("--{flag} wants on|off (got {s:?})"),
+    }
+}
+
+/// FNV-style digest over the generated token streams (id order) — lets
+/// scripts assert two runs produced bit-identical outputs (e.g. the CI
+/// smoke comparing `--prefix-cache on` vs `off`).
+fn output_digest(outs: &[paged_eviction::scheduler::RequestOutput]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for o in outs {
+        h = (h ^ o.id).wrapping_mul(0x0000_0100_0000_01b3);
+        for &t in &o.tokens {
+            h = (h ^ (u64::from(t) + 1)).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
 /// Parse a `--watermarks low,high` value (fractions of the arena).
 fn parse_watermarks(s: &str) -> Result<(f64, f64)> {
     let (lo, hi) = s
@@ -130,6 +153,8 @@ fn cmd_serve() -> Result<()> {
                  (0 = recompute-only preemption)")
             .opt("watermarks", "0.85,0.95", "admission/preemption watermarks \
                  as low,high fractions of the arena")
+            .opt("prefix-cache", "on", "share identical prompt-prefix blocks \
+                 across requests by refcount (on|off)")
             .opt("config", "", "TOML config file ([server]/[cache] sections \
                  override the flags; see docs in util::toml)"),
     )
@@ -143,6 +168,7 @@ fn cmd_serve() -> Result<()> {
         watermark_low,
         watermark_high,
         swap_bytes: args.get_usize("swap-bytes"),
+        prefix_cache: parse_on_off("prefix-cache", args.get("prefix-cache"))?,
     };
     if !args.get("config").is_empty() {
         use paged_eviction::util::toml;
@@ -262,6 +288,10 @@ fn cmd_schedule() -> Result<()> {
          (0 = recompute-only preemption)")
     .opt("watermarks", "0.85,0.95", "admission/preemption watermarks \
          as low,high fractions of the arena")
+    .opt("prefix-cache", "on", "share identical prompt-prefix blocks \
+         across requests by refcount (on|off)")
+    .opt("shared-prefix", "0", "tokens of common prompt prefix across all \
+         requests (exercises the prefix cache, e.g. a shared system prompt)")
     .opt("seed", "7", "prompt RNG seed")
     .parse_or_exit(2);
 
@@ -274,17 +304,27 @@ fn cmd_schedule() -> Result<()> {
         watermark_low,
         watermark_high,
         swap_bytes: args.get_usize("swap-bytes"),
+        prefix_cache: parse_on_off("prefix-cache", args.get("prefix-cache"))?,
     };
     let mut sched = Scheduler::new_sim(cfg);
     let mut rng = Pcg32::new(args.get_u64("seed"));
+    let prompt_len = args.get_usize("prompt-len");
+    // clamped so the per-request recall tail keeps make_prompt's contract
+    // (>= 8 tokens, even length for an even --prompt-len)
+    let shared_len = args.get_usize("shared-prefix").min(prompt_len.saturating_sub(8)) & !1;
+    // the shared system-prompt stand-in: one common prefix, distinct tails
+    let shared: Vec<u32> = (0..shared_len).map(|_| rng.below(200)).collect();
     for i in 0..args.get_usize("requests") {
-        let p = recall::make_prompt(&mut rng, args.get_usize("prompt-len"), 0.4);
-        let mut req = Request::new(i as u64 + 1, p.tokens, args.get_usize("gen"));
+        let p = recall::make_prompt(&mut rng, prompt_len - shared_len, 0.4);
+        let mut prompt = shared.clone();
+        prompt.extend(p.tokens);
+        let mut req = Request::new(i as u64 + 1, prompt, args.get_usize("gen"));
         req.budget = args.get_usize("budget");
         req.policy = args.get("policy").to_string();
         sched.submit(req);
     }
-    let outs = sched.run_to_completion()?;
+    let mut outs = sched.run_to_completion()?;
+    outs.sort_by_key(|o| o.id);
     println!(
         "{} requests done: {:.0} tok/s, {} preemptions ({} swapped out, {} restored, \
          {} dropped), peak arena {} / {} blocks",
@@ -296,6 +336,12 @@ fn cmd_schedule() -> Result<()> {
         sched.swap_pool().dropped(),
         sched.arena().stats().peak_used,
         sched.arena().capacity(),
+    );
+    println!(
+        "prefix cache: {} prefix-hit blocks, {} cow copies, output digest {:016x}",
+        sched.prefix_hit_blocks,
+        sched.cow_copies,
+        output_digest(&outs),
     );
     for o in &outs {
         println!(

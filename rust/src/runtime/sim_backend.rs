@@ -21,8 +21,11 @@
 use anyhow::Result;
 
 use crate::eviction::{make_policy, Decision, EvictionPolicy, PrefillScores};
-use crate::kvcache::{BlockAlloc, BlockManager, KvSnapshot, SeqCache};
-use crate::scheduler::backend::{DecodeBackend, HostSnapshot, Prefilled, Restored};
+use crate::kvcache::{prefix_block_hashes, BlockAlloc, BlockManager, KvSnapshot, SeqCache};
+use crate::scheduler::backend::{
+    static_prefill_claim, DecodeBackend, HostSnapshot, Prefilled, Restored,
+};
+use crate::scheduler::Request;
 
 fn splitmix64(x: u64) -> u64 {
     let mut z = x.wrapping_add(0x9e3779b97f4a7c15);
@@ -75,11 +78,17 @@ pub struct SimBackend {
     pub page_size: usize,
     /// Toy vocabulary size (logit vector length).
     pub vocab: usize,
+    /// Prefix caching: prefills publish their full prompt blocks into the
+    /// arena's content-hash index and map leading hits by reference
+    /// instead of allocating. Off by default so direct backend users keep
+    /// the historical accounting; the scheduler flips it from
+    /// `SchedConfig::prefix_cache`.
+    pub prefix_cache: bool,
 }
 
 impl SimBackend {
     pub fn new(page_size: usize) -> SimBackend {
-        SimBackend { page_size, vocab: 211 }
+        SimBackend { page_size, vocab: 211, prefix_cache: false }
     }
 
     /// Deterministic importance channels for the token at `pos`. Channel
@@ -92,6 +101,52 @@ impl SimBackend {
             (((h >> 16) & 0xffff) as f32) / 65535.0,
             (((h >> 32) & 0xffff) as f32) / 65535.0,
         ]
+    }
+
+    /// Per-entry content key for the prefix-block hash chain: binds the
+    /// raw token identity into the chain, so two prompts hash equal
+    /// exactly when their kept (position, token) streams are equal.
+    fn content_key(pos: u32, tok: u32) -> u64 {
+        splitmix64(((pos as u64) << 32) ^ (tok as u64) ^ 0x00c0_ffee_5eed_0001)
+    }
+
+    /// Run the (deterministic) scorer over `prompt`, apply the policy's
+    /// prefill eviction, and return the packed entry stream plus the
+    /// per-entry content keys the prefix index hashes over.
+    fn kept_entries(
+        &self,
+        prompt: &[u32],
+        budget: usize,
+        policy: &dyn EvictionPolicy,
+    ) -> (Vec<(u32, [f32; 3])>, Vec<u64>) {
+        let len = prompt.len();
+        let mut channels = [
+            Vec::with_capacity(len),
+            Vec::with_capacity(len),
+            Vec::with_capacity(len),
+        ];
+        for (i, &t) in prompt.iter().enumerate() {
+            let sc = Self::tok_scores(i as u32, t);
+            for (c, ch) in channels.iter_mut().enumerate() {
+                ch.push(sc[c]);
+            }
+        }
+        let scores = PrefillScores { channels, len };
+        let keep = policy.prefill_keep(&scores, budget);
+        let mut entries = Vec::with_capacity(keep.len());
+        let mut keys = Vec::with_capacity(keep.len());
+        for &i in &keep {
+            entries.push((
+                i as u32,
+                [
+                    scores.channels[0][i],
+                    scores.channels[1][i],
+                    scores.channels[2][i],
+                ],
+            ));
+            keys.push(Self::content_key(i as u32, prompt[i]));
+        }
+        (entries, keys)
     }
 
     /// Logits for the current history hash: a deterministic sub-0.5 floor
@@ -112,6 +167,40 @@ impl DecodeBackend for SimBackend {
 
     type Snapshot = SimSnapshot;
 
+    fn set_prefix_cache(&mut self, enabled: bool) {
+        self.prefix_cache = enabled;
+    }
+
+    /// Admission charge with prefix hits subtracted: replays the policy's
+    /// prefill keep decision (cheap and deterministic here) and counts the
+    /// leading kept blocks already published in the arena's index — those
+    /// pages are pinned by refcount, not re-claimed.
+    fn prefill_claim(&self, arena: &BlockManager, req: &Request, page_size: usize) -> usize {
+        let full = static_prefill_claim(req, page_size);
+        if !self.prefix_cache {
+            return full;
+        }
+        let Ok(policy) = make_policy(&req.policy) else {
+            return full; // unknown policy fails at admission anyway
+        };
+        let (entries, keys) = self.kept_entries(&req.prompt, req.budget, policy.as_ref());
+        let hashes = prefix_block_hashes(self.page_size, &entries, &keys);
+        full.saturating_sub(arena.count_leading_hits(&hashes))
+    }
+
+    /// Unstructured policies hole-punch tokens inside pages every step:
+    /// copy-on-write their shared prefix pages now, while the scheduler
+    /// can still preempt on `ArenaDry`. Structured policies share safely
+    /// (whole-page eviction just drops a reference) and skip this.
+    fn prepare_round(&mut self, seq: &mut SimSeq) -> BlockAlloc {
+        if seq.policy.kills_tokens() {
+            if let Err(blocked) = seq.cache.unshare_shared_blocks() {
+                return blocked;
+            }
+        }
+        BlockAlloc::Ready
+    }
+
     fn prefill(
         &mut self,
         arena: &BlockManager,
@@ -123,39 +212,20 @@ impl DecodeBackend for SimBackend {
         anyhow::ensure!(budget >= self.page_size, "budget below one page");
         let bs = self.page_size;
         let len = prompt.len();
-        let mut channels = [
-            Vec::with_capacity(len),
-            Vec::with_capacity(len),
-            Vec::with_capacity(len),
-        ];
-        for (i, &t) in prompt.iter().enumerate() {
-            let sc = Self::tok_scores(i as u32, t);
-            for (c, ch) in channels.iter_mut().enumerate() {
-                ch.push(sc[c]);
-            }
-        }
-        let scores = PrefillScores { channels, len };
-        let keep = policy.prefill_keep(&scores, budget);
-        anyhow::ensure!(!keep.is_empty(), "policy kept zero tokens");
+        let (entries, keys) = self.kept_entries(prompt, budget, policy.as_ref());
+        anyhow::ensure!(!entries.is_empty(), "policy kept zero tokens");
 
         // bucket: kept tokens plus two pages of eviction-oscillation slack
-        let bucket = (keep.len() + bs - 1) / bs + 2;
+        let bucket = (entries.len() + bs - 1) / bs + 2;
         let mut cache = SeqCache::new_shared(bs, bucket, arena);
-        let entries: Vec<(u32, [f32; 3])> = keep
-            .iter()
-            .map(|&i| {
-                (
-                    i as u32,
-                    [
-                        scores.channels[0][i],
-                        scores.channels[1][i],
-                        scores.channels[2][i],
-                    ],
-                )
-            })
-            .collect();
-        if cache.try_load_prefill(&entries, len as u32).is_err() {
+        let loaded = if self.prefix_cache {
+            cache.try_load_prefill_cached(&entries, &keys, len as u32).map(|_| ())
+        } else {
+            cache.try_load_prefill(&entries, len as u32)
+        };
+        if loaded.is_err() {
             // dropping `cache` returns any partially claimed blocks
+            // (shared hit pages merely lose this sequence's reference)
             return Ok(Prefilled::OutOfMemory);
         }
         let mut state = 0u64;

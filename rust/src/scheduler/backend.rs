@@ -13,8 +13,23 @@
 
 use anyhow::Result;
 
-use crate::eviction::EvictionPolicy;
-use crate::kvcache::{BlockManager, SeqCache};
+use super::request::Request;
+use crate::eviction::{make_policy, EvictionPolicy};
+use crate::kvcache::{BlockAlloc, BlockManager, SeqCache};
+
+/// Arena blocks a fresh prefill of `req` claims, ignoring any
+/// prefix-cache state: the per-policy resident prompt
+/// ([`EvictionPolicy::prefill_resident`] — `FullCache` keeps the whole
+/// prompt regardless of budget) packed into pages. The fallback estimate
+/// behind [`DecodeBackend::prefill_claim`].
+pub fn static_prefill_claim(req: &Request, page_size: usize) -> usize {
+    let resident = match make_policy(&req.policy) {
+        Ok(p) => p.prefill_resident(req.prompt.len(), req.budget),
+        // an unknown policy fails at admission anyway; charge the pack
+        Err(_) => req.prompt.len().min(req.budget),
+    };
+    (resident + page_size - 1) / page_size
+}
 
 /// Outcome of a prefill attempt against the shared arena.
 pub enum Prefilled<S> {
@@ -70,6 +85,32 @@ pub trait DecodeBackend {
     /// Host-side snapshot of a suspended sequence (swap-to-host). Use
     /// [`NoSwap`] when the backend cannot produce one.
     type Snapshot: HostSnapshot;
+
+    /// Enable or disable the backend's prefix cache (refcounted shared
+    /// prompt pages). Called once by the scheduler from its config;
+    /// backends without a prefix cache ignore it.
+    fn set_prefix_cache(&mut self, _enabled: bool) {}
+
+    /// Arena blocks a fresh prefill of `req` would claim right NOW — the
+    /// scheduler's admission charge. Prefix-caching backends subtract the
+    /// leading prefix-index hits (those pages are pinned by refcount, not
+    /// re-claimed); the default is the policy-aware packed-prompt
+    /// estimate. Exactness is not required: admission is optimistic and
+    /// prefill itself is fallible.
+    fn prefill_claim(&self, _arena: &BlockManager, req: &Request, page_size: usize) -> usize {
+        static_prefill_claim(req, page_size)
+    }
+
+    /// Make `seq` safe for this round's decode step, called during
+    /// reservation BEFORE the batched decode: a policy that hole-punches
+    /// tokens inside existing pages must not write a shared
+    /// (refcount > 1) page in place, so its shared pages are
+    /// copied-on-write here — where an [`BlockAlloc::ArenaDry`] still has
+    /// a remedy (the scheduler preempts and retries). The default is a
+    /// no-op for backends without shared pages.
+    fn prepare_round(&mut self, _seq: &mut Self::Seq) -> BlockAlloc {
+        BlockAlloc::Ready
+    }
 
     /// Run the prompt, apply prefill eviction, pack the survivors into a
     /// paged cache allocated from `arena`.

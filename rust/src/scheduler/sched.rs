@@ -7,12 +7,13 @@
 //!  1. **admission** — fill free concurrency slots from the queue, gated
 //!     on the arena's LOW watermark
 //!     (`BlockManager::below_low_watermark`, O(1)) against the blocks the
-//!     admission claims *immediately*: the packed prompt for a fresh
-//!     request, the exact snapshot size for a swapped victim. Decode-time
-//!     growth is no longer reserved up front — worst-case estimates
-//!     over-reserve precisely when unstructured policies fragment pages
-//!     (the paper's Limitation 1); the low/high hysteresis band absorbs
-//!     the optimism instead;
+//!     admission claims *immediately*: the policy-aware resident prompt
+//!     minus the prompt blocks the prefix index will serve by refcount
+//!     for a fresh request, the exact snapshot size for a swapped victim.
+//!     Decode-time growth is no longer reserved up front — worst-case
+//!     estimates over-reserve precisely when unstructured policies
+//!     fragment pages (the paper's Limitation 1); the low/high hysteresis
+//!     band absorbs the optimism instead;
 //!  2. **watermark preemption** — while usage exceeds the HIGH watermark,
 //!     victim-select the **youngest** running sequence and evict it
 //!     proactively, before allocation hard-fails;
@@ -69,6 +70,13 @@ pub struct SchedConfig {
     /// Byte cap of the host-side swap pool preemption victims are parked
     /// in. `0` disables swap: every victim recomputes on readmission.
     pub swap_bytes: usize,
+    /// Automatic prefix caching: prefills publish their full prompt
+    /// blocks into the arena's content-hash index and map identical
+    /// leading blocks by refcount instead of re-materializing them
+    /// (`--prefix-cache on|off`). Greedy outputs are bit-identical either
+    /// way — pinned in `tests/prefix_cache.rs` — only the physical
+    /// footprint and prefill work change.
+    pub prefix_cache: bool,
 }
 
 impl Default for SchedConfig {
@@ -81,6 +89,7 @@ impl Default for SchedConfig {
             watermark_low: 0.85,
             watermark_high: 0.95,
             swap_bytes: 64 << 20,
+            prefix_cache: true,
         }
     }
 }
@@ -98,6 +107,15 @@ pub struct StepReport {
     pub swap_restored: usize,
     /// Requests rejected outright (can never fit / bad policy / failed).
     pub rejected: usize,
+    /// Prompt blocks this round's prefills mapped from the prefix index
+    /// (refcount + 1 on an existing page) instead of allocating.
+    pub prefix_hit_blocks: usize,
+    /// Copy-on-write page copies made while preparing this round (shared
+    /// pages unshared ahead of in-place token kills) by sequences still
+    /// running at decode time; copies made by a sequence preempted in the
+    /// same round fold into the scheduler-level `cow_copies` aggregate
+    /// instead.
+    pub cow_copies: usize,
 }
 
 /// Queued request plus everything needed to resume it after preemption —
@@ -157,12 +175,16 @@ struct Inflight<S> {
     preemptions: u32,
     /// Swap-restore readmissions for this request.
     swaps: u32,
+    /// `stats.cow_copies` watermark already folded into the scheduler's
+    /// round/aggregate counters (delta accounting across rounds).
+    cow_seen: u64,
 }
 
 enum AdmitOutcome {
     /// `restored` distinguishes a swap-pool restore from a prefill (fresh
-    /// or recompute) for the round report.
-    Admitted { restored: bool },
+    /// or recompute) for the round report; `hit_blocks` is the prefix-
+    /// index hit count of that prefill (0 for restores).
+    Admitted { restored: bool, hit_blocks: u64 },
     /// Arena too full right now; entry comes back for a later round.
     OutOfMemory(QueueEntry),
     /// Request failed hard (error output already emitted).
@@ -191,6 +213,12 @@ pub struct Scheduler<B: DecodeBackend> {
     pub swap_outs: u64,
     /// Readmissions served by restoring a snapshot (no recompute).
     pub swap_restores: u64,
+    /// Total prompt blocks served from the prefix index across all
+    /// prefills (including recompute readmissions — those hits are real
+    /// arena events too).
+    pub prefix_hit_blocks: u64,
+    /// Total copy-on-write page copies made during round preparation.
+    pub cow_copies: u64,
     started: Option<Instant>,
     admit_counter: u64,
 }
@@ -199,9 +227,10 @@ impl<B: DecodeBackend> Scheduler<B> {
     /// Build a scheduler around an existing backend. The shared arena is
     /// sized by `cfg.max_live_blocks` with the configured admission /
     /// preemption watermark band.
-    pub fn with_backend(backend: B, cfg: SchedConfig) -> Self {
+    pub fn with_backend(mut backend: B, cfg: SchedConfig) -> Self {
         let arena = BlockManager::new(cfg.max_live_blocks);
         arena.set_watermarks(cfg.watermark_low, cfg.watermark_high);
+        backend.set_prefix_cache(cfg.prefix_cache);
         let swap = SwapPool::new(cfg.swap_bytes);
         Scheduler {
             cfg,
@@ -219,6 +248,8 @@ impl<B: DecodeBackend> Scheduler<B> {
             preemptions: 0,
             swap_outs: 0,
             swap_restores: 0,
+            prefix_hit_blocks: 0,
+            cow_copies: 0,
             started: None,
             admit_counter: 0,
         }
@@ -279,19 +310,6 @@ impl<B: DecodeBackend> Scheduler<B> {
         std::mem::take(&mut self.finished)
     }
 
-    /// Blocks a fresh admission claims IMMEDIATELY: the packed prompt
-    /// (`min(prompt, budget)` tokens), ceiling-divided into pages. The old
-    /// gate also reserved `max_new_tokens` of worst-case growth up front —
-    /// over-reserving exactly when policies evict during decode, and
-    /// under-reserving when unstructured fragmentation exceeds the token
-    /// count (the paper's Limitation 1). Watermark admission drops the
-    /// guess: growth is absorbed by the low/high hysteresis band and
-    /// reclaimed by preemption above the high mark.
-    fn prefill_blocks(req: &Request, page_size: usize) -> usize {
-        let tokens = req.prompt.len().min(req.budget);
-        (tokens + page_size - 1) / page_size
-    }
-
     fn error_output(req: &Request) -> RequestOutput {
         RequestOutput {
             id: req.id,
@@ -316,14 +334,20 @@ impl<B: DecodeBackend> Scheduler<B> {
         let mut report = StepReport::default();
 
         // --- admission: fill every free concurrency slot, gated on the
-        // arena's low watermark against what the admission claims NOW
-        // (packed prompt, or a swapped victim's exact snapshot size) ---
+        // arena's low watermark against what the admission claims NOW:
+        // the policy-aware resident prompt MINUS the blocks the prefix
+        // index will serve by refcount (`DecodeBackend::prefill_claim` —
+        // cached blocks are pinned, not re-claimed), or a swapped
+        // victim's exact snapshot size. Worst-case decode growth is never
+        // reserved: the low/high hysteresis band absorbs it and
+        // preemption above the high mark reclaims it (the old worst-case
+        // gate over-reserved exactly when unstructured policies fragment
+        // pages — the paper's Limitation 1) ---
         while self.running.len() < self.cfg.max_concurrency {
             let Some(entry) = self.queue.pop_front() else { break };
-            let incoming = self
-                .swap
-                .arena_blocks_of(entry.req.id)
-                .unwrap_or_else(|| Self::prefill_blocks(&entry.req, self.cfg.page_size));
+            let incoming = self.swap.arena_blocks_of(entry.req.id).unwrap_or_else(|| {
+                self.backend.prefill_claim(&self.arena, &entry.req, self.cfg.page_size)
+            });
             // With nothing running the gate is bypassed: no sequence can
             // ever free blocks, so either the admission fits the raw
             // capacity now or the request can never run (rejected below
@@ -334,12 +358,14 @@ impl<B: DecodeBackend> Scheduler<B> {
                 break;
             }
             match self.admit(entry) {
-                AdmitOutcome::Admitted { restored } => {
+                AdmitOutcome::Admitted { restored, hit_blocks } => {
                     if restored {
                         report.swap_restored += 1;
                     } else {
                         report.prefilled += 1;
                     }
+                    report.prefix_hit_blocks += hit_blocks as usize;
+                    self.prefix_hit_blocks += hit_blocks;
                 }
                 AdmitOutcome::OutOfMemory(entry) => {
                     if self.running.is_empty() {
@@ -372,11 +398,18 @@ impl<B: DecodeBackend> Scheduler<B> {
         }
 
         // --- reservation + preemption: every sequence that needs a fresh
-        // block for this round claims it now, so the batched decode below
-        // cannot fail on memory ---
+        // block for this round claims it now — and every sequence whose
+        // policy will hole-punch tokens in place gets its shared prefix
+        // pages copied-on-write (`prepare_round`) — so the batched decode
+        // below can neither fail on memory nor write a shared page ---
         let mut i = 0;
         while i < self.running.len() {
-            let outcome = B::cache_mut(&mut self.running[i].seq).try_ensure_block();
+            let outcome = match self.backend.prepare_round(&mut self.running[i].seq) {
+                BlockAlloc::Ready => {
+                    B::cache_mut(&mut self.running[i].seq).try_ensure_block()
+                }
+                blocked => blocked,
+            };
             match outcome {
                 BlockAlloc::Ready => i += 1,
                 BlockAlloc::BucketFull => {
@@ -409,6 +442,15 @@ impl<B: DecodeBackend> Scheduler<B> {
                     }
                 }
             }
+        }
+
+        // fold this round's copy-on-write work into the report/aggregates
+        // (delta against each sequence's last-seen counter)
+        for f in self.running.iter_mut() {
+            let cow = B::cache(&f.seq).stats.cow_copies;
+            report.cow_copies += (cow - f.cow_seen) as usize;
+            self.cow_copies += cow - f.cow_seen;
+            f.cow_seen = cow;
         }
 
         // --- batched decode: ONE backend call for the whole running set ---
@@ -511,6 +553,10 @@ impl<B: DecodeBackend> Scheduler<B> {
                         entry.resume.len(),
                         entry.resume.len() - fed
                     );
+                    // the snapshot carries the cache's historical CoW
+                    // count: seed the delta watermark so it is not
+                    // recounted this round
+                    let cow_seen = B::cache(&seq).stats.cow_copies;
                     self.running.push(Inflight {
                         next_token: entry.next_token,
                         first_token_at: entry.first_token_at,
@@ -521,10 +567,11 @@ impl<B: DecodeBackend> Scheduler<B> {
                         admit_serial: self.admit_counter,
                         preemptions: entry.preemptions,
                         swaps: entry.swaps + 1,
+                        cow_seen,
                         req: entry.req,
                         seq,
                     });
-                    return AdmitOutcome::Admitted { restored: true };
+                    return AdmitOutcome::Admitted { restored: true, hit_blocks: 0 };
                 }
                 Ok(Restored::OutOfMemory) => {
                     // keep the snapshot parked for a later retry
@@ -562,6 +609,9 @@ impl<B: DecodeBackend> Scheduler<B> {
                     self.total_prompt_tokens += entry.req.prompt.len() as u64;
                 }
                 self.admit_counter += 1;
+                // a fresh cache's counters cover exactly this prefill
+                let hit_blocks = B::cache(&seq).stats.prefix_hit_blocks;
+                let cow_seen = B::cache(&seq).stats.cow_copies;
                 self.running.push(Inflight {
                     next_token: argmax(&logits),
                     // The first generated token exists the moment prefill
@@ -577,10 +627,11 @@ impl<B: DecodeBackend> Scheduler<B> {
                     admit_serial: self.admit_counter,
                     preemptions: entry.preemptions,
                     swaps: entry.swaps,
+                    cow_seen,
                     req: entry.req,
                     seq,
                 });
-                AdmitOutcome::Admitted { restored: false }
+                AdmitOutcome::Admitted { restored: false, hit_blocks }
             }
             Ok(Prefilled::OutOfMemory) => AdmitOutcome::OutOfMemory(entry),
             Err(e) => {
@@ -612,6 +663,11 @@ impl<B: DecodeBackend> Scheduler<B> {
         let f = self.running.remove(idx);
         self.preemptions += 1;
         let n_blocks = B::cache(&f.seq).n_blocks();
+        // fold the victim's not-yet-counted copy-on-write work into the
+        // aggregate NOW: the victim misses the post-reservation delta
+        // pass, and a later restore re-seeds its watermark from the
+        // snapshot (a recompute readmission starts a fresh cache at 0)
+        self.cow_copies += B::cache(&f.seq).stats.cow_copies - f.cow_seen;
         let Inflight {
             req,
             seq,

@@ -10,6 +10,12 @@
 //! back to the recompute path, which is always kept valid — the queue
 //! entry retains the produced tokens), so host memory for swap is a hard
 //! bound, not a hope.
+//!
+//! Snapshots are pure host-side copies: they pin NO arena blocks, so with
+//! refcounted prefix sharing an LRU drop (or discard) of a parked
+//! snapshot can never free a physical page another live sequence still
+//! shares — the victim's own claims were already released by refcount
+//! when it was preempted. Asserted in `tests/prefix_cache.rs`.
 
 use std::collections::VecDeque;
 

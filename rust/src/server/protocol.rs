@@ -6,7 +6,9 @@
 //!             "policy" ("paged"|"full"|"streaming"|...), "eos" (token id)
 //! Response:
 //!   {"id": 1, "tokens": [...], "text": "...", "finish": "length"|"eos",
-//!    "ttft_ms": .., "tpot_ms": .., "live_cache_tokens": ..}
+//!    "ttft_ms": .., "tpot_ms": .., "live_cache_tokens": ..,
+//!    "preemptions": .., "swaps": .., "prefix_hit_blocks": ..,
+//!    "cow_copies": ..}
 
 use anyhow::{Context, Result};
 
@@ -84,6 +86,11 @@ impl WireResponse {
             ("live_cache_tokens", Json::num(o.live_cache_tokens as f64)),
             ("preemptions", Json::num(o.preemptions as f64)),
             ("swaps", Json::num(o.swaps as f64)),
+            (
+                "prefix_hit_blocks",
+                Json::num(o.cache_stats.prefix_hit_blocks as f64),
+            ),
+            ("cow_copies", Json::num(o.cache_stats.cow_copies as f64)),
         ])
         .to_string()
     }
@@ -134,7 +141,11 @@ mod tests {
             live_cache_tokens: 64,
             preemptions: 2,
             swaps: 1,
-            cache_stats: CacheStats::default(),
+            cache_stats: CacheStats {
+                prefix_hit_blocks: 6,
+                cow_copies: 2,
+                ..CacheStats::default()
+            },
         };
         let line = WireResponse(out).to_line();
         let j = Json::parse(&line).unwrap();
@@ -143,5 +154,7 @@ mod tests {
         assert_eq!(j.get("finish").unwrap().as_str(), Some("length"));
         assert_eq!(j.get("preemptions").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("swaps").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("prefix_hit_blocks").unwrap().as_usize(), Some(6));
+        assert_eq!(j.get("cow_copies").unwrap().as_usize(), Some(2));
     }
 }

@@ -17,9 +17,11 @@ use paged_eviction::scheduler::{FinishReason, Request, SchedConfig, Scheduler};
 use paged_eviction::util::rng::Pcg32;
 
 /// PR 2 semantics on purpose: hard-capacity watermarks (no hysteresis
-/// band) and a disabled swap pool, so these tests keep pinning the
-/// recompute-on-readmission path. The swap/watermark behaviors layered on
-/// top are pinned in `tests/swap_preempt.rs`.
+/// band), a disabled swap pool and no prefix cache, so these tests keep
+/// pinning the recompute-on-readmission path with exact arena
+/// arithmetic. The swap/watermark behaviors are pinned in
+/// `tests/swap_preempt.rs`, the prefix-cache behaviors in
+/// `tests/prefix_cache.rs`.
 fn cfg(page: usize, conc: usize, arena_blocks: usize) -> SchedConfig {
     SchedConfig {
         model: "sim".into(),
@@ -29,6 +31,7 @@ fn cfg(page: usize, conc: usize, arena_blocks: usize) -> SchedConfig {
         watermark_low: 1.0,
         watermark_high: 1.0,
         swap_bytes: 0,
+        prefix_cache: false,
     }
 }
 
@@ -114,10 +117,10 @@ fn exhaustion_preempts_youngest_and_readmission_reproduces_tokens() {
     let mut rng = Pcg32::new(7);
     let pa = rand_prompt(&mut rng, 64); // 16 full blocks at prefill
     let pb = rand_prompt(&mut rng, 64);
-    // budget 16 understates the full policy's real footprint on purpose
-    // (the admission gate passes; reality exceeds it): prompt 64 tokens =
-    // 16 blocks each, + ceil(24/4) = 6 blocks of generation each. Arena of
-    // 36 admits both prefills (32 blocks) but cannot absorb 12 more.
+    // The policy-aware gate charges each full-policy prefill its real 16
+    // blocks (prompt 64 @ page 4, budget ignored by FullCache) and admits
+    // both (32 <= 36); the ungated decode growth — ceil(24/4) = 6 blocks
+    // each — then exceeds the arena, so preemption must reclaim it.
     let uncontended = {
         let mut s = Scheduler::new_sim(cfg(page, 2, 10_000));
         s.submit(mk_req(1, pa.clone(), gen, 16, "full"));
@@ -228,6 +231,42 @@ fn long_generation_with_small_budget_is_served_not_rejected() {
     assert_eq!(outs[0].finish, FinishReason::MaxTokens);
     assert_eq!(outs[0].tokens.len(), 120);
     assert_eq!(outs[0].preemptions, 0, "bounded footprint never preempts");
+}
+
+/// Satellite: admission charges the PER-POLICY resident prompt. FullCache
+/// keeps the whole prompt regardless of budget, so a `budget < prompt`
+/// request must be gated on its real 16-block claim — the old
+/// `min(prompt, budget)` estimate said 4 blocks, admitted it early, and
+/// churned through a doomed prefill (claim 12 blocks, hit ArenaDry, free
+/// them) every round until the elder sequence retired. Zero churn is
+/// pinned through the arena's exact alloc count.
+#[test]
+fn full_cache_admission_charges_whole_prompt_not_budget() {
+    let page = 4;
+    let mut rng = Pcg32::new(12);
+    let mut sched = Scheduler::new_sim(cfg(page, 2, 20));
+    // elder: 8-block prompt + 2 blocks of growth = 10 blocks for 8 rounds
+    sched.submit(mk_req(1, rand_prompt(&mut rng, 32), 8, 1024, "full"));
+    // understated budget: resident is the full 64-token prompt (16 blocks),
+    // which cannot fit next to the elder — must WAIT, not churn
+    sched.submit(mk_req(2, rand_prompt(&mut rng, 64), 4, 16, "full"));
+    let rep = sched.step().unwrap();
+    assert_eq!(rep.prefilled, 1, "the full-policy claim 16 > 12 free: gated");
+    assert_eq!(sched.running(), 1);
+    assert_eq!(sched.pending(), 1);
+    let mut outs = sched.run_to_completion().unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 2);
+    for o in &outs {
+        assert_eq!(o.finish, FinishReason::MaxTokens, "req {}", o.id);
+    }
+    assert_eq!(outs[0].tokens.len(), 8);
+    assert_eq!(outs[1].tokens.len(), 4);
+    assert_eq!(sched.preemptions, 0, "waiting, not thrash-admitting");
+    // exact alloc ledger: elder 8 + 2, late 16 + 1 — and NOT ONE block of
+    // churn from doomed prefill attempts (the old estimate's failure mode)
+    assert_eq!(sched.arena().stats().allocs, 27, "zero admission churn");
+    assert_eq!(sched.live_blocks(), 0);
 }
 
 #[test]

@@ -143,6 +143,155 @@ fn property_multi_tenant_arena_stays_consistent() {
     });
 }
 
+/// Satellite: N tenants acquiring/releasing refcounted shared slots
+/// against a mirror model — no double free, a slot frees (and leaves the
+/// prefix index) only at refcount 0, `used()` counts a shared slot once,
+/// and per-tenant claim accounting never drifts.
+#[test]
+fn property_refcounted_sharing_stays_consistent() {
+    use std::collections::HashSet;
+    propcheck::quick("arena-refcount-sharing", |rng: &mut Pcg32| {
+        let capacity = 4 + rng.usize_below(12);
+        let arena = BlockManager::new(capacity);
+        let n = 2 + rng.usize_below(4);
+        let ids: Vec<_> = (0..n).map(|_| arena.register()).collect();
+        // mirror model: holds[t] = slots tenant t claims (each at most once)
+        let mut holds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut published: Vec<(u64, usize)> = Vec::new();
+        let mut next_hash: u64 = 1;
+        for _ in 0..200 {
+            let t = rng.usize_below(n);
+            match rng.below(4) {
+                // private alloc, sometimes published into the index
+                0 => {
+                    if let Some(p) = arena.alloc(ids[t]) {
+                        holds[t].push(p);
+                        if rng.below(2) == 0 {
+                            let h = next_hash;
+                            next_hash += 1;
+                            if arena.publish(ids[t], p, h) {
+                                published.push((h, p));
+                            }
+                        }
+                    } else if arena.free_count() != 0 {
+                        return Err("alloc failed with free slots".into());
+                    }
+                }
+                // shared acquire through the index
+                1 => {
+                    if !published.is_empty() {
+                        let (h, p) = published[rng.usize_below(published.len())];
+                        let already = holds[t].contains(&p);
+                        match arena.acquire_shared(ids[t], h) {
+                            Some(got) => {
+                                if got != p {
+                                    return Err("hash resolved to the wrong slot".into());
+                                }
+                                if already {
+                                    return Err("double-acquire of a held slot".into());
+                                }
+                                holds[t].push(p);
+                            }
+                            None if already => {} // correct: at most one claim per slot
+                            None => return Err(format!("miss on published hash {h}")),
+                        }
+                    }
+                }
+                // release one claim
+                2 => {
+                    if !holds[t].is_empty() {
+                        let i = rng.usize_below(holds[t].len());
+                        let p = holds[t].swap_remove(i);
+                        arena.release(ids[t], p);
+                        if holds.iter().all(|hs| !hs.contains(&p)) {
+                            published.retain(|&(_, s)| s != p);
+                            if arena.refcount(p) != 0 {
+                                return Err("slot free but refcount > 0".into());
+                            }
+                        }
+                    }
+                }
+                // tenant evicted-from-running: release everything it holds
+                _ => {
+                    while let Some(p) = holds[t].pop() {
+                        arena.release(ids[t], p);
+                        if holds.iter().all(|hs| !hs.contains(&p)) {
+                            published.retain(|&(_, s)| s != p);
+                        }
+                    }
+                }
+            }
+            // arena vs mirror: global and per-slot accounting
+            let mut live: HashSet<usize> = HashSet::new();
+            for hs in &holds {
+                live.extend(hs.iter().copied());
+            }
+            if arena.used() != live.len() {
+                return Err(format!(
+                    "used {} != distinct held {} (shared slots must count once)",
+                    arena.used(),
+                    live.len()
+                ));
+            }
+            if arena.used() + arena.free_count() != arena.capacity() {
+                return Err("used + free != capacity".into());
+            }
+            for &p in &live {
+                let rc = holds.iter().filter(|hs| hs.contains(&p)).count();
+                if arena.refcount(p) != rc {
+                    return Err(format!("refcount({p}) {} != model {rc}", arena.refcount(p)));
+                }
+            }
+            for (t2, hs) in holds.iter().enumerate() {
+                if arena.owned_by(ids[t2]) != hs.len() {
+                    return Err("per-tenant claim count drifted".into());
+                }
+            }
+        }
+        // full drain: nothing may leak, free only at refcount 0 throughout
+        for (t, hs) in holds.iter_mut().enumerate() {
+            while let Some(p) = hs.pop() {
+                arena.release(ids[t], p);
+            }
+        }
+        if arena.used() != 0 {
+            return Err(format!("leak: {} slots after full drain", arena.used()));
+        }
+        Ok(())
+    });
+}
+
+/// Satellite: copy-on-write never aliases a writer — every borrower that
+/// unshares a page lands on a slot distinct from the shared original and
+/// from every other writer's copy.
+#[test]
+fn cow_never_aliases_a_writer() {
+    use std::collections::HashSet;
+    let arena = BlockManager::new(64);
+    let entries: Vec<(u32, [f32; 3])> = (0..8u32).map(|i| (i, [0.5; 3])).collect();
+    let keys: Vec<u64> = (0..8u64).map(|i| i.wrapping_mul(31) ^ 0xabc).collect();
+    let mut publisher = SeqCache::new_shared(4, 4, &arena);
+    publisher.try_load_prefill_cached(&entries, &keys, 8).unwrap();
+    let shared0 = publisher.blocks()[0].arena_slot;
+    let mut writers: Vec<SeqCache> = (0..4)
+        .map(|_| {
+            let mut c = SeqCache::new_shared(4, 4, &arena);
+            assert_eq!(c.try_load_prefill_cached(&entries, &keys, 8), Ok(2));
+            c
+        })
+        .collect();
+    assert_eq!(arena.refcount(shared0), 5, "publisher + 4 borrowers");
+    let mut seen = HashSet::from([shared0]);
+    for w in writers.iter_mut() {
+        assert_eq!(w.make_private(0), Ok(true), "shared page must be copied");
+        let fresh = w.blocks()[0].arena_slot;
+        assert!(seen.insert(fresh), "CoW aliased another writer's page");
+        w.check_invariants().unwrap();
+    }
+    assert_eq!(arena.refcount(shared0), 1, "only the publisher remains");
+    publisher.check_invariants().unwrap();
+}
+
 #[test]
 fn arena_capacity_is_a_hard_bound() {
     let arena = BlockManager::new(5);

@@ -1,0 +1,345 @@
+//! Refcounted prefix caching end to end on the deterministic sim backend:
+//! greedy outputs must be BIT-IDENTICAL with the prefix cache on and off —
+//! under contention (forced preemption), under structured eviction of
+//! shared prefix pages, and across swap round-trips — while the on-runs
+//! report nonzero `prefix_hit_blocks` and a lower physical peak.
+//!
+//! The sim backend's logits are a pure function of token history and the
+//! cached-load serialization is pinned bit-identical to the uncached path
+//! (seq_cache property tests), so any output drift here means a sequence
+//! observed another sequence's mutation through a shared page — exactly
+//! the corruption refcounts + copy-on-write must make impossible.
+
+use std::collections::HashSet;
+
+use paged_eviction::eviction::make_policy;
+use paged_eviction::kvcache::BlockManager;
+use paged_eviction::runtime::model_runner::argmax;
+use paged_eviction::runtime::SimBackend;
+use paged_eviction::scheduler::backend::{DecodeBackend, HostSnapshot, Prefilled, Restored};
+use paged_eviction::scheduler::{
+    FinishReason, Request, RequestOutput, SchedConfig, Scheduler, SwapPool,
+};
+use paged_eviction::util::rng::Pcg32;
+
+fn cfg(page: usize, conc: usize, arena_blocks: usize, prefix: bool) -> SchedConfig {
+    SchedConfig {
+        model: "sim".into(),
+        page_size: page,
+        max_concurrency: conc,
+        max_live_blocks: arena_blocks,
+        watermark_low: 1.0,
+        watermark_high: 1.0,
+        swap_bytes: 0,
+        prefix_cache: prefix,
+    }
+}
+
+fn mk_req(id: u64, prompt: Vec<u32>, gen: usize, budget: usize, policy: &str) -> Request {
+    let mut r = Request::new(id, prompt, gen);
+    r.budget = budget;
+    r.policy = policy.to_string();
+    r
+}
+
+fn rand_prompt(rng: &mut Pcg32, len: usize) -> Vec<u32> {
+    (0..len).map(|_| rng.below(200)).collect()
+}
+
+fn run(cfg: SchedConfig, reqs: &[Request]) -> (Vec<RequestOutput>, Scheduler<SimBackend>) {
+    let mut sched = Scheduler::new_sim(cfg);
+    for r in reqs {
+        sched.submit(r.clone());
+    }
+    let mut outs = sched.run_to_completion().unwrap();
+    outs.sort_by_key(|o| o.id);
+    (outs, sched)
+}
+
+fn assert_same_tokens(a: &[RequestOutput], b: &[RequestOutput], what: &str) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.tokens, y.tokens, "req {}: {what}", x.id);
+    }
+}
+
+/// The acceptance property: a shared-prompt workload (mixed policies,
+/// including an unstructured one that forces copy-on-write) produces
+/// bit-identical greedy outputs with the prefix cache on and off, hits on
+/// the shared blocks, and peaks LOWER physically when sharing is on.
+#[test]
+fn outputs_bit_identical_with_prefix_cache_on_and_off() {
+    let page = 4;
+    let mut rng = Pcg32::new(31);
+    let prompt = rand_prompt(&mut rng, 64); // 16 full pages of entries
+    let reqs = vec![
+        mk_req(1, prompt.clone(), 8, 1024, "full"),
+        mk_req(2, prompt.clone(), 8, 1024, "full"),
+        mk_req(3, prompt.clone(), 8, 1024, "paged"),
+        mk_req(4, prompt.clone(), 8, 1024, "streaming"),
+        // budget < prompt + generation: these kill tokens every step, so
+        // their shared prefix pages must be copied-on-write, never pruned
+        // in place (streaming is structured in the paper's taxonomy but
+        // drains its oldest page IN PLACE — same CoW obligation)
+        mk_req(5, prompt.clone(), 8, 64, "inverse_key_norm"),
+        mk_req(6, prompt, 8, 64, "streaming"),
+    ];
+
+    let (on, s_on) = run(cfg(page, 8, 10_000, true), &reqs);
+    let (off, s_off) = run(cfg(page, 8, 10_000, false), &reqs);
+
+    assert_same_tokens(&on, &off, "prefix cache must not change outputs");
+    for o in &on {
+        assert_eq!(o.finish, FinishReason::MaxTokens, "req {}", o.id);
+    }
+
+    // reqs 2..=6 each map all 16 prompt pages from req 1's publication
+    assert_eq!(s_on.prefix_hit_blocks, 80, "5 borrowers x 16 shared pages");
+    assert_eq!(s_off.prefix_hit_blocks, 0);
+    assert!(
+        s_on.cow_copies >= 2,
+        "both killing policies must copy-on-write their shared pages"
+    );
+    assert_eq!(s_off.cow_copies, 0);
+    let hits: u64 = on.iter().map(|o| o.cache_stats.prefix_hit_blocks).sum();
+    assert_eq!(hits, 80, "hits surface per request through CacheStats");
+    assert!(on[4].cache_stats.cow_copies > 0, "inverse_key_norm copied");
+    assert!(on[5].cache_stats.cow_copies > 0, "streaming copied");
+
+    // sharing peaks lower: 16 shared pages once vs six private copies
+    let peak_on = s_on.arena().stats().peak_used;
+    let peak_off = s_off.arena().stats().peak_used;
+    assert!(
+        peak_on < peak_off,
+        "shared prefixes must lower the physical peak (on {peak_on} >= off {peak_off})"
+    );
+    // everything drains: refcounted release leaks nothing
+    assert_eq!(s_on.arena().used(), 0);
+    assert_eq!(s_off.arena().used(), 0);
+}
+
+/// Two sequences share a 32-token prefix; one (paged) structurally evicts
+/// shared pages mid-decode, the other (full) outgrows a 24-block arena
+/// and gets preempted. Both must finish with outputs bit-identical to an
+/// uncontended run — eviction-from-running of one sharer can never
+/// corrupt the other's view.
+#[test]
+fn shared_prefix_survives_preemption_and_shared_page_eviction() {
+    let page = 4;
+    let mut rng = Pcg32::new(77);
+    let shared = rand_prompt(&mut rng, 32); // 8 full pages
+    let mut pa = shared.clone();
+    pa.extend(rand_prompt(&mut rng, 16));
+    let mut pb = shared;
+    pb.extend(rand_prompt(&mut rng, 16));
+    // req 1: paged, budget == prompt, so decode eviction drops one page
+    // (often a shared one) every time a new page fills
+    // req 2: full, growing to 12 prefill + 7 decode blocks — the
+    // designated preemption victim, sized to finish ALONE in the small
+    // arena (19 <= 20) while the joint demand cannot fit (>= 21 by round
+    // 13 in every eviction trajectory)
+    let reqs = vec![
+        mk_req(1, pa, 16, 48, "paged"),
+        mk_req(2, pb, 28, 1024, "full"),
+    ];
+
+    let (uncontended, s0) = run(cfg(page, 2, 10_000, true), &reqs);
+    assert_eq!(s0.preemptions, 0, "ample arena must not preempt");
+    assert!(s0.prefix_hit_blocks >= 8, "the shared prefix must hit");
+
+    // prefix caching alone must not change tokens
+    let (plain, _) = run(cfg(page, 2, 10_000, false), &reqs);
+    assert_same_tokens(&uncontended, &plain, "prefix cache changed outputs");
+
+    // recompute leg: joint demand crosses 20 while both run
+    let (contended, s1) = run(cfg(page, 2, 20, true), &reqs);
+    assert!(s1.preemptions >= 1, "a 20-block arena cannot absorb the growth");
+    assert!(s1.prefix_hit_blocks >= 8);
+    assert_same_tokens(&uncontended, &contended, "preemption lost or corrupted work");
+    assert!(contended[1].preemptions >= 1, "the youngest (full) was the victim");
+    assert_eq!(contended[0].preemptions, 0);
+
+    // swap leg: the victim's snapshot holds SHARED pages; restore comes
+    // back on private copies, still bit-identical
+    let (swapped, s2) = run(
+        SchedConfig { swap_bytes: 16 << 20, ..cfg(page, 2, 20, true) },
+        &reqs,
+    );
+    assert!(s2.preemptions >= 1);
+    assert!(s2.swap_outs >= 1, "the victim must park in the pool");
+    assert_same_tokens(&uncontended, &swapped, "swap round-trip drifted");
+
+    for s in [&s1, &s2] {
+        assert_eq!(s.arena().used(), 0, "refcounted release drains the arena");
+        assert!(s.arena().stats().peak_used <= 20, "capacity stays a hard bound");
+    }
+}
+
+/// Regression: StreamingLLM's sliding window kills tokens IN PLACE, so it
+/// must be unshared during reservation like the unstructured policies —
+/// when the arena is too dry for the copy-on-write, the scheduler must
+/// PREEMPT the streaming sequence (and replay it losslessly), not panic
+/// inside the decode-path CoW fallback.
+#[test]
+fn streaming_window_over_shared_prefix_preempts_instead_of_panicking() {
+    let page = 4;
+    let mut rng = Pcg32::new(99);
+    let prompt = rand_prompt(&mut rng, 32); // 8 full pages
+    let reqs = vec![
+        // publisher: keeps the pages shared and the arena busy
+        mk_req(1, prompt.clone(), 8, 1024, "full"),
+        // budget == prompt: the window starts killing on the first decode
+        // step, while all 8 of its prompt pages are still shared
+        mk_req(2, prompt, 8, 32, "streaming"),
+    ];
+    let (uncontended, s0) = run(cfg(page, 2, 10_000, true), &reqs);
+    assert_eq!(s0.preemptions, 0);
+
+    // 12 blocks: req1 holds 9 after its first reservation, so req2's
+    // 8-page unshare cannot fit — prepare_round must report ArenaDry and
+    // the scheduler must preempt req2 (pre-fix, the lazy decode-path CoW
+    // panicked here once the arena ran dry mid-kill)
+    let (outs, sched) = run(cfg(page, 2, 12, true), &reqs);
+    assert!(sched.preemptions >= 1, "the dry unshare must preempt");
+    assert!(sched.prefix_hit_blocks >= 8);
+    assert_same_tokens(&uncontended, &outs, "streaming victim lost work");
+    assert!(outs[1].preemptions >= 1, "the streaming sequence was the victim");
+    for o in &outs {
+        assert_eq!(o.finish, FinishReason::MaxTokens, "req {}", o.id);
+    }
+    assert_eq!(sched.arena().used(), 0);
+}
+
+/// Backend-level survivor integrity: drop one sharer mid-decode (the
+/// preemption primitive) and the survivor must keep decoding exactly like
+/// a sequence that never shared anything.
+#[test]
+fn dropping_a_sharer_never_disturbs_the_survivor() {
+    let page = 4;
+    let mut rng = Pcg32::new(5);
+    let prompt = rand_prompt(&mut rng, 64);
+
+    // solo reference: same prompt, nothing ever shared
+    let solo_tokens = {
+        let arena = BlockManager::new(1000);
+        let mut be = SimBackend::new(page);
+        be.set_prefix_cache(true);
+        let Prefilled::Ready { mut seq, logits } = be
+            .prefill(&arena, &prompt, 1024, make_policy("full").unwrap())
+            .unwrap()
+        else {
+            panic!("solo prefill OOM")
+        };
+        let mut tok = argmax(&logits);
+        let mut out = Vec::new();
+        for _ in 0..12 {
+            out.push(tok);
+            while !seq.cache.ensure_block() {
+                be.grow_bucket(&mut seq).unwrap();
+            }
+            let mut b = [(&mut seq, tok)];
+            tok = argmax(&be.decode_batch(&mut b).pop().unwrap().unwrap());
+        }
+        out
+    };
+
+    let arena = BlockManager::new(1000);
+    let mut be = SimBackend::new(page);
+    be.set_prefix_cache(true);
+    let Prefilled::Ready { seq: mut a, logits } = be
+        .prefill(&arena, &prompt, 1024, make_policy("full").unwrap())
+        .unwrap()
+    else {
+        panic!("prefill OOM")
+    };
+    let mut tok_a = argmax(&logits);
+    let Prefilled::Ready { seq: b, .. } = be
+        .prefill(&arena, &prompt, 1024, make_policy("full").unwrap())
+        .unwrap()
+    else {
+        panic!("prefill OOM")
+    };
+    assert_eq!(b.cache.stats.prefix_hit_blocks, 16, "the twin maps every page");
+    assert_eq!(arena.used(), 16, "two prompts, one set of physical pages");
+
+    let mut sharer = Some(b);
+    let mut out = Vec::new();
+    for step in 0..12 {
+        out.push(tok_a);
+        while !a.cache.ensure_block() {
+            be.grow_bucket(&mut a).unwrap();
+        }
+        let mut batch = [(&mut a, tok_a)];
+        tok_a = argmax(&be.decode_batch(&mut batch).pop().unwrap().unwrap());
+        if step == 5 {
+            // preemption stand-in: the co-holder vanishes mid-decode,
+            // releasing its shared claims by refcount
+            sharer = None;
+        }
+    }
+    drop(sharer);
+    assert_eq!(out, solo_tokens, "survivor drifted after its sharer dropped");
+    a.cache.check_invariants().unwrap();
+    drop(a);
+    assert_eq!(arena.used(), 0, "everything released by refcount");
+}
+
+/// Satellite: a parked swap snapshot pins NO arena blocks — snapshots are
+/// pure host copies — so LRU-dropping (or discarding) one can never free
+/// a page another live sequence still shares; and restoring one claims
+/// fresh PRIVATE pages, never a live sharer's.
+#[test]
+fn swap_pool_drops_and_restores_never_touch_shared_pages() {
+    let page = 4;
+    let mut rng = Pcg32::new(13);
+    let prompt = rand_prompt(&mut rng, 64);
+    let arena = BlockManager::new(64);
+    let mut be = SimBackend::new(page);
+    be.set_prefix_cache(true);
+    let Prefilled::Ready { seq: a, .. } = be
+        .prefill(&arena, &prompt, 1024, make_policy("full").unwrap())
+        .unwrap()
+    else {
+        panic!("prefill OOM")
+    };
+    let Prefilled::Ready { seq: b, .. } = be
+        .prefill(&arena, &prompt, 1024, make_policy("full").unwrap())
+        .unwrap()
+    else {
+        panic!("prefill OOM")
+    };
+    assert_eq!(b.cache.stats.prefix_hit_blocks, 16);
+    let used = arena.used();
+    assert_eq!(used, 16);
+
+    // park b's snapshot, then LRU-drop it by overfilling a tight pool
+    let snap_b = be.snapshot(&b).expect("sim backend snapshots");
+    let bytes = snap_b.host_bytes();
+    let mut pool = SwapPool::new(bytes + bytes / 2);
+    assert!(pool.insert(2, snap_b));
+    assert!(pool.insert(1, be.snapshot(&a).expect("snapshot a")));
+    assert_eq!(pool.dropped(), 1, "the tight cap LRU-dropped b's snapshot");
+    assert_eq!(arena.used(), used, "dropping a parked snapshot frees NOTHING");
+    a.cache.check_invariants().unwrap();
+    b.cache.check_invariants().unwrap();
+
+    // discarding the survivor's entry is equally inert
+    pool.discard(1);
+    assert_eq!(arena.used(), used);
+
+    // a fresh snapshot of b restores onto private pages disjoint from a's
+    let snap = be.snapshot(&b).expect("snapshot b");
+    drop(b); // the victim itself is gone (preempted); a keeps the pages
+    assert_eq!(arena.used(), used, "a's claims keep every shared page alive");
+    let Restored::Ready(r) = be.restore(&arena, &snap).unwrap() else {
+        panic!("restore OOM")
+    };
+    assert_eq!(arena.used(), used + 16, "restore claims fresh private pages");
+    let a_pages: HashSet<usize> = a.cache.blocks().iter().map(|bl| bl.arena_slot).collect();
+    assert!(
+        r.cache.blocks().iter().all(|bl| !a_pages.contains(&bl.arena_slot)),
+        "a restored snapshot must never alias a live sharer's pages"
+    );
+    r.cache.check_invariants().unwrap();
+}

@@ -30,6 +30,10 @@ fn cfg(page: usize, conc: usize, arena_blocks: usize) -> SchedConfig {
         watermark_low: 1.0,
         watermark_high: 1.0,
         swap_bytes: 0,
+        // prefix caching stays ON here: every prompt is distinct random,
+        // so it must be a no-op — which these exact-accounting tests
+        // silently verify on top of their swap assertions
+        prefix_cache: true,
     }
 }
 

@@ -49,6 +49,11 @@ CEILINGS_US = {
     "inverse_key_norm global scan (512 tokens)": 2000.0,
     "JSON request parse": 500.0,
     "argmax (4096 logits)": 250.0,
+    # prefix cache: hash a 4-block chain + probe the index (admission
+    # cost), and the full hit-4-pages + one copy-on-write cycle. Both are
+    # per-PREFILL costs, not per-token, so the ceilings are generous.
+    "prefix_lookup chain+probe (4 blocks of 16)": 250.0,
+    "cow_copy cycle (hit 4 blocks + make_private)": 2000.0,
 }
 
 

@@ -30,6 +30,8 @@ def healthy_rows():
         "inverse_key_norm global scan (512 tokens)": 20.0,
         "JSON request parse": 3.0,
         "argmax (4096 logits)": 4.0,
+        "prefix_lookup chain+probe (4 blocks of 16)": 5.0,
+        "cow_copy cycle (hit 4 blocks + make_private)": 40.0,
     }
     return rows
 
