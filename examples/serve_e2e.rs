@@ -18,7 +18,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 use paged_eviction::scheduler::SchedConfig;
-use paged_eviction::server::serve::{serve_forever, spawn_engine};
+use paged_eviction::server::serve::{serve_forever, spawn_engine, ServeOpts};
 use paged_eviction::util::args::ArgSpec;
 use paged_eviction::util::json::Json;
 use paged_eviction::util::rng::Pcg32;
@@ -48,7 +48,7 @@ fn main() -> Result<()> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     std::thread::spawn(move || {
-        let _ = serve_forever(listener, handle, Arc::new(Mutex::new(0)));
+        let _ = serve_forever(listener, handle, ServeOpts::default());
     });
 
     let n_req = args.get_usize("requests");

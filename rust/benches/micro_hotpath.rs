@@ -22,6 +22,7 @@ use common::{bench_args, section};
 use paged_eviction::eviction::{make_policy, Decision};
 use paged_eviction::kvcache::{prefix_block_hashes, BlockManager, SeqCache};
 use paged_eviction::runtime::model_runner::argmax;
+use paged_eviction::scheduler::{Request, SchedConfig, Scheduler};
 use paged_eviction::server::protocol::WireRequest;
 use paged_eviction::util::args::ArgSpec;
 use paged_eviction::util::json::Json;
@@ -164,6 +165,30 @@ fn main() {
         borrower.make_private(0).expect("arena has CoW headroom");
     }) * 1e6;
     record(&mut t, &mut rows, "cow_copy cycle (hit 4 blocks + make_private)", us);
+
+    // cancel_request: the session API's synchronous teardown — admit one
+    // request (prefill), run one decode round, cancel it mid-decode. The
+    // assertion inside is the contract: every arena block is back the
+    // moment cancel returns.
+    let mut csched = Scheduler::new_sim(SchedConfig {
+        page_size: 16,
+        max_concurrency: 4,
+        max_live_blocks: 4096,
+        ..Default::default()
+    });
+    let cprompt: Vec<u32> = (0..32u32).collect();
+    let mut next_id = 0u64;
+    let us = time_it(iters * 10, || {
+        next_id += 1;
+        let mut req = Request::new(next_id, cprompt.clone(), 8);
+        req.budget = 64;
+        csched.submit(req);
+        csched.step().expect("schedule step");
+        assert!(csched.cancel(next_id), "request must be cancellable mid-decode");
+        assert_eq!(csched.live_blocks(), 0, "cancel returned every block");
+        let _ = csched.take_events();
+    }) * 1e6;
+    record(&mut t, &mut rows, "cancel_request (submit+prefill+cancel)", us);
 
     print!("{}", t.render());
 

@@ -1,0 +1,35 @@
+//! Session-based serving API — the crate's public entry point for
+//! request lifecycle.
+//!
+//! The benchmark-shaped surface (`Request::new(id, ..)` with
+//! caller-assigned ids + a blocking drain of finished outputs) is still
+//! available on [`crate::scheduler::Scheduler`] for tests and benches,
+//! but real serving goes through here:
+//!
+//!   * [`RequestBuilder`] — prompt, `max_new_tokens`, stop-token set,
+//!     per-request eviction policy + KV budget override,
+//!     [`Priority`], optional deadline in scheduler steps;
+//!   * [`Session::submit`] — stamps a server-assigned [`RequestId`]
+//!     (raced submissions can never collide) and returns a
+//!     [`RequestHandle`];
+//!   * [`RequestHandle`] — streams [`SeqEvent`]s
+//!     (`Prefilled{ttft}` → `Token{tok, step}`* → `Finished(output)`,
+//!     with `Preempted`/`Resumed` interleaved under memory pressure)
+//!     and supports synchronous [`RequestHandle::cancel`]: arena blocks
+//!     freed mid-decode, parked swap snapshots dropped, shared prefix
+//!     pages unpinned by refcount, queue entries purged.
+//!
+//! Greedy outputs are bit-identical between the event stream and the
+//! legacy `take_finished` drain — the concatenated `Token` events ARE
+//! `Finished(out).tokens` — pinned in `tests/api_session.rs`, including
+//! under forced preemption.
+
+pub mod session;
+pub mod types;
+
+pub use session::{HandleState, RequestHandle, Session};
+pub use types::{RequestBuilder, RequestId, SeqEvent};
+
+// The scheduling class lives with the core request type; re-exported
+// here so `api` is a self-sufficient import surface.
+pub use crate::scheduler::request::Priority;

@@ -1,0 +1,255 @@
+//! The session: an engine handle that owns a [`Scheduler`] and exposes
+//! the request lifecycle as per-request event streams.
+//!
+//! A [`Session`] is a cheaply cloneable handle (`Arc<Mutex<..>>`); the
+//! lock is taken per scheduling round and per handle poll, never inside
+//! the decode hot path. One thread drives [`Session::step`] (the engine
+//! loop); any holder of a [`RequestHandle`] — same thread or another —
+//! can poll events or cancel. Cancellation is SYNCHRONOUS: by the time
+//! [`RequestHandle::cancel`] returns, the request's arena blocks are
+//! released (shared prefix pages unpinned by refcount), any parked swap
+//! snapshot is discarded, and its queue entry is purged.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::Result;
+
+use super::types::{RequestBuilder, RequestId, SeqEvent};
+use crate::eviction::make_policy;
+use crate::scheduler::{DecodeBackend, SchedConfig, Scheduler, StepReport};
+
+/// Lifecycle of a request's event stream as seen by its handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HandleState {
+    /// Queued or running; more events may arrive.
+    Active,
+    /// Terminal `Finished` event emitted (it may still be queued in the
+    /// handle, waiting to be polled).
+    Finished,
+    /// Cancelled; the stream ended without a `Finished` event.
+    Cancelled,
+}
+
+struct Stream {
+    events: VecDeque<SeqEvent>,
+    state: HandleState,
+}
+
+struct Inner<B: DecodeBackend> {
+    sched: Scheduler<B>,
+    streams: HashMap<u64, Stream>,
+    /// Monotonic server-assigned id counter (never reused).
+    next_id: u64,
+}
+
+impl<B: DecodeBackend> Inner<B> {
+    /// Shared cancel path: tear the request down in the scheduler and end
+    /// its stream without a `Finished` event.
+    fn cancel(&mut self, id: RequestId) -> bool {
+        let ok = self.sched.cancel(id.raw());
+        if ok {
+            if let Some(s) = self.streams.get_mut(&id.raw()) {
+                s.state = HandleState::Cancelled;
+            }
+        }
+        ok
+    }
+
+    /// Move this round's scheduler events into the per-request streams.
+    fn route_events(&mut self) {
+        for (id, ev) in self.sched.take_events() {
+            let Some(s) = self.streams.get_mut(&id) else {
+                continue; // legacy direct-scheduler submission: no stream
+            };
+            match s.state {
+                HandleState::Cancelled => {} // stream ended; drop the tail
+                _ => {
+                    if matches!(ev, SeqEvent::Finished(_)) {
+                        s.state = HandleState::Finished;
+                    }
+                    s.events.push_back(ev);
+                }
+            }
+        }
+    }
+}
+
+/// Cloneable handle to one engine: submit, step, cancel.
+pub struct Session<B: DecodeBackend> {
+    inner: Arc<Mutex<Inner<B>>>,
+}
+
+impl<B: DecodeBackend> Clone for Session<B> {
+    fn clone(&self) -> Self {
+        Session { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<B: DecodeBackend> Session<B> {
+    pub fn with_backend(backend: B, cfg: SchedConfig) -> Self {
+        Self::from_scheduler(Scheduler::with_backend(backend, cfg))
+    }
+
+    /// Wrap an already-built scheduler (e.g. the PJRT-backed one). The
+    /// session consumes the full event stream, so per-token streaming
+    /// events are switched on here.
+    pub fn from_scheduler(mut sched: Scheduler<B>) -> Self {
+        sched.set_event_streaming(true);
+        Session {
+            inner: Arc::new(Mutex::new(Inner {
+                sched,
+                streams: HashMap::new(),
+                next_id: 0,
+            })),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner<B>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Submit a request: stamps a fresh server-assigned [`RequestId`]
+    /// (ids are monotonic and never reused, so raced submissions cannot
+    /// collide) and returns the handle streaming its events. Fails fast
+    /// on an empty prompt or unknown eviction policy — nothing is queued
+    /// on error.
+    pub fn submit(&self, builder: RequestBuilder) -> Result<RequestHandle<B>> {
+        anyhow::ensure!(builder.prompt_len() > 0, "empty prompt");
+        let mut g = self.lock();
+        g.next_id += 1;
+        let id = RequestId(g.next_id);
+        let req = builder.build(id, &g.sched.cfg);
+        make_policy(&req.policy)?; // surface bad policy names at submit
+        g.streams.insert(
+            id.raw(),
+            Stream { events: VecDeque::new(), state: HandleState::Active },
+        );
+        g.sched.submit(req);
+        // a submit-time rejection (e.g. zero budget) emits Finished now
+        g.route_events();
+        drop(g);
+        Ok(RequestHandle { inner: Arc::clone(&self.inner), id })
+    }
+
+    /// One scheduling round; events are routed to their handles before
+    /// this returns.
+    pub fn step(&self) -> Result<StepReport> {
+        let mut g = self.lock();
+        let rep = g.sched.step()?;
+        g.route_events();
+        Ok(rep)
+    }
+
+    /// Step until nothing is queued or running.
+    pub fn run_until_idle(&self) -> Result<()> {
+        while !self.is_idle() {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Cancel by id (see [`RequestHandle::cancel`]). `false` when the id
+    /// is unknown or the request already finished — a clean no-op.
+    pub fn cancel(&self, id: RequestId) -> bool {
+        self.lock().cancel(id)
+    }
+
+    /// Drop the retained stream tail of a finished/cancelled request
+    /// (long-lived servers call this once a stream has been delivered).
+    pub fn forget(&self, id: RequestId) {
+        self.lock().streams.remove(&id.raw());
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.lock().sched.is_idle()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.lock().sched.pending()
+    }
+
+    pub fn running(&self) -> usize {
+        self.lock().sched.running()
+    }
+
+    /// Escape hatch: run `f` against the locked scheduler (stats, arena
+    /// accounting, legacy drains). Do not call other session methods from
+    /// inside `f` — the session lock is held.
+    pub fn with_scheduler<R>(&self, f: impl FnOnce(&mut Scheduler<B>) -> R) -> R {
+        f(&mut self.lock().sched)
+    }
+}
+
+impl Session<crate::runtime::SimBackend> {
+    /// Session over the always-built deterministic sim backend.
+    pub fn new_sim(cfg: SchedConfig) -> Self {
+        Self::from_scheduler(Scheduler::new_sim(cfg))
+    }
+}
+
+/// Handle to one submitted request: poll its event stream, cancel it.
+pub struct RequestHandle<B: DecodeBackend> {
+    inner: Arc<Mutex<Inner<B>>>,
+    id: RequestId,
+}
+
+impl<B: DecodeBackend> Clone for RequestHandle<B> {
+    fn clone(&self) -> Self {
+        RequestHandle { inner: Arc::clone(&self.inner), id: self.id }
+    }
+}
+
+impl<B: DecodeBackend> RequestHandle<B> {
+    fn lock(&self) -> MutexGuard<'_, Inner<B>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Pop the next queued event, if any (non-blocking; the engine thread
+    /// must keep stepping the session for new events to appear).
+    pub fn poll(&self) -> Option<SeqEvent> {
+        self.lock().streams.get_mut(&self.id.raw())?.events.pop_front()
+    }
+
+    /// Drain every queued event.
+    pub fn drain(&self) -> Vec<SeqEvent> {
+        match self.lock().streams.get_mut(&self.id.raw()) {
+            Some(s) => s.events.drain(..).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Stream state; `Cancelled`/`Finished` are terminal. A forgotten
+    /// stream reports `Cancelled` (its tail is gone either way).
+    pub fn state(&self) -> HandleState {
+        self.lock()
+            .streams
+            .get(&self.id.raw())
+            .map_or(HandleState::Cancelled, |s| s.state)
+    }
+
+    /// Terminal and fully drained?
+    pub fn is_done(&self) -> bool {
+        let g = self.lock();
+        match g.streams.get(&self.id.raw()) {
+            Some(s) => s.state != HandleState::Active && s.events.is_empty(),
+            None => true,
+        }
+    }
+
+    /// Cancel this request NOW. On `true`, the scheduler has already —
+    /// synchronously, before this returns — dropped the sequence's cache
+    /// (every arena block released; shared prefix pages unpinned by
+    /// refcount, so a page a live sharer holds survives), discarded any
+    /// parked swap-pool snapshot, and purged the queue entry. No
+    /// `Finished` event is emitted: cancellation is not completion.
+    /// `false` when the request already finished (or was never known) —
+    /// a clean no-op.
+    pub fn cancel(&self) -> bool {
+        self.lock().cancel(self.id)
+    }
+}

@@ -1,0 +1,209 @@
+//! Public request/response vocabulary of the session API: server-assigned
+//! request identities, the per-sequence event stream, and the request
+//! builder the engine stamps at submission.
+
+use crate::scheduler::{Priority, Request, RequestOutput, SchedConfig};
+
+/// Server-assigned identity of a submitted request. Callers never pick
+/// ids (two raced submissions can therefore never collide); a
+/// `RequestId` is only obtained from [`super::Session::submit`] and is
+/// unique for the lifetime of its session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId(pub u64);
+
+impl RequestId {
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+}
+
+impl std::fmt::Display for RequestId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "req-{}", self.0)
+    }
+}
+
+/// One lifecycle event of a submitted request, in stream order:
+///
+/// `Prefilled` (once, first admission) → `Token`* — interleaved with
+/// `Preempted`/`Resumed` pairs under memory pressure — → `Finished`.
+///
+/// The concatenated `Token` payloads are exactly
+/// `Finished(out).tokens`: a replayed token (recompute readmission) is
+/// never re-emitted, so the stream is bit-identical to the one-shot
+/// output. A cancelled request's stream simply ends — cancellation is
+/// not completion, so no `Finished` is ever emitted for it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SeqEvent {
+    /// Prompt processed and the request admitted for the first time;
+    /// `ttft_s` is the time from submission to the first generated token
+    /// (which exists as soon as prefill returns — vLLM semantics).
+    Prefilled { ttft_s: f64 },
+    /// One generated token; `step` is its 0-based index in the output.
+    Token { tok: u32, step: usize },
+    /// Evicted from the running set under memory pressure; `swap` is true
+    /// when the victim was parked in the host swap pool (restore on
+    /// readmission) rather than left to recompute-and-replay.
+    Preempted { swap: bool },
+    /// Readmitted after a preemption (either path). Token events resume
+    /// where they stopped; replayed tokens are not re-emitted.
+    Resumed,
+    /// Terminal event: the completed output with serving metrics.
+    Finished(RequestOutput),
+}
+
+impl SeqEvent {
+    /// Short stable kind name (wire protocol + logs).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SeqEvent::Prefilled { .. } => "prefilled",
+            SeqEvent::Token { .. } => "token",
+            SeqEvent::Preempted { .. } => "preempted",
+            SeqEvent::Resumed => "resumed",
+            SeqEvent::Finished(_) => "finished",
+        }
+    }
+}
+
+/// Builder for a submission. Everything except the prompt is optional:
+/// policy and budget default to the SERVER's configured defaults
+/// (`SchedConfig::default_policy` / `default_budget`) unless overridden
+/// per request — the KeyDiff-style deployment story where different
+/// requests tolerate different cache budgets. The id is NOT here: the
+/// engine stamps a server-assigned [`RequestId`] at submission.
+#[derive(Debug, Clone)]
+pub struct RequestBuilder {
+    prompt: Vec<u32>,
+    max_new_tokens: usize,
+    stop_tokens: Vec<u32>,
+    policy: Option<String>,
+    budget: Option<usize>,
+    priority: Priority,
+    deadline_steps: Option<u64>,
+    stream_events: bool,
+}
+
+impl RequestBuilder {
+    pub fn new(prompt: Vec<u32>) -> Self {
+        RequestBuilder {
+            prompt,
+            max_new_tokens: 32,
+            stop_tokens: Vec::new(),
+            policy: None,
+            budget: None,
+            priority: Priority::Normal,
+            deadline_steps: None,
+            stream_events: true,
+        }
+    }
+
+    /// Convenience: byte-tokenized text prompt.
+    pub fn text(s: &str) -> Self {
+        Self::new(crate::tokenizer::encode(s))
+    }
+
+    pub fn max_new_tokens(mut self, n: usize) -> Self {
+        self.max_new_tokens = n.max(1);
+        self
+    }
+
+    /// Add one stop token (generation stops when it is produced).
+    pub fn stop_token(mut self, tok: u32) -> Self {
+        self.stop_tokens.push(tok);
+        self
+    }
+
+    /// Replace the whole stop-token set.
+    pub fn stop_tokens(mut self, toks: Vec<u32>) -> Self {
+        self.stop_tokens = toks;
+        self
+    }
+
+    /// Per-request eviction policy override (see `eviction::make_policy`).
+    pub fn policy(mut self, name: impl Into<String>) -> Self {
+        self.policy = Some(name.into());
+        self
+    }
+
+    /// Per-request KV cache budget override (tokens).
+    pub fn budget(mut self, tokens: usize) -> Self {
+        self.budget = Some(tokens);
+        self
+    }
+
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    /// Deadline in scheduler steps after submission.
+    pub fn deadline_steps(mut self, steps: u64) -> Self {
+        self.deadline_steps = Some(steps);
+        self
+    }
+
+    /// Emit per-token/lifecycle streaming events (default on). One-shot
+    /// consumers that only read the terminal output turn this off so the
+    /// engine never materializes events nobody reads.
+    pub fn stream_events(mut self, on: bool) -> Self {
+        self.stream_events = on;
+        self
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.prompt.len()
+    }
+
+    /// Stamp the server-assigned id and resolve the per-request overrides
+    /// against the engine's configured defaults.
+    pub(crate) fn build(self, id: RequestId, defaults: &SchedConfig) -> Request {
+        Request {
+            id: id.raw(),
+            prompt: self.prompt,
+            max_new_tokens: self.max_new_tokens,
+            budget: self.budget.unwrap_or(defaults.default_budget),
+            policy: self.policy.unwrap_or_else(|| defaults.default_policy.clone()),
+            eos_token: None,
+            stop_tokens: self.stop_tokens,
+            priority: self.priority,
+            deadline_steps: self.deadline_steps,
+            stream_events: self.stream_events,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_resolves_overrides_against_defaults() {
+        let cfg = SchedConfig::default();
+        let r = RequestBuilder::new(vec![1, 2, 3]).build(RequestId(9), &cfg);
+        assert_eq!(r.id, 9);
+        assert_eq!(r.policy, cfg.default_policy);
+        assert_eq!(r.budget, cfg.default_budget);
+        assert_eq!(r.priority, Priority::Normal);
+
+        let r = RequestBuilder::new(vec![1])
+            .policy("keydiff")
+            .budget(64)
+            .priority(Priority::High)
+            .deadline_steps(40)
+            .stop_token(5)
+            .max_new_tokens(0)
+            .build(RequestId(10), &cfg);
+        assert_eq!(r.policy, "keydiff");
+        assert_eq!(r.budget, 64);
+        assert_eq!(r.priority, Priority::High);
+        assert_eq!(r.deadline_steps, Some(40));
+        assert_eq!(r.stop_tokens, vec![5]);
+        assert_eq!(r.max_new_tokens, 1, "zero-length generations are clamped");
+    }
+
+    #[test]
+    fn event_kinds_are_stable() {
+        assert_eq!(SeqEvent::Resumed.kind(), "resumed");
+        assert_eq!(SeqEvent::Token { tok: 1, step: 0 }.kind(), "token");
+    }
+}

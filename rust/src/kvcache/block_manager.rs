@@ -92,6 +92,12 @@ struct Inner {
     prefix: HashMap<u64, usize>,
     /// `slot_hash[phys]`: the hash this slot is published under, if any.
     slot_hash: Vec<Option<u64>>,
+    /// Bumped on every prefix-index mutation (publish or unpublish).
+    /// Admission-time claim estimates are memoized against this: an
+    /// unchanged epoch means `count_leading_hits` would return the same
+    /// answer, so a gated admission retry can skip recomputing its
+    /// O(prompt) claim (see `scheduler::backend::ClaimMemo`).
+    prefix_epoch: u64,
     peak_used: usize,
     allocs: u64,
     frees: u64,
@@ -126,6 +132,7 @@ impl Inner {
     fn unpublish(&mut self, phys: usize) {
         if let Some(h) = self.slot_hash[phys].take() {
             self.prefix.remove(&h);
+            self.prefix_epoch += 1;
         }
     }
 
@@ -169,6 +176,7 @@ impl BlockManager {
             free_ids: Vec::new(),
             prefix: HashMap::new(),
             slot_hash: vec![None; capacity_blocks],
+            prefix_epoch: 0,
             peak_used: 0,
             allocs: 0,
             frees: 0,
@@ -274,6 +282,7 @@ impl BlockManager {
         }
         g.prefix.insert(hash, phys);
         g.slot_hash[phys] = Some(hash);
+        g.prefix_epoch += 1;
         true
     }
 
@@ -291,6 +300,13 @@ impl BlockManager {
     pub fn refcount(&self, phys: usize) -> usize {
         let g = self.inner();
         g.holders.get(phys).map_or(0, |h| h.len())
+    }
+
+    /// Generation counter of the prefix index: changes exactly when a
+    /// publish or unpublish changes what `count_leading_hits` could
+    /// answer. The admission claim-memoization key.
+    pub fn prefix_epoch(&self) -> u64 {
+        self.inner().prefix_epoch
     }
 
     /// True when `phys` is currently published in the prefix index.
@@ -618,6 +634,30 @@ mod tests {
     #[should_panic(expected = "watermarks must satisfy")]
     fn inverted_watermarks_rejected() {
         BlockManager::new(4).set_watermarks(0.9, 0.5);
+    }
+
+    #[test]
+    fn prefix_epoch_tracks_index_mutations_only() {
+        let m = BlockManager::new(4);
+        let a = m.register();
+        let e0 = m.prefix_epoch();
+        let p = m.alloc(a).unwrap();
+        assert_eq!(m.prefix_epoch(), e0, "private alloc leaves the index alone");
+        assert!(m.publish(a, p, 42));
+        let e1 = m.prefix_epoch();
+        assert!(e1 > e0, "publish bumps the epoch");
+        assert!(!m.publish(a, p, 43), "already published");
+        assert_eq!(m.prefix_epoch(), e1, "failed publish does not bump");
+        m.unpublish_slot(p);
+        let e2 = m.prefix_epoch();
+        assert!(e2 > e1, "unpublish bumps the epoch");
+        m.unpublish_slot(p); // idempotent: nothing to remove
+        assert_eq!(m.prefix_epoch(), e2);
+        let q = m.alloc(a).unwrap();
+        assert!(m.publish(a, q, 44));
+        let e3 = m.prefix_epoch();
+        m.release(a, q);
+        assert!(m.prefix_epoch() > e3, "freeing a published slot unpublishes");
     }
 
     #[test]

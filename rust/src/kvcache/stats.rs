@@ -46,6 +46,12 @@ pub struct CacheStats {
     /// Copy-on-write page copies: a planned in-place write (token kill)
     /// found the page shared, so the writer moved to a private copy first.
     pub cow_copies: u64,
+    /// Requests cancelled through the session API. Always 0 on a live
+    /// per-sequence cache (a cancelled sequence never retires an output);
+    /// meaningful only in server-level roll-ups — the scheduler folds
+    /// each cancelled sequence's final cache counters, with this set to
+    /// 1, into its `cancelled_stats` aggregate.
+    pub cancelled: u64,
 }
 
 impl CacheStats {
@@ -64,6 +70,7 @@ impl CacheStats {
         self.peak_arena_blocks = self.peak_arena_blocks.max(o.peak_arena_blocks);
         self.prefix_hit_blocks += o.prefix_hit_blocks;
         self.cow_copies += o.cow_copies;
+        self.cancelled += o.cancelled;
     }
 
     /// Cache-management operations per generated token — the paper's
@@ -99,6 +106,7 @@ mod tests {
             peak_arena_blocks: 10,
             preemptions: 1,
             swaps: 1,
+            cancelled: 1,
             ..Default::default()
         };
         let b = CacheStats {
@@ -107,6 +115,7 @@ mod tests {
             peak_arena_blocks: 4,
             preemptions: 2,
             swaps: 1,
+            cancelled: 2,
             ..Default::default()
         };
         a.merge(&b);
@@ -115,5 +124,6 @@ mod tests {
         assert_eq!(a.peak_arena_blocks, 10);
         assert_eq!(a.preemptions, 3, "preemption counts are additive");
         assert_eq!(a.swaps, 2, "swap counts are additive");
+        assert_eq!(a.cancelled, 3, "cancel counts are additive");
     }
 }

@@ -8,6 +8,7 @@
 //! Layer 1 (Pallas) live under `python/compile/` and are AOT-lowered to HLO
 //! text artifacts which `runtime` loads through the PJRT C API.
 
+pub mod api;
 pub mod eviction;
 pub mod kvcache;
 pub mod runtime;

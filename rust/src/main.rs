@@ -1,18 +1,23 @@
 //! `paged-eviction` — serving CLI.
 //!
 //! Subcommands:
-//!   serve     run the JSON-lines TCP server
+//!   serve     run the NDJSON TCP server (v2 streaming protocol;
+//!             `--backend sim` needs no PJRT, `--backend pjrt` the real
+//!             runtime)
 //!   generate  one-shot generation (text or token ids)
 //!   info      artifact/manifest summary
 //!   simulate  one accuracy-simulator sweep row
 //!   schedule  batched-scheduler demo on the deterministic sim backend
-//!             (shared arena, preemption under pressure; no PJRT needed)
+//!             (shared arena, preemption under pressure, streaming
+//!             events, mid-run aborts; no PJRT needed)
 //!
 //! Examples:
-//!   paged-eviction serve --model sim-1b --port 7071
+//!   paged-eviction serve --port 7071 --stream on
 //!   paged-eviction generate --text "hello" --max-new-tokens 16
 //!   paged-eviction simulate --dataset hotpotqa --policy paged --budget 1024
 //!   paged-eviction schedule --requests 16 --arena-blocks 64 --gen 48
+//!   paged-eviction schedule --stream on --abort 3@4
+//!   paged-eviction schedule --trace requests.trace
 
 use anyhow::Result;
 
@@ -83,7 +88,8 @@ fn parse_on_off(flag: &str, s: &str) -> Result<bool> {
 
 /// FNV-style digest over the generated token streams (id order) — lets
 /// scripts assert two runs produced bit-identical outputs (e.g. the CI
-/// smoke comparing `--prefix-cache on` vs `off`).
+/// smoke comparing `--prefix-cache on` vs `off`, or survivors of a
+/// mid-run abort vs an abort-free run).
 fn output_digest(outs: &[paged_eviction::scheduler::RequestOutput]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for o in outs {
@@ -110,12 +116,23 @@ fn parse_watermarks(s: &str) -> Result<(f64, f64)> {
     Ok((low, high))
 }
 
-/// The PJRT-backed subcommands need the `xla` feature (real bindings).
-#[cfg(not(feature = "xla"))]
-fn cmd_serve() -> Result<()> {
-    no_xla("serve")
+/// Parse an `--abort "id@step,id@step"` spec.
+fn parse_aborts(s: &str) -> Result<Vec<(u64, u64)>> {
+    let mut out = Vec::new();
+    for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+        let (id, step) = part
+            .trim()
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("--abort wants id@step (got {part:?})"))?;
+        out.push((
+            id.parse().map_err(|_| anyhow::anyhow!("bad abort id {id:?}"))?,
+            step.parse().map_err(|_| anyhow::anyhow!("bad abort step {step:?}"))?,
+        ));
+    }
+    Ok(out)
 }
 
+/// The PJRT-backed subcommands need the `xla` feature (real bindings).
 #[cfg(not(feature = "xla"))]
 fn cmd_generate() -> Result<()> {
     no_xla("generate")
@@ -131,33 +148,62 @@ fn no_xla(cmd: &str) -> Result<()> {
     anyhow::bail!(
         "`{cmd}` needs the PJRT runtime: rebuild with `cargo build --features xla` \
          (and link the real xla-rs bindings — see rust/vendor/README.md). \
-         The `simulate` subcommand works without it."
+         The `serve --backend sim`, `simulate` and `schedule` subcommands \
+         work without it."
     )
 }
 
 #[cfg(feature = "xla")]
-fn cmd_serve() -> Result<()> {
-    use std::sync::{Arc, Mutex};
+fn spawn_pjrt(
+    artifacts: std::path::PathBuf,
+    cfg: paged_eviction::scheduler::SchedConfig,
+) -> Result<(paged_eviction::server::EngineHandle, std::thread::JoinHandle<()>)> {
+    paged_eviction::server::serve::spawn_engine(artifacts, cfg)
+}
 
-    use paged_eviction::scheduler::SchedConfig;
-    use paged_eviction::server::serve::{serve_forever, spawn_engine};
-
-    let args = artifacts_flag(
-        ArgSpec::new("paged-eviction serve", "JSON-lines TCP serving frontend")
-            .opt("model", "sim-1b", "model name from the manifest")
-            .opt("port", "7071", "TCP port")
-            .opt("page-size", "16", "KV page size (8|16|32)")
-            .opt("max-concurrency", "8", "max sequences decoded concurrently")
-            .opt("max-live-blocks", "4096", "global KV block capacity")
-            .opt("swap-bytes", "67108864", "host swap pool byte cap \
-                 (0 = recompute-only preemption)")
-            .opt("watermarks", "0.85,0.95", "admission/preemption watermarks \
-                 as low,high fractions of the arena")
-            .opt("prefix-cache", "on", "share identical prompt-prefix blocks \
-                 across requests by refcount (on|off)")
-            .opt("config", "", "TOML config file ([server]/[cache] sections \
-                 override the flags; see docs in util::toml)"),
+#[cfg(not(feature = "xla"))]
+fn spawn_pjrt(
+    _artifacts: std::path::PathBuf,
+    _cfg: paged_eviction::scheduler::SchedConfig,
+) -> Result<(paged_eviction::server::EngineHandle, std::thread::JoinHandle<()>)> {
+    anyhow::bail!(
+        "`--backend pjrt` needs the PJRT runtime: rebuild with \
+         `cargo build --features xla`. `--backend sim` serves without it."
     )
+}
+
+fn cmd_serve() -> Result<()> {
+    use paged_eviction::scheduler::{Priority, SchedConfig};
+    use paged_eviction::server::serve::{serve_forever, spawn_sim_engine, ServeOpts};
+
+    let args = ArgSpec::new(
+        "paged-eviction serve",
+        "NDJSON TCP serving frontend (v2 streaming protocol + v1 one-shot compat)",
+    )
+    .opt("backend", "sim", "decode backend: sim (always available) or \
+         pjrt (needs --features xla and artifacts)")
+    .opt("artifacts", "artifacts", "artifact directory (pjrt backend)")
+    .opt("model", "sim-1b", "model name from the manifest")
+    .opt("port", "7071", "TCP port")
+    .opt("page-size", "16", "KV page size (8|16|32)")
+    .opt("max-concurrency", "8", "max sequences decoded concurrently")
+    .opt("max-live-blocks", "4096", "global KV block capacity")
+    .opt("swap-bytes", "67108864", "host swap pool byte cap \
+         (0 = recompute-only preemption)")
+    .opt("watermarks", "0.85,0.95", "admission/preemption watermarks \
+         as low,high fractions of the arena")
+    .opt("prefix-cache", "on", "share identical prompt-prefix blocks \
+         across requests by refcount (on|off)")
+    .opt("policy", "paged", "server-default eviction policy \
+         (requests override per submit)")
+    .opt("budget", "1024", "server-default KV budget in tokens \
+         (requests override per submit)")
+    .opt("priority", "normal", "priority for requests that do not name \
+         one (low|normal|high)")
+    .opt("stream", "off", "default stream mode for v2 submits without \
+         an explicit \"stream\" field (on|off)")
+    .opt("config", "", "TOML config file ([server]/[cache] sections \
+         override the flags; see docs in util::toml)")
     .parse_or_exit(2);
     let (watermark_low, watermark_high) = parse_watermarks(args.get("watermarks"))?;
     let mut cfg = SchedConfig {
@@ -169,7 +215,10 @@ fn cmd_serve() -> Result<()> {
         watermark_high,
         swap_bytes: args.get_usize("swap-bytes"),
         prefix_cache: parse_on_off("prefix-cache", args.get("prefix-cache"))?,
+        default_policy: args.get("policy").to_string(),
+        default_budget: args.get_usize("budget"),
     };
+    make_policy(&cfg.default_policy)?; // fail fast on a bad default
     if !args.get("config").is_empty() {
         use paged_eviction::util::toml;
         let text = std::fs::read_to_string(args.get("config"))?;
@@ -187,10 +236,18 @@ fn cmd_serve() -> Result<()> {
             cfg.max_live_blocks = v;
         }
     }
-    let (handle, _join) = spawn_engine(args.get("artifacts").into(), cfg)?;
+    let opts = ServeOpts {
+        default_stream: parse_on_off("stream", args.get("stream"))?,
+        default_priority: Priority::parse(args.get("priority"))?,
+    };
+    let (handle, _join) = match args.get("backend") {
+        "sim" => spawn_sim_engine(cfg)?,
+        "pjrt" => spawn_pjrt(args.get("artifacts").into(), cfg)?,
+        other => anyhow::bail!("unknown backend {other:?} (want sim|pjrt)"),
+    };
     let listener = std::net::TcpListener::bind(("127.0.0.1", args.get_usize("port") as u16))?;
-    println!("serving on {}", listener.local_addr()?);
-    serve_forever(listener, handle, Arc::new(Mutex::new(0)))
+    println!("serving on {} ({} backend)", listener.local_addr()?, args.get("backend"));
+    serve_forever(listener, handle, opts)
 }
 
 #[cfg(feature = "xla")]
@@ -265,18 +322,20 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-/// Batched-scheduler demo: synthetic requests through the full admission /
-/// batched-decode / preemption pipeline on the deterministic sim backend.
+/// Batched-scheduler demo: synthetic (or trace-file) requests through the
+/// full session API — admission, batched decode, preemption, streaming
+/// events, mid-run aborts — on the deterministic sim backend.
 fn cmd_schedule() -> Result<()> {
-    use paged_eviction::scheduler::{Request, SchedConfig, Scheduler};
+    use paged_eviction::api::{RequestBuilder, RequestId, SeqEvent, Session};
+    use paged_eviction::scheduler::{Priority, SchedConfig};
     use paged_eviction::util::rng::Pcg32;
-    use paged_eviction::workload::recall;
+    use paged_eviction::workload::{recall, trace};
 
     let args = ArgSpec::new(
         "paged-eviction schedule",
         "batched continuous-batching rounds over a shared block arena (sim backend)",
     )
-    .opt("requests", "16", "synthetic requests to submit")
+    .opt("requests", "16", "synthetic requests to submit (ignored with --trace)")
     .opt("prompt-len", "96", "prompt tokens per request")
     .opt("gen", "48", "output tokens per request")
     .opt("budget", "64", "KV cache budget (tokens)")
@@ -292,6 +351,13 @@ fn cmd_schedule() -> Result<()> {
          across requests by refcount (on|off)")
     .opt("shared-prefix", "0", "tokens of common prompt prefix across all \
          requests (exercises the prefix cache, e.g. a shared system prompt)")
+    .opt("priority", "normal", "priority for requests without a per-entry \
+         override (low|normal|high)")
+    .opt("stream", "off", "print every SeqEvent as it happens (on|off)")
+    .opt("trace", "", "trace file: one request per line, key=value fields \
+         (at, prompt_len, gen, policy, budget, priority, deadline, seed)")
+    .opt("abort", "", "cancel requests mid-run: comma list of id@step \
+         (server-assigned ids, submit order)")
     .opt("seed", "7", "prompt RNG seed")
     .parse_or_exit(2);
 
@@ -305,42 +371,148 @@ fn cmd_schedule() -> Result<()> {
         watermark_high,
         swap_bytes: args.get_usize("swap-bytes"),
         prefix_cache: parse_on_off("prefix-cache", args.get("prefix-cache"))?,
+        default_policy: args.get("policy").to_string(),
+        default_budget: args.get_usize("budget"),
     };
-    let mut sched = Scheduler::new_sim(cfg);
+    let stream = parse_on_off("stream", args.get("stream"))?;
+    let default_priority = Priority::parse(args.get("priority"))?;
+    let aborts = parse_aborts(args.get("abort"))?;
+
+    // request specs: trace file entries, or --requests identical ones
+    let mut entries: Vec<trace::TraceEntry> = if args.get("trace").is_empty() {
+        (0..args.get_usize("requests")).map(|_| trace::TraceEntry::default()).collect()
+    } else {
+        trace::parse_trace(&std::fs::read_to_string(args.get("trace"))?)?
+    };
+    entries.sort_by_key(|e| e.at_step); // ids follow submission order
+
     let mut rng = Pcg32::new(args.get_u64("seed"));
-    let prompt_len = args.get_usize("prompt-len");
+    let cli_prompt_len = args.get_usize("prompt-len");
+    let cli_gen = args.get_usize("gen");
     // clamped so the per-request recall tail keeps make_prompt's contract
     // (>= 8 tokens, even length for an even --prompt-len)
-    let shared_len = args.get_usize("shared-prefix").min(prompt_len.saturating_sub(8)) & !1;
+    let shared_len =
+        args.get_usize("shared-prefix").min(cli_prompt_len.saturating_sub(8)) & !1;
     // the shared system-prompt stand-in: one common prefix, distinct tails
     let shared: Vec<u32> = (0..shared_len).map(|_| rng.below(200)).collect();
-    for i in 0..args.get_usize("requests") {
-        let p = recall::make_prompt(&mut rng, prompt_len - shared_len, 0.4);
-        let mut prompt = shared.clone();
-        prompt.extend(p.tokens);
-        let mut req = Request::new(i as u64 + 1, prompt, args.get_usize("gen"));
-        req.budget = args.get_usize("budget");
-        req.policy = args.get("policy").to_string();
-        sched.submit(req);
+
+    let session = Session::new_sim(cfg);
+    let mut handles = Vec::new();
+    let mut outs = Vec::new();
+    let mut cancelled: Vec<u64> = Vec::new();
+    let mut next_entry = 0usize;
+    let mut step: u64 = 0;
+    loop {
+        while next_entry < entries.len() && entries[next_entry].at_step <= step {
+            let e = &entries[next_entry];
+            let plen = e.prompt_len.unwrap_or(cli_prompt_len);
+            // make_prompt wants an even tail of >= 8 tokens
+            let tail_len = plen.saturating_sub(shared_len).max(8) & !1;
+            let mut erng = e.seed.map(Pcg32::new);
+            let tail =
+                recall::make_prompt(erng.as_mut().unwrap_or(&mut rng), tail_len, 0.4);
+            let mut prompt = shared.clone();
+            prompt.extend(tail.tokens);
+            let mut b = RequestBuilder::new(prompt)
+                .max_new_tokens(e.gen.unwrap_or(cli_gen))
+                .priority(e.priority.unwrap_or(default_priority))
+                // without --stream the demo only reads terminal outputs
+                .stream_events(stream);
+            if let Some(p) = &e.policy {
+                b = b.policy(p.clone());
+            }
+            if let Some(budget) = e.budget {
+                b = b.budget(budget);
+            }
+            if let Some(d) = e.deadline_steps {
+                b = b.deadline_steps(d);
+            }
+            handles.push(session.submit(b)?);
+            next_entry += 1;
+        }
+        for &(id, at) in &aborts {
+            if at == step {
+                let ok = session.cancel(RequestId(id));
+                println!("req {id}: {}", if ok { "cancelled" } else { "abort was a no-op" });
+                if ok {
+                    cancelled.push(id);
+                }
+            }
+        }
+        if next_entry >= entries.len() && session.is_idle() {
+            break;
+        }
+        session.step()?;
+        step += 1;
+        for h in &handles {
+            for ev in h.drain() {
+                if stream {
+                    let id = h.id().raw();
+                    match &ev {
+                        SeqEvent::Prefilled { ttft_s } => {
+                            println!("event req={id} kind=prefilled ttft_ms={:.3}", ttft_s * 1e3)
+                        }
+                        SeqEvent::Token { tok, step } => {
+                            println!("event req={id} kind=token tok={tok} step={step}")
+                        }
+                        SeqEvent::Preempted { swap } => {
+                            println!("event req={id} kind=preempted swap={swap}")
+                        }
+                        SeqEvent::Resumed => println!("event req={id} kind=resumed"),
+                        SeqEvent::Finished(o) => println!(
+                            "event req={id} kind=finished tokens={} finish={:?}",
+                            o.tokens.len(),
+                            o.finish
+                        ),
+                    }
+                }
+                if let SeqEvent::Finished(o) = ev {
+                    outs.push(o);
+                }
+            }
+        }
     }
-    let mut outs = sched.run_to_completion()?;
+    // submit-time rejections finish without a step: sweep the tails
+    for h in &handles {
+        for ev in h.drain() {
+            if let SeqEvent::Finished(o) = ev {
+                outs.push(o);
+            }
+        }
+    }
     outs.sort_by_key(|o| o.id);
+    let (tok_s, preemptions, swap_outs, swap_restores, dropped, hit, cow, n_cancelled, peak, cap) =
+        session.with_scheduler(|s| {
+            (
+                s.throughput_tok_s(),
+                s.preemptions,
+                s.swap_outs,
+                s.swap_restores,
+                s.swap_pool().dropped(),
+                s.prefix_hit_blocks,
+                s.cow_copies,
+                s.cancelled(),
+                s.arena().stats().peak_used,
+                s.arena().capacity(),
+            )
+        });
     println!(
-        "{} requests done: {:.0} tok/s, {} preemptions ({} swapped out, {} restored, \
-         {} dropped), peak arena {} / {} blocks",
+        "{} requests done ({} cancelled): {:.0} tok/s, {} preemptions ({} swapped out, \
+         {} restored, {} dropped), peak arena {} / {} blocks",
         outs.len(),
-        sched.throughput_tok_s(),
-        sched.preemptions,
-        sched.swap_outs,
-        sched.swap_restores,
-        sched.swap_pool().dropped(),
-        sched.arena().stats().peak_used,
-        sched.arena().capacity(),
+        n_cancelled,
+        tok_s,
+        preemptions,
+        swap_outs,
+        swap_restores,
+        dropped,
+        peak,
+        cap,
     );
     println!(
         "prefix cache: {} prefix-hit blocks, {} cow copies, output digest {:016x}",
-        sched.prefix_hit_blocks,
-        sched.cow_copies,
+        hit,
+        cow,
         output_digest(&outs),
     );
     for o in &outs {
@@ -354,6 +526,10 @@ fn cmd_schedule() -> Result<()> {
             o.preemptions,
             o.swaps,
         );
+        println!("digest req={} {:016x}", o.id, output_digest(std::slice::from_ref(o)));
+    }
+    for id in &cancelled {
+        println!("  req {id:>3}: cancelled (no output)");
     }
     Ok(())
 }

@@ -84,11 +84,26 @@ pub struct SimBackend {
     /// the historical accounting; the scheduler flips it from
     /// `SchedConfig::prefix_cache`.
     pub prefix_cache: bool,
+    /// Times `prefill_claim` actually recomputed its O(prompt) estimate
+    /// (scorer replay + hash chain). The scheduler memoizes the result on
+    /// the queue entry against the prefix-index epoch, so gated admission
+    /// retries must NOT bump this — pinned in `tests/api_session.rs`.
+    claim_calls: std::cell::Cell<u64>,
 }
 
 impl SimBackend {
     pub fn new(page_size: usize) -> SimBackend {
-        SimBackend { page_size, vocab: 211, prefix_cache: false }
+        SimBackend {
+            page_size,
+            vocab: 211,
+            prefix_cache: false,
+            claim_calls: std::cell::Cell::new(0),
+        }
+    }
+
+    /// How many times the admission claim estimate was recomputed.
+    pub fn claim_calls(&self) -> u64 {
+        self.claim_calls.get()
     }
 
     /// Deterministic importance channels for the token at `pos`. Channel
@@ -176,6 +191,7 @@ impl DecodeBackend for SimBackend {
     /// leading kept blocks already published in the arena's index — those
     /// pages are pinned by refcount, not re-claimed.
     fn prefill_claim(&self, arena: &BlockManager, req: &Request, page_size: usize) -> usize {
+        self.claim_calls.set(self.claim_calls.get() + 1);
         let full = static_prefill_claim(req, page_size);
         if !self.prefix_cache {
             return full;

@@ -31,6 +31,37 @@ pub fn static_prefill_claim(req: &Request, page_size: usize) -> usize {
     (resident + page_size - 1) / page_size
 }
 
+/// Memoized admission-time claim estimate for one queued request.
+///
+/// [`DecodeBackend::prefill_claim`] can be O(prompt) — the sim backend
+/// replays the policy's prefill scorer AND the prefix-index hash chain —
+/// and the admission gate may retry the same head-of-queue entry every
+/// round while the arena sits above its low watermark. The scheduler
+/// caches the estimate on the queue entry keyed by the arena's
+/// [`crate::kvcache::BlockManager::prefix_epoch`]: the estimate only
+/// depends on the (immutable) request and the prefix-index contents, so
+/// an unchanged epoch means the cached claim is still exact and the
+/// retry skips the recompute entirely.
+#[derive(Debug, Clone, Copy)]
+pub struct ClaimMemo {
+    epoch: u64,
+    blocks: usize,
+}
+
+impl ClaimMemo {
+    /// Record `blocks` as computed against the arena's CURRENT prefix
+    /// index.
+    pub fn record(arena: &BlockManager, blocks: usize) -> ClaimMemo {
+        ClaimMemo { epoch: arena.prefix_epoch(), blocks }
+    }
+
+    /// The memoized claim, if the prefix index has not changed since it
+    /// was recorded.
+    pub fn get(&self, arena: &BlockManager) -> Option<usize> {
+        (self.epoch == arena.prefix_epoch()).then_some(self.blocks)
+    }
+}
+
 /// Outcome of a prefill attempt against the shared arena.
 pub enum Prefilled<S> {
     /// Prompt processed; `logits` are the last-position logits (the first

@@ -9,7 +9,16 @@
 //! backend can snapshot them — readmission restores instead of
 //! recomputing — and fall back to recompute-and-replay otherwise.
 //! Eviction policy + cache budget are per-request, so a single server can
-//! serve mixed policies (that is how the comparison benches run).
+//! serve mixed policies (that is how the comparison benches run), and
+//! each request carries a [`Priority`]: admission prefers the
+//! highest-priority queued work and preemption victimizes the
+//! lowest-priority running work (youngest within a class).
+//!
+//! Lifecycle transitions stream out as `api::SeqEvent`s
+//! ([`Scheduler::take_events`]); `take_finished` remains as a compat
+//! shim over the same stream. [`Scheduler::cancel`] synchronously frees
+//! a request wherever it lives. The session-based public surface over
+//! all of this is [`crate::api`].
 //!
 //! The scheduler is generic over [`backend::DecodeBackend`], so the whole
 //! lifecycle — admission gating on the shared `BlockManager` arena,
@@ -23,7 +32,7 @@ pub mod request;
 pub mod sched;
 pub mod swap;
 
-pub use backend::{DecodeBackend, HostSnapshot, Prefilled, Restored};
-pub use request::{FinishReason, Request, RequestOutput, RequestState};
+pub use backend::{ClaimMemo, DecodeBackend, HostSnapshot, Prefilled, Restored};
+pub use request::{FinishReason, Priority, Request, RequestOutput, RequestState};
 pub use sched::{SchedConfig, Scheduler, StepReport};
 pub use swap::SwapPool;

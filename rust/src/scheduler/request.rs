@@ -1,5 +1,41 @@
 //! Request descriptors and lifecycle state.
 
+use anyhow::Result;
+
+/// Scheduling class of a request. Preemption victims are chosen from the
+/// LOWEST priority class first (youngest within a class), and admission
+/// prefers the highest-priority queued request, so `High` work both jumps
+/// the queue and survives memory pressure at the expense of `Low` work.
+///
+/// The derived order is `Low < Normal < High`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    /// Parse a wire/CLI priority name.
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            _ => anyhow::bail!("unknown priority {s:?} (want low|normal|high)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -10,7 +46,22 @@ pub struct Request {
     /// Eviction policy name (see `eviction::make_policy`).
     pub policy: String,
     /// Stop generation when this token is produced (None = length only).
+    /// Kept for wire/API compatibility; `stop_tokens` is the general form.
     pub eos_token: Option<u32>,
+    /// Stop-token SET: generation stops when ANY of these is produced
+    /// (in addition to `eos_token`, if set).
+    pub stop_tokens: Vec<u32>,
+    /// Scheduling class (admission order + preemption victim selection).
+    pub priority: Priority,
+    /// Deadline in scheduler steps after submission: once this many rounds
+    /// have started, the request is finished with whatever it has produced
+    /// ([`FinishReason::Deadline`]) — queued, swapped-out or mid-decode.
+    pub deadline_steps: Option<u64>,
+    /// Emit per-token/lifecycle streaming events for this request (the
+    /// terminal `Finished` is always emitted)? One-shot consumers turn
+    /// this off so nobody pays for events that would be discarded. Only
+    /// effective when the scheduler's event streaming is enabled at all.
+    pub stream_events: bool,
 }
 
 impl Request {
@@ -22,7 +73,17 @@ impl Request {
             budget: 1024,
             policy: "paged".to_string(),
             eos_token: None,
+            stop_tokens: Vec::new(),
+            priority: Priority::Normal,
+            deadline_steps: None,
+            stream_events: true,
         }
+    }
+
+    /// True when producing `tok` must stop generation (any stop token or
+    /// the legacy `eos_token`).
+    pub fn is_stop(&self, tok: u32) -> bool {
+        self.eos_token == Some(tok) || self.stop_tokens.contains(&tok)
     }
 }
 
@@ -31,6 +92,9 @@ pub enum FinishReason {
     MaxTokens,
     Eos,
     Error,
+    /// The request's step deadline expired before it finished; its
+    /// `tokens` hold whatever had been produced by then.
+    Deadline,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,4 +123,30 @@ pub struct RequestOutput {
     /// snapshot instead of recomputing (`swaps <= preemptions`).
     pub swaps: u32,
     pub cache_stats: crate::kvcache::CacheStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_orders_low_normal_high() {
+        assert!(Priority::Low < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+    }
+
+    #[test]
+    fn stop_set_and_legacy_eos_both_stop() {
+        let mut r = Request::new(1, vec![1, 2], 8);
+        assert!(!r.is_stop(7));
+        r.eos_token = Some(7);
+        r.stop_tokens = vec![9, 11];
+        assert!(r.is_stop(7) && r.is_stop(9) && r.is_stop(11));
+        assert!(!r.is_stop(8));
+    }
 }

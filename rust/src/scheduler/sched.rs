@@ -4,33 +4,54 @@
 //!
 //! Each round:
 //!
-//!  1. **admission** — fill free concurrency slots from the queue, gated
-//!     on the arena's LOW watermark
+//!  1. **deadline sweep** — queued or running requests whose step
+//!     deadline expired are finished NOW with whatever they produced
+//!     ([`FinishReason::Deadline`]);
+//!  2. **admission** — fill free concurrency slots from the queue,
+//!     HIGHEST priority first (front-most within a class, so preemption
+//!     victims requeued at the front still resume before fresh work of
+//!     their class), gated on the arena's LOW watermark
 //!     (`BlockManager::below_low_watermark`, O(1)) against the blocks the
 //!     admission claims *immediately*: the policy-aware resident prompt
 //!     minus the prompt blocks the prefix index will serve by refcount
-//!     for a fresh request, the exact snapshot size for a swapped victim.
-//!     Decode-time growth is no longer reserved up front — worst-case
-//!     estimates over-reserve precisely when unstructured policies
-//!     fragment pages (the paper's Limitation 1); the low/high hysteresis
-//!     band absorbs the optimism instead;
-//!  2. **watermark preemption** — while usage exceeds the HIGH watermark,
-//!     victim-select the **youngest** running sequence and evict it
-//!     proactively, before allocation hard-fails;
-//!  3. **reservation** — every running sequence that needs a fresh block
+//!     for a fresh request (memoized per queue entry against the prefix
+//!     index's epoch, so gated retries skip the O(prompt) recompute), the
+//!     exact snapshot size for a swapped victim. Decode-time growth is no
+//!     longer reserved up front — worst-case estimates over-reserve
+//!     precisely when unstructured policies fragment pages (the paper's
+//!     Limitation 1); the low/high hysteresis band absorbs the optimism
+//!     instead;
+//!  3. **watermark preemption** — while usage exceeds the HIGH watermark,
+//!     victim-select the LOWEST-priority running sequence (youngest
+//!     within the class) and evict it proactively, before allocation
+//!     hard-fails;
+//!  4. **reservation** — every running sequence that needs a fresh block
 //!     for this round's token claims it up front; if the arena still runs
-//!     dry, preemption repeats until the round fits;
-//!  4. **batched decode** — one `DecodeBackend::decode_batch` call for the
+//!     dry, preemption repeats (same victim order) until the round fits;
+//!  5. **batched decode** — one `DecodeBackend::decode_batch` call for the
 //!     whole running set; finished sequences retire from the results.
+//!
+//! Every lifecycle transition is emitted as a [`SeqEvent`] —
+//! `Prefilled`/`Token`/`Preempted`/`Resumed`/`Finished` — drained via
+//! [`Scheduler::take_events`] (the session API's feed). The legacy
+//! [`Scheduler::take_finished`] survives as a compat shim over the same
+//! stream: the concatenated `Token` payloads are bit-identical to the
+//! `Finished` output's tokens, pinned in `tests/api_session.rs`.
 //!
 //! A preemption victim is parked in a bounded host [`SwapPool`] when the
 //! backend can snapshot it (swap-to-host): readmission from the queue
 //! front *restores* the snapshot — no prompt recompute, no token replay.
 //! When the backend cannot snapshot, the snapshot no longer fits the
 //! pool, or the pool LRU-dropped it to make room, the victim falls back
-//! to the PR 2 recompute path: the prompt is re-prefilled and the
-//! produced tokens are replayed through decode (greedy decode is
-//! deterministic, so both paths yield bit-identical outputs).
+//! to the recompute path: the prompt is re-prefilled and the produced
+//! tokens are replayed through decode (greedy decode is deterministic, so
+//! both paths yield bit-identical outputs).
+//!
+//! [`Scheduler::cancel`] tears a request down SYNCHRONOUSLY wherever it
+//! lives: a running sequence's cache is dropped (arena blocks released,
+//! shared prefix pages unpinned by refcount), a parked snapshot is
+//! discarded, a queue entry is purged. No `Finished` event is emitted —
+//! cancellation is not completion.
 //!
 //! The scheduler is generic over [`DecodeBackend`], so the identical
 //! admission/preemption/reservation/retire logic runs on the always-built
@@ -42,11 +63,12 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::backend::{DecodeBackend, Prefilled, Restored};
-use super::request::{FinishReason, Request, RequestOutput};
+use super::backend::{ClaimMemo, DecodeBackend, Prefilled, Restored};
+use super::request::{FinishReason, Priority, Request, RequestOutput};
 use super::swap::SwapPool;
+use crate::api::SeqEvent;
 use crate::eviction::make_policy;
-use crate::kvcache::{BlockAlloc, BlockManager};
+use crate::kvcache::{BlockAlloc, BlockManager, CacheStats};
 use crate::runtime::model_runner::argmax;
 use crate::util::stats::{Histogram, Summary};
 
@@ -77,6 +99,12 @@ pub struct SchedConfig {
     /// way — pinned in `tests/prefix_cache.rs` — only the physical
     /// footprint and prefill work change.
     pub prefix_cache: bool,
+    /// Server-wide eviction policy a request inherits unless it carries
+    /// its own override (`api::RequestBuilder::policy`).
+    pub default_policy: String,
+    /// Server-wide KV budget (tokens) a request inherits unless it
+    /// carries its own override (`api::RequestBuilder::budget`).
+    pub default_budget: usize,
 }
 
 impl Default for SchedConfig {
@@ -90,6 +118,8 @@ impl Default for SchedConfig {
             watermark_high: 0.95,
             swap_bytes: 64 << 20,
             prefix_cache: true,
+            default_policy: "paged".into(),
+            default_budget: 1024,
         }
     }
 }
@@ -107,6 +137,9 @@ pub struct StepReport {
     pub swap_restored: usize,
     /// Requests rejected outright (can never fit / bad policy / failed).
     pub rejected: usize,
+    /// Requests finished this round because their step deadline expired
+    /// (counted in `finished` too when they were running).
+    pub expired: usize,
     /// Prompt blocks this round's prefills mapped from the prefix index
     /// (refcount + 1 on an existing page) instead of allocating.
     pub prefix_hit_blocks: usize,
@@ -139,10 +172,15 @@ struct QueueEntry {
     /// Pending next token at preemption time, consumed by a swap restore
     /// once `swap_fed == resume.len()` (recompute recomputes it).
     next_token: u32,
+    /// Absolute step (scheduler round) at which the deadline expires.
+    deadline_at: Option<u64>,
+    /// Memoized admission claim, valid while the prefix index epoch it
+    /// was recorded against is current.
+    claim: Option<ClaimMemo>,
 }
 
 impl QueueEntry {
-    fn fresh(req: Request) -> QueueEntry {
+    fn fresh(req: Request, deadline_at: Option<u64>) -> QueueEntry {
         QueueEntry {
             req,
             enqueued: Instant::now(),
@@ -153,6 +191,8 @@ impl QueueEntry {
             swaps: 0,
             swap_fed: 0,
             next_token: 0,
+            deadline_at,
+            claim: None,
         }
     }
 }
@@ -170,7 +210,8 @@ struct Inflight<S> {
     /// How many of `produced` have been fed back through decode; while
     /// `fed < produced.len()` the sequence is replaying after preemption.
     fed: usize,
-    /// Monotonic admission number — preemption victims are the youngest.
+    /// Monotonic admission number — preemption victims are the youngest
+    /// of the lowest-priority class.
     admit_serial: u64,
     preemptions: u32,
     /// Swap-restore readmissions for this request.
@@ -178,6 +219,8 @@ struct Inflight<S> {
     /// `stats.cow_copies` watermark already folded into the scheduler's
     /// round/aggregate counters (delta accounting across rounds).
     cow_seen: u64,
+    /// Absolute step at which the deadline expires.
+    deadline_at: Option<u64>,
 }
 
 enum AdmitOutcome {
@@ -195,9 +238,20 @@ pub struct Scheduler<B: DecodeBackend> {
     pub cfg: SchedConfig,
     backend: B,
     arena: BlockManager,
-    queue: VecDeque<QueueEntry>,
+    /// Admission buckets, highest priority first (`Self::bucket`): pop =
+    /// front of the first non-empty bucket, O(1) — highest class first,
+    /// front-most within a class, preemption victims requeued at their
+    /// class front. No cross-bucket scan per admission.
+    queues: [VecDeque<QueueEntry>; 3],
     running: Vec<Inflight<B::Seq>>,
-    finished: Vec<RequestOutput>,
+    /// Lifecycle events in emission order, keyed by request id — the
+    /// session API's feed ([`Scheduler::take_events`]).
+    events: VecDeque<(u64, SeqEvent)>,
+    /// Emit the STREAMING events (`Prefilled`/`Token`/`Preempted`/
+    /// `Resumed`)? Terminal `Finished` events are always emitted. Off by
+    /// default so legacy `take_finished` drains buffer O(requests), not
+    /// O(total tokens); the session API turns it on.
+    stream_events: bool,
     /// Host-side pool of swapped-out victims (byte-capped LRU).
     swap: SwapPool<B::Snapshot>,
     // aggregate serving metrics
@@ -219,8 +273,15 @@ pub struct Scheduler<B: DecodeBackend> {
     pub prefix_hit_blocks: u64,
     /// Total copy-on-write page copies made during round preparation.
     pub cow_copies: u64,
+    /// Aggregate cache counters of CANCELLED requests (each cancelled
+    /// sequence's final stats merged with `cancelled = 1`; queued cancels
+    /// contribute the count alone). `cancelled_stats.cancelled` is the
+    /// total cancel count.
+    pub cancelled_stats: CacheStats,
     started: Option<Instant>,
     admit_counter: u64,
+    /// Scheduling rounds started so far (the deadline clock).
+    steps: u64,
 }
 
 impl<B: DecodeBackend> Scheduler<B> {
@@ -236,9 +297,10 @@ impl<B: DecodeBackend> Scheduler<B> {
             cfg,
             backend,
             arena,
-            queue: VecDeque::new(),
+            queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
             running: Vec::new(),
-            finished: Vec::new(),
+            events: VecDeque::new(),
+            stream_events: false,
             swap,
             ttft: Histogram::new(),
             tpot: Histogram::new(),
@@ -250,14 +312,21 @@ impl<B: DecodeBackend> Scheduler<B> {
             swap_restores: 0,
             prefix_hit_blocks: 0,
             cow_copies: 0,
+            cancelled_stats: CacheStats::default(),
             started: None,
             admit_counter: 0,
+            steps: 0,
         }
     }
 
     /// The shared physical block arena (O(1) global accounting).
     pub fn arena(&self) -> &BlockManager {
         &self.arena
+    }
+
+    /// The decode backend (read-only; for stats/introspection).
+    pub fn backend(&self) -> &B {
+        &self.backend
     }
 
     /// The host-side swap pool (byte accounting, LRU drop count).
@@ -270,7 +339,8 @@ impl<B: DecodeBackend> Scheduler<B> {
             // A zero-token cache cannot hold even the incoming token; the
             // old code silently floored this to 2 blocks. Reject it.
             log::warn!("req {}: zero cache budget — rejected", req.id);
-            self.finished.push(Self::error_output(&req));
+            let out = Self::error_output(&req);
+            self.emit(req.id, SeqEvent::Finished(out));
             return;
         }
         if req.budget < self.cfg.page_size {
@@ -284,11 +354,24 @@ impl<B: DecodeBackend> Scheduler<B> {
             );
             req.budget = self.cfg.page_size;
         }
-        self.queue.push_back(QueueEntry::fresh(req));
+        // resolve the relative deadline against the round clock NOW: the
+        // request gets `deadline_steps` full rounds after submission
+        let deadline_at = req.deadline_steps.map(|d| self.steps + d);
+        let bucket = Self::bucket(req.priority);
+        self.queues[bucket].push_back(QueueEntry::fresh(req, deadline_at));
+    }
+
+    /// Admission-bucket index of a priority class (highest first).
+    fn bucket(p: Priority) -> usize {
+        match p {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.queues.iter().map(|q| q.len()).sum()
     }
 
     pub fn running(&self) -> usize {
@@ -301,13 +384,100 @@ impl<B: DecodeBackend> Scheduler<B> {
         self.arena.used()
     }
 
-    pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.running.is_empty()
+    /// Scheduling rounds started so far (the deadline clock).
+    pub fn steps(&self) -> u64 {
+        self.steps
     }
 
-    /// Drain all completed outputs accumulated so far.
+    /// Requests cancelled so far.
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled_stats.cancelled
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queues.iter().all(|q| q.is_empty()) && self.running.is_empty()
+    }
+
+    fn emit(&mut self, id: u64, ev: SeqEvent) {
+        self.events.push_back((id, ev));
+    }
+
+    /// Emit a non-terminal streaming event (dropped unless streaming is
+    /// enabled both scheduler-wide — [`Scheduler::set_event_streaming`] —
+    /// and on the request itself — `Request::stream_events`).
+    fn emit_stream(&mut self, req: &Request, ev: SeqEvent) {
+        if self.stream_events && req.stream_events {
+            self.events.push_back((req.id, ev));
+        }
+    }
+
+    /// Enable per-token/lifecycle streaming events. The session API turns
+    /// this on; legacy `take_finished`-only consumers leave it off so the
+    /// event buffer stays O(finished requests) between drains.
+    pub fn set_event_streaming(&mut self, enabled: bool) {
+        self.stream_events = enabled;
+    }
+
+    /// Drain every lifecycle event emitted since the last drain, in
+    /// emission order. The session API's feed. Without
+    /// [`Scheduler::set_event_streaming`] only terminal `Finished` events
+    /// appear here.
+    pub fn take_events(&mut self) -> Vec<(u64, SeqEvent)> {
+        self.events.drain(..).collect()
+    }
+
+    /// Compat shim over the event stream: drains ALL pending events and
+    /// returns only the terminal outputs, discarding the streaming
+    /// events. Callers that want the full stream use
+    /// [`Scheduler::take_events`] (or the session API) instead — the two
+    /// never compose on one scheduler, they drain the same queue.
     pub fn take_finished(&mut self) -> Vec<RequestOutput> {
-        std::mem::take(&mut self.finished)
+        self.events
+            .drain(..)
+            .filter_map(|(_, ev)| match ev {
+                SeqEvent::Finished(out) => Some(out),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Cancel a request wherever it lives. Synchronous: on `true`, the
+    /// blocks of a mid-decode sequence are already back in the arena
+    /// (shared prefix pages unpinned by refcount — a page a live sharer
+    /// holds survives, the hard-error arena guarantees it), any parked
+    /// swap snapshot is discarded, and the queue entry is purged. No
+    /// `Finished` event is emitted — cancellation is not completion.
+    /// `false` when the id is unknown or already finished: a clean no-op.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        for q in self.queues.iter_mut() {
+            let Some(pos) = q.iter().position(|e| e.req.id == id) else {
+                continue;
+            };
+            let entry = q.remove(pos).expect("position just found");
+            self.swap.discard(id);
+            self.cancelled_stats.cancelled += 1;
+            self.cancelled_stats.preemptions += entry.preemptions as u64;
+            self.cancelled_stats.swaps += entry.swaps as u64;
+            log::info!("req {id}: cancelled while queued");
+            return true;
+        }
+        if let Some(pos) = self.running.iter().position(|f| f.req.id == id) {
+            let f = self.running.remove(pos);
+            let n_blocks = B::cache(&f.seq).n_blocks();
+            // fold not-yet-counted copy-on-write work (same rule as
+            // preemption: the victim misses the post-reservation pass)
+            self.cow_copies += B::cache(&f.seq).stats.cow_copies - f.cow_seen;
+            let mut st = B::cache(&f.seq).stats.clone();
+            st.cancelled = 1;
+            st.preemptions = f.preemptions as u64;
+            st.swaps = f.swaps as u64;
+            self.cancelled_stats.merge(&st);
+            self.swap.discard(id); // nothing should be parked; be thorough
+            log::info!("req {id}: cancelled mid-decode (releasing {n_blocks} blocks)");
+            drop(f); // seq drop returns every block by refcount
+            return true;
+        }
+        false
     }
 
     fn error_output(req: &Request) -> RequestOutput {
@@ -325,36 +495,127 @@ impl<B: DecodeBackend> Scheduler<B> {
         }
     }
 
-    /// One scheduling round: admit, reserve (preempting under pressure),
-    /// one batched decode for the whole running set, retire finished.
+    /// Finish a QUEUED entry whose deadline expired: it holds no blocks
+    /// (a preempted one only a possible snapshot), so teardown is a
+    /// discard plus the terminal event carrying whatever it produced.
+    fn expire_queued(&mut self, entry: QueueEntry) {
+        self.swap.discard(entry.req.id);
+        let ttft = entry
+            .first_token_at
+            .map(|t| t.duration_since(entry.enqueued).as_secs_f64())
+            .unwrap_or(0.0);
+        // a preempted victim may have produced tokens before parking:
+        // derive tpot from its accumulated decode time, like retire()
+        let n = entry.resume.len();
+        let tpot = if n > 1 {
+            entry.decode_seconds / (n - 1) as f64
+        } else {
+            entry.decode_seconds
+        };
+        let out = RequestOutput {
+            id: entry.req.id,
+            tokens: entry.resume,
+            finish: FinishReason::Deadline,
+            ttft_s: ttft,
+            tpot_s: tpot,
+            prompt_len: entry.req.prompt.len(),
+            live_cache_tokens: 0,
+            preemptions: entry.preemptions,
+            swaps: entry.swaps,
+            cache_stats: CacheStats {
+                preemptions: entry.preemptions as u64,
+                swaps: entry.swaps as u64,
+                ..Default::default()
+            },
+        };
+        log::info!(
+            "req {}: deadline expired while queued ({} tokens kept)",
+            entry.req.id,
+            out.tokens.len()
+        );
+        self.emit(entry.req.id, SeqEvent::Finished(out));
+    }
+
+    /// One scheduling round: expire deadlines, admit, reserve (preempting
+    /// under pressure), one batched decode for the whole running set,
+    /// retire finished.
     pub fn step(&mut self) -> Result<StepReport> {
         if self.started.is_none() {
             self.started = Some(Instant::now());
         }
+        self.steps += 1;
+        let now_step = self.steps;
         let mut report = StepReport::default();
 
-        // --- admission: fill every free concurrency slot, gated on the
+        // --- deadline sweep: a request past its step deadline finishes
+        // NOW with whatever it has — queued (incl. swapped-out victims:
+        // snapshot discarded) and running (retired, blocks freed) ---
+        for b in 0..self.queues.len() {
+            let mut qi = 0;
+            while qi < self.queues[b].len() {
+                if self.queues[b][qi].deadline_at.is_some_and(|d| now_step > d) {
+                    let entry = self.queues[b].remove(qi).expect("index in range");
+                    self.expire_queued(entry);
+                    report.expired += 1;
+                } else {
+                    qi += 1;
+                }
+            }
+        }
+        let mut ri = 0;
+        while ri < self.running.len() {
+            if self.running[ri].deadline_at.is_some_and(|d| now_step > d) {
+                let f = self.running.remove(ri);
+                log::info!("req {}: deadline expired mid-decode", f.req.id);
+                self.retire(f, Some(FinishReason::Deadline));
+                report.expired += 1;
+                report.finished += 1;
+            } else {
+                ri += 1;
+            }
+        }
+
+        // --- admission: fill every free concurrency slot, HIGHEST
+        // priority first (front-most within a class), gated on the
         // arena's low watermark against what the admission claims NOW:
         // the policy-aware resident prompt MINUS the blocks the prefix
-        // index will serve by refcount (`DecodeBackend::prefill_claim` —
-        // cached blocks are pinned, not re-claimed), or a swapped
+        // index will serve by refcount (`DecodeBackend::prefill_claim`,
+        // memoized on the queue entry against the prefix-index epoch so
+        // gated retries skip the O(prompt) recompute), or a swapped
         // victim's exact snapshot size. Worst-case decode growth is never
         // reserved: the low/high hysteresis band absorbs it and
         // preemption above the high mark reclaims it (the old worst-case
         // gate over-reserved exactly when unstructured policies fragment
         // pages — the paper's Limitation 1) ---
         while self.running.len() < self.cfg.max_concurrency {
-            let Some(entry) = self.queue.pop_front() else { break };
-            let incoming = self.swap.arena_blocks_of(entry.req.id).unwrap_or_else(|| {
-                self.backend.prefill_claim(&self.arena, &entry.req, self.cfg.page_size)
-            });
+            let Some(b) = (0..self.queues.len()).find(|&b| !self.queues[b].is_empty())
+            else {
+                break;
+            };
+            let mut entry = self.queues[b].pop_front().expect("non-empty bucket");
+            let incoming = match self.swap.arena_blocks_of(entry.req.id) {
+                Some(blocks) => blocks,
+                None => match entry.claim.and_then(|m| m.get(&self.arena)) {
+                    Some(blocks) => blocks,
+                    None => {
+                        let blocks = self.backend.prefill_claim(
+                            &self.arena,
+                            &entry.req,
+                            self.cfg.page_size,
+                        );
+                        entry.claim = Some(ClaimMemo::record(&self.arena, blocks));
+                        blocks
+                    }
+                },
+            };
             // With nothing running the gate is bypassed: no sequence can
             // ever free blocks, so either the admission fits the raw
             // capacity now or the request can never run (rejected below
             // when its prefill runs the arena dry).
             if !self.arena.below_low_watermark(incoming) && !self.running.is_empty() {
                 // not enough global KV headroom yet — head-of-line wait
-                self.queue.push_front(entry);
+                // (back to its bucket front, order preserved)
+                self.queues[b].push_front(entry);
                 break;
             }
             match self.admit(entry) {
@@ -377,11 +638,12 @@ impl<B: DecodeBackend> Scheduler<B> {
                             self.arena.capacity()
                         );
                         self.swap.discard(entry.req.id);
-                        self.finished.push(Self::error_output(&entry.req));
+                        let out = Self::error_output(&entry.req);
+                        self.emit(entry.req.id, SeqEvent::Finished(out));
                         report.rejected += 1;
                         continue;
                     }
-                    self.queue.push_front(entry);
+                    self.queues[b].push_front(entry);
                     break;
                 }
                 AdmitOutcome::Failed => report.rejected += 1,
@@ -392,7 +654,7 @@ impl<B: DecodeBackend> Scheduler<B> {
         // proactively, before allocation hard-fails (the hysteresis
         // partner of the low-mark admission gate) ---
         while self.arena.above_high_watermark() && self.running.len() > 1 {
-            let victim = self.youngest_idx();
+            let victim = self.victim_idx();
             self.preempt(victim);
             report.preempted += 1;
         }
@@ -419,7 +681,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                             self.running[i].req.id
                         );
                         let f = self.running.remove(i);
-                        self.retire(f, true);
+                        self.retire(f, Some(FinishReason::Error));
                         report.finished += 1;
                     }
                     // retry the same index (grown) or the shifted one
@@ -432,10 +694,10 @@ impl<B: DecodeBackend> Scheduler<B> {
                             self.running[i].req.id
                         );
                         let f = self.running.remove(i);
-                        self.retire(f, true);
+                        self.retire(f, Some(FinishReason::Error));
                         report.finished += 1;
                     } else {
-                        let victim = self.youngest_idx();
+                        let victim = self.victim_idx();
                         self.preempt(victim);
                         report.preempted += 1;
                         i = 0; // indices shifted and capacity freed: rescan
@@ -487,22 +749,36 @@ impl<B: DecodeBackend> Scheduler<B> {
                     log::warn!("req {}: decode error: {e:#}", f.req.id);
                     if f.fed >= f.produced.len() {
                         f.produced.push(tok); // retire with what we have
+                        if self.stream_events && f.req.stream_events {
+                            self.events.push_back((
+                                f.req.id,
+                                SeqEvent::Token { tok, step: f.produced.len() - 1 },
+                            ));
+                        }
                     }
                     done.push((j, true));
                 }
                 Ok(logits) => {
                     let replaying = f.fed < f.produced.len();
                     if replaying {
+                        // replayed tokens were streamed before the
+                        // preemption: never re-emitted
                         f.fed += 1;
                     } else {
                         f.produced.push(tok);
                         f.fed = f.produced.len();
                         self.total_generated += 1;
+                        if self.stream_events && f.req.stream_events {
+                            self.events.push_back((
+                                f.req.id,
+                                SeqEvent::Token { tok, step: f.produced.len() - 1 },
+                            ));
+                        }
                     }
                     f.next_token = argmax(&logits);
                     if !replaying {
-                        let eos_hit = f.req.eos_token.map_or(false, |e| tok == e);
-                        if eos_hit || f.produced.len() >= f.req.max_new_tokens {
+                        let stop_hit = f.req.is_stop(tok);
+                        if stop_hit || f.produced.len() >= f.req.max_new_tokens {
                             done.push((j, false));
                         }
                     }
@@ -511,7 +787,7 @@ impl<B: DecodeBackend> Scheduler<B> {
         }
         for &(j, errored) in done.iter().rev() {
             let f = self.running.remove(j);
-            self.retire(f, errored);
+            self.retire(f, errored.then_some(FinishReason::Error));
             report.finished += 1;
         }
         Ok(report)
@@ -553,6 +829,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                         entry.resume.len(),
                         entry.resume.len() - fed
                     );
+                    self.emit_stream(&entry.req, SeqEvent::Resumed);
                     // the snapshot carries the cache's historical CoW
                     // count: seed the delta watermark so it is not
                     // recounted this round
@@ -568,6 +845,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                         preemptions: entry.preemptions,
                         swaps: entry.swaps + 1,
                         cow_seen,
+                        deadline_at: entry.deadline_at,
                         req: entry.req,
                         seq,
                     });
@@ -591,7 +869,8 @@ impl<B: DecodeBackend> Scheduler<B> {
             Ok(p) => p,
             Err(e) => {
                 log::warn!("req {}: {e:#}", entry.req.id);
-                self.finished.push(Self::error_output(&entry.req));
+                let out = Self::error_output(&entry.req);
+                self.emit(entry.req.id, SeqEvent::Finished(out));
                 return AdmitOutcome::Failed;
             }
         };
@@ -607,6 +886,14 @@ impl<B: DecodeBackend> Scheduler<B> {
                     // preempted before producing anything, so an empty
                     // resume list does not imply a first admission)
                     self.total_prompt_tokens += entry.req.prompt.len() as u64;
+                    // The first generated token exists the moment prefill
+                    // returns — TTFT stops here (vLLM semantics).
+                    let ttft_s = now.duration_since(entry.enqueued).as_secs_f64();
+                    self.emit_stream(&entry.req, SeqEvent::Prefilled { ttft_s });
+                } else {
+                    // recompute readmission: replay will rebuild the
+                    // produced tokens without re-emitting them
+                    self.emit_stream(&entry.req, SeqEvent::Resumed);
                 }
                 self.admit_counter += 1;
                 // a fresh cache's counters cover exactly this prefill
@@ -614,9 +901,6 @@ impl<B: DecodeBackend> Scheduler<B> {
                 let cow_seen = B::cache(&seq).stats.cow_copies;
                 self.running.push(Inflight {
                     next_token: argmax(&logits),
-                    // The first generated token exists the moment prefill
-                    // returns, so TTFT is measured to admission, not to
-                    // the end of the first decode step (matches vLLM).
                     // A preempted request keeps its original first-token
                     // time.
                     first_token_at: Some(entry.first_token_at.unwrap_or(now)),
@@ -628,6 +912,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                     preemptions: entry.preemptions,
                     swaps: entry.swaps,
                     cow_seen,
+                    deadline_at: entry.deadline_at,
                     req: entry.req,
                     seq,
                 });
@@ -636,22 +921,25 @@ impl<B: DecodeBackend> Scheduler<B> {
             Ok(Prefilled::OutOfMemory) => AdmitOutcome::OutOfMemory(entry),
             Err(e) => {
                 log::warn!("req {}: prefill failed: {e:#}", entry.req.id);
-                self.finished.push(Self::error_output(&entry.req));
+                let out = Self::error_output(&entry.req);
+                self.emit(entry.req.id, SeqEvent::Finished(out));
                 AdmitOutcome::Failed
             }
         }
     }
 
-    /// Index of the most recently admitted running sequence — the
-    /// preemption victim (oldest sequences are closest to finishing, so
-    /// evicting the youngest wastes the least completed work).
-    fn youngest_idx(&self) -> usize {
+    /// Index of the preemption victim: the LOWEST-priority running
+    /// sequence, youngest (most recently admitted) within that class —
+    /// low-priority work always pays for memory pressure before
+    /// higher-priority work, and within a class the youngest wastes the
+    /// least completed work.
+    fn victim_idx(&self) -> usize {
         self.running
             .iter()
             .enumerate()
-            .max_by_key(|(_, f)| f.admit_serial)
+            .min_by_key(|(_, f)| (f.req.priority, std::cmp::Reverse(f.admit_serial)))
             .map(|(i, _)| i)
-            .expect("youngest_idx on empty running set")
+            .expect("victim_idx on empty running set")
     }
 
     /// Evict a running sequence: park its snapshot in the swap pool when
@@ -679,6 +967,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             preemptions,
             swaps,
             next_token,
+            deadline_at,
             ..
         } = f;
         let mut swapped = false;
@@ -690,6 +979,7 @@ impl<B: DecodeBackend> Scheduler<B> {
         if swapped {
             self.swap_outs += 1;
         }
+        self.emit_stream(&req, SeqEvent::Preempted { swap: swapped });
         log::info!(
             "req {}: preempted under memory pressure (freeing {} blocks, {})",
             req.id,
@@ -701,7 +991,8 @@ impl<B: DecodeBackend> Scheduler<B> {
             }
         );
         drop(seq); // returns every block the victim held to the arena
-        self.queue.push_front(QueueEntry {
+        let bucket = Self::bucket(req.priority);
+        self.queues[bucket].push_front(QueueEntry {
             req,
             enqueued,
             resume: produced,
@@ -711,10 +1002,15 @@ impl<B: DecodeBackend> Scheduler<B> {
             swaps,
             swap_fed: fed,
             next_token,
+            deadline_at,
+            claim: None,
         });
     }
 
-    fn retire(&mut self, f: Inflight<B::Seq>, errored: bool) {
+    /// Retire a sequence with its output. `forced` overrides the natural
+    /// finish reason (errors, deadline expiry); `None` derives it from
+    /// the stop set / length.
+    fn retire(&mut self, f: Inflight<B::Seq>, forced: Option<FinishReason>) {
         let ttft = f
             .first_token_at
             .map(|t| t.duration_since(f.enqueued).as_secs_f64())
@@ -727,12 +1023,15 @@ impl<B: DecodeBackend> Scheduler<B> {
         };
         self.ttft.add(ttft * 1e3);
         self.tpot.add(tpot * 1e3);
-        let finish = if errored {
-            FinishReason::Error
-        } else if f.req.eos_token.is_some() && f.produced.last() == f.req.eos_token.as_ref() {
-            FinishReason::Eos
-        } else {
-            FinishReason::MaxTokens
+        let finish = match forced {
+            Some(reason) => reason,
+            None => {
+                if f.produced.last().is_some_and(|&t| f.req.is_stop(t)) {
+                    FinishReason::Eos
+                } else {
+                    FinishReason::MaxTokens
+                }
+            }
         };
         let cache = B::cache(&f.seq);
         let live_cache_tokens = cache.live_tokens();
@@ -740,7 +1039,7 @@ impl<B: DecodeBackend> Scheduler<B> {
         cache_stats.preemptions = f.preemptions as u64;
         cache_stats.swaps = f.swaps as u64;
         cache_stats.peak_arena_blocks = self.arena.stats().peak_used as u64;
-        self.finished.push(RequestOutput {
+        let out = RequestOutput {
             id: f.req.id,
             tokens: f.produced,
             finish,
@@ -751,7 +1050,8 @@ impl<B: DecodeBackend> Scheduler<B> {
             preemptions: f.preemptions,
             swaps: f.swaps,
             cache_stats,
-        });
+        };
+        self.emit(out.id, SeqEvent::Finished(out));
         // f.seq drops here, returning its blocks to the arena
     }
 }

@@ -103,9 +103,10 @@ impl<S: HostSnapshot> SwapPool<S> {
     }
 
     /// Drop the snapshot for `id` if parked (e.g. its request was
-    /// rejected). Not counted as an LRU drop.
-    pub fn discard(&mut self, id: u64) {
-        self.remove(id);
+    /// rejected or cancelled). Not counted as an LRU drop; returns
+    /// whether a snapshot was actually dropped.
+    pub fn discard(&mut self, id: u64) -> bool {
+        self.remove(id)
     }
 
     fn remove(&mut self, id: u64) -> bool {
@@ -196,8 +197,8 @@ mod tests {
     fn discard_is_silent() {
         let mut p = SwapPool::new(1000);
         assert!(p.insert(1, Fake(500)));
-        p.discard(1);
-        p.discard(2); // absent: no-op
+        assert!(p.discard(1));
+        assert!(!p.discard(2), "absent: no-op");
         assert!(p.is_empty());
         assert_eq!(p.dropped(), 0);
     }

@@ -1,18 +1,17 @@
-//! JSON-lines TCP serving frontend.
+//! NDJSON TCP serving frontend.
 //!
-//! PJRT handles are not `Send`, so the engine + scheduler live on one
-//! dedicated thread (the "engine loop"); connection threads parse requests
-//! and exchange them with the loop over std mpsc channels — the same
-//! process split vLLM makes between its API server and the worker.
-
-//! The wire protocol is pure host code and always built; the engine loop
-//! and TCP frontend drive the PJRT scheduler and are gated behind the
-//! `xla` feature.
+//! The wire protocol, the generic engine loop and the TCP accept loop are
+//! pure host code and always built — `spawn_sim_engine` serves the
+//! deterministic sim backend with no PJRT at all (tier-1 tested end to
+//! end over real TCP in `tests/serve_v2.rs`). Only the PJRT engine
+//! spawner (`serve::spawn_engine`) needs the `xla` feature: PJRT handles
+//! are not `Send`, so that engine + scheduler live on one dedicated
+//! thread; connection threads parse requests and exchange them with the
+//! loop over std mpsc channels — the same process split vLLM makes
+//! between its API server and the worker.
 
 pub mod protocol;
-#[cfg(feature = "xla")]
 pub mod serve;
 
-pub use protocol::{WireRequest, WireResponse};
-#[cfg(feature = "xla")]
-pub use serve::{serve_forever, EngineHandle};
+pub use protocol::{WireOp, WireRequest, WireResponse};
+pub use serve::{serve_forever, spawn_sim_engine, EngineHandle, EngineMsg, ServeOpts};

@@ -1,21 +1,95 @@
-//! Wire protocol: one JSON object per line, request/response.
+//! NDJSON wire protocol: one JSON object per line, both directions.
 //!
-//! Request fields:
+//! ## v2 (session-based, server-assigned ids)
+//!
+//! Inbound operations (`"op"` selects):
+//!
+//! ```json
+//! {"op": "submit", "text": "...", "max_new_tokens": 32,
+//!  "budget": 64, "policy": "keydiff", "priority": "high",
+//!  "stop": [7, 9], "deadline_steps": 200, "stream": true}
+//! {"op": "abort", "id": 3}
+//! ```
+//!
+//! `prompt` (token-id array) may replace `text`; `policy`/`budget`
+//! default to the SERVER's configured defaults; `priority` is
+//! low|normal|high; `stream` defaults to the server's `--stream` flag.
+//! The submit is acknowledged with `{"event": "accepted", "id": N}` —
+//! the id is SERVER-assigned (raced submissions can never collide) and
+//! is what `abort` takes. With `"stream": true` every lifecycle event
+//! follows as its own line:
+//!
+//! ```json
+//! {"event": "prefilled", "id": 3, "ttft_ms": 1.2}
+//! {"event": "token", "id": 3, "tok": 104, "step": 0, "text": "h"}
+//! {"event": "preempted", "id": 3, "swap": true}
+//! {"event": "resumed", "id": 3}
+//! {"event": "finished", "id": 3, "tokens": [...], ...}
+//! ```
+//!
+//! With `"stream": false` only `accepted` and the legacy one-shot
+//! response line (below) are written. An `abort` is answered with
+//! `{"event": "aborted", "id": N, "ok": bool}`; aborting an unknown or
+//! finished id is a clean no-op (`ok: false` + `error`), never a
+//! protocol failure. An aborted request emits NO `finished` line —
+//! its stream ends with the server's `aborted` notice. A streaming
+//! connection reads its own stream until it ends, so the abort for an
+//! in-flight streaming request must be sent on a SEPARATE connection
+//! (or the client can simply disconnect: a closed — or stalled, see
+//! `serve::EVENT_CHANNEL_CAP` — event sink cancels the request).
+//!
+//! ## v1 (legacy, caller-assigned ids)
+//!
+//! A line WITHOUT `"op"` is a v1 one-shot request:
 //!   {"id": 1, "text": "..."} or {"id": 1, "prompt": [ids...]},
-//!   optional: "max_new_tokens" (default 32), "budget" (default 1024),
-//!             "policy" ("paged"|"full"|"streaming"|...), "eos" (token id)
-//! Response:
-//!   {"id": 1, "tokens": [...], "text": "...", "finish": "length"|"eos",
+//!   optional: "max_new_tokens" (default 32), "budget", "policy",
+//!             "eos" (token id), "stop" ([ids]), "priority",
+//!             "deadline_steps"
+//! Unset "policy"/"budget" inherit the SERVER's configured defaults —
+//! same resolution as v2, so both protocol generations answer a given
+//! prompt identically. Failures (e.g. an unknown policy) come back as a
+//! response line carrying the caller's id with finish "error".
+//! answered by one response line:
+//!   {"id": 1, "tokens": [...], "text": "...",
+//!    "finish": "length"|"eos"|"error"|"deadline",
 //!    "ttft_ms": .., "tpot_ms": .., "live_cache_tokens": ..,
 //!    "preemptions": .., "swaps": .., "prefix_hit_blocks": ..,
 //!    "cow_copies": ..}
 
 use anyhow::{Context, Result};
 
-use crate::scheduler::{FinishReason, Request, RequestOutput};
+use crate::api::{RequestBuilder, SeqEvent};
+use crate::scheduler::{FinishReason, Priority, Request, RequestOutput};
 use crate::tokenizer;
 use crate::util::json::Json;
 
+fn parse_prompt(j: &Json) -> Result<Vec<u32>> {
+    let prompt: Vec<u32> = if let Some(arr) = j.get("prompt").and_then(|v| v.as_arr()) {
+        arr.iter()
+            .map(|v| v.as_usize().map(|x| x as u32))
+            .collect::<Option<Vec<u32>>>()
+            .context("prompt must be an int array")?
+    } else if let Some(text) = j.get("text").and_then(|v| v.as_str()) {
+        tokenizer::encode(text)
+    } else {
+        anyhow::bail!("request needs 'prompt' (ids) or 'text'");
+    };
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    Ok(prompt)
+}
+
+fn parse_stop_set(j: &Json) -> Result<Vec<u32>> {
+    match j.get("stop").and_then(|v| v.as_arr()) {
+        Some(arr) => arr
+            .iter()
+            .map(|v| v.as_usize().map(|x| x as u32))
+            .collect::<Option<Vec<u32>>>()
+            .context("stop must be an int array"),
+        None => Ok(Vec::new()),
+    }
+}
+
+/// Legacy v1 request line (caller-assigned id, one-shot response).
 #[derive(Debug, Clone)]
 pub struct WireRequest(pub Request);
 
@@ -23,17 +97,7 @@ impl WireRequest {
     pub fn parse(line: &str) -> Result<WireRequest> {
         let j = Json::parse(line).context("bad request json")?;
         let id = j.get("id").and_then(|v| v.as_u64()).unwrap_or(0);
-        let prompt: Vec<u32> = if let Some(arr) = j.get("prompt").and_then(|v| v.as_arr()) {
-            arr.iter()
-                .map(|v| v.as_usize().map(|x| x as u32))
-                .collect::<Option<Vec<u32>>>()
-                .context("prompt must be an int array")?
-        } else if let Some(text) = j.get("text").and_then(|v| v.as_str()) {
-            tokenizer::encode(text)
-        } else {
-            anyhow::bail!("request needs 'prompt' (ids) or 'text'");
-        };
-        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let prompt = parse_prompt(&j)?;
         let mut req = Request::new(id, prompt, 32);
         if let Some(m) = j.get("max_new_tokens").and_then(|v| v.as_usize()) {
             req.max_new_tokens = m.max(1);
@@ -46,6 +110,13 @@ impl WireRequest {
         }
         if let Some(e) = j.get("eos").and_then(|v| v.as_usize()) {
             req.eos_token = Some(e as u32);
+        }
+        req.stop_tokens = parse_stop_set(&j)?;
+        if let Some(p) = j.get("priority").and_then(|v| v.as_str()) {
+            req.priority = Priority::parse(p)?;
+        }
+        if let Some(d) = j.get("deadline_steps").and_then(|v| v.as_u64()) {
+            req.deadline_steps = Some(d);
         }
         Ok(WireRequest(req))
     }
@@ -61,39 +132,181 @@ impl JsonU64 for Json {
     }
 }
 
+/// Shared submission-field parsing for v1 and v2 lines. Every field is
+/// optional: unset `policy`/`budget` inherit the SERVER's configured
+/// defaults when the builder is resolved at submit, and the legacy
+/// `"eos"` token folds into the stop-token set (identical finish
+/// semantics), so v1 and v2 clients get the same answer for the same
+/// prompt on the same server.
+fn parse_builder(j: &Json, default_priority: Priority) -> Result<RequestBuilder> {
+    let prompt = parse_prompt(j)?;
+    let mut b = RequestBuilder::new(prompt).priority(default_priority);
+    if let Some(m) = j.get("max_new_tokens").and_then(|v| v.as_usize()) {
+        b = b.max_new_tokens(m);
+    }
+    if let Some(v) = j.get("budget").and_then(|v| v.as_usize()) {
+        b = b.budget(v);
+    }
+    if let Some(p) = j.get("policy").and_then(|v| v.as_str()) {
+        b = b.policy(p);
+    }
+    if let Some(p) = j.get("priority").and_then(|v| v.as_str()) {
+        b = b.priority(Priority::parse(p)?);
+    }
+    if let Some(d) = j.get("deadline_steps").and_then(|v| v.as_u64()) {
+        b = b.deadline_steps(d);
+    }
+    let mut stop = parse_stop_set(j)?;
+    if let Some(e) = j.get("eos").and_then(|v| v.as_usize()) {
+        stop.push(e as u32);
+    }
+    Ok(b.stop_tokens(stop))
+}
+
+/// One parsed inbound line of the v2 protocol.
+#[derive(Debug, Clone)]
+pub enum WireOp {
+    /// v2 submission: the server assigns the id; `stream` selects
+    /// per-event lines vs the one-shot response.
+    Submit { builder: RequestBuilder, stream: bool },
+    /// v2 cancellation by server-assigned id.
+    Abort { id: u64 },
+    /// v1 line (no `"op"` key): blocking one-shot with the caller's `id`
+    /// echoed back. Parsed through the same optional-field builder as
+    /// v2, so unset policy/budget inherit the server defaults too.
+    Legacy { id: u64, builder: RequestBuilder },
+}
+
+impl WireOp {
+    /// Parse one inbound line. `default_stream`/`default_priority` are
+    /// the server's configured defaults for submits that leave them out.
+    pub fn parse(line: &str, default_stream: bool, default_priority: Priority) -> Result<WireOp> {
+        let j = Json::parse(line).context("bad request json")?;
+        let Some(op) = j.get("op").and_then(|v| v.as_str()) else {
+            let id = j.get("id").and_then(|v| v.as_u64()).unwrap_or(0);
+            // one-shot: only the terminal output is ever read
+            let builder = parse_builder(&j, default_priority)?.stream_events(false);
+            return Ok(WireOp::Legacy { id, builder });
+        };
+        match op {
+            "submit" => {
+                let stream = j.get("stream").and_then(|v| v.as_bool()).unwrap_or(default_stream);
+                // one-shot submits only read the terminal output: skip
+                // materializing per-token events for them entirely
+                let builder = parse_builder(&j, default_priority)?.stream_events(stream);
+                Ok(WireOp::Submit { builder, stream })
+            }
+            "abort" => {
+                let id = j
+                    .get("id")
+                    .and_then(|v| v.as_u64())
+                    .context("abort needs a numeric 'id'")?;
+                Ok(WireOp::Abort { id })
+            }
+            other => anyhow::bail!("unknown op {other:?} (want submit|abort)"),
+        }
+    }
+}
+
+fn finish_name(f: FinishReason) -> &'static str {
+    match f {
+        FinishReason::Eos => "eos",
+        FinishReason::MaxTokens => "length",
+        FinishReason::Error => "error",
+        FinishReason::Deadline => "deadline",
+    }
+}
+
+/// The full output field set shared by the v1 response line and the v2
+/// `finished` event.
+fn output_pairs(o: &RequestOutput) -> Vec<(&'static str, Json)> {
+    vec![
+        ("id", Json::num(o.id as f64)),
+        (
+            "tokens",
+            Json::Arr(o.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("text", Json::str(tokenizer::decode(&o.tokens))),
+        ("finish", Json::str(finish_name(o.finish))),
+        ("ttft_ms", Json::num(o.ttft_s * 1e3)),
+        ("tpot_ms", Json::num(o.tpot_s * 1e3)),
+        ("prompt_len", Json::num(o.prompt_len as f64)),
+        ("live_cache_tokens", Json::num(o.live_cache_tokens as f64)),
+        ("preemptions", Json::num(o.preemptions as f64)),
+        ("swaps", Json::num(o.swaps as f64)),
+        (
+            "prefix_hit_blocks",
+            Json::num(o.cache_stats.prefix_hit_blocks as f64),
+        ),
+        ("cow_copies", Json::num(o.cache_stats.cow_copies as f64)),
+    ]
+}
+
+/// Legacy v1 one-shot response line.
 #[derive(Debug, Clone)]
 pub struct WireResponse(pub RequestOutput);
 
 impl WireResponse {
     pub fn to_line(&self) -> String {
-        let o = &self.0;
-        let finish = match o.finish {
-            FinishReason::Eos => "eos",
-            FinishReason::MaxTokens => "length",
-            FinishReason::Error => "error",
-        };
-        Json::obj(vec![
-            ("id", Json::num(o.id as f64)),
-            (
-                "tokens",
-                Json::Arr(o.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
-            ),
-            ("text", Json::str(tokenizer::decode(&o.tokens))),
-            ("finish", Json::str(finish)),
-            ("ttft_ms", Json::num(o.ttft_s * 1e3)),
-            ("tpot_ms", Json::num(o.tpot_s * 1e3)),
-            ("prompt_len", Json::num(o.prompt_len as f64)),
-            ("live_cache_tokens", Json::num(o.live_cache_tokens as f64)),
-            ("preemptions", Json::num(o.preemptions as f64)),
-            ("swaps", Json::num(o.swaps as f64)),
-            (
-                "prefix_hit_blocks",
-                Json::num(o.cache_stats.prefix_hit_blocks as f64),
-            ),
-            ("cow_copies", Json::num(o.cache_stats.cow_copies as f64)),
-        ])
-        .to_string()
+        Json::obj(output_pairs(&self.0)).to_string()
     }
+}
+
+/// Serialize one v2 event line for request `id`.
+pub fn event_line(id: u64, ev: &SeqEvent) -> String {
+    let mut pairs: Vec<(&'static str, Json)> = vec![("event", Json::str(ev.kind()))];
+    match ev {
+        SeqEvent::Prefilled { ttft_s } => {
+            pairs.push(("id", Json::num(id as f64)));
+            pairs.push(("ttft_ms", Json::num(ttft_s * 1e3)));
+        }
+        SeqEvent::Token { tok, step } => {
+            pairs.push(("id", Json::num(id as f64)));
+            pairs.push(("tok", Json::num(*tok as f64)));
+            pairs.push(("step", Json::num(*step as f64)));
+            pairs.push(("text", Json::str(tokenizer::decode(&[*tok]))));
+        }
+        SeqEvent::Preempted { swap } => {
+            pairs.push(("id", Json::num(id as f64)));
+            pairs.push(("swap", Json::Bool(*swap)));
+        }
+        SeqEvent::Resumed => {
+            pairs.push(("id", Json::num(id as f64)));
+        }
+        SeqEvent::Finished(out) => {
+            // the "id" lives in the shared field set
+            pairs.extend(output_pairs(out));
+        }
+    }
+    Json::obj(pairs).to_string()
+}
+
+/// v2 submit acknowledgement carrying the server-assigned id.
+pub fn accepted_line(id: u64) -> String {
+    Json::obj(vec![
+        ("event", Json::str("accepted")),
+        ("id", Json::num(id as f64)),
+    ])
+    .to_string()
+}
+
+/// v2 abort acknowledgement. `ok = false` (unknown/finished id, or the
+/// stream ended first) is a clean no-op, not a protocol error.
+pub fn aborted_line(id: u64, ok: bool) -> String {
+    let mut pairs = vec![
+        ("event", Json::str("aborted")),
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(ok)),
+    ];
+    if !ok {
+        pairs.push(("error", Json::str("unknown or finished id")));
+    }
+    Json::obj(pairs).to_string()
+}
+
+/// Error line (parse failures and other per-line faults).
+pub fn error_line(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
 }
 
 #[cfg(test)]
@@ -111,6 +324,7 @@ mod tests {
         assert_eq!(r.prompt, vec![104, 105]);
         assert_eq!(r.max_new_tokens, 4);
         assert_eq!(r.policy, "full");
+        assert_eq!(r.priority, Priority::Normal);
     }
 
     #[test]
@@ -126,6 +340,132 @@ mod tests {
     fn rejects_empty() {
         assert!(WireRequest::parse(r#"{"id": 1}"#).is_err());
         assert!(WireRequest::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn v1_parses_priority_stop_and_deadline() {
+        let r = WireRequest::parse(
+            r#"{"id": 2, "prompt": [5], "priority": "high", "stop": [7, 9],
+                "deadline_steps": 40}"#,
+        )
+        .unwrap()
+        .0;
+        assert_eq!(r.priority, Priority::High);
+        assert_eq!(r.stop_tokens, vec![7, 9]);
+        assert_eq!(r.deadline_steps, Some(40));
+        assert!(WireRequest::parse(r#"{"prompt": [1], "priority": "zz"}"#).is_err());
+    }
+
+    #[test]
+    fn v2_submit_parses_with_defaults_and_overrides() {
+        let cfg = crate::scheduler::SchedConfig::default();
+        let op = WireOp::parse(
+            r#"{"op": "submit", "prompt": [1, 2], "stream": false,
+                "policy": "keydiff", "budget": 64, "priority": "low",
+                "max_new_tokens": 5, "stop": [3], "deadline_steps": 9}"#,
+            true,
+            Priority::Normal,
+        )
+        .unwrap();
+        let WireOp::Submit { builder, stream } = op else { panic!("want submit") };
+        assert!(!stream, "explicit stream:false wins over the default");
+        let req = builder.build(crate::api::RequestId(11), &cfg);
+        assert_eq!(req.id, 11);
+        assert!(!req.stream_events, "one-shot submits skip event generation");
+        assert_eq!(req.policy, "keydiff");
+        assert_eq!(req.budget, 64);
+        assert_eq!(req.priority, Priority::Low);
+        assert_eq!(req.max_new_tokens, 5);
+        assert_eq!(req.stop_tokens, vec![3]);
+        assert_eq!(req.deadline_steps, Some(9));
+
+        // unset fields inherit the server defaults
+        let op = WireOp::parse(
+            r#"{"op": "submit", "text": "hi"}"#,
+            true,
+            Priority::High,
+        )
+        .unwrap();
+        let WireOp::Submit { builder, stream } = op else { panic!("want submit") };
+        assert!(stream, "server default stream mode applies");
+        let req = builder.build(crate::api::RequestId(1), &cfg);
+        assert_eq!(req.policy, cfg.default_policy);
+        assert_eq!(req.budget, cfg.default_budget);
+        assert_eq!(req.priority, Priority::High);
+    }
+
+    #[test]
+    fn v2_abort_and_legacy_and_errors() {
+        let cfg = crate::scheduler::SchedConfig {
+            default_policy: "full".into(),
+            default_budget: 2048,
+            ..Default::default()
+        };
+        match WireOp::parse(r#"{"op": "abort", "id": 12}"#, false, Priority::Normal).unwrap() {
+            WireOp::Abort { id } => assert_eq!(id, 12),
+            other => panic!("want abort, got {other:?}"),
+        }
+        match WireOp::parse(r#"{"id": 4, "prompt": [1], "eos": 9}"#, false, Priority::Normal)
+            .unwrap()
+        {
+            WireOp::Legacy { id, builder } => {
+                assert_eq!(id, 4);
+                let req = builder.build(crate::api::RequestId(1), &cfg);
+                // v1 lines inherit the SERVER defaults for unset fields
+                assert_eq!(req.policy, "full");
+                assert_eq!(req.budget, 2048);
+                assert_eq!(req.stop_tokens, vec![9], "eos folds into the stop set");
+                assert!(!req.stream_events, "one-shot: no per-token events");
+            }
+            other => panic!("want legacy, got {other:?}"),
+        }
+        // v2 honors "eos" too (migrating v1 clients keep their stop token)
+        match WireOp::parse(
+            r#"{"op": "submit", "prompt": [1], "eos": 7, "stop": [5]}"#,
+            true,
+            Priority::Normal,
+        )
+        .unwrap()
+        {
+            WireOp::Submit { builder, .. } => {
+                let req = builder.build(crate::api::RequestId(2), &cfg);
+                assert_eq!(req.stop_tokens, vec![5, 7]);
+            }
+            other => panic!("want submit, got {other:?}"),
+        }
+        assert!(WireOp::parse(r#"{"op": "abort"}"#, false, Priority::Normal).is_err());
+        assert!(WireOp::parse(r#"{"op": "noop"}"#, false, Priority::Normal).is_err());
+    }
+
+    #[test]
+    fn event_lines_roundtrip_as_json() {
+        let l = event_line(3, &SeqEvent::Prefilled { ttft_s: 0.001 });
+        let j = Json::parse(&l).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str(), Some("prefilled"));
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(3));
+        assert!((j.get("ttft_ms").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+
+        let l = event_line(3, &SeqEvent::Token { tok: 104, step: 2 });
+        let j = Json::parse(&l).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str(), Some("token"));
+        assert_eq!(j.get("tok").unwrap().as_usize(), Some(104));
+        assert_eq!(j.get("step").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("text").unwrap().as_str(), Some("h"));
+
+        let l = event_line(3, &SeqEvent::Preempted { swap: true });
+        let j = Json::parse(&l).unwrap();
+        assert_eq!(j.get("swap").unwrap().as_bool(), Some(true));
+
+        let j = Json::parse(&accepted_line(9)).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str(), Some("accepted"));
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(9));
+
+        let j = Json::parse(&aborted_line(9, false)).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert!(j.get("error").is_some());
+        let j = Json::parse(&aborted_line(9, true)).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert!(j.get("error").is_none());
     }
 
     #[test]
@@ -147,8 +487,18 @@ mod tests {
                 ..CacheStats::default()
             },
         };
+        // the v2 finished event carries the same field set as the v1 line
+        let fin = event_line(3, &SeqEvent::Finished(out.clone()));
+        let jf = Json::parse(&fin).unwrap();
+        assert_eq!(jf.get("event").unwrap().as_str(), Some("finished"));
         let line = WireResponse(out).to_line();
         let j = Json::parse(&line).unwrap();
+        for key in [
+            "id", "tokens", "text", "finish", "ttft_ms", "tpot_ms", "prompt_len",
+            "live_cache_tokens", "preemptions", "swaps", "prefix_hit_blocks", "cow_copies",
+        ] {
+            assert_eq!(j.get(key), jf.get(key), "field {key} diverged between v1 and v2");
+        }
         assert_eq!(j.get("id").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("text").unwrap().as_str(), Some("hi"));
         assert_eq!(j.get("finish").unwrap().as_str(), Some("length"));
@@ -156,5 +506,23 @@ mod tests {
         assert_eq!(j.get("swaps").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("prefix_hit_blocks").unwrap().as_usize(), Some(6));
         assert_eq!(j.get("cow_copies").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn deadline_finish_serializes() {
+        let out = RequestOutput {
+            id: 1,
+            tokens: vec![],
+            finish: FinishReason::Deadline,
+            ttft_s: 0.0,
+            tpot_s: 0.0,
+            prompt_len: 1,
+            live_cache_tokens: 0,
+            preemptions: 0,
+            swaps: 0,
+            cache_stats: Default::default(),
+        };
+        let j = Json::parse(&WireResponse(out).to_line()).unwrap();
+        assert_eq!(j.get("finish").unwrap().as_str(), Some("deadline"));
     }
 }

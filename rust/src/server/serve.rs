@@ -1,50 +1,212 @@
 //! The engine loop + TCP frontend.
+//!
+//! The engine loop owns an [`api::Session`] and is generic over the
+//! decode backend, so the IDENTICAL loop serves the always-built sim
+//! backend ([`spawn_sim_engine`], tier-1 tested over real TCP in
+//! `tests/serve_v2.rs`) and the PJRT runtime ([`spawn_engine`],
+//! `--features xla`). PJRT handles are not `Send`, so the session lives
+//! on one dedicated thread; connection threads parse NDJSON lines and
+//! exchange [`EngineMsg`]s with the loop over std mpsc channels — the
+//! same process split vLLM makes between its API server and the worker.
+//!
+//! v2 requests stream every [`SeqEvent`] as its own line as the engine
+//! produces it; a client that disconnects mid-stream gets its request
+//! CANCELLED (the event sink's closed channel is the signal), so
+//! abandoned streams stop burning arena blocks immediately.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
+};
 
 use anyhow::{Context, Result};
 
-use super::protocol::{WireRequest, WireResponse};
-use crate::scheduler::{Request, RequestOutput, SchedConfig, Scheduler};
-use crate::runtime::Engine;
+use super::protocol::{
+    aborted_line, accepted_line, error_line, event_line, WireOp, WireResponse,
+};
+use crate::api::{RequestBuilder, RequestHandle, RequestId, SeqEvent, Session};
+use crate::scheduler::{
+    DecodeBackend, FinishReason, Priority, Request, RequestOutput, SchedConfig,
+};
 
-type ReplyTx = Sender<RequestOutput>;
+/// Per-server wire defaults (a submit line may override `stream`;
+/// `priority` applies to requests that do not name one).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOpts {
+    pub default_stream: bool,
+    pub default_priority: Priority,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { default_stream: false, default_priority: Priority::Normal }
+    }
+}
+
+/// Per-request event-sink depth. The sink is a BOUNDED channel so a
+/// client that stalls (stops reading without closing) cannot buffer
+/// events without bound: once it falls this many events behind, the
+/// engine cancels its request — same treatment as a disconnect.
+pub const EVENT_CHANNEL_CAP: usize = 8192;
+
+/// Messages connection threads send to the engine loop.
+pub enum EngineMsg {
+    Submit {
+        builder: RequestBuilder,
+        /// Replies with the server-assigned id, or a submit-time error.
+        accepted: Sender<std::result::Result<u64, String>>,
+        /// Event sink (bounded, [`EVENT_CHANNEL_CAP`]). Dropping the
+        /// receiver — or letting it fill up — cancels the request.
+        events: SyncSender<(u64, SeqEvent)>,
+    },
+    Abort {
+        id: u64,
+        ack: Sender<bool>,
+    },
+}
 
 /// Cloneable handle connection threads use to reach the engine loop.
 #[derive(Clone)]
 pub struct EngineHandle {
-    tx: Sender<(Request, ReplyTx)>,
+    tx: Sender<EngineMsg>,
 }
 
 impl EngineHandle {
-    /// Submit a request and block until it completes.
-    pub fn generate(&self, req: Request) -> Result<RequestOutput> {
-        let (rtx, rrx) = channel();
+    /// Submit and return the server-assigned id plus the event stream.
+    pub fn submit_streaming(
+        &self,
+        builder: RequestBuilder,
+    ) -> Result<(u64, Receiver<(u64, SeqEvent)>)> {
+        let (etx, erx) = sync_channel(EVENT_CHANNEL_CAP);
+        let (atx, arx) = channel();
         self.tx
-            .send((req, rtx))
+            .send(EngineMsg::Submit { builder, accepted: atx, events: etx })
             .map_err(|_| anyhow::anyhow!("engine loop gone"))?;
-        rrx.recv().context("engine loop dropped the request")
+        match arx.recv().context("engine loop dropped the submission")? {
+            Ok(id) => Ok((id, erx)),
+            Err(msg) => anyhow::bail!("submit rejected: {msg}"),
+        }
+    }
+
+    /// Cancel by server-assigned id. `Ok(false)` = unknown/finished id
+    /// (a clean no-op).
+    pub fn abort(&self, id: u64) -> Result<bool> {
+        let (atx, arx) = channel();
+        self.tx
+            .send(EngineMsg::Abort { id, ack: atx })
+            .map_err(|_| anyhow::anyhow!("engine loop gone"))?;
+        arx.recv().context("engine loop dropped the abort")
+    }
+
+    /// Legacy blocking one-shot: submit and wait for the terminal output.
+    /// The engine assigns its own id; a nonzero caller id is echoed back
+    /// in the output (v1 wire semantics).
+    pub fn generate(&self, req: Request) -> Result<RequestOutput> {
+        let caller_id = req.id;
+        let (_, rx) = self.submit_streaming(builder_from_request(req))?;
+        wait_for_finished(rx, caller_id)
     }
 }
 
-/// Run the engine loop on the CURRENT thread (PJRT handles are not Send).
-/// Returns when `rx` disconnects and all work is drained.
-pub fn engine_loop(
-    engine: &Engine,
-    cfg: SchedConfig,
-    rx: Receiver<(Request, ReplyTx)>,
+/// Drain an event stream to its terminal output, echoing `caller_id`
+/// when nonzero (v1 semantics). Shared by [`EngineHandle::generate`] and
+/// the TCP v1 line handler so the two one-shot paths cannot diverge.
+fn wait_for_finished(rx: Receiver<(u64, SeqEvent)>, caller_id: u64) -> Result<RequestOutput> {
+    for (_, ev) in rx {
+        if let SeqEvent::Finished(mut out) = ev {
+            if caller_id != 0 {
+                out.id = caller_id;
+            }
+            return Ok(out);
+        }
+    }
+    anyhow::bail!("request cancelled or engine loop gone")
+}
+
+/// Lower a legacy [`Request`] onto the builder surface. The legacy
+/// `eos_token` folds into the stop-token set — `Request::is_stop` treats
+/// them identically, so finish semantics are unchanged.
+fn builder_from_request(req: Request) -> RequestBuilder {
+    let mut stop = req.stop_tokens;
+    if let Some(e) = req.eos_token {
+        stop.push(e);
+    }
+    let mut b = RequestBuilder::new(req.prompt)
+        .max_new_tokens(req.max_new_tokens)
+        .stop_tokens(stop)
+        .policy(req.policy)
+        .budget(req.budget)
+        .priority(req.priority)
+        // one-shot: only the Finished event is ever read
+        .stream_events(false);
+    if let Some(d) = req.deadline_steps {
+        b = b.deadline_steps(d);
+    }
+    b
+}
+
+/// A live stream: the session-side handle plus the connection-side sink.
+type Sink<B> = (RequestHandle<B>, SyncSender<(u64, SeqEvent)>);
+
+/// Forward freshly routed events from every live handle into its sink;
+/// tear down streams that finished or whose client vanished or stalled.
+fn deliver<B: DecodeBackend>(session: &Session<B>, sinks: &mut HashMap<u64, Sink<B>>) {
+    let mut dead: Vec<u64> = Vec::new();
+    for (&id, (handle, tx)) in sinks.iter_mut() {
+        let mut done = false;
+        for ev in handle.drain() {
+            let is_fin = matches!(ev, SeqEvent::Finished(_));
+            match tx.try_send((id, ev)) {
+                Ok(()) => {
+                    if is_fin {
+                        done = true;
+                    }
+                }
+                Err(e) => {
+                    // disconnected, or stalled EVENT_CHANNEL_CAP events
+                    // behind: either way, stop paying for it. A stalled
+                    // client's stream is best-effort by design: if the
+                    // dropped event was the terminal output, the client
+                    // sees its stream end without a finished line.
+                    let stalled = matches!(e, TrySendError::Full(_));
+                    if is_fin && stalled {
+                        log::warn!("req {id}: finished output dropped — sink stalled");
+                    } else {
+                        let why = if stalled { "stalled" } else { "closed" };
+                        log::info!("req {id}: event sink {why} — cancelling");
+                    }
+                    handle.cancel();
+                    done = true;
+                    break;
+                }
+            }
+        }
+        if done {
+            dead.push(id);
+        }
+    }
+    for id in dead {
+        if let Some((handle, _)) = sinks.remove(&id) {
+            session.forget(handle.id());
+        }
+    }
+}
+
+/// Run the engine loop on the CURRENT thread. Returns when `rx`
+/// disconnects and all work is drained.
+pub fn run_engine_loop<B: DecodeBackend>(
+    session: Session<B>,
+    rx: Receiver<EngineMsg>,
 ) -> Result<()> {
-    let mut sched = Scheduler::new(engine, cfg)?;
-    let mut waiters: std::collections::HashMap<u64, ReplyTx> = Default::default();
+    let mut sinks: HashMap<u64, Sink<B>> = HashMap::new();
     let mut disconnected = false;
     loop {
         // Drain the inbox without blocking while there is work; block when
         // idle to avoid spinning.
         loop {
-            let msg = if sched.is_idle() && !disconnected {
+            let msg = if session.is_idle() && !disconnected {
                 match rx.recv() {
                     Ok(m) => Some(m),
                     Err(_) => {
@@ -63,34 +225,77 @@ pub fn engine_loop(
                 }
             };
             match msg {
-                Some((req, reply)) => {
-                    waiters.insert(req.id, reply);
-                    sched.submit(req);
+                Some(EngineMsg::Submit { builder, accepted, events }) => {
+                    match session.submit(builder) {
+                        Ok(handle) => {
+                            let id = handle.id().raw();
+                            let _ = accepted.send(Ok(id));
+                            sinks.insert(id, (handle, events));
+                            // a submit-time rejection (e.g. zero budget)
+                            // emits Finished with no step and keeps the
+                            // session idle — deliver NOW, before this
+                            // loop blocks on recv again
+                            deliver(&session, &mut sinks);
+                        }
+                        Err(e) => {
+                            let _ = accepted.send(Err(format!("{e:#}")));
+                        }
+                    }
+                }
+                Some(EngineMsg::Abort { id, ack }) => {
+                    let ok = session.cancel(RequestId(id));
+                    if ok {
+                        // the sink just goes away: an aborted request
+                        // emits no Finished event (the conn thread turns
+                        // the closed channel into its `aborted` notice)
+                        if let Some((handle, _)) = sinks.remove(&id) {
+                            session.forget(handle.id());
+                        }
+                    }
+                    let _ = ack.send(ok);
                 }
                 None => break,
             }
         }
-        if sched.is_idle() {
+        // (submit-time rejections were already delivered inline above)
+        if session.is_idle() {
             if disconnected {
                 return Ok(());
             }
             continue;
         }
-        sched.step()?;
-        for out in sched.take_finished() {
-            if let Some(tx) = waiters.remove(&out.id) {
-                let _ = tx.send(out);
-            }
-        }
+        session.step()?;
+        deliver(&session, &mut sinks);
     }
 }
 
-/// Spawn the engine loop on its own thread and return a handle.
+/// Spawn the engine loop over the always-built deterministic sim backend
+/// (no PJRT, no artifacts). What `paged-eviction serve --backend sim`
+/// and the tier-1 server tests run.
+pub fn spawn_sim_engine(
+    cfg: SchedConfig,
+) -> Result<(EngineHandle, std::thread::JoinHandle<()>)> {
+    let (tx, rx) = channel();
+    let session = Session::new_sim(cfg);
+    let join = std::thread::Builder::new()
+        .name("engine-loop".into())
+        .spawn(move || {
+            if let Err(e) = run_engine_loop(session, rx) {
+                log::error!("engine loop died: {e:#}");
+            }
+        })?;
+    Ok((EngineHandle { tx }, join))
+}
+
+/// Spawn the PJRT engine loop on its own thread and return a handle.
 /// `artifacts_dir` is loaded inside the thread (Engine is not Send).
+#[cfg(feature = "xla")]
 pub fn spawn_engine(
     artifacts_dir: std::path::PathBuf,
     cfg: SchedConfig,
 ) -> Result<(EngineHandle, std::thread::JoinHandle<()>)> {
+    use crate::runtime::Engine;
+
     let (tx, rx) = channel();
     let (ready_tx, ready_rx) = channel();
     let join = std::thread::Builder::new()
@@ -106,7 +311,11 @@ pub fn spawn_engine(
                     return;
                 }
             };
-            if let Err(e) = engine_loop(&engine, cfg, rx) {
+            let run = move || -> Result<()> {
+                let sched = crate::scheduler::Scheduler::new(&engine, cfg)?;
+                run_engine_loop(Session::from_scheduler(sched), rx)
+            };
+            if let Err(e) = run() {
                 log::error!("engine loop died: {e:#}");
             }
         })?;
@@ -117,19 +326,18 @@ pub fn spawn_engine(
     }
 }
 
-/// Accept loop: JSON-lines over TCP, one thread per connection.
+/// Accept loop: NDJSON over TCP, one thread per connection.
 pub fn serve_forever(
     listener: TcpListener,
     handle: EngineHandle,
-    next_id: Arc<Mutex<u64>>,
+    opts: ServeOpts,
 ) -> Result<()> {
     log::info!("listening on {}", listener.local_addr()?);
     for conn in listener.incoming() {
         let conn = conn?;
         let h = handle.clone();
-        let ids = next_id.clone();
         std::thread::spawn(move || {
-            if let Err(e) = handle_conn(conn, h, ids) {
+            if let Err(e) = handle_conn(conn, h, opts) {
                 log::debug!("connection closed: {e:#}");
             }
         });
@@ -137,11 +345,7 @@ pub fn serve_forever(
     Ok(())
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    handle: EngineHandle,
-    next_id: Arc<Mutex<u64>>,
-) -> Result<()> {
+fn handle_conn(stream: TcpStream, handle: EngineHandle, opts: ServeOpts) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -150,18 +354,77 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        match WireRequest::parse(&line) {
-            Ok(WireRequest(mut req)) => {
-                if req.id == 0 {
-                    let mut g = next_id.lock().unwrap();
-                    *g += 1;
-                    req.id = *g;
+        match WireOp::parse(&line, opts.default_stream, opts.default_priority) {
+            Ok(WireOp::Submit { builder, stream: want_stream }) => {
+                let (id, rx) = match handle.submit_streaming(builder) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        writeln!(writer, "{}", error_line(&format!("{e:#}")))?;
+                        continue;
+                    }
+                };
+                writeln!(writer, "{}", accepted_line(id))?;
+                let mut finished = false;
+                for (_, ev) in rx {
+                    if want_stream {
+                        writeln!(writer, "{}", event_line(id, &ev))?;
+                    } else if let SeqEvent::Finished(out) = &ev {
+                        writeln!(writer, "{}", WireResponse(out.clone()).to_line())?;
+                    }
+                    if matches!(ev, SeqEvent::Finished(_)) {
+                        finished = true;
+                        break;
+                    }
                 }
-                let out = handle.generate(req)?;
+                if !finished {
+                    // The stream ended without a finished line: either the
+                    // request was aborted/stall-cancelled (engine alive —
+                    // close with the aborted notice) or the engine loop
+                    // died (tell the client the truth, not "aborted").
+                    // NOTE: a streaming connection reads its own stream
+                    // until it ends, so the abort must come from a
+                    // DIFFERENT connection.
+                    match handle.abort(id) {
+                        Ok(_) => writeln!(writer, "{}", aborted_line(id, true))?,
+                        Err(_) => writeln!(
+                            writer,
+                            "{}",
+                            error_line("engine stopped before the request finished")
+                        )?,
+                    }
+                }
+            }
+            Ok(WireOp::Abort { id }) => {
+                let ok = handle.abort(id)?;
+                writeln!(writer, "{}", aborted_line(id, ok))?;
+            }
+            Ok(WireOp::Legacy { id, builder }) => {
+                let prompt_len = builder.prompt_len();
+                let result = handle
+                    .submit_streaming(builder)
+                    .and_then(|(_, rx)| wait_for_finished(rx, id));
+                let out = result.unwrap_or_else(|e| {
+                    // v1 contract: failures come back as a response line
+                    // CARRYING the caller's id (finish "error"), so
+                    // id-demultiplexing clients are never left hanging
+                    log::debug!("legacy req {id}: {e:#}");
+                    RequestOutput {
+                        id,
+                        tokens: Vec::new(),
+                        finish: FinishReason::Error,
+                        ttft_s: 0.0,
+                        tpot_s: 0.0,
+                        prompt_len,
+                        live_cache_tokens: 0,
+                        preemptions: 0,
+                        swaps: 0,
+                        cache_stats: Default::default(),
+                    }
+                });
                 writeln!(writer, "{}", WireResponse(out).to_line())?;
             }
             Err(e) => {
-                writeln!(writer, "{{\"error\": \"{}\"}}", e.to_string().replace('"', "'"))?;
+                writeln!(writer, "{}", error_line(&e.to_string()))?;
             }
         }
     }

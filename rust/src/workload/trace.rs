@@ -1,6 +1,11 @@
-//! Arrival traces for the serving benches: Poisson arrivals (open loop) or
-//! all-at-once bursts (closed loop, the paper's 64-concurrent setup).
+//! Arrival traces for the serving benches: Poisson arrivals (open loop),
+//! all-at-once bursts (closed loop, the paper's 64-concurrent setup), and
+//! text trace FILES with per-request overrides (`policy=` / `budget=` /
+//! `priority=` / `deadline=`) for the `schedule --trace` driver.
 
+use anyhow::{Context, Result};
+
+use crate::scheduler::Priority;
 use crate::util::rng::Pcg32;
 
 #[derive(Debug, Clone)]
@@ -34,6 +39,66 @@ impl ArrivalTrace {
             .collect();
         ArrivalTrace { arrivals }
     }
+}
+
+/// One request spec from a trace file. Every field is optional — unset
+/// fields fall back to the driver's CLI defaults — so a trace can be as
+/// terse as `at=0` or carry full per-request overrides.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceEntry {
+    /// Scheduler step at which to submit (default 0 = before the first
+    /// round). Entries need not be sorted.
+    pub at_step: u64,
+    pub prompt_len: Option<usize>,
+    pub gen: Option<usize>,
+    /// Per-request eviction policy override.
+    pub policy: Option<String>,
+    /// Per-request KV budget override (tokens).
+    pub budget: Option<usize>,
+    pub priority: Option<Priority>,
+    /// Deadline in scheduler steps after submission.
+    pub deadline_steps: Option<u64>,
+    /// Per-request prompt RNG seed (default: the driver's rolling rng).
+    pub seed: Option<u64>,
+}
+
+/// Parse a trace file: one request per non-empty line, `#` comments,
+/// whitespace-separated `key=value` fields:
+///
+/// ```text
+/// # key=value ...: at, prompt_len, gen, policy, budget, priority,
+/// #                deadline, seed
+/// at=0 prompt_len=96 gen=48
+/// at=2 prompt_len=64 gen=32 policy=keydiff budget=64 priority=high deadline=200
+/// ```
+pub fn parse_trace(text: &str) -> Result<Vec<TraceEntry>> {
+    let mut entries = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut e = TraceEntry::default();
+        for field in line.split_whitespace() {
+            let (key, val) = field
+                .split_once('=')
+                .with_context(|| format!("line {}: field {field:?} is not key=value", lineno + 1))?;
+            let ctx = || format!("line {}: bad value in {field:?}", lineno + 1);
+            match key {
+                "at" => e.at_step = val.parse().with_context(ctx)?,
+                "prompt_len" => e.prompt_len = Some(val.parse().with_context(ctx)?),
+                "gen" => e.gen = Some(val.parse().with_context(ctx)?),
+                "policy" => e.policy = Some(val.to_string()),
+                "budget" => e.budget = Some(val.parse().with_context(ctx)?),
+                "priority" => e.priority = Some(Priority::parse(val).with_context(ctx)?),
+                "deadline" => e.deadline_steps = Some(val.parse().with_context(ctx)?),
+                "seed" => e.seed = Some(val.parse().with_context(ctx)?),
+                other => anyhow::bail!("line {}: unknown trace key {other:?}", lineno + 1),
+            }
+        }
+        entries.push(e);
+    }
+    Ok(entries)
 }
 
 #[cfg(test)]
@@ -81,5 +146,35 @@ mod tests {
         let a = ArrivalTrace::generate(&cfg);
         let b = ArrivalTrace::generate(&cfg);
         assert_eq!(a.arrivals, b.arrivals);
+    }
+
+    #[test]
+    fn trace_file_parses_overrides_comments_and_defaults() {
+        let text = "\n\
+            # a comment line\n\
+            at=0 prompt_len=96 gen=48\n\
+            at=2 policy=keydiff budget=64 priority=high deadline=200 # tail comment\n\
+            seed=9\n";
+        let es = parse_trace(text).unwrap();
+        assert_eq!(es.len(), 3);
+        assert_eq!(es[0].prompt_len, Some(96));
+        assert_eq!(es[0].gen, Some(48));
+        assert_eq!(es[0].policy, None, "unset fields stay CLI-defaulted");
+        assert_eq!(es[1].at_step, 2);
+        assert_eq!(es[1].policy.as_deref(), Some("keydiff"));
+        assert_eq!(es[1].budget, Some(64));
+        assert_eq!(es[1].priority, Some(Priority::High));
+        assert_eq!(es[1].deadline_steps, Some(200));
+        assert_eq!(es[2].at_step, 0);
+        assert_eq!(es[2].seed, Some(9));
+    }
+
+    #[test]
+    fn trace_file_rejects_malformed_lines() {
+        assert!(parse_trace("at=0 nonsense").is_err(), "bare token");
+        assert!(parse_trace("frobnicate=3").is_err(), "unknown key");
+        assert!(parse_trace("budget=lots").is_err(), "non-numeric value");
+        assert!(parse_trace("priority=urgent").is_err(), "bad priority");
+        assert!(parse_trace("").unwrap().is_empty());
     }
 }

@@ -1,0 +1,683 @@
+//! Session-API integration on the deterministic sim backend: the event
+//! stream vs the legacy drain (bit-identity), server-assigned ids,
+//! priority-aware admission + victim selection, synchronous cancellation
+//! (exact arena reclaim, shared-page safety, swapped-out victims), step
+//! deadlines, and admission-claim memoization.
+
+use paged_eviction::api::{
+    HandleState, RequestBuilder, RequestHandle, RequestId, SeqEvent, Session,
+};
+use paged_eviction::runtime::SimBackend;
+use paged_eviction::scheduler::{
+    FinishReason, Priority, Request, RequestOutput, SchedConfig, Scheduler,
+};
+use paged_eviction::util::propcheck::{self, PropConfig};
+use paged_eviction::util::rng::Pcg32;
+
+/// Hard-capacity watermarks, no swap, no prefix cache: the exact-
+/// arithmetic baseline (individual tests open features up).
+fn cfg(page: usize, conc: usize, arena_blocks: usize) -> SchedConfig {
+    SchedConfig {
+        model: "sim".into(),
+        page_size: page,
+        max_concurrency: conc,
+        max_live_blocks: arena_blocks,
+        watermark_low: 1.0,
+        watermark_high: 1.0,
+        swap_bytes: 0,
+        prefix_cache: false,
+        ..SchedConfig::default()
+    }
+}
+
+fn rand_prompt(rng: &mut Pcg32, len: usize) -> Vec<u32> {
+    (0..len).map(|_| rng.below(200)).collect()
+}
+
+/// Tokens carried by the stream's `Token` events, in order.
+fn stream_tokens(events: &[SeqEvent]) -> Vec<u32> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            SeqEvent::Token { tok, .. } => Some(*tok),
+            _ => None,
+        })
+        .collect()
+}
+
+fn finished_of(events: &[SeqEvent]) -> Option<RequestOutput> {
+    events.iter().find_map(|e| match e {
+        SeqEvent::Finished(o) => Some(o.clone()),
+        _ => None,
+    })
+}
+
+/// Drive a session to idle, draining every handle's events as they come.
+fn run_session(
+    session: &Session<SimBackend>,
+    handles: &[RequestHandle<SimBackend>],
+) -> Vec<Vec<SeqEvent>> {
+    let mut streams: Vec<Vec<SeqEvent>> = vec![Vec::new(); handles.len()];
+    while !session.is_idle() {
+        session.step().unwrap();
+        for (h, s) in handles.iter().zip(streams.iter_mut()) {
+            s.extend(h.drain());
+        }
+    }
+    for (h, s) in handles.iter().zip(streams.iter_mut()) {
+        s.extend(h.drain());
+    }
+    streams
+}
+
+/// ACCEPTANCE: greedy outputs are bit-identical between the event-stream
+/// API and the legacy `take_finished` drain — same trace through both,
+/// ample arena (no preemption) with mixed per-request policies/budgets.
+#[test]
+fn event_stream_matches_legacy_drain_bit_identical() {
+    let page = 4;
+    let mut rng = Pcg32::new(42);
+    let specs: Vec<(Vec<u32>, usize, usize, &str)> = vec![
+        (rand_prompt(&mut rng, 33), 12, 16, "paged"),
+        (rand_prompt(&mut rng, 48), 9, 24, "streaming"),
+        (rand_prompt(&mut rng, 21), 15, 16, "inverse_key_norm"),
+        (rand_prompt(&mut rng, 40), 7, 64, "full"),
+        (rand_prompt(&mut rng, 27), 11, 16, "keydiff"),
+    ];
+
+    // legacy path: caller-assigned ids, blocking drain
+    let mut legacy = Scheduler::new_sim(cfg(page, 8, 10_000));
+    for (i, (p, gen, budget, pol)) in specs.iter().enumerate() {
+        let mut r = Request::new(i as u64 + 1, p.clone(), *gen);
+        r.budget = *budget;
+        r.policy = pol.to_string();
+        legacy.submit(r);
+    }
+    let mut legacy_outs = legacy.run_to_completion().unwrap();
+    legacy_outs.sort_by_key(|o| o.id);
+
+    // session path: server-assigned ids (same order => same 1..n)
+    let session = Session::new_sim(cfg(page, 8, 10_000));
+    let handles: Vec<_> = specs
+        .iter()
+        .map(|(p, gen, budget, pol)| {
+            session
+                .submit(
+                    RequestBuilder::new(p.clone())
+                        .max_new_tokens(*gen)
+                        .budget(*budget)
+                        .policy(*pol),
+                )
+                .unwrap()
+        })
+        .collect();
+    let streams = run_session(&session, &handles);
+
+    for ((h, s), legacy_out) in handles.iter().zip(&streams).zip(&legacy_outs) {
+        assert_eq!(h.id().raw(), legacy_out.id, "submit order assigns 1..n");
+        let out = finished_of(s).expect("stream must terminate in Finished");
+        assert!(
+            matches!(s.first(), Some(SeqEvent::Prefilled { ttft_s }) if *ttft_s > 0.0),
+            "stream must open with Prefilled{{ttft > 0}}, got {:?}",
+            s.first()
+        );
+        assert_eq!(
+            stream_tokens(s),
+            out.tokens,
+            "req {}: concatenated Token events ARE the output",
+            out.id
+        );
+        assert_eq!(out.tokens, legacy_out.tokens, "req {}: stream drifted", out.id);
+        assert_eq!(out.finish, legacy_out.finish);
+        assert!(h.is_done());
+        assert_eq!(h.state(), HandleState::Finished);
+    }
+    assert_eq!(session.with_scheduler(|s| s.arena().used()), 0);
+}
+
+/// ACCEPTANCE (preemption leg): the same bit-identity holds under forced
+/// preemption — replayed tokens are never re-emitted, and the victim's
+/// stream shows Preempted/Resumed.
+#[test]
+fn event_stream_bit_identical_under_forced_preemption() {
+    let page = 4;
+    let gen = 24;
+    let mut rng = Pcg32::new(7);
+    let pa = rand_prompt(&mut rng, 64);
+    let pb = rand_prompt(&mut rng, 64);
+
+    let mut legacy = Scheduler::new_sim(cfg(page, 2, 36));
+    for (i, p) in [&pa, &pb].iter().enumerate() {
+        let mut r = Request::new(i as u64 + 1, (*p).clone(), gen);
+        r.budget = 16;
+        r.policy = "full".into();
+        legacy.submit(r);
+    }
+    let mut legacy_outs = legacy.run_to_completion().unwrap();
+    legacy_outs.sort_by_key(|o| o.id);
+    assert!(legacy.preemptions >= 1, "36 blocks cannot hold both");
+
+    let session = Session::new_sim(cfg(page, 2, 36));
+    let handles: Vec<_> = [&pa, &pb]
+        .iter()
+        .map(|p| {
+            session
+                .submit(
+                    RequestBuilder::new((*p).clone())
+                        .max_new_tokens(gen)
+                        .budget(16)
+                        .policy("full"),
+                )
+                .unwrap()
+        })
+        .collect();
+    let streams = run_session(&session, &handles);
+    let n_preempted: usize = streams[1]
+        .iter()
+        .filter(|e| matches!(e, SeqEvent::Preempted { .. }))
+        .count();
+    let n_resumed: usize = streams[1]
+        .iter()
+        .filter(|e| matches!(e, SeqEvent::Resumed))
+        .count();
+    assert!(n_preempted >= 1, "the younger sequence must be preempted");
+    assert_eq!(n_preempted, n_resumed, "every Preempted pairs with a Resumed");
+    for (s, legacy_out) in streams.iter().zip(&legacy_outs) {
+        let out = finished_of(s).expect("finished");
+        assert_eq!(
+            stream_tokens(s),
+            out.tokens,
+            "req {}: replayed tokens must not be re-emitted",
+            out.id
+        );
+        assert_eq!(out.tokens, legacy_out.tokens, "req {}", out.id);
+    }
+}
+
+/// SATELLITE: server-assigned ids never collide — across batches, cancels
+/// and reuse — and cancelling an unknown or finished id is a clean no-op.
+#[test]
+fn server_assigned_ids_never_collide_and_cancel_is_clean_noop() {
+    let mut rng = Pcg32::new(3);
+    let session = Session::new_sim(cfg(4, 4, 10_000));
+    let mut seen = std::collections::HashSet::new();
+    let mut last_handle = None;
+    for round in 0..3 {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                session
+                    .submit(RequestBuilder::new(rand_prompt(&mut rng, 16)).max_new_tokens(3))
+                    .unwrap()
+            })
+            .collect();
+        for h in &handles {
+            assert!(seen.insert(h.id()), "duplicate id {} in round {round}", h.id());
+        }
+        // cancel one mid-flight; its id is spent, never recycled
+        session.step().unwrap();
+        assert!(handles[0].cancel(), "running/queued request is cancellable");
+        assert!(!handles[0].cancel(), "double cancel is a no-op");
+        session.run_until_idle().unwrap();
+        last_handle = Some(handles[7].clone());
+    }
+    assert_eq!(seen.len(), 24);
+    // unknown and finished ids: clean no-ops, not panics
+    assert!(!session.cancel(RequestId(999_999)));
+    let h = last_handle.unwrap();
+    assert_eq!(h.state(), HandleState::Finished);
+    assert!(!h.cancel(), "cancelling a finished request is a no-op");
+    assert_eq!(session.with_scheduler(|s| s.cancelled()), 3);
+}
+
+/// Priority-aware admission: with one slot, the High submission admitted
+/// ahead of the earlier-queued Low one.
+#[test]
+fn high_priority_jumps_the_admission_queue() {
+    let mut rng = Pcg32::new(5);
+    let session = Session::new_sim(cfg(4, 1, 10_000));
+    let low = session
+        .submit(
+            RequestBuilder::new(rand_prompt(&mut rng, 16))
+                .max_new_tokens(4)
+                .priority(Priority::Low),
+        )
+        .unwrap();
+    let high = session
+        .submit(
+            RequestBuilder::new(rand_prompt(&mut rng, 16))
+                .max_new_tokens(4)
+                .priority(Priority::High),
+        )
+        .unwrap();
+    session.step().unwrap();
+    assert!(
+        matches!(high.poll(), Some(SeqEvent::Prefilled { .. })),
+        "the High request must be admitted first"
+    );
+    assert!(low.poll().is_none(), "the Low request is still queued");
+    session.run_until_idle().unwrap();
+    assert!(matches!(finished_of(&low.drain()), Some(o) if o.finish == FinishReason::MaxTokens));
+}
+
+/// ACCEPTANCE: a High-priority request admitted under memory pressure
+/// preempts a Low-priority victim — never the reverse. The Low request is
+/// the ELDER here, so the old youngest-first rule would have victimized
+/// the High one.
+#[test]
+fn high_priority_preempts_low_victim_never_the_reverse() {
+    let page = 4;
+    let gen = 24;
+    let mut rng = Pcg32::new(9);
+    let pa = rand_prompt(&mut rng, 64);
+    let pb = rand_prompt(&mut rng, 64);
+
+    // uncontended references
+    let solo = |p: &[u32]| {
+        let mut s = Scheduler::new_sim(cfg(page, 1, 10_000));
+        let mut r = Request::new(1, p.to_vec(), gen);
+        r.budget = 16;
+        r.policy = "full".into();
+        s.submit(r);
+        s.run_to_completion().unwrap().pop().unwrap().tokens
+    };
+    let want_a = solo(&pa);
+    let want_b = solo(&pb);
+
+    let session = Session::new_sim(cfg(page, 2, 36));
+    let low = session
+        .submit(
+            RequestBuilder::new(pa)
+                .max_new_tokens(gen)
+                .budget(16)
+                .policy("full")
+                .priority(Priority::Low),
+        )
+        .unwrap();
+    let high = session
+        .submit(
+            RequestBuilder::new(pb)
+                .max_new_tokens(gen)
+                .budget(16)
+                .policy("full")
+                .priority(Priority::High),
+        )
+        .unwrap();
+    let streams = run_session(&session, &[low.clone(), high.clone()]);
+
+    let out_low = finished_of(&streams[0]).unwrap();
+    let out_high = finished_of(&streams[1]).unwrap();
+    assert!(
+        out_low.preemptions >= 1,
+        "the Low request pays for the memory pressure"
+    );
+    assert_eq!(
+        out_high.preemptions, 0,
+        "the High request must NEVER be the victim while a Low one runs"
+    );
+    assert!(streams[1].iter().all(|e| !matches!(e, SeqEvent::Preempted { .. })));
+    assert_eq!(out_low.tokens, want_a, "preempted Low output is lossless");
+    assert_eq!(out_high.tokens, want_b);
+    assert_eq!(session.with_scheduler(|s| s.arena().used()), 0);
+}
+
+/// SATELLITE (property): cancelling at a random step mid-decode returns
+/// the arena to EXACTLY the state of a twin run in which the cancelled
+/// request never existed — shared prefix pages a live sharer holds
+/// survive by refcount (the hard-error arena would panic on any bad
+/// free), and the survivor's output is untouched.
+#[test]
+fn property_cancel_restores_the_no_b_arena_exactly() {
+    let pols = ["full", "paged", "keydiff", "streaming", "inverse_key_norm"];
+    propcheck::check(
+        "cancel == B never existed",
+        &PropConfig { cases: 24, ..Default::default() },
+        |rng| {
+            let page = [4usize, 8][rng.below(2) as usize];
+            let pol_a = pols[rng.below(pols.len() as u32) as usize];
+            let pol_b = pols[rng.below(pols.len() as u32) as usize];
+            let prefix_len = page * (2 + rng.below(3) as usize);
+            let prefix: Vec<u32> = (0..prefix_len).map(|_| rng.below(200)).collect();
+            let mut prompt_a = prefix.clone();
+            prompt_a.extend((0..8 + rng.below(24)).map(|_| rng.below(200)));
+            let mut prompt_b = prefix;
+            prompt_b.extend((0..8 + rng.below(24)).map(|_| rng.below(200)));
+            let gen_a = 8 + rng.below(24) as usize;
+            let gen_b = 8 + rng.below(24) as usize;
+            let budget = page * (2 + rng.below(6) as usize);
+            // cancel strictly mid-flight: B finishes no earlier than round
+            // gen_b, so any step below that keeps it live
+            let cancel_after = 1 + rng.below(gen_b as u32 - 2) as u64;
+            let mk_cfg = || SchedConfig {
+                prefix_cache: true,
+                ..cfg(page, 4, 4096)
+            };
+            let submit_a = |s: &Session<SimBackend>| {
+                s.submit(
+                    RequestBuilder::new(prompt_a.clone())
+                        .max_new_tokens(gen_a)
+                        .budget(budget)
+                        .policy(pol_a),
+                )
+                .unwrap()
+            };
+
+            // twin: A alone
+            let twin = Session::new_sim(mk_cfg());
+            let ha2 = submit_a(&twin);
+            for _ in 0..cancel_after {
+                twin.step().unwrap();
+            }
+            let used_twin = twin.with_scheduler(|s| s.arena().used());
+
+            // real run: A + B, B cancelled at the same step
+            let run = Session::new_sim(mk_cfg());
+            let ha1 = submit_a(&run);
+            let hb = run
+                .submit(
+                    RequestBuilder::new(prompt_b.clone())
+                        .max_new_tokens(gen_b)
+                        .budget(budget)
+                        .policy(pol_b),
+                )
+                .unwrap();
+            for _ in 0..cancel_after {
+                run.step().unwrap();
+            }
+            if !hb.cancel() {
+                return Err(format!("B (gen {gen_b}) not cancellable at step {cancel_after}"));
+            }
+            let used_now = run.with_scheduler(|s| s.arena().used());
+            if used_now != used_twin {
+                return Err(format!(
+                    "cancel leaked: used {used_now} != twin {used_twin} \
+                     (page {page}, a={pol_a}, b={pol_b}, step {cancel_after})"
+                ));
+            }
+            if hb.state() != HandleState::Cancelled {
+                return Err("cancelled handle must report Cancelled".into());
+            }
+            if hb.drain().iter().any(|e| matches!(e, SeqEvent::Finished(_))) {
+                return Err("a cancelled request must emit no Finished".into());
+            }
+            // survivor unaffected (and drop-time arena checks all pass)
+            run.run_until_idle().unwrap();
+            twin.run_until_idle().unwrap();
+            let toks = |h: &RequestHandle<SimBackend>| {
+                finished_of(&h.drain()).map(|o| o.tokens).unwrap_or_default()
+            };
+            let (a_run, a_twin) = (toks(&ha1), toks(&ha2));
+            if a_run != a_twin {
+                return Err(format!("survivor output changed: {a_run:?} vs {a_twin:?}"));
+            }
+            let leftovers = run.with_scheduler(|s| s.arena().used());
+            if leftovers != 0 {
+                return Err(format!("{leftovers} blocks leaked at idle"));
+            }
+            if run.with_scheduler(|s| s.cancelled()) != 1 {
+                return Err("cancel count must be 1".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Cancelling a sharer that holds live shared prefix pages: the hits are
+/// real (pinned nonzero), the survivor keeps decoding on the shared
+/// pages, and teardown frees only the cancelled request's claims.
+#[test]
+fn cancel_sharer_keeps_survivors_shared_pages_alive() {
+    let page = 4;
+    let mut rng = Pcg32::new(21);
+    let prefix = rand_prompt(&mut rng, 4 * page);
+    let mut pa = prefix.clone();
+    pa.extend(rand_prompt(&mut rng, 12));
+    let mut pb = prefix;
+    pb.extend(rand_prompt(&mut rng, 12));
+
+    let want_a = {
+        let mut s = Scheduler::new_sim(cfg(page, 1, 10_000));
+        let mut r = Request::new(1, pa.clone(), 16);
+        r.budget = 1024;
+        r.policy = "full".into();
+        s.submit(r);
+        s.run_to_completion().unwrap().pop().unwrap().tokens
+    };
+
+    let session = Session::new_sim(SchedConfig { prefix_cache: true, ..cfg(page, 2, 10_000) });
+    let submit = |p: Vec<u32>| {
+        session
+            .submit(RequestBuilder::new(p).max_new_tokens(16).budget(1024).policy("full"))
+            .unwrap()
+    };
+    let ha = submit(pa);
+    session.step().unwrap(); // A admitted, prefix published
+    let hb = submit(pb);
+    session.step().unwrap(); // B admitted, maps the 4 shared pages
+    let hits = session.with_scheduler(|s| s.prefix_hit_blocks);
+    assert!(hits >= 4, "B must map the shared prefix (got {hits} hits)");
+    session.step().unwrap();
+    assert!(hb.cancel(), "sharer is cancellable mid-decode");
+    session.run_until_idle().unwrap();
+    let out_a = finished_of(&ha.drain()).unwrap();
+    assert_eq!(out_a.tokens, want_a, "survivor decodes on intact shared pages");
+    assert_eq!(session.with_scheduler(|s| s.arena().used()), 0, "no leak");
+}
+
+/// Cancelling a victim parked in the swap pool: the snapshot is dropped,
+/// the queue entry purged, and the survivor finishes bit-identically.
+#[test]
+fn cancel_while_swapped_out_discards_snapshot_and_queue_entry() {
+    let page = 4;
+    let gen = 24;
+    let mut rng = Pcg32::new(17);
+    let pa = rand_prompt(&mut rng, 64);
+    let pb = rand_prompt(&mut rng, 64);
+    let want_a = {
+        let mut s = Scheduler::new_sim(cfg(page, 1, 10_000));
+        let mut r = Request::new(1, pa.clone(), gen);
+        r.budget = 16;
+        r.policy = "full".into();
+        s.submit(r);
+        s.run_to_completion().unwrap().pop().unwrap().tokens
+    };
+
+    let session =
+        Session::new_sim(SchedConfig { swap_bytes: 16 << 20, ..cfg(page, 2, 36) });
+    let submit = |p: Vec<u32>| {
+        session
+            .submit(RequestBuilder::new(p).max_new_tokens(gen).budget(16).policy("full"))
+            .unwrap()
+    };
+    let ha = submit(pa);
+    let hb = submit(pb);
+    // step until the younger sequence is parked in the swap pool
+    let mut swapped = false;
+    for _ in 0..200 {
+        session.step().unwrap();
+        if hb
+            .drain()
+            .iter()
+            .any(|e| matches!(e, SeqEvent::Preempted { swap: true }))
+        {
+            swapped = true;
+            break;
+        }
+    }
+    assert!(swapped, "36 blocks + swap pool must park the younger victim");
+    let parked = session.with_scheduler(|s| s.swap_pool().contains(hb.id().raw()));
+    if parked {
+        // cancel while the snapshot sits in the pool
+        assert_eq!(session.pending(), 1, "victim waits in the queue");
+        assert!(hb.cancel());
+        assert!(
+            session.with_scheduler(|s| !s.swap_pool().contains(hb.id().raw())),
+            "cancel must drop the parked snapshot"
+        );
+        assert_eq!(
+            session.with_scheduler(|s| s.swap_pool().used_bytes()),
+            0,
+            "swap bytes reclaimed"
+        );
+        assert_eq!(session.pending(), 0, "queue entry purged");
+    } else {
+        // pool restored it before we looked — cancel mid-decode instead
+        assert!(hb.cancel());
+    }
+    session.run_until_idle().unwrap();
+    let out_a = finished_of(&ha.drain()).unwrap();
+    assert_eq!(out_a.tokens, want_a, "survivor output bit-identical");
+    assert_eq!(session.with_scheduler(|s| s.arena().used()), 0);
+    assert!(hb.drain().iter().all(|e| !matches!(e, SeqEvent::Finished(_))));
+}
+
+/// Deadlines: a running request finishes with `Deadline` carrying what it
+/// produced; a queued one expires with zero tokens; no arena leaks.
+#[test]
+fn deadlines_expire_running_and_queued_requests() {
+    let mut rng = Pcg32::new(13);
+    // running: 100-token ask, 5-round deadline
+    let session = Session::new_sim(cfg(4, 2, 10_000));
+    let h = session
+        .submit(
+            RequestBuilder::new(rand_prompt(&mut rng, 16))
+                .max_new_tokens(100)
+                .deadline_steps(5),
+        )
+        .unwrap();
+    session.run_until_idle().unwrap();
+    let out = finished_of(&h.drain()).unwrap();
+    assert_eq!(out.finish, FinishReason::Deadline);
+    assert!(
+        !out.tokens.is_empty() && out.tokens.len() <= 5,
+        "deadline keeps the {} produced tokens",
+        out.tokens.len()
+    );
+
+    // queued: one slot, elder hogs it past the younger's deadline
+    let session = Session::new_sim(cfg(4, 1, 10_000));
+    let elder = session
+        .submit(RequestBuilder::new(rand_prompt(&mut rng, 16)).max_new_tokens(50))
+        .unwrap();
+    let starved = session
+        .submit(
+            RequestBuilder::new(rand_prompt(&mut rng, 16))
+                .max_new_tokens(10)
+                .deadline_steps(3),
+        )
+        .unwrap();
+    session.run_until_idle().unwrap();
+    let out = finished_of(&starved.drain()).unwrap();
+    assert_eq!(out.finish, FinishReason::Deadline);
+    assert!(out.tokens.is_empty(), "never admitted: nothing produced");
+    let elder_out = finished_of(&elder.drain()).unwrap();
+    assert_eq!(elder_out.finish, FinishReason::MaxTokens);
+    assert_eq!(elder_out.tokens.len(), 50);
+    assert_eq!(session.with_scheduler(|s| s.arena().used()), 0);
+}
+
+/// SATELLITE: the admission claim estimate is memoized on the queue entry
+/// keyed by the prefix-index epoch — gated retries stop recomputing the
+/// O(prompt) scorer + hash chain; an index change invalidates exactly
+/// once.
+#[test]
+fn admission_claim_is_memoized_across_gated_retries() {
+    let page = 4;
+    let mut rng = Pcg32::new(19);
+    let session = Session::new_sim(SchedConfig {
+        watermark_low: 0.5,  // low mark = 10 of 20 blocks
+        watermark_high: 1.0,
+        prefix_cache: true,
+        ..cfg(page, 2, 20)
+    });
+    // elder: 8 prompt blocks, holds the arena above the B gate for many
+    // rounds (full policy: no evictions, so no mid-run unpublishes)
+    let ha = session
+        .submit(
+            RequestBuilder::new(rand_prompt(&mut rng, 32))
+                .max_new_tokens(8)
+                .budget(1024)
+                .policy("full"),
+        )
+        .unwrap();
+    let hb = session
+        .submit(
+            RequestBuilder::new(rand_prompt(&mut rng, 32))
+                .max_new_tokens(4)
+                .budget(1024)
+                .policy("full"),
+        )
+        .unwrap();
+    session.step().unwrap();
+    assert_eq!(session.running(), 1, "B is gated: 8 used + 8 incoming > 10");
+    assert_eq!(session.pending(), 1);
+    let calls_after_round_1 = session.with_scheduler(|s| s.backend().claim_calls());
+    assert_eq!(calls_after_round_1, 2, "one claim each for A and B");
+    for _ in 0..5 {
+        session.step().unwrap();
+    }
+    assert_eq!(
+        session.with_scheduler(|s| s.backend().claim_calls()),
+        2,
+        "gated retries must hit the memo, not recompute"
+    );
+    session.run_until_idle().unwrap();
+    // A's retirement unpublished its blocks -> epoch moved -> exactly one
+    // recompute when B finally admitted
+    assert_eq!(
+        session.with_scheduler(|s| s.backend().claim_calls()),
+        3,
+        "a prefix-index change invalidates the memo exactly once"
+    );
+    assert!(finished_of(&ha.drain()).is_some());
+    let out_b = finished_of(&hb.drain()).unwrap();
+    assert_eq!(out_b.finish, FinishReason::MaxTokens);
+}
+
+/// Builder stop-token sets terminate generation with `Eos`.
+#[test]
+fn stop_token_set_stops_generation() {
+    let mut rng = Pcg32::new(23);
+    let prompt = rand_prompt(&mut rng, 16);
+    let session = Session::new_sim(cfg(4, 2, 10_000));
+    let probe = session
+        .submit(RequestBuilder::new(prompt.clone()).max_new_tokens(10))
+        .unwrap();
+    session.run_until_idle().unwrap();
+    let toks = finished_of(&probe.drain()).unwrap().tokens;
+    assert_eq!(toks.len(), 10);
+    // pick a stop token whose FIRST occurrence is mid-stream
+    let stop_at = (1..10)
+        .find(|&i| !toks[..i].contains(&toks[i]))
+        .expect("10 greedy tokens cannot all be equal");
+
+    let h = session
+        .submit(
+            RequestBuilder::new(prompt)
+                .max_new_tokens(10)
+                .stop_tokens(vec![toks[stop_at], 7777]),
+        )
+        .unwrap();
+    session.run_until_idle().unwrap();
+    let out = finished_of(&h.drain()).unwrap();
+    assert_eq!(out.finish, FinishReason::Eos);
+    assert_eq!(out.tokens, toks[..=stop_at].to_vec(), "stops AT the stop token");
+}
+
+/// Submit-time failures surface without a step: zero budget rejects with
+/// an error output, unknown policies fail the submit itself.
+#[test]
+fn submit_time_failures_are_immediate() {
+    let session = Session::new_sim(cfg(4, 2, 64));
+    assert!(session.submit(RequestBuilder::new(vec![1, 2]).policy("quantum")).is_err());
+    assert!(session.submit(RequestBuilder::new(vec![])).is_err(), "empty prompt");
+    let h = session
+        .submit(RequestBuilder::new(vec![1, 2, 3]).budget(0))
+        .unwrap();
+    // no step needed: the rejection is routed at submit
+    match h.poll() {
+        Some(SeqEvent::Finished(o)) => assert_eq!(o.finish, FinishReason::Error),
+        other => panic!("want immediate Finished(Error), got {other:?}"),
+    }
+    assert_eq!(h.state(), HandleState::Finished);
+    assert!(session.is_idle());
+}

@@ -32,6 +32,7 @@ fn cfg(page: usize, conc: usize, arena_blocks: usize) -> SchedConfig {
         watermark_high: 1.0,
         swap_bytes: 0,
         prefix_cache: false,
+        ..SchedConfig::default()
     }
 }
 

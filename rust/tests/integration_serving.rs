@@ -6,11 +6,10 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::{Arc, Mutex};
 
 use paged_eviction::runtime::Engine;
 use paged_eviction::scheduler::{Request, SchedConfig, Scheduler};
-use paged_eviction::server::serve::{serve_forever, spawn_engine};
+use paged_eviction::server::serve::{serve_forever, spawn_engine, ServeOpts};
 use paged_eviction::util::json::Json;
 use paged_eviction::util::rng::Pcg32;
 use paged_eviction::workload::recall;
@@ -134,7 +133,7 @@ fn tcp_roundtrip_text_and_ids() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     std::thread::spawn(move || {
-        let _ = serve_forever(listener, handle, Arc::new(Mutex::new(0)));
+        let _ = serve_forever(listener, handle, ServeOpts::default());
     });
 
     let stream = TcpStream::connect(addr).unwrap();
@@ -175,7 +174,7 @@ fn concurrent_tcp_clients() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     std::thread::spawn(move || {
-        let _ = serve_forever(listener, handle, Arc::new(Mutex::new(0)));
+        let _ = serve_forever(listener, handle, ServeOpts::default());
     });
     let mut joins = Vec::new();
     for c in 0..3u64 {

@@ -1,0 +1,236 @@
+//! v2 NDJSON wire protocol over REAL TCP against the sim-backend engine
+//! loop — no PJRT, plain tier-1 `cargo test`: streaming submits with
+//! per-token event lines, one-shot submits, legacy v1 lines, server-
+//! assigned id uniqueness across raced connections, and aborts (mid-
+//! stream from a second connection; unknown/finished ids as clean
+//! no-ops).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use paged_eviction::scheduler::SchedConfig;
+use paged_eviction::server::serve::{serve_forever, spawn_sim_engine, ServeOpts};
+use paged_eviction::util::json::Json;
+
+fn cfg() -> SchedConfig {
+    SchedConfig {
+        model: "sim".into(),
+        page_size: 4,
+        max_concurrency: 4,
+        max_live_blocks: 4096,
+        ..SchedConfig::default()
+    }
+}
+
+fn start_server() -> std::net::SocketAddr {
+    let (handle, _join) = spawn_sim_engine(cfg()).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = serve_forever(listener, handle, ServeOpts::default());
+    });
+    addr
+}
+
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        let w = stream.try_clone().unwrap();
+        Client { w, r: BufReader::new(stream) }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.w, "{line}").unwrap();
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        self.r.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "connection closed unexpectedly");
+        Json::parse(line.trim()).unwrap()
+    }
+}
+
+fn event_of(j: &Json) -> Option<&str> {
+    j.get("event").and_then(|v| v.as_str())
+}
+
+#[test]
+fn streaming_submit_emits_accepted_prefilled_tokens_finished() {
+    let mut c = Client::connect(start_server());
+    c.send(r#"{"op": "submit", "prompt": [1,2,3,4], "max_new_tokens": 5, "stream": true}"#);
+    let j = c.recv();
+    assert_eq!(event_of(&j), Some("accepted"));
+    let id = j.get("id").unwrap().as_usize().unwrap();
+    assert!(id >= 1, "server-assigned ids start at 1");
+
+    let j = c.recv();
+    assert_eq!(event_of(&j), Some("prefilled"), "stream opens with prefilled");
+    assert!(j.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    let mut toks: Vec<usize> = Vec::new();
+    loop {
+        let j = c.recv();
+        match event_of(&j).unwrap() {
+            "token" => {
+                assert_eq!(j.get("id").unwrap().as_usize(), Some(id));
+                assert_eq!(j.get("step").unwrap().as_usize(), Some(toks.len()));
+                toks.push(j.get("tok").unwrap().as_usize().unwrap());
+            }
+            "finished" => {
+                let fin: Vec<usize> = j
+                    .get("tokens")
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.as_usize().unwrap())
+                    .collect();
+                assert_eq!(toks, fin, "streamed tokens ARE the final output");
+                assert_eq!(toks.len(), 5);
+                assert_eq!(j.get("finish").unwrap().as_str(), Some("length"));
+                break;
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn one_shot_and_legacy_lines_coexist() {
+    let mut c = Client::connect(start_server());
+    // v2 one-shot: accepted ack, then the legacy-format response line
+    c.send(r#"{"op": "submit", "prompt": [9,8,7], "max_new_tokens": 3, "stream": false}"#);
+    let j = c.recv();
+    assert_eq!(event_of(&j), Some("accepted"));
+    let id = j.get("id").unwrap().as_usize().unwrap();
+    let j = c.recv();
+    assert_eq!(event_of(&j), None, "one-shot response is the bare v1 shape");
+    assert_eq!(j.get("id").unwrap().as_usize(), Some(id));
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+
+    // v1 line with a caller id: echoed back
+    c.send(r#"{"id": 55, "prompt": [1,2,3,4], "max_new_tokens": 2}"#);
+    let j = c.recv();
+    assert_eq!(j.get("id").unwrap().as_usize(), Some(55));
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    assert_eq!(j.get("finish").unwrap().as_str(), Some("length"));
+
+    // v1 auto-id and malformed lines
+    c.send(r#"{"text": "hello", "max_new_tokens": 2}"#);
+    let j = c.recv();
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    c.send("not json");
+    let j = c.recv();
+    assert!(j.get("error").is_some(), "malformed line gets an error object");
+    // bad policy on a v1 line: the v1 contract is a RESPONSE carrying the
+    // caller's id with finish "error", not an id-less error object
+    c.send(r#"{"id": 42, "prompt": [1,2], "policy": "quantum"}"#);
+    let j = c.recv();
+    assert_eq!(j.get("id").unwrap().as_usize(), Some(42));
+    assert_eq!(j.get("finish").unwrap().as_str(), Some("error"));
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 0);
+    c.send(r#"{"prompt": [1,2], "max_new_tokens": 1}"#);
+    assert_eq!(c.recv().get("tokens").unwrap().as_arr().unwrap().len(), 1);
+}
+
+#[test]
+fn server_assigned_ids_unique_across_connections() {
+    let addr = start_server();
+    let mut ids = std::collections::HashSet::new();
+    for _ in 0..3 {
+        let mut c = Client::connect(addr);
+        for _ in 0..2 {
+            c.send(r#"{"op": "submit", "prompt": [1,2,3], "max_new_tokens": 1, "stream": false}"#);
+            let j = c.recv();
+            assert_eq!(event_of(&j), Some("accepted"));
+            assert!(
+                ids.insert(j.get("id").unwrap().as_usize().unwrap()),
+                "server-assigned ids must never collide"
+            );
+            let _ = c.recv(); // one-shot response
+        }
+    }
+    assert_eq!(ids.len(), 6);
+}
+
+/// SATELLITE: mid-stream abort from a second connection — the aborted
+/// stream ends with the server's `aborted` notice and NO `finished`
+/// event; aborting unknown/finished ids is a clean no-op error.
+#[test]
+fn abort_mid_stream_and_unknown_id_noop() {
+    let addr = start_server();
+    let mut streamer = Client::connect(addr);
+    // effectively endless generation so the abort always lands mid-run
+    let submit = concat!(
+        r#"{"op": "submit", "prompt": [1,2,3,4,5,6,7,8], "#,
+        r#""max_new_tokens": 1000000, "budget": 64, "stream": true}"#
+    );
+    streamer.send(submit);
+    let j = streamer.recv();
+    assert_eq!(event_of(&j), Some("accepted"));
+    let id = j.get("id").unwrap().as_usize().unwrap();
+
+    // consume the stream concurrently (no backpressure — the engine
+    // stall-cancels sinks that fall EVENT_CHANNEL_CAP behind), signalling
+    // the first token so the abort provably lands mid-decode
+    let (tok_tx, tok_rx) = std::sync::mpsc::channel();
+    let reader = std::thread::spawn(move || {
+        let mut kinds: Vec<String> = Vec::new();
+        loop {
+            let j = streamer.recv();
+            let kind = event_of(&j).expect("event line").to_string();
+            if kind == "token" {
+                let _ = tok_tx.send(());
+            }
+            if kind == "aborted" {
+                assert_eq!(j.get("id").unwrap().as_usize(), Some(id));
+                assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+            }
+            let stop = kind == "aborted" || kind == "finished";
+            kinds.push(kind);
+            if stop {
+                break;
+            }
+        }
+        kinds
+    });
+
+    let mut ctl = Client::connect(addr);
+    // unknown id first: clean no-op error, server keeps running
+    ctl.send(r#"{"op": "abort", "id": 999999}"#);
+    let j = ctl.recv();
+    assert_eq!(event_of(&j), Some("aborted"));
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+    assert!(j.get("error").is_some());
+
+    // abort strictly mid-decode: after the first streamed token
+    tok_rx.recv().expect("the stream must produce tokens");
+    ctl.send(&format!(r#"{{"op": "abort", "id": {id}}}"#));
+    let j = ctl.recv();
+    assert_eq!(event_of(&j), Some("aborted"));
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+
+    // aborting the SAME id again: it is gone — clean no-op
+    ctl.send(&format!(r#"{{"op": "abort", "id": {id}}}"#));
+    assert_eq!(ctl.recv().get("ok").unwrap().as_bool(), Some(false));
+
+    let kinds = reader.join().unwrap();
+    assert!(kinds.iter().any(|k| k == "token"), "tokens streamed before the abort");
+    assert!(
+        kinds.iter().all(|k| k != "finished"),
+        "an aborted request must emit no finished event"
+    );
+    assert_eq!(kinds.last().map(String::as_str), Some("aborted"));
+
+    // server is still healthy for new work
+    let mut c = Client::connect(addr);
+    c.send(r#"{"op": "submit", "prompt": [4,5,6], "max_new_tokens": 2, "stream": false}"#);
+    assert_eq!(event_of(&c.recv()), Some("accepted"));
+    assert_eq!(c.recv().get("tokens").unwrap().as_arr().unwrap().len(), 2);
+}

@@ -34,6 +34,7 @@ fn cfg(page: usize, conc: usize, arena_blocks: usize) -> SchedConfig {
         // so it must be a no-op — which these exact-accounting tests
         // silently verify on top of their swap assertions
         prefix_cache: true,
+        ..SchedConfig::default()
     }
 }
 

@@ -54,6 +54,10 @@ CEILINGS_US = {
     # per-PREFILL costs, not per-token, so the ceilings are generous.
     "prefix_lookup chain+probe (4 blocks of 16)": 250.0,
     "cow_copy cycle (hit 4 blocks + make_private)": 2000.0,
+    # session API teardown: a full submit + prefill + one decode round +
+    # synchronous cancel (blocks back in the arena before it returns).
+    # Per-request cost dominated by the sim prefill, hence the slack.
+    "cancel_request (submit+prefill+cancel)": 2000.0,
 }
 
 

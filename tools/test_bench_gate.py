@@ -32,6 +32,7 @@ def healthy_rows():
         "argmax (4096 logits)": 4.0,
         "prefix_lookup chain+probe (4 blocks of 16)": 5.0,
         "cow_copy cycle (hit 4 blocks + make_private)": 40.0,
+        "cancel_request (submit+prefill+cancel)": 60.0,
     }
     return rows
 
@@ -69,6 +70,17 @@ class CheckTests(unittest.TestCase):
         self.assertEqual(len(failures), 1)
         self.assertIn("absolute regression", failures[0])
         self.assertIn("argmax", failures[0])
+
+    def test_cancel_request_ceiling_and_presence_are_gated(self):
+        row = "cancel_request (submit+prefill+cancel)"
+        rows = healthy_rows()
+        rows[row] = 9999.0
+        failures, _ = self.run_check(rows)
+        self.assertTrue(any("cancel_request" in f and "absolute" in f for f in failures))
+        rows = healthy_rows()
+        del rows[row]
+        failures, _ = self.run_check(rows)
+        self.assertTrue(any("missing bench row" in f and "cancel_request" in f for f in failures))
 
     def test_missing_row_fails_instead_of_skipping(self):
         rows = healthy_rows()
