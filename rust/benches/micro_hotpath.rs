@@ -22,6 +22,7 @@ use common::{bench_args, section};
 use paged_eviction::eviction::{make_policy, Decision};
 use paged_eviction::kvcache::{prefix_block_hashes, BlockManager, SeqCache};
 use paged_eviction::runtime::model_runner::argmax;
+use paged_eviction::runtime::{FaultyBackend, SimBackend};
 use paged_eviction::scheduler::{Request, SchedConfig, Scheduler};
 use paged_eviction::server::protocol::WireRequest;
 use paged_eviction::util::args::ArgSpec;
@@ -189,6 +190,32 @@ fn main() {
         let _ = csched.take_events();
     }) * 1e6;
     record(&mut t, &mut rows, "cancel_request (submit+prefill+cancel)", us);
+
+    // fault_passthrough: the FaultyBackend wrapper in passthrough mode
+    // (no plan) sits on the decode hot path whenever fault injection is
+    // wired in — this row pins its per-step overhead at ~zero against
+    // the gate ceiling.
+    let mut fsched = Scheduler::with_backend(
+        FaultyBackend::passthrough(SimBackend::new(16)),
+        SchedConfig {
+            page_size: 16,
+            max_concurrency: 4,
+            max_live_blocks: 4096,
+            ..Default::default()
+        },
+    );
+    let fprompt: Vec<u32> = (0..32u32).collect();
+    // one request that outlives the timed window, so every timed step is
+    // a steady-state single-sequence decode round through the wrapper
+    let mut freq = Request::new(1, fprompt, iters * 10 + 16);
+    freq.budget = 64;
+    fsched.submit(freq);
+    fsched.step().expect("admission round");
+    let us = time_it(iters * 10, || {
+        fsched.step().expect("decode round");
+        let _ = fsched.take_events();
+    }) * 1e6;
+    record(&mut t, &mut rows, "fault_passthrough decode step (no plan)", us);
 
     print!("{}", t.render());
 

@@ -41,6 +41,9 @@ struct Inner<B: DecodeBackend> {
     streams: HashMap<u64, Stream>,
     /// Monotonic server-assigned id counter (never reused).
     next_id: u64,
+    /// Shutdown has begun: reject new submits, keep stepping the live
+    /// requests until they drain (or the caller's deadline cancels them).
+    draining: bool,
 }
 
 impl<B: DecodeBackend> Inner<B> {
@@ -101,6 +104,7 @@ impl<B: DecodeBackend> Session<B> {
                 sched,
                 streams: HashMap::new(),
                 next_id: 0,
+                draining: false,
             })),
         }
     }
@@ -117,6 +121,7 @@ impl<B: DecodeBackend> Session<B> {
     pub fn submit(&self, builder: RequestBuilder) -> Result<RequestHandle<B>> {
         anyhow::ensure!(builder.prompt_len() > 0, "empty prompt");
         let mut g = self.lock();
+        anyhow::ensure!(!g.draining, "session shutting down; not accepting new requests");
         g.next_id += 1;
         let id = RequestId(g.next_id);
         let req = builder.build(id, &g.sched.cfg);
@@ -179,12 +184,53 @@ impl<B: DecodeBackend> Session<B> {
     pub fn with_scheduler<R>(&self, f: impl FnOnce(&mut Scheduler<B>) -> R) -> R {
         f(&mut self.lock().sched)
     }
+
+    /// Stop accepting new submits (they fail fast with a clean error)
+    /// while live requests keep running. Idempotent.
+    pub fn begin_shutdown(&self) {
+        self.lock().draining = true;
+    }
+
+    /// Has shutdown begun?
+    pub fn is_draining(&self) -> bool {
+        self.lock().draining
+    }
+
+    /// Graceful shutdown: reject new submits, then keep stepping until
+    /// every live request drains or `deadline` elapses — at the deadline
+    /// whatever is still live is cancelled (arena/swap reclaimed
+    /// synchronously, streams end without `Finished`). Returns `true`
+    /// when everything finished on its own, `false` when the deadline
+    /// forced cancellations.
+    pub fn shutdown(&self, deadline: std::time::Duration) -> Result<bool> {
+        self.begin_shutdown();
+        let end = std::time::Instant::now() + deadline;
+        while !self.is_idle() {
+            if std::time::Instant::now() >= end {
+                let mut g = self.lock();
+                for id in g.sched.live_ids() {
+                    g.cancel(RequestId(id));
+                }
+                return Ok(false);
+            }
+            self.step()?;
+        }
+        Ok(true)
+    }
 }
 
 impl Session<crate::runtime::SimBackend> {
     /// Session over the always-built deterministic sim backend.
     pub fn new_sim(cfg: SchedConfig) -> Self {
         Self::from_scheduler(Scheduler::new_sim(cfg))
+    }
+}
+
+impl Session<crate::runtime::FaultyBackend<crate::runtime::SimBackend>> {
+    /// Session over the sim backend wrapped in a deterministic fault
+    /// injector (see [`crate::runtime::FaultPlan`]).
+    pub fn new_sim_faulty(cfg: SchedConfig, plan: crate::runtime::FaultPlan) -> Self {
+        Self::from_scheduler(Scheduler::new_sim_faulty(cfg, plan))
     }
 }
 

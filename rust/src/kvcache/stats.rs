@@ -33,6 +33,10 @@ pub struct CacheStats {
     /// snapshot (no prompt recompute, no token replay). Always
     /// `<= preemptions`; the difference is recompute readmissions.
     pub swaps: u64,
+    /// Times this sequence was suspended and readmitted to recover a
+    /// TRANSIENT decode error (counted separately from `preemptions`,
+    /// which are memory-pressure evictions).
+    pub retries: u64,
     /// Server-lifetime high-water mark of the WHOLE shared arena's
     /// allocated blocks, snapshotted when this sequence retired (folded in
     /// from `BlockManager::stats`) — the server-wide physical footprint,
@@ -67,6 +71,7 @@ impl CacheStats {
         self.peak_partial_blocks = self.peak_partial_blocks.max(o.peak_partial_blocks);
         self.preemptions += o.preemptions;
         self.swaps += o.swaps;
+        self.retries += o.retries;
         self.peak_arena_blocks = self.peak_arena_blocks.max(o.peak_arena_blocks);
         self.prefix_hit_blocks += o.prefix_hit_blocks;
         self.cow_copies += o.cow_copies;
@@ -115,6 +120,7 @@ mod tests {
             peak_arena_blocks: 4,
             preemptions: 2,
             swaps: 1,
+            retries: 5,
             cancelled: 2,
             ..Default::default()
         };
@@ -124,6 +130,7 @@ mod tests {
         assert_eq!(a.peak_arena_blocks, 10);
         assert_eq!(a.preemptions, 3, "preemption counts are additive");
         assert_eq!(a.swaps, 2, "swap counts are additive");
+        assert_eq!(a.retries, 5, "retry counts are additive");
         assert_eq!(a.cancelled, 3, "cancel counts are additive");
     }
 }

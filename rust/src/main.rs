@@ -202,6 +202,14 @@ fn cmd_serve() -> Result<()> {
          one (low|normal|high)")
     .opt("stream", "off", "default stream mode for v2 submits without \
          an explicit \"stream\" field (on|off)")
+    .opt("read-timeout-ms", "0", "per-connection read timeout in ms while \
+         waiting for a request line; 0 = wait forever")
+    .opt("max-line-bytes", "1048576", "longest inbound request line the \
+         server will buffer before shedding the connection")
+    .opt("max-conns", "1024", "concurrent connection cap; extra \
+         connections are shed at accept with an error line")
+    .opt("faults", "", "deterministic fault-injection spec for the sim \
+         backend (see runtime::faults), e.g. transient@r2s4,seed=42")
     .opt("config", "", "TOML config file ([server]/[cache] sections \
          override the flags; see docs in util::toml)")
     .parse_or_exit(2);
@@ -217,6 +225,7 @@ fn cmd_serve() -> Result<()> {
         prefix_cache: parse_on_off("prefix-cache", args.get("prefix-cache"))?,
         default_policy: args.get("policy").to_string(),
         default_budget: args.get_usize("budget"),
+        ..SchedConfig::default()
     };
     make_policy(&cfg.default_policy)?; // fail fast on a bad default
     if !args.get("config").is_empty() {
@@ -236,14 +245,25 @@ fn cmd_serve() -> Result<()> {
             cfg.max_live_blocks = v;
         }
     }
+    let timeout_ms = args.get_u64("read-timeout-ms");
     let opts = ServeOpts {
         default_stream: parse_on_off("stream", args.get("stream"))?,
         default_priority: Priority::parse(args.get("priority"))?,
+        max_line_bytes: args.get_usize("max-line-bytes"),
+        read_timeout: (timeout_ms > 0)
+            .then(|| std::time::Duration::from_millis(timeout_ms)),
+        max_connections: args.get_usize("max-conns"),
     };
-    let (handle, _join) = match args.get("backend") {
-        "sim" => spawn_sim_engine(cfg)?,
-        "pjrt" => spawn_pjrt(args.get("artifacts").into(), cfg)?,
-        other => anyhow::bail!("unknown backend {other:?} (want sim|pjrt)"),
+    let faults = args.get("faults");
+    let (handle, _join) = match (args.get("backend"), faults.is_empty()) {
+        ("sim", true) => spawn_sim_engine(cfg)?,
+        ("sim", false) => {
+            let plan = paged_eviction::runtime::FaultPlan::parse(faults)?;
+            paged_eviction::server::serve::spawn_sim_engine_faulty(cfg, plan)?
+        }
+        ("pjrt", true) => spawn_pjrt(args.get("artifacts").into(), cfg)?,
+        ("pjrt", false) => anyhow::bail!("--faults needs --backend sim"),
+        (other, _) => anyhow::bail!("unknown backend {other:?} (want sim|pjrt)"),
     };
     let listener = std::net::TcpListener::bind(("127.0.0.1", args.get_usize("port") as u16))?;
     println!("serving on {} ({} backend)", listener.local_addr()?, args.get("backend"));
@@ -327,6 +347,7 @@ fn cmd_info() -> Result<()> {
 /// events, mid-run aborts — on the deterministic sim backend.
 fn cmd_schedule() -> Result<()> {
     use paged_eviction::api::{RequestBuilder, RequestId, SeqEvent, Session};
+    use paged_eviction::runtime::{FaultPlan, FaultyBackend, SimBackend};
     use paged_eviction::scheduler::{Priority, SchedConfig};
     use paged_eviction::util::rng::Pcg32;
     use paged_eviction::workload::{recall, trace};
@@ -358,6 +379,8 @@ fn cmd_schedule() -> Result<()> {
          (at, prompt_len, gen, policy, budget, priority, deadline, seed)")
     .opt("abort", "", "cancel requests mid-run: comma list of id@step \
          (server-assigned ids, submit order)")
+    .opt("faults", "", "deterministic fault-injection spec \
+         (see runtime::faults), e.g. transient@r2s4,batch@6,seed=42")
     .opt("seed", "7", "prompt RNG seed")
     .parse_or_exit(2);
 
@@ -373,6 +396,7 @@ fn cmd_schedule() -> Result<()> {
         prefix_cache: parse_on_off("prefix-cache", args.get("prefix-cache"))?,
         default_policy: args.get("policy").to_string(),
         default_budget: args.get_usize("budget"),
+        ..SchedConfig::default()
     };
     let stream = parse_on_off("stream", args.get("stream"))?;
     let default_priority = Priority::parse(args.get("priority"))?;
@@ -396,7 +420,17 @@ fn cmd_schedule() -> Result<()> {
     // the shared system-prompt stand-in: one common prefix, distinct tails
     let shared: Vec<u32> = (0..shared_len).map(|_| rng.below(200)).collect();
 
-    let session = Session::new_sim(cfg);
+    // Always serve through the fault wrapper: with no --faults it runs in
+    // passthrough mode (no plan, no injection — the `fault_passthrough`
+    // bench row pins its overhead), so faulted and clean runs share one
+    // code path and their outputs are directly comparable.
+    let backend = if args.get("faults").is_empty() {
+        FaultyBackend::passthrough(SimBackend::new(cfg.page_size))
+    } else {
+        let plan = FaultPlan::parse(args.get("faults"))?;
+        FaultyBackend::new(SimBackend::new(cfg.page_size), plan)
+    };
+    let session = Session::with_backend(backend, cfg);
     let mut handles = Vec::new();
     let mut outs = Vec::new();
     let mut cancelled: Vec<u64> = Vec::new();
@@ -515,16 +549,32 @@ fn cmd_schedule() -> Result<()> {
         cow,
         output_digest(&outs),
     );
+    let (fault_retries, quarantined, injected) =
+        session.with_scheduler(|s| (s.fault_retries, s.quarantined, s.backend().fault_counts()));
+    println!(
+        "faults: {} injected (transient {}, terminal {}, batch {}, nosnap {}, \
+         norestore {}, nogrow {}), fault retries {}, quarantined {}",
+        injected.total(),
+        injected.transient,
+        injected.terminal,
+        injected.batch_failures,
+        injected.snapshot_refusals,
+        injected.restore_failures,
+        injected.grow_failures,
+        fault_retries,
+        quarantined,
+    );
     for o in &outs {
         println!(
             "  req {:>3}: {:>3} tokens, finish {:?}, ttft {:.2} ms, preempted {}x \
-             (swap-restored {}x)",
+             (swap-restored {}x), retried {}x",
             o.id,
             o.tokens.len(),
             o.finish,
             o.ttft_s * 1e3,
             o.preemptions,
             o.swaps,
+            o.retries,
         );
         println!("digest req={} {:016x}", o.id, output_digest(std::slice::from_ref(o)));
     }

@@ -1,0 +1,764 @@
+//! Deterministic fault injection for the decode stack.
+//!
+//! [`FaultyBackend`] wraps any [`DecodeBackend`] and injects faults driven
+//! by a seeded, scriptable [`FaultPlan`]: per-request/per-step transient
+//! and terminal decode errors, whole-batch failures, `snapshot()`
+//! refusals, `restore`/`grow_bucket` failures, and injected slow rounds.
+//! Tests, the CLI (`schedule --faults SPEC` / `serve --faults SPEC`) and
+//! CI all replay identical fault schedules, so every recovery invariant
+//! the scheduler claims (bit-identical recompute-and-replay, exact arena
+//! drain, bounded retries) is provable under *faults*, not just under
+//! memory pressure.
+//!
+//! ## Targeting model
+//!
+//! `decode_batch` receives anonymous `(sequence, token)` entries, so the
+//! wrapper assigns every successfully prefilled sequence a **lane**:
+//! a 1-based counter in prefill order (on a fresh scheduler this is
+//! submission order). The lane and a per-lane **attempt** counter (how
+//! many decode attempts this lane has been fed, including faulted ones)
+//! ride inside [`FaultSeq`] and survive swap-to-host via
+//! [`FaultSnapshot`]; a recompute readmission re-prefills and therefore
+//! gets a fresh lane — exactly like a brand-new request, which is what a
+//! recompute is to the backend. A fault verdict is a pure function of
+//! `(seed, lane, attempt)` plus the rule list, so the schedule replays
+//! identically regardless of batch composition or interleaving.
+//!
+//! ## Spec grammar (comma-separated, e.g. `"transient@r2s4,batch@6"`)
+//!
+//! | clause            | meaning                                            |
+//! |-------------------|----------------------------------------------------|
+//! | `transient@rLsA`  | transient decode error for lane L at attempt A     |
+//! | `transient@rLsA+` | ... at every attempt >= A                          |
+//! | `terminal@rLsA`   | terminal decode error for lane L at attempt A      |
+//! | `terminal@rLsA+`  | ... at every attempt >= A                          |
+//! | `batch@N`         | Nth `decode_batch` call fails wholesale (transient)|
+//! | `nosnap`          | refuse every `snapshot()` (forces recompute)       |
+//! | `nosnap@rL`       | refuse `snapshot()` for lane L only                |
+//! | `norestore@K`     | first K `restore` calls fail                       |
+//! | `nogrow@K`        | first K `grow_bucket` calls fail                   |
+//! | `slow@Nx<us>`     | Nth `decode_batch` call sleeps `<us>` microseconds |
+//! | `seed=S`          | seed for the probabilistic clauses                 |
+//! | `ptransient=P`    | P permille transient fault chance per attempt      |
+//! | `pterminal=P`     | P permille terminal fault chance per attempt       |
+//!
+//! A plan-less wrapper ([`FaultyBackend::passthrough`]) adds one branch
+//! and one `Vec` rebuild per round — the `fault_passthrough` row in
+//! `micro_hotpath` pins that at ~zero via `tools/bench_gate.py`.
+
+use anyhow::Result;
+
+use crate::eviction::EvictionPolicy;
+use crate::kvcache::{BlockAlloc, BlockManager, SeqCache};
+use crate::scheduler::backend::{
+    BackendError, DecodeBackend, HostSnapshot, Prefilled, Restored,
+};
+use crate::scheduler::Request;
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Rule {
+    /// Decode fault for `lane` at attempt `attempt` (or every attempt
+    /// `>= attempt` when `from` is set).
+    DecodeAt { lane: u64, attempt: u64, from: bool, terminal: bool },
+    /// The `call`th `decode_batch` call fails wholesale (every entry gets
+    /// a transient error; the inner backend is never invoked, so no
+    /// sequence state moves — a retry is lossless by construction).
+    BatchFail { call: u64 },
+    /// Refuse `snapshot()` (for one lane, or for everyone).
+    NoSnap { lane: Option<u64> },
+    /// Fail the first `first` `restore` calls.
+    FailRestores { first: u64 },
+    /// Fail the first `first` `grow_bucket` calls.
+    FailGrows { first: u64 },
+    /// Sleep `micros` before serving the `call`th `decode_batch` call.
+    Slow { call: u64, micros: u64 },
+}
+
+/// What kind of decode fault a verdict resolved to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fault {
+    Transient,
+    Terminal,
+}
+
+/// Immutable, replayable fault schedule. Build one with the fluent
+/// methods (tests) or [`FaultPlan::parse`] (CLI/CI spec strings); hand it
+/// to [`FaultyBackend::new`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+    seed: u64,
+    /// Permille chance of a transient decode fault per (lane, attempt).
+    p_transient: u32,
+    /// Permille chance of a terminal decode fault per (lane, attempt).
+    p_terminal: u32,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Parse the comma-separated spec grammar (see the module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new();
+        for raw in spec.split(',') {
+            let clause = raw.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(rest) = clause.strip_prefix("transient@") {
+                let (lane, attempt, from) = parse_lane_step(rest)?;
+                plan.rules.push(Rule::DecodeAt { lane, attempt, from, terminal: false });
+            } else if let Some(rest) = clause.strip_prefix("terminal@") {
+                let (lane, attempt, from) = parse_lane_step(rest)?;
+                plan.rules.push(Rule::DecodeAt { lane, attempt, from, terminal: true });
+            } else if let Some(rest) = clause.strip_prefix("batch@") {
+                plan.rules.push(Rule::BatchFail { call: parse_u64(rest)? });
+            } else if clause == "nosnap" {
+                plan.rules.push(Rule::NoSnap { lane: None });
+            } else if let Some(rest) = clause.strip_prefix("nosnap@r") {
+                plan.rules.push(Rule::NoSnap { lane: Some(parse_u64(rest)?) });
+            } else if let Some(rest) = clause.strip_prefix("norestore@") {
+                plan.rules.push(Rule::FailRestores { first: parse_u64(rest)? });
+            } else if let Some(rest) = clause.strip_prefix("nogrow@") {
+                plan.rules.push(Rule::FailGrows { first: parse_u64(rest)? });
+            } else if let Some(rest) = clause.strip_prefix("slow@") {
+                let (call, micros) = rest
+                    .split_once('x')
+                    .ok_or_else(|| anyhow::anyhow!("slow clause wants N x micros: {clause:?}"))?;
+                plan.rules.push(Rule::Slow {
+                    call: parse_u64(call)?,
+                    micros: parse_u64(micros)?,
+                });
+            } else if let Some(rest) = clause.strip_prefix("seed=") {
+                plan.seed = parse_u64(rest)?;
+            } else if let Some(rest) = clause.strip_prefix("ptransient=") {
+                plan.p_transient = parse_permille(rest)?;
+            } else if let Some(rest) = clause.strip_prefix("pterminal=") {
+                plan.p_terminal = parse_permille(rest)?;
+            } else {
+                anyhow::bail!("unknown fault clause {clause:?}");
+            }
+        }
+        Ok(plan)
+    }
+
+    pub fn transient_at(mut self, lane: u64, attempt: u64) -> Self {
+        self.rules.push(Rule::DecodeAt { lane, attempt, from: false, terminal: false });
+        self
+    }
+
+    /// Transient decode fault on every attempt `>= attempt` of `lane`
+    /// (the poison-request shape the circuit breaker quarantines).
+    pub fn transient_from(mut self, lane: u64, attempt: u64) -> Self {
+        self.rules.push(Rule::DecodeAt { lane, attempt, from: true, terminal: false });
+        self
+    }
+
+    pub fn terminal_at(mut self, lane: u64, attempt: u64) -> Self {
+        self.rules.push(Rule::DecodeAt { lane, attempt, from: false, terminal: true });
+        self
+    }
+
+    pub fn terminal_from(mut self, lane: u64, attempt: u64) -> Self {
+        self.rules.push(Rule::DecodeAt { lane, attempt, from: true, terminal: true });
+        self
+    }
+
+    /// The `call`th `decode_batch` call (1-based) fails wholesale.
+    pub fn batch_fail_at(mut self, call: u64) -> Self {
+        self.rules.push(Rule::BatchFail { call });
+        self
+    }
+
+    /// Refuse every `snapshot()`: all preemption victims recompute.
+    pub fn refuse_snapshots(mut self) -> Self {
+        self.rules.push(Rule::NoSnap { lane: None });
+        self
+    }
+
+    pub fn refuse_snapshots_for(mut self, lane: u64) -> Self {
+        self.rules.push(Rule::NoSnap { lane: Some(lane) });
+        self
+    }
+
+    /// Fail the first `first` `restore` calls (the scheduler falls back
+    /// to recompute-and-replay).
+    pub fn fail_restores(mut self, first: u64) -> Self {
+        self.rules.push(Rule::FailRestores { first });
+        self
+    }
+
+    /// Fail the first `first` `grow_bucket` calls.
+    pub fn fail_grows(mut self, first: u64) -> Self {
+        self.rules.push(Rule::FailGrows { first });
+        self
+    }
+
+    /// Sleep `micros` before the `call`th `decode_batch` call.
+    pub fn slow_round(mut self, call: u64, micros: u64) -> Self {
+        self.rules.push(Rule::Slow { call, micros });
+        self
+    }
+
+    pub fn seeded(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Permille chance of a transient decode fault on each attempt.
+    pub fn p_transient(mut self, permille: u32) -> Self {
+        self.p_transient = permille.min(1000);
+        self
+    }
+
+    /// Permille chance of a terminal decode fault on each attempt.
+    pub fn p_terminal(mut self, permille: u32) -> Self {
+        self.p_terminal = permille.min(1000);
+        self
+    }
+
+    /// Pure decode-fault verdict for one `(lane, attempt)` — rules first
+    /// (terminal rules dominate transient ones on the same step), then
+    /// the seeded permille draws. No state: replay-deterministic.
+    fn verdict(&self, lane: u64, attempt: u64) -> Option<Fault> {
+        let mut hit: Option<Fault> = None;
+        for rule in &self.rules {
+            if let Rule::DecodeAt { lane: l, attempt: a, from, terminal } = rule {
+                let applies = *l == lane && if *from { attempt >= *a } else { attempt == *a };
+                if applies {
+                    if *terminal {
+                        return Some(Fault::Terminal);
+                    }
+                    hit = Some(Fault::Transient);
+                }
+            }
+        }
+        if hit.is_some() {
+            return hit;
+        }
+        if self.p_terminal > 0 {
+            let h = splitmix64(self.seed ^ (lane << 20) ^ attempt ^ 0x7e72);
+            if (h % 1000) < self.p_terminal as u64 {
+                return Some(Fault::Terminal);
+            }
+        }
+        if self.p_transient > 0 {
+            let h = splitmix64(self.seed ^ (lane << 20) ^ attempt);
+            if (h % 1000) < self.p_transient as u64 {
+                return Some(Fault::Transient);
+            }
+        }
+        None
+    }
+
+    fn refuses_snapshot(&self, lane: u64) -> bool {
+        self.rules
+            .iter()
+            .any(|r| matches!(r, Rule::NoSnap { lane: l } if l.map_or(true, |l| l == lane)))
+    }
+
+    fn restore_budget(&self) -> u64 {
+        self.rules
+            .iter()
+            .filter_map(|r| match r {
+                Rule::FailRestores { first } => Some(*first),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn grow_budget(&self) -> u64 {
+        self.rules
+            .iter()
+            .filter_map(|r| match r {
+                Rule::FailGrows { first } => Some(*first),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn slow_micros(&self, call: u64) -> u64 {
+        self.rules
+            .iter()
+            .filter_map(|r| match r {
+                Rule::Slow { call: c, micros } if *c == call => Some(*micros),
+                _ => None,
+            })
+            .sum()
+    }
+
+    fn batch_fails(&self, call: u64) -> bool {
+        self.rules
+            .iter()
+            .any(|r| matches!(r, Rule::BatchFail { call: c } if *c == call))
+    }
+}
+
+fn parse_u64(s: &str) -> Result<u64> {
+    s.trim()
+        .parse::<u64>()
+        .map_err(|_| anyhow::anyhow!("expected a number, got {s:?}"))
+}
+
+fn parse_permille(s: &str) -> Result<u32> {
+    let v = parse_u64(s)?;
+    anyhow::ensure!(v <= 1000, "permille out of range: {v}");
+    Ok(v as u32)
+}
+
+/// Parse the `rLsA[+]` lane/step form, e.g. `r2s4` or `r2s4+`.
+fn parse_lane_step(s: &str) -> Result<(u64, u64, bool)> {
+    let rest = s
+        .strip_prefix('r')
+        .ok_or_else(|| anyhow::anyhow!("expected rLsA, got {s:?}"))?;
+    let (lane, rest) = rest
+        .split_once('s')
+        .ok_or_else(|| anyhow::anyhow!("expected rLsA, got {s:?}"))?;
+    let (attempt, from) = match rest.strip_suffix('+') {
+        Some(head) => (head, true),
+        None => (rest, false),
+    };
+    let attempt = parse_u64(attempt)?;
+    anyhow::ensure!(attempt >= 1, "attempts are 1-based");
+    Ok((parse_u64(lane)?, attempt, from))
+}
+
+/// Per-sequence wrapper state: the inner backend's sequence plus the
+/// fault-targeting identity (lane) and decode-attempt counter.
+pub struct FaultSeq<S> {
+    inner: S,
+    lane: u64,
+    attempts: u64,
+}
+
+impl<S> FaultSeq<S> {
+    /// Fault-targeting lane of this sequence (1-based prefill order).
+    pub fn lane(&self) -> u64 {
+        self.lane
+    }
+}
+
+/// Snapshot wrapper: carries the lane/attempt identity through
+/// swap-to-host so a restored sequence keeps its fault schedule.
+pub struct FaultSnapshot<S> {
+    inner: S,
+    lane: u64,
+    attempts: u64,
+}
+
+impl<S: HostSnapshot> HostSnapshot for FaultSnapshot<S> {
+    fn host_bytes(&self) -> usize {
+        self.inner.host_bytes()
+    }
+
+    fn arena_blocks(&self) -> usize {
+        self.inner.arena_blocks()
+    }
+}
+
+/// Running tally of injected faults (observability for the CLI summary).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub transient: u64,
+    pub terminal: u64,
+    pub batch_failures: u64,
+    pub snapshot_refusals: u64,
+    pub restore_failures: u64,
+    pub grow_failures: u64,
+}
+
+impl FaultCounts {
+    pub fn total(&self) -> u64 {
+        self.transient
+            + self.terminal
+            + self.batch_failures
+            + self.snapshot_refusals
+            + self.restore_failures
+            + self.grow_failures
+    }
+}
+
+/// A [`DecodeBackend`] decorator injecting the faults a [`FaultPlan`]
+/// scripts. With no plan loaded it is a pure passthrough.
+pub struct FaultyBackend<B: DecodeBackend> {
+    inner: B,
+    plan: Option<FaultPlan>,
+    next_lane: u64,
+    batch_calls: u64,
+    restore_calls: u64,
+    grow_calls: u64,
+    transient_injected: u64,
+    terminal_injected: u64,
+    batch_failures: u64,
+    snapshot_refusals: std::cell::Cell<u64>,
+    restore_failures: u64,
+    grow_failures: u64,
+}
+
+impl<B: DecodeBackend> FaultyBackend<B> {
+    pub fn new(inner: B, plan: FaultPlan) -> FaultyBackend<B> {
+        FaultyBackend {
+            inner,
+            plan: Some(plan),
+            next_lane: 0,
+            batch_calls: 0,
+            restore_calls: 0,
+            grow_calls: 0,
+            transient_injected: 0,
+            terminal_injected: 0,
+            batch_failures: 0,
+            snapshot_refusals: std::cell::Cell::new(0),
+            restore_failures: 0,
+            grow_failures: 0,
+        }
+    }
+
+    /// Wrapper with no plan: every call delegates untouched (the
+    /// `fault_passthrough` bench row pins this at ~zero overhead).
+    pub fn passthrough(inner: B) -> FaultyBackend<B> {
+        let mut b = Self::new(inner, FaultPlan::new());
+        b.plan = None;
+        b
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut B {
+        &mut self.inner
+    }
+
+    /// Injected-fault tallies so far.
+    pub fn fault_counts(&self) -> FaultCounts {
+        FaultCounts {
+            transient: self.transient_injected,
+            terminal: self.terminal_injected,
+            batch_failures: self.batch_failures,
+            snapshot_refusals: self.snapshot_refusals.get(),
+            restore_failures: self.restore_failures,
+            grow_failures: self.grow_failures,
+        }
+    }
+}
+
+impl<B: DecodeBackend> DecodeBackend for FaultyBackend<B> {
+    type Seq = FaultSeq<B::Seq>;
+
+    type Snapshot = FaultSnapshot<B::Snapshot>;
+
+    fn set_prefix_cache(&mut self, enabled: bool) {
+        self.inner.set_prefix_cache(enabled);
+    }
+
+    fn prefill_claim(&self, arena: &BlockManager, req: &Request, page_size: usize) -> usize {
+        self.inner.prefill_claim(arena, req, page_size)
+    }
+
+    fn prepare_round(&mut self, seq: &mut Self::Seq) -> BlockAlloc {
+        self.inner.prepare_round(&mut seq.inner)
+    }
+
+    fn prefill(
+        &mut self,
+        arena: &BlockManager,
+        prompt: &[u32],
+        budget: usize,
+        policy: Box<dyn EvictionPolicy>,
+    ) -> Result<Prefilled<Self::Seq>> {
+        match self.inner.prefill(arena, prompt, budget, policy)? {
+            Prefilled::Ready { seq, logits } => {
+                self.next_lane += 1;
+                Ok(Prefilled::Ready {
+                    seq: FaultSeq { inner: seq, lane: self.next_lane, attempts: 0 },
+                    logits,
+                })
+            }
+            Prefilled::OutOfMemory => Ok(Prefilled::OutOfMemory),
+        }
+    }
+
+    fn cache(seq: &Self::Seq) -> &SeqCache {
+        B::cache(&seq.inner)
+    }
+
+    fn cache_mut(seq: &mut Self::Seq) -> &mut SeqCache {
+        B::cache_mut(&mut seq.inner)
+    }
+
+    fn grow_bucket(&mut self, seq: &mut Self::Seq) -> Result<()> {
+        if let Some(plan) = &self.plan {
+            if self.grow_calls < plan.grow_budget() {
+                self.grow_calls += 1;
+                self.grow_failures += 1;
+                anyhow::bail!("injected grow_bucket failure (call {})", self.grow_calls);
+            }
+            self.grow_calls += 1;
+        }
+        self.inner.grow_bucket(&mut seq.inner)
+    }
+
+    fn snapshot(&self, seq: &Self::Seq) -> Option<Self::Snapshot> {
+        if let Some(plan) = &self.plan {
+            if plan.refuses_snapshot(seq.lane) {
+                self.snapshot_refusals.set(self.snapshot_refusals.get() + 1);
+                return None;
+            }
+        }
+        self.inner.snapshot(&seq.inner).map(|inner| FaultSnapshot {
+            inner,
+            lane: seq.lane,
+            attempts: seq.attempts,
+        })
+    }
+
+    fn restore(
+        &mut self,
+        arena: &BlockManager,
+        snap: &Self::Snapshot,
+    ) -> Result<Restored<Self::Seq>> {
+        if let Some(plan) = &self.plan {
+            if self.restore_calls < plan.restore_budget() {
+                self.restore_calls += 1;
+                self.restore_failures += 1;
+                anyhow::bail!("injected restore failure (call {})", self.restore_calls);
+            }
+            self.restore_calls += 1;
+        }
+        match self.inner.restore(arena, &snap.inner)? {
+            Restored::Ready(inner) => Ok(Restored::Ready(FaultSeq {
+                inner,
+                lane: snap.lane,
+                attempts: snap.attempts,
+            })),
+            Restored::OutOfMemory => Ok(Restored::OutOfMemory),
+        }
+    }
+
+    fn decode_batch(
+        &mut self,
+        batch: &mut [(&mut Self::Seq, u32)],
+    ) -> Vec<std::result::Result<Vec<f32>, BackendError>> {
+        let Some(plan) = &self.plan else {
+            // passthrough: one Vec rebuild to strip the wrapper layer
+            let mut inner: Vec<(&mut B::Seq, u32)> =
+                batch.iter_mut().map(|e| (&mut e.0.inner, e.1)).collect();
+            return self.inner.decode_batch(&mut inner);
+        };
+        self.batch_calls += 1;
+        let call = self.batch_calls;
+
+        let micros = plan.slow_micros(call);
+        if micros > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(micros));
+        }
+        let fail_whole_batch = plan.batch_fails(call);
+
+        // One pass: bump attempt counters, decide per-entry verdicts, and
+        // collect the surviving entries for the inner dispatch. Faulted
+        // entries never reach the inner backend, so their sequence state
+        // does not move — a retry replays losslessly by construction.
+        let mut slots: Vec<Option<std::result::Result<Vec<f32>, BackendError>>> =
+            Vec::with_capacity(batch.len());
+        let mut inner_batch: Vec<(&mut B::Seq, u32)> = Vec::with_capacity(batch.len());
+        let mut injected_transient = 0u64;
+        let mut injected_terminal = 0u64;
+        for e in batch.iter_mut() {
+            e.0.attempts += 1;
+            let (lane, attempt) = (e.0.lane, e.0.attempts);
+            if fail_whole_batch {
+                injected_transient += 1;
+                slots.push(Some(Err(BackendError::transient(anyhow::anyhow!(
+                    "injected batch failure (call {call}, lane {lane})"
+                )))));
+                continue;
+            }
+            match plan.verdict(lane, attempt) {
+                Some(Fault::Transient) => {
+                    injected_transient += 1;
+                    slots.push(Some(Err(BackendError::transient(anyhow::anyhow!(
+                        "injected transient fault (lane {lane}, attempt {attempt})"
+                    )))));
+                }
+                Some(Fault::Terminal) => {
+                    injected_terminal += 1;
+                    slots.push(Some(Err(BackendError::terminal(anyhow::anyhow!(
+                        "injected terminal fault (lane {lane}, attempt {attempt})"
+                    )))));
+                }
+                None => {
+                    slots.push(None);
+                    inner_batch.push((&mut e.0.inner, e.1));
+                }
+            }
+        }
+        self.transient_injected += injected_transient;
+        self.terminal_injected += injected_terminal;
+        if fail_whole_batch {
+            self.batch_failures += 1;
+        }
+
+        let inner_results = if inner_batch.is_empty() {
+            Vec::new()
+        } else {
+            self.inner.decode_batch(&mut inner_batch)
+        };
+        let mut it = inner_results.into_iter();
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.unwrap_or_else(|| {
+                    it.next().expect("inner backend returned one result per entry")
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eviction::make_policy;
+    use crate::runtime::model_runner::argmax;
+    use crate::runtime::SimBackend;
+
+    fn prefilled(
+        be: &mut FaultyBackend<SimBackend>,
+        arena: &BlockManager,
+        prompt: &[u32],
+    ) -> (FaultSeq<crate::runtime::SimSeq>, u32) {
+        let Prefilled::Ready { seq, logits } = be
+            .prefill(arena, prompt, 64, make_policy("paged").unwrap())
+            .unwrap()
+        else {
+            panic!("unexpected OOM")
+        };
+        (seq, argmax(&logits))
+    }
+
+    #[test]
+    fn parse_roundtrips_the_builder_forms() {
+        let parsed = FaultPlan::parse(
+            "transient@r2s4, terminal@r3s1+, batch@6, nosnap, nosnap@r5, \
+             norestore@2, nogrow@1, slow@3x500, seed=9, ptransient=15, pterminal=1",
+        )
+        .unwrap();
+        let built = FaultPlan::new()
+            .transient_at(2, 4)
+            .terminal_from(3, 1)
+            .batch_fail_at(6)
+            .refuse_snapshots()
+            .refuse_snapshots_for(5)
+            .fail_restores(2)
+            .fail_grows(1)
+            .slow_round(3, 500)
+            .seeded(9)
+            .p_transient(15)
+            .p_terminal(1);
+        assert_eq!(parsed, built);
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::new());
+        assert!(FaultPlan::parse("transient@r2").is_err());
+        assert!(FaultPlan::parse("chaos@everywhere").is_err());
+        assert!(FaultPlan::parse("transient@r1s0").is_err(), "attempts are 1-based");
+        assert!(FaultPlan::parse("ptransient=2000").is_err());
+        assert!(FaultPlan::parse("slow@3").is_err());
+    }
+
+    #[test]
+    fn verdicts_are_pure_and_seed_sensitive() {
+        let p = FaultPlan::new().seeded(7).p_transient(200);
+        let a: Vec<_> = (1..=64).map(|s| p.verdict(3, s)).collect();
+        let b: Vec<_> = (1..=64).map(|s| p.verdict(3, s)).collect();
+        assert_eq!(a, b, "verdicts are a pure function of (seed, lane, attempt)");
+        assert!(a.iter().any(|v| v.is_some()), "200 permille over 64 draws must hit");
+        assert!(a.iter().any(|v| v.is_none()));
+        let q = FaultPlan::new().seeded(8).p_transient(200);
+        let c: Vec<_> = (1..=64).map(|s| q.verdict(3, s)).collect();
+        assert_ne!(a, c, "a different seed reshuffles the schedule");
+        // rules: terminal dominates transient on the same (lane, attempt)
+        let r = FaultPlan::new().transient_at(1, 2).terminal_at(1, 2);
+        assert_eq!(r.verdict(1, 2), Some(Fault::Terminal));
+        assert_eq!(r.verdict(1, 1), None);
+        assert_eq!(r.verdict(2, 2), None);
+    }
+
+    #[test]
+    fn scripted_decode_fault_skips_inner_state() {
+        let arena = BlockManager::new(4096);
+        let prompt: Vec<u32> = (0..24).collect();
+        // twin A: passthrough
+        let mut clean = FaultyBackend::passthrough(SimBackend::new(4));
+        let (mut cseq, mut ctok) = prefilled(&mut clean, &arena, &prompt);
+        // twin B: attempt 2 faults transiently; the retry (attempt 3, same
+        // fed token) must land on identical state
+        let mut faulty =
+            FaultyBackend::new(SimBackend::new(4), FaultPlan::new().transient_at(1, 2));
+        let (mut fseq, mut ftok) = prefilled(&mut faulty, &arena, &prompt);
+        assert_eq!(ctok, ftok);
+        for step in 0..6 {
+            while !FaultyBackend::<SimBackend>::cache_mut(&mut cseq).ensure_block() {
+                clean.grow_bucket(&mut cseq).unwrap();
+            }
+            while !FaultyBackend::<SimBackend>::cache_mut(&mut fseq).ensure_block() {
+                faulty.grow_bucket(&mut fseq).unwrap();
+            }
+            // clean twin advances unconditionally
+            let mut b = [(&mut cseq, ctok)];
+            let r = clean.decode_batch(&mut b).pop().unwrap().unwrap();
+            ctok = argmax(&r);
+            // faulty twin: the injected attempt errors, then succeeds
+            let mut b = [(&mut fseq, ftok)];
+            let mut r = faulty.decode_batch(&mut b).pop().unwrap();
+            if step == 1 {
+                let err = r.expect_err("attempt 2 must fault");
+                assert!(err.is_transient());
+                let mut b = [(&mut fseq, ftok)];
+                r = faulty.decode_batch(&mut b).pop().unwrap();
+            }
+            ftok = argmax(&r.expect("non-injected attempts succeed"));
+            assert_eq!(ctok, ftok, "retry is lossless: twins stay bit-identical");
+        }
+        assert_eq!(faulty.fault_counts().transient, 1);
+        assert_eq!(clean.fault_counts().total(), 0);
+    }
+
+    #[test]
+    fn snapshot_restore_and_grow_faults_fire() {
+        let arena = BlockManager::new(4096);
+        let prompt: Vec<u32> = (0..16).collect();
+        let plan = FaultPlan::new().refuse_snapshots().fail_restores(1).fail_grows(1);
+        let mut be = FaultyBackend::new(SimBackend::new(4), plan);
+        let (mut seq, _tok) = prefilled(&mut be, &arena, &prompt);
+        assert!(be.snapshot(&seq).is_none(), "nosnap refuses the snapshot");
+        assert!(be.grow_bucket(&mut seq).is_err(), "first grow fails");
+        assert!(be.grow_bucket(&mut seq).is_ok(), "budget exhausted, grows recover");
+        let counts = be.fault_counts();
+        assert_eq!((counts.snapshot_refusals, counts.grow_failures), (1, 1));
+
+        // per-lane refusal + restore budget, on a plan that CAN snapshot
+        let plan = FaultPlan::new().refuse_snapshots_for(2).fail_restores(1);
+        let mut be = FaultyBackend::new(SimBackend::new(4), plan);
+        let (seq1, _) = prefilled(&mut be, &arena, &prompt);
+        let (seq2, _) = prefilled(&mut be, &arena, &prompt);
+        assert_eq!((seq1.lane(), seq2.lane()), (1, 2), "lanes count prefills");
+        let snap = be.snapshot(&seq1).expect("lane 1 snapshots fine");
+        assert!(be.snapshot(&seq2).is_none(), "lane 2 is refused");
+        drop((seq1, seq2));
+        assert!(be.restore(&arena, &snap).is_err(), "first restore fails");
+        let Restored::Ready(restored) = be.restore(&arena, &snap).unwrap() else {
+            panic!("second restore succeeds")
+        };
+        assert_eq!(restored.lane(), 1, "restore keeps the fault-targeting lane");
+    }
+}

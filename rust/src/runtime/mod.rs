@@ -9,6 +9,7 @@
 
 #[cfg(feature = "xla")]
 pub mod engine;
+pub mod faults;
 pub mod manifest;
 pub mod model_runner;
 pub mod sim_backend;
@@ -19,4 +20,5 @@ pub use engine::Engine;
 pub use manifest::{GraphInfo, GraphKind, Manifest, ModelInfo};
 #[cfg(feature = "xla")]
 pub use model_runner::{ModelRunner, Sequence, StepOutput};
+pub use faults::{FaultCounts, FaultPlan, FaultSeq, FaultSnapshot, FaultyBackend};
 pub use sim_backend::{SimBackend, SimSeq, SimSnapshot};

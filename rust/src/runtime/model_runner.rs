@@ -23,7 +23,7 @@ mod pjrt {
     use crate::kvcache::{BlockAlloc, BlockManager, SeqCache};
     use crate::runtime::engine::{lit_f32, lit_i32, scalar_i32, Engine};
     use crate::runtime::manifest::ModelInfo;
-    use crate::scheduler::backend::{DecodeBackend, NoSwap, Prefilled, Restored};
+    use crate::scheduler::backend::{BackendError, DecodeBackend, NoSwap, Prefilled, Restored};
 
     pub struct ModelRunner<'e> {
         pub engine: &'e Engine,
@@ -341,7 +341,7 @@ mod pjrt {
         fn try_decode_batch_fused(
             &self,
             batch: &mut [(&mut Sequence, u32)],
-        ) -> Result<Option<Vec<Result<Vec<f32>>>>> {
+        ) -> Result<Option<Vec<std::result::Result<Vec<f32>, BackendError>>>> {
             let bs = self.page_size;
             let n = batch.len();
             let want_nb = batch
@@ -500,7 +500,10 @@ mod pjrt {
             bail!("the PJRT backend never snapshots, so there is nothing to restore")
         }
 
-        fn decode_batch(&mut self, batch: &mut [(&mut Sequence, u32)]) -> Vec<Result<Vec<f32>>> {
+        fn decode_batch(
+            &mut self,
+            batch: &mut [(&mut Sequence, u32)],
+        ) -> Vec<std::result::Result<Vec<f32>, BackendError>> {
             // Prefer the single padded batched dispatch; fall back to
             // per-sequence dispatch when the artifact set has no batched
             // graph for this cell.
@@ -523,7 +526,11 @@ mod pjrt {
             batch
                 .iter_mut()
                 .map(|entry| {
-                    self.decode_step(&mut *entry.0, entry.1).map(|o| o.logits)
+                    self.decode_step(&mut *entry.0, entry.1)
+                        .map(|o| o.logits)
+                        // a PJRT execute failure may have committed partial
+                        // per-lane state; no lossless retry exists here
+                        .map_err(BackendError::terminal)
                 })
                 .collect()
         }

@@ -23,7 +23,7 @@ use anyhow::Result;
 use crate::eviction::{make_policy, Decision, EvictionPolicy, PrefillScores};
 use crate::kvcache::{prefix_block_hashes, BlockAlloc, BlockManager, KvSnapshot, SeqCache};
 use crate::scheduler::backend::{
-    static_prefill_claim, DecodeBackend, HostSnapshot, Prefilled, Restored,
+    static_prefill_claim, BackendError, DecodeBackend, HostSnapshot, Prefilled, Restored,
 };
 use crate::scheduler::Request;
 
@@ -295,14 +295,21 @@ impl DecodeBackend for SimBackend {
         }))
     }
 
-    fn decode_batch(&mut self, batch: &mut [(&mut SimSeq, u32)]) -> Vec<Result<Vec<f32>>> {
+    fn decode_batch(
+        &mut self,
+        batch: &mut [(&mut SimSeq, u32)],
+    ) -> Vec<std::result::Result<Vec<f32>, BackendError>> {
         batch
             .iter_mut()
             .map(|entry| {
                 let seq: &mut SimSeq = &mut *entry.0;
                 let tok = entry.1;
                 if seq.cache.last_block_full() {
-                    return Err(anyhow::anyhow!("no write slot reserved for decode"));
+                    // a missing write slot is a scheduler contract breach,
+                    // not a device hiccup: retrying cannot fix it
+                    return Err(BackendError::terminal(anyhow::anyhow!(
+                        "no write slot reserved for decode"
+                    )));
                 }
                 seq.state = fold(seq.state, tok);
                 let pos = seq.cache.next_position();

@@ -17,6 +17,63 @@ use super::request::Request;
 use crate::eviction::{make_policy, EvictionPolicy};
 use crate::kvcache::{BlockAlloc, BlockManager, SeqCache};
 
+/// Per-sequence decode failure taxonomy — what the scheduler's recovery
+/// machinery keys on.
+///
+/// A [`BackendError::Transient`] decode error (an injected fault, a
+/// device hiccup, a retriable runtime error) does NOT retire the request:
+/// the scheduler suspends it through the same preemption/readmission
+/// machinery memory pressure uses (recompute-and-replay, so the recovered
+/// output stays bit-identical to a fault-free run), bounded by a
+/// per-request retry budget and a consecutive-failure circuit breaker. A
+/// [`BackendError::Terminal`] error retires the request immediately with
+/// [`super::request::FinishReason::Error`].
+pub enum BackendError {
+    /// Retriable: the sequence state is intact (or recoverable by
+    /// replay); the scheduler may suspend and readmit.
+    Transient(anyhow::Error),
+    /// Unrecoverable for this sequence: retire it as an error.
+    Terminal(anyhow::Error),
+}
+
+impl BackendError {
+    pub fn transient(e: anyhow::Error) -> BackendError {
+        BackendError::Transient(e)
+    }
+
+    pub fn terminal(e: anyhow::Error) -> BackendError {
+        BackendError::Terminal(e)
+    }
+
+    pub fn is_transient(&self) -> bool {
+        matches!(self, BackendError::Transient(_))
+    }
+
+    pub fn inner(&self) -> &anyhow::Error {
+        match self {
+            BackendError::Transient(e) | BackendError::Terminal(e) => e,
+        }
+    }
+}
+
+impl std::fmt::Display for BackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendError::Transient(e) => write!(f, "transient: {e}"),
+            BackendError::Terminal(e) => write!(f, "terminal: {e}"),
+        }
+    }
+}
+
+impl std::fmt::Debug for BackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendError::Transient(e) => write!(f, "Transient({e:#})"),
+            BackendError::Terminal(e) => write!(f, "Terminal({e:#})"),
+        }
+    }
+}
+
 /// Arena blocks a fresh prefill of `req` claims, ignoring any
 /// prefix-cache state: the per-policy resident prompt
 /// ([`EvictionPolicy::prefill_resident`] — `FullCache` keeps the whole
@@ -180,7 +237,10 @@ pub trait DecodeBackend {
     /// scheduler issues exactly one call per round for the whole running
     /// set. Every entry has a write slot reserved by the scheduler
     /// beforehand. Returns next-token logits per entry, same order;
-    /// per-entry errors let the scheduler retire one sequence without
-    /// failing the round.
-    fn decode_batch(&mut self, batch: &mut [(&mut Self::Seq, u32)]) -> Vec<Result<Vec<f32>>>;
+    /// per-entry [`BackendError`]s let the scheduler retry (transient) or
+    /// retire (terminal) one sequence without failing the round.
+    fn decode_batch(
+        &mut self,
+        batch: &mut [(&mut Self::Seq, u32)],
+    ) -> Vec<std::result::Result<Vec<f32>, BackendError>>;
 }

@@ -32,7 +32,7 @@ pub mod request;
 pub mod sched;
 pub mod swap;
 
-pub use backend::{ClaimMemo, DecodeBackend, HostSnapshot, Prefilled, Restored};
+pub use backend::{BackendError, ClaimMemo, DecodeBackend, HostSnapshot, Prefilled, Restored};
 pub use request::{FinishReason, Priority, Request, RequestOutput, RequestState};
 pub use sched::{SchedConfig, Scheduler, StepReport};
 pub use swap::SwapPool;

@@ -122,6 +122,9 @@ pub struct RequestOutput {
     /// Times this request was readmitted by restoring a swap-to-host
     /// snapshot instead of recomputing (`swaps <= preemptions`).
     pub swaps: u32,
+    /// Times this request was suspended and readmitted to recover a
+    /// TRANSIENT decode error (not counted in `preemptions`).
+    pub retries: u32,
     pub cache_stats: crate::kvcache::CacheStats,
 }
 

@@ -105,6 +105,17 @@ pub struct SchedConfig {
     /// Server-wide KV budget (tokens) a request inherits unless it
     /// carries its own override (`api::RequestBuilder::budget`).
     pub default_budget: usize,
+    /// Per-request budget of TRANSIENT decode-error retries. A transient
+    /// error within budget suspends the request through the normal
+    /// preemption/readmission machinery (recompute-and-replay keeps the
+    /// recovered output bit-identical); once exhausted the request
+    /// retires as [`FinishReason::Error`].
+    pub max_transient_retries: u32,
+    /// Circuit breaker: a request whose decode fails this many CONSECUTIVE
+    /// times (streak resets on any successful step, survives suspension)
+    /// is quarantined as [`FinishReason::Error`] even with retry budget
+    /// left — a poison request must not grind the batch forever.
+    pub fault_streak_limit: u32,
 }
 
 impl Default for SchedConfig {
@@ -120,6 +131,8 @@ impl Default for SchedConfig {
             prefix_cache: true,
             default_policy: "paged".into(),
             default_budget: 1024,
+            max_transient_retries: 8,
+            fault_streak_limit: 4,
         }
     }
 }
@@ -149,6 +162,9 @@ pub struct StepReport {
     /// same round fold into the scheduler-level `cow_copies` aggregate
     /// instead.
     pub cow_copies: usize,
+    /// Sequences suspended this round to retry a TRANSIENT decode error
+    /// (not counted in `preempted` — no memory pressure was involved).
+    pub retried: usize,
 }
 
 /// Queued request plus everything needed to resume it after preemption —
@@ -177,6 +193,11 @@ struct QueueEntry {
     /// Memoized admission claim, valid while the prefix index epoch it
     /// was recorded against is current.
     claim: Option<ClaimMemo>,
+    /// Transient decode-error retries consumed so far.
+    retries: u32,
+    /// Consecutive decode failures (survives suspension; resets on any
+    /// successful step) — the circuit breaker's counter.
+    fault_streak: u32,
 }
 
 impl QueueEntry {
@@ -193,6 +214,8 @@ impl QueueEntry {
             next_token: 0,
             deadline_at,
             claim: None,
+            retries: 0,
+            fault_streak: 0,
         }
     }
 }
@@ -221,6 +244,10 @@ struct Inflight<S> {
     cow_seen: u64,
     /// Absolute step at which the deadline expires.
     deadline_at: Option<u64>,
+    /// Transient decode-error retries consumed so far.
+    retries: u32,
+    /// Consecutive decode failures (circuit-breaker counter).
+    fault_streak: u32,
 }
 
 enum AdmitOutcome {
@@ -273,6 +300,12 @@ pub struct Scheduler<B: DecodeBackend> {
     pub prefix_hit_blocks: u64,
     /// Total copy-on-write page copies made during round preparation.
     pub cow_copies: u64,
+    /// Total TRANSIENT decode errors recovered by suspend-and-retry.
+    pub fault_retries: u64,
+    /// Requests retired as [`FinishReason::Error`] by the retry budget or
+    /// the consecutive-failure circuit breaker (poison quarantine) —
+    /// terminal backend errors are not counted here.
+    pub quarantined: u64,
     /// Aggregate cache counters of CANCELLED requests (each cancelled
     /// sequence's final stats merged with `cancelled = 1`; queued cancels
     /// contribute the count alone). `cancelled_stats.cancelled` is the
@@ -312,6 +345,8 @@ impl<B: DecodeBackend> Scheduler<B> {
             swap_restores: 0,
             prefix_hit_blocks: 0,
             cow_copies: 0,
+            fault_retries: 0,
+            quarantined: 0,
             cancelled_stats: CacheStats::default(),
             started: None,
             admit_counter: 0,
@@ -398,6 +433,16 @@ impl<B: DecodeBackend> Scheduler<B> {
         self.queues.iter().all(|q| q.is_empty()) && self.running.is_empty()
     }
 
+    /// Ids of every live (queued or running) request. Drain/shutdown
+    /// paths use this to cancel whatever outlasted the grace deadline.
+    pub fn live_ids(&self) -> Vec<u64> {
+        self.queues
+            .iter()
+            .flat_map(|q| q.iter().map(|e| e.req.id))
+            .chain(self.running.iter().map(|f| f.req.id))
+            .collect()
+    }
+
     fn emit(&mut self, id: u64, ev: SeqEvent) {
         self.events.push_back((id, ev));
     }
@@ -458,6 +503,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             self.cancelled_stats.cancelled += 1;
             self.cancelled_stats.preemptions += entry.preemptions as u64;
             self.cancelled_stats.swaps += entry.swaps as u64;
+            self.cancelled_stats.retries += entry.retries as u64;
             log::info!("req {id}: cancelled while queued");
             return true;
         }
@@ -471,6 +517,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             st.cancelled = 1;
             st.preemptions = f.preemptions as u64;
             st.swaps = f.swaps as u64;
+            st.retries = f.retries as u64;
             self.cancelled_stats.merge(&st);
             self.swap.discard(id); // nothing should be parked; be thorough
             log::info!("req {id}: cancelled mid-decode (releasing {n_blocks} blocks)");
@@ -491,6 +538,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             live_cache_tokens: 0,
             preemptions: 0,
             swaps: 0,
+            retries: 0,
             cache_stats: Default::default(),
         }
     }
@@ -522,9 +570,11 @@ impl<B: DecodeBackend> Scheduler<B> {
             live_cache_tokens: 0,
             preemptions: entry.preemptions,
             swaps: entry.swaps,
+            retries: entry.retries,
             cache_stats: CacheStats {
                 preemptions: entry.preemptions as u64,
                 swaps: entry.swaps as u64,
+                retries: entry.retries as u64,
                 ..Default::default()
             },
         };
@@ -738,7 +788,19 @@ impl<B: DecodeBackend> Scheduler<B> {
         let per_seq_s = round_s / self.running.len() as f64;
         debug_assert_eq!(results.len(), self.running.len(), "backend dropped entries");
 
-        let mut done: Vec<(usize, bool)> = Vec::new();
+        // What the retirement pass does with one decode result:
+        //   Finish — natural completion (stop token / length);
+        //   Fail   — retire as FinishReason::Error (`quarantined` marks a
+        //            transient failure the retry budget / circuit breaker
+        //            gave up on, as opposed to a terminal backend error);
+        //   Retry  — transient error within budget: suspend through the
+        //            preemption machinery and readmit (replay is lossless).
+        enum RoundAction {
+            Finish,
+            Fail { quarantined: bool },
+            Retry,
+        }
+        let mut actions: Vec<(usize, RoundAction)> = Vec::new();
         for (j, res) in results.into_iter().enumerate() {
             let f = &mut self.running[j];
             let tok = toks[j];
@@ -746,7 +808,30 @@ impl<B: DecodeBackend> Scheduler<B> {
             f.decode_seconds += per_seq_s;
             match res {
                 Err(e) => {
-                    log::warn!("req {}: decode error: {e:#}", f.req.id);
+                    f.fault_streak += 1;
+                    let budget_left = f.retries < self.cfg.max_transient_retries;
+                    let breaker_open = f.fault_streak >= self.cfg.fault_streak_limit;
+                    if e.is_transient() && budget_left && !breaker_open {
+                        log::warn!(
+                            "req {}: transient decode error (retry {} of {}): {e:#}",
+                            f.req.id,
+                            f.retries + 1,
+                            self.cfg.max_transient_retries,
+                        );
+                        actions.push((j, RoundAction::Retry));
+                        continue;
+                    }
+                    let quarantined = e.is_transient();
+                    if quarantined {
+                        log::warn!(
+                            "req {}: quarantined after {} retries (streak {}): {e:#}",
+                            f.req.id,
+                            f.retries,
+                            f.fault_streak,
+                        );
+                    } else {
+                        log::warn!("req {}: decode error: {e:#}", f.req.id);
+                    }
                     if f.fed >= f.produced.len() {
                         f.produced.push(tok); // retire with what we have
                         if self.stream_events && f.req.stream_events {
@@ -756,9 +841,10 @@ impl<B: DecodeBackend> Scheduler<B> {
                             ));
                         }
                     }
-                    done.push((j, true));
+                    actions.push((j, RoundAction::Fail { quarantined }));
                 }
                 Ok(logits) => {
+                    f.fault_streak = 0;
                     let replaying = f.fed < f.produced.len();
                     if replaying {
                         // replayed tokens were streamed before the
@@ -779,16 +865,35 @@ impl<B: DecodeBackend> Scheduler<B> {
                     if !replaying {
                         let stop_hit = f.req.is_stop(tok);
                         if stop_hit || f.produced.len() >= f.req.max_new_tokens {
-                            done.push((j, false));
+                            actions.push((j, RoundAction::Finish));
                         }
                     }
                 }
             }
         }
-        for &(j, errored) in done.iter().rev() {
-            let f = self.running.remove(j);
-            self.retire(f, errored.then_some(FinishReason::Error));
-            report.finished += 1;
+        // Process in REVERSE index order: removals keep later indices
+        // valid, and the reversed per-bucket push_fronts of a multi-entry
+        // retry (whole-batch failure) land back in original queue order.
+        for &(j, ref action) in actions.iter().rev() {
+            match action {
+                RoundAction::Finish => {
+                    let f = self.running.remove(j);
+                    self.retire(f, None);
+                    report.finished += 1;
+                }
+                RoundAction::Fail { quarantined } => {
+                    if *quarantined {
+                        self.quarantined += 1;
+                    }
+                    let f = self.running.remove(j);
+                    self.retire(f, Some(FinishReason::Error));
+                    report.finished += 1;
+                }
+                RoundAction::Retry => {
+                    self.suspend(j, true);
+                    report.retried += 1;
+                }
+            }
         }
         Ok(report)
     }
@@ -846,6 +951,8 @@ impl<B: DecodeBackend> Scheduler<B> {
                         swaps: entry.swaps + 1,
                         cow_seen,
                         deadline_at: entry.deadline_at,
+                        retries: entry.retries,
+                        fault_streak: entry.fault_streak,
                         req: entry.req,
                         seq,
                     });
@@ -880,10 +987,11 @@ impl<B: DecodeBackend> Scheduler<B> {
         match prefilled {
             Ok(Prefilled::Ready { seq, logits }) => {
                 let now = Instant::now();
-                if entry.preemptions == 0 {
+                if entry.preemptions == 0 && entry.retries == 0 {
                     // first admission only: recompute-on-readmission must
                     // not double count useful prompt work (a victim can be
-                    // preempted before producing anything, so an empty
+                    // preempted — or suspended for a transient-error
+                    // retry — before producing anything, so an empty
                     // resume list does not imply a first admission)
                     self.total_prompt_tokens += entry.req.prompt.len() as u64;
                     // The first generated token exists the moment prefill
@@ -913,6 +1021,8 @@ impl<B: DecodeBackend> Scheduler<B> {
                     swaps: entry.swaps,
                     cow_seen,
                     deadline_at: entry.deadline_at,
+                    retries: entry.retries,
+                    fault_streak: entry.fault_streak,
                     req: entry.req,
                     seq,
                 });
@@ -942,14 +1052,31 @@ impl<B: DecodeBackend> Scheduler<B> {
             .expect("victim_idx on empty running set")
     }
 
-    /// Evict a running sequence: park its snapshot in the swap pool when
+    /// Evict a running sequence under MEMORY pressure. See
+    /// [`Scheduler::suspend`].
+    fn preempt(&mut self, idx: usize) {
+        self.suspend(idx, false);
+    }
+
+    /// Suspend a running sequence: park its snapshot in the swap pool when
     /// the backend can produce one (swap-to-host), free its blocks, and
     /// requeue it at the queue front. The produced tokens ride along in
     /// the queue entry either way, so a snapshot later LRU-dropped from
     /// the pool degrades to the recompute path without losing work.
-    fn preempt(&mut self, idx: usize) {
+    ///
+    /// `retry` distinguishes a TRANSIENT-decode-error retry (counts one
+    /// retry against the request's budget and the `fault_retries`
+    /// aggregate) from a memory-pressure preemption (counts a
+    /// preemption). Both readmit identically — restore-or-replay is
+    /// bit-identical either way, which is exactly why transient recovery
+    /// reuses this machinery.
+    fn suspend(&mut self, idx: usize, retry: bool) {
         let f = self.running.remove(idx);
-        self.preemptions += 1;
+        if retry {
+            self.fault_retries += 1;
+        } else {
+            self.preemptions += 1;
+        }
         let n_blocks = B::cache(&f.seq).n_blocks();
         // fold the victim's not-yet-counted copy-on-write work into the
         // aggregate NOW: the victim misses the post-reservation delta
@@ -968,6 +1095,8 @@ impl<B: DecodeBackend> Scheduler<B> {
             swaps,
             next_token,
             deadline_at,
+            retries,
+            fault_streak,
             ..
         } = f;
         let mut swapped = false;
@@ -981,8 +1110,13 @@ impl<B: DecodeBackend> Scheduler<B> {
         }
         self.emit_stream(&req, SeqEvent::Preempted { swap: swapped });
         log::info!(
-            "req {}: preempted under memory pressure (freeing {} blocks, {})",
+            "req {}: {} (freeing {} blocks, {})",
             req.id,
+            if retry {
+                "suspended to retry a transient decode error"
+            } else {
+                "preempted under memory pressure"
+            },
             n_blocks,
             if swapped {
                 "snapshot swapped to host"
@@ -998,12 +1132,14 @@ impl<B: DecodeBackend> Scheduler<B> {
             resume: produced,
             first_token_at,
             decode_seconds,
-            preemptions: preemptions + 1,
+            preemptions: if retry { preemptions } else { preemptions + 1 },
             swaps,
             swap_fed: fed,
             next_token,
             deadline_at,
             claim: None,
+            retries: if retry { retries + 1 } else { retries },
+            fault_streak,
         });
     }
 
@@ -1038,7 +1174,11 @@ impl<B: DecodeBackend> Scheduler<B> {
         let mut cache_stats = cache.stats.clone();
         cache_stats.preemptions = f.preemptions as u64;
         cache_stats.swaps = f.swaps as u64;
+        cache_stats.retries = f.retries as u64;
         cache_stats.peak_arena_blocks = self.arena.stats().peak_used as u64;
+        // nothing should be parked for a running sequence; be thorough so
+        // an error retirement can never strand host swap bytes
+        self.swap.discard(f.req.id);
         let out = RequestOutput {
             id: f.req.id,
             tokens: f.produced,
@@ -1049,6 +1189,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             live_cache_tokens,
             preemptions: f.preemptions,
             swaps: f.swaps,
+            retries: f.retries,
             cache_stats,
         };
         self.emit(out.id, SeqEvent::Finished(out));
@@ -1060,6 +1201,18 @@ impl Scheduler<crate::runtime::SimBackend> {
     /// Scheduler over the always-built deterministic sim backend.
     pub fn new_sim(cfg: SchedConfig) -> Self {
         let backend = crate::runtime::SimBackend::new(cfg.page_size);
+        Self::with_backend(backend, cfg)
+    }
+}
+
+impl Scheduler<crate::runtime::FaultyBackend<crate::runtime::SimBackend>> {
+    /// Scheduler over the sim backend wrapped in the deterministic
+    /// fault-injection layer (`schedule --faults`, chaos tests).
+    pub fn new_sim_faulty(cfg: SchedConfig, plan: crate::runtime::FaultPlan) -> Self {
+        let backend = crate::runtime::FaultyBackend::new(
+            crate::runtime::SimBackend::new(cfg.page_size),
+            plan,
+        );
         Self::with_backend(backend, cfg)
     }
 }

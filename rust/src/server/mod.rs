@@ -14,4 +14,7 @@ pub mod protocol;
 pub mod serve;
 
 pub use protocol::{WireOp, WireRequest, WireResponse};
-pub use serve::{serve_forever, spawn_sim_engine, EngineHandle, EngineMsg, ServeOpts};
+pub use serve::{
+    serve_forever, serve_until, spawn_sim_engine, spawn_sim_engine_faulty, EngineHandle,
+    EngineMsg, ServeOpts, ShutdownFlag,
+};

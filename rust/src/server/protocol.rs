@@ -53,8 +53,8 @@
 //!   {"id": 1, "tokens": [...], "text": "...",
 //!    "finish": "length"|"eos"|"error"|"deadline",
 //!    "ttft_ms": .., "tpot_ms": .., "live_cache_tokens": ..,
-//!    "preemptions": .., "swaps": .., "prefix_hit_blocks": ..,
-//!    "cow_copies": ..}
+//!    "preemptions": .., "swaps": .., "retries": ..,
+//!    "prefix_hit_blocks": .., "cow_copies": ..}
 
 use anyhow::{Context, Result};
 
@@ -234,6 +234,7 @@ fn output_pairs(o: &RequestOutput) -> Vec<(&'static str, Json)> {
         ("live_cache_tokens", Json::num(o.live_cache_tokens as f64)),
         ("preemptions", Json::num(o.preemptions as f64)),
         ("swaps", Json::num(o.swaps as f64)),
+        ("retries", Json::num(o.retries as f64)),
         (
             "prefix_hit_blocks",
             Json::num(o.cache_stats.prefix_hit_blocks as f64),
@@ -481,6 +482,7 @@ mod tests {
             live_cache_tokens: 64,
             preemptions: 2,
             swaps: 1,
+            retries: 3,
             cache_stats: CacheStats {
                 prefix_hit_blocks: 6,
                 cow_copies: 2,
@@ -495,7 +497,8 @@ mod tests {
         let j = Json::parse(&line).unwrap();
         for key in [
             "id", "tokens", "text", "finish", "ttft_ms", "tpot_ms", "prompt_len",
-            "live_cache_tokens", "preemptions", "swaps", "prefix_hit_blocks", "cow_copies",
+            "live_cache_tokens", "preemptions", "swaps", "retries", "prefix_hit_blocks",
+            "cow_copies",
         ] {
             assert_eq!(j.get(key), jf.get(key), "field {key} diverged between v1 and v2");
         }
@@ -504,6 +507,7 @@ mod tests {
         assert_eq!(j.get("finish").unwrap().as_str(), Some("length"));
         assert_eq!(j.get("preemptions").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("swaps").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("retries").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("prefix_hit_blocks").unwrap().as_usize(), Some(6));
         assert_eq!(j.get("cow_copies").unwrap().as_usize(), Some(2));
     }
@@ -520,6 +524,7 @@ mod tests {
             live_cache_tokens: 0,
             preemptions: 0,
             swaps: 0,
+            retries: 0,
             cache_stats: Default::default(),
         };
         let j = Json::parse(&WireResponse(out).to_line()).unwrap();

@@ -17,9 +17,12 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
 };
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -32,16 +35,37 @@ use crate::scheduler::{
 };
 
 /// Per-server wire defaults (a submit line may override `stream`;
-/// `priority` applies to requests that do not name one).
+/// `priority` applies to requests that do not name one) plus the
+/// connection-hardening knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeOpts {
     pub default_stream: bool,
     pub default_priority: Priority,
+    /// Longest inbound line the server will buffer. A peer that exceeds
+    /// it gets one clean `{"error": ...}` line and the connection is
+    /// closed — the rest of the oversized line is unrecoverable framing.
+    pub max_line_bytes: usize,
+    /// Per-connection read timeout while WAITING for a request line.
+    /// A peer that trickles bytes slower than this (slow loris) is
+    /// answered with an error line and disconnected. `None` = wait
+    /// forever (the pre-hardening behavior; tests use it for clients
+    /// that legitimately sit idle).
+    pub read_timeout: Option<Duration>,
+    /// Concurrent-connection cap. Connections beyond it are shed AT
+    /// ACCEPT with a clean error line, protecting the live ones from
+    /// thread/file-descriptor exhaustion.
+    pub max_connections: usize,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        ServeOpts { default_stream: false, default_priority: Priority::Normal }
+        ServeOpts {
+            default_stream: false,
+            default_priority: Priority::Normal,
+            max_line_bytes: 1 << 20,
+            read_timeout: None,
+            max_connections: 1024,
+        }
     }
 }
 
@@ -63,6 +87,16 @@ pub enum EngineMsg {
     },
     Abort {
         id: u64,
+        ack: Sender<bool>,
+    },
+    /// Begin graceful shutdown: the session stops accepting submits
+    /// (they fail fast with a clean error), live requests keep decoding
+    /// until they drain or `deadline` elapses — at the deadline the
+    /// stragglers are cancelled. The ack fires when the loop exits:
+    /// `true` = everything drained on its own, `false` = the deadline
+    /// forced cancellations.
+    Shutdown {
+        deadline: Duration,
         ack: Sender<bool>,
     },
 }
@@ -98,6 +132,20 @@ impl EngineHandle {
             .send(EngineMsg::Abort { id, ack: atx })
             .map_err(|_| anyhow::anyhow!("engine loop gone"))?;
         arx.recv().context("engine loop dropped the abort")
+    }
+
+    /// Gracefully shut the engine down: new submits are rejected
+    /// immediately, live requests drain to completion (their streams end
+    /// with a real `finished` line), and whatever outlasts `deadline` is
+    /// cancelled. Blocks until the engine loop has exited and every
+    /// event sink is flushed and closed. `Ok(true)` = drained cleanly,
+    /// `Ok(false)` = the deadline forced cancellations.
+    pub fn shutdown(&self, deadline: Duration) -> Result<bool> {
+        let (atx, arx) = channel();
+        self.tx
+            .send(EngineMsg::Shutdown { deadline, ack: atx })
+            .map_err(|_| anyhow::anyhow!("engine loop gone"))?;
+        arx.recv().context("engine loop dropped the shutdown ack")
     }
 
     /// Legacy blocking one-shot: submit and wait for the terminal output.
@@ -202,11 +250,16 @@ pub fn run_engine_loop<B: DecodeBackend>(
 ) -> Result<()> {
     let mut sinks: HashMap<u64, Sink<B>> = HashMap::new();
     let mut disconnected = false;
+    // Armed by EngineMsg::Shutdown: the drain deadline plus every caller
+    // waiting on the ack (concurrent shutdowns coalesce onto the
+    // EARLIEST deadline; all of them are acked when the loop exits).
+    let mut shutdown: Option<(Instant, Vec<Sender<bool>>)> = None;
     loop {
         // Drain the inbox without blocking while there is work; block when
-        // idle to avoid spinning.
+        // idle to avoid spinning. Never block once shutdown is armed —
+        // the loop must keep watching the drain deadline.
         loop {
-            let msg = if session.is_idle() && !disconnected {
+            let msg = if session.is_idle() && !disconnected && shutdown.is_none() {
                 match rx.recv() {
                     Ok(m) => Some(m),
                     Err(_) => {
@@ -254,7 +307,42 @@ pub fn run_engine_loop<B: DecodeBackend>(
                     }
                     let _ = ack.send(ok);
                 }
+                Some(EngineMsg::Shutdown { deadline, ack }) => {
+                    session.begin_shutdown();
+                    let end = Instant::now() + deadline;
+                    match &mut shutdown {
+                        Some((e, acks)) => {
+                            *e = (*e).min(end);
+                            acks.push(ack);
+                        }
+                        None => shutdown = Some((end, vec![ack])),
+                    }
+                }
                 None => break,
+            }
+        }
+        if let Some((end, _)) = &shutdown {
+            let drained = session.is_idle();
+            if drained || Instant::now() >= *end {
+                if !drained {
+                    log::warn!(
+                        "shutdown deadline passed with {} live requests — cancelling",
+                        session.pending() + session.running()
+                    );
+                    for id in session.with_scheduler(|s| s.live_ids()) {
+                        session.cancel(RequestId(id));
+                    }
+                }
+                // flush anything routed this round, then close every sink
+                // BEFORE acking, so by the time shutdown() returns each
+                // streaming connection has seen its stream end
+                deliver(&session, &mut sinks);
+                drop(sinks);
+                let (_, acks) = shutdown.take().expect("shutdown just matched");
+                for ack in acks {
+                    let _ = ack.send(drained);
+                }
+                return Ok(());
             }
         }
         // (submit-time rejections were already delivered inline above)
@@ -277,6 +365,25 @@ pub fn spawn_sim_engine(
 ) -> Result<(EngineHandle, std::thread::JoinHandle<()>)> {
     let (tx, rx) = channel();
     let session = Session::new_sim(cfg);
+    let join = std::thread::Builder::new()
+        .name("engine-loop".into())
+        .spawn(move || {
+            if let Err(e) = run_engine_loop(session, rx) {
+                log::error!("engine loop died: {e:#}");
+            }
+        })?;
+    Ok((EngineHandle { tx }, join))
+}
+
+/// Spawn the sim engine loop with a deterministic fault injector wrapped
+/// around the backend (see [`crate::runtime::FaultPlan`]). What
+/// `serve --backend sim --faults SPEC` and the chaos tests run.
+pub fn spawn_sim_engine_faulty(
+    cfg: SchedConfig,
+    plan: crate::runtime::FaultPlan,
+) -> Result<(EngineHandle, std::thread::JoinHandle<()>)> {
+    let (tx, rx) = channel();
+    let session = Session::new_sim_faulty(cfg, plan);
     let join = std::thread::Builder::new()
         .name("engine-loop".into())
         .spawn(move || {
@@ -326,31 +433,187 @@ pub fn spawn_engine(
     }
 }
 
-/// Accept loop: NDJSON over TCP, one thread per connection.
-pub fn serve_forever(
+/// Cloneable stop signal for [`serve_until`]: trigger it from any thread
+/// and the accept loop returns after its next poll tick.
+#[derive(Clone, Default)]
+pub struct ShutdownFlag(Arc<AtomicBool>);
+
+impl ShutdownFlag {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn trigger(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_triggered(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Decrements the live-connection count when its thread exits, however
+/// the connection ends (clean close, error, panic unwind).
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Accept loop: NDJSON over TCP, one thread per connection. Keeps
+/// accepting until `stop` is triggered; a transient accept failure
+/// (EMFILE, ECONNABORTED, ...) is logged and backed off, never fatal —
+/// one bad accept must not take down every established connection.
+pub fn serve_until(
     listener: TcpListener,
     handle: EngineHandle,
     opts: ServeOpts,
+    stop: ShutdownFlag,
 ) -> Result<()> {
     log::info!("listening on {}", listener.local_addr()?);
-    for conn in listener.incoming() {
-        let conn = conn?;
+    // Nonblocking so the loop can poll the stop flag between accepts.
+    listener.set_nonblocking(true)?;
+    let live = Arc::new(AtomicUsize::new(0));
+    while !stop.is_triggered() {
+        let (conn, _) = match listener.accept() {
+            Ok(c) => c,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+            Err(e) => {
+                log::warn!("accept failed: {e} — backing off");
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        // accepted sockets can inherit the listener's nonblocking mode
+        if let Err(e) = conn.set_nonblocking(false) {
+            log::warn!("set_nonblocking failed: {e}");
+            continue;
+        }
+        if live.fetch_add(1, Ordering::SeqCst) >= opts.max_connections {
+            live.fetch_sub(1, Ordering::SeqCst);
+            let mut conn = conn;
+            let _ = writeln!(conn, "{}", error_line("server at connection capacity"));
+            continue;
+        }
+        let guard = ConnGuard(Arc::clone(&live));
         let h = handle.clone();
         std::thread::spawn(move || {
+            let _guard = guard;
             if let Err(e) = handle_conn(conn, h, opts) {
                 log::debug!("connection closed: {e:#}");
             }
         });
     }
+    log::info!("accept loop stopped");
     Ok(())
+}
+
+/// Accept loop that never stops (CLI default): [`serve_until`] with a
+/// flag nobody triggers.
+pub fn serve_forever(
+    listener: TcpListener,
+    handle: EngineHandle,
+    opts: ServeOpts,
+) -> Result<()> {
+    serve_until(listener, handle, opts, ShutdownFlag::new())
+}
+
+/// One inbound read on a hardened connection.
+enum ReadLine {
+    Line(String),
+    Eof,
+    /// The line exceeded `max_line_bytes`; its excess was consumed but
+    /// NOT buffered (a peer cannot make the server hold its flood).
+    TooLong,
+    /// The socket's read timeout elapsed mid-wait (slow loris).
+    TimedOut,
+}
+
+/// Read one `\n`-terminated line without ever buffering more than
+/// `max_bytes` of it — the bounded replacement for `BufRead::lines()`,
+/// which grows its line buffer to whatever the peer sends.
+fn read_bounded_line(
+    reader: &mut BufReader<TcpStream>,
+    max_bytes: usize,
+) -> std::io::Result<ReadLine> {
+    let mut line: Vec<u8> = Vec::new();
+    let mut overflowed = false;
+    loop {
+        let buf = match reader.fill_buf() {
+            Ok(b) => b,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Ok(ReadLine::TimedOut);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        if buf.is_empty() {
+            // EOF; an unterminated final line still gets parsed
+            return Ok(match (overflowed, line.is_empty()) {
+                (true, _) => ReadLine::TooLong,
+                (false, true) => ReadLine::Eof,
+                (false, false) => ReadLine::Line(String::from_utf8_lossy(&line).into_owned()),
+            });
+        }
+        match buf.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if !overflowed {
+                    line.extend_from_slice(&buf[..pos]);
+                }
+                reader.consume(pos + 1);
+                if overflowed || line.len() > max_bytes {
+                    return Ok(ReadLine::TooLong);
+                }
+                let mut s = String::from_utf8_lossy(&line).into_owned();
+                if s.ends_with('\r') {
+                    s.pop();
+                }
+                return Ok(ReadLine::Line(s));
+            }
+            None => {
+                let n = buf.len();
+                if !overflowed {
+                    line.extend_from_slice(buf);
+                    if line.len() > max_bytes {
+                        overflowed = true;
+                        line = Vec::new(); // stop holding the flood
+                    }
+                }
+                reader.consume(n);
+            }
+        }
+    }
 }
 
 fn handle_conn(stream: TcpStream, handle: EngineHandle, opts: ServeOpts) -> Result<()> {
     let peer = stream.peer_addr()?;
+    stream.set_read_timeout(opts.read_timeout)?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_bounded_line(&mut reader, opts.max_line_bytes)? {
+            ReadLine::Line(l) => l,
+            ReadLine::Eof => break,
+            ReadLine::TooLong => {
+                // answer cleanly, then hang up: the rest of the oversized
+                // line is unrecoverable framing
+                let msg = format!("line exceeds {} bytes", opts.max_line_bytes);
+                writeln!(writer, "{}", error_line(&msg))?;
+                anyhow::bail!("peer {peer} sent an oversized line");
+            }
+            ReadLine::TimedOut => {
+                let _ = writeln!(writer, "{}", error_line("read timeout"));
+                anyhow::bail!("peer {peer} hit the read timeout");
+            }
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -418,6 +681,7 @@ fn handle_conn(stream: TcpStream, handle: EngineHandle, opts: ServeOpts) -> Resu
                         live_cache_tokens: 0,
                         preemptions: 0,
                         swaps: 0,
+                        retries: 0,
                         cache_stats: Default::default(),
                     }
                 });

@@ -1,0 +1,481 @@
+//! Chaos suite: scheduler recovery under deterministic fault injection.
+//!
+//! Every test runs a faulted session against a fault-free twin (same
+//! prompts, same config, empty [`FaultPlan`]) and asserts the recovery
+//! invariants the scheduler claims: every submitted request terminates
+//! with exactly ONE `Finished` event, transiently-faulted survivors are
+//! bit-identical to the twin, terminally-failed requests keep their
+//! partial tokens (a prefix of the twin's output) and release every
+//! arena page and swap byte they held.
+
+use paged_eviction::api::{RequestBuilder, RequestHandle, SeqEvent, Session};
+use paged_eviction::runtime::{FaultPlan, FaultyBackend, SimBackend};
+use paged_eviction::scheduler::{FinishReason, Request, RequestOutput, SchedConfig, Scheduler};
+use paged_eviction::util::rng::Pcg32;
+
+type FaultySession = Session<FaultyBackend<SimBackend>>;
+type FaultyHandle = RequestHandle<FaultyBackend<SimBackend>>;
+
+/// Hard-capacity watermarks, no swap, no prefix cache: the exact-
+/// arithmetic baseline (individual tests open features up).
+fn cfg(page: usize, conc: usize, arena_blocks: usize) -> SchedConfig {
+    SchedConfig {
+        model: "sim".into(),
+        page_size: page,
+        max_concurrency: conc,
+        max_live_blocks: arena_blocks,
+        watermark_low: 1.0,
+        watermark_high: 1.0,
+        swap_bytes: 0,
+        prefix_cache: false,
+        ..SchedConfig::default()
+    }
+}
+
+fn rand_prompt(rng: &mut Pcg32, len: usize) -> Vec<u32> {
+    (0..len).map(|_| rng.below(200)).collect()
+}
+
+fn finished_of(events: &[SeqEvent]) -> Option<RequestOutput> {
+    events.iter().find_map(|e| match e {
+        SeqEvent::Finished(o) => Some(o.clone()),
+        _ => None,
+    })
+}
+
+fn n_finished(events: &[SeqEvent]) -> usize {
+    events
+        .iter()
+        .filter(|e| matches!(e, SeqEvent::Finished(_)))
+        .count()
+}
+
+/// Drive a session to idle, draining every handle's events as they come.
+fn run_session(session: &FaultySession, handles: &[FaultyHandle]) -> Vec<Vec<SeqEvent>> {
+    let mut streams: Vec<Vec<SeqEvent>> = vec![Vec::new(); handles.len()];
+    while !session.is_idle() {
+        session.step().unwrap();
+        for (h, s) in handles.iter().zip(streams.iter_mut()) {
+            s.extend(h.drain());
+        }
+    }
+    for (h, s) in handles.iter().zip(streams.iter_mut()) {
+        s.extend(h.drain());
+    }
+    streams
+}
+
+/// One request spec: (prompt, max_new_tokens, budget, policy).
+type Spec = (Vec<u32>, usize, usize, &'static str);
+
+fn submit_all(session: &FaultySession, specs: &[Spec]) -> Vec<FaultyHandle> {
+    specs
+        .iter()
+        .map(|(p, gen, budget, pol)| {
+            session
+                .submit(
+                    RequestBuilder::new(p.clone())
+                        .max_new_tokens(*gen)
+                        .budget(*budget)
+                        .policy(*pol),
+                )
+                .unwrap()
+        })
+        .collect()
+}
+
+/// The fault-matrix driver: run `specs` under `plan` and under an empty
+/// plan (the twin), check the universal invariants, and hand back the
+/// faulted session + streams + twin outputs for class-specific asserts.
+fn run_twinned(
+    cfg: &SchedConfig,
+    plan: FaultPlan,
+    specs: &[Spec],
+) -> (FaultySession, Vec<Vec<SeqEvent>>, Vec<RequestOutput>) {
+    let twin = Session::new_sim_faulty(cfg.clone(), FaultPlan::new());
+    let twin_handles = submit_all(&twin, specs);
+    let twin_streams = run_session(&twin, &twin_handles);
+    let twin_outs: Vec<RequestOutput> = twin_streams
+        .iter()
+        .map(|s| finished_of(s).expect("twin stream must terminate in Finished"))
+        .collect();
+    assert_eq!(twin.with_scheduler(|s| s.arena().used()), 0, "twin leaks");
+
+    let run = Session::new_sim_faulty(cfg.clone(), plan);
+    let handles = submit_all(&run, specs);
+    let streams = run_session(&run, &handles);
+
+    for (i, (stream, twin_out)) in streams.iter().zip(&twin_outs).enumerate() {
+        assert_eq!(
+            n_finished(stream),
+            1,
+            "req {}: every request terminates with exactly one Finished",
+            i + 1
+        );
+        let out = finished_of(stream).unwrap();
+        if out.finish == FinishReason::Error {
+            assert!(
+                twin_out.tokens.starts_with(&out.tokens),
+                "req {}: a failed request keeps a bit-identical token prefix \
+                 (got {:?}, twin {:?})",
+                i + 1,
+                out.tokens,
+                twin_out.tokens
+            );
+        } else {
+            assert_eq!(
+                out.tokens,
+                twin_out.tokens,
+                "req {}: survivor must be bit-identical to the fault-free twin",
+                i + 1
+            );
+            assert_eq!(out.finish, twin_out.finish, "req {}", i + 1);
+        }
+    }
+    assert_eq!(
+        run.with_scheduler(|s| s.arena().used()),
+        0,
+        "the faulted arena must drain to zero"
+    );
+    assert_eq!(
+        run.with_scheduler(|s| s.swap_pool().used_bytes()),
+        0,
+        "no swap bytes stranded"
+    );
+    (run, streams, twin_outs)
+}
+
+fn ample_specs(seed: u64) -> Vec<Spec> {
+    let mut rng = Pcg32::new(seed);
+    vec![
+        (rand_prompt(&mut rng, 33), 12, 16, "paged"),
+        (rand_prompt(&mut rng, 48), 9, 24, "streaming"),
+        (rand_prompt(&mut rng, 21), 15, 16, "inverse_key_norm"),
+        (rand_prompt(&mut rng, 27), 11, 16, "keydiff"),
+    ]
+}
+
+/// Two long requests that cannot both fit 36 blocks: the forced-
+/// preemption workload the nosnap/norestore classes need.
+fn pressure_specs(seed: u64) -> Vec<Spec> {
+    let mut rng = Pcg32::new(seed);
+    vec![
+        (rand_prompt(&mut rng, 64), 24, 16, "full"),
+        (rand_prompt(&mut rng, 64), 24, 16, "full"),
+    ]
+}
+
+/// MATRIX CLASS 1 — transient decode error: recovered by suspend-and-
+/// retry, the survivor is bit-identical and the retry is accounted.
+#[test]
+fn matrix_transient_decode_error_recovers_bit_identical() {
+    let (run, streams, _) = run_twinned(
+        &cfg(4, 4, 10_000),
+        FaultPlan::new().transient_at(2, 3),
+        &ample_specs(42),
+    );
+    let counts = run.with_scheduler(|s| s.backend().fault_counts());
+    assert_eq!(counts.transient, 1, "exactly the scripted fault fired");
+    assert_eq!(run.with_scheduler(|s| s.fault_retries), 1);
+    assert_eq!(run.with_scheduler(|s| s.quarantined), 0);
+    let out = finished_of(&streams[1]).unwrap();
+    assert_eq!(out.retries, 1, "the retry surfaces on the request output");
+    assert!(
+        streams[1].iter().any(|e| matches!(e, SeqEvent::Preempted { .. })),
+        "a retry rides the preemption machinery (and its events)"
+    );
+}
+
+/// MATRIX CLASS 2 — terminal decode error: that request retires as
+/// `Error` keeping its partial tokens; everyone else is untouched.
+#[test]
+fn matrix_terminal_decode_error_fails_one_request_cleanly() {
+    let (run, streams, twin_outs) = run_twinned(
+        &cfg(4, 4, 10_000),
+        FaultPlan::new().terminal_at(3, 2),
+        &ample_specs(43),
+    );
+    let counts = run.with_scheduler(|s| s.backend().fault_counts());
+    assert_eq!(counts.terminal, 1);
+    let out = finished_of(&streams[2]).unwrap();
+    assert_eq!(out.finish, FinishReason::Error, "lane 3 dies terminally");
+    assert_eq!(
+        out.tokens.len(),
+        2,
+        "prefill token + decode attempt 1 survive; attempt 2 killed it"
+    );
+    assert_eq!(
+        run.with_scheduler(|s| s.quarantined),
+        0,
+        "a terminal backend error is not a quarantine"
+    );
+    // the other three all completed normally
+    for (i, s) in streams.iter().enumerate() {
+        if i != 2 {
+            assert_eq!(finished_of(s).unwrap().finish, twin_outs[i].finish);
+        }
+    }
+}
+
+/// MATRIX CLASS 3 — whole-batch failure: every running sequence errors
+/// at once, every one retries, all outputs stay bit-identical.
+#[test]
+fn matrix_whole_batch_failure_retries_everyone_losslessly() {
+    let (run, _, _) = run_twinned(
+        &cfg(4, 4, 10_000),
+        FaultPlan::new().batch_fail_at(3),
+        &ample_specs(44),
+    );
+    let counts = run.with_scheduler(|s| s.backend().fault_counts());
+    assert_eq!(counts.batch_failures, 1);
+    assert_eq!(
+        run.with_scheduler(|s| s.fault_retries),
+        4,
+        "all four running sequences retried the failed round"
+    );
+    assert_eq!(run.with_scheduler(|s| s.quarantined), 0);
+}
+
+/// MATRIX CLASS 4 — snapshot refusal under memory pressure: every
+/// preemption victim is forced down the recompute path, which must be
+/// bit-identical to the twin's swap-restore path.
+#[test]
+fn matrix_snapshot_refusal_forces_bit_identical_recompute() {
+    let config = SchedConfig { swap_bytes: 16 << 20, ..cfg(4, 2, 36) };
+    let (run, _, _) = run_twinned(
+        &config,
+        FaultPlan::new().refuse_snapshots(),
+        &pressure_specs(45),
+    );
+    let counts = run.with_scheduler(|s| s.backend().fault_counts());
+    assert!(
+        counts.snapshot_refusals >= 1,
+        "36 blocks force preemption, so the refusal must fire"
+    );
+    let (swap_outs, preemptions) = run.with_scheduler(|s| (s.swap_outs, s.preemptions));
+    assert_eq!(swap_outs, 0, "nothing can park: every victim recomputes");
+    assert!(preemptions >= 1);
+}
+
+/// MATRIX CLASS 5 — restore failure: the parked snapshot's restore
+/// errors, the scheduler falls back to recompute-and-replay, outputs
+/// stay bit-identical and no swap bytes strand.
+#[test]
+fn matrix_restore_failure_falls_back_to_recompute() {
+    let config = SchedConfig { swap_bytes: 16 << 20, ..cfg(4, 2, 36) };
+    let (run, _, _) = run_twinned(
+        &config,
+        FaultPlan::new().fail_restores(2),
+        &pressure_specs(46),
+    );
+    let (counts, swap_outs) =
+        run.with_scheduler(|s| (s.backend().fault_counts(), s.swap_outs));
+    assert!(swap_outs >= 1, "victims must actually park for restores to fail");
+    assert!(counts.restore_failures >= 1, "the injected restore failure fired");
+}
+
+/// Retry budget exhaustion: with a zero budget the FIRST transient error
+/// quarantines the request as `Error` instead of retrying.
+#[test]
+fn retry_budget_exhaustion_quarantines_as_error() {
+    let config = SchedConfig { max_transient_retries: 0, ..cfg(4, 2, 10_000) };
+    let specs = ample_specs(47)[..2].to_vec();
+    let (run, streams, _) =
+        run_twinned(&config, FaultPlan::new().transient_at(1, 2), &specs);
+    let out = finished_of(&streams[0]).unwrap();
+    assert_eq!(out.finish, FinishReason::Error);
+    assert_eq!(out.retries, 0, "no budget means no retries were consumed");
+    assert_eq!(run.with_scheduler(|s| s.quarantined), 1);
+    assert_eq!(run.with_scheduler(|s| s.fault_retries), 0);
+}
+
+/// Circuit breaker: a poison request whose decode fails on EVERY attempt
+/// keeps its lane across swap restores, so the consecutive-failure streak
+/// accumulates across suspensions and quarantines it with retry budget
+/// to spare — instead of grinding the batch forever.
+#[test]
+fn circuit_breaker_quarantines_poison_request_across_swap_restores() {
+    let config = SchedConfig { swap_bytes: 16 << 20, ..cfg(4, 2, 10_000) };
+    let specs = ample_specs(48)[..1].to_vec();
+    let (run, streams, _) =
+        run_twinned(&config, FaultPlan::new().transient_from(1, 2), &specs);
+    let out = finished_of(&streams[0]).unwrap();
+    assert_eq!(out.finish, FinishReason::Error);
+    assert_eq!(
+        out.tokens.len(),
+        2,
+        "prefill + one clean decode attempt survive the quarantine"
+    );
+    // streak limit 4: failures at attempts 2..=5, the first three retry
+    // (each a park + restore), the fourth trips the breaker
+    assert_eq!(out.retries, 3, "breaker fired with retry budget (8) to spare");
+    assert_eq!(out.swaps, 3, "each retry parked and restored a snapshot");
+    assert_eq!(run.with_scheduler(|s| (s.fault_retries, s.quarantined)), (3, 1));
+    assert_eq!(run.with_scheduler(|s| s.backend().fault_counts()).transient, 4);
+}
+
+/// The recompute escape hatch: with swap disabled a retry re-prefills and
+/// gets a FRESH lane — exactly like a brand-new request to the backend —
+/// so a per-lane persistent fault clears and the request completes
+/// bit-identically. (The breaker above is for faults that follow the
+/// request; this is for faults that follow the backend slot.)
+#[test]
+fn transient_recovery_via_recompute_gets_a_fresh_lane() {
+    let specs = ample_specs(49)[..1].to_vec();
+    let (run, streams, twin_outs) =
+        run_twinned(&cfg(4, 2, 10_000), FaultPlan::new().transient_from(1, 2), &specs);
+    let out = finished_of(&streams[0]).unwrap();
+    assert_eq!(out.finish, twin_outs[0].finish, "the request fully recovers");
+    assert_eq!(out.tokens, twin_outs[0].tokens);
+    assert_eq!(out.retries, 1, "one retry, then the fresh lane runs clean");
+    assert_eq!(run.with_scheduler(|s| (s.fault_retries, s.quarantined)), (1, 0));
+}
+
+/// SATELLITE (twin-run property): a terminally-failed request releases
+/// its arena pages EXACTLY — shared prefix pages a live sharer holds
+/// survive by refcount, and after the failure the arena matches a twin
+/// run in which the failed request never existed.
+#[test]
+fn terminal_failure_releases_shared_prefix_pages_exactly() {
+    let page = 4;
+    let mut rng = Pcg32::new(50);
+    let prefix = rand_prompt(&mut rng, 4 * page);
+    let mut pa = prefix.clone();
+    pa.extend(rand_prompt(&mut rng, 12));
+    let mut pb = prefix;
+    pb.extend(rand_prompt(&mut rng, 12));
+    let mk_cfg = || SchedConfig { prefix_cache: true, ..cfg(page, 4, 4096) };
+    let submit = |s: &FaultySession, p: &[u32]| {
+        s.submit(
+            RequestBuilder::new(p.to_vec())
+                .max_new_tokens(16)
+                .budget(1024)
+                .policy("full"),
+        )
+        .unwrap()
+    };
+
+    // twin: A alone
+    let twin = Session::new_sim_faulty(mk_cfg(), FaultPlan::new());
+    let ha2 = submit(&twin, &pa);
+    // real run: A + B sharing the 4-page prefix; B (lane 2) dies at
+    // decode attempt 4
+    let run = Session::new_sim_faulty(mk_cfg(), FaultPlan::new().terminal_at(2, 4));
+    let ha1 = submit(&run, &pa);
+    run.step().unwrap(); // A admitted, prefix published
+    twin.step().unwrap();
+    let hb = submit(&run, &pb);
+    let mut b_events: Vec<SeqEvent> = Vec::new();
+    for _ in 0..40 {
+        run.step().unwrap();
+        twin.step().unwrap();
+        b_events.extend(hb.drain());
+        if b_events.iter().any(|e| matches!(e, SeqEvent::Finished(_))) {
+            break;
+        }
+    }
+    let hits = run.with_scheduler(|s| s.prefix_hit_blocks);
+    assert!(hits >= 4, "B must map the shared prefix (got {hits} hits)");
+    assert_eq!(n_finished(&b_events), 1, "exactly one Finished for the failure");
+    let out_b = finished_of(&b_events).unwrap();
+    assert_eq!(out_b.finish, FinishReason::Error);
+    assert_eq!(run.with_scheduler(|s| s.backend().fault_counts()).terminal, 1);
+    // the exact-reclaim property: with B dead, the arena must look as if
+    // B never existed — its private pages freed, the shared prefix pages
+    // A holds still resident (a bad refcount free would panic or leak)
+    let used_run = run.with_scheduler(|s| s.arena().used());
+    let used_twin = twin.with_scheduler(|s| s.arena().used());
+    assert_eq!(used_run, used_twin, "terminal failure must release B exactly");
+    assert!(used_twin > 0, "A is still mid-decode on live pages");
+
+    run.run_until_idle().unwrap();
+    twin.run_until_idle().unwrap();
+    let toks = |h: &FaultyHandle| finished_of(&h.drain()).map(|o| o.tokens);
+    assert_eq!(toks(&ha1), toks(&ha2), "the sharer's output is untouched");
+    assert_eq!(run.with_scheduler(|s| s.arena().used()), 0);
+    assert_eq!(twin.with_scheduler(|s| s.arena().used()), 0);
+}
+
+/// SATELLITE (swap leg): a request that parked in the swap pool, was
+/// restored (keeping its fault lane) and THEN died terminally strands
+/// nothing — swap pool empty, arena drained, survivor bit-identical.
+#[test]
+fn terminal_failure_after_swap_restore_drains_the_swap_pool() {
+    let page = 4;
+    let gen = 24;
+    let mut rng = Pcg32::new(51);
+    let pa = rand_prompt(&mut rng, 64);
+    let pb = rand_prompt(&mut rng, 64);
+    let want_a = {
+        let mut s = Scheduler::new_sim(cfg(page, 1, 10_000));
+        let mut r = Request::new(1, pa.clone(), gen);
+        r.budget = 16;
+        r.policy = "full".into();
+        s.submit(r);
+        s.run_to_completion().unwrap().pop().unwrap().tokens
+    };
+
+    let session = Session::new_sim_faulty(
+        SchedConfig { swap_bytes: 16 << 20, ..cfg(page, 2, 36) },
+        // B (lane 2) is preempted early — 36 blocks cannot hold both —
+        // and survives its park until decode attempt 12 kills it
+        FaultPlan::new().terminal_from(2, 12),
+    );
+    let submit = |p: Vec<u32>| {
+        session
+            .submit(RequestBuilder::new(p).max_new_tokens(gen).budget(16).policy("full"))
+            .unwrap()
+    };
+    let ha = submit(pa);
+    let hb = submit(pb);
+    let streams = run_session(&session, &[ha, hb]);
+
+    assert_eq!(n_finished(&streams[1]), 1);
+    let out_b = finished_of(&streams[1]).unwrap();
+    assert_eq!(out_b.finish, FinishReason::Error);
+    assert!(
+        out_b.swaps >= 1,
+        "B must have parked and restored before dying (got {} swaps)",
+        out_b.swaps
+    );
+    assert!(session.with_scheduler(|s| s.backend().fault_counts()).terminal >= 1);
+    assert_eq!(
+        session.with_scheduler(|s| s.swap_pool().used_bytes()),
+        0,
+        "the dead request's swap bytes are reclaimed"
+    );
+    assert_eq!(session.with_scheduler(|s| s.arena().used()), 0);
+    let out_a = finished_of(&streams[0]).unwrap();
+    assert_eq!(out_a.tokens, want_a, "survivor output bit-identical");
+}
+
+/// Seeded chaos sweep: probabilistic transient faults across a batch.
+/// Whatever the (deterministic) schedule injects, every request
+/// terminates exactly once, survivors are bit-identical to the twin and
+/// the arena drains — the universal invariants under arbitrary chaos.
+#[test]
+fn seeded_chaos_sweep_holds_the_universal_invariants() {
+    let mut rng = Pcg32::new(52);
+    let specs: Vec<Spec> = (0..6)
+        .map(|i| {
+            (
+                rand_prompt(&mut rng, 16 + 4 * i),
+                10 + i,
+                16,
+                ["paged", "streaming", "full"][i % 3],
+            )
+        })
+        .collect();
+    let (run, _, _) = run_twinned(
+        &cfg(4, 6, 10_000),
+        FaultPlan::new().seeded(11).p_transient(150),
+        &specs,
+    );
+    let counts = run.with_scheduler(|s| s.backend().fault_counts());
+    assert!(
+        counts.transient >= 3,
+        "150 permille over ~70 attempts must inject (got {})",
+        counts.transient
+    );
+    assert!(run.with_scheduler(|s| s.fault_retries) >= 1);
+}

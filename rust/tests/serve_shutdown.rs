@@ -1,0 +1,365 @@
+//! Hardened-server suite over REAL TCP: graceful shutdown (streaming
+//! clients drain to `finished`, new submits get a clean error line, the
+//! accept loop and engine thread both exit), deadline-forced shutdown,
+//! the concurrent-connection cap, and a ~200-client stress leg mixing
+//! well-behaved clients with slow-loris peers, oversized lines and
+//! mid-stream disconnects.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use paged_eviction::api::{RequestBuilder, SeqEvent, Session};
+use paged_eviction::runtime::FaultPlan;
+use paged_eviction::scheduler::SchedConfig;
+use paged_eviction::server::serve::{
+    serve_until, spawn_sim_engine, spawn_sim_engine_faulty, EngineHandle, ServeOpts,
+    ShutdownFlag,
+};
+use paged_eviction::util::json::Json;
+
+fn cfg() -> SchedConfig {
+    SchedConfig {
+        model: "sim".into(),
+        page_size: 4,
+        max_concurrency: 4,
+        max_live_blocks: 4096,
+        ..SchedConfig::default()
+    }
+}
+
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        let w = stream.try_clone().unwrap();
+        Client { w, r: BufReader::new(stream) }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.w, "{line}").unwrap();
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        self.r.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "connection closed unexpectedly");
+        Json::parse(line.trim()).unwrap()
+    }
+}
+
+fn event_of(j: &Json) -> Option<&str> {
+    j.get("event").and_then(|v| v.as_str())
+}
+
+/// Spin up serve_until on its own thread; hand back everything the test
+/// needs to drive and later tear it down.
+#[allow(clippy::type_complexity)]
+fn start(
+    handle: EngineHandle,
+    opts: ServeOpts,
+) -> (std::net::SocketAddr, ShutdownFlag, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = ShutdownFlag::new();
+    let flag = stop.clone();
+    let join = std::thread::spawn(move || serve_until(listener, handle, opts, flag));
+    (addr, stop, join)
+}
+
+/// ACCEPTANCE: graceful shutdown. Streaming clients mid-decode drain to
+/// a real `finished` line, a submit during the drain is rejected with a
+/// clean error line (never an `accepted`), and after the drain both the
+/// accept loop and the engine thread exit.
+#[test]
+fn graceful_shutdown_drains_streams_rejects_submits_and_exits() {
+    // stretch every decode round so the drain window is wide enough to
+    // land a mid-drain submit deterministically
+    let plan = (1..=400).fold(FaultPlan::new(), |p, call| p.slow_round(call, 3000));
+    let (handle, engine_join) = spawn_sim_engine_faulty(cfg(), plan).unwrap();
+    let (addr, stop, serve_join) = start(handle.clone(), ServeOpts::default());
+
+    let gen = 80;
+    let mut readers = Vec::new();
+    for i in 0..3 {
+        let (tok_tx, tok_rx) = std::sync::mpsc::channel();
+        readers.push((
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                c.send(&format!(
+                    r#"{{"op": "submit", "prompt": [{}, 2, 3, 4, 5, 6, 7, 8], "max_new_tokens": {gen}, "stream": true}}"#,
+                    i + 1
+                ));
+                assert_eq!(event_of(&c.recv()), Some("accepted"));
+                loop {
+                    let j = c.recv();
+                    match event_of(&j) {
+                        Some("token") => {
+                            let _ = tok_tx.send(());
+                        }
+                        Some("finished") => {
+                            return j.get("tokens").unwrap().as_arr().unwrap().len();
+                        }
+                        Some(_) => {}
+                        None => panic!("stream must end in finished, got {j:?}"),
+                    }
+                }
+            }),
+            tok_rx,
+        ));
+    }
+    // every stream is provably mid-decode before the shutdown begins
+    for (_, rx) in &readers {
+        rx.recv_timeout(Duration::from_secs(30)).expect("stream produced a token");
+    }
+
+    let shut = {
+        let h = handle.clone();
+        std::thread::spawn(move || h.shutdown(Duration::from_secs(60)))
+    };
+    // the drain runs for >= 70 more slowed rounds (~200ms); probe it
+    std::thread::sleep(Duration::from_millis(100));
+    let mut probe = Client::connect(addr);
+    probe.send(r#"{"op": "submit", "prompt": [1, 2, 3], "max_new_tokens": 2, "stream": false}"#);
+    let j = probe.recv();
+    assert_eq!(event_of(&j), None, "a drain-time submit must never be accepted");
+    assert!(j.get("error").is_some(), "rejection is a clean error line: {j:?}");
+
+    assert!(
+        shut.join().unwrap().unwrap(),
+        "every stream finished on its own: the shutdown drained cleanly"
+    );
+    for (reader, _) in readers {
+        assert_eq!(
+            reader.join().unwrap(),
+            gen,
+            "a drained stream delivers its FULL output, not a truncation"
+        );
+    }
+    // the engine thread is gone; stop the accept loop and it joins too
+    engine_join.join().unwrap();
+    stop.trigger();
+    serve_join.join().unwrap().unwrap();
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "the listener must be closed once the accept loop exits"
+    );
+}
+
+/// Deadline-forced shutdown: a request that can never finish is
+/// cancelled at the deadline — `shutdown` reports the forced drain, the
+/// client's stream ends with an honest error (no fake `finished`), and
+/// the engine thread still exits.
+#[test]
+fn shutdown_deadline_cancels_stragglers_and_reports_it() {
+    let (handle, engine_join) = spawn_sim_engine(cfg()).unwrap();
+    let (addr, stop, serve_join) = start(handle.clone(), ServeOpts::default());
+
+    let (tok_tx, tok_rx) = std::sync::mpsc::channel();
+    let reader = std::thread::spawn(move || {
+        let mut c = Client::connect(addr);
+        c.send(
+            r#"{"op": "submit", "prompt": [1,2,3,4,5,6,7,8], "max_new_tokens": 1000000, "budget": 64, "stream": true}"#,
+        );
+        assert_eq!(event_of(&c.recv()), Some("accepted"));
+        let mut kinds: Vec<String> = Vec::new();
+        loop {
+            let j = c.recv();
+            if let Some(k) = event_of(&j) {
+                if k == "token" {
+                    let _ = tok_tx.send(());
+                }
+                kinds.push(k.to_string());
+                if k == "finished" || k == "aborted" {
+                    break;
+                }
+            } else {
+                kinds.push("error".into());
+                break;
+            }
+        }
+        kinds
+    });
+    tok_rx.recv_timeout(Duration::from_secs(30)).expect("mid-decode");
+
+    let drained = handle.shutdown(Duration::from_millis(30)).unwrap();
+    assert!(!drained, "an endless request cannot drain: the deadline forced it");
+    let kinds = reader.join().unwrap();
+    assert!(kinds.iter().all(|k| k != "finished"), "no fake finished line");
+    assert_eq!(
+        kinds.last().map(String::as_str),
+        Some("error"),
+        "the cut stream ends with an honest error, got {kinds:?}"
+    );
+    engine_join.join().unwrap();
+    stop.trigger();
+    serve_join.join().unwrap().unwrap();
+}
+
+/// The concurrent-connection cap sheds at accept with a clean error
+/// line, and a shed slot is reusable as soon as a connection closes.
+#[test]
+fn connection_cap_sheds_and_recovers() {
+    let (handle, engine_join) = spawn_sim_engine(cfg()).unwrap();
+    let opts = ServeOpts { max_connections: 2, ..ServeOpts::default() };
+    let (addr, stop, serve_join) = start(handle.clone(), opts);
+
+    let c1 = Client::connect(addr);
+    let _c2 = Client::connect(addr);
+    // both slots taken (idle but live): the third is shed at accept
+    let mut c3 = Client::connect(addr);
+    let j = c3.recv();
+    assert_eq!(
+        j.get("error").and_then(|v| v.as_str()),
+        Some("server at connection capacity")
+    );
+    // freeing a slot frees the cap
+    drop(c1);
+    std::thread::sleep(Duration::from_millis(200));
+    let mut c4 = Client::connect(addr);
+    c4.send(r#"{"op": "submit", "prompt": [1, 2, 3], "max_new_tokens": 2, "stream": false}"#);
+    assert_eq!(event_of(&c4.recv()), Some("accepted"));
+    assert_eq!(c4.recv().get("tokens").unwrap().as_arr().unwrap().len(), 2);
+
+    stop.trigger();
+    serve_join.join().unwrap().unwrap();
+    handle.shutdown(Duration::from_secs(10)).unwrap();
+    engine_join.join().unwrap();
+}
+
+/// ACCEPTANCE (stress leg): ~200 concurrent clients — 120 well-behaved,
+/// 30 slow-loris trickles, 30 oversized-line floods, 20 mid-stream
+/// disconnects. The server sheds every abuser with a clean error line,
+/// every well-behaved client completes, and the server is still healthy
+/// for new work afterwards.
+#[test]
+fn stress_200_clients_with_loris_floods_and_disconnects() {
+    let (handle, engine_join) = spawn_sim_engine(cfg()).unwrap();
+    let opts = ServeOpts {
+        read_timeout: Some(Duration::from_millis(250)),
+        max_line_bytes: 4096,
+        ..ServeOpts::default()
+    };
+    let (addr, stop, serve_join) = start(handle.clone(), opts);
+
+    let mut threads = Vec::new();
+    for i in 0..120u32 {
+        threads.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            c.send(&format!(
+                r#"{{"op": "submit", "prompt": [{}, {}, 3], "max_new_tokens": 3, "stream": false}}"#,
+                i % 7 + 1,
+                i % 5 + 1
+            ));
+            assert_eq!(event_of(&c.recv()), Some("accepted"));
+            assert_eq!(c.recv().get("tokens").unwrap().as_arr().unwrap().len(), 3);
+        }));
+    }
+    for _ in 0..30 {
+        threads.push(std::thread::spawn(move || {
+            // slow loris: a partial line and then silence
+            let mut c = Client::connect(addr);
+            c.w.write_all(b"{\"op\": ").unwrap();
+            c.w.flush().unwrap();
+            let j = c.recv();
+            assert!(
+                j.get("error").and_then(|v| v.as_str()).unwrap().contains("timeout"),
+                "loris must be disconnected with a clean timeout error: {j:?}"
+            );
+        }));
+    }
+    for _ in 0..30 {
+        threads.push(std::thread::spawn(move || {
+            // a 100 KB line against a 4 KB cap: consumed, never buffered
+            let mut c = Client::connect(addr);
+            let flood = "x".repeat(100_000);
+            // the write may fail midway if the server hangs up first
+            let _ = writeln!(c.w, "{{\"pad\": \"{flood}\"}}");
+            let _ = c.w.flush();
+            let mut line = String::new();
+            if c.r.read_line(&mut line).is_ok() && !line.trim().is_empty() {
+                let j = Json::parse(line.trim()).unwrap();
+                assert!(
+                    j.get("error").and_then(|v| v.as_str()).unwrap().contains("exceeds"),
+                    "flood must get the oversized-line error: {j:?}"
+                );
+            }
+        }));
+    }
+    for _ in 0..20 {
+        threads.push(std::thread::spawn(move || {
+            // vanish mid-stream: the engine must cancel and move on
+            let mut c = Client::connect(addr);
+            c.send(
+                r#"{"op": "submit", "prompt": [1,2,3,4,5,6,7,8], "max_new_tokens": 1000000, "budget": 64, "stream": true}"#,
+            );
+            assert_eq!(event_of(&c.recv()), Some("accepted"));
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    // the server survived all of it and still does real work
+    let mut c = Client::connect(addr);
+    c.send(r#"{"op": "submit", "prompt": [4, 5, 6], "max_new_tokens": 2, "stream": false}"#);
+    assert_eq!(event_of(&c.recv()), Some("accepted"));
+    assert_eq!(c.recv().get("tokens").unwrap().as_arr().unwrap().len(), 2);
+
+    stop.trigger();
+    serve_join.join().unwrap().unwrap();
+    // the vanished clients' cancelled requests drain during shutdown
+    handle.shutdown(Duration::from_secs(30)).unwrap();
+    engine_join.join().unwrap();
+}
+
+/// The `Session::shutdown` API surface itself: draining rejects new
+/// submits, completes live work within the deadline, and a zero
+/// deadline force-cancels with full arena reclaim.
+#[test]
+fn session_shutdown_drains_within_deadline_or_cancels() {
+    let session = Session::new_sim(cfg());
+    let h = session
+        .submit(RequestBuilder::new(vec![1, 2, 3, 4]).max_new_tokens(8))
+        .unwrap();
+    session.step().unwrap();
+    assert!(
+        session.shutdown(Duration::from_secs(30)).unwrap(),
+        "live work drains cleanly inside the deadline"
+    );
+    assert!(
+        session.submit(RequestBuilder::new(vec![1, 2])).is_err(),
+        "a draining session rejects new submits"
+    );
+    assert!(
+        h.drain().iter().any(|e| matches!(e, SeqEvent::Finished(_))),
+        "the drained request really finished"
+    );
+
+    let session = Session::new_sim(cfg());
+    let h = session
+        .submit(
+            RequestBuilder::new(vec![1, 2, 3, 4])
+                .max_new_tokens(1_000_000)
+                .budget(64),
+        )
+        .unwrap();
+    session.step().unwrap();
+    assert!(
+        !session.shutdown(Duration::from_millis(0)).unwrap(),
+        "an endless request forces cancellation"
+    );
+    assert!(
+        h.drain().iter().all(|e| !matches!(e, SeqEvent::Finished(_))),
+        "a force-cancelled request emits no Finished"
+    );
+    assert_eq!(
+        session.with_scheduler(|s| s.arena().used()),
+        0,
+        "forced shutdown reclaims the arena synchronously"
+    );
+}

@@ -58,6 +58,10 @@ CEILINGS_US = {
     # synchronous cancel (blocks back in the arena before it returns).
     # Per-request cost dominated by the sim prefill, hence the slack.
     "cancel_request (submit+prefill+cancel)": 2000.0,
+    # one steady-state scheduler decode round through the FaultyBackend
+    # wrapper with NO plan — the passthrough path must stay ~free, since
+    # it sits on the hot path whenever fault injection is compiled in.
+    "fault_passthrough decode step (no plan)": 500.0,
 }
 
 

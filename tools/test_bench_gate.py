@@ -33,6 +33,7 @@ def healthy_rows():
         "prefix_lookup chain+probe (4 blocks of 16)": 5.0,
         "cow_copy cycle (hit 4 blocks + make_private)": 40.0,
         "cancel_request (submit+prefill+cancel)": 60.0,
+        "fault_passthrough decode step (no plan)": 30.0,
     }
     return rows
 
@@ -81,6 +82,21 @@ class CheckTests(unittest.TestCase):
         del rows[row]
         failures, _ = self.run_check(rows)
         self.assertTrue(any("missing bench row" in f and "cancel_request" in f for f in failures))
+
+    def test_fault_passthrough_ceiling_and_presence_are_gated(self):
+        row = "fault_passthrough decode step (no plan)"
+        rows = healthy_rows()
+        rows[row] = 9999.0
+        failures, _ = self.run_check(rows)
+        self.assertTrue(
+            any("fault_passthrough" in f and "absolute" in f for f in failures)
+        )
+        rows = healthy_rows()
+        del rows[row]
+        failures, _ = self.run_check(rows)
+        self.assertTrue(
+            any("missing bench row" in f and "fault_passthrough" in f for f in failures)
+        )
 
     def test_missing_row_fails_instead_of_skipping(self):
         rows = healthy_rows()
