@@ -12,9 +12,12 @@
 
 mod common;
 
+use std::time::Instant;
+
 use common::{artifacts_dir, bench_args, section};
+use paged_eviction::api::RequestBuilder;
 use paged_eviction::runtime::Engine;
-use paged_eviction::scheduler::{Request, SchedConfig, Scheduler};
+use paged_eviction::scheduler::{default_workers, MultiEngine, Request, SchedConfig, Scheduler};
 use paged_eviction::util::args::ArgSpec;
 use paged_eviction::util::rng::Pcg32;
 use paged_eviction::util::stats::Table;
@@ -129,7 +132,12 @@ fn main() {
                  across requests (on|off). NOTE: the PJRT backend does not \
                  implement prefix caching yet (ROADMAP), so hit/cow read 0 \
                  here until it does — the sim-backed scheduler paths and \
-                 `schedule` CLI exercise the live feature"),
+                 `schedule` CLI exercise the live feature")
+            .opt("workers", &default_workers().to_string(), "scheduler worker \
+                 threads for the sim-backed multi-worker section (per-worker \
+                 utilization + aggregate tok/s over ONE shared arena). The \
+                 PJRT cells above stay single-threaded — that runner is \
+                 thread-pinned; 1 skips the section"),
     );
     let engine = Engine::new(artifacts_dir()).expect("make artifacts first");
     let models = args.get_list("models");
@@ -244,5 +252,91 @@ fn main() {
     println!(
         "\nFig 3(d) TPOT: the tpot_ms@mid column above, per model \
          (paper: paged ~10-12% below full cache)."
+    );
+
+    let workers = args.get_usize("workers").max(1);
+    if workers > 1 {
+        multi_worker_section(
+            workers,
+            budgets[budgets.len() / 2],
+            n_req,
+            plen,
+            gen,
+            conc,
+            arena_blocks,
+            swap_bytes,
+            prefix_cache,
+        );
+    }
+}
+
+/// Sim-backed multi-worker leg: the same closed-loop workload through the
+/// engine's worker shards (one shared arena/swap pool/prefix index), with
+/// the per-worker utilization breakdown the single-scheduler cells cannot
+/// show. Aggregate tok/s here is comparable across `--workers` values —
+/// outputs are bit-identical at any count, so only wall time moves.
+#[allow(clippy::too_many_arguments)] // bench driver: one flag per knob
+fn multi_worker_section(
+    workers: usize,
+    budget: usize,
+    n_req: usize,
+    plen: usize,
+    gen: usize,
+    conc: usize,
+    arena_blocks: usize,
+    swap_bytes: usize,
+    prefix_cache: bool,
+) {
+    section(&format!(
+        "multi-worker engine (sim backend, {workers} workers, paged@b={budget}): \
+         per-worker utilization"
+    ));
+    let total_reqs = n_req.max(2) * workers;
+    let mut engine = MultiEngine::new_sim(SchedConfig {
+        model: "sim".into(),
+        page_size: 16,
+        max_concurrency: conc,
+        max_live_blocks: arena_blocks,
+        swap_bytes,
+        prefix_cache,
+        workers,
+        ..SchedConfig::default()
+    });
+    let mut rng = Pcg32::with_stream(99, budget as u64);
+    let t0 = Instant::now();
+    for _ in 0..total_reqs {
+        let frac = 0.2 + 0.6 * rng.f64();
+        let p = recall::make_prompt(&mut rng, plen, frac);
+        engine
+            .submit_builder(
+                RequestBuilder::new(p.tokens)
+                    .max_new_tokens(gen)
+                    .policy("paged")
+                    .budget(budget),
+            )
+            .expect("submit");
+    }
+    let outs = engine.run_to_completion();
+    let elapsed = t0.elapsed().as_secs_f64();
+    let decoded: usize = outs.iter().map(|o| o.tokens.len()).sum();
+    let (report, _backends) = engine.shutdown(std::time::Duration::from_secs(10));
+    let mut t = Table::new(&["worker", "rounds", "busy", "util%", "tokens", "preempt"]);
+    for w in &report.workers {
+        t.row(vec![
+            format!("{}", w.worker),
+            format!("{}", w.rounds),
+            format!("{}", w.busy_rounds),
+            format!("{:.0}", 100.0 * w.utilization()),
+            format!("{}", w.decoded_tokens),
+            format!("{}", w.preemptions),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "aggregate: {total_reqs} reqs, {:.0} tok/s over {workers} workers \
+         (steals {}, cross preempts {})",
+        decoded as f64 / elapsed.max(1e-9),
+        report.steals,
+        report.cross_preempts,
     );
 }

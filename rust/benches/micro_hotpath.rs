@@ -16,14 +16,17 @@
 
 mod common;
 
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
 use std::time::Instant;
 
 use common::{bench_args, section};
+use paged_eviction::api::RequestBuilder;
 use paged_eviction::eviction::{make_policy, Decision};
 use paged_eviction::kvcache::{prefix_block_hashes, BlockManager, SeqCache};
 use paged_eviction::runtime::model_runner::argmax;
 use paged_eviction::runtime::{FaultyBackend, SimBackend};
-use paged_eviction::scheduler::{Request, SchedConfig, Scheduler};
+use paged_eviction::scheduler::{MultiEngine, Request, SchedConfig, Scheduler, SwapPool};
 use paged_eviction::server::protocol::WireRequest;
 use paged_eviction::util::args::ArgSpec;
 use paged_eviction::util::json::Json;
@@ -217,6 +220,105 @@ fn main() {
     }) * 1e6;
     record(&mut t, &mut rows, "fault_passthrough decode step (no plan)", us);
 
+    // worker_handoff: the multi-worker engine's donation primitive —
+    // steal a queue-tail entry from a loaded worker, accept it on an idle
+    // peer (Scheduler::donate_to = steal_tail + inject). No block traffic
+    // moves: arena, swap pool and memos are shared engine-wide, so the
+    // handoff must stay queue-surgery cheap.
+    let harena = BlockManager::new(4096);
+    harena.set_watermarks(0.7, 0.85);
+    let hswap = Arc::new(SwapPool::new(1 << 24));
+    let hserial = Arc::new(AtomicU64::new(0));
+    let hcfg = SchedConfig {
+        page_size: 16,
+        max_concurrency: 4,
+        max_live_blocks: 4096,
+        ..Default::default()
+    };
+    let mut wa = Scheduler::with_shared(
+        SimBackend::new(16),
+        hcfg.clone(),
+        harena.clone(),
+        hswap.clone(),
+        hserial.clone(),
+    );
+    let mut wb = Scheduler::with_shared(SimBackend::new(16), hcfg, harena, hswap, hserial);
+    for id in 1..=8u64 {
+        let mut r = Request::new(id, (0..32u32).collect(), 8);
+        r.budget = 64;
+        wa.submit(r);
+    }
+    let us = time_it(iters * 100, || {
+        assert!(wa.donate_to(&mut wb), "worker A always has a queued entry");
+        assert!(wb.donate_to(&mut wa), "worker B hands it straight back");
+    }) * 1e6
+        / 2.0;
+    record(&mut t, &mut rows, "worker_handoff (steal_tail + inject)", us);
+
+    // cross_worker_preempt: what the owner of the GLOBAL victim pays when
+    // a gated peer posts reclaim pressure — read the local victim key,
+    // preempt the victim into the shared swap pool, then readmit it
+    // (swap restore + decode round) once the pressure clears. One full
+    // preempt/restore cycle per iteration.
+    let mut psched = Scheduler::new_sim(SchedConfig {
+        page_size: 16,
+        max_concurrency: 4,
+        max_live_blocks: 4096,
+        swap_bytes: 1 << 26,
+        ..Default::default()
+    });
+    let mut preq = Request::new(1, (0..64u32).collect(), iters * 10 + 16);
+    preq.budget = 128;
+    psched.submit(preq);
+    psched.step().expect("admission round");
+    let us = time_it(iters * 10, || {
+        std::hint::black_box(psched.min_victim_key());
+        assert!(psched.preempt_min(), "one sequence is always running");
+        psched.step().expect("restore round");
+        let _ = psched.take_events();
+    }) * 1e6;
+    record(&mut t, &mut rows, "cross_worker_preempt (preempt_min + restore round)", us);
+
+    // engine aggregate decode throughput: the same 2048-token workload
+    // (16 requests x 128 tokens, arena sized so nothing contends — pure
+    // decode scaling) through the multi-worker engine at 1 and 4 workers.
+    // The gate holds 4 workers to >= 2.5x the 1-worker number on machines
+    // with >= 4 cores; the core count rides along in the JSON so
+    // constrained runners skip the ratio check, not the ceilings.
+    let engine_tput = |workers: usize| -> f64 {
+        let mut engine = MultiEngine::new_sim(SchedConfig {
+            page_size: 16,
+            max_concurrency: 4,
+            max_live_blocks: 4096,
+            workers,
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        for i in 0..16u32 {
+            let prompt: Vec<u32> = (0..64u32).map(|k| (k * 7 + i) % 200).collect();
+            engine
+                .submit_builder(
+                    RequestBuilder::new(prompt)
+                        .max_new_tokens(128)
+                        .policy("paged")
+                        .budget(9999),
+                )
+                .expect("submit");
+        }
+        let outs = engine.run_to_completion();
+        let secs = t0.elapsed().as_secs_f64();
+        let toks: usize = outs.iter().map(|o| o.tokens.len()).sum();
+        assert_eq!(toks, 16 * 128, "every request decodes to its cap");
+        let _ = engine.shutdown(std::time::Duration::from_secs(5));
+        secs / toks as f64
+    };
+    let us1 = engine_tput(1) * 1e6;
+    record(&mut t, &mut rows, "engine decode throughput, 1 worker (us/token)", us1);
+    let us4 = engine_tput(4) * 1e6;
+    record(&mut t, &mut rows, "engine decode throughput, 4 workers (us/token)", us4);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    record(&mut t, &mut rows, "cpu cores available", cores as f64);
+
     print!("{}", t.render());
 
     // speedup summary + machine-readable dump
@@ -233,6 +335,10 @@ fn main() {
             rb_m / inc_m.max(1e-9),
         );
     }
+    println!(
+        "engine scaling (1 -> 4 workers): {:.2}x aggregate decode throughput on {cores} core(s)",
+        us1 / us4.max(1e-9),
+    );
 
     let json_path = args.get("json");
     if !json_path.is_empty() {

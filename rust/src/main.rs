@@ -173,7 +173,7 @@ fn spawn_pjrt(
 }
 
 fn cmd_serve() -> Result<()> {
-    use paged_eviction::scheduler::{Priority, SchedConfig};
+    use paged_eviction::scheduler::{default_workers, Priority, SchedConfig};
     use paged_eviction::server::serve::{serve_forever, spawn_sim_engine, ServeOpts};
 
     let args = ArgSpec::new(
@@ -187,6 +187,9 @@ fn cmd_serve() -> Result<()> {
     .opt("port", "7071", "TCP port")
     .opt("page-size", "16", "KV page size (8|16|32)")
     .opt("max-concurrency", "8", "max sequences decoded concurrently")
+    .opt("workers", &default_workers().to_string(), "scheduler worker \
+         threads sharing one arena/swap pool (sim backend; 1 = classic \
+         single-threaded loop)")
     .opt("max-live-blocks", "4096", "global KV block capacity")
     .opt("swap-bytes", "67108864", "host swap pool byte cap \
          (0 = recompute-only preemption)")
@@ -225,6 +228,7 @@ fn cmd_serve() -> Result<()> {
         prefix_cache: parse_on_off("prefix-cache", args.get("prefix-cache"))?,
         default_policy: args.get("policy").to_string(),
         default_budget: args.get_usize("budget"),
+        workers: args.get_usize("workers").max(1),
         ..SchedConfig::default()
     };
     make_policy(&cfg.default_policy)?; // fail fast on a bad default
@@ -254,6 +258,11 @@ fn cmd_serve() -> Result<()> {
             .then(|| std::time::Duration::from_millis(timeout_ms)),
         max_connections: args.get_usize("max-conns"),
     };
+    if args.get("backend") == "pjrt" && cfg.workers > 1 {
+        // PJRT handles are not Send: that engine lives on one thread
+        log::warn!("--backend pjrt is single-threaded; ignoring --workers {}", cfg.workers);
+        cfg.workers = 1;
+    }
     let faults = args.get("faults");
     let (handle, _join) = match (args.get("backend"), faults.is_empty()) {
         ("sim", true) => spawn_sim_engine(cfg)?,
@@ -363,6 +372,13 @@ fn cmd_schedule() -> Result<()> {
     .opt("policy", "paged", "eviction policy")
     .opt("page-size", "8", "KV page size")
     .opt("concurrency", "4", "max concurrent sequences")
+    .opt(
+        "workers",
+        &paged_eviction::scheduler::default_workers().to_string(),
+        "scheduler worker threads sharing one arena/swap pool \
+         (1 = classic single-threaded round loop; outputs are \
+         bit-identical at any count)",
+    )
     .opt("arena-blocks", "96", "shared arena capacity (blocks)")
     .opt("swap-bytes", "67108864", "host swap pool byte cap \
          (0 = recompute-only preemption)")
@@ -396,6 +412,7 @@ fn cmd_schedule() -> Result<()> {
         prefix_cache: parse_on_off("prefix-cache", args.get("prefix-cache"))?,
         default_policy: args.get("policy").to_string(),
         default_budget: args.get_usize("budget"),
+        workers: args.get_usize("workers").max(1),
         ..SchedConfig::default()
     };
     let stream = parse_on_off("stream", args.get("stream"))?;
@@ -420,25 +437,12 @@ fn cmd_schedule() -> Result<()> {
     // the shared system-prompt stand-in: one common prefix, distinct tails
     let shared: Vec<u32> = (0..shared_len).map(|_| rng.below(200)).collect();
 
-    // Always serve through the fault wrapper: with no --faults it runs in
-    // passthrough mode (no plan, no injection — the `fault_passthrough`
-    // bench row pins its overhead), so faulted and clean runs share one
-    // code path and their outputs are directly comparable.
-    let backend = if args.get("faults").is_empty() {
-        FaultyBackend::passthrough(SimBackend::new(cfg.page_size))
-    } else {
-        let plan = FaultPlan::parse(args.get("faults"))?;
-        FaultyBackend::new(SimBackend::new(cfg.page_size), plan)
-    };
-    let session = Session::with_backend(backend, cfg);
-    let mut handles = Vec::new();
-    let mut outs = Vec::new();
-    let mut cancelled: Vec<u64> = Vec::new();
-    let mut next_entry = 0usize;
-    let mut step: u64 = 0;
-    loop {
-        while next_entry < entries.len() && entries[next_entry].at_step <= step {
-            let e = &entries[next_entry];
+    // Materialize every request up front, in entry order: the prompt RNG
+    // stream is consumed identically whatever the worker count or the
+    // submission timing, so digests stay comparable across runs.
+    let mut builders: Vec<Option<RequestBuilder>> = entries
+        .iter()
+        .map(|e| {
             let plen = e.prompt_len.unwrap_or(cli_prompt_len);
             // make_prompt wants an even tail of >= 8 tokens
             let tail_len = plen.saturating_sub(shared_len).max(8) & !1;
@@ -461,6 +465,33 @@ fn cmd_schedule() -> Result<()> {
             if let Some(d) = e.deadline_steps {
                 b = b.deadline_steps(d);
             }
+            Some(b)
+        })
+        .collect();
+
+    if cfg.workers > 1 {
+        return schedule_multi(cfg, &entries, builders, &aborts, stream, args.get("faults"));
+    }
+
+    // Always serve through the fault wrapper: with no --faults it runs in
+    // passthrough mode (no plan, no injection — the `fault_passthrough`
+    // bench row pins its overhead), so faulted and clean runs share one
+    // code path and their outputs are directly comparable.
+    let backend = if args.get("faults").is_empty() {
+        FaultyBackend::passthrough(SimBackend::new(cfg.page_size))
+    } else {
+        let plan = FaultPlan::parse(args.get("faults"))?;
+        FaultyBackend::new(SimBackend::new(cfg.page_size), plan)
+    };
+    let session = Session::with_backend(backend, cfg);
+    let mut handles = Vec::new();
+    let mut outs = Vec::new();
+    let mut cancelled: Vec<u64> = Vec::new();
+    let mut next_entry = 0usize;
+    let mut step: u64 = 0;
+    loop {
+        while next_entry < entries.len() && entries[next_entry].at_step <= step {
+            let b = builders[next_entry].take().expect("each builder is consumed once");
             handles.push(session.submit(b)?);
             next_entry += 1;
         }
@@ -481,24 +512,7 @@ fn cmd_schedule() -> Result<()> {
         for h in &handles {
             for ev in h.drain() {
                 if stream {
-                    let id = h.id().raw();
-                    match &ev {
-                        SeqEvent::Prefilled { ttft_s } => {
-                            println!("event req={id} kind=prefilled ttft_ms={:.3}", ttft_s * 1e3)
-                        }
-                        SeqEvent::Token { tok, step } => {
-                            println!("event req={id} kind=token tok={tok} step={step}")
-                        }
-                        SeqEvent::Preempted { swap } => {
-                            println!("event req={id} kind=preempted swap={swap}")
-                        }
-                        SeqEvent::Resumed => println!("event req={id} kind=resumed"),
-                        SeqEvent::Finished(o) => println!(
-                            "event req={id} kind=finished tokens={} finish={:?}",
-                            o.tokens.len(),
-                            o.finish
-                        ),
-                    }
+                    print_event(h.id().raw(), &ev);
                 }
                 if let SeqEvent::Finished(o) = ev {
                     outs.push(o);
@@ -580,6 +594,194 @@ fn cmd_schedule() -> Result<()> {
     }
     for id in &cancelled {
         println!("  req {id:>3}: cancelled (no output)");
+    }
+    Ok(())
+}
+
+/// One `schedule --stream on` event line (shared by the single- and
+/// multi-worker drivers so the formats cannot diverge).
+fn print_event(id: u64, ev: &paged_eviction::api::SeqEvent) {
+    use paged_eviction::api::SeqEvent;
+    match ev {
+        SeqEvent::Prefilled { ttft_s } => {
+            println!("event req={id} kind=prefilled ttft_ms={:.3}", ttft_s * 1e3)
+        }
+        SeqEvent::Token { tok, step } => {
+            println!("event req={id} kind=token tok={tok} step={step}")
+        }
+        SeqEvent::Preempted { swap } => {
+            println!("event req={id} kind=preempted swap={swap}")
+        }
+        SeqEvent::Resumed => println!("event req={id} kind=resumed"),
+        SeqEvent::Finished(o) => println!(
+            "event req={id} kind=finished tokens={} finish={:?}",
+            o.tokens.len(),
+            o.finish
+        ),
+    }
+}
+
+/// The `schedule` demo driven by the multi-worker engine (`--workers N`):
+/// same request stream, same output lines (summary, digests, per-request
+/// rows), plus worker/steal accounting at the end. Per-request outputs
+/// are bit-identical to `--workers 1` — the CI worker-matrix leg compares
+/// the digests.
+fn schedule_multi(
+    cfg: paged_eviction::scheduler::SchedConfig,
+    entries: &[paged_eviction::workload::trace::TraceEntry],
+    mut builders: Vec<Option<paged_eviction::api::RequestBuilder>>,
+    aborts: &[(u64, u64)],
+    stream: bool,
+    faults: &str,
+) -> Result<()> {
+    use paged_eviction::api::SeqEvent;
+    use paged_eviction::runtime::{FaultCounts, FaultPlan, FaultyBackend, SimBackend};
+    use paged_eviction::scheduler::MultiEngine;
+    use std::time::{Duration, Instant};
+
+    // Same wrapper discipline as the single-worker path: every worker
+    // serves through the fault decorator (passthrough without --faults),
+    // each with its own clone of the ONE plan, so fault lanes number each
+    // worker's prefills independently (per-worker-stable).
+    let plan = if faults.is_empty() { None } else { Some(FaultPlan::parse(faults)?) };
+    let page = cfg.page_size;
+    let mut engine = MultiEngine::new(cfg, move |_| match &plan {
+        None => FaultyBackend::passthrough(SimBackend::new(page)),
+        Some(p) => FaultyBackend::new(SimBackend::new(page), p.clone()),
+    });
+
+    let t0 = Instant::now();
+    let mut outs = Vec::new();
+    let mut cancelled: Vec<u64> = Vec::new();
+    let mut next_entry = 0usize;
+    let mut step: u64 = 0;
+    loop {
+        while next_entry < entries.len() && entries[next_entry].at_step <= step {
+            let b = builders[next_entry].take().expect("each builder is consumed once");
+            engine.submit_builder(b)?;
+            next_entry += 1;
+        }
+        for &(id, at) in aborts {
+            if at == step {
+                let ok = engine.cancel(id);
+                println!("req {id}: {}", if ok { "cancelled" } else { "abort was a no-op" });
+                if ok {
+                    cancelled.push(id);
+                }
+            }
+        }
+        if next_entry >= entries.len() && engine.inflight() == 0 {
+            break;
+        }
+        // One demo "step" = one short event-poll tick; the workers run
+        // their rounds on their own threads. (--abort steps count ticks
+        // of this clock, not scheduler rounds, under --workers > 1.)
+        let tick_end = Instant::now() + Duration::from_millis(2);
+        loop {
+            let left = tick_end.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            let Some((id, ev)) = engine.next_event(left) else { break };
+            if stream {
+                print_event(id, &ev);
+            }
+            if let SeqEvent::Finished(o) = ev {
+                outs.push(o);
+            }
+        }
+        step += 1;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let n_workers = engine.workers();
+    let dropped = engine.swap_pool().dropped();
+    let peak = engine.arena().stats().peak_used;
+    let cap = engine.arena().capacity();
+    let steals = engine.steals();
+    let cross = engine.cross_preempts();
+    let (report, backends) = engine.shutdown(Duration::from_secs(10));
+    outs.extend(report.leftover);
+    outs.sort_by_key(|o| o.id);
+
+    let decoded: u64 = report.workers.iter().map(|w| w.decoded_tokens).sum();
+    let preemptions: u64 = report.workers.iter().map(|w| w.preemptions).sum();
+    let swap_outs: u64 = report.workers.iter().map(|w| w.swap_outs).sum();
+    let swap_restores: u64 = report.workers.iter().map(|w| w.swap_restores).sum();
+    let hit: u64 = report.workers.iter().map(|w| w.prefix_hit_blocks).sum();
+    let cow: u64 = report.workers.iter().map(|w| w.cow_copies).sum();
+    let fault_retries: u64 = report.workers.iter().map(|w| w.fault_retries).sum();
+    let quarantined: u64 = report.workers.iter().map(|w| w.quarantined).sum();
+    let n_cancelled: u64 = report.workers.iter().map(|w| w.cancelled).sum();
+    let tok_s = if elapsed > 0.0 { decoded as f64 / elapsed } else { 0.0 };
+    let mut injected = FaultCounts::default();
+    for b in &backends {
+        let c = b.fault_counts();
+        injected.transient += c.transient;
+        injected.terminal += c.terminal;
+        injected.batch_failures += c.batch_failures;
+        injected.snapshot_refusals += c.snapshot_refusals;
+        injected.restore_failures += c.restore_failures;
+        injected.grow_failures += c.grow_failures;
+    }
+    println!(
+        "{} requests done ({} cancelled): {:.0} tok/s, {} preemptions ({} swapped out, \
+         {} restored, {} dropped), peak arena {} / {} blocks",
+        outs.len(),
+        n_cancelled,
+        tok_s,
+        preemptions,
+        swap_outs,
+        swap_restores,
+        dropped,
+        peak,
+        cap,
+    );
+    println!(
+        "prefix cache: {} prefix-hit blocks, {} cow copies, output digest {:016x}",
+        hit,
+        cow,
+        output_digest(&outs),
+    );
+    println!(
+        "faults: {} injected (transient {}, terminal {}, batch {}, nosnap {}, \
+         norestore {}, nogrow {}), fault retries {}, quarantined {}",
+        injected.total(),
+        injected.transient,
+        injected.terminal,
+        injected.batch_failures,
+        injected.snapshot_refusals,
+        injected.restore_failures,
+        injected.grow_failures,
+        fault_retries,
+        quarantined,
+    );
+    for o in &outs {
+        println!(
+            "  req {:>3}: {:>3} tokens, finish {:?}, ttft {:.2} ms, preempted {}x \
+             (swap-restored {}x), retried {}x",
+            o.id,
+            o.tokens.len(),
+            o.finish,
+            o.ttft_s * 1e3,
+            o.preemptions,
+            o.swaps,
+            o.retries,
+        );
+        println!("digest req={} {:016x}", o.id, output_digest(std::slice::from_ref(o)));
+    }
+    for id in &cancelled {
+        println!("  req {id:>3}: cancelled (no output)");
+    }
+    println!("workers: {n_workers} threads, steals {steals}, cross preempts {cross}");
+    for w in &report.workers {
+        println!(
+            "  worker {}: {} rounds ({} busy, {:.0}% util), {} tokens decoded",
+            w.worker,
+            w.rounds,
+            w.busy_rounds,
+            w.utilization() * 100.0,
+            w.decoded_tokens,
+        );
     }
     Ok(())
 }

@@ -24,6 +24,15 @@
 //! `(seed, lane, attempt)` plus the rule list, so the schedule replays
 //! identically regardless of batch composition or interleaving.
 //!
+//! Under the multi-worker engine (`scheduler::engine`) every worker owns
+//! its OWN `FaultyBackend` built from a clone of the one plan, so lane
+//! numbering is **per-worker-stable**: each worker's lanes count ITS
+//! prefills from 1, unaffected by what other workers admit. A plan
+//! therefore describes the same per-worker schedule at any worker count;
+//! which requests land on which lanes shifts with placement, which is
+//! why cross-worker-count bit-identity is only claimed for transient,
+//! in-budget faults (recovery is lossless wherever it strikes).
+//!
 //! ## Spec grammar (comma-separated, e.g. `"transient@r2s4,batch@6"`)
 //!
 //! | clause            | meaning                                            |
@@ -458,12 +467,23 @@ impl<B: DecodeBackend> DecodeBackend for FaultyBackend<B> {
 
     type Snapshot = FaultSnapshot<B::Snapshot>;
 
+    type PrefillPlan = B::PrefillPlan;
+
     fn set_prefix_cache(&mut self, enabled: bool) {
         self.inner.set_prefix_cache(enabled);
     }
 
     fn prefill_claim(&self, arena: &BlockManager, req: &Request, page_size: usize) -> usize {
         self.inner.prefill_claim(arena, req, page_size)
+    }
+
+    fn prefill_claim_planned(
+        &self,
+        arena: &BlockManager,
+        req: &Request,
+        page_size: usize,
+    ) -> (usize, Option<Self::PrefillPlan>) {
+        self.inner.prefill_claim_planned(arena, req, page_size)
     }
 
     fn prepare_round(&mut self, seq: &mut Self::Seq) -> BlockAlloc {
@@ -477,7 +497,18 @@ impl<B: DecodeBackend> DecodeBackend for FaultyBackend<B> {
         budget: usize,
         policy: Box<dyn EvictionPolicy>,
     ) -> Result<Prefilled<Self::Seq>> {
-        match self.inner.prefill(arena, prompt, budget, policy)? {
+        self.prefill_planned(arena, prompt, budget, policy, None)
+    }
+
+    fn prefill_planned(
+        &mut self,
+        arena: &BlockManager,
+        prompt: &[u32],
+        budget: usize,
+        policy: Box<dyn EvictionPolicy>,
+        plan: Option<&Self::PrefillPlan>,
+    ) -> Result<Prefilled<Self::Seq>> {
+        match self.inner.prefill_planned(arena, prompt, budget, policy, plan)? {
             Prefilled::Ready { seq, logits } => {
                 self.next_lane += 1;
                 Ok(Prefilled::Ready {

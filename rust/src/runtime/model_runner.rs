@@ -460,6 +460,9 @@ mod pjrt {
 
         type Snapshot = NoSwap;
 
+        // The PJRT claim estimate computes nothing a prefill could reuse.
+        type PrefillPlan = ();
+
         fn prefill(
             &mut self,
             arena: &BlockManager,

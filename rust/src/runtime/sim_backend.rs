@@ -74,6 +74,16 @@ impl HostSnapshot for SimSnapshot {
     }
 }
 
+/// Reusable artifact of the admission-time claim scan: the policy's kept
+/// `(position, scores)` stream and the per-entry content keys. Depends
+/// only on the immutable `(prompt, budget, policy)` triple, so the
+/// scheduler parks it on the queue entry and the admitted prefill loads
+/// it instead of re-running the O(prompt) scorer + keep scan.
+pub struct SimPrefillPlan {
+    entries: Vec<(u32, [f32; 3])>,
+    keys: Vec<u64>,
+}
+
 pub struct SimBackend {
     pub page_size: usize,
     /// Toy vocabulary size (logit vector length).
@@ -89,6 +99,11 @@ pub struct SimBackend {
     /// the queue entry against the prefix-index epoch, so gated admission
     /// retries must NOT bump this — pinned in `tests/api_session.rs`.
     claim_calls: std::cell::Cell<u64>,
+    /// Times the O(prompt) prefill policy scan (`kept_entries`) actually
+    /// ran. The claim scan's result rides to the admitted prefill as a
+    /// [`SimPrefillPlan`], so one admission costs ONE scan, not two —
+    /// pinned in `tests/multi_worker.rs`.
+    policy_scans: std::cell::Cell<u64>,
 }
 
 impl SimBackend {
@@ -98,12 +113,19 @@ impl SimBackend {
             vocab: 211,
             prefix_cache: false,
             claim_calls: std::cell::Cell::new(0),
+            policy_scans: std::cell::Cell::new(0),
         }
     }
 
     /// How many times the admission claim estimate was recomputed.
     pub fn claim_calls(&self) -> u64 {
         self.claim_calls.get()
+    }
+
+    /// How many times the O(prompt) prefill policy scan actually ran
+    /// (claim-time scans included; plan-reusing prefills excluded).
+    pub fn policy_scans(&self) -> u64 {
+        self.policy_scans.get()
     }
 
     /// Deterministic importance channels for the token at `pos`. Channel
@@ -134,6 +156,7 @@ impl SimBackend {
         budget: usize,
         policy: &dyn EvictionPolicy,
     ) -> (Vec<(u32, [f32; 3])>, Vec<u64>) {
+        self.policy_scans.set(self.policy_scans.get() + 1);
         let len = prompt.len();
         let mut channels = [
             Vec::with_capacity(len),
@@ -182,6 +205,8 @@ impl DecodeBackend for SimBackend {
 
     type Snapshot = SimSnapshot;
 
+    type PrefillPlan = SimPrefillPlan;
+
     fn set_prefix_cache(&mut self, enabled: bool) {
         self.prefix_cache = enabled;
     }
@@ -191,17 +216,31 @@ impl DecodeBackend for SimBackend {
     /// leading kept blocks already published in the arena's index — those
     /// pages are pinned by refcount, not re-claimed.
     fn prefill_claim(&self, arena: &BlockManager, req: &Request, page_size: usize) -> usize {
+        self.prefill_claim_planned(arena, req, page_size).0
+    }
+
+    /// The full admission charge AND the scan artifact that priced it:
+    /// the kept-entry stream rides back to the scheduler so the admitted
+    /// prefill loads it instead of re-running the policy scan.
+    fn prefill_claim_planned(
+        &self,
+        arena: &BlockManager,
+        req: &Request,
+        page_size: usize,
+    ) -> (usize, Option<SimPrefillPlan>) {
         self.claim_calls.set(self.claim_calls.get() + 1);
         let full = static_prefill_claim(req, page_size);
-        if !self.prefix_cache {
-            return full;
-        }
         let Ok(policy) = make_policy(&req.policy) else {
-            return full; // unknown policy fails at admission anyway
+            return (full, None); // unknown policy fails at admission anyway
         };
         let (entries, keys) = self.kept_entries(&req.prompt, req.budget, policy.as_ref());
-        let hashes = prefix_block_hashes(self.page_size, &entries, &keys);
-        full.saturating_sub(arena.count_leading_hits(&hashes))
+        let claim = if self.prefix_cache {
+            let hashes = prefix_block_hashes(self.page_size, &entries, &keys);
+            full.saturating_sub(arena.count_leading_hits(&hashes))
+        } else {
+            full
+        };
+        (claim, Some(SimPrefillPlan { entries, keys }))
     }
 
     /// Unstructured policies hole-punch tokens inside pages every step:
@@ -224,20 +263,42 @@ impl DecodeBackend for SimBackend {
         budget: usize,
         policy: Box<dyn EvictionPolicy>,
     ) -> Result<Prefilled<SimSeq>> {
+        self.prefill_planned(arena, prompt, budget, policy, None)
+    }
+
+    /// Prefill, loading the claim scan's kept-entry stream from `plan`
+    /// when the scheduler kept one — the plan is a pure memo of
+    /// `kept_entries(prompt, budget, policy)`, so both paths build a
+    /// bit-identical sequence.
+    fn prefill_planned(
+        &mut self,
+        arena: &BlockManager,
+        prompt: &[u32],
+        budget: usize,
+        policy: Box<dyn EvictionPolicy>,
+        plan: Option<&SimPrefillPlan>,
+    ) -> Result<Prefilled<SimSeq>> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         anyhow::ensure!(budget >= self.page_size, "budget below one page");
         let bs = self.page_size;
         let len = prompt.len();
-        let (entries, keys) = self.kept_entries(prompt, budget, policy.as_ref());
+        let scanned;
+        let (entries, keys): (&[(u32, [f32; 3])], &[u64]) = match plan {
+            Some(p) => (&p.entries, &p.keys),
+            None => {
+                scanned = self.kept_entries(prompt, budget, policy.as_ref());
+                (&scanned.0, &scanned.1)
+            }
+        };
         anyhow::ensure!(!entries.is_empty(), "policy kept zero tokens");
 
         // bucket: kept tokens plus two pages of eviction-oscillation slack
         let bucket = (entries.len() + bs - 1) / bs + 2;
         let mut cache = SeqCache::new_shared(bs, bucket, arena);
         let loaded = if self.prefix_cache {
-            cache.try_load_prefill_cached(&entries, &keys, len as u32).map(|_| ())
+            cache.try_load_prefill_cached(entries, keys, len as u32).map(|_| ())
         } else {
-            cache.try_load_prefill(&entries, len as u32)
+            cache.try_load_prefill(entries, len as u32)
         };
         if loaded.is_err() {
             // dropping `cache` returns any partially claimed blocks

@@ -174,6 +174,16 @@ pub trait DecodeBackend {
     /// [`NoSwap`] when the backend cannot produce one.
     type Snapshot: HostSnapshot;
 
+    /// Backend-opaque artifact of the admission-time claim scan that a
+    /// later prefill of the SAME request can reuse instead of recomputing
+    /// (the sim backend stashes the policy's kept-entry stream here — the
+    /// exact scan `prefill_claim` already ran to price the admission).
+    /// Use `()` when the claim computes nothing worth keeping. The
+    /// artifact depends only on the immutable request (prompt, budget,
+    /// policy), so the scheduler keeps it on the queue entry — next to
+    /// the epoch-keyed [`ClaimMemo`] — for the entry's whole queued life.
+    type PrefillPlan;
+
     /// Enable or disable the backend's prefix cache (refcounted shared
     /// prompt pages). Called once by the scheduler from its config;
     /// backends without a prefix cache ignore it.
@@ -187,6 +197,37 @@ pub trait DecodeBackend {
     /// prefill itself is fallible.
     fn prefill_claim(&self, _arena: &BlockManager, req: &Request, page_size: usize) -> usize {
         static_prefill_claim(req, page_size)
+    }
+
+    /// [`DecodeBackend::prefill_claim`] plus the reusable scan artifact:
+    /// backends whose claim estimate already does the prefill policy scan
+    /// return it here so the scheduler can hand it back to
+    /// [`DecodeBackend::prefill_planned`] and the admitted prefill skips
+    /// the recompute. The default computes the plain claim and no
+    /// artifact.
+    fn prefill_claim_planned(
+        &self,
+        arena: &BlockManager,
+        req: &Request,
+        page_size: usize,
+    ) -> (usize, Option<Self::PrefillPlan>) {
+        (self.prefill_claim(arena, req, page_size), None)
+    }
+
+    /// [`DecodeBackend::prefill`] with an optional claim-scan artifact
+    /// from [`DecodeBackend::prefill_claim_planned`] for the same request.
+    /// Backends that honor the plan MUST produce a bit-identical sequence
+    /// either way — the plan is a memo, not an input. The default ignores
+    /// it.
+    fn prefill_planned(
+        &mut self,
+        arena: &BlockManager,
+        prompt: &[u32],
+        budget: usize,
+        policy: Box<dyn EvictionPolicy>,
+        _plan: Option<&Self::PrefillPlan>,
+    ) -> Result<Prefilled<Self::Seq>> {
+        self.prefill(arena, prompt, budget, policy)
     }
 
     /// Make `seq` safe for this round's decode step, called during

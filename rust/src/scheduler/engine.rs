@@ -1,0 +1,694 @@
+//! Multi-worker engine: shard the scheduler's round loop across N worker
+//! threads to saturate the cores, without changing ANY request's output.
+//!
+//! Each worker thread owns a private [`Scheduler`] (no lock on the hot
+//! round loop) over its shard of the request stream. What is shared is
+//! exactly the state the paper's memory model says must be global:
+//!
+//!  - the physical [`BlockManager`] arena — ONE block pool, ONE
+//!    content-hash prefix index, so a prefix published by worker A's
+//!    prefill is a free refcount hit for worker B;
+//!  - the host [`SwapPool`] — a victim parked by one worker restores on
+//!    whichever worker readmits (or receives) it;
+//!  - the admission-serial counter — `(priority, Reverse(admit_serial))`
+//!    victim keys stay globally comparable, so cross-worker preemption
+//!    picks the same victim a single big scheduler would.
+//!
+//! **Placement** is shortest-queue-first: a submitted request goes to the
+//! worker with the smallest (published load + undelivered inbox) count,
+//! ties to the lowest index. Priority buckets are respected per worker by
+//! the scheduler itself.
+//!
+//! **Work stealing**: a worker that finishes a round with backlog donates
+//! queue-TAIL entries of its lowest-priority bucket to workers it
+//! observes idle (published load 0, empty inbox). The tail is the work
+//! the donor would reach last, so no one's head-of-line progress
+//! reorders. Entries carrying a step deadline never move — deadlines are
+//! absolute against the owning worker's round clock. Claim/plan memos,
+//! resume tokens and parked swap snapshots all stay valid across the
+//! move because the arena and swap pool are shared.
+//!
+//! **Cross-worker preemption**: when a worker's admission trips the
+//! watermark/`ArenaDry` with no eligible local victim while OTHER workers
+//! hold the arena, it posts to a shared pressure flag instead of
+//! rejecting (or erroring) the request. Every worker publishes its local
+//! victim key each round; the worker owning the GLOBAL
+//! `(priority, Reverse(admit_serial))`-min victim services the flag by
+//! preempting that victim into the shared swap pool. Pressure is
+//! level-triggered — a still-starved worker simply re-posts next round —
+//! and preemption is lossless (restore-or-replay), so transient
+//! over-preemption can never change an output.
+//!
+//! Per-request outputs are bit-identical regardless of worker count,
+//! placement, steals or cross-worker preemptions (greedy decode is a
+//! pure function of the token history; preemption/replay is lossless) —
+//! pinned by the twin-run matrix in `tests/multi_worker.rs`.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::backend::DecodeBackend;
+use super::request::{Priority, Request, RequestOutput};
+use super::sched::{QueueEntry, SchedConfig, Scheduler};
+use super::swap::SwapPool;
+use crate::api::{RequestBuilder, RequestId, SeqEvent};
+use crate::kvcache::BlockManager;
+
+/// How long an idle worker parks on its inbox before rechecking shared
+/// state (pressure flag, drain deadline).
+const IDLE_PARK: Duration = Duration::from_millis(2);
+
+/// State shared by every worker and the front end. Non-generic so the
+/// scheduler's [`PressureHook`] can reference it without dragging the
+/// backend type into `sched.rs`.
+struct EngineShared {
+    /// Per-worker load (pending + running) published after every round —
+    /// the placement and donation signal.
+    loads: Vec<AtomicUsize>,
+    /// Per-worker count of Submit/Inject messages sent but not yet
+    /// received, so placement sees work the owner has not drained yet.
+    inbox_depth: Vec<AtomicUsize>,
+    /// Per-worker running count published after every round — the
+    /// "can anyone free arena blocks for me?" signal.
+    running: Vec<AtomicUsize>,
+    /// Per-worker local victim key (`None` = nothing running there).
+    victim_keys: Mutex<Vec<Option<(Priority, u64)>>>,
+    /// Level-triggered reclaim flag: a starved worker sets it, the worker
+    /// owning the global victim clears it by preempting.
+    pressure: AtomicUsize,
+    /// Queue entries moved to an idle worker (donation-style stealing).
+    steals: AtomicU64,
+    /// Victims preempted to serve ANOTHER worker's reclaim request.
+    cross_preempts: AtomicU64,
+}
+
+impl EngineShared {
+    fn new(workers: usize) -> EngineShared {
+        EngineShared {
+            loads: (0..workers).map(|_| AtomicUsize::new(0)).collect(),
+            inbox_depth: (0..workers).map(|_| AtomicUsize::new(0)).collect(),
+            running: (0..workers).map(|_| AtomicUsize::new(0)).collect(),
+            victim_keys: Mutex::new(vec![None; workers]),
+            pressure: AtomicUsize::new(0),
+            steals: AtomicU64::new(0),
+            cross_preempts: AtomicU64::new(0),
+        }
+    }
+
+    /// Poison-tolerant lock: victim keys are plain `Copy` data, always
+    /// consistent, so a panicking worker must not wedge its peers.
+    fn keys(&self) -> MutexGuard<'_, Vec<Option<(Priority, u64)>>> {
+        match self.victim_keys.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+}
+
+/// The scheduler's view of the shared engine state (installed via
+/// `Scheduler::set_pressure_hook`): global-running visibility for the
+/// admission/ArenaDry fallbacks plus the reclaim flag.
+pub(crate) struct PressureHook {
+    worker: usize,
+    shared: Arc<EngineShared>,
+}
+
+impl PressureHook {
+    /// Sequences running on OTHER workers right now (post-round
+    /// snapshots — a conservative, level-triggered signal).
+    pub(crate) fn others_running(&self) -> usize {
+        self.shared
+            .running
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != self.worker)
+            .map(|(_, r)| r.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Raise the reclaim flag (idempotent — level-triggered).
+    pub(crate) fn post(&self) {
+        self.shared.pressure.store(1, Ordering::Relaxed);
+    }
+}
+
+/// Control messages a worker drains between rounds.
+enum WorkerMsg<B: DecodeBackend> {
+    Submit(Request),
+    /// A queue entry donated by a loaded peer (work stealing). Boxed:
+    /// entries carry the full resume state and dwarf the other variants.
+    Inject(Box<QueueEntry<B::PrefillPlan>>),
+    Cancel(u64, Sender<bool>),
+    /// Begin draining; cancel whatever is still live at the deadline
+    /// (`None` = drain fully).
+    Shutdown(Option<Instant>),
+}
+
+/// Final per-worker serving counters, returned by
+/// [`MultiEngine::shutdown`] (the scheduler's aggregate metrics, split by
+/// worker, plus round/utilization accounting).
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    pub worker: usize,
+    /// Scheduling rounds this worker ran.
+    pub rounds: u64,
+    /// Rounds that decoded at least one sequence — `busy_rounds / rounds`
+    /// is the per-worker utilization column of `fig3_throughput`.
+    pub busy_rounds: u64,
+    pub decoded_tokens: u64,
+    pub prompt_tokens: u64,
+    pub preemptions: u64,
+    pub swap_outs: u64,
+    pub swap_restores: u64,
+    pub prefix_hit_blocks: u64,
+    pub cow_copies: u64,
+    pub fault_retries: u64,
+    pub quarantined: u64,
+    pub cancelled: u64,
+}
+
+impl WorkerStats {
+    /// Fraction of this worker's rounds that decoded work.
+    pub fn utilization(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.busy_rounds as f64 / self.rounds as f64
+        }
+    }
+}
+
+/// What [`MultiEngine::shutdown`] returns: per-worker stats, the engine
+/// totals, and any terminal outputs that raced the teardown.
+#[derive(Debug)]
+pub struct EngineReport {
+    pub workers: Vec<WorkerStats>,
+    /// Queue entries moved to an idle worker.
+    pub steals: u64,
+    /// Victims preempted for another worker's reclaim request.
+    pub cross_preempts: u64,
+    /// Finished outputs drained from the event channel after the join.
+    pub leftover: Vec<RequestOutput>,
+}
+
+/// One worker thread: a private scheduler plus the glue to its peers.
+struct Worker<B: DecodeBackend> {
+    idx: usize,
+    sched: Scheduler<B>,
+    inbox: Receiver<WorkerMsg<B>>,
+    /// Senders to every peer inbox (`None` at our own index) — the
+    /// donation path.
+    peers: Vec<Option<Sender<WorkerMsg<B>>>>,
+    events: Sender<(u64, SeqEvent)>,
+    shared: Arc<EngineShared>,
+    draining: bool,
+    deadline: Option<Instant>,
+    rounds: u64,
+    busy_rounds: u64,
+}
+
+impl<B: DecodeBackend> Worker<B> {
+    fn run(mut self) -> (WorkerStats, B) {
+        loop {
+            // drain control messages accumulated during the last round
+            loop {
+                match self.inbox.try_recv() {
+                    Ok(msg) => self.handle(msg),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        self.draining = true;
+                        break;
+                    }
+                }
+            }
+            if self.draining {
+                if self.sched.is_idle() {
+                    break;
+                }
+                if self.deadline.is_some_and(|d| Instant::now() >= d) {
+                    // grace expired: cancel everything still live so the
+                    // arena and swap pool drain before the join
+                    for id in self.sched.live_ids() {
+                        self.sched.cancel(id);
+                    }
+                    break;
+                }
+            }
+            if self.sched.is_idle() {
+                self.publish();
+                self.flush_events();
+                if self.shared.pressure.load(Ordering::Relaxed) > 0 {
+                    // nothing running here, but help clear a stale flag
+                    // (all victim keys None => nothing to reclaim)
+                    self.service_pressure();
+                }
+                match self.inbox.recv_timeout(IDLE_PARK) {
+                    Ok(msg) => self.handle(msg),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => self.draining = true,
+                }
+                continue;
+            }
+            self.service_pressure();
+            if let Err(e) = self.sched.step() {
+                log::warn!("worker {}: round failed: {e:#}", self.idx);
+            }
+            self.rounds += 1;
+            if self.sched.running() > 0 {
+                self.busy_rounds += 1;
+            }
+            self.flush_events();
+            self.publish();
+            self.donate();
+        }
+        self.flush_events();
+        // peers must not keep seeing ghost load on a dead worker
+        self.shared.loads[self.idx].store(0, Ordering::Relaxed);
+        self.shared.running[self.idx].store(0, Ordering::Relaxed);
+        self.shared.keys()[self.idx] = None;
+        let stats = WorkerStats {
+            worker: self.idx,
+            rounds: self.rounds,
+            busy_rounds: self.busy_rounds,
+            decoded_tokens: self.sched.total_generated,
+            prompt_tokens: self.sched.total_prompt_tokens,
+            preemptions: self.sched.preemptions,
+            swap_outs: self.sched.swap_outs,
+            swap_restores: self.sched.swap_restores,
+            prefix_hit_blocks: self.sched.prefix_hit_blocks,
+            cow_copies: self.sched.cow_copies,
+            fault_retries: self.sched.fault_retries,
+            quarantined: self.sched.quarantined,
+            cancelled: self.sched.cancelled(),
+        };
+        // hand the backend back so interior counters (sim call tallies,
+        // fault counts) outlive the thread
+        (stats, self.sched.into_backend())
+    }
+
+    fn handle(&mut self, msg: WorkerMsg<B>) {
+        match msg {
+            WorkerMsg::Submit(req) => {
+                self.shared.inbox_depth[self.idx].fetch_sub(1, Ordering::Relaxed);
+                self.sched.submit(req);
+            }
+            WorkerMsg::Inject(entry) => {
+                self.shared.inbox_depth[self.idx].fetch_sub(1, Ordering::Relaxed);
+                self.sched.inject(*entry);
+            }
+            WorkerMsg::Cancel(id, reply) => {
+                let _ = reply.send(self.sched.cancel(id));
+            }
+            WorkerMsg::Shutdown(deadline) => {
+                self.draining = true;
+                self.deadline = deadline;
+            }
+        }
+    }
+
+    fn flush_events(&mut self) {
+        for ev in self.sched.take_events() {
+            // the front end hanging up mid-flight only happens on
+            // teardown; remaining events have no consumer
+            let _ = self.events.send(ev);
+        }
+    }
+
+    fn publish(&self) {
+        self.shared.loads[self.idx]
+            .store(self.sched.pending() + self.sched.running(), Ordering::Relaxed);
+        self.shared.running[self.idx].store(self.sched.running(), Ordering::Relaxed);
+        self.shared.keys()[self.idx] = self.sched.min_victim_key();
+    }
+
+    /// Serve the shared reclaim flag: if OUR local victim is the global
+    /// `(priority, Reverse(admit_serial))` minimum, preempt it into the
+    /// shared swap pool and clear the flag. A stale flag (nothing running
+    /// anywhere) is cleared outright — the poster re-posts while starved.
+    fn service_pressure(&mut self) {
+        if self.shared.pressure.load(Ordering::Relaxed) == 0 {
+            return;
+        }
+        let owner = {
+            let mut keys = self.shared.keys();
+            keys[self.idx] = self.sched.min_victim_key();
+            keys.iter()
+                .enumerate()
+                .filter_map(|(i, k)| k.map(|key| (i, key)))
+                .min_by_key(|&(_, (p, s))| (p, std::cmp::Reverse(s)))
+                .map(|(i, _)| i)
+        };
+        match owner {
+            None => self.shared.pressure.store(0, Ordering::Relaxed),
+            Some(o) if o == self.idx => {
+                if self.sched.preempt_min() {
+                    self.shared.cross_preempts.fetch_add(1, Ordering::Relaxed);
+                    self.shared.pressure.store(0, Ordering::Relaxed);
+                    self.shared.keys()[self.idx] = self.sched.min_victim_key();
+                }
+            }
+            Some(_) => {} // the owning worker will service it
+        }
+    }
+
+    /// Donate queue-tail entries to idle peers. Runs after the round's
+    /// event flush, so a preempted entry's `Preempted` event is already
+    /// in the channel before the thief can emit its `Resumed` —
+    /// per-request event order survives the move.
+    fn donate(&mut self) {
+        if self.draining {
+            // peers may exit any moment; keep our shard local
+            return;
+        }
+        // keep our own next unit of work: donating the only queued entry
+        // of an otherwise-idle worker just moves the idleness around
+        while self.sched.pending() >= 1
+            && (self.sched.running() >= 1 || self.sched.pending() >= 2)
+        {
+            let Some(peer) = (0..self.peers.len()).find(|&i| {
+                i != self.idx
+                    && self.shared.loads[i].load(Ordering::Relaxed) == 0
+                    && self.shared.inbox_depth[i].load(Ordering::Relaxed) == 0
+            }) else {
+                break;
+            };
+            let Some(entry) = self.sched.steal_tail() else {
+                break; // every queued entry is deadline-pinned
+            };
+            self.shared.inbox_depth[peer].fetch_add(1, Ordering::Relaxed);
+            let tx = self.peers[peer].as_ref().expect("peer sender");
+            match tx.send(WorkerMsg::Inject(Box::new(entry))) {
+                Ok(()) => {
+                    self.shared.steals.fetch_add(1, Ordering::Relaxed);
+                    self.shared.loads[self.idx]
+                        .store(self.sched.pending() + self.sched.running(), Ordering::Relaxed);
+                }
+                Err(mpsc::SendError(msg)) => {
+                    // peer already exited: take the entry back
+                    self.shared.inbox_depth[peer].fetch_sub(1, Ordering::Relaxed);
+                    if let WorkerMsg::Inject(entry) = msg {
+                        self.sched.inject(*entry);
+                    }
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// The multi-worker serving engine (see the module docs for the sharing,
+/// placement, stealing and cross-worker preemption rules).
+///
+/// `workers == 1` degenerates to the classic single scheduler on one
+/// thread: every multi-worker fallback is gated on other workers actually
+/// running work, so the behavior — and every output — is identical.
+pub struct MultiEngine<B: DecodeBackend> {
+    cfg: SchedConfig,
+    arena: BlockManager,
+    swap: Arc<SwapPool<B::Snapshot>>,
+    shared: Arc<EngineShared>,
+    inboxes: Vec<Sender<WorkerMsg<B>>>,
+    handles: Vec<JoinHandle<(WorkerStats, B)>>,
+    event_rx: Receiver<(u64, SeqEvent)>,
+    /// Requests submitted and not yet seen terminal (finished or
+    /// cancelled) — `run_to_completion`'s stop condition.
+    inflight: usize,
+    /// Globally monotonic request ids handed out by [`Self::submit_builder`]
+    /// (same convention as `api::Session`: first id is 1).
+    next_id: u64,
+}
+
+impl<B> MultiEngine<B>
+where
+    B: DecodeBackend + Send + 'static,
+    B::Seq: Send + 'static,
+    B::Snapshot: Send + 'static,
+    B::PrefillPlan: Send + 'static,
+{
+    /// Spawn `cfg.workers` worker threads, each over its own backend
+    /// instance from `mk_backend(worker_idx)` (per-worker backends keep
+    /// interior counters — sim call tallies, fault lanes — per-worker-
+    /// stable), all over ONE arena, ONE swap pool and ONE admission
+    /// serial source.
+    pub fn new(cfg: SchedConfig, mut mk_backend: impl FnMut(usize) -> B) -> Self {
+        let n = cfg.workers.max(1);
+        let arena = BlockManager::new(cfg.max_live_blocks);
+        arena.set_watermarks(cfg.watermark_low, cfg.watermark_high);
+        let swap = Arc::new(SwapPool::new(cfg.swap_bytes));
+        let serial = Arc::new(AtomicU64::new(0));
+        let shared = Arc::new(EngineShared::new(n));
+        let (event_tx, event_rx) = mpsc::channel();
+        let mut inboxes = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel();
+            inboxes.push(tx);
+            rxs.push(rx);
+        }
+        let mut handles = Vec::with_capacity(n);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let mut sched = Scheduler::with_shared(
+                mk_backend(i),
+                cfg.clone(),
+                arena.clone(),
+                swap.clone(),
+                serial.clone(),
+            );
+            sched.set_pressure_hook(PressureHook { worker: i, shared: shared.clone() });
+            // streaming costs nothing for requests that did not opt in
+            // (`Request::stream_events` gates per-request), and the
+            // serve layer needs the token events
+            sched.set_event_streaming(true);
+            let peers: Vec<Option<Sender<WorkerMsg<B>>>> = inboxes
+                .iter()
+                .enumerate()
+                .map(|(j, tx)| if j == i { None } else { Some(tx.clone()) })
+                .collect();
+            let worker = Worker {
+                idx: i,
+                sched,
+                inbox: rx,
+                peers,
+                events: event_tx.clone(),
+                shared: shared.clone(),
+                draining: false,
+                deadline: None,
+                rounds: 0,
+                busy_rounds: 0,
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("sched-worker-{i}"))
+                .spawn(move || worker.run())
+                .expect("spawn scheduler worker");
+            handles.push(handle);
+        }
+        MultiEngine {
+            cfg,
+            arena,
+            swap,
+            shared,
+            inboxes,
+            handles,
+            event_rx,
+            inflight: 0,
+            next_id: 0,
+        }
+    }
+
+    /// Worker threads serving this engine.
+    pub fn workers(&self) -> usize {
+        self.inboxes.len()
+    }
+
+    /// The shared physical block arena.
+    pub fn arena(&self) -> &BlockManager {
+        &self.arena
+    }
+
+    /// The shared host swap pool.
+    pub fn swap_pool(&self) -> &SwapPool<B::Snapshot> {
+        &self.swap
+    }
+
+    /// Queue entries moved to an idle worker so far.
+    pub fn steals(&self) -> u64 {
+        self.shared.steals.load(Ordering::Relaxed)
+    }
+
+    /// Victims preempted for another worker's reclaim request so far.
+    pub fn cross_preempts(&self) -> u64 {
+        self.shared.cross_preempts.load(Ordering::Relaxed)
+    }
+
+    /// Place a request on the shortest queue (published load plus
+    /// undelivered inbox; ties to the lowest worker index). Ids are the
+    /// caller's, exactly like `Scheduler::submit` — the session/serve
+    /// layers keep them globally monotonic.
+    pub fn submit(&mut self, req: Request) {
+        let w = (0..self.inboxes.len())
+            .min_by_key(|&i| {
+                (
+                    self.shared.loads[i].load(Ordering::Relaxed)
+                        + self.shared.inbox_depth[i].load(Ordering::Relaxed),
+                    i,
+                )
+            })
+            .expect("engine has at least one worker");
+        self.shared.inbox_depth[w].fetch_add(1, Ordering::Relaxed);
+        match self.inboxes[w].send(WorkerMsg::Submit(req)) {
+            Ok(()) => self.inflight += 1,
+            Err(mpsc::SendError(_)) => {
+                self.shared.inbox_depth[w].fetch_sub(1, Ordering::Relaxed);
+                log::warn!("submit after engine shutdown — dropped");
+            }
+        }
+    }
+
+    /// Submit via the public [`RequestBuilder`] surface: stamps a fresh
+    /// globally monotonic [`RequestId`] (same convention as
+    /// `api::Session` — ids start at 1 and are never reused), validates
+    /// like the session does (empty prompt / unknown policy fail fast,
+    /// nothing queued on error), then places the request on the shortest
+    /// queue.
+    pub fn submit_builder(&mut self, builder: RequestBuilder) -> anyhow::Result<RequestId> {
+        anyhow::ensure!(builder.prompt_len() > 0, "empty prompt");
+        self.next_id += 1;
+        let id = RequestId(self.next_id);
+        let req = builder.build(id, &self.cfg);
+        crate::eviction::make_policy(&req.policy)?; // surface bad policy names at submit
+        self.submit(req);
+        Ok(id)
+    }
+
+    /// Requests submitted and not yet terminal (finished or cancelled).
+    pub fn inflight(&self) -> usize {
+        self.inflight
+    }
+
+    /// Cancel a request wherever it lives. Stealing moves entries between
+    /// workers behind the front end's back, so this fans out to every
+    /// worker and short-circuits on the first hit. Synchronous, like
+    /// `Scheduler::cancel`.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        for tx in &self.inboxes {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            if tx.send(WorkerMsg::Cancel(id, reply_tx)).is_err() {
+                continue;
+            }
+            if reply_rx
+                .recv_timeout(Duration::from_secs(5))
+                .unwrap_or(false)
+            {
+                self.inflight = self.inflight.saturating_sub(1);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Next lifecycle event from any worker, or `None` on timeout.
+    /// Per-request event order is preserved (each request's events come
+    /// from its current owner, and ownership only moves while queued).
+    pub fn next_event(&mut self, timeout: Duration) -> Option<(u64, SeqEvent)> {
+        match self.event_rx.recv_timeout(timeout) {
+            Ok((id, ev)) => {
+                if matches!(ev, SeqEvent::Finished(_)) {
+                    self.inflight = self.inflight.saturating_sub(1);
+                }
+                Some((id, ev))
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Block until every request submitted so far reached a terminal
+    /// event, returning the outputs sorted by id (streaming events are
+    /// discarded — the `take_finished` compat semantics). Workers stay up
+    /// for further submissions.
+    pub fn run_to_completion(&mut self) -> Vec<RequestOutput> {
+        let mut outs = Vec::new();
+        let mut last_progress = Instant::now();
+        while self.inflight > 0 {
+            match self.next_event(Duration::from_millis(100)) {
+                Some((_, SeqEvent::Finished(out))) => {
+                    outs.push(out);
+                    last_progress = Instant::now();
+                }
+                Some(_) => last_progress = Instant::now(),
+                None => {
+                    if last_progress.elapsed() > Duration::from_secs(30) {
+                        log::warn!(
+                            "engine stalled with {} request(s) unaccounted for",
+                            self.inflight
+                        );
+                        break;
+                    }
+                }
+            }
+        }
+        outs.sort_by_key(|o| o.id);
+        outs
+    }
+
+    /// Drain every worker to ONE wall-clock deadline (live requests past
+    /// it are cancelled), join the threads, and return the per-worker
+    /// stats plus engine totals, along with each worker's backend (sorted
+    /// by worker index, like the stats) so callers can read interior
+    /// counters — fault tallies, sim claim/scan counts.
+    pub fn shutdown(mut self, grace: Duration) -> (EngineReport, Vec<B>) {
+        let deadline = Instant::now() + grace;
+        for tx in &self.inboxes {
+            let _ = tx.send(WorkerMsg::Shutdown(Some(deadline)));
+        }
+        self.inboxes.clear();
+        let mut joined = Vec::new();
+        for h in self.handles.drain(..) {
+            match h.join() {
+                Ok(pair) => joined.push(pair),
+                Err(_) => log::warn!("scheduler worker panicked"),
+            }
+        }
+        joined.sort_by_key(|(w, _)| w.worker);
+        let (workers, backends): (Vec<_>, Vec<_>) = joined.into_iter().unzip();
+        let mut leftover = Vec::new();
+        while let Ok((_, ev)) = self.event_rx.try_recv() {
+            if let SeqEvent::Finished(out) = ev {
+                leftover.push(out);
+            }
+        }
+        let report = EngineReport {
+            workers,
+            steals: self.shared.steals.load(Ordering::Relaxed),
+            cross_preempts: self.shared.cross_preempts.load(Ordering::Relaxed),
+            leftover,
+        };
+        (report, backends)
+    }
+}
+
+impl MultiEngine<crate::runtime::SimBackend> {
+    /// Multi-worker engine over per-worker sim backends.
+    pub fn new_sim(cfg: SchedConfig) -> Self {
+        let page = cfg.page_size;
+        Self::new(cfg, move |_| crate::runtime::SimBackend::new(page))
+    }
+}
+
+impl MultiEngine<crate::runtime::FaultyBackend<crate::runtime::SimBackend>> {
+    /// Multi-worker engine over per-worker fault-injecting sim backends.
+    /// Every worker gets its own clone of the ONE plan, so fault lanes
+    /// number each worker's prefills from 1 — per-worker-stable no matter
+    /// how placement or stealing distributes the requests.
+    pub fn new_sim_faulty(cfg: SchedConfig, plan: crate::runtime::FaultPlan) -> Self {
+        let page = cfg.page_size;
+        Self::new(cfg, move |_| {
+            crate::runtime::FaultyBackend::new(
+                crate::runtime::SimBackend::new(page),
+                plan.clone(),
+            )
+        })
+    }
+}

@@ -27,12 +27,20 @@
 //! PJRT runtime (`--features xla`), and is exercised by plain
 //! `cargo test`.
 
+//! The multi-worker [`engine`] shards this round loop across threads:
+//! each worker owns a private `Scheduler` over its shard of the request
+//! stream while the arena, prefix index, swap pool and admission-serial
+//! source are shared, so placement/stealing/cross-worker preemption never
+//! change any request's output.
+
 pub mod backend;
+pub mod engine;
 pub mod request;
 pub mod sched;
 pub mod swap;
 
 pub use backend::{BackendError, ClaimMemo, DecodeBackend, HostSnapshot, Prefilled, Restored};
+pub use engine::{EngineReport, MultiEngine, WorkerStats};
 pub use request::{FinishReason, Priority, Request, RequestOutput, RequestState};
-pub use sched::{SchedConfig, Scheduler, StepReport};
+pub use sched::{default_workers, SchedConfig, Scheduler, StepReport};
 pub use swap::SwapPool;

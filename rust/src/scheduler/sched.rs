@@ -59,11 +59,14 @@
 //! (`--features xla`).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::backend::{ClaimMemo, DecodeBackend, Prefilled, Restored};
+use super::engine::PressureHook;
 use super::request::{FinishReason, Priority, Request, RequestOutput};
 use super::swap::SwapPool;
 use crate::api::SeqEvent;
@@ -116,6 +119,21 @@ pub struct SchedConfig {
     /// is quarantined as [`FinishReason::Error`] even with retry budget
     /// left — a poison request must not grind the batch forever.
     pub fault_streak_limit: u32,
+    /// Worker threads the multi-worker engine shards the request stream
+    /// across ([`super::engine::MultiEngine`]). Each worker runs its own
+    /// round loop over its shard; the arena, swap pool and prefix index
+    /// are shared. `1` = the classic single-threaded scheduler. Per-request
+    /// outputs are bit-identical at any worker count (greedy decode is
+    /// placement-independent) — pinned in `tests/multi_worker.rs`.
+    pub workers: usize,
+}
+
+/// Default worker count: saturate up to four cores, never oversubscribe a
+/// smaller machine.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().min(4))
+        .unwrap_or(1)
 }
 
 impl Default for SchedConfig {
@@ -133,6 +151,10 @@ impl Default for SchedConfig {
             default_budget: 1024,
             max_transient_retries: 8,
             fault_streak_limit: 4,
+            // library default stays single-threaded (embedding a scheduler
+            // must not spawn threads behind the caller's back); the CLI
+            // flags default to `default_workers()`
+            workers: 1,
         }
     }
 }
@@ -171,7 +193,13 @@ pub struct StepReport {
 /// by either path: `resume`/`swap_fed` keep the recompute replay valid
 /// even while a snapshot is parked in the swap pool, so an LRU-dropped
 /// snapshot silently degrades to recompute instead of losing work.
-struct QueueEntry {
+///
+/// Generic over the backend's [`DecodeBackend::PrefillPlan`] so the
+/// admission claim scan's artifact rides the entry to the prefill that
+/// consumes it (fields stay private to this module; the multi-worker
+/// engine moves entries between schedulers opaquely via
+/// [`Scheduler::steal_tail`] / [`Scheduler::inject`]).
+pub(crate) struct QueueEntry<P> {
     req: Request,
     enqueued: Instant,
     /// Tokens produced before preemption, replayed on readmission.
@@ -193,6 +221,11 @@ struct QueueEntry {
     /// Memoized admission claim, valid while the prefix index epoch it
     /// was recorded against is current.
     claim: Option<ClaimMemo>,
+    /// The claim scan's backend-opaque artifact (e.g. the sim backend's
+    /// kept-entry list): a pure function of the immutable request, so it
+    /// stays valid for the entry's whole queued life — the admitting
+    /// prefill consumes it instead of re-running the policy scan.
+    plan: Option<P>,
     /// Transient decode-error retries consumed so far.
     retries: u32,
     /// Consecutive decode failures (survives suspension; resets on any
@@ -200,8 +233,8 @@ struct QueueEntry {
     fault_streak: u32,
 }
 
-impl QueueEntry {
-    fn fresh(req: Request, deadline_at: Option<u64>) -> QueueEntry {
+impl<P> QueueEntry<P> {
+    fn fresh(req: Request, deadline_at: Option<u64>) -> QueueEntry<P> {
         QueueEntry {
             req,
             enqueued: Instant::now(),
@@ -214,6 +247,7 @@ impl QueueEntry {
             next_token: 0,
             deadline_at,
             claim: None,
+            plan: None,
             retries: 0,
             fault_streak: 0,
         }
@@ -250,13 +284,13 @@ struct Inflight<S> {
     fault_streak: u32,
 }
 
-enum AdmitOutcome {
+enum AdmitOutcome<P> {
     /// `restored` distinguishes a swap-pool restore from a prefill (fresh
     /// or recompute) for the round report; `hit_blocks` is the prefix-
     /// index hit count of that prefill (0 for restores).
     Admitted { restored: bool, hit_blocks: u64 },
     /// Arena too full right now; entry comes back for a later round.
-    OutOfMemory(QueueEntry),
+    OutOfMemory(QueueEntry<P>),
     /// Request failed hard (error output already emitted).
     Failed,
 }
@@ -269,7 +303,7 @@ pub struct Scheduler<B: DecodeBackend> {
     /// front of the first non-empty bucket, O(1) — highest class first,
     /// front-most within a class, preemption victims requeued at their
     /// class front. No cross-bucket scan per admission.
-    queues: [VecDeque<QueueEntry>; 3],
+    queues: [VecDeque<QueueEntry<B::PrefillPlan>>; 3],
     running: Vec<Inflight<B::Seq>>,
     /// Lifecycle events in emission order, keyed by request id — the
     /// session API's feed ([`Scheduler::take_events`]).
@@ -279,8 +313,10 @@ pub struct Scheduler<B: DecodeBackend> {
     /// default so legacy `take_finished` drains buffer O(requests), not
     /// O(total tokens); the session API turns it on.
     stream_events: bool,
-    /// Host-side pool of swapped-out victims (byte-capped LRU).
-    swap: SwapPool<B::Snapshot>,
+    /// Host-side pool of swapped-out victims (byte-capped LRU). Shared by
+    /// every worker of a multi-worker engine: a victim parked by one
+    /// worker restores on whichever worker readmits (or steals) it.
+    swap: Arc<SwapPool<B::Snapshot>>,
     // aggregate serving metrics
     pub ttft: Histogram,
     pub tpot: Histogram,
@@ -312,20 +348,45 @@ pub struct Scheduler<B: DecodeBackend> {
     /// total cancel count.
     pub cancelled_stats: CacheStats,
     started: Option<Instant>,
-    admit_counter: u64,
-    /// Scheduling rounds started so far (the deadline clock).
+    /// Admission serial source — shared across a multi-worker engine's
+    /// schedulers so `(priority, Reverse(admit_serial))` victim keys are
+    /// globally comparable (the cross-worker preemption rule).
+    admit_counter: Arc<AtomicU64>,
+    /// Scheduling rounds started so far (the deadline clock). Per-worker:
+    /// deadline-carrying entries are never stolen across workers.
     steps: u64,
+    /// Installed by the multi-worker engine: lets a starved worker see
+    /// global in-flight work and post reclaim pressure instead of
+    /// rejecting or erroring a request that another worker could make
+    /// room for.
+    hook: Option<PressureHook>,
 }
 
 impl<B: DecodeBackend> Scheduler<B> {
     /// Build a scheduler around an existing backend. The shared arena is
     /// sized by `cfg.max_live_blocks` with the configured admission /
     /// preemption watermark band.
-    pub fn with_backend(mut backend: B, cfg: SchedConfig) -> Self {
+    pub fn with_backend(backend: B, cfg: SchedConfig) -> Self {
         let arena = BlockManager::new(cfg.max_live_blocks);
         arena.set_watermarks(cfg.watermark_low, cfg.watermark_high);
+        let swap = Arc::new(SwapPool::new(cfg.swap_bytes));
+        Self::with_shared(backend, cfg, arena, swap, Arc::new(AtomicU64::new(0)))
+    }
+
+    /// Build a scheduler over resources owned elsewhere: the multi-worker
+    /// engine hands every worker the SAME arena (one physical block pool,
+    /// one prefix index — a prefix published by worker A is a free hit
+    /// for worker B), the SAME swap pool and the SAME admission-serial
+    /// source. Watermarks are the caller's job (`with_backend` sets them
+    /// on its fresh arena; the engine sets them once on the shared one).
+    pub fn with_shared(
+        mut backend: B,
+        cfg: SchedConfig,
+        arena: BlockManager,
+        swap: Arc<SwapPool<B::Snapshot>>,
+        admit_counter: Arc<AtomicU64>,
+    ) -> Self {
         backend.set_prefix_cache(cfg.prefix_cache);
-        let swap = SwapPool::new(cfg.swap_bytes);
         Scheduler {
             cfg,
             backend,
@@ -349,8 +410,9 @@ impl<B: DecodeBackend> Scheduler<B> {
             quarantined: 0,
             cancelled_stats: CacheStats::default(),
             started: None,
-            admit_counter: 0,
+            admit_counter,
             steps: 0,
+            hook: None,
         }
     }
 
@@ -362,6 +424,13 @@ impl<B: DecodeBackend> Scheduler<B> {
     /// The decode backend (read-only; for stats/introspection).
     pub fn backend(&self) -> &B {
         &self.backend
+    }
+
+    /// Consume the scheduler and return its backend — the multi-worker
+    /// engine hands each worker's backend back at shutdown so callers can
+    /// read interior counters (sim call tallies, fault counts).
+    pub fn into_backend(self) -> B {
+        self.backend
     }
 
     /// The host-side swap pool (byte accounting, LRU drop count).
@@ -648,21 +717,36 @@ impl<B: DecodeBackend> Scheduler<B> {
                 None => match entry.claim.and_then(|m| m.get(&self.arena)) {
                     Some(blocks) => blocks,
                     None => {
-                        let blocks = self.backend.prefill_claim(
+                        let (blocks, plan) = self.backend.prefill_claim_planned(
                             &self.arena,
                             &entry.req,
                             self.cfg.page_size,
                         );
                         entry.claim = Some(ClaimMemo::record(&self.arena, blocks));
+                        // keep the scan's artifact for the prefill (the
+                        // plan is request-pure, so it outlives any prefix
+                        // epoch the block memo above is keyed on)
+                        if plan.is_some() {
+                            entry.plan = plan;
+                        }
                         blocks
                     }
                 },
             };
-            // With nothing running the gate is bypassed: no sequence can
-            // ever free blocks, so either the admission fits the raw
-            // capacity now or the request can never run (rejected below
-            // when its prefill runs the arena dry).
-            if !self.arena.below_low_watermark(incoming) && !self.running.is_empty() {
+            // With nothing running ANYWHERE the gate is bypassed: no
+            // sequence can ever free blocks, so either the admission fits
+            // the raw capacity now or the request can never run (rejected
+            // below when its prefill runs the arena dry). Under a multi-
+            // worker engine, OTHER workers' sequences also free shared
+            // arena blocks — a locally-idle worker must still gate, and
+            // posts reclaim pressure so the global victim rule picks who
+            // pays.
+            if !self.arena.below_low_watermark(incoming)
+                && (!self.running.is_empty() || self.others_running() > 0)
+            {
+                if self.running.is_empty() {
+                    self.post_pressure();
+                }
                 // not enough global KV headroom yet — head-of-line wait
                 // (back to its bucket front, order preserved)
                 self.queues[b].push_front(entry);
@@ -680,6 +764,14 @@ impl<B: DecodeBackend> Scheduler<B> {
                 }
                 AdmitOutcome::OutOfMemory(entry) => {
                     if self.running.is_empty() {
+                        if self.others_running() > 0 {
+                            // another worker's sequences hold the shared
+                            // arena: ask the engine to reclaim globally
+                            // and retry instead of rejecting
+                            self.post_pressure();
+                            self.queues[b].push_front(entry);
+                            break;
+                        }
                         // nothing in flight can ever free blocks for it:
                         // the packed prompt simply does not fit the arena
                         log::warn!(
@@ -707,6 +799,15 @@ impl<B: DecodeBackend> Scheduler<B> {
             let victim = self.victim_idx();
             self.preempt(victim);
             report.preempted += 1;
+        }
+        // Still above the mark with at most one local runner: under a
+        // multi-worker engine the overshoot belongs to the SHARED arena —
+        // post pressure so the worker owning the global victim reclaims.
+        if self.arena.above_high_watermark()
+            && self.running.len() <= 1
+            && self.others_running() > 0
+        {
+            self.post_pressure();
         }
 
         // --- reservation + preemption: every sequence that needs a fresh
@@ -738,6 +839,22 @@ impl<B: DecodeBackend> Scheduler<B> {
                 }
                 BlockAlloc::ArenaDry => {
                     if self.running.len() == 1 {
+                        if self.others_running() > 0 {
+                            // other workers' sequences hold the shared
+                            // arena: park the lone local runner (lossless
+                            // — restore-or-replay) and post pressure so
+                            // the global victim rule frees real memory,
+                            // instead of erroring a recoverable request
+                            log::info!(
+                                "req {}: arena dry with no local victim — \
+                                 parked pending cross-worker reclaim",
+                                self.running[i].req.id
+                            );
+                            self.preempt(i);
+                            report.preempted += 1;
+                            self.post_pressure();
+                            continue;
+                        }
                         // no victim can free memory for this sequence
                         log::warn!(
                             "req {}: arena exhausted with no preemption victim",
@@ -918,7 +1035,10 @@ impl<B: DecodeBackend> Scheduler<B> {
         }
     }
 
-    fn admit(&mut self, entry: QueueEntry) -> AdmitOutcome {
+    fn admit(
+        &mut self,
+        entry: QueueEntry<B::PrefillPlan>,
+    ) -> AdmitOutcome<B::PrefillPlan> {
         // A swapped-out victim readmits by restoring its snapshot: the
         // cache, policy state and model continuation come back exactly as
         // suspended — no prompt recompute, no token replay.
@@ -926,7 +1046,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             match self.backend.restore(&self.arena, &snap) {
                 Ok(Restored::Ready(seq)) => {
                     self.swap_restores += 1;
-                    self.admit_counter += 1;
+                    let serial = self.admit_counter.fetch_add(1, Ordering::Relaxed) + 1;
                     let fed = entry.swap_fed.min(entry.resume.len());
                     log::info!(
                         "req {}: restored from swap ({} tokens kept, {} to replay)",
@@ -946,7 +1066,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                         decode_seconds: entry.decode_seconds,
                         produced: entry.resume,
                         fed,
-                        admit_serial: self.admit_counter,
+                        admit_serial: serial,
                         preemptions: entry.preemptions,
                         swaps: entry.swaps + 1,
                         cow_seen,
@@ -981,9 +1101,13 @@ impl<B: DecodeBackend> Scheduler<B> {
                 return AdmitOutcome::Failed;
             }
         };
-        let prefilled = self
-            .backend
-            .prefill(&self.arena, &entry.req.prompt, entry.req.budget, policy);
+        let prefilled = self.backend.prefill_planned(
+            &self.arena,
+            &entry.req.prompt,
+            entry.req.budget,
+            policy,
+            entry.plan.as_ref(),
+        );
         match prefilled {
             Ok(Prefilled::Ready { seq, logits }) => {
                 let now = Instant::now();
@@ -1003,7 +1127,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                     // produced tokens without re-emitting them
                     self.emit_stream(&entry.req, SeqEvent::Resumed);
                 }
-                self.admit_counter += 1;
+                let serial = self.admit_counter.fetch_add(1, Ordering::Relaxed) + 1;
                 // a fresh cache's counters cover exactly this prefill
                 let hit_blocks = B::cache(&seq).stats.prefix_hit_blocks;
                 let cow_seen = B::cache(&seq).stats.cow_copies;
@@ -1016,7 +1140,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                     decode_seconds: entry.decode_seconds,
                     produced: entry.resume,
                     fed: 0,
-                    admit_serial: self.admit_counter,
+                    admit_serial: serial,
                     preemptions: entry.preemptions,
                     swaps: entry.swaps,
                     cow_seen,
@@ -1035,6 +1159,101 @@ impl<B: DecodeBackend> Scheduler<B> {
                 self.emit(entry.req.id, SeqEvent::Finished(out));
                 AdmitOutcome::Failed
             }
+        }
+    }
+
+    // ---- multi-worker engine hooks (crate-private) --------------------
+    //
+    // The engine owns one scheduler per worker thread; these are the only
+    // extra touch points it needs. They are all no-ops / None in
+    // single-worker use.
+
+    /// Install the engine's pressure hook (global running visibility +
+    /// the reclaim channel). Engine-only.
+    pub(crate) fn set_pressure_hook(&mut self, hook: PressureHook) {
+        self.hook = Some(hook);
+    }
+
+    /// Sequences running on OTHER workers right now (0 without a hook).
+    fn others_running(&self) -> usize {
+        self.hook.as_ref().map(|h| h.others_running()).unwrap_or(0)
+    }
+
+    /// Post one reclaim request to the engine's pressure channel (no-op
+    /// without a hook).
+    fn post_pressure(&self) {
+        if let Some(h) = &self.hook {
+            h.post();
+        }
+    }
+
+    /// The `(priority, admit_serial)` victim key of this worker's local
+    /// preemption candidate ([`Scheduler::victim_idx`]'s choice), or
+    /// `None` with nothing running. The engine compares keys across
+    /// workers under `(priority, Reverse(serial))` to find the GLOBAL
+    /// victim — serials come from the shared counter, so the comparison
+    /// is meaningful across workers.
+    pub fn min_victim_key(&self) -> Option<(Priority, u64)> {
+        self.running
+            .iter()
+            .map(|f| (f.req.priority, f.admit_serial))
+            .min_by_key(|&(p, s)| (p, std::cmp::Reverse(s)))
+    }
+
+    /// Preempt this worker's local victim into the shared swap pool —
+    /// the engine calls this on the worker that owns the GLOBAL victim
+    /// when another worker posted reclaim pressure. Returns `false` with
+    /// nothing running.
+    pub fn preempt_min(&mut self) -> bool {
+        if self.running.is_empty() {
+            return false;
+        }
+        let victim = self.victim_idx();
+        self.preempt(victim);
+        true
+    }
+
+    /// Pop one steal candidate from the BACK of the lowest-priority
+    /// non-empty bucket: the entry an idle worker donates to a thief. The
+    /// tail is the entry this worker would reach LAST, so stealing it
+    /// never reorders anyone's head-of-line progress. Entries carrying a
+    /// step deadline are skipped — deadlines are absolute against the
+    /// owning worker's round clock and would shift meaning on another
+    /// worker's clock.
+    pub(crate) fn steal_tail(&mut self) -> Option<QueueEntry<B::PrefillPlan>> {
+        for b in (0..self.queues.len()).rev() {
+            let Some(pos) = self.queues[b].iter().rposition(|e| e.deadline_at.is_none())
+            else {
+                continue;
+            };
+            return self.queues[b].remove(pos);
+        }
+        None
+    }
+
+    /// Accept a stolen (or engine-placed) queue entry into this worker's
+    /// bucket tail. Claim/plan memos, resume tokens and any parked swap
+    /// snapshot all stay valid across the move: the arena (prefix epoch)
+    /// and swap pool are shared engine-wide.
+    pub(crate) fn inject(&mut self, entry: QueueEntry<B::PrefillPlan>) {
+        let bucket = Self::bucket(entry.req.priority);
+        self.queues[bucket].push_back(entry);
+    }
+
+    /// Move one queue-tail entry from this scheduler to `other` — the
+    /// work-stealing handoff ([`Scheduler::steal_tail`] + inject) as one
+    /// public operation, for embedders running their own worker loops
+    /// (and for the hot-path bench that pins the handoff cost). Both
+    /// schedulers must share the same arena/swap pool (`with_shared`) or
+    /// the moved entry's memos and snapshots are meaningless. Returns
+    /// `false` when nothing here is stealable.
+    pub fn donate_to(&mut self, other: &mut Scheduler<B>) -> bool {
+        match self.steal_tail() {
+            Some(entry) => {
+                other.inject(entry);
+                true
+            }
+            None => false,
         }
     }
 
@@ -1138,6 +1357,10 @@ impl<B: DecodeBackend> Scheduler<B> {
             next_token,
             deadline_at,
             claim: None,
+            // the plan is request-pure and a readmission prefill replays
+            // the same prompt, but the claim scan re-derives it anyway:
+            // keeping both memos in lockstep keeps invalidation trivial
+            plan: None,
             retries: if retry { retries + 1 } else { retries },
             fault_streak,
         });

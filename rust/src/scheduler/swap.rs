@@ -11,6 +11,14 @@
 //! entry retains the produced tokens), so host memory for swap is a hard
 //! bound, not a hope.
 //!
+//! Since PR 7 the pool is shared by every worker of the multi-worker
+//! engine, so all state lives behind one internal mutex and every method
+//! takes `&self`: the byte counter, the LRU order and the insert/evict
+//! decision are a single critical section — there is no check-then-act
+//! window where two workers can both observe "fits" and overshoot the
+//! byte cap, and cross-worker preemption can park victims from any thread
+//! (`SwapPool<S>` is `Send + Sync` whenever `S: Send`).
+//!
 //! Snapshots are pure host-side copies: they pin NO arena blocks, so with
 //! refcounted prefix sharing an LRU drop (or discard) of a parked
 //! snapshot can never free a physical page another live sequence still
@@ -18,24 +26,48 @@
 //! when it was preempted. Asserted in `tests/prefix_cache.rs`.
 
 use std::collections::VecDeque;
+use std::sync::{Mutex, MutexGuard};
 
 use super::backend::HostSnapshot;
 
-/// Byte-capped LRU store of per-request snapshots, keyed by request id.
+/// All mutable pool state, guarded as ONE unit so byte accounting and LRU
+/// order can never diverge under concurrent insert/evict.
 #[derive(Debug)]
-pub struct SwapPool<S> {
-    cap_bytes: usize,
+struct Inner<S> {
     used_bytes: usize,
     /// Insertion order, oldest first — the front is the next LRU victim.
     entries: VecDeque<(u64, usize, S)>,
     dropped: u64,
 }
 
+/// Byte-capped LRU store of per-request snapshots, keyed by request id.
+///
+/// Thread-safe: all methods take `&self` and serialize on an internal
+/// mutex, so one pool instance can back every worker of the engine.
+#[derive(Debug)]
+pub struct SwapPool<S> {
+    cap_bytes: usize,
+    inner: Mutex<Inner<S>>,
+}
+
 impl<S: HostSnapshot> SwapPool<S> {
     /// A pool with `cap_bytes == 0` is disabled: every insert fails and
     /// the scheduler preempts by recompute only.
     pub fn new(cap_bytes: usize) -> Self {
-        SwapPool { cap_bytes, used_bytes: 0, entries: VecDeque::new(), dropped: 0 }
+        SwapPool {
+            cap_bytes,
+            inner: Mutex::new(Inner { used_bytes: 0, entries: VecDeque::new(), dropped: 0 }),
+        }
+    }
+
+    /// Serialize on the pool state. A poisoned lock means another worker
+    /// panicked mid-operation; the accounting invariant is maintained at
+    /// every await-free point, so we keep serving rather than propagate.
+    fn lock(&self) -> MutexGuard<'_, Inner<S>> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
     }
 
     pub fn capacity_bytes(&self) -> usize {
@@ -43,31 +75,32 @@ impl<S: HostSnapshot> SwapPool<S> {
     }
 
     pub fn used_bytes(&self) -> usize {
-        self.used_bytes
+        self.lock().used_bytes
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.lock().entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.lock().entries.is_empty()
     }
 
     /// Snapshots LRU-dropped (or displaced by a re-insert for the same
     /// request) never restored — their victims fell back to recompute.
     pub fn dropped(&self) -> u64 {
-        self.dropped
+        self.lock().dropped
     }
 
     pub fn contains(&self, id: u64) -> bool {
-        self.entries.iter().any(|(i, _, _)| *i == id)
+        self.lock().entries.iter().any(|(i, _, _)| *i == id)
     }
 
     /// Arena blocks the parked snapshot for `id` would claim on restore —
     /// the scheduler's admission estimate for a swapped victim.
     pub fn arena_blocks_of(&self, id: u64) -> Option<usize> {
-        self.entries
+        self.lock()
+            .entries
             .iter()
             .find(|(i, _, _)| *i == id)
             .map(|(_, _, s)| s.arena_blocks())
@@ -78,41 +111,47 @@ impl<S: HostSnapshot> SwapPool<S> {
     /// pool cap (or the pool is disabled); the caller falls back to
     /// recompute. A snapshot already parked for the same id is replaced
     /// (counted in `dropped` only when a DIFFERENT id is evicted).
-    pub fn insert(&mut self, id: u64, snap: S) -> bool {
-        self.remove(id);
+    ///
+    /// The displace / capacity-test / evict / append sequence runs under
+    /// ONE lock acquisition — concurrent inserts cannot interleave between
+    /// the capacity check and the push and overshoot the cap.
+    pub fn insert(&self, id: u64, snap: S) -> bool {
+        let mut g = self.lock();
+        Self::remove_locked(&mut g, id);
         let bytes = snap.host_bytes();
         if self.cap_bytes == 0 || bytes > self.cap_bytes {
             return false;
         }
-        while self.used_bytes + bytes > self.cap_bytes {
-            let (_, b, _) = self.entries.pop_front().expect("byte accounting broken");
-            self.used_bytes -= b;
-            self.dropped += 1;
+        while g.used_bytes + bytes > self.cap_bytes {
+            let (_, b, _) = g.entries.pop_front().expect("byte accounting broken");
+            g.used_bytes -= b;
+            g.dropped += 1;
         }
-        self.used_bytes += bytes;
-        self.entries.push_back((id, bytes, snap));
+        g.used_bytes += bytes;
+        g.entries.push_back((id, bytes, snap));
         true
     }
 
     /// Remove and return the snapshot for `id` (readmission restore).
-    pub fn take(&mut self, id: u64) -> Option<S> {
-        let pos = self.entries.iter().position(|(i, _, _)| *i == id)?;
-        let (_, bytes, snap) = self.entries.remove(pos).expect("position just found");
-        self.used_bytes -= bytes;
+    pub fn take(&self, id: u64) -> Option<S> {
+        let mut g = self.lock();
+        let pos = g.entries.iter().position(|(i, _, _)| *i == id)?;
+        let (_, bytes, snap) = g.entries.remove(pos).expect("position just found");
+        g.used_bytes -= bytes;
         Some(snap)
     }
 
     /// Drop the snapshot for `id` if parked (e.g. its request was
     /// rejected or cancelled). Not counted as an LRU drop; returns
     /// whether a snapshot was actually dropped.
-    pub fn discard(&mut self, id: u64) -> bool {
-        self.remove(id)
+    pub fn discard(&self, id: u64) -> bool {
+        Self::remove_locked(&mut self.lock(), id)
     }
 
-    fn remove(&mut self, id: u64) -> bool {
-        if let Some(pos) = self.entries.iter().position(|(i, _, _)| *i == id) {
-            let (_, bytes, _) = self.entries.remove(pos).expect("position just found");
-            self.used_bytes -= bytes;
+    fn remove_locked(g: &mut Inner<S>, id: u64) -> bool {
+        if let Some(pos) = g.entries.iter().position(|(i, _, _)| *i == id) {
+            let (_, bytes, _) = g.entries.remove(pos).expect("position just found");
+            g.used_bytes -= bytes;
             true
         } else {
             false
@@ -139,7 +178,7 @@ mod tests {
 
     #[test]
     fn insert_take_roundtrip_accounts_bytes() {
-        let mut p = SwapPool::new(1000);
+        let p = SwapPool::new(1000);
         assert!(p.insert(1, Fake(400)));
         assert!(p.insert(2, Fake(500)));
         assert_eq!(p.used_bytes(), 900);
@@ -152,7 +191,7 @@ mod tests {
 
     #[test]
     fn cap_evicts_oldest_first() {
-        let mut p = SwapPool::new(1000);
+        let p = SwapPool::new(1000);
         assert!(p.insert(1, Fake(400)));
         assert!(p.insert(2, Fake(400)));
         // 400 + 400 + 600 > 1000: both elder snapshots must go
@@ -165,7 +204,7 @@ mod tests {
 
     #[test]
     fn partial_eviction_keeps_newer_entries() {
-        let mut p = SwapPool::new(1000);
+        let p = SwapPool::new(1000);
         assert!(p.insert(1, Fake(400)));
         assert!(p.insert(2, Fake(400)));
         assert!(p.insert(3, Fake(300)));
@@ -176,16 +215,16 @@ mod tests {
 
     #[test]
     fn oversized_or_disabled_insert_fails_cleanly() {
-        let mut p = SwapPool::new(100);
+        let p = SwapPool::new(100);
         assert!(!p.insert(1, Fake(101)), "snapshot bigger than the pool");
         assert_eq!(p.len(), 0);
-        let mut off: SwapPool<Fake> = SwapPool::new(0);
+        let off: SwapPool<Fake> = SwapPool::new(0);
         assert!(!off.insert(1, Fake(0)), "disabled pool parks nothing");
     }
 
     #[test]
     fn reinsert_same_id_replaces_without_drop() {
-        let mut p = SwapPool::new(1000);
+        let p = SwapPool::new(1000);
         assert!(p.insert(1, Fake(600)));
         assert!(p.insert(1, Fake(700)), "own entry is displaced, not counted");
         assert_eq!(p.dropped(), 0);
@@ -195,11 +234,43 @@ mod tests {
 
     #[test]
     fn discard_is_silent() {
-        let mut p = SwapPool::new(1000);
+        let p = SwapPool::new(1000);
         assert!(p.insert(1, Fake(500)));
         assert!(p.discard(1));
         assert!(!p.discard(2), "absent: no-op");
         assert!(p.is_empty());
         assert_eq!(p.dropped(), 0);
+    }
+
+    #[test]
+    fn shared_pool_is_send_sync_and_cap_holds_under_races() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SwapPool<Fake>>();
+
+        // Hammer one pool from several threads; the byte cap must hold at
+        // every observation point and the final accounting must match the
+        // surviving entries exactly.
+        let p = std::sync::Arc::new(SwapPool::new(1000));
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let p = std::sync::Arc::clone(&p);
+            joins.push(std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    let id = t * 1000 + i;
+                    p.insert(id, Fake(300));
+                    assert!(p.used_bytes() <= 1000, "cap overshot");
+                    if i % 3 == 0 {
+                        p.take(id);
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let g = p.lock();
+        let sum: usize = g.entries.iter().map(|(_, b, _)| *b).sum();
+        assert_eq!(g.used_bytes, sum, "byte counter matches entries");
+        assert!(g.used_bytes <= 1000);
     }
 }

@@ -31,7 +31,7 @@ use super::protocol::{
 };
 use crate::api::{RequestBuilder, RequestHandle, RequestId, SeqEvent, Session};
 use crate::scheduler::{
-    DecodeBackend, FinishReason, Priority, Request, RequestOutput, SchedConfig,
+    DecodeBackend, FinishReason, MultiEngine, Priority, Request, RequestOutput, SchedConfig,
 };
 
 /// Per-server wire defaults (a submit line may override `stream`;
@@ -357,40 +357,202 @@ pub fn run_engine_loop<B: DecodeBackend>(
     }
 }
 
+/// Run the engine loop over a multi-worker [`MultiEngine`] on the
+/// CURRENT thread: the same [`EngineMsg`] protocol as
+/// [`run_engine_loop`] — same submit/abort/shutdown semantics, same
+/// bounded-sink stall handling — so [`EngineHandle`] and every
+/// connection thread are oblivious to the worker count. Ids stay
+/// globally monotonic (the engine stamps them); cancel fans out to the
+/// owning worker; shutdown drains ALL workers to one deadline.
+pub fn run_multi_engine_loop<B>(mut engine: MultiEngine<B>, rx: Receiver<EngineMsg>) -> Result<()>
+where
+    B: DecodeBackend + Send + 'static,
+    B::Seq: Send + 'static,
+    B::Snapshot: Send + 'static,
+    B::PrefillPlan: Send + 'static,
+{
+    let mut sinks: HashMap<u64, SyncSender<(u64, SeqEvent)>> = HashMap::new();
+    let mut disconnected = false;
+    let mut draining = false;
+    // Same coalescing rule as the single-engine loop: concurrent
+    // shutdowns share the EARLIEST deadline, every ack fires on exit.
+    let mut shutdown: Option<(Instant, Vec<Sender<bool>>)> = None;
+    loop {
+        // Drain the control inbox without blocking — the workers decode
+        // on their own threads; this loop only places and routes.
+        loop {
+            match rx.try_recv() {
+                Ok(EngineMsg::Submit { builder, accepted, events }) => {
+                    if draining {
+                        let _ = accepted
+                            .send(Err("session shutting down; not accepting new requests".into()));
+                        continue;
+                    }
+                    match engine.submit_builder(builder) {
+                        Ok(id) => {
+                            let _ = accepted.send(Ok(id.raw()));
+                            sinks.insert(id.raw(), events);
+                        }
+                        Err(e) => {
+                            let _ = accepted.send(Err(format!("{e:#}")));
+                        }
+                    }
+                }
+                Ok(EngineMsg::Abort { id, ack }) => {
+                    let ok = engine.cancel(id);
+                    if ok {
+                        // aborted requests emit no Finished event: dropping
+                        // the sink ends the stream, and the conn thread
+                        // turns that into its `aborted` notice
+                        sinks.remove(&id);
+                    }
+                    let _ = ack.send(ok);
+                }
+                Ok(EngineMsg::Shutdown { deadline, ack }) => {
+                    draining = true;
+                    let end = Instant::now() + deadline;
+                    match &mut shutdown {
+                        Some((e, acks)) => {
+                            *e = (*e).min(end);
+                            acks.push(ack);
+                        }
+                        None => shutdown = Some((end, vec![ack])),
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        // Route worker events to their sinks. The bounded wait paces the
+        // loop; it returns early the moment an event lands.
+        while let Some((id, ev)) = engine.next_event(Duration::from_millis(2)) {
+            let is_fin = matches!(ev, SeqEvent::Finished(_));
+            let Some(tx) = sinks.get(&id) else { continue };
+            match tx.try_send((id, ev)) {
+                Ok(()) => {
+                    if is_fin {
+                        sinks.remove(&id);
+                    }
+                }
+                Err(e) => {
+                    // disconnected, or stalled EVENT_CHANNEL_CAP events
+                    // behind — same best-effort contract as the
+                    // single-engine loop
+                    let stalled = matches!(e, TrySendError::Full(_));
+                    if is_fin && stalled {
+                        log::warn!("req {id}: finished output dropped — sink stalled");
+                    } else {
+                        let why = if stalled { "stalled" } else { "closed" };
+                        log::info!("req {id}: event sink {why} — cancelling");
+                    }
+                    if !is_fin {
+                        engine.cancel(id);
+                    }
+                    sinks.remove(&id);
+                }
+            }
+        }
+        if let Some((end, _)) = &shutdown {
+            let drained = engine.inflight() == 0;
+            if drained || Instant::now() >= *end {
+                if !drained {
+                    log::warn!(
+                        "shutdown deadline passed with {} live requests — cancelling",
+                        engine.inflight()
+                    );
+                    for id in sinks.keys().copied().collect::<Vec<_>>() {
+                        engine.cancel(id);
+                    }
+                }
+                // join the workers; any terminal output that raced the
+                // teardown still reaches its sink before the streams close
+                let (report, _) = engine.shutdown(Duration::from_millis(50));
+                for out in report.leftover {
+                    if let Some(tx) = sinks.remove(&out.id) {
+                        let _ = tx.try_send((out.id, SeqEvent::Finished(out)));
+                    }
+                }
+                drop(sinks);
+                let (_, acks) = shutdown.take().expect("shutdown just matched");
+                for ack in acks {
+                    let _ = ack.send(drained);
+                }
+                return Ok(());
+            }
+        }
+        if disconnected && shutdown.is_none() && engine.inflight() == 0 {
+            let _ = engine.shutdown(Duration::from_millis(50));
+            return Ok(());
+        }
+        if engine.inflight() == 0 {
+            // fully idle: cheap park between inbox polls
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
 /// Spawn the engine loop over the always-built deterministic sim backend
 /// (no PJRT, no artifacts). What `paged-eviction serve --backend sim`
-/// and the tier-1 server tests run.
+/// and the tier-1 server tests run. `cfg.workers > 1` serves the same
+/// wire surface from the multi-worker engine.
 pub fn spawn_sim_engine(
     cfg: SchedConfig,
 ) -> Result<(EngineHandle, std::thread::JoinHandle<()>)> {
     let (tx, rx) = channel();
-    let session = Session::new_sim(cfg);
-    let join = std::thread::Builder::new()
-        .name("engine-loop".into())
-        .spawn(move || {
-            if let Err(e) = run_engine_loop(session, rx) {
-                log::error!("engine loop died: {e:#}");
-            }
-        })?;
+    let join = if cfg.workers > 1 {
+        let engine = MultiEngine::new_sim(cfg);
+        std::thread::Builder::new()
+            .name("engine-loop".into())
+            .spawn(move || {
+                if let Err(e) = run_multi_engine_loop(engine, rx) {
+                    log::error!("engine loop died: {e:#}");
+                }
+            })?
+    } else {
+        let session = Session::new_sim(cfg);
+        std::thread::Builder::new()
+            .name("engine-loop".into())
+            .spawn(move || {
+                if let Err(e) = run_engine_loop(session, rx) {
+                    log::error!("engine loop died: {e:#}");
+                }
+            })?
+    };
     Ok((EngineHandle { tx }, join))
 }
 
 /// Spawn the sim engine loop with a deterministic fault injector wrapped
 /// around the backend (see [`crate::runtime::FaultPlan`]). What
-/// `serve --backend sim --faults SPEC` and the chaos tests run.
+/// `serve --backend sim --faults SPEC` and the chaos tests run. Under
+/// `cfg.workers > 1` every worker gets its own clone of the plan, so
+/// fault lanes stay per-worker-stable.
 pub fn spawn_sim_engine_faulty(
     cfg: SchedConfig,
     plan: crate::runtime::FaultPlan,
 ) -> Result<(EngineHandle, std::thread::JoinHandle<()>)> {
     let (tx, rx) = channel();
-    let session = Session::new_sim_faulty(cfg, plan);
-    let join = std::thread::Builder::new()
-        .name("engine-loop".into())
-        .spawn(move || {
-            if let Err(e) = run_engine_loop(session, rx) {
-                log::error!("engine loop died: {e:#}");
-            }
-        })?;
+    let join = if cfg.workers > 1 {
+        let engine = MultiEngine::new_sim_faulty(cfg, plan);
+        std::thread::Builder::new()
+            .name("engine-loop".into())
+            .spawn(move || {
+                if let Err(e) = run_multi_engine_loop(engine, rx) {
+                    log::error!("engine loop died: {e:#}");
+                }
+            })?
+    } else {
+        let session = Session::new_sim_faulty(cfg, plan);
+        std::thread::Builder::new()
+            .name("engine-loop".into())
+            .spawn(move || {
+                if let Err(e) = run_engine_loop(session, rx) {
+                    log::error!("engine loop died: {e:#}");
+                }
+            })?
+    };
     Ok((EngineHandle { tx }, join))
 }
 

@@ -1,0 +1,380 @@
+//! Multi-worker engine: N scheduler threads over ONE shared arena, ONE
+//! swap pool, ONE prefix index and ONE admission-serial source — and
+//! per-request outputs that are bit-identical to the single-threaded
+//! scheduler no matter how placement, stealing or cross-worker
+//! preemption distribute the work.
+//!
+//! The twin-run legs run the SAME materialized request list at
+//! `workers` ∈ {1, 2, 4} and compare every request's token stream. The
+//! sim backend's logits are a pure function of token history, greedy
+//! decode is placement-independent, and preemption (restore-or-replay)
+//! is lossless — so any drift is an engine bug, not scheduling noise.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use paged_eviction::api::{RequestBuilder, SeqEvent};
+use paged_eviction::runtime::{FaultPlan, SimBackend};
+use paged_eviction::scheduler::{
+    EngineReport, FinishReason, MultiEngine, Priority, Request, RequestOutput, SchedConfig,
+    Scheduler,
+};
+use paged_eviction::util::rng::Pcg32;
+
+fn cfg(page: usize, conc: usize, arena_blocks: usize, workers: usize) -> SchedConfig {
+    SchedConfig {
+        model: "sim".into(),
+        page_size: page,
+        max_concurrency: conc,
+        max_live_blocks: arena_blocks,
+        watermark_low: 0.7,
+        watermark_high: 0.85,
+        swap_bytes: 1 << 26,
+        prefix_cache: true,
+        workers,
+        ..SchedConfig::default()
+    }
+}
+
+fn rand_prompt(rng: &mut Pcg32, len: usize) -> Vec<u32> {
+    (0..len).map(|_| rng.below(200)).collect()
+}
+
+/// The mixed-pressure workload every twin-run leg replays: shared
+/// prefixes (prefix index + CoW), mixed policies and budgets (hole
+/// punching), prompts and generations sized so the small arena MUST
+/// preempt. Materialized up front so every leg submits byte-identical
+/// requests in the same order.
+fn pressure_workload() -> Vec<RequestBuilder> {
+    let mut rng = Pcg32::new(2024);
+    let shared = rand_prompt(&mut rng, 16); // 4 shared pages at page=4
+    let policies = ["paged", "streaming", "full", "keydiff", "inverse_key_norm"];
+    (0..10)
+        .map(|i| {
+            let mut prompt = if i % 2 == 0 { shared.clone() } else { Vec::new() };
+            prompt.extend(rand_prompt(&mut rng, 24 + (i % 5) * 8));
+            RequestBuilder::new(prompt)
+                .max_new_tokens(8 + (i % 4) * 6)
+                .policy(policies[i % policies.len()])
+                .budget(if i % 3 == 0 { 9999 } else { 48 })
+                .priority(match i % 3 {
+                    0 => Priority::High,
+                    1 => Priority::Normal,
+                    _ => Priority::Low,
+                })
+        })
+        .collect()
+}
+
+/// Submit `builders` to a fresh engine, run to completion, assert the
+/// shared pools drained to zero, and return (outputs by id, report).
+fn run_leg(
+    cfg: SchedConfig,
+    builders: Vec<RequestBuilder>,
+) -> (HashMap<u64, RequestOutput>, EngineReport) {
+    let page = cfg.page_size;
+    let mut engine = MultiEngine::new(cfg, move |_| SimBackend::new(page));
+    for b in builders {
+        engine.submit_builder(b).expect("submit");
+    }
+    let outs = engine.run_to_completion();
+    assert_eq!(
+        engine.arena().used(),
+        0,
+        "refcounted release must drain the shared arena at any worker count"
+    );
+    assert_eq!(engine.swap_pool().len(), 0, "no snapshot may outlive its request");
+    assert_eq!(engine.swap_pool().used_bytes(), 0, "swap byte accounting must return to zero");
+    let (report, _backends) = engine.shutdown(Duration::from_secs(5));
+    let by_id: HashMap<u64, RequestOutput> = outs.into_iter().map(|o| (o.id, o)).collect();
+    (by_id, report)
+}
+
+fn assert_same_outputs(
+    base: &HashMap<u64, RequestOutput>,
+    other: &HashMap<u64, RequestOutput>,
+    what: &str,
+) {
+    assert_eq!(base.len(), other.len(), "{what}: request count drifted");
+    for (id, b) in base {
+        let o = &other[id];
+        assert_eq!(b.tokens, o.tokens, "{what}: req {id} tokens drifted");
+        assert_eq!(b.finish, o.finish, "{what}: req {id} finish reason drifted");
+    }
+}
+
+/// Tentpole invariant: the twin-run matrix. The same pressured workload
+/// (forced preemption, shared prefixes, mixed priorities) produces
+/// bit-identical per-request outputs at 1, 2 and 4 workers.
+#[test]
+fn twin_run_matrix_outputs_bit_identical_under_pressure() {
+    let (base, base_report) = run_leg(cfg(4, 6, 24, 1), pressure_workload());
+    assert_eq!(base.len(), 10);
+    let preempted: u64 = base_report.workers.iter().map(|w| w.preemptions).sum();
+    assert!(preempted >= 1, "the workload must actually pressure the arena");
+    for workers in [2, 4] {
+        let (outs, report) = run_leg(cfg(4, 6, 24, workers), pressure_workload());
+        assert_eq!(report.workers.len(), workers);
+        assert_same_outputs(&base, &outs, &format!("workers={workers}"));
+    }
+}
+
+/// A prefix published by one worker's prefill is a refcount hit for
+/// every other worker — and retirement reclaims the shared blocks
+/// exactly (the arena returns to zero).
+#[test]
+fn shared_prefix_spans_workers_and_reclaims_exactly() {
+    let mk = || {
+        let mut rng = Pcg32::new(99);
+        let shared = rand_prompt(&mut rng, 32); // 8 shared pages at page=4
+        (0..12)
+            .map(|i| {
+                let mut prompt = shared.clone();
+                prompt.extend(rand_prompt(&mut rng, 16));
+                RequestBuilder::new(prompt)
+                    .max_new_tokens(6 + (i % 3) * 4)
+                    .policy("full")
+                    .budget(9999)
+            })
+            .collect::<Vec<_>>()
+    };
+    let (base, _) = run_leg(cfg(4, 4, 400, 1), mk());
+    let (outs, report) = run_leg(cfg(4, 4, 400, 4), mk());
+    assert_same_outputs(&base, &outs, "shared-prefix leg");
+    let hits: u64 = report.workers.iter().map(|w| w.prefix_hit_blocks).sum();
+    assert!(
+        hits >= 8,
+        "later prefills must hit the shared 8-page prefix across workers (got {hits})"
+    );
+    for (_, o) in outs {
+        assert_eq!(o.finish, FinishReason::MaxTokens);
+    }
+}
+
+/// Chaos leg: recoverable injected faults (transient decode faults and a
+/// batch failure) leave outputs bit-identical across worker counts —
+/// fault lanes are per-worker-stable and every recovery path is
+/// lossless.
+#[test]
+fn chaos_twin_run_with_transient_faults_stays_identical() {
+    let spec = "transient@r2s4,batch@6";
+    let run = |workers: usize| {
+        let plan = FaultPlan::parse(spec).expect("fault spec");
+        let mut engine = MultiEngine::new_sim_faulty(cfg(4, 6, 24, workers), plan);
+        for b in pressure_workload() {
+            engine.submit_builder(b).expect("submit");
+        }
+        let outs = engine.run_to_completion();
+        assert_eq!(engine.arena().used(), 0);
+        let (report, _backends) = engine.shutdown(Duration::from_secs(5));
+        let by_id: HashMap<u64, RequestOutput> = outs.into_iter().map(|o| (o.id, o)).collect();
+        (by_id, report)
+    };
+    let (base, base_report) = run(1);
+    assert_eq!(base.len(), 10);
+    let retries: u64 = base_report.workers.iter().map(|w| w.fault_retries).sum();
+    assert!(retries >= 1, "the fault plan must actually fire in the baseline");
+    let (outs, _) = run(4);
+    assert_same_outputs(&base, &outs, "chaos workers=4");
+}
+
+/// Cancellation fans out to the owning worker wherever the request lives
+/// (placement and stealing move entries behind the caller's back), and
+/// the survivors' outputs stay bit-identical across worker counts. The
+/// cancelled requests carry a huge generation budget so the cancel
+/// always lands while they are live — deterministically — at any count.
+#[test]
+fn cancel_reaches_owning_worker_and_survivors_match() {
+    let mk = || {
+        let mut rng = Pcg32::new(7);
+        (0..8)
+            .map(|i| {
+                let b = RequestBuilder::new(rand_prompt(&mut rng, 24)).policy("paged").budget(48);
+                if i == 2 || i == 5 {
+                    b.max_new_tokens(200_000) // can never finish before the cancel
+                } else {
+                    b.max_new_tokens(12)
+                }
+            })
+            .collect::<Vec<_>>()
+    };
+    let run = |workers: usize| {
+        let mut engine = MultiEngine::new(cfg(4, 8, 400, workers), |_| SimBackend::new(4));
+        let mut doomed = Vec::new();
+        for (i, b) in mk().into_iter().enumerate() {
+            let id = engine.submit_builder(b).expect("submit");
+            if i == 2 || i == 5 {
+                doomed.push(id.raw());
+            }
+        }
+        for id in &doomed {
+            // the Submit message may still be in the owner's inbox;
+            // retry until the cancel finds it (it can never finish)
+            let t0 = Instant::now();
+            while !engine.cancel(*id) {
+                assert!(t0.elapsed() < Duration::from_secs(10), "cancel never landed");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        let outs = engine.run_to_completion();
+        assert_eq!(engine.arena().used(), 0, "cancel must free the arena");
+        assert_eq!(engine.swap_pool().len(), 0);
+        let (report, _) = engine.shutdown(Duration::from_secs(5));
+        let cancelled: u64 = report.workers.iter().map(|w| w.cancelled).sum();
+        assert_eq!(cancelled, 2, "both cancels must land on their owning worker");
+        outs.into_iter().map(|o| (o.id, o)).collect::<HashMap<_, _>>()
+    };
+    let base = run(1);
+    assert_eq!(base.len(), 6, "the two doomed requests emit no output");
+    assert!(!base.contains_key(&3) && !base.contains_key(&6));
+    let outs = run(4);
+    assert_same_outputs(&base, &outs, "cancel survivors");
+}
+
+/// Work stealing: one worker saddled with a marathon request and a
+/// backlog donates queue-tail entries to peers it observes idle — the
+/// steal counter moves and every request still finishes with the same
+/// tokens as the single-worker run.
+#[test]
+fn skewed_load_donates_work_to_idle_workers() {
+    let mk = || {
+        let mut rng = Pcg32::new(11);
+        (0..16)
+            .map(|i| {
+                RequestBuilder::new(rand_prompt(&mut rng, 16))
+                    .max_new_tokens(if i == 0 { 4000 } else { 2 })
+                    .policy("paged")
+                    .budget(48)
+            })
+            .collect::<Vec<_>>()
+    };
+    // concurrency 1: the marathon's worker cannot interleave its backlog
+    let (base, _) = run_leg(cfg(4, 1, 800, 1), mk());
+    let (outs, report) = run_leg(cfg(4, 1, 800, 4), mk());
+    assert_same_outputs(&base, &outs, "skewed-load leg");
+    assert!(
+        report.steals >= 1,
+        "short requests queued behind the marathon must be donated to idle workers"
+    );
+}
+
+/// Cross-worker preemption: a worker whose admission is gated by the
+/// shared watermark while ANOTHER worker holds the arena posts reclaim
+/// pressure, and the worker owning the global
+/// `(priority, Reverse(admit_serial))`-min victim preempts it into the
+/// shared swap pool. Outputs still match the single-worker run.
+///
+/// Shape: a budget-capped marathon (~15 of the 16 arena blocks for
+/// thousands of rounds) and a short request that can NEVER co-reside
+/// with it. The short one is submitted only after the marathon's
+/// `Prefilled` event, so at 2 workers its (idle) owner is forced through
+/// the gate → pressure-channel → cross-preempt path.
+#[test]
+fn admission_pressure_preempts_across_workers() {
+    let mk_cfg = |workers| SchedConfig {
+        model: "sim".into(),
+        page_size: 4,
+        max_concurrency: 2,
+        max_live_blocks: 16,
+        watermark_low: 0.6,
+        watermark_high: 1.0,
+        swap_bytes: 1 << 26,
+        prefix_cache: false,
+        workers,
+        ..SchedConfig::default()
+    };
+    let mk_reqs = || {
+        let mut rng = Pcg32::new(5);
+        vec![
+            RequestBuilder::new(rand_prompt(&mut rng, 40))
+                .max_new_tokens(20_000)
+                .policy("paged")
+                .budget(56)
+                .stream_events(true),
+            RequestBuilder::new(rand_prompt(&mut rng, 28))
+                .max_new_tokens(16)
+                .policy("paged")
+                .budget(56),
+        ]
+    };
+    let run = |workers: usize| {
+        let mut engine = MultiEngine::new(mk_cfg(workers), |_| SimBackend::new(4));
+        let mut reqs = mk_reqs().into_iter();
+        engine.submit_builder(reqs.next().unwrap()).expect("submit");
+        // hold the second submission until the marathon is decoding, so
+        // its worker observes a held arena with thousands of rounds left
+        let t0 = Instant::now();
+        loop {
+            match engine.next_event(Duration::from_millis(50)) {
+                Some((1, SeqEvent::Prefilled { .. })) => break,
+                Some(_) => {}
+                None => assert!(
+                    t0.elapsed() < Duration::from_secs(10),
+                    "marathon never prefilled"
+                ),
+            }
+        }
+        engine.submit_builder(reqs.next().unwrap()).expect("submit");
+        let outs = engine.run_to_completion();
+        assert_eq!(engine.arena().used(), 0);
+        let cross = engine.cross_preempts();
+        let _ = engine.shutdown(Duration::from_secs(5));
+        (outs.into_iter().map(|o| (o.id, o)).collect::<HashMap<_, _>>(), cross)
+    };
+    let (base, _) = run(1);
+    assert_eq!(base.len(), 2);
+    let (outs, cross) = run(2);
+    assert_same_outputs(&base, &outs, "cross-preempt leg");
+    assert!(
+        cross >= 1,
+        "the gated worker must reclaim through the shared pressure channel"
+    );
+}
+
+/// Satellite: the admission claim scan (`kept_entries` over the whole
+/// prompt) runs ONCE per request even when the low-watermark gate makes
+/// the scheduler re-attempt the same admission round after round — the
+/// block count is memoized on the queue entry (`ClaimMemo`) and the
+/// scan's kept-entry artifact rides the entry to the prefill that
+/// consumes it.
+#[test]
+fn admission_claim_scan_is_memoized_across_gated_retries() {
+    let mut sched = Scheduler::new_sim(SchedConfig {
+        model: "sim".into(),
+        page_size: 4,
+        max_concurrency: 4,
+        // req 1 alone (10 -> 20 blocks of 32) sits above the low mark
+        // (16), so reqs 2 and 3 are popped, gated and requeued on EVERY
+        // round of its 40-token generation
+        max_live_blocks: 32,
+        watermark_low: 0.5,
+        watermark_high: 1.0,
+        swap_bytes: 0,
+        prefix_cache: false,
+        workers: 1,
+        ..SchedConfig::default()
+    });
+    let mut rng = Pcg32::new(3);
+    for id in 1..=3u64 {
+        let mut r = Request::new(id, rand_prompt(&mut rng, 40), 40);
+        r.policy = "full".into();
+        r.budget = 9999;
+        sched.submit(r);
+    }
+    let outs = sched.run_to_completion().expect("run");
+    assert_eq!(outs.len(), 3);
+    assert!(outs.iter().all(|o| o.finish == FinishReason::MaxTokens));
+    assert_eq!(sched.preemptions, 0, "gating (not preemption) must serialize this workload");
+    assert_eq!(
+        sched.backend().policy_scans(),
+        3,
+        "one policy scan per request: gated retries reuse the memo, the \
+         admitting prefill consumes the plan instead of rescanning"
+    );
+    assert_eq!(
+        sched.backend().claim_calls(),
+        3,
+        "gated retries must not even reach the backend: the block count \
+         is served from the ClaimMemo"
+    );
+}

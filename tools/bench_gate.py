@@ -17,6 +17,12 @@ micro_hotpath`` (a flat ``{op name: microseconds/op}`` object) and FAILS
   * any gated op exceeds its absolute ceiling in ``CEILINGS_US`` —
     generous catastrophic-regression bounds (10-100x expected values),
     sized for noisy shared CI runners, not laptops;
+  * the multi-worker engine's 4-worker aggregate decode throughput is
+    not at least ``--min-engine-scaling`` (default 2.5x) the 1-worker
+    number. The bench records the machine's core count alongside the two
+    throughput rows; on runners with fewer than 4 cores the RATIO check
+    is skipped (the parallelism physically is not there) while the
+    rows' presence and absolute ceilings still apply;
   * any row the gate needs is missing (a silently renamed bench row must
     not turn the gate into a no-op).
 
@@ -35,6 +41,9 @@ TABLE_REBUILD = "block_table rebuild+consume (64 blocks)"
 TABLE_INCR = "block_table incremental+consume (64 blocks)"
 MASK_REBUILD = "valid_mask rebuild+consume (1024 slots)"
 MASK_INCR = "valid_mask incremental+consume (1024 slots)"
+ENGINE_1W = "engine decode throughput, 1 worker (us/token)"
+ENGINE_4W = "engine decode throughput, 4 workers (us/token)"
+CORES = "cpu cores available"
 
 # Absolute per-op ceilings in microseconds. Deliberately loose: they exist
 # to catch an accidental O(n) -> O(n^2) (or a stray allocation storm), not
@@ -62,10 +71,21 @@ CEILINGS_US = {
     # wrapper with NO plan — the passthrough path must stay ~free, since
     # it sits on the hot path whenever fault injection is compiled in.
     "fault_passthrough decode step (no plan)": 500.0,
+    # multi-worker engine: a work-stealing handoff is pure queue surgery
+    # (steal_tail + inject, no block traffic) and must stay that cheap...
+    "worker_handoff (steal_tail + inject)": 250.0,
+    # ... while a cross-worker preemption cycle snapshots the victim into
+    # the shared swap pool and restores it a round later — a per-PRESSURE
+    # cost, not per-token, hence the slack.
+    "cross_worker_preempt (preempt_min + restore round)": 5000.0,
+    # aggregate sim decode through the engine; loose per-token bounds so
+    # an accidental serialization (one giant lock) still trips them.
+    ENGINE_1W: 2000.0,
+    ENGINE_4W: 2000.0,
 }
 
 
-def check(rows, min_table_speedup, min_mask_speedup):
+def check(rows, min_table_speedup, min_mask_speedup, min_engine_scaling=2.5):
     """Return (failures, report_lines) for a {op: us/op} mapping."""
     failures = []
     report = []
@@ -108,6 +128,27 @@ def check(rows, min_table_speedup, min_mask_speedup):
                 f"absolute regression: {name}: {v:.3f} us exceeds the {ceiling:.1f} us ceiling"
             )
 
+    # multi-worker scaling: 4 workers over one shared arena must actually
+    # saturate the cores. Only meaningful where 4 cores exist — the bench
+    # reports the machine's parallelism so a 2-core runner skips the
+    # ratio (the rows themselves are still required above/below).
+    us1, us4, cores = lookup(ENGINE_1W), lookup(ENGINE_4W), lookup(CORES)
+    if us1 is not None and us4 is not None and cores is not None:
+        scaling = us1 / max(us4, 1e-9)
+        if cores >= 4:
+            line = (
+                f"engine scaling: {us1:.3f} us/token (1w) -> {us4:.3f} us/token (4w) "
+                f"({scaling:.2f}x, need >= {min_engine_scaling:.1f}x on {cores:.0f} cores)"
+            )
+            report.append(line)
+            if scaling < min_engine_scaling:
+                failures.append(f"scaling regression: {line}")
+        else:
+            report.append(
+                f"engine scaling: {scaling:.2f}x observed, ratio check skipped "
+                f"({cores:.0f} core(s) < 4)"
+            )
+
     return failures, report
 
 
@@ -116,6 +157,7 @@ def main(argv=None):
     ap.add_argument("json_path", help="path to BENCH_hotpath.json")
     ap.add_argument("--min-table-speedup", type=float, default=5.0)
     ap.add_argument("--min-mask-speedup", type=float, default=1.2)
+    ap.add_argument("--min-engine-scaling", type=float, default=2.5)
     args = ap.parse_args(argv)
 
     try:
@@ -128,7 +170,9 @@ def main(argv=None):
         print("bench gate: bench JSON must be an object of op -> us/op", file=sys.stderr)
         return 1
 
-    failures, report = check(rows, args.min_table_speedup, args.min_mask_speedup)
+    failures, report = check(
+        rows, args.min_table_speedup, args.min_mask_speedup, args.min_engine_scaling
+    )
     for line in report:
         print(f"  {line}")
     if failures:

@@ -34,6 +34,11 @@ def healthy_rows():
         "cow_copy cycle (hit 4 blocks + make_private)": 40.0,
         "cancel_request (submit+prefill+cancel)": 60.0,
         "fault_passthrough decode step (no plan)": 30.0,
+        "worker_handoff (steal_tail + inject)": 0.5,
+        "cross_worker_preempt (preempt_min + restore round)": 80.0,
+        bench_gate.ENGINE_1W: 12.0,
+        bench_gate.ENGINE_4W: 4.0,  # 3.0x scaling
+        bench_gate.CORES: 8,
     }
     return rows
 
@@ -42,8 +47,9 @@ class CheckTests(unittest.TestCase):
     def run_check(self, rows, **kw):
         table = kw.pop("min_table_speedup", 5.0)
         mask = kw.pop("min_mask_speedup", 1.2)
+        scaling = kw.pop("min_engine_scaling", 2.5)
         assert not kw
-        return bench_gate.check(rows, table, mask)
+        return bench_gate.check(rows, table, mask, scaling)
 
     def test_healthy_run_passes(self):
         failures, report = self.run_check(healthy_rows())
@@ -97,6 +103,59 @@ class CheckTests(unittest.TestCase):
         self.assertTrue(
             any("missing bench row" in f and "fault_passthrough" in f for f in failures)
         )
+
+    def test_worker_handoff_ceiling_and_presence_are_gated(self):
+        row = "worker_handoff (steal_tail + inject)"
+        rows = healthy_rows()
+        rows[row] = 9999.0
+        failures, _ = self.run_check(rows)
+        self.assertTrue(any("worker_handoff" in f and "absolute" in f for f in failures))
+        rows = healthy_rows()
+        del rows[row]
+        failures, _ = self.run_check(rows)
+        self.assertTrue(
+            any("missing bench row" in f and "worker_handoff" in f for f in failures)
+        )
+
+    def test_cross_worker_preempt_ceiling_is_gated(self):
+        row = "cross_worker_preempt (preempt_min + restore round)"
+        rows = healthy_rows()
+        rows[row] = 99999.0
+        failures, _ = self.run_check(rows)
+        self.assertTrue(
+            any("cross_worker_preempt" in f and "absolute" in f for f in failures)
+        )
+
+    def test_engine_scaling_below_bar_fails(self):
+        rows = healthy_rows()
+        rows[bench_gate.ENGINE_4W] = rows[bench_gate.ENGINE_1W] / 2.0  # 2.0x < 2.5x
+        failures, _ = self.run_check(rows)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("scaling regression", failures[0])
+
+    def test_engine_scaling_skipped_below_four_cores(self):
+        rows = healthy_rows()
+        rows[bench_gate.ENGINE_4W] = rows[bench_gate.ENGINE_1W]  # no scaling at all
+        rows[bench_gate.CORES] = 2
+        failures, report = self.run_check(rows)
+        self.assertEqual(failures, [])
+        self.assertTrue(any("ratio check skipped" in line for line in report))
+
+    def test_engine_scaling_threshold_flag(self):
+        rows = healthy_rows()
+        rows[bench_gate.ENGINE_4W] = rows[bench_gate.ENGINE_1W] / 2.0
+        failures, _ = self.run_check(rows, min_engine_scaling=1.5)
+        self.assertEqual(failures, [])
+
+    def test_missing_engine_rows_fail(self):
+        for row in (bench_gate.ENGINE_1W, bench_gate.ENGINE_4W, bench_gate.CORES):
+            rows = healthy_rows()
+            del rows[row]
+            failures, _ = self.run_check(rows)
+            self.assertTrue(
+                any("missing bench row" in f and row in f for f in failures),
+                f"deleting {row!r} must fail the gate",
+            )
 
     def test_missing_row_fails_instead_of_skipping(self):
         rows = healthy_rows()
