@@ -10,6 +10,9 @@
 //!   schedule  batched-scheduler demo on the deterministic sim backend
 //!             (shared arena, preemption under pressure, streaming
 //!             events, mid-run aborts; no PJRT needed)
+//!   slo       replay named SLO scenarios (seeded multi-tenant traffic)
+//!             through the multi-worker engine and report tail latency,
+//!             goodput and per-scenario digests (`BENCH_slo.json`)
 //!
 //! Examples:
 //!   paged-eviction serve --port 7071 --stream on
@@ -18,6 +21,7 @@
 //!   paged-eviction schedule --requests 16 --arena-blocks 64 --gen 48
 //!   paged-eviction schedule --stream on --abort 3@4
 //!   paged-eviction schedule --trace requests.trace
+//!   paged-eviction slo --scenario bursty-chat,longbench-replay --workers 1,4
 
 use anyhow::Result;
 
@@ -34,9 +38,10 @@ fn main() {
         "info" => cmd_info(),
         "simulate" => cmd_simulate(),
         "schedule" => cmd_schedule(),
+        "slo" => cmd_slo(),
         _ => {
             eprintln!(
-                "usage: paged-eviction <serve|generate|info|simulate|schedule> [options]\n\
+                "usage: paged-eviction <serve|generate|info|simulate|schedule|slo> [options]\n\
                  run `paged-eviction <cmd> --help` for details"
             );
             std::process::exit(2);
@@ -784,6 +789,329 @@ fn schedule_multi(
         );
     }
     Ok(())
+}
+
+/// Metrics from one `slo` scenario × worker-count run — one row of
+/// `BENCH_slo.json` (schema `slo-v1`), gated by `tools/bench_gate.py --slo`.
+struct SloRow {
+    scenario: String,
+    workers: usize,
+    requests: usize,
+    completed: usize,
+    digest: u64,
+    elapsed_s: f64,
+    ttft_p50_ms: f64,
+    ttft_p99_ms: f64,
+    tpot_p50_ms: f64,
+    tpot_p99_ms: f64,
+    /// Fraction of completed requests meeting BOTH SLO ceilings.
+    slo_attainment: f64,
+    /// Output tokens/s counting only SLO-meeting requests.
+    goodput_tok_s: f64,
+    decoded_tokens: u64,
+    preemptions: u64,
+    swap_outs: u64,
+    swap_restores: u64,
+    cow_copies: u64,
+    prefix_hit_blocks: u64,
+    steals: u64,
+    cross_preempts: u64,
+    chunk_prefills: u64,
+}
+
+/// Replay named SLO scenarios through [`MultiEngine`] at one or more
+/// worker counts. Traffic is fully seeded (same seed → same trace → same
+/// per-request token streams), so per-scenario output digests must match
+/// across worker counts — this driver *fails* if they do not, which is
+/// what the `slo-smoke` CI job leans on. Latency rows go to stdout and,
+/// with `--json`, to a `BENCH_slo.json` the SLO gate asserts against.
+fn cmd_slo() -> Result<()> {
+    use paged_eviction::workload::Scenario;
+
+    let args = ArgSpec::new(
+        "paged-eviction slo",
+        "SLO workload replay: seeded multi-tenant traffic through the \
+         multi-worker engine, tail-latency + goodput + digest rows",
+    )
+    .opt(
+        "scenario",
+        "bursty-chat,longbench-replay",
+        "comma list of scenarios (bursty-chat|longbench-replay|diurnal-mixed|all)",
+    )
+    .opt("workers", "1,4", "comma list of worker counts to replay at")
+    .opt("concurrency", "4", "max concurrent sequences per worker")
+    .opt("arena-blocks", "320", "shared arena capacity (blocks)")
+    .opt("page-size", "16", "KV page size")
+    .opt("json", "", "write BENCH_slo.json-style rows to this path")
+    .opt("seed", "42", "trace synthesis seed")
+    .parse_or_exit(2);
+
+    let seed = args.get_u64("seed");
+    let names: Vec<String> = if args.get("scenario") == "all" {
+        Scenario::builtin_names().iter().map(|s| s.to_string()).collect()
+    } else {
+        args.get("scenario")
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| s.trim().to_string())
+            .collect()
+    };
+    anyhow::ensure!(!names.is_empty(), "--scenario lists no scenarios");
+    let worker_counts: Vec<usize> = args
+        .get("workers")
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad --workers entry {s:?}"))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!worker_counts.is_empty(), "--workers lists no counts");
+
+    let mut rows: Vec<SloRow> = Vec::new();
+    for name in &names {
+        let sc = Scenario::builtin(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown scenario {name:?} (want one of {:?})",
+                Scenario::builtin_names()
+            )
+        })?;
+        let mut digests: Vec<(usize, u64)> = Vec::new();
+        for &w in &worker_counts {
+            let row = run_slo_scenario(
+                &sc,
+                w.max(1),
+                seed,
+                args.get_usize("concurrency"),
+                args.get_usize("arena-blocks"),
+                args.get_usize("page-size"),
+            )?;
+            println!(
+                "scenario {} workers {}: {}/{} done in {:.2}s, ttft p50/p99 \
+                 {:.1}/{:.1} ms, tpot p50/p99 {:.2}/{:.2} ms, attainment {:.2}, \
+                 goodput {:.0} tok/s",
+                row.scenario,
+                row.workers,
+                row.completed,
+                row.requests,
+                row.elapsed_s,
+                row.ttft_p50_ms,
+                row.ttft_p99_ms,
+                row.tpot_p50_ms,
+                row.tpot_p99_ms,
+                row.slo_attainment,
+                row.goodput_tok_s,
+            );
+            println!(
+                "  preempts {} (swap out {}, restored {}), cow {}, prefix hits {}, \
+                 steals {}, cross preempts {}, chunk prefills {}",
+                row.preemptions,
+                row.swap_outs,
+                row.swap_restores,
+                row.cow_copies,
+                row.prefix_hit_blocks,
+                row.steals,
+                row.cross_preempts,
+                row.chunk_prefills,
+            );
+            println!("digest scenario={} workers={} {:016x}", row.scenario, row.workers, row.digest);
+            digests.push((row.workers, row.digest));
+            rows.push(row);
+        }
+        // the determinism contract this whole harness rides on: placement
+        // must never change any request's output
+        if let Some(&(w0, d0)) = digests.first() {
+            for &(w, d) in &digests[1..] {
+                anyhow::ensure!(
+                    d == d0,
+                    "scenario {name}: digest {d:016x} at workers={w} differs from \
+                     {d0:016x} at workers={w0}"
+                );
+            }
+        }
+    }
+
+    if !args.get("json").is_empty() {
+        let json = render_slo_json(seed, &rows);
+        std::fs::write(args.get("json"), &json)?;
+        println!("wrote {} rows to {}", rows.len(), args.get("json"));
+    }
+    Ok(())
+}
+
+/// Replay one scenario at one worker count and measure it.
+fn run_slo_scenario(
+    sc: &paged_eviction::workload::Scenario,
+    workers: usize,
+    seed: u64,
+    concurrency: usize,
+    arena_blocks: usize,
+    page_size: usize,
+) -> Result<SloRow> {
+    use paged_eviction::api::{RequestBuilder, SeqEvent};
+    use paged_eviction::runtime::{FaultyBackend, SimBackend};
+    use paged_eviction::scheduler::{MultiEngine, SchedConfig};
+    use paged_eviction::util::stats::Histogram;
+    use std::time::{Duration, Instant};
+
+    let cfg = SchedConfig {
+        model: "sim".into(),
+        page_size,
+        max_concurrency: concurrency,
+        max_live_blocks: arena_blocks,
+        prefix_cache: true,
+        default_policy: "paged".into(),
+        default_budget: 1024,
+        workers,
+        prefill_chunk: sc.prefill_chunk,
+        ..SchedConfig::default()
+    };
+    let reqs = sc.synthesize(seed);
+    // materialize every builder up front, in arrival order: ids and token
+    // streams are then independent of worker count and wall-clock pacing
+    let mut builders: Vec<Option<RequestBuilder>> = reqs
+        .iter()
+        .map(|r| Some(RequestBuilder::new(r.prompt.clone()).max_new_tokens(r.max_new_tokens)))
+        .collect();
+
+    let page = cfg.page_size;
+    let mut engine =
+        MultiEngine::new(cfg, move |_| FaultyBackend::passthrough(SimBackend::new(page)));
+    let t0 = Instant::now();
+    let mut outs = Vec::new();
+    let mut next = 0usize;
+    loop {
+        let now_s = t0.elapsed().as_secs_f64();
+        while next < reqs.len() && reqs[next].at_s <= now_s {
+            let b = builders[next].take().expect("each builder is consumed once");
+            engine.submit_builder(b)?;
+            next += 1;
+        }
+        if next >= reqs.len() && engine.inflight() == 0 {
+            break;
+        }
+        // short event-poll tick; workers run rounds on their own threads
+        let tick_end = Instant::now() + Duration::from_millis(2);
+        loop {
+            let left = tick_end.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            let Some((_, ev)) = engine.next_event(left) else { break };
+            if let SeqEvent::Finished(o) = ev {
+                outs.push(o);
+            }
+        }
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let steals = engine.steals();
+    let cross_preempts = engine.cross_preempts();
+    let (report, _backends) = engine.shutdown(Duration::from_secs(10));
+    outs.extend(report.leftover);
+    outs.sort_by_key(|o| o.id);
+    anyhow::ensure!(!outs.is_empty(), "scenario {} produced no outputs", sc.name);
+
+    let mut ttft = Histogram::new();
+    let mut tpot = Histogram::new();
+    let mut met = 0usize;
+    let mut good_tokens = 0u64;
+    for o in &outs {
+        let ttft_ms = o.ttft_s * 1e3;
+        let tpot_ms = o.tpot_s * 1e3;
+        ttft.add(ttft_ms);
+        if o.tokens.len() > 1 {
+            tpot.add(tpot_ms);
+        }
+        if ttft_ms <= sc.slo.ttft_ms && tpot_ms <= sc.slo.tpot_ms {
+            met += 1;
+            good_tokens += o.tokens.len() as u64;
+        }
+    }
+    let (tpot_p50, tpot_p99) =
+        if tpot.is_empty() { (0.0, 0.0) } else { (tpot.pctl(0.50), tpot.pctl(0.99)) };
+    Ok(SloRow {
+        scenario: sc.name.to_string(),
+        workers,
+        requests: reqs.len(),
+        completed: outs.len(),
+        digest: output_digest(&outs),
+        elapsed_s,
+        ttft_p50_ms: ttft.pctl(0.50),
+        ttft_p99_ms: ttft.pctl(0.99),
+        tpot_p50_ms: tpot_p50,
+        tpot_p99_ms: tpot_p99,
+        slo_attainment: met as f64 / outs.len() as f64,
+        goodput_tok_s: good_tokens as f64 / elapsed_s,
+        decoded_tokens: report.workers.iter().map(|w| w.decoded_tokens).sum(),
+        preemptions: report.workers.iter().map(|w| w.preemptions).sum(),
+        swap_outs: report.workers.iter().map(|w| w.swap_outs).sum(),
+        swap_restores: report.workers.iter().map(|w| w.swap_restores).sum(),
+        cow_copies: report.workers.iter().map(|w| w.cow_copies).sum(),
+        prefix_hit_blocks: report.workers.iter().map(|w| w.prefix_hit_blocks).sum(),
+        steals,
+        cross_preempts,
+        chunk_prefills: report.workers.iter().map(|w| w.chunk_prefills).sum(),
+    })
+}
+
+/// Hand-rolled `BENCH_slo.json` (schema `slo-v1`) — mirrors the
+/// dependency-free style of the micro-bench JSON emitter.
+fn render_slo_json(seed: u64, rows: &[SloRow]) -> String {
+    fn f(x: f64) -> String {
+        if x.is_finite() {
+            format!("{x:.6}")
+        } else {
+            "null".to_string()
+        }
+    }
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"slo-v1\",\n");
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"workers\": {}, \"requests\": {}, \
+             \"completed\": {}, \"digest\": \"{:016x}\", \"elapsed_s\": {}, \
+             \"ttft_p50_ms\": {}, \"ttft_p99_ms\": {}, \"tpot_p50_ms\": {}, \
+             \"tpot_p99_ms\": {}, \"slo_attainment\": {}, \"goodput_tok_s\": {}, \
+             \"decoded_tokens\": {}, \"preemptions\": {}, \"swap_outs\": {}, \
+             \"swap_restores\": {}, \"cow_copies\": {}, \"prefix_hit_blocks\": {}, \
+             \"steals\": {}, \"cross_preempts\": {}, \"chunk_prefills\": {}, \
+             \"preempt_per_s\": {}, \"swap_per_s\": {}, \"cow_per_s\": {}, \
+             \"steal_per_s\": {}, \"cross_preempt_per_s\": {}}}{}\n",
+            r.scenario,
+            r.workers,
+            r.requests,
+            r.completed,
+            r.digest,
+            f(r.elapsed_s),
+            f(r.ttft_p50_ms),
+            f(r.ttft_p99_ms),
+            f(r.tpot_p50_ms),
+            f(r.tpot_p99_ms),
+            f(r.slo_attainment),
+            f(r.goodput_tok_s),
+            r.decoded_tokens,
+            r.preemptions,
+            r.swap_outs,
+            r.swap_restores,
+            r.cow_copies,
+            r.prefix_hit_blocks,
+            r.steals,
+            r.cross_preempts,
+            r.chunk_prefills,
+            f(r.preemptions as f64 / r.elapsed_s),
+            f(r.swap_outs as f64 / r.elapsed_s),
+            f(r.cow_copies as f64 / r.elapsed_s),
+            f(r.steals as f64 / r.elapsed_s),
+            f(r.cross_preempts as f64 / r.elapsed_s),
+            if i + 1 == rows.len() { "" } else { "," },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
 }
 
 fn cmd_simulate() -> Result<()> {

@@ -60,7 +60,7 @@ use anyhow::Result;
 use crate::eviction::EvictionPolicy;
 use crate::kvcache::{BlockAlloc, BlockManager, SeqCache};
 use crate::scheduler::backend::{
-    BackendError, DecodeBackend, HostSnapshot, Prefilled, Restored,
+    BackendError, DecodeBackend, HostSnapshot, Prefilled, PrefillStep, Restored,
 };
 use crate::scheduler::Request;
 
@@ -449,6 +449,28 @@ impl<B: DecodeBackend> FaultyBackend<B> {
         &mut self.inner
     }
 
+    /// Lane-stamp the outcome of a chunked-prefill step: a completed
+    /// chunked prefill claims its lane at `Done` (the moment the sequence
+    /// becomes live), exactly where the one-shot path claims it at
+    /// `Ready` — so lane numbering stays prefill-order regardless of how
+    /// the compute was sliced.
+    fn wrap_step(
+        &mut self,
+        step: PrefillStep<B::Seq, B::PrefillJob>,
+    ) -> PrefillStep<FaultSeq<B::Seq>, B::PrefillJob> {
+        match step {
+            PrefillStep::More(job) => PrefillStep::More(job),
+            PrefillStep::Done { seq, logits } => {
+                self.next_lane += 1;
+                PrefillStep::Done {
+                    seq: FaultSeq { inner: seq, lane: self.next_lane, attempts: 0 },
+                    logits,
+                }
+            }
+            PrefillStep::OutOfMemory => PrefillStep::OutOfMemory,
+        }
+    }
+
     /// Injected-fault tallies so far.
     pub fn fault_counts(&self) -> FaultCounts {
         FaultCounts {
@@ -468,6 +490,8 @@ impl<B: DecodeBackend> DecodeBackend for FaultyBackend<B> {
     type Snapshot = FaultSnapshot<B::Snapshot>;
 
     type PrefillPlan = B::PrefillPlan;
+
+    type PrefillJob = B::PrefillJob;
 
     fn set_prefix_cache(&mut self, enabled: bool) {
         self.inner.set_prefix_cache(enabled);
@@ -518,6 +542,33 @@ impl<B: DecodeBackend> DecodeBackend for FaultyBackend<B> {
             }
             Prefilled::OutOfMemory => Ok(Prefilled::OutOfMemory),
         }
+    }
+
+    fn prefill_begin(
+        &mut self,
+        arena: &BlockManager,
+        prompt: &[u32],
+        budget: usize,
+        policy: Box<dyn EvictionPolicy>,
+        plan: Option<&Self::PrefillPlan>,
+        chunk: usize,
+    ) -> Result<Option<PrefillStep<Self::Seq, Self::PrefillJob>>> {
+        match self
+            .inner
+            .prefill_begin(arena, prompt, budget, policy, plan, chunk)?
+        {
+            Some(step) => Ok(Some(self.wrap_step(step))),
+            None => Ok(None),
+        }
+    }
+
+    fn prefill_advance(
+        &mut self,
+        job: Self::PrefillJob,
+        chunk: usize,
+    ) -> Result<PrefillStep<Self::Seq, Self::PrefillJob>> {
+        let step = self.inner.prefill_advance(job, chunk)?;
+        Ok(self.wrap_step(step))
     }
 
     fn cache(seq: &Self::Seq) -> &SeqCache {

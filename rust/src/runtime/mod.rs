@@ -21,4 +21,4 @@ pub use manifest::{GraphInfo, GraphKind, Manifest, ModelInfo};
 #[cfg(feature = "xla")]
 pub use model_runner::{ModelRunner, Sequence, StepOutput};
 pub use faults::{FaultCounts, FaultPlan, FaultSeq, FaultSnapshot, FaultyBackend};
-pub use sim_backend::{SimBackend, SimPrefillPlan, SimSeq, SimSnapshot};
+pub use sim_backend::{SimBackend, SimPrefillJob, SimPrefillPlan, SimSeq, SimSnapshot};

@@ -463,6 +463,10 @@ mod pjrt {
         // The PJRT claim estimate computes nothing a prefill could reuse.
         type PrefillPlan = ();
 
+        // Chunked prefill unsupported: prefill_begin's default Ok(None)
+        // routes the scheduler to the one-shot path.
+        type PrefillJob = ();
+
         fn prefill(
             &mut self,
             arena: &BlockManager,

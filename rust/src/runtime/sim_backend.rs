@@ -23,7 +23,8 @@ use anyhow::Result;
 use crate::eviction::{make_policy, Decision, EvictionPolicy, PrefillScores};
 use crate::kvcache::{prefix_block_hashes, BlockAlloc, BlockManager, KvSnapshot, SeqCache};
 use crate::scheduler::backend::{
-    static_prefill_claim, BackendError, DecodeBackend, HostSnapshot, Prefilled, Restored,
+    static_prefill_claim, BackendError, DecodeBackend, HostSnapshot, Prefilled, PrefillStep,
+    Restored,
 };
 use crate::scheduler::Request;
 
@@ -82,6 +83,35 @@ impl HostSnapshot for SimSnapshot {
 pub struct SimPrefillPlan {
     entries: Vec<(u32, [f32; 3])>,
     keys: Vec<u64>,
+}
+
+/// Carried state of an in-progress chunked prefill.
+///
+/// The sim's "forward pass" over the prompt is the rolling history-hash
+/// fold, so a chunk folds the next `chunk` prompt tokens; the kept-entry
+/// stream (the policy scan over the FULL prompt — identical to what the
+/// one-shot path loads) rides along, and the packed cache is materialized
+/// only at the final chunk (claim-at-completion). An abandoned job
+/// therefore holds no arena blocks and drops for free, and the finished
+/// sequence is bit-identical to a one-shot prefill by construction: the
+/// fold order, the entry stream and the bulk load are the same code.
+pub struct SimPrefillJob {
+    arena: BlockManager,
+    entries: Vec<(u32, [f32; 3])>,
+    keys: Vec<u64>,
+    prompt: Vec<u32>,
+    /// Prompt tokens folded into `state` so far.
+    folded: usize,
+    state: u64,
+    budget: usize,
+    policy: Box<dyn EvictionPolicy>,
+}
+
+impl SimPrefillJob {
+    /// Prompt tokens still unprocessed — what the remaining chunks cover.
+    pub fn remaining(&self) -> usize {
+        self.prompt.len() - self.folded
+    }
 }
 
 pub struct SimBackend {
@@ -207,6 +237,8 @@ impl DecodeBackend for SimBackend {
 
     type PrefillPlan = SimPrefillPlan;
 
+    type PrefillJob = SimPrefillJob;
+
     fn set_prefix_cache(&mut self, enabled: bool) {
         self.prefix_cache = enabled;
     }
@@ -312,6 +344,83 @@ impl DecodeBackend for SimBackend {
         let logits = self.logits(state);
         Ok(Prefilled::Ready {
             seq: SimSeq { cache, budget, policy, prompt_len: len, state },
+            logits,
+        })
+    }
+
+    /// Start a chunked prefill: run the (full-prompt) policy scan exactly
+    /// as the one-shot path would, then fold the first `chunk` tokens.
+    /// The cache is NOT allocated yet — see [`SimPrefillJob`].
+    fn prefill_begin(
+        &mut self,
+        arena: &BlockManager,
+        prompt: &[u32],
+        budget: usize,
+        policy: Box<dyn EvictionPolicy>,
+        plan: Option<&SimPrefillPlan>,
+        chunk: usize,
+    ) -> Result<Option<PrefillStep<SimSeq, SimPrefillJob>>> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(budget >= self.page_size, "budget below one page");
+        let (entries, keys) = match plan {
+            Some(p) => (p.entries.clone(), p.keys.clone()),
+            None => self.kept_entries(prompt, budget, policy.as_ref()),
+        };
+        anyhow::ensure!(!entries.is_empty(), "policy kept zero tokens");
+        let job = SimPrefillJob {
+            arena: arena.clone(),
+            entries,
+            keys,
+            prompt: prompt.to_vec(),
+            folded: 0,
+            state: 0,
+            budget,
+            policy,
+        };
+        self.prefill_advance(job, chunk).map(Some)
+    }
+
+    /// Fold up to `chunk` more prompt tokens; on the final chunk, claim
+    /// and bulk-load the packed cache exactly like the one-shot prefill.
+    fn prefill_advance(
+        &mut self,
+        mut job: SimPrefillJob,
+        chunk: usize,
+    ) -> Result<PrefillStep<SimSeq, SimPrefillJob>> {
+        let take = job.remaining().min(chunk.max(1));
+        for &t in &job.prompt[job.folded..job.folded + take] {
+            job.state = fold(job.state, t);
+        }
+        job.folded += take;
+        if job.folded < job.prompt.len() {
+            return Ok(PrefillStep::More(job));
+        }
+
+        let bs = self.page_size;
+        let len = job.prompt.len();
+        // bucket: kept tokens plus two pages of eviction-oscillation slack
+        let bucket = (job.entries.len() + bs - 1) / bs + 2;
+        let mut cache = SeqCache::new_shared(bs, bucket, &job.arena);
+        let loaded = if self.prefix_cache {
+            cache
+                .try_load_prefill_cached(&job.entries, &job.keys, len as u32)
+                .map(|_| ())
+        } else {
+            cache.try_load_prefill(&job.entries, len as u32)
+        };
+        if loaded.is_err() {
+            // dropping `cache` returns any partially claimed blocks
+            return Ok(PrefillStep::OutOfMemory);
+        }
+        let logits = self.logits(job.state);
+        Ok(PrefillStep::Done {
+            seq: SimSeq {
+                cache,
+                budget: job.budget,
+                policy: job.policy,
+                prompt_len: len,
+                state: job.state,
+            },
             logits,
         })
     }

@@ -129,6 +129,26 @@ pub enum Prefilled<S> {
     OutOfMemory,
 }
 
+/// Outcome of one chunk of an incremental (chunked) prefill.
+///
+/// Chunked prefill spreads a huge prompt's compute across several
+/// scheduler rounds instead of head-of-line blocking a decode round: each
+/// round the scheduler feeds one `prefill_chunk`-sized slice of prompt
+/// through [`DecodeBackend::prefill_advance`] and still runs its normal
+/// batched decode for the sequences already generating.
+pub enum PrefillStep<S, J> {
+    /// Prompt tokens remain; call [`DecodeBackend::prefill_advance`] again
+    /// next round with the carried job.
+    More(J),
+    /// Final chunk processed: the sequence is live and `logits` are the
+    /// last-position logits, exactly as [`Prefilled::Ready`] would have
+    /// returned them for a one-shot prefill of the same request.
+    Done { seq: S, logits: Vec<f32> },
+    /// The arena cannot hold the packed prompt right now (claim happens at
+    /// completion). Not an error: the scheduler requeues the request.
+    OutOfMemory,
+}
+
 /// Outcome of a swap-restore attempt against the shared arena.
 pub enum Restored<S> {
     /// Sequence rebuilt from the host snapshot; decode continues exactly
@@ -184,6 +204,12 @@ pub trait DecodeBackend {
     /// the epoch-keyed [`ClaimMemo`] — for the entry's whole queued life.
     type PrefillPlan;
 
+    /// Carried state of an in-progress chunked prefill between rounds.
+    /// Use `()` for backends that do not support chunking
+    /// ([`DecodeBackend::prefill_begin`] then returns `Ok(None)` and the
+    /// scheduler falls back to the one-shot path).
+    type PrefillJob;
+
     /// Enable or disable the backend's prefix cache (refcounted shared
     /// prompt pages). Called once by the scheduler from its config;
     /// backends without a prefix cache ignore it.
@@ -228,6 +254,41 @@ pub trait DecodeBackend {
         _plan: Option<&Self::PrefillPlan>,
     ) -> Result<Prefilled<Self::Seq>> {
         self.prefill(arena, prompt, budget, policy)
+    }
+
+    /// Begin a chunked prefill: process the first `chunk` prompt tokens
+    /// and carry the rest as a [`PrefillStep::More`] job the scheduler
+    /// advances on subsequent rounds via
+    /// [`DecodeBackend::prefill_advance`]. Arena pages are claimed when
+    /// the FINAL chunk completes (claim-at-completion), so an in-progress
+    /// job holds no arena blocks and aborting one (deadline, cancel,
+    /// memory pressure) is free. A backend that honors this MUST produce
+    /// a sequence bit-identical to [`DecodeBackend::prefill_planned`] of
+    /// the same request — chunking slices compute, never content. The
+    /// default returns `Ok(None)`: chunking unsupported, scheduler uses
+    /// the one-shot path.
+    fn prefill_begin(
+        &mut self,
+        _arena: &BlockManager,
+        _prompt: &[u32],
+        _budget: usize,
+        _policy: Box<dyn EvictionPolicy>,
+        _plan: Option<&Self::PrefillPlan>,
+        _chunk: usize,
+    ) -> Result<Option<PrefillStep<Self::Seq, Self::PrefillJob>>> {
+        Ok(None)
+    }
+
+    /// Advance an in-progress chunked prefill by up to `chunk` prompt
+    /// tokens. Only ever called with a job returned by
+    /// [`DecodeBackend::prefill_begin`] / a previous `prefill_advance`,
+    /// so backends that never return one can leave the default.
+    fn prefill_advance(
+        &mut self,
+        _job: Self::PrefillJob,
+        _chunk: usize,
+    ) -> Result<PrefillStep<Self::Seq, Self::PrefillJob>> {
+        unreachable!("prefill_advance called on a backend that never returns PrefillStep::More")
     }
 
     /// Make `seq` safe for this round's decode step, called during

@@ -165,6 +165,9 @@ pub struct WorkerStats {
     pub swap_restores: u64,
     pub prefix_hit_blocks: u64,
     pub cow_copies: u64,
+    /// Chunked-prefill advances this worker ran (0 unless
+    /// `SchedConfig::prefill_chunk` is set).
+    pub chunk_prefills: u64,
     pub fault_retries: u64,
     pub quarantined: u64,
     pub cancelled: u64,
@@ -280,6 +283,7 @@ impl<B: DecodeBackend> Worker<B> {
             swap_restores: self.sched.swap_restores,
             prefix_hit_blocks: self.sched.prefix_hit_blocks,
             cow_copies: self.sched.cow_copies,
+            chunk_prefills: self.sched.chunk_prefills,
             fault_retries: self.sched.fault_retries,
             quarantined: self.sched.quarantined,
             cancelled: self.sched.cancelled(),

@@ -39,7 +39,9 @@ pub mod request;
 pub mod sched;
 pub mod swap;
 
-pub use backend::{BackendError, ClaimMemo, DecodeBackend, HostSnapshot, Prefilled, Restored};
+pub use backend::{
+    BackendError, ClaimMemo, DecodeBackend, HostSnapshot, Prefilled, PrefillStep, Restored,
+};
 pub use engine::{EngineReport, MultiEngine, WorkerStats};
 pub use request::{FinishReason, Priority, Request, RequestOutput, RequestState};
 pub use sched::{default_workers, SchedConfig, Scheduler, StepReport};

@@ -65,7 +65,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::backend::{ClaimMemo, DecodeBackend, Prefilled, Restored};
+use super::backend::{ClaimMemo, DecodeBackend, Prefilled, PrefillStep, Restored};
 use super::engine::PressureHook;
 use super::request::{FinishReason, Priority, Request, RequestOutput};
 use super::swap::SwapPool;
@@ -126,6 +126,17 @@ pub struct SchedConfig {
     /// outputs are bit-identical at any worker count (greedy decode is
     /// placement-independent) — pinned in `tests/multi_worker.rs`.
     pub workers: usize,
+    /// Chunked prefill: a prompt longer than this many tokens is prefilled
+    /// across multiple rounds (`prefill_chunk` prompt tokens per round)
+    /// instead of head-of-line blocking one round on the whole prompt —
+    /// decoders already running keep producing a token every round while
+    /// the big prompt streams in. `0` disables chunking (every prefill is
+    /// one-shot, the historical behavior). Outputs are bit-identical
+    /// either way — chunking slices compute, never content — pinned in
+    /// `tests/slo_workload.rs`. Backends that cannot chunk
+    /// ([`DecodeBackend::prefill_begin`] returns `None`) fall back to
+    /// one-shot regardless.
+    pub prefill_chunk: usize,
 }
 
 /// Default worker count: saturate up to four cores, never oversubscribe a
@@ -155,6 +166,9 @@ impl Default for SchedConfig {
             // must not spawn threads behind the caller's back); the CLI
             // flags default to `default_workers()`
             workers: 1,
+            // chunking off by default: every historical pin (bit-identity,
+            // call counts, round accounting) sees the one-shot path
+            prefill_chunk: 0,
         }
     }
 }
@@ -187,6 +201,11 @@ pub struct StepReport {
     /// Sequences suspended this round to retry a TRANSIENT decode error
     /// (not counted in `preempted` — no memory pressure was involved).
     pub retried: usize,
+    /// Chunked-prefill advances this round: each is one `prefill_chunk`
+    /// slice of some prompt fed through the backend while the decode
+    /// batch ran anyway (a completed chunked prefill also counts in
+    /// `prefilled` on its final chunk).
+    pub chunk_prefills: usize,
 }
 
 /// Queued request plus everything needed to resume it after preemption —
@@ -289,6 +308,11 @@ enum AdmitOutcome<P> {
     /// or recompute) for the round report; `hit_blocks` is the prefix-
     /// index hit count of that prefill (0 for restores).
     Admitted { restored: bool, hit_blocks: u64 },
+    /// Admission started a CHUNKED prefill: the entry now lives in
+    /// `Scheduler::prefilling` and advances one chunk per round until its
+    /// final chunk claims the cache and it joins `running`. It occupies a
+    /// concurrency slot from this moment (it is in-flight work).
+    Chunking,
     /// Arena too full right now; entry comes back for a later round.
     OutOfMemory(QueueEntry<P>),
     /// Request failed hard (error output already emitted).
@@ -305,6 +329,12 @@ pub struct Scheduler<B: DecodeBackend> {
     /// class front. No cross-bucket scan per admission.
     queues: [VecDeque<QueueEntry<B::PrefillPlan>>; 3],
     running: Vec<Inflight<B::Seq>>,
+    /// In-progress CHUNKED prefills: admitted entries whose prompt is
+    /// still streaming through the backend one `prefill_chunk` per round.
+    /// A job holds NO arena blocks (the packed cache is claimed at the
+    /// final chunk), so dropping one — cancel, deadline, shutdown — is
+    /// free. Each occupies a concurrency slot like a running sequence.
+    prefilling: Vec<(QueueEntry<B::PrefillPlan>, B::PrefillJob)>,
     /// Lifecycle events in emission order, keyed by request id — the
     /// session API's feed ([`Scheduler::take_events`]).
     events: VecDeque<(u64, SeqEvent)>,
@@ -336,6 +366,9 @@ pub struct Scheduler<B: DecodeBackend> {
     pub prefix_hit_blocks: u64,
     /// Total copy-on-write page copies made during round preparation.
     pub cow_copies: u64,
+    /// Total chunked-prefill advances since start (see
+    /// [`StepReport::chunk_prefills`]).
+    pub chunk_prefills: u64,
     /// Total TRANSIENT decode errors recovered by suspend-and-retry.
     pub fault_retries: u64,
     /// Requests retired as [`FinishReason::Error`] by the retry budget or
@@ -393,6 +426,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             arena,
             queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
             running: Vec::new(),
+            prefilling: Vec::new(),
             events: VecDeque::new(),
             stream_events: false,
             swap,
@@ -406,6 +440,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             swap_restores: 0,
             prefix_hit_blocks: 0,
             cow_copies: 0,
+            chunk_prefills: 0,
             fault_retries: 0,
             quarantined: 0,
             cancelled_stats: CacheStats::default(),
@@ -475,11 +510,18 @@ impl<B: DecodeBackend> Scheduler<B> {
     }
 
     pub fn pending(&self) -> usize {
-        self.queues.iter().map(|q| q.len()).sum()
+        self.queues.iter().map(|q| q.len()).sum::<usize>() + self.prefilling.len()
     }
 
     pub fn running(&self) -> usize {
         self.running.len()
+    }
+
+    /// Chunked prefills currently in progress (each advances one
+    /// `prefill_chunk` of prompt per round until its final chunk claims
+    /// the cache and it starts decoding).
+    pub fn prefilling(&self) -> usize {
+        self.prefilling.len()
     }
 
     /// Allocated blocks across ALL sequences — O(1) from the arena, not a
@@ -499,7 +541,9 @@ impl<B: DecodeBackend> Scheduler<B> {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.queues.iter().all(|q| q.is_empty()) && self.running.is_empty()
+        self.queues.iter().all(|q| q.is_empty())
+            && self.running.is_empty()
+            && self.prefilling.is_empty()
     }
 
     /// Ids of every live (queued or running) request. Drain/shutdown
@@ -508,6 +552,7 @@ impl<B: DecodeBackend> Scheduler<B> {
         self.queues
             .iter()
             .flat_map(|q| q.iter().map(|e| e.req.id))
+            .chain(self.prefilling.iter().map(|(e, _)| e.req.id))
             .chain(self.running.iter().map(|f| f.req.id))
             .collect()
     }
@@ -576,6 +621,17 @@ impl<B: DecodeBackend> Scheduler<B> {
             log::info!("req {id}: cancelled while queued");
             return true;
         }
+        if let Some(pos) = self.prefilling.iter().position(|(e, _)| e.req.id == id) {
+            let (entry, job) = self.prefilling.remove(pos);
+            drop(job); // an in-progress chunked prefill holds no blocks
+            self.swap.discard(id);
+            self.cancelled_stats.cancelled += 1;
+            self.cancelled_stats.preemptions += entry.preemptions as u64;
+            self.cancelled_stats.swaps += entry.swaps as u64;
+            self.cancelled_stats.retries += entry.retries as u64;
+            log::info!("req {id}: cancelled mid-chunked-prefill");
+            return true;
+        }
         if let Some(pos) = self.running.iter().position(|f| f.req.id == id) {
             let f = self.running.remove(pos);
             let n_blocks = B::cache(&f.seq).n_blocks();
@@ -615,7 +671,7 @@ impl<B: DecodeBackend> Scheduler<B> {
     /// Finish a QUEUED entry whose deadline expired: it holds no blocks
     /// (a preempted one only a possible snapshot), so teardown is a
     /// discard plus the terminal event carrying whatever it produced.
-    fn expire_queued(&mut self, entry: QueueEntry) {
+    fn expire_queued(&mut self, entry: QueueEntry<B::PrefillPlan>) {
         self.swap.discard(entry.req.id);
         let ttft = entry
             .first_token_at
@@ -694,6 +750,58 @@ impl<B: DecodeBackend> Scheduler<B> {
             }
         }
 
+        // --- chunked-prefill advance: every in-progress chunked prefill
+        // streams one more `prefill_chunk` of prompt through the backend.
+        // A job that finishes its FINAL chunk claims its packed cache and
+        // joins the running set in time for this round's decode; one whose
+        // claim fails goes back to its queue front (a job holds no blocks,
+        // so abandoning it frees nothing and costs nothing). Expired
+        // deadlines are handled here too — the job drops for free. ---
+        if !self.prefilling.is_empty() {
+            let jobs = std::mem::take(&mut self.prefilling);
+            for (entry, job) in jobs {
+                if entry.deadline_at.is_some_and(|d| now_step > d) {
+                    drop(job);
+                    self.expire_queued(entry);
+                    report.expired += 1;
+                    continue;
+                }
+                match self.backend.prefill_advance(job, self.cfg.prefill_chunk) {
+                    Ok(PrefillStep::More(job)) => {
+                        report.chunk_prefills += 1;
+                        self.chunk_prefills += 1;
+                        self.prefilling.push((entry, job));
+                    }
+                    Ok(PrefillStep::Done { seq, logits }) => {
+                        report.chunk_prefills += 1;
+                        self.chunk_prefills += 1;
+                        report.prefilled += 1;
+                        let hit_blocks = self.admit_ready(entry, seq, logits);
+                        report.prefix_hit_blocks += hit_blocks as usize;
+                        self.prefix_hit_blocks += hit_blocks;
+                    }
+                    Ok(PrefillStep::OutOfMemory) => {
+                        // the completion claim did not fit — requeue at the
+                        // bucket front and retry once capacity frees (the
+                        // folded compute is redone; correctness needs
+                        // nothing from the abandoned job)
+                        log::info!(
+                            "req {}: chunked prefill claim ran the arena dry — requeued",
+                            entry.req.id
+                        );
+                        let bucket = Self::bucket(entry.req.priority);
+                        self.queues[bucket].push_front(entry);
+                    }
+                    Err(e) => {
+                        log::warn!("req {}: chunked prefill failed: {e:#}", entry.req.id);
+                        let out = Self::error_output(&entry.req);
+                        self.emit(entry.req.id, SeqEvent::Finished(out));
+                        report.rejected += 1;
+                    }
+                }
+            }
+        }
+
         // --- admission: fill every free concurrency slot, HIGHEST
         // priority first (front-most within a class), gated on the
         // arena's low watermark against what the admission claims NOW:
@@ -706,7 +814,7 @@ impl<B: DecodeBackend> Scheduler<B> {
         // preemption above the high mark reclaims it (the old worst-case
         // gate over-reserved exactly when unstructured policies fragment
         // pages — the paper's Limitation 1) ---
-        while self.running.len() < self.cfg.max_concurrency {
+        while self.running.len() + self.prefilling.len() < self.cfg.max_concurrency {
             let Some(b) = (0..self.queues.len()).find(|&b| !self.queues[b].is_empty())
             else {
                 break;
@@ -742,7 +850,9 @@ impl<B: DecodeBackend> Scheduler<B> {
             // posts reclaim pressure so the global victim rule picks who
             // pays.
             if !self.arena.below_low_watermark(incoming)
-                && (!self.running.is_empty() || self.others_running() > 0)
+                && (!self.running.is_empty()
+                    || !self.prefilling.is_empty()
+                    || self.others_running() > 0)
             {
                 if self.running.is_empty() {
                     self.post_pressure();
@@ -762,8 +872,12 @@ impl<B: DecodeBackend> Scheduler<B> {
                     report.prefix_hit_blocks += hit_blocks as usize;
                     self.prefix_hit_blocks += hit_blocks;
                 }
+                AdmitOutcome::Chunking => {
+                    report.chunk_prefills += 1;
+                    self.chunk_prefills += 1;
+                }
                 AdmitOutcome::OutOfMemory(entry) => {
-                    if self.running.is_empty() {
+                    if self.running.is_empty() && self.prefilling.is_empty() {
                         if self.others_running() > 0 {
                             // another worker's sequences hold the shared
                             // arena: ask the engine to reclaim globally
@@ -1092,7 +1206,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                 }
             }
         }
-        let policy = match make_policy(&entry.req.policy) {
+        let mut policy = match make_policy(&entry.req.policy) {
             Ok(p) => p,
             Err(e) => {
                 log::warn!("req {}: {e:#}", entry.req.id);
@@ -1101,6 +1215,55 @@ impl<B: DecodeBackend> Scheduler<B> {
                 return AdmitOutcome::Failed;
             }
         };
+        // Chunked prefill: a prompt longer than the chunk size streams in
+        // across rounds instead of blocking this one. The begin call
+        // already processes the first chunk; More parks the job in
+        // `prefilling` (it occupies the concurrency slot admission just
+        // granted), Done means one chunk covered the whole prompt and the
+        // sequence admits normally.
+        if self.cfg.prefill_chunk > 0 && entry.req.prompt.len() > self.cfg.prefill_chunk {
+            match self.backend.prefill_begin(
+                &self.arena,
+                &entry.req.prompt,
+                entry.req.budget,
+                policy,
+                entry.plan.as_ref(),
+                self.cfg.prefill_chunk,
+            ) {
+                Ok(Some(PrefillStep::More(job))) => {
+                    log::debug!(
+                        "req {}: chunked prefill started ({} prompt tokens, {} per round)",
+                        entry.req.id,
+                        entry.req.prompt.len(),
+                        self.cfg.prefill_chunk
+                    );
+                    self.prefilling.push((entry, job));
+                    return AdmitOutcome::Chunking;
+                }
+                Ok(Some(PrefillStep::Done { seq, logits })) => {
+                    let hit_blocks = self.admit_ready(entry, seq, logits);
+                    return AdmitOutcome::Admitted { restored: false, hit_blocks };
+                }
+                Ok(Some(PrefillStep::OutOfMemory)) => {
+                    return AdmitOutcome::OutOfMemory(entry);
+                }
+                Ok(None) => {
+                    // backend cannot chunk: fall through to the one-shot
+                    // path with a rebuilt policy (begin consumed the box;
+                    // make_policy succeeded above, so it succeeds now)
+                    policy = match make_policy(&entry.req.policy) {
+                        Ok(p) => p,
+                        Err(_) => return AdmitOutcome::Failed,
+                    };
+                }
+                Err(e) => {
+                    log::warn!("req {}: chunked prefill failed: {e:#}", entry.req.id);
+                    let out = Self::error_output(&entry.req);
+                    self.emit(entry.req.id, SeqEvent::Finished(out));
+                    return AdmitOutcome::Failed;
+                }
+            }
+        }
         let prefilled = self.backend.prefill_planned(
             &self.arena,
             &entry.req.prompt,
@@ -1110,46 +1273,7 @@ impl<B: DecodeBackend> Scheduler<B> {
         );
         match prefilled {
             Ok(Prefilled::Ready { seq, logits }) => {
-                let now = Instant::now();
-                if entry.preemptions == 0 && entry.retries == 0 {
-                    // first admission only: recompute-on-readmission must
-                    // not double count useful prompt work (a victim can be
-                    // preempted — or suspended for a transient-error
-                    // retry — before producing anything, so an empty
-                    // resume list does not imply a first admission)
-                    self.total_prompt_tokens += entry.req.prompt.len() as u64;
-                    // The first generated token exists the moment prefill
-                    // returns — TTFT stops here (vLLM semantics).
-                    let ttft_s = now.duration_since(entry.enqueued).as_secs_f64();
-                    self.emit_stream(&entry.req, SeqEvent::Prefilled { ttft_s });
-                } else {
-                    // recompute readmission: replay will rebuild the
-                    // produced tokens without re-emitting them
-                    self.emit_stream(&entry.req, SeqEvent::Resumed);
-                }
-                let serial = self.admit_counter.fetch_add(1, Ordering::Relaxed) + 1;
-                // a fresh cache's counters cover exactly this prefill
-                let hit_blocks = B::cache(&seq).stats.prefix_hit_blocks;
-                let cow_seen = B::cache(&seq).stats.cow_copies;
-                self.running.push(Inflight {
-                    next_token: argmax(&logits),
-                    // A preempted request keeps its original first-token
-                    // time.
-                    first_token_at: Some(entry.first_token_at.unwrap_or(now)),
-                    enqueued: entry.enqueued,
-                    decode_seconds: entry.decode_seconds,
-                    produced: entry.resume,
-                    fed: 0,
-                    admit_serial: serial,
-                    preemptions: entry.preemptions,
-                    swaps: entry.swaps,
-                    cow_seen,
-                    deadline_at: entry.deadline_at,
-                    retries: entry.retries,
-                    fault_streak: entry.fault_streak,
-                    req: entry.req,
-                    seq,
-                });
+                let hit_blocks = self.admit_ready(entry, seq, logits);
                 AdmitOutcome::Admitted { restored: false, hit_blocks }
             }
             Ok(Prefilled::OutOfMemory) => AdmitOutcome::OutOfMemory(entry),
@@ -1160,6 +1284,61 @@ impl<B: DecodeBackend> Scheduler<B> {
                 AdmitOutcome::Failed
             }
         }
+    }
+
+    /// Install a freshly prefilled sequence into the running set —
+    /// identical bookkeeping whether the prefill was one-shot
+    /// (`prefill_planned`) or the final chunk of a chunked prefill
+    /// (`prefill_advance` returning [`PrefillStep::Done`]): TTFT stops at
+    /// the moment the sequence goes live either way. Returns the
+    /// prefill's prefix-index hit count for the caller's accounting.
+    fn admit_ready(
+        &mut self,
+        entry: QueueEntry<B::PrefillPlan>,
+        seq: B::Seq,
+        logits: Vec<f32>,
+    ) -> u64 {
+        let now = Instant::now();
+        if entry.preemptions == 0 && entry.retries == 0 {
+            // first admission only: recompute-on-readmission must
+            // not double count useful prompt work (a victim can be
+            // preempted — or suspended for a transient-error
+            // retry — before producing anything, so an empty
+            // resume list does not imply a first admission)
+            self.total_prompt_tokens += entry.req.prompt.len() as u64;
+            // The first generated token exists the moment prefill
+            // returns — TTFT stops here (vLLM semantics).
+            let ttft_s = now.duration_since(entry.enqueued).as_secs_f64();
+            self.emit_stream(&entry.req, SeqEvent::Prefilled { ttft_s });
+        } else {
+            // recompute readmission: replay will rebuild the
+            // produced tokens without re-emitting them
+            self.emit_stream(&entry.req, SeqEvent::Resumed);
+        }
+        let serial = self.admit_counter.fetch_add(1, Ordering::Relaxed) + 1;
+        // a fresh cache's counters cover exactly this prefill
+        let hit_blocks = B::cache(&seq).stats.prefix_hit_blocks;
+        let cow_seen = B::cache(&seq).stats.cow_copies;
+        self.running.push(Inflight {
+            next_token: argmax(&logits),
+            // A preempted request keeps its original first-token
+            // time.
+            first_token_at: Some(entry.first_token_at.unwrap_or(now)),
+            enqueued: entry.enqueued,
+            decode_seconds: entry.decode_seconds,
+            produced: entry.resume,
+            fed: 0,
+            admit_serial: serial,
+            preemptions: entry.preemptions,
+            swaps: entry.swaps,
+            cow_seen,
+            deadline_at: entry.deadline_at,
+            retries: entry.retries,
+            fault_streak: entry.fault_streak,
+            req: entry.req,
+            seq,
+        });
+        hit_blocks
     }
 
     // ---- multi-worker engine hooks (crate-private) --------------------

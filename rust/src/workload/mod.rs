@@ -1,10 +1,16 @@
 //! Workload generation: the associative-recall task the tiny model is
 //! trained on (real-model accuracy track), synthetic LongBench-shaped
-//! episodes (simulator accuracy track), and Poisson arrival traces for the
-//! serving benches.
+//! episodes (simulator accuracy track), Poisson arrival traces for the
+//! serving benches, and the SLO traffic engine — seeded arrival processes
+//! ([`arrivals`]) plus multi-tenant scenario synthesis ([`scenario`]) for
+//! the `paged-eviction slo` driver and the `slo-smoke` CI gate.
 
+pub mod arrivals;
 pub mod recall;
+pub mod scenario;
 pub mod trace;
 
+pub use arrivals::ArrivalProcess;
 pub use recall::RecallPrompt;
+pub use scenario::{RequestShape, Scenario, SloSpec, SynthRequest};
 pub use trace::{ArrivalTrace, TraceConfig};

@@ -1,0 +1,229 @@
+//! Multi-tenant SLO scenarios: named, fully-seeded traffic mixes that
+//! the `paged-eviction slo` driver replays through [`crate::scheduler::MultiEngine`].
+//!
+//! A [`Scenario`] couples an arrival process ([`super::arrivals`]), a
+//! request *shape*, and a per-tenant shared system-prompt prefix. The two
+//! canonical shapes mirror the two regimes the paper's evaluation keeps
+//! separate:
+//!
+//!   * [`RequestShape::Chat`] — short prompts, long decodes: a decode
+//!     flood where TPOT and preemption behaviour dominate.
+//!   * [`RequestShape::LongContext`] — LongBench-style long prompts with
+//!     short decodes: prefill-heavy replays where TTFT, the prefix index
+//!     and chunked prefill dominate.
+//!
+//! Every tenant gets its own shared prefix (same token recipe as the
+//! `schedule` subcommand: block-aligned, drawn below 256) so the PR 4
+//! prefix index sees realistic cross-request reuse *within* a tenant and
+//! zero reuse *across* tenants. `synthesize(seed)` is a pure function:
+//! same scenario + same seed → byte-identical request list, which is what
+//! lets CI assert digest equality across `--workers` counts.
+
+use crate::util::rng::Pcg32;
+
+use super::arrivals::ArrivalProcess;
+use super::recall::make_prompt;
+
+/// Latency objectives a request must meet to count toward goodput.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Time-to-first-token ceiling, milliseconds.
+    pub ttft_ms: f64,
+    /// Time-per-output-token ceiling, milliseconds.
+    pub tpot_ms: f64,
+}
+
+/// The two canonical request shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestShape {
+    /// Chat-style: short even prompts (32..=94 tokens past the shared
+    /// prefix), long decodes (48..=96 new tokens).
+    Chat,
+    /// LongBench-style replay: long even prompts (256..=512 tokens past
+    /// the prefix — at least 8 full 16-token blocks, so chunked prefill
+    /// genuinely spans rounds), short decodes (8..=24 new tokens).
+    LongContext,
+}
+
+impl RequestShape {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RequestShape::Chat => "chat",
+            RequestShape::LongContext => "long-context",
+        }
+    }
+}
+
+/// A named, replayable traffic scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: &'static str,
+    /// Distinct tenants, each with its own shared system-prompt prefix.
+    pub tenants: usize,
+    /// Total requests across all tenants.
+    pub requests: usize,
+    pub arrivals: ArrivalProcess,
+    pub shape: RequestShape,
+    /// Shared prefix length per tenant, in tokens (even, block-aligned
+    /// at 16-token pages for real prefix-index hits).
+    pub shared_prefix_len: usize,
+    pub slo: SloSpec,
+    /// Scheduler `prefill_chunk` this scenario runs with (0 = one-shot).
+    pub prefill_chunk: usize,
+}
+
+/// One synthesized request of a scenario trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthRequest {
+    /// Arrival time in seconds from trace start.
+    pub at_s: f64,
+    pub tenant: usize,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+}
+
+impl Scenario {
+    /// Names of the built-in scenarios, in canonical order.
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["bursty-chat", "longbench-replay", "diurnal-mixed"]
+    }
+
+    /// Look up a built-in scenario by name.
+    pub fn builtin(name: &str) -> Option<Scenario> {
+        match name {
+            // Multi-tenant chat flood under on/off bursts: mean load is
+            // modest but ON-phase spikes force preemption and stealing.
+            "bursty-chat" => Some(Scenario {
+                name: "bursty-chat",
+                tenants: 6,
+                requests: 48,
+                arrivals: ArrivalProcess::Bursty {
+                    rate_on: 120.0,
+                    rate_off: 8.0,
+                    mean_on: 0.15,
+                    mean_off: 0.20,
+                },
+                shape: RequestShape::Chat,
+                shared_prefix_len: 64,
+                slo: SloSpec { ttft_ms: 2_000.0, tpot_ms: 150.0 },
+                prefill_chunk: 0,
+            }),
+            // LongBench-style long-prompt replay: few tenants, big
+            // prompts, chunked prefill on so one giant prompt cannot
+            // head-of-line block a decode round.
+            "longbench-replay" => Some(Scenario {
+                name: "longbench-replay",
+                tenants: 2,
+                requests: 12,
+                arrivals: ArrivalProcess::Poisson { rate: 30.0 },
+                shape: RequestShape::LongContext,
+                shared_prefix_len: 32,
+                slo: SloSpec { ttft_ms: 4_000.0, tpot_ms: 250.0 },
+                prefill_chunk: 64,
+            }),
+            // Slow sinusoidal ramp mixing many chat tenants — the gentle
+            // scenario for local profiling, not wired into CI smoke.
+            "diurnal-mixed" => Some(Scenario {
+                name: "diurnal-mixed",
+                tenants: 4,
+                requests: 32,
+                arrivals: ArrivalProcess::Diurnal { base: 5.0, peak: 60.0, period: 2.0 },
+                shape: RequestShape::Chat,
+                shared_prefix_len: 32,
+                slo: SloSpec { ttft_ms: 2_500.0, tpot_ms: 150.0 },
+                prefill_chunk: 0,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Synthesize the full request trace: arrival times from the
+    /// configured process, per-tenant shared prefixes, and shaped
+    /// prompt/decode lengths. Pure in `(self, seed)`.
+    pub fn synthesize(&self, seed: u64) -> Vec<SynthRequest> {
+        assert!(self.tenants > 0 && self.requests > 0);
+        assert!(self.shared_prefix_len % 2 == 0, "prefix must stay even for make_prompt");
+        let mut rng = Pcg32::new(seed);
+        let times = self.arrivals.times(&mut rng, self.requests);
+        // one shared system-prompt prefix per tenant — same token recipe
+        // as cmd_schedule so the prefix index hashes full blocks
+        let prefixes: Vec<Vec<u32>> = (0..self.tenants)
+            .map(|_| (0..self.shared_prefix_len).map(|_| rng.below(200)).collect())
+            .collect();
+        times
+            .into_iter()
+            .map(|at_s| {
+                let tenant = rng.usize_below(self.tenants);
+                let (tail_len, gen) = match self.shape {
+                    // 32..=94 even tail, 48..=96 decode
+                    RequestShape::Chat => {
+                        (32 + 2 * rng.below(32) as usize, 48 + rng.below(49) as usize)
+                    }
+                    // 256..=512 even tail, 8..=24 decode
+                    RequestShape::LongContext => {
+                        (256 + 2 * rng.below(129) as usize, 8 + rng.below(17) as usize)
+                    }
+                };
+                let mut prompt = prefixes[tenant].clone();
+                prompt.extend_from_slice(&make_prompt(&mut rng, tail_len, 0.4).tokens);
+                SynthRequest { at_s, tenant, prompt, max_new_tokens: gen }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_lookup_round_trips() {
+        for name in Scenario::builtin_names() {
+            let s = Scenario::builtin(name).expect("builtin must resolve");
+            assert_eq!(&s.name, name);
+        }
+        assert!(Scenario::builtin("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn synthesize_is_deterministic_per_seed() {
+        for name in Scenario::builtin_names() {
+            let s = Scenario::builtin(name).unwrap();
+            let a = s.synthesize(42);
+            let b = s.synthesize(42);
+            assert_eq!(a, b, "{name}: same seed must synthesize identically");
+            let c = s.synthesize(43);
+            assert_ne!(a, c, "{name}: a different seed must change the trace");
+            assert_eq!(a.len(), s.requests);
+        }
+    }
+
+    #[test]
+    fn tenants_share_prefixes_and_shapes_hold() {
+        let s = Scenario::builtin("bursty-chat").unwrap();
+        let reqs = s.synthesize(7);
+        // every request of a tenant starts with that tenant's prefix
+        for t in 0..s.tenants {
+            let mine: Vec<&SynthRequest> = reqs.iter().filter(|r| r.tenant == t).collect();
+            if mine.len() < 2 {
+                continue;
+            }
+            let prefix = &mine[0].prompt[..s.shared_prefix_len];
+            for r in &mine[1..] {
+                assert_eq!(&r.prompt[..s.shared_prefix_len], prefix);
+            }
+        }
+        for r in &reqs {
+            let tail = r.prompt.len() - s.shared_prefix_len;
+            assert!((32..=94).contains(&tail), "chat tail {tail}");
+            assert!((48..=96).contains(&r.max_new_tokens));
+        }
+
+        let long = Scenario::builtin("longbench-replay").unwrap();
+        for r in long.synthesize(7) {
+            // at least 8 full 16-token blocks even before the prefix
+            assert!(r.prompt.len() - long.shared_prefix_len >= 256);
+            assert!((8..=24).contains(&r.max_new_tokens));
+        }
+    }
+}

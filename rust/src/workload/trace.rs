@@ -80,10 +80,13 @@ pub fn parse_trace(text: &str) -> Result<Vec<TraceEntry>> {
         }
         let mut e = TraceEntry::default();
         for field in line.split_whitespace() {
-            let (key, val) = field
-                .split_once('=')
-                .with_context(|| format!("line {}: field {field:?} is not key=value", lineno + 1))?;
-            let ctx = || format!("line {}: bad value in {field:?}", lineno + 1);
+            let (key, val) = field.split_once('=').with_context(|| {
+                format!(
+                    "line {}: field {field:?} is missing '=' (expected key=value)",
+                    lineno + 1
+                )
+            })?;
+            let ctx = || format!("line {}: key {key:?}: bad value {val:?}", lineno + 1);
             match key {
                 "at" => e.at_step = val.parse().with_context(ctx)?,
                 "prompt_len" => e.prompt_len = Some(val.parse().with_context(ctx)?),
@@ -93,7 +96,11 @@ pub fn parse_trace(text: &str) -> Result<Vec<TraceEntry>> {
                 "priority" => e.priority = Some(Priority::parse(val).with_context(ctx)?),
                 "deadline" => e.deadline_steps = Some(val.parse().with_context(ctx)?),
                 "seed" => e.seed = Some(val.parse().with_context(ctx)?),
-                other => anyhow::bail!("line {}: unknown trace key {other:?}", lineno + 1),
+                other => anyhow::bail!(
+                    "line {}: unknown trace key {other:?} (expected one of: at, \
+                     prompt_len, gen, policy, budget, priority, deadline, seed)",
+                    lineno + 1
+                ),
             }
         }
         entries.push(e);
@@ -169,12 +176,55 @@ mod tests {
         assert_eq!(es[2].seed, Some(9));
     }
 
+    /// Render the full context chain — parse errors wrap a cause, and
+    /// the line/field context lives in the outer layers.
+    fn err_text(text: &str) -> String {
+        format!("{:#}", parse_trace(text).expect_err("input must be rejected"))
+    }
+
     #[test]
-    fn trace_file_rejects_malformed_lines() {
-        assert!(parse_trace("at=0 nonsense").is_err(), "bare token");
-        assert!(parse_trace("frobnicate=3").is_err(), "unknown key");
-        assert!(parse_trace("budget=lots").is_err(), "non-numeric value");
-        assert!(parse_trace("priority=urgent").is_err(), "bad priority");
+    fn bare_token_error_names_line_and_field() {
+        let msg = err_text("at=0 nonsense");
+        assert!(msg.contains("line 1"), "missing line number: {msg}");
+        assert!(msg.contains("\"nonsense\""), "missing field: {msg}");
+        assert!(msg.contains("key=value"), "missing expectation: {msg}");
+    }
+
+    #[test]
+    fn unknown_key_error_names_line_and_key() {
+        let msg = err_text("frobnicate=3");
+        assert!(msg.contains("line 1"), "missing line number: {msg}");
+        assert!(msg.contains("\"frobnicate\""), "missing key: {msg}");
+        assert!(msg.contains("expected one of"), "missing key list: {msg}");
+    }
+
+    #[test]
+    fn non_numeric_value_error_names_line_key_and_value() {
+        let msg = err_text("budget=lots");
+        assert!(msg.contains("line 1"), "missing line number: {msg}");
+        assert!(msg.contains("\"budget\""), "missing key: {msg}");
+        assert!(msg.contains("\"lots\""), "missing value: {msg}");
+    }
+
+    #[test]
+    fn bad_priority_error_names_line_key_and_value() {
+        let msg = err_text("priority=urgent");
+        assert!(msg.contains("line 1"), "missing line number: {msg}");
+        assert!(msg.contains("\"priority\""), "missing key: {msg}");
+        assert!(msg.contains("\"urgent\""), "missing value: {msg}");
+    }
+
+    #[test]
+    fn errors_report_the_offending_line_not_the_first() {
+        // line 1 is fine, line 2 is a comment, line 3 is broken
+        let msg = err_text("at=0 gen=8\n# fine\nat=2 budget=oops");
+        assert!(msg.contains("line 3"), "wrong line attribution: {msg}");
+        assert!(!msg.contains("line 1"), "blamed the wrong line: {msg}");
+    }
+
+    #[test]
+    fn empty_input_is_empty_not_an_error() {
         assert!(parse_trace("").unwrap().is_empty());
+        assert!(parse_trace("# only comments\n\n").unwrap().is_empty());
     }
 }

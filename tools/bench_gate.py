@@ -26,11 +26,21 @@ micro_hotpath`` (a flat ``{op name: microseconds/op}`` object) and FAILS
   * any row the gate needs is missing (a silently renamed bench row must
     not turn the gate into a no-op).
 
+With ``--slo`` the gate instead reads the ``BENCH_slo.json`` emitted by
+``paged-eviction slo`` (schema ``slo-v1``) and FAILS when any gated
+scenario is missing, reports fewer completions than requests, exceeds its
+p99 TTFT/TPOT ceiling, misses its goodput/attainment floor, or shows
+different output digests at different ``--workers`` counts (the
+determinism contract the whole harness rides on). Ceilings/floors are
+generous — sized for noisy shared CI runners — so a failure means a real
+tail-latency or scheduling regression, not jitter.
+
 Stdlib only — runs on a bare CI python with no installs.
 
 Usage:
     python3 tools/bench_gate.py rust/BENCH_hotpath.json
     python3 tools/bench_gate.py --min-table-speedup 5 bench.json
+    python3 tools/bench_gate.py --slo BENCH_slo.json
 """
 
 import argparse
@@ -152,12 +162,134 @@ def check(rows, min_table_speedup, min_mask_speedup, min_engine_scaling=2.5):
     return failures, report
 
 
+# Per-scenario SLO gates over BENCH_slo.json rows. The scenarios listed
+# here are REQUIRED: a missing scenario fails the gate (a renamed or
+# silently dropped scenario must not turn the gate into a no-op), exactly
+# like the required-row discipline of the us/op gate above. Bounds are
+# catastrophic-regression bounds for shared CI runners, not laptop noise
+# police: the sim decodes in microseconds, so p99 TTFT in the seconds
+# means head-of-line blocking or a scheduling livelock, and goodput near
+# zero means the deadline math or the digest pipeline broke.
+SLO_SCENARIOS = {
+    "bursty-chat": {
+        "max_ttft_p99_ms": 5000.0,
+        "max_tpot_p99_ms": 500.0,
+        "min_goodput_tok_s": 50.0,
+        "min_attainment": 0.5,
+    },
+    "longbench-replay": {
+        "max_ttft_p99_ms": 10000.0,
+        "max_tpot_p99_ms": 1000.0,
+        "min_goodput_tok_s": 5.0,
+        "min_attainment": 0.5,
+    },
+}
+
+
+def check_slo(data, gates=None):
+    """Return (failures, report_lines) for a parsed BENCH_slo.json."""
+    gates = SLO_SCENARIOS if gates is None else gates
+    failures = []
+    report = []
+    if not isinstance(data, dict) or not isinstance(data.get("rows"), list):
+        return ["slo JSON must be an object with a 'rows' list"], []
+
+    by_scenario = {}
+    for i, row in enumerate(data["rows"]):
+        if not isinstance(row, dict) or not isinstance(row.get("scenario"), str):
+            failures.append(f"slo row {i}: not an object naming a 'scenario'")
+            continue
+        by_scenario.setdefault(row["scenario"], []).append(row)
+
+    def num(label, row, field):
+        v = row.get(field)
+        if isinstance(v, bool) or not isinstance(v, (int, float)) or v != v:
+            failures.append(f"{label}: non-numeric field {field!r} = {v!r}")
+            return None
+        return v
+
+    for name, g in sorted(gates.items()):
+        rows = by_scenario.get(name)
+        if not rows:
+            failures.append(f"missing slo scenario: {name!r}")
+            continue
+        digests = []
+        for row in rows:
+            w = row.get("workers")
+            label = f"{name} @ {w} worker(s)"
+            d = row.get("digest")
+            if isinstance(d, str) and d:
+                digests.append((w, d))
+            else:
+                failures.append(f"{label}: missing output digest")
+            completed = num(label, row, "completed")
+            requests = num(label, row, "requests")
+            if completed is not None and requests is not None and completed < requests:
+                failures.append(
+                    f"{label}: only {completed:.0f} of {requests:.0f} requests completed"
+                )
+            ttft = num(label, row, "ttft_p99_ms")
+            if ttft is not None:
+                report.append(
+                    f"{label}: ttft p99 {ttft:.1f} ms (<= {g['max_ttft_p99_ms']:.0f} ms)"
+                )
+                if ttft > g["max_ttft_p99_ms"]:
+                    failures.append(
+                        f"tail regression: {label}: ttft p99 {ttft:.1f} ms exceeds "
+                        f"the {g['max_ttft_p99_ms']:.0f} ms ceiling"
+                    )
+            tpot = num(label, row, "tpot_p99_ms")
+            if tpot is not None:
+                report.append(
+                    f"{label}: tpot p99 {tpot:.2f} ms (<= {g['max_tpot_p99_ms']:.0f} ms)"
+                )
+                if tpot > g["max_tpot_p99_ms"]:
+                    failures.append(
+                        f"tail regression: {label}: tpot p99 {tpot:.2f} ms exceeds "
+                        f"the {g['max_tpot_p99_ms']:.0f} ms ceiling"
+                    )
+            goodput = num(label, row, "goodput_tok_s")
+            if goodput is not None:
+                report.append(
+                    f"{label}: goodput {goodput:.0f} tok/s (>= {g['min_goodput_tok_s']:.0f})"
+                )
+                if goodput < g["min_goodput_tok_s"]:
+                    failures.append(
+                        f"goodput regression: {label}: {goodput:.1f} tok/s is below "
+                        f"the {g['min_goodput_tok_s']:.0f} tok/s floor"
+                    )
+            attainment = num(label, row, "slo_attainment")
+            if attainment is not None:
+                report.append(
+                    f"{label}: slo attainment {attainment:.2f} (>= {g['min_attainment']:.2f})"
+                )
+                if attainment < g["min_attainment"]:
+                    failures.append(
+                        f"attainment regression: {label}: {attainment:.2f} is below "
+                        f"the {g['min_attainment']:.2f} floor"
+                    )
+        if len({d for _, d in digests}) > 1:
+            failures.append(
+                f"determinism violation: {name}: output digests diverge across "
+                "worker counts: "
+                + ", ".join(f"{w}w={d}" for w, d in digests)
+            )
+
+    return failures, report
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("json_path", help="path to BENCH_hotpath.json")
+    ap.add_argument("json_path", help="path to BENCH_hotpath.json (or BENCH_slo.json with --slo)")
     ap.add_argument("--min-table-speedup", type=float, default=5.0)
     ap.add_argument("--min-mask-speedup", type=float, default=1.2)
     ap.add_argument("--min-engine-scaling", type=float, default=2.5)
+    ap.add_argument(
+        "--slo",
+        action="store_true",
+        help="gate a BENCH_slo.json (per-scenario tail latency / goodput / digests) "
+        "instead of the us/op microbench",
+    )
     args = ap.parse_args(argv)
 
     try:
@@ -166,13 +298,16 @@ def main(argv=None):
     except (OSError, ValueError) as e:
         print(f"bench gate: cannot read {args.json_path}: {e}", file=sys.stderr)
         return 1
-    if not isinstance(rows, dict):
-        print("bench gate: bench JSON must be an object of op -> us/op", file=sys.stderr)
-        return 1
 
-    failures, report = check(
-        rows, args.min_table_speedup, args.min_mask_speedup, args.min_engine_scaling
-    )
+    if args.slo:
+        failures, report = check_slo(rows)
+    else:
+        if not isinstance(rows, dict):
+            print("bench gate: bench JSON must be an object of op -> us/op", file=sys.stderr)
+            return 1
+        failures, report = check(
+            rows, args.min_table_speedup, args.min_mask_speedup, args.min_engine_scaling
+        )
     for line in report:
         print(f"  {line}")
     if failures:

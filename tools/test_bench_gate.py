@@ -3,7 +3,10 @@
 
 Doctored BENCH_hotpath.json payloads prove the gate actually asserts:
 a healthy run passes, a sub-5x table speedup fails, a ceiling breach
-fails, and a silently missing row fails instead of skipping.
+fails, and a silently missing row fails instead of skipping. Doctored
+BENCH_slo.json payloads do the same for the --slo mode: tail-latency
+ceilings, goodput/attainment floors, required scenarios, and cross-worker
+digest equality all bite.
 
 Run:  python3 tools/test_bench_gate.py
 """
@@ -170,6 +173,117 @@ class CheckTests(unittest.TestCase):
         self.assertTrue(any("non-numeric" in f for f in failures))
 
 
+def healthy_slo_row(scenario, workers, digest="00aa11bb22cc33dd"):
+    return {
+        "scenario": scenario,
+        "workers": workers,
+        "requests": 48,
+        "completed": 48,
+        "digest": digest,
+        "elapsed_s": 1.2,
+        "ttft_p50_ms": 4.0,
+        "ttft_p99_ms": 35.0,
+        "tpot_p50_ms": 0.8,
+        "tpot_p99_ms": 2.5,
+        "slo_attainment": 1.0,
+        "goodput_tok_s": 2500.0,
+    }
+
+
+def healthy_slo():
+    return {
+        "schema": "slo-v1",
+        "seed": 42,
+        "rows": [
+            healthy_slo_row("bursty-chat", 1, "aa"),
+            healthy_slo_row("bursty-chat", 4, "aa"),
+            healthy_slo_row("longbench-replay", 1, "bb"),
+            healthy_slo_row("longbench-replay", 4, "bb"),
+        ],
+    }
+
+
+class SloCheckTests(unittest.TestCase):
+    def test_healthy_slo_run_passes(self):
+        failures, report = bench_gate.check_slo(healthy_slo())
+        self.assertEqual(failures, [])
+        self.assertTrue(any("ttft p99" in line for line in report))
+
+    def test_ttft_ceiling_breach_fails(self):
+        data = healthy_slo()
+        data["rows"][0]["ttft_p99_ms"] = 99999.0
+        failures, _ = bench_gate.check_slo(data)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("tail regression", failures[0])
+        self.assertIn("ttft p99", failures[0])
+        self.assertIn("bursty-chat", failures[0])
+
+    def test_tpot_ceiling_breach_fails(self):
+        data = healthy_slo()
+        data["rows"][2]["tpot_p99_ms"] = 99999.0
+        failures, _ = bench_gate.check_slo(data)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("tail regression", failures[0])
+        self.assertIn("tpot p99", failures[0])
+        self.assertIn("longbench-replay", failures[0])
+
+    def test_goodput_floor_violation_fails(self):
+        data = healthy_slo()
+        data["rows"][0]["goodput_tok_s"] = 0.1
+        failures, _ = bench_gate.check_slo(data)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("goodput regression", failures[0])
+
+    def test_attainment_floor_violation_fails(self):
+        data = healthy_slo()
+        data["rows"][1]["slo_attainment"] = 0.05
+        failures, _ = bench_gate.check_slo(data)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("attainment regression", failures[0])
+
+    def test_missing_scenario_fails_instead_of_skipping(self):
+        data = healthy_slo()
+        data["rows"] = [r for r in data["rows"] if r["scenario"] != "longbench-replay"]
+        failures, _ = bench_gate.check_slo(data)
+        self.assertTrue(
+            any("missing slo scenario" in f and "longbench-replay" in f for f in failures)
+        )
+
+    def test_digest_divergence_across_workers_fails(self):
+        data = healthy_slo()
+        data["rows"][1]["digest"] = "deadbeefdeadbeef"
+        failures, _ = bench_gate.check_slo(data)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("determinism violation", failures[0])
+        self.assertIn("bursty-chat", failures[0])
+
+    def test_missing_digest_fails(self):
+        data = healthy_slo()
+        del data["rows"][3]["digest"]
+        failures, _ = bench_gate.check_slo(data)
+        self.assertTrue(any("missing output digest" in f for f in failures))
+
+    def test_incomplete_run_fails(self):
+        data = healthy_slo()
+        data["rows"][0]["completed"] = 3
+        failures, _ = bench_gate.check_slo(data)
+        self.assertTrue(any("3 of 48 requests completed" in f for f in failures))
+
+    def test_non_numeric_metric_fails(self):
+        data = healthy_slo()
+        data["rows"][0]["ttft_p99_ms"] = "fast"
+        failures, _ = bench_gate.check_slo(data)
+        self.assertTrue(any("non-numeric field" in f for f in failures))
+
+    def test_malformed_payload_fails(self):
+        failures, _ = bench_gate.check_slo([1, 2, 3])
+        self.assertTrue(any("'rows' list" in f for f in failures))
+        failures, _ = bench_gate.check_slo({"rows": "nope"})
+        self.assertTrue(any("'rows' list" in f for f in failures))
+        failures, _ = bench_gate.check_slo({"rows": [42]})
+        self.assertTrue(any("naming a 'scenario'" in f for f in failures))
+
+
 class MainTests(unittest.TestCase):
     def write_json(self, payload):
         f = tempfile.NamedTemporaryFile(
@@ -202,6 +316,15 @@ class MainTests(unittest.TestCase):
         self.assertEqual(bench_gate.main([self.write_json("not json")]), 1)
         self.assertEqual(bench_gate.main([self.write_json([1, 2])]), 1)
         self.assertEqual(bench_gate.main(["/nonexistent/bench.json"]), 1)
+
+    def test_main_slo_mode_pass_and_fail(self):
+        good = self.write_json(healthy_slo())
+        self.assertEqual(bench_gate.main(["--slo", good]), 0)
+        doctored = healthy_slo()
+        doctored["rows"][0]["ttft_p99_ms"] = 99999.0
+        self.assertEqual(bench_gate.main(["--slo", self.write_json(doctored)]), 1)
+        # the same healthy slo payload is NOT a valid us/op bench
+        self.assertEqual(bench_gate.main([good]), 1)
 
 
 if __name__ == "__main__":
