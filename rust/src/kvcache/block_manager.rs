@@ -1,5 +1,6 @@
-//! Process-wide physical block arena with refcounted sharing and a
-//! content-hash prefix index.
+//! Process-wide physical block arena with refcounted sharing, a
+//! content-hash prefix index, batched block operations, and per-worker
+//! slot caches.
 //!
 //! One `BlockManager` owns every physical KV slot in the server; each live
 //! sequence ([`crate::kvcache::SeqCache`]) registers for a [`SeqId`] and
@@ -20,7 +21,7 @@
 //! **Prefix index.** [`BlockManager::publish`] maps a chained content hash
 //! (see `seq_cache::prefix_block_hashes`) to a slot holding a FULL prompt
 //! block. Later prefills walk their own chain through
-//! [`BlockManager::acquire_shared`] and map the hits instead of
+//! [`BlockManager::acquire_shared_run`] and map the hits instead of
 //! re-materializing them. An index entry is removed when its slot is freed
 //! (refcount 0) or when the sole holder is about to mutate the content in
 //! place ([`BlockManager::unpublish_slot`], driven by
@@ -31,14 +32,53 @@
 //! Per-slot holder lists keep double frees and foreign frees (sequence A
 //! releasing a claim it does not hold) hard errors in every build.
 //!
-//! The handle is `Clone + Send + Sync` (an `Arc<Mutex<..>>`): the lock is
-//! only taken on block allocation/release/publish — once every `page_size`
-//! decode steps per sequence — never on the per-token metadata path
-//! (blocks that never touched the prefix index skip it entirely, see
-//! `Block::prefix_tracked`).
+//! **Lock discipline (PR 9).** The global mutex is taken O(1) times per
+//! *sequence operation*, not per block:
+//!
+//!   * Batch APIs — [`BlockManager::alloc_many`],
+//!     [`BlockManager::release_many`],
+//!     [`BlockManager::acquire_shared_run`],
+//!     [`BlockManager::publish_many`] — do a whole prefill load, cached
+//!     prefill, restore, or `Drop` under ONE acquisition each.
+//!   * Accounting reads — `used()`, `free_count()`, `capacity()`,
+//!     `below_low_watermark()`, `above_high_watermark()`,
+//!     `watermark_blocks()`, `prefix_epoch()`, and `stats()` — are pure
+//!     atomic loads; the scheduler's hottest loop never touches the mutex.
+//!   * Per-worker slot caches — [`BlockManager::with_worker_cache`]
+//!     returns a handle bound to a small private stock of leased free
+//!     slots, so the decode-time alloc/release steady state is entirely
+//!     lock-free with respect to the global mutex. Leased slots count as
+//!     FREE in watermark accounting (they are available capacity, merely
+//!     parked near a worker); when the global free list runs dry, the
+//!     allocator drains every peer cache before reporting `None`, so a
+//!     worker can never see phantom OOM while slots idle in a peer's
+//!     stock.
+//!
+//! Never are two of the three lock kinds (global `inner`, shard state,
+//! cache registry) held at the same time — refills pop under the global
+//! lock, drop it, then stow under the shard lock; drains collect under
+//! shard locks, drop them, then splice under the global lock. That makes
+//! the protocol deadlock-free by construction.
+//!
+//! Contention itself is observable: `inner()` goes through `try_lock`
+//! first and counts `lock_acquisitions` / `contended_acquisitions`, and
+//! the lease/drain protocol counts `cache_refills` / `cache_drains` — all
+//! surfaced through [`ArenaStats`] into `CacheStats` and the SLO bench
+//! JSON.
+//!
+//! The handle is `Clone + Send + Sync`; clones share both the arena and
+//! (for handles made by `with_worker_cache`) the worker's slot cache, so a
+//! `SeqCache` created from a bound handle allocs/frees through its
+//! worker's cache with zero signature changes anywhere above.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::{Arc, Mutex, MutexGuard, TryLockError, Weak};
+
+/// Leased free slots a worker cache holds at most. Small on purpose: the
+/// lease is a latency optimization, not a reservation — a big stock would
+/// just sit idle until a peer's dry-arena drain claws it back.
+const SLOT_CACHE_CAP: usize = 8;
 
 /// Identity of a registered sequence within one arena. Obtained from
 /// [`BlockManager::register`]; ids are recycled after `unregister`.
@@ -51,7 +91,8 @@ impl SeqId {
     }
 }
 
-/// Arena-wide accounting snapshot (all O(1) counters).
+/// Arena-wide accounting snapshot. Every field is an atomic load —
+/// `stats()` never takes the global lock.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ArenaStats {
     pub capacity: usize,
@@ -60,19 +101,107 @@ pub struct ArenaStats {
     /// physical-memory footprint of the whole server. A shared slot
     /// counts once, so prefix caching lowers this directly.
     pub peak_used: usize,
-    /// Private allocations (`alloc`); shared acquisitions are counted in
-    /// `prefix_hits` instead.
+    /// Free slots currently leased into per-worker caches. Counted as
+    /// FREE (not used): they are available capacity parked near a worker,
+    /// reclaimable by any peer through the drain protocol.
+    pub leased: usize,
+    /// Private allocations (`alloc` / `alloc_many`); shared acquisitions
+    /// are counted in `prefix_hits` instead.
     pub allocs: u64,
     /// Holder releases (both private frees and shared refcount drops).
     pub frees: u64,
     pub grows: u64,
     /// Live registered sequences.
     pub sequences: usize,
-    /// Successful `acquire_shared` calls — prompt blocks served from the
+    /// Successful shared acquisitions — prompt blocks served from the
     /// prefix index instead of allocated.
     pub prefix_hits: u64,
     /// Slots currently published in the prefix index.
     pub published_blocks: usize,
+    /// Global mutex acquisitions, total. The lock-count pin tests assert
+    /// deltas of this counter around whole sequence operations.
+    pub lock_acquisitions: u64,
+    /// Acquisitions that found the mutex held (`try_lock` failed first).
+    pub contended_acquisitions: u64,
+    /// Times a worker cache refilled its stock from the global free list.
+    pub cache_refills: u64,
+    /// Times a dry allocation drained peer caches back into the free list.
+    pub cache_drains: u64,
+}
+
+/// Per-slot holder set. Refcount is almost always 0 or 1 (sharing only
+/// happens through the prefix index), so the two common states are inline
+/// and allocation-free; only genuinely shared slots pay for a heap vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Holders {
+    Empty,
+    One(u32),
+    Many(Vec<u32>),
+}
+
+impl Holders {
+    fn len(&self) -> usize {
+        match self {
+            Holders::Empty => 0,
+            Holders::One(_) => 1,
+            Holders::Many(v) => v.len(),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        matches!(self, Holders::Empty)
+    }
+
+    fn contains(&self, id: u32) -> bool {
+        match self {
+            Holders::Empty => false,
+            Holders::One(a) => *a == id,
+            Holders::Many(v) => v.contains(&id),
+        }
+    }
+
+    fn push(&mut self, id: u32) {
+        match self {
+            Holders::Empty => *self = Holders::One(id),
+            Holders::One(a) => {
+                let first = *a;
+                *self = Holders::Many(vec![first, id]);
+            }
+            Holders::Many(v) => v.push(id),
+        }
+    }
+
+    /// Remove one claim of `id`; returns false when `id` holds none.
+    fn remove(&mut self, id: u32) -> bool {
+        match self {
+            Holders::Empty => false,
+            Holders::One(a) if *a == id => {
+                *self = Holders::Empty;
+                true
+            }
+            Holders::One(_) => false,
+            Holders::Many(v) => {
+                let Some(pos) = v.iter().position(|&h| h == id) else {
+                    return false;
+                };
+                v.swap_remove(pos);
+                if v.len() == 1 {
+                    let last = v[0];
+                    *self = Holders::One(last);
+                }
+                true
+            }
+        }
+    }
+
+    /// Holder ids for error messages (rendered like the old `Vec` debug).
+    fn ids(&self) -> Vec<u32> {
+        match self {
+            Holders::Empty => Vec::new(),
+            Holders::One(a) => vec![*a],
+            Holders::Many(v) => v.clone(),
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -80,11 +209,11 @@ struct Inner {
     /// LIFO free list; initialized in reverse so slot 0 is handed out
     /// first (keeps the single-tenant layout identity tests rely on).
     free: Vec<usize>,
-    /// `holders[phys]`: raw `SeqId`s holding a claim on the slot, empty =
-    /// free. Refcount == `holders[phys].len()`; almost always 0 or 1, so
-    /// the membership scans below are effectively O(1).
-    holders: Vec<Vec<u32>>,
-    /// Claims held per registered id (indexed by raw id).
+    /// `holders[phys]`: sequences holding a claim on the slot;
+    /// `Holders::Empty` = free or leased/worker-cached.
+    holders: Vec<Holders>,
+    /// Claims held per registered id (indexed by raw id). Worker-cached
+    /// claims live in the shard ledger instead; `owned_by` sums both.
     owned: Vec<usize>,
     registered: Vec<bool>,
     free_ids: Vec<u32>,
@@ -92,17 +221,6 @@ struct Inner {
     prefix: HashMap<u64, usize>,
     /// `slot_hash[phys]`: the hash this slot is published under, if any.
     slot_hash: Vec<Option<u64>>,
-    /// Bumped on every prefix-index mutation (publish or unpublish).
-    /// Admission-time claim estimates are memoized against this: an
-    /// unchanged epoch means `count_leading_hits` would return the same
-    /// answer, so a gated admission retry can skip recomputing its
-    /// O(prompt) claim (see `scheduler::backend::ClaimMemo`).
-    prefix_epoch: u64,
-    peak_used: usize,
-    allocs: u64,
-    frees: u64,
-    grows: u64,
-    prefix_hits: u64,
     /// Admission watermark as a fraction of capacity (see
     /// [`BlockManager::set_watermarks`]). Stored as fractions so `grow`
     /// rescales the block thresholds automatically.
@@ -111,95 +229,335 @@ struct Inner {
     high_frac: f64,
 }
 
-impl Inner {
-    fn capacity(&self) -> usize {
-        self.holders.len()
+/// One worker's slot cache: a private stock of leased free slots plus the
+/// ledger of private claims served from it. Both live outside the global
+/// holder table, so the decode steady state (alloc a block every
+/// `page_size` tokens, release on eviction) never touches the global lock.
+#[derive(Debug)]
+struct Shard {
+    shared: Arc<Shared>,
+    state: Mutex<ShardState>,
+}
+
+#[derive(Debug, Default)]
+struct ShardState {
+    /// Leased free slots; `pop()` hands out the next one.
+    stock: Vec<usize>,
+    /// phys -> holder seq for private claims served from this cache.
+    claims: HashMap<usize, u32>,
+}
+
+impl Shard {
+    fn state(&self) -> MutexGuard<'_, ShardState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+impl Drop for Shard {
+    fn drop(&mut self) {
+        // Last bound handle gone (worker retired): everything the cache
+        // still parks — stock, plus any leaked claims — goes home so no
+        // slot is ever stranded.
+        let st = self.state.get_mut().unwrap_or_else(|p| p.into_inner());
+        let stock = std::mem::take(&mut st.stock);
+        let leaked: Vec<usize> = st.claims.drain().map(|(phys, _)| phys).collect();
+        self.shared.leased.fetch_sub(stock.len(), Relaxed);
+        self.shared.note_freed(leaked.len());
+        if !stock.is_empty() || !leaked.is_empty() {
+            let mut g = self.shared.inner();
+            g.free.extend(stock);
+            g.free.extend(leaked);
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Shared {
+    inner: Mutex<Inner>,
+    /// Registry of live worker caches — the drain protocol's targets.
+    shards: Mutex<Vec<Weak<Shard>>>,
+    // -- lock-free accounting (read side of every hot scheduler check) --
+    capacity: AtomicUsize,
+    used: AtomicUsize,
+    peak_used: AtomicUsize,
+    leased: AtomicUsize,
+    low_blocks: AtomicUsize,
+    high_blocks: AtomicUsize,
+    sequences: AtomicUsize,
+    published: AtomicUsize,
+    /// Bumped on every prefix-index mutation (publish or unpublish).
+    /// Admission-time claim estimates are memoized against this: an
+    /// unchanged epoch means `count_leading_hits` would return the same
+    /// answer (see `scheduler::backend::ClaimMemo`).
+    prefix_epoch: AtomicU64,
+    allocs: AtomicU64,
+    frees: AtomicU64,
+    grows: AtomicU64,
+    prefix_hits: AtomicU64,
+    lock_acquisitions: AtomicU64,
+    contended_acquisitions: AtomicU64,
+    cache_refills: AtomicU64,
+    cache_drains: AtomicU64,
+}
+
+impl Shared {
+    /// Lock helper: `try_lock` first so contention is observable, then
+    /// block. Ignores poisoning: the arena's invariants are restored
+    /// before any panic below, and `SeqCache::drop` must still be able to
+    /// return blocks while unwinding from an unrelated panic.
+    fn inner(&self) -> MutexGuard<'_, Inner> {
+        self.lock_acquisitions.fetch_add(1, Relaxed);
+        match self.inner.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                self.contended_acquisitions.fetch_add(1, Relaxed);
+                self.inner.lock().unwrap_or_else(|p| p.into_inner())
+            }
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+        }
     }
 
-    fn used(&self) -> usize {
-        self.capacity() - self.free.len()
+    /// `n` fresh private claims came into existence.
+    fn note_claimed(&self, n: usize) {
+        self.allocs.fetch_add(n as u64, Relaxed);
+        let used = self.used.fetch_add(n, Relaxed) + n;
+        self.peak_used.fetch_max(used, Relaxed);
     }
 
-    fn low_blocks(&self) -> usize {
-        (self.low_frac * self.capacity() as f64).floor() as usize
+    /// `n` private (refcount-1) claims were released.
+    fn note_freed(&self, n: usize) {
+        if n > 0 {
+            self.frees.fetch_add(n as u64, Relaxed);
+            self.used.fetch_sub(n, Relaxed);
+        }
     }
 
-    fn high_blocks(&self) -> usize {
-        (self.high_frac * self.capacity() as f64).floor() as usize
+    /// Recompute the block watermarks from the stored fractions. Called
+    /// under the global lock (serializes against `grow`/`set_watermarks`).
+    fn store_watermarks(&self, g: &Inner, capacity: usize) {
+        self.low_blocks.store((g.low_frac * capacity as f64).floor() as usize, Relaxed);
+        self.high_blocks.store((g.high_frac * capacity as f64).floor() as usize, Relaxed);
     }
 
     /// Remove the index entry of `phys`, if any. Idempotent.
-    fn unpublish(&mut self, phys: usize) {
-        if let Some(h) = self.slot_hash[phys].take() {
-            self.prefix.remove(&h);
-            self.prefix_epoch += 1;
+    fn unpublish(&self, g: &mut Inner, phys: usize) {
+        if let Some(h) = g.slot_hash[phys].take() {
+            g.prefix.remove(&h);
+            self.prefix_epoch.fetch_add(1, Relaxed);
+            self.published.fetch_sub(1, Relaxed);
         }
     }
 
     /// Drop one claim of `seq` on `phys`; frees (and unpublishes) the slot
     /// when the last claim goes. Returns an error message on a violation.
-    fn drop_claim(&mut self, seq: u32, phys: usize) -> Result<(), String> {
-        if phys >= self.holders.len() {
+    fn drop_claim(&self, g: &mut Inner, seq: u32, phys: usize) -> Result<(), String> {
+        if phys >= g.holders.len() {
             return Err(format!("release of out-of-range block {phys}"));
         }
-        if self.holders[phys].is_empty() {
+        if g.holders[phys].is_empty() {
             return Err(format!("double free of block {phys}"));
         }
-        let Some(pos) = self.holders[phys].iter().position(|&h| h == seq) else {
+        if !g.holders[phys].remove(seq) {
             return Err(format!(
                 "foreign free: seq {seq} releasing block {phys} held by seqs {:?}",
-                self.holders[phys]
+                g.holders[phys].ids()
             ));
-        };
-        self.holders[phys].swap_remove(pos);
-        self.owned[seq as usize] -= 1;
-        self.frees += 1;
-        if self.holders[phys].is_empty() {
-            self.unpublish(phys);
-            self.free.push(phys);
+        }
+        g.owned[seq as usize] -= 1;
+        self.frees.fetch_add(1, Relaxed);
+        if g.holders[phys].is_empty() {
+            self.unpublish(g, phys);
+            g.free.push(phys);
+            self.used.fetch_sub(1, Relaxed);
         }
         Ok(())
     }
+
+    /// Snapshot the live worker caches (dead registry entries compacted).
+    fn live_shards(&self) -> Vec<Arc<Shard>> {
+        let mut reg = self.shards.lock().unwrap_or_else(|p| p.into_inner());
+        reg.retain(|w| w.strong_count() > 0);
+        reg.iter().filter_map(Weak::upgrade).collect()
+    }
+
+    /// Lease up to `cap` free slots out of the global free list.
+    fn lease_batch(&self, cap: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        {
+            let mut g = self.inner();
+            let take = cap.min(g.free.len());
+            for _ in 0..take {
+                out.push(g.free.pop().expect("length checked"));
+            }
+        }
+        if !out.is_empty() {
+            self.leased.fetch_add(out.len(), Relaxed);
+            self.cache_refills.fetch_add(1, Relaxed);
+        }
+        out
+    }
+
+    /// Dry-arena recovery: pull every worker cache's stock back into the
+    /// global free list. Returns how many slots came home — 0 means the
+    /// arena is genuinely out of memory and preemption is justified.
+    fn drain_worker_caches(&self) -> usize {
+        let shards = self.live_shards();
+        let mut reclaimed: Vec<usize> = Vec::new();
+        for s in &shards {
+            let mut st = s.state();
+            reclaimed.append(&mut st.stock);
+        }
+        let n = reclaimed.len();
+        if n == 0 {
+            return 0;
+        }
+        self.leased.fetch_sub(n, Relaxed);
+        self.cache_drains.fetch_add(1, Relaxed);
+        self.inner().free.extend(reclaimed);
+        n
+    }
+
+    /// Pull every claim `seq` still holds out of the worker-cache ledgers
+    /// (unregister leak-proofing). Returns the reclaimed slots; the caller
+    /// pushes them onto the global free list.
+    fn sweep_shard_claims(&self, seq: u32) -> Vec<usize> {
+        let mut out = Vec::new();
+        for s in &self.live_shards() {
+            let mut st = s.state();
+            st.claims.retain(|&phys, &mut holder| {
+                if holder == seq {
+                    out.push(phys);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        out
+    }
+
+    /// Cross-handle safety net: release a claim that lives in SOME
+    /// worker's cache ledger. Returns true when found and freed.
+    fn release_shard_claim(&self, seq: u32, phys: usize) -> bool {
+        for s in &self.live_shards() {
+            let mut st = s.state();
+            if st.claims.get(&phys) == Some(&seq) {
+                st.claims.remove(&phys);
+                drop(st);
+                self.note_freed(1);
+                self.inner().free.push(phys);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Which sequence (if any) holds `phys` through a worker cache.
+    fn shard_claim_holder(&self, phys: usize) -> Option<u32> {
+        for s in &self.live_shards() {
+            if let Some(&holder) = s.state().claims.get(&phys) {
+                return Some(holder);
+            }
+        }
+        None
+    }
+
+    /// Worker-cached claims held by `seq` across all caches.
+    fn shard_claims_of(&self, seq: u32) -> usize {
+        self.live_shards()
+            .iter()
+            .map(|s| s.state().claims.values().filter(|&&h| h == seq).count())
+            .sum()
+    }
 }
 
-/// Cloneable handle to the shared arena.
+/// Cloneable handle to the shared arena, optionally bound to one worker's
+/// slot cache (see [`BlockManager::with_worker_cache`]).
 #[derive(Debug, Clone)]
-pub struct BlockManager(Arc<Mutex<Inner>>);
+pub struct BlockManager {
+    shared: Arc<Shared>,
+    shard: Option<Arc<Shard>>,
+}
 
 impl BlockManager {
     pub fn new(capacity_blocks: usize) -> Self {
-        BlockManager(Arc::new(Mutex::new(Inner {
-            free: (0..capacity_blocks).rev().collect(),
-            holders: (0..capacity_blocks).map(|_| Vec::new()).collect(),
-            owned: Vec::new(),
-            registered: Vec::new(),
-            free_ids: Vec::new(),
-            prefix: HashMap::new(),
-            slot_hash: vec![None; capacity_blocks],
-            prefix_epoch: 0,
-            peak_used: 0,
-            allocs: 0,
-            frees: 0,
-            grows: 0,
-            prefix_hits: 0,
-            // Default watermarks sit at capacity: admission gates on raw
-            // physical headroom and proactive preemption never fires —
-            // the historical hard-capacity semantics.
-            low_frac: 1.0,
-            high_frac: 1.0,
-        })))
+        let shared = Shared {
+            inner: Mutex::new(Inner {
+                free: (0..capacity_blocks).rev().collect(),
+                holders: (0..capacity_blocks).map(|_| Holders::Empty).collect(),
+                owned: Vec::new(),
+                registered: Vec::new(),
+                free_ids: Vec::new(),
+                prefix: HashMap::new(),
+                slot_hash: vec![None; capacity_blocks],
+                // Default watermarks sit at capacity: admission gates on
+                // raw physical headroom and proactive preemption never
+                // fires — the historical hard-capacity semantics.
+                low_frac: 1.0,
+                high_frac: 1.0,
+            }),
+            shards: Mutex::new(Vec::new()),
+            capacity: AtomicUsize::new(capacity_blocks),
+            used: AtomicUsize::new(0),
+            peak_used: AtomicUsize::new(0),
+            leased: AtomicUsize::new(0),
+            low_blocks: AtomicUsize::new(capacity_blocks),
+            high_blocks: AtomicUsize::new(capacity_blocks),
+            sequences: AtomicUsize::new(0),
+            published: AtomicUsize::new(0),
+            prefix_epoch: AtomicU64::new(0),
+            allocs: AtomicU64::new(0),
+            frees: AtomicU64::new(0),
+            grows: AtomicU64::new(0),
+            prefix_hits: AtomicU64::new(0),
+            lock_acquisitions: AtomicU64::new(0),
+            contended_acquisitions: AtomicU64::new(0),
+            cache_refills: AtomicU64::new(0),
+            cache_drains: AtomicU64::new(0),
+        };
+        BlockManager { shared: Arc::new(shared), shard: None }
     }
 
-    /// Lock helper. Ignores poisoning: the arena's invariants are restored
-    /// before any panic below, and `SeqCache::drop` must still be able to
-    /// return blocks while unwinding from an unrelated panic.
-    fn inner(&self) -> MutexGuard<'_, Inner> {
-        self.0.lock().unwrap_or_else(|p| p.into_inner())
+    /// A clone of this handle bound to a fresh worker slot cache. Every
+    /// clone of the RETURNED handle (e.g. the ones `SeqCache` keeps)
+    /// shares the same cache, so a worker's scheduler and all its
+    /// sequences alloc/free through one private stock. The cache returns
+    /// everything it parks when its last handle drops.
+    pub fn with_worker_cache(&self) -> BlockManager {
+        let shard = Arc::new(Shard {
+            shared: Arc::clone(&self.shared),
+            state: Mutex::new(ShardState::default()),
+        });
+        self.shared
+            .shards
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(Arc::downgrade(&shard));
+        BlockManager { shared: Arc::clone(&self.shared), shard: Some(shard) }
+    }
+
+    /// Return this handle's cached stock (not its live claims) to the
+    /// global free list. Idle workers call this so their lease does not
+    /// sit parked while peers could use it without a drain. Returns how
+    /// many slots went home; 0 for unbound handles.
+    pub fn flush_local_cache(&self) -> usize {
+        let Some(shard) = &self.shard else { return 0 };
+        let stock = {
+            let mut st = shard.state();
+            std::mem::take(&mut st.stock)
+        };
+        if stock.is_empty() {
+            return 0;
+        }
+        let n = stock.len();
+        self.shared.leased.fetch_sub(n, Relaxed);
+        self.shared.inner().free.extend(stock);
+        n
     }
 
     /// Register a new sequence and return its arena identity.
     pub fn register(&self) -> SeqId {
-        let mut g = self.inner();
+        let mut g = self.shared.inner();
         let id = match g.free_ids.pop() {
             Some(id) => id,
             None => {
@@ -211,43 +569,134 @@ impl BlockManager {
         };
         g.owned[id as usize] = 0;
         g.registered[id as usize] = true;
+        self.shared.sequences.fetch_add(1, Relaxed);
         SeqId(id)
     }
 
     /// Drop a sequence: its id is recycled, and any claim it still holds
-    /// is released. Callers that know their slots (e.g. `SeqCache::drop`)
-    /// release them first so the O(capacity) holder scan below only runs
-    /// as a leak-proofing fallback.
+    /// — global or worker-cached — is released. Callers that know their
+    /// slots (e.g. `SeqCache::drop`) release them first so the
+    /// O(capacity) holder scan below only runs as a leak-proofing
+    /// fallback.
     pub fn unregister(&self, seq: SeqId) {
-        let mut g = self.inner();
+        let reclaimed = self.shared.sweep_shard_claims(seq.0);
+        self.shared.note_freed(reclaimed.len());
+        let mut g = self.shared.inner();
+        g.free.extend(reclaimed);
         let id = seq.0 as usize;
         if id >= g.registered.len() || !g.registered[id] {
             return; // already gone — unregister is idempotent for Drop
         }
         if g.owned[id] > 0 {
             for phys in 0..g.holders.len() {
-                if g.holders[phys].contains(&seq.0) {
-                    g.drop_claim(seq.0, phys).expect("holder just found");
+                if g.holders[phys].contains(seq.0) {
+                    self.shared.drop_claim(&mut g, seq.0, phys).expect("holder just found");
                 }
             }
         }
         g.registered[id] = false;
         g.free_ids.push(seq.0);
+        self.shared.sequences.fetch_sub(1, Relaxed);
     }
 
-    /// Allocate one PRIVATE block for `seq` (refcount 1). `None` when the
-    /// arena is dry (the scheduler's preemption trigger).
+    /// Allocate one PRIVATE block for `seq` (refcount 1). Bound handles
+    /// serve it from the worker's stock without the global lock; a dry
+    /// arena drains peer caches before giving up. `None` only when no
+    /// free slot exists anywhere (the scheduler's preemption trigger).
     pub fn alloc(&self, seq: SeqId) -> Option<usize> {
-        let mut g = self.inner();
+        if let Some(shard) = &self.shard {
+            return self.alloc_cached(shard, seq);
+        }
+        loop {
+            if let Some(phys) = self.try_alloc_global(seq) {
+                return Some(phys);
+            }
+            if self.shared.drain_worker_caches() == 0 {
+                // a racing free may have landed after our dry pass
+                return self.try_alloc_global(seq);
+            }
+        }
+    }
+
+    fn try_alloc_global(&self, seq: SeqId) -> Option<usize> {
+        let mut g = self.shared.inner();
         debug_assert!(g.registered[seq.0 as usize], "alloc on unregistered seq");
         let phys = g.free.pop()?;
         debug_assert!(g.holders[phys].is_empty() && g.slot_hash[phys].is_none());
         g.holders[phys].push(seq.0);
         g.owned[seq.0 as usize] += 1;
-        g.allocs += 1;
-        let used = g.used();
-        g.peak_used = g.peak_used.max(used);
+        drop(g);
+        self.shared.note_claimed(1);
         Some(phys)
+    }
+
+    /// Bound-handle alloc: stock pop → lease refill → peer drain.
+    fn alloc_cached(&self, shard: &Shard, seq: SeqId) -> Option<usize> {
+        {
+            let mut st = shard.state();
+            if let Some(phys) = st.stock.pop() {
+                st.claims.insert(phys, seq.0);
+                drop(st);
+                self.shared.leased.fetch_sub(1, Relaxed);
+                self.shared.note_claimed(1);
+                return Some(phys);
+            }
+        }
+        loop {
+            let batch = self.shared.lease_batch(SLOT_CACHE_CAP);
+            if !batch.is_empty() {
+                let mut st = shard.state();
+                // reverse so pop order matches global free-list LIFO order
+                st.stock.extend(batch.into_iter().rev());
+                let phys = st.stock.pop().expect("batch non-empty");
+                st.claims.insert(phys, seq.0);
+                drop(st);
+                self.shared.leased.fetch_sub(1, Relaxed);
+                self.shared.note_claimed(1);
+                return Some(phys);
+            }
+            if self.shared.drain_worker_caches() == 0 {
+                return None;
+            }
+        }
+    }
+
+    /// Allocate `n` PRIVATE blocks for `seq` under ONE global lock
+    /// acquisition, all-or-nothing. Slot order is identical to `n`
+    /// sequential `alloc` calls on an unbound handle. Drains peer caches
+    /// when the free list alone cannot cover `n`; `None` means the arena
+    /// genuinely lacks `n` free slots.
+    pub fn alloc_many(&self, seq: SeqId, n: usize) -> Option<Vec<usize>> {
+        if n == 0 {
+            return Some(Vec::new());
+        }
+        loop {
+            if let Some(v) = self.try_alloc_many(seq, n) {
+                return Some(v);
+            }
+            if self.shared.drain_worker_caches() == 0 {
+                return self.try_alloc_many(seq, n);
+            }
+        }
+    }
+
+    fn try_alloc_many(&self, seq: SeqId, n: usize) -> Option<Vec<usize>> {
+        let mut g = self.shared.inner();
+        debug_assert!(g.registered[seq.0 as usize], "alloc on unregistered seq");
+        if g.free.len() < n {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let phys = g.free.pop().expect("length checked");
+            debug_assert!(g.holders[phys].is_empty() && g.slot_hash[phys].is_none());
+            g.holders[phys].push(seq.0);
+            out.push(phys);
+        }
+        g.owned[seq.0 as usize] += n;
+        drop(g);
+        self.shared.note_claimed(n);
+        Some(out)
     }
 
     /// Look up `hash` in the prefix index and, on a hit, add `seq` as a
@@ -255,16 +704,64 @@ impl BlockManager {
     /// that is the memory saving). `None` on a miss, or when `seq` already
     /// holds the slot (a sequence maps each physical page at most once).
     pub fn acquire_shared(&self, seq: SeqId, hash: u64) -> Option<usize> {
-        let mut g = self.inner();
+        let mut g = self.shared.inner();
         debug_assert!(g.registered[seq.0 as usize], "acquire on unregistered seq");
         let phys = *g.prefix.get(&hash)?;
-        if g.holders[phys].contains(&seq.0) {
+        if g.holders[phys].contains(seq.0) {
             return None;
         }
         g.holders[phys].push(seq.0);
         g.owned[seq.0 as usize] += 1;
-        g.prefix_hits += 1;
+        drop(g);
+        self.shared.prefix_hits.fetch_add(1, Relaxed);
         Some(phys)
+    }
+
+    /// Walk `hashes` through the prefix index under ONE lock acquisition,
+    /// acquiring each hit for `seq` until the first miss (or a slot `seq`
+    /// already holds). Returns the acquired slots in chain order —
+    /// observationally identical to calling `acquire_shared` per hash
+    /// until it returns `None`.
+    pub fn acquire_shared_run(&self, seq: SeqId, hashes: &[u64]) -> Vec<usize> {
+        let mut out = Vec::new();
+        if hashes.is_empty() {
+            return out;
+        }
+        let mut g = self.shared.inner();
+        debug_assert!(g.registered[seq.0 as usize], "acquire on unregistered seq");
+        for h in hashes {
+            let Some(&phys) = g.prefix.get(h) else { break };
+            if g.holders[phys].contains(seq.0) {
+                break;
+            }
+            g.holders[phys].push(seq.0);
+            g.owned[seq.0 as usize] += 1;
+            out.push(phys);
+        }
+        drop(g);
+        self.shared.prefix_hits.fetch_add(out.len() as u64, Relaxed);
+        out
+    }
+
+    /// Migrate a worker-cached claim into the global holder table (the
+    /// prefix index only tracks global holders). No-op when `phys` is not
+    /// cached here. Accounting is unchanged: the claim already counted.
+    fn promote_shard_claim(&self, seq: u32, phys: usize) {
+        let Some(shard) = &self.shard else { return };
+        let promote = {
+            let mut st = shard.state();
+            if st.claims.get(&phys) == Some(&seq) {
+                st.claims.remove(&phys);
+                true
+            } else {
+                false
+            }
+        };
+        if promote {
+            let mut g = self.shared.inner();
+            g.holders[phys].push(seq);
+            g.owned[seq as usize] += 1;
+        }
     }
 
     /// Publish the content hash of a FULL block held by `seq` into the
@@ -273,8 +770,9 @@ impl BlockManager {
     /// the slot is already published under another hash, or when `seq`
     /// does not hold the slot.
     pub fn publish(&self, seq: SeqId, phys: usize, hash: u64) -> bool {
-        let mut g = self.inner();
-        if phys >= g.holders.len() || !g.holders[phys].contains(&seq.0) {
+        self.promote_shard_claim(seq.0, phys);
+        let mut g = self.shared.inner();
+        if phys >= g.holders.len() || !g.holders[phys].contains(seq.0) {
             return false;
         }
         if g.slot_hash[phys].is_some() || g.prefix.contains_key(&hash) {
@@ -282,36 +780,83 @@ impl BlockManager {
         }
         g.prefix.insert(hash, phys);
         g.slot_hash[phys] = Some(hash);
-        g.prefix_epoch += 1;
+        drop(g);
+        self.shared.prefix_epoch.fetch_add(1, Relaxed);
+        self.shared.published.fetch_add(1, Relaxed);
         true
+    }
+
+    /// Publish a run of `(phys, hash)` pairs under ONE lock acquisition.
+    /// Per-pair first-publisher-wins semantics identical to `publish`;
+    /// returns one success flag per pair, in order.
+    pub fn publish_many(&self, seq: SeqId, entries: &[(usize, u64)]) -> Vec<bool> {
+        if entries.is_empty() {
+            return Vec::new();
+        }
+        for &(phys, _) in entries {
+            self.promote_shard_claim(seq.0, phys);
+        }
+        let mut g = self.shared.inner();
+        let mut out = Vec::with_capacity(entries.len());
+        let mut published = 0usize;
+        for &(phys, hash) in entries {
+            let ok = phys < g.holders.len()
+                && g.holders[phys].contains(seq.0)
+                && g.slot_hash[phys].is_none()
+                && !g.prefix.contains_key(&hash);
+            if ok {
+                g.prefix.insert(hash, phys);
+                g.slot_hash[phys] = Some(hash);
+                published += 1;
+            }
+            out.push(ok);
+        }
+        drop(g);
+        if published > 0 {
+            // one epoch bump per batch: any change invalidates claim memos
+            self.shared.prefix_epoch.fetch_add(1, Relaxed);
+            self.shared.published.fetch_add(published, Relaxed);
+        }
+        out
     }
 
     /// Remove `phys` from the prefix index (sole holder about to mutate
     /// the content in place). Idempotent; no-op for unpublished slots.
     pub fn unpublish_slot(&self, phys: usize) {
-        let mut g = self.inner();
+        let mut g = self.shared.inner();
         if phys < g.holders.len() {
-            g.unpublish(phys);
+            self.shared.unpublish(&mut g, phys);
         }
     }
 
     /// Current holder count of `phys` (0 = free). A result > 1 means the
     /// slot is shared and must be copied-on-write before in-place writes.
+    /// A worker-cached private claim reads as 1.
     pub fn refcount(&self, phys: usize) -> usize {
-        let g = self.inner();
-        g.holders.get(phys).map_or(0, |h| h.len())
+        {
+            let g = self.shared.inner();
+            let n = g.holders.get(phys).map_or(0, Holders::len);
+            if n > 0 {
+                return n;
+            }
+        }
+        if self.shared.shard_claim_holder(phys).is_some() {
+            1
+        } else {
+            0
+        }
     }
 
     /// Generation counter of the prefix index: changes exactly when a
     /// publish or unpublish changes what `count_leading_hits` could
-    /// answer. The admission claim-memoization key.
+    /// answer. The admission claim-memoization key. Lock-free.
     pub fn prefix_epoch(&self) -> u64 {
-        self.inner().prefix_epoch
+        self.shared.prefix_epoch.load(Relaxed)
     }
 
     /// True when `phys` is currently published in the prefix index.
     pub fn is_published(&self, phys: usize) -> bool {
-        let g = self.inner();
+        let g = self.shared.inner();
         phys < g.slot_hash.len() && g.slot_hash[phys].is_some()
     }
 
@@ -320,34 +865,137 @@ impl BlockManager {
     /// map from the index instead of allocating. Read-only: acquires
     /// nothing (the walk in `try_load_prefill_cached` does the claiming).
     pub fn count_leading_hits(&self, hashes: &[u64]) -> usize {
-        let g = self.inner();
+        let g = self.shared.inner();
         hashes.iter().take_while(|h| g.prefix.contains_key(h)).count()
     }
 
     /// Release one claim of `seq` on `phys`: the slot returns to the free
     /// list (and leaves the prefix index) only when the LAST claim goes.
-    /// Panics on double free (slot already free) and on foreign free
-    /// (`seq` holds no claim on the slot) — both are memory-safety bugs in
-    /// the caller, checked in O(holders) in every build.
+    /// Worker-cached claims return to the worker's stock without the
+    /// global lock. Panics on double free (slot already free) and on
+    /// foreign free (`seq` holds no claim on the slot) — both are
+    /// memory-safety bugs in the caller, checked in every build.
     pub fn release(&self, seq: SeqId, phys: usize) {
-        let mut g = self.inner();
-        if let Err(msg) = g.drop_claim(seq.0, phys) {
-            drop(g); // release the lock before unwinding
+        if let Some(shard) = &self.shard {
+            if self.release_cached(shard, seq, phys) {
+                return;
+            }
+        }
+        let mut g = self.shared.inner();
+        if let Err(msg) = self.shared.drop_claim(&mut g, seq.0, phys) {
+            drop(g); // release the lock before unwinding or scanning peers
+            if self.shared.release_shard_claim(seq.0, phys) {
+                return; // cross-handle release of a peer-cached claim
+            }
             panic!("{msg}");
+        }
+    }
+
+    /// Try to release through this worker's cache ledger. True when the
+    /// claim lived here and was returned to stock (or overflowed back to
+    /// the global free list).
+    fn release_cached(&self, shard: &Shard, seq: SeqId, phys: usize) -> bool {
+        let mut st = shard.state();
+        match st.claims.get(&phys).copied() {
+            None => false,
+            Some(holder) if holder == seq.0 => {
+                st.claims.remove(&phys);
+                let overflow = if st.stock.len() < SLOT_CACHE_CAP {
+                    st.stock.push(phys);
+                    self.shared.leased.fetch_add(1, Relaxed);
+                    None
+                } else {
+                    Some(phys)
+                };
+                drop(st);
+                self.shared.note_freed(1);
+                if let Some(p) = overflow {
+                    self.shared.inner().free.push(p);
+                }
+                true
+            }
+            Some(holder) => {
+                drop(st);
+                panic!("foreign free: seq {} releasing block {phys} held by seqs [{holder}]", seq.0);
+            }
+        }
+    }
+
+    /// Release a whole set of claims of `seq` under O(1) lock
+    /// acquisitions: one pass over the worker cache ledger (when bound),
+    /// one global acquisition for everything else. Per-slot semantics —
+    /// refcount drops, last-holder frees, double/foreign-free panics —
+    /// are identical to calling `release` per slot, in order.
+    pub fn release_many(&self, seq: SeqId, slots: &[usize]) {
+        if slots.is_empty() {
+            return;
+        }
+        let mut rest: Vec<usize> = Vec::new();
+        if let Some(shard) = &self.shard {
+            let mut overflow: Vec<usize> = Vec::new();
+            let mut returned = 0usize;
+            {
+                let mut st = shard.state();
+                for &phys in slots {
+                    match st.claims.get(&phys).copied() {
+                        Some(holder) if holder == seq.0 => {
+                            st.claims.remove(&phys);
+                            if st.stock.len() < SLOT_CACHE_CAP {
+                                st.stock.push(phys);
+                                self.shared.leased.fetch_add(1, Relaxed);
+                            } else {
+                                overflow.push(phys);
+                            }
+                            returned += 1;
+                        }
+                        Some(holder) => {
+                            drop(st);
+                            panic!(
+                                "foreign free: seq {} releasing block {phys} held by seqs [{holder}]",
+                                seq.0
+                            );
+                        }
+                        None => rest.push(phys),
+                    }
+                }
+            }
+            self.shared.note_freed(returned);
+            if !overflow.is_empty() {
+                self.shared.inner().free.extend(overflow);
+            }
+        } else {
+            rest.extend_from_slice(slots);
+        }
+        if rest.is_empty() {
+            return;
+        }
+        let mut guard = Some(self.shared.inner());
+        for &phys in &rest {
+            let g = guard.as_mut().expect("guard live");
+            if let Err(msg) = self.shared.drop_claim(g, seq.0, phys) {
+                guard = None; // drop the lock before scanning peers / unwinding
+                if self.shared.release_shard_claim(seq.0, phys) {
+                    guard = Some(self.shared.inner());
+                } else {
+                    panic!("{msg}");
+                }
+            }
         }
     }
 
     /// Extend the arena to `new_capacity` slots (device memory growth).
     pub fn grow(&self, new_capacity: usize) {
-        let mut g = self.inner();
-        let old = g.capacity();
+        let mut g = self.shared.inner();
+        let old = g.holders.len();
         assert!(new_capacity >= old, "arena cannot shrink");
         for p in (old..new_capacity).rev() {
             g.free.push(p);
         }
-        g.holders.resize_with(new_capacity, Vec::new);
+        g.holders.resize_with(new_capacity, || Holders::Empty);
         g.slot_hash.resize(new_capacity, None);
-        g.grows += 1;
+        self.shared.capacity.store(new_capacity, Relaxed);
+        self.shared.store_watermarks(&g, new_capacity);
+        self.shared.grows.fetch_add(1, Relaxed);
     }
 
     /// Configure the admission/preemption hysteresis band as fractions of
@@ -360,64 +1008,80 @@ impl BlockManager {
             low > 0.0 && low <= high && high <= 1.0,
             "watermarks must satisfy 0 < low <= high <= 1 (got {low}, {high})"
         );
-        let mut g = self.inner();
+        let mut g = self.shared.inner();
         g.low_frac = low;
         g.high_frac = high;
+        let capacity = g.holders.len();
+        self.shared.store_watermarks(&g, capacity);
     }
 
     /// `(low, high)` watermarks in blocks at the current capacity.
+    /// Lock-free.
     pub fn watermark_blocks(&self) -> (usize, usize) {
-        let g = self.inner();
-        (g.low_blocks(), g.high_blocks())
+        (self.shared.low_blocks.load(Relaxed), self.shared.high_blocks.load(Relaxed))
     }
 
     /// True when allocating `incoming` more blocks keeps usage at or below
     /// the low watermark — the scheduler's admission gate. With default
     /// watermarks (1.0) this degenerates to "fits physical capacity".
+    /// Lock-free: leased (worker-cached) slots count as free.
     pub fn below_low_watermark(&self, incoming: usize) -> bool {
-        let g = self.inner();
-        g.used() + incoming <= g.low_blocks()
+        self.shared.used.load(Relaxed) + incoming <= self.shared.low_blocks.load(Relaxed)
     }
 
     /// True when usage exceeds the high watermark — the scheduler's
     /// proactive preemption trigger (reclaims the optimism the low-mark
     /// admission gate extends). Never true with default watermarks.
+    /// Lock-free.
     pub fn above_high_watermark(&self) -> bool {
-        let g = self.inner();
-        g.used() > g.high_blocks()
+        self.shared.used.load(Relaxed) > self.shared.high_blocks.load(Relaxed)
     }
 
+    /// Lock-free.
     pub fn capacity(&self) -> usize {
-        self.inner().capacity()
+        self.shared.capacity.load(Relaxed)
     }
 
+    /// Free slots from the global view: unallocated, whether on the global
+    /// free list or leased into a worker cache. Lock-free.
     pub fn free_count(&self) -> usize {
-        self.inner().free.len()
+        self.shared.capacity.load(Relaxed) - self.shared.used.load(Relaxed)
     }
 
+    /// Allocated (claimed) slots; a shared slot counts once. Lock-free.
     pub fn used(&self) -> usize {
-        self.inner().used()
+        self.shared.used.load(Relaxed)
     }
 
     /// Claims currently held by `seq` (a shared slot counts one claim per
-    /// holder).
+    /// holder), global and worker-cached both.
     pub fn owned_by(&self, seq: SeqId) -> usize {
-        let g = self.inner();
-        g.owned.get(seq.0 as usize).copied().unwrap_or(0)
+        let global = {
+            let g = self.shared.inner();
+            g.owned.get(seq.0 as usize).copied().unwrap_or(0)
+        };
+        global + self.shared.shard_claims_of(seq.0)
     }
 
+    /// Accounting snapshot. Pure atomic loads — never takes the lock (and
+    /// therefore never perturbs the `lock_acquisitions` it reports).
     pub fn stats(&self) -> ArenaStats {
-        let g = self.inner();
+        let s = &self.shared;
         ArenaStats {
-            capacity: g.capacity(),
-            used: g.used(),
-            peak_used: g.peak_used,
-            allocs: g.allocs,
-            frees: g.frees,
-            grows: g.grows,
-            sequences: g.registered.iter().filter(|&&r| r).count(),
-            prefix_hits: g.prefix_hits,
-            published_blocks: g.prefix.len(),
+            capacity: s.capacity.load(Relaxed),
+            used: s.used.load(Relaxed),
+            peak_used: s.peak_used.load(Relaxed),
+            leased: s.leased.load(Relaxed),
+            allocs: s.allocs.load(Relaxed),
+            frees: s.frees.load(Relaxed),
+            grows: s.grows.load(Relaxed),
+            sequences: s.sequences.load(Relaxed),
+            prefix_hits: s.prefix_hits.load(Relaxed),
+            published_blocks: s.published.load(Relaxed),
+            lock_acquisitions: s.lock_acquisitions.load(Relaxed),
+            contended_acquisitions: s.contended_acquisitions.load(Relaxed),
+            cache_refills: s.cache_refills.load(Relaxed),
+            cache_drains: s.cache_drains.load(Relaxed),
         }
     }
 }
@@ -668,5 +1332,225 @@ mod tests {
         m.unregister(a);
         let b = m.register();
         assert_eq!(b.raw(), raw, "freed id is recycled");
+    }
+
+    // ---- PR 9: batch APIs, lock counting, worker slot caches ----
+
+    #[test]
+    fn alloc_many_matches_sequential_layout_and_one_lock() {
+        let m = BlockManager::new(8);
+        let s = m.register();
+        let before = m.stats().lock_acquisitions;
+        let v = m.alloc_many(s, 3).unwrap();
+        assert_eq!(m.stats().lock_acquisitions - before, 1, "one acquisition for 3 blocks");
+        assert_eq!(v, vec![0, 1, 2], "identical layout to sequential alloc");
+        assert_eq!(m.used(), 3);
+        assert_eq!(m.owned_by(s), 3);
+        m.release_many(s, &v);
+        assert_eq!(m.used(), 0);
+        // LIFO reuse: the batch frees pushed 0,1,2 so the next batch
+        // pops 2,1,0 — exactly what three sequential alloc/release
+        // round-trips would produce.
+        assert_eq!(m.alloc_many(s, 3).unwrap(), vec![2, 1, 0]);
+        assert_eq!(m.alloc_many(s, 99), None, "all-or-nothing on overflow");
+        assert_eq!(m.used(), 3, "failed batch claims nothing");
+        assert_eq!(m.alloc_many(s, 0), Some(Vec::new()));
+    }
+
+    #[test]
+    #[should_panic(expected = "double free of block")]
+    fn release_many_double_free_panics() {
+        let m = BlockManager::new(4);
+        let s = m.register();
+        let v = m.alloc_many(s, 2).unwrap();
+        m.release_many(s, &[v[0], v[0]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "foreign free")]
+    fn release_many_foreign_free_panics() {
+        let m = BlockManager::new(4);
+        let a = m.register();
+        let b = m.register();
+        let v = m.alloc_many(a, 2).unwrap();
+        m.release_many(b, &v);
+    }
+
+    #[test]
+    fn acquire_shared_run_walks_and_stops_like_per_block_calls() {
+        let m = BlockManager::new(8);
+        let a = m.register();
+        let slots = m.alloc_many(a, 3).unwrap();
+        let pairs: Vec<(usize, u64)> = slots.iter().map(|&p| (p, 100 + p as u64)).collect();
+        assert_eq!(m.publish_many(a, &pairs), vec![true, true, true]);
+        let b = m.register();
+        let before = m.stats().lock_acquisitions;
+        let run = m.acquire_shared_run(b, &[100, 101, 999, 102]);
+        assert_eq!(m.stats().lock_acquisitions - before, 1);
+        assert_eq!(run, &slots[..2], "stops at the first miss");
+        assert_eq!(m.stats().prefix_hits, 2);
+        assert_eq!(m.owned_by(b), 2);
+        // already-held slots stop the walk, exactly like acquire_shared
+        assert_eq!(m.acquire_shared_run(b, &[100, 101]), Vec::<usize>::new());
+        assert_eq!(m.acquire_shared_run(b, &[102]), vec![slots[2]]);
+        assert_eq!(m.acquire_shared_run(b, &[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn publish_many_is_first_wins_per_pair() {
+        let m = BlockManager::new(4);
+        let a = m.register();
+        let v = m.alloc_many(a, 2).unwrap();
+        let e0 = m.prefix_epoch();
+        let ok = m.publish_many(a, &[(v[0], 7), (v[1], 7), (v[1], 8)]);
+        assert_eq!(ok, vec![true, false, true], "duplicate hash loses, fresh hash wins");
+        assert_eq!(m.stats().published_blocks, 2);
+        assert!(m.prefix_epoch() > e0);
+        let e1 = m.prefix_epoch();
+        assert_eq!(m.publish_many(a, &[(v[0], 9)]), vec![false]);
+        assert_eq!(m.prefix_epoch(), e1, "all-failed batch does not bump the epoch");
+    }
+
+    #[test]
+    fn worker_cache_steady_state_skips_the_global_lock() {
+        let m = BlockManager::new(32);
+        let w = m.with_worker_cache();
+        let s = w.register();
+        let p = w.alloc(s).unwrap();
+        w.release(s, p);
+        // warmed up: the stock now covers the loop below
+        let before = m.stats().lock_acquisitions;
+        for _ in 0..50 {
+            let p = w.alloc(s).unwrap();
+            w.release(s, p);
+        }
+        assert_eq!(m.stats().lock_acquisitions, before, "steady state is lock-free");
+        assert_eq!(m.stats().cache_refills, 1);
+        assert_eq!(m.used(), 0);
+        assert!(m.stats().leased > 0, "the lease is parked at the worker");
+        assert_eq!(m.free_count(), 32, "leased slots still count as free");
+    }
+
+    #[test]
+    fn worker_cached_claims_are_visible_and_releasable() {
+        let m = BlockManager::new(16);
+        let w = m.with_worker_cache();
+        let s = w.register();
+        let p = w.alloc(s).unwrap();
+        assert_eq!(m.used(), 1);
+        assert_eq!(w.refcount(p), 1, "cached private claim reads as refcount 1");
+        assert_eq!(w.owned_by(s), 1);
+        // cross-handle release through the unbound handle still works
+        m.release(s, p);
+        assert_eq!(m.used(), 0);
+        assert_eq!(w.refcount(p), 0);
+        assert_eq!(w.owned_by(s), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "foreign free")]
+    fn worker_cache_foreign_free_panics() {
+        let m = BlockManager::new(8);
+        let w = m.with_worker_cache();
+        let a = w.register();
+        let b = w.register();
+        let p = w.alloc(a).unwrap();
+        w.release(b, p);
+    }
+
+    #[test]
+    fn dry_arena_drains_peer_caches_instead_of_failing() {
+        let m = BlockManager::new(SLOT_CACHE_CAP);
+        let w = m.with_worker_cache();
+        let ws = w.register();
+        let p = w.alloc(ws).unwrap(); // leases the whole arena into w's cache
+        assert_eq!(m.stats().leased, SLOT_CACHE_CAP - 1);
+        let b = m.register();
+        // global free list is empty, but peers hold stock: no phantom OOM
+        let v = m.alloc_many(b, SLOT_CACHE_CAP - 1).expect("drain must cover this");
+        assert_eq!(v.len(), SLOT_CACHE_CAP - 1);
+        assert!(m.stats().cache_drains >= 1);
+        assert_eq!(m.stats().leased, 0);
+        assert_eq!(m.used(), SLOT_CACHE_CAP);
+        assert_eq!(m.alloc(b), None, "now the arena is genuinely dry");
+        w.release(ws, p);
+        m.release_many(b, &v);
+        assert_eq!(m.used(), 0);
+    }
+
+    #[test]
+    fn unregister_sweeps_worker_cached_claims() {
+        let m = BlockManager::new(16);
+        let w = m.with_worker_cache();
+        let s = w.register();
+        w.alloc(s).unwrap();
+        w.alloc(s).unwrap();
+        assert_eq!(m.used(), 2);
+        w.unregister(s);
+        assert_eq!(m.used(), 0, "cached claims reclaimed on unregister");
+        assert_eq!(m.stats().sequences, 0);
+    }
+
+    #[test]
+    fn flush_and_drop_return_the_stock() {
+        let m = BlockManager::new(16);
+        {
+            let w = m.with_worker_cache();
+            let s = w.register();
+            let p = w.alloc(s).unwrap();
+            w.release(s, p);
+            assert!(m.stats().leased > 0);
+            assert_eq!(w.flush_local_cache(), SLOT_CACHE_CAP);
+            assert_eq!(m.stats().leased, 0);
+            assert_eq!(m.flush_local_cache(), 0, "unbound handles hold no stock");
+            let _p2 = w.alloc(s).unwrap(); // re-lease, then drop the worker
+            w.unregister(s);
+        }
+        assert_eq!(m.stats().leased, 0, "dropping the last bound handle restocks");
+        assert_eq!(m.used(), 0);
+        assert_eq!(m.free_count(), 16);
+    }
+
+    #[test]
+    fn watermarks_count_leased_slots_as_free() {
+        let m = BlockManager::new(20);
+        m.set_watermarks(0.5, 0.75); // low = 10, high = 15
+        let w = m.with_worker_cache();
+        let s = w.register();
+        w.alloc(s).unwrap(); // leases SLOT_CACHE_CAP, uses 1
+        assert_eq!(m.used(), 1);
+        assert!(m.below_low_watermark(9), "1 used + 9 incoming == low");
+        assert!(!m.below_low_watermark(10));
+        assert!(!m.above_high_watermark());
+    }
+
+    #[test]
+    fn contention_counters_observe_try_lock_failures() {
+        use std::sync::atomic::AtomicBool;
+        let m = BlockManager::new(64);
+        let stop = Arc::new(AtomicBool::new(false));
+        let m2 = m.clone();
+        let stop2 = Arc::clone(&stop);
+        let t = std::thread::spawn(move || {
+            let s = m2.register();
+            while !stop2.load(Relaxed) {
+                let p = m2.alloc(s).unwrap();
+                m2.release(s, p);
+            }
+            m2.unregister(s);
+        });
+        let s = m.register();
+        for _ in 0..20_000 {
+            let p = m.alloc(s).unwrap();
+            m.release(s, p);
+        }
+        stop.store(true, Relaxed);
+        t.join().unwrap();
+        let st = m.stats();
+        assert!(st.lock_acquisitions > 0);
+        assert!(
+            st.contended_acquisitions <= st.lock_acquisitions,
+            "contended is a subset of total"
+        );
     }
 }

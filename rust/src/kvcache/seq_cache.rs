@@ -430,34 +430,36 @@ impl SeqCache {
 
     /// Bulk-load a prefilled, already-evicted prompt: `tokens[i]` is
     /// (original_position, [3]scores), laid out contiguously in logical
-    /// order (matching the runtime's host-side pack). Fails without side
-    /// effects visible to other tenants when the bucket or the shared
-    /// arena cannot hold the prompt — blocks already claimed stay owned by
-    /// this sequence (the caller drops the cache, which returns them).
+    /// order (matching the runtime's host-side pack). Every prompt block
+    /// is claimed in ONE [`BlockManager::alloc_many`] call — a single
+    /// global-lock acquisition regardless of prompt length (pinned by the
+    /// lock-count test). Fails without side effects — all-or-nothing: a
+    /// `BucketFull`/`ArenaDry` prompt claims no blocks at all.
     pub fn try_load_prefill(
         &mut self,
         tokens: &[(u32, [f32; 3])],
         total_prompt_len: u32,
     ) -> Result<(), BlockAlloc> {
         assert!(self.blocks.is_empty(), "load_prefill on non-empty cache");
-        for (pos, sc) in tokens {
-            if self.last_block_full() {
-                if self.local_free.is_empty() {
-                    return Err(BlockAlloc::BucketFull);
-                }
-                let arena_slot = match self.mgr.alloc(self.seq) {
-                    Some(p) => p,
-                    None => return Err(BlockAlloc::ArenaDry),
-                };
-                let local = self.local_free.pop().expect("bucket accounting broken");
-                self.push_new_block(local, arena_slot);
-                self.stats.blocks_allocated += 1;
-            }
-            let li = self.blocks.len() - 1;
-            let off = self.blocks.last_mut().unwrap().push(*pos, *sc);
-            self.mask[li * self.block_size + off] = 1.0;
+        let bs = self.block_size;
+        let need = (tokens.len() + bs - 1) / bs;
+        if need > self.local_free.len() {
+            return Err(BlockAlloc::BucketFull);
         }
-        self.mask_dirty.mark(0, self.blocks.len() * self.block_size);
+        let Some(slots) = self.mgr.alloc_many(self.seq, need) else {
+            return Err(BlockAlloc::ArenaDry);
+        };
+        for (i, chunk) in tokens.chunks(bs).enumerate() {
+            let local = self.local_free.pop().expect("bucket accounting broken");
+            self.push_new_block(local, slots[i]);
+            self.stats.blocks_allocated += 1;
+            let blk = self.blocks.last_mut().unwrap();
+            for (pos, sc) in chunk {
+                let off = blk.push(*pos, *sc);
+                self.mask[i * bs + off] = 1.0;
+            }
+        }
+        self.mask_dirty.mark(0, self.blocks.len() * bs);
         self.stats.tokens_written += tokens.len() as u64;
         self.stats.table_updates += 1;
         self.next_position = total_prompt_len;
@@ -496,56 +498,54 @@ impl SeqCache {
         let bs = self.block_size;
         let hashes = prefix_block_hashes(bs, tokens, keys);
 
-        // -- map every leading published block by reference --
-        let mut hits = 0usize;
-        while hits < hashes.len() {
-            if self.local_free.is_empty() {
-                return Err(BlockAlloc::BucketFull);
-            }
-            let Some(arena_slot) = self.mgr.acquire_shared(self.seq, hashes[hits]) else {
-                break;
-            };
+        // -- map every leading published block by reference (one lock) --
+        let shared = self.mgr.acquire_shared_run(self.seq, &hashes);
+        let hits = shared.len();
+        // bucket check up front: the hit blocks plus the uncached tail
+        let tail_need = (tokens.len() - hits * bs + bs - 1) / bs;
+        if hits + tail_need > self.local_free.len() {
+            return Err(BlockAlloc::BucketFull);
+        }
+        for (i, &arena_slot) in shared.iter().enumerate() {
             let local = self.local_free.pop().expect("bucket accounting broken");
             self.push_new_block(local, arena_slot);
-            let li = self.blocks.len() - 1;
             let blk = self.blocks.last_mut().unwrap();
             blk.prefix_tracked = true;
-            for (pos, sc) in &tokens[li * bs..(li + 1) * bs] {
+            for (pos, sc) in &tokens[i * bs..(i + 1) * bs] {
                 let off = blk.push(*pos, *sc);
                 debug_assert_eq!(off + 1, blk.fill);
             }
-            self.mask[li * bs..(li + 1) * bs].fill(1.0);
-            hits += 1;
+            self.mask[i * bs..(i + 1) * bs].fill(1.0);
         }
         self.stats.prefix_hit_blocks += hits as u64;
 
-        // -- materialize the uncached tail exactly like the uncached path --
-        for (pos, sc) in &tokens[hits * bs..] {
-            if self.last_block_full() {
-                if self.local_free.is_empty() {
-                    return Err(BlockAlloc::BucketFull);
-                }
-                let arena_slot = match self.mgr.alloc(self.seq) {
-                    Some(p) => p,
-                    None => return Err(BlockAlloc::ArenaDry),
-                };
-                let local = self.local_free.pop().expect("bucket accounting broken");
-                self.push_new_block(local, arena_slot);
-                self.stats.blocks_allocated += 1;
+        // -- materialize the uncached tail exactly like the uncached path,
+        //    claiming every tail block under one lock --
+        let Some(slots) = self.mgr.alloc_many(self.seq, tail_need) else {
+            return Err(BlockAlloc::ArenaDry); // hit claims stay owned; drop releases
+        };
+        for (j, chunk) in tokens[hits * bs..].chunks(bs).enumerate() {
+            let local = self.local_free.pop().expect("bucket accounting broken");
+            self.push_new_block(local, slots[j]);
+            self.stats.blocks_allocated += 1;
+            let blk = self.blocks.last_mut().unwrap();
+            for (pos, sc) in chunk {
+                let off = blk.push(*pos, *sc);
+                self.mask[(hits + j) * bs + off] = 1.0;
             }
-            let li = self.blocks.len() - 1;
-            let off = self.blocks.last_mut().unwrap().push(*pos, *sc);
-            self.mask[li * bs + off] = 1.0;
         }
         self.mask_dirty.mark(0, self.blocks.len() * bs);
         self.stats.tokens_written += tokens.len() as u64;
         self.stats.table_updates += 1;
         self.next_position = total_prompt_len;
 
-        // -- publish the freshly materialized full blocks --
-        for b in hits..hashes.len() {
-            if self.mgr.publish(self.seq, self.blocks[b].arena_slot, hashes[b]) {
-                self.blocks[b].prefix_tracked = true;
+        // -- publish the freshly materialized full blocks (one lock) --
+        let fresh: Vec<(usize, u64)> = (hits..hashes.len())
+            .map(|b| (self.blocks[b].arena_slot, hashes[b]))
+            .collect();
+        for (k, ok) in self.mgr.publish_many(self.seq, &fresh).into_iter().enumerate() {
+            if ok {
+                self.blocks[hits + k].prefix_tracked = true;
             }
         }
         Ok(hits)
@@ -868,22 +868,20 @@ impl SeqCache {
     pub fn restore_from(snap: &KvSnapshot, arena: &BlockManager) -> Result<SeqCache, BlockAlloc> {
         let seq = arena.register();
         let mut blocks = snap.blocks.clone();
-        for blk in blocks.iter_mut() {
-            // A snapshot restores onto PRIVATE copies: blocks the suspended
-            // sequence mapped from the prefix index come back as fresh
-            // unpublished pages (the published originals live on with, and
-            // are freed by, their surviving holders). Pinned by the swap
-            // bit-identity tests — sharing is arena accounting only, so
-            // the restored serialization cannot tell the difference.
+        // A snapshot restores onto PRIVATE copies: blocks the suspended
+        // sequence mapped from the prefix index come back as fresh
+        // unpublished pages (the published originals live on with, and
+        // are freed by, their surviving holders). Pinned by the swap
+        // bit-identity tests — sharing is arena accounting only, so
+        // the restored serialization cannot tell the difference. All
+        // pages are claimed under one lock; failure claims nothing.
+        let Some(pages) = arena.alloc_many(seq, blocks.len()) else {
+            arena.unregister(seq);
+            return Err(BlockAlloc::ArenaDry);
+        };
+        for (blk, page) in blocks.iter_mut().zip(pages) {
             blk.prefix_tracked = false;
-            match arena.alloc(seq) {
-                Some(page) => blk.arena_slot = page,
-                None => {
-                    // unregister releases every page claimed so far
-                    arena.unregister(seq);
-                    return Err(BlockAlloc::ArenaDry);
-                }
-            }
+            blk.arena_slot = page;
         }
         Ok(SeqCache {
             block_size: snap.block_size,
@@ -1007,9 +1005,8 @@ impl SeqCache {
 /// O(arena-capacity) holder-scan fallback on the hot retire/preempt path.
 impl Drop for SeqCache {
     fn drop(&mut self) {
-        for blk in self.blocks.drain(..) {
-            self.mgr.release(self.seq, blk.arena_slot);
-        }
+        let slots: Vec<usize> = self.blocks.drain(..).map(|b| b.arena_slot).collect();
+        self.mgr.release_many(self.seq, &slots);
         self.mgr.unregister(self.seq);
     }
 }

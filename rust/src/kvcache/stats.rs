@@ -56,6 +56,19 @@ pub struct CacheStats {
     /// each cancelled sequence's final cache counters, with this set to
     /// 1, into its `cancelled_stats` aggregate.
     pub cancelled: u64,
+    /// Server-lifetime global-arena-lock acquisitions, snapshotted when
+    /// this sequence retired (from `BlockManager::stats`, like
+    /// `peak_arena_blocks`). Whole-server counters, so merges take the
+    /// max (the latest snapshot), not the sum.
+    pub arena_lock_acquisitions: u64,
+    /// The subset of `arena_lock_acquisitions` that found the lock held
+    /// (`try_lock` failed first) — the cross-worker contention signal.
+    pub arena_contended_acquisitions: u64,
+    /// Worker slot-cache refills from the global free list (lease grants).
+    pub arena_cache_refills: u64,
+    /// Dry-arena drains of peer slot caches — each one is an allocation
+    /// that would have been a phantom OOM without the drain protocol.
+    pub arena_cache_drains: u64,
 }
 
 impl CacheStats {
@@ -76,6 +89,12 @@ impl CacheStats {
         self.prefix_hit_blocks += o.prefix_hit_blocks;
         self.cow_copies += o.cow_copies;
         self.cancelled += o.cancelled;
+        self.arena_lock_acquisitions =
+            self.arena_lock_acquisitions.max(o.arena_lock_acquisitions);
+        self.arena_contended_acquisitions =
+            self.arena_contended_acquisitions.max(o.arena_contended_acquisitions);
+        self.arena_cache_refills = self.arena_cache_refills.max(o.arena_cache_refills);
+        self.arena_cache_drains = self.arena_cache_drains.max(o.arena_cache_drains);
     }
 
     /// Cache-management operations per generated token — the paper's
@@ -112,6 +131,10 @@ mod tests {
             preemptions: 1,
             swaps: 1,
             cancelled: 1,
+            arena_lock_acquisitions: 40,
+            arena_contended_acquisitions: 3,
+            arena_cache_refills: 6,
+            arena_cache_drains: 1,
             ..Default::default()
         };
         let b = CacheStats {
@@ -122,6 +145,10 @@ mod tests {
             swaps: 1,
             retries: 5,
             cancelled: 2,
+            arena_lock_acquisitions: 55,
+            arena_contended_acquisitions: 2,
+            arena_cache_refills: 9,
+            arena_cache_drains: 0,
             ..Default::default()
         };
         a.merge(&b);
@@ -132,5 +159,9 @@ mod tests {
         assert_eq!(a.swaps, 2, "swap counts are additive");
         assert_eq!(a.retries, 5, "retry counts are additive");
         assert_eq!(a.cancelled, 3, "cancel counts are additive");
+        assert_eq!(a.arena_lock_acquisitions, 55, "server-wide snapshots merge as maxima");
+        assert_eq!(a.arena_contended_acquisitions, 3);
+        assert_eq!(a.arena_cache_refills, 9);
+        assert_eq!(a.arena_cache_drains, 1);
     }
 }

@@ -568,6 +568,14 @@ fn cmd_schedule() -> Result<()> {
         cow,
         output_digest(&outs),
     );
+    let arena = session.with_scheduler(|s| s.arena().stats());
+    println!(
+        "arena: lock acquisitions {} ({} contended), cache refills {}, cache drains {}",
+        arena.lock_acquisitions,
+        arena.contended_acquisitions,
+        arena.cache_refills,
+        arena.cache_drains,
+    );
     let (fault_retries, quarantined, injected) =
         session.with_scheduler(|s| (s.fault_retries, s.quarantined, s.backend().fault_counts()));
     println!(
@@ -704,6 +712,7 @@ fn schedule_multi(
     let cap = engine.arena().capacity();
     let steals = engine.steals();
     let cross = engine.cross_preempts();
+    let arena = engine.arena().stats();
     let (report, backends) = engine.shutdown(Duration::from_secs(10));
     outs.extend(report.leftover);
     outs.sort_by_key(|o| o.id);
@@ -746,6 +755,13 @@ fn schedule_multi(
         hit,
         cow,
         output_digest(&outs),
+    );
+    println!(
+        "arena: lock acquisitions {} ({} contended), cache refills {}, cache drains {}",
+        arena.lock_acquisitions,
+        arena.contended_acquisitions,
+        arena.cache_refills,
+        arena.cache_drains,
     );
     println!(
         "faults: {} injected (transient {}, terminal {}, batch {}, nosnap {}, \
@@ -817,6 +833,14 @@ struct SloRow {
     steals: u64,
     cross_preempts: u64,
     chunk_prefills: u64,
+    /// Global-arena-lock acquisitions over the whole replay (all workers).
+    lock_acquisitions: u64,
+    /// Acquisitions that found the lock held (try_lock failed first).
+    contended_acquisitions: u64,
+    /// Worker slot-cache leases from the global free list.
+    cache_refills: u64,
+    /// Dry-arena drains of peer slot caches (phantom-OOM preventions).
+    cache_drains: u64,
 }
 
 /// Replay named SLO scenarios through [`MultiEngine`] at one or more
@@ -836,7 +860,8 @@ fn cmd_slo() -> Result<()> {
     .opt(
         "scenario",
         "bursty-chat,longbench-replay",
-        "comma list of scenarios (bursty-chat|longbench-replay|diurnal-mixed|all)",
+        "comma list of scenarios \
+         (bursty-chat|longbench-replay|diurnal-mixed|saturate-steal|all)",
     )
     .opt("workers", "1,4", "comma list of worker counts to replay at")
     .opt("concurrency", "4", "max concurrent sequences per worker")
@@ -914,6 +939,14 @@ fn cmd_slo() -> Result<()> {
                 row.steals,
                 row.cross_preempts,
                 row.chunk_prefills,
+            );
+            println!(
+                "  arena: lock acquisitions {} ({} contended), cache refills {}, \
+                 cache drains {}",
+                row.lock_acquisitions,
+                row.contended_acquisitions,
+                row.cache_refills,
+                row.cache_drains,
             );
             println!("digest scenario={} workers={} {:016x}", row.scenario, row.workers, row.digest);
             digests.push((row.workers, row.digest));
@@ -1007,6 +1040,7 @@ fn run_slo_scenario(
     let elapsed_s = t0.elapsed().as_secs_f64().max(1e-9);
     let steals = engine.steals();
     let cross_preempts = engine.cross_preempts();
+    let arena = engine.arena().stats();
     let (report, _backends) = engine.shutdown(Duration::from_secs(10));
     outs.extend(report.leftover);
     outs.sort_by_key(|o| o.id);
@@ -1052,6 +1086,10 @@ fn run_slo_scenario(
         steals,
         cross_preempts,
         chunk_prefills: report.workers.iter().map(|w| w.chunk_prefills).sum(),
+        lock_acquisitions: arena.lock_acquisitions,
+        contended_acquisitions: arena.contended_acquisitions,
+        cache_refills: arena.cache_refills,
+        cache_drains: arena.cache_drains,
     })
 }
 
@@ -1079,6 +1117,8 @@ fn render_slo_json(seed: u64, rows: &[SloRow]) -> String {
              \"decoded_tokens\": {}, \"preemptions\": {}, \"swap_outs\": {}, \
              \"swap_restores\": {}, \"cow_copies\": {}, \"prefix_hit_blocks\": {}, \
              \"steals\": {}, \"cross_preempts\": {}, \"chunk_prefills\": {}, \
+             \"lock_acquisitions\": {}, \"contended_acquisitions\": {}, \
+             \"cache_refills\": {}, \"cache_drains\": {}, \
              \"preempt_per_s\": {}, \"swap_per_s\": {}, \"cow_per_s\": {}, \
              \"steal_per_s\": {}, \"cross_preempt_per_s\": {}}}{}\n",
             r.scenario,
@@ -1102,6 +1142,10 @@ fn render_slo_json(seed: u64, rows: &[SloRow]) -> String {
             r.steals,
             r.cross_preempts,
             r.chunk_prefills,
+            r.lock_acquisitions,
+            r.contended_acquisitions,
+            r.cache_refills,
+            r.cache_drains,
             f(r.preemptions as f64 / r.elapsed_s),
             f(r.swap_outs as f64 / r.elapsed_s),
             f(r.cow_copies as f64 / r.elapsed_s),

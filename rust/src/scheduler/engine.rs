@@ -243,6 +243,9 @@ impl<B: DecodeBackend> Worker<B> {
             if self.sched.is_idle() {
                 self.publish();
                 self.flush_events();
+                // an idle worker's leased slot stock is pure inventory:
+                // hand it back so busy peers get it without a drain sweep
+                self.sched.flush_slot_cache();
                 if self.shared.pressure.load(Ordering::Relaxed) > 0 {
                     // nothing running here, but help clear a stale flag
                     // (all victim keys None => nothing to reclaim)

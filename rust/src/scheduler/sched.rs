@@ -420,6 +420,12 @@ impl<B: DecodeBackend> Scheduler<B> {
         admit_counter: Arc<AtomicU64>,
     ) -> Self {
         backend.set_prefix_cache(cfg.prefix_cache);
+        // Bind this worker's slot cache: every SeqCache created through
+        // this handle allocs/frees against a small leased stock, so the
+        // decode steady state never touches the global arena lock. Leased
+        // slots still count as free globally; a dry peer drains them back
+        // (see block_manager's lease/drain protocol).
+        let arena = arena.with_worker_cache();
         Scheduler {
             cfg,
             backend,
@@ -454,6 +460,14 @@ impl<B: DecodeBackend> Scheduler<B> {
     /// The shared physical block arena (O(1) global accounting).
     pub fn arena(&self) -> &BlockManager {
         &self.arena
+    }
+
+    /// Return this worker's leased slot stock to the global free list.
+    /// The multi-worker engine calls this when the worker goes idle: an
+    /// idle worker's lease is pure inventory peers would otherwise have
+    /// to reclaim through a dry-arena drain. Returns the slots flushed.
+    pub fn flush_slot_cache(&self) -> usize {
+        self.arena.flush_local_cache()
     }
 
     /// The decode backend (read-only; for stats/introspection).
@@ -1577,7 +1591,12 @@ impl<B: DecodeBackend> Scheduler<B> {
         cache_stats.preemptions = f.preemptions as u64;
         cache_stats.swaps = f.swaps as u64;
         cache_stats.retries = f.retries as u64;
-        cache_stats.peak_arena_blocks = self.arena.stats().peak_used as u64;
+        let arena_stats = self.arena.stats();
+        cache_stats.peak_arena_blocks = arena_stats.peak_used as u64;
+        cache_stats.arena_lock_acquisitions = arena_stats.lock_acquisitions;
+        cache_stats.arena_contended_acquisitions = arena_stats.contended_acquisitions;
+        cache_stats.arena_cache_refills = arena_stats.cache_refills;
+        cache_stats.arena_cache_drains = arena_stats.cache_drains;
         // nothing should be parked for a running sequence; be thorough so
         // an error retirement can never strand host swap bytes
         self.swap.discard(f.req.id);

@@ -43,6 +43,14 @@ pub enum RequestShape {
     /// the prefix — at least 8 full 16-token blocks, so chunked prefill
     /// genuinely spans rounds), short decodes (8..=24 new tokens).
     LongContext,
+    /// Arena-pressure mix: every 7th request (indices 0, 7, 14, …) is a
+    /// "marathon" (64-token prompt, 256 new tokens — it keeps growing
+    /// until it owns most of a small arena) and the rest are "sprints"
+    /// (64-token prompt, 2..=4 new tokens) that arrive behind it. Sized
+    /// so a deliberately undersized arena forces cross-worker preempts
+    /// while the sprint backlog forces steals — the `saturate-steal`
+    /// decontention scenario.
+    SprintMarathon,
 }
 
 impl RequestShape {
@@ -50,6 +58,7 @@ impl RequestShape {
         match self {
             RequestShape::Chat => "chat",
             RequestShape::LongContext => "long-context",
+            RequestShape::SprintMarathon => "sprint-marathon",
         }
     }
 }
@@ -85,7 +94,7 @@ pub struct SynthRequest {
 impl Scenario {
     /// Names of the built-in scenarios, in canonical order.
     pub fn builtin_names() -> &'static [&'static str] {
-        &["bursty-chat", "longbench-replay", "diurnal-mixed"]
+        &["bursty-chat", "longbench-replay", "diurnal-mixed", "saturate-steal"]
     }
 
     /// Look up a built-in scenario by name.
@@ -133,6 +142,26 @@ impl Scenario {
                 slo: SloSpec { ttft_ms: 2_500.0, tpot_ms: 150.0 },
                 prefill_chunk: 0,
             }),
+            // Everything arrives at once into an arena sized well below
+            // the marathons' combined footprint: at `--page-size 8
+            // --arena-blocks 56` each marathon grows to ~40 blocks, so
+            // 4 of them force ArenaDry → cross-worker preemption, while
+            // the sprint backlog keeps idle workers stealing. At
+            // `--workers 1` the marathons simply run back to back (one
+            // fits alone), so the steal/cross-preempt floors in
+            // `bench_gate.py` apply only to multi-worker rows. The SLO
+            // ceilings are deliberately huge: this scenario measures
+            // contention-counter plumbing, not latency.
+            "saturate-steal" => Some(Scenario {
+                name: "saturate-steal",
+                tenants: 4,
+                requests: 28,
+                arrivals: ArrivalProcess::Poisson { rate: 120.0 },
+                shape: RequestShape::SprintMarathon,
+                shared_prefix_len: 0,
+                slo: SloSpec { ttft_ms: 120_000.0, tpot_ms: 1_000.0 },
+                prefill_chunk: 0,
+            }),
             _ => None,
         }
     }
@@ -152,7 +181,8 @@ impl Scenario {
             .collect();
         times
             .into_iter()
-            .map(|at_s| {
+            .enumerate()
+            .map(|(i, at_s)| {
                 let tenant = rng.usize_below(self.tenants);
                 let (tail_len, gen) = match self.shape {
                     // 32..=94 even tail, 48..=96 decode
@@ -162,6 +192,11 @@ impl Scenario {
                     // 256..=512 even tail, 8..=24 decode
                     RequestShape::LongContext => {
                         (256 + 2 * rng.below(129) as usize, 8 + rng.below(17) as usize)
+                    }
+                    // fixed 64-token prompts; every 7th request decodes
+                    // 256 tokens (marathon), the rest 2..=4 (sprint)
+                    RequestShape::SprintMarathon => {
+                        (64, if i % 7 == 0 { 256 } else { 2 + rng.below(3) as usize })
                     }
                 };
                 let mut prompt = prefixes[tenant].clone();
@@ -225,5 +260,25 @@ mod tests {
             assert!(r.prompt.len() - long.shared_prefix_len >= 256);
             assert!((8..=24).contains(&r.max_new_tokens));
         }
+    }
+
+    #[test]
+    fn saturate_steal_mixes_marathons_and_sprints() {
+        let s = Scenario::builtin("saturate-steal").unwrap();
+        let reqs = s.synthesize(7);
+        assert_eq!(reqs.len(), 28);
+        let mut marathons = 0usize;
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.prompt.len(), 64, "fixed prompts keep the capacity math exact");
+            if i % 7 == 0 {
+                assert_eq!(r.max_new_tokens, 256, "req {i} must be a marathon");
+                marathons += 1;
+            } else {
+                assert!((2..=4).contains(&r.max_new_tokens), "req {i} must be a sprint");
+            }
+        }
+        // 4 marathons × (64+256)/8 = 160 blocks at page 8 — far past the
+        // 56-block arena the CI leg runs with, so pressure is guaranteed
+        assert_eq!(marathons, 4);
     }
 }

@@ -292,6 +292,203 @@ fn cow_never_aliases_a_writer() {
     publisher.check_invariants().unwrap();
 }
 
+/// Tentpole (PR 9): the batched arena APIs (`alloc_many`,
+/// `release_many`, `acquire_shared_run`, `publish_many`) must be
+/// OBSERVATIONALLY IDENTICAL to the per-block loops they replaced —
+/// same slots in the same order, same failure semantics, same
+/// accounting, same watermark verdicts. Twin arenas fed the same random
+/// traffic, one through each convention, must never diverge.
+#[test]
+fn property_batch_ops_mirror_per_block_loops() {
+    propcheck::quick("arena-batch-mirror", |rng: &mut Pcg32| {
+        let capacity = 6 + rng.usize_below(20);
+        let a = BlockManager::new(capacity); // batched calls
+        let b = BlockManager::new(capacity); // per-block loops
+        a.set_watermarks(0.5, 0.8);
+        b.set_watermarks(0.5, 0.8);
+        let n = 2 + rng.usize_below(3);
+        let ida: Vec<_> = (0..n).map(|_| a.register()).collect();
+        let idb: Vec<_> = (0..n).map(|_| b.register()).collect();
+        // slot numbering is identical on both sides by construction, so
+        // one holds table mirrors both arenas
+        let mut holds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut chains: Vec<Vec<u64>> = Vec::new();
+        let mut next_hash: u64 = 1;
+        for _ in 0..120 {
+            let t = rng.usize_below(n);
+            match rng.below(3) {
+                // batch alloc vs k sequential allocs, sometimes published
+                0 => {
+                    let k = 1 + rng.usize_below(4);
+                    match a.alloc_many(ida[t], k) {
+                        Some(va) => {
+                            let vb: Vec<usize> = (0..k)
+                                .map(|_| b.alloc(idb[t]).expect("mirror: batch side succeeded"))
+                                .collect();
+                            if va != vb {
+                                return Err(format!("alloc order diverged: {va:?} vs {vb:?}"));
+                            }
+                            if rng.below(2) == 0 {
+                                let hashes: Vec<u64> =
+                                    (0..k as u64).map(|i| next_hash + i).collect();
+                                next_hash += k as u64;
+                                let entries: Vec<(usize, u64)> =
+                                    va.iter().copied().zip(hashes.iter().copied()).collect();
+                                let ra = a.publish_many(ida[t], &entries);
+                                let rb: Vec<bool> = entries
+                                    .iter()
+                                    .map(|&(p, h)| b.publish(idb[t], p, h))
+                                    .collect();
+                                if ra != rb {
+                                    return Err(format!("publish diverged: {ra:?} vs {rb:?}"));
+                                }
+                                if ra.iter().all(|&ok| ok) {
+                                    chains.push(hashes);
+                                }
+                            }
+                            holds[t].extend(va);
+                        }
+                        None => {
+                            if a.free_count() >= k {
+                                return Err(format!(
+                                    "alloc_many({k}) failed with {} free",
+                                    a.free_count()
+                                ));
+                            }
+                            if b.used() != a.used() {
+                                return Err("failed batch alloc mutated state".into());
+                            }
+                        }
+                    }
+                }
+                // batch release vs per-slot releases, same order
+                1 => {
+                    if holds[t].is_empty() {
+                        continue;
+                    }
+                    let keep = rng.usize_below(holds[t].len());
+                    let gone: Vec<usize> = holds[t].split_off(keep);
+                    a.release_many(ida[t], &gone);
+                    for &p in &gone {
+                        b.release(idb[t], p);
+                    }
+                }
+                // chain walk vs per-hash acquire loop (stale chains —
+                // slots since freed and recycled — must miss identically)
+                _ => {
+                    if chains.is_empty() {
+                        continue;
+                    }
+                    let hashes = chains[rng.usize_below(chains.len())].clone();
+                    let ra = a.acquire_shared_run(ida[t], &hashes);
+                    let mut rb = Vec::new();
+                    for &h in &hashes {
+                        match b.acquire_shared(idb[t], h) {
+                            Some(p) => rb.push(p),
+                            None => break,
+                        }
+                    }
+                    if ra != rb {
+                        return Err(format!("shared-run walk diverged: {ra:?} vs {rb:?}"));
+                    }
+                    holds[t].extend(ra);
+                }
+            }
+            if a.used() != b.used() || a.free_count() != b.free_count() {
+                return Err(format!(
+                    "accounting diverged: used {}/{}, free {}/{}",
+                    a.used(),
+                    b.used(),
+                    a.free_count(),
+                    b.free_count()
+                ));
+            }
+            if a.below_low_watermark(1) != b.below_low_watermark(1)
+                || a.above_high_watermark() != b.above_high_watermark()
+            {
+                return Err("watermark verdicts diverged".into());
+            }
+            for p in 0..capacity {
+                if a.refcount(p) != b.refcount(p) {
+                    return Err(format!(
+                        "refcount({p}) diverged: {} vs {}",
+                        a.refcount(p),
+                        b.refcount(p)
+                    ));
+                }
+            }
+            for (t2, hs) in holds.iter().enumerate() {
+                if a.owned_by(ida[t2]) != hs.len() || b.owned_by(idb[t2]) != hs.len() {
+                    return Err("per-tenant claims diverged from the mirror".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Tentpole pin (PR 9): one SEQUENCE operation costs O(1) global lock
+/// acquisitions, not O(blocks). A K-block prompt prefill and the drop of
+/// a K-block sequence must each take <= 2 acquisitions — measured via
+/// `stats()`, which is pure atomics and cannot perturb the count it
+/// reads. This is the test that fails if anyone reintroduces a
+/// lock-per-block loop in the seq_cache hot paths.
+#[test]
+fn seq_ops_take_constant_lock_acquisitions() {
+    let arena = BlockManager::new(64);
+    // 32 tokens at bs=4 -> 8 blocks: enough that an O(K) regression is
+    // unambiguous against the <= 2 bound
+    let tokens: Vec<(u32, [f32; 3])> = (0..32u32).map(|i| (i, [0.5; 3])).collect();
+    let mut c = SeqCache::new_shared(4, 16, &arena);
+    let before = arena.stats().lock_acquisitions;
+    c.try_load_prefill(&tokens, 32).expect("64-block arena fits 8");
+    let prefill_locks = arena.stats().lock_acquisitions - before;
+    assert!(
+        prefill_locks <= 2,
+        "8-block prefill took {prefill_locks} global lock acquisitions (want <= 2)"
+    );
+    let before = arena.stats().lock_acquisitions;
+    drop(c);
+    let drop_locks = arena.stats().lock_acquisitions - before;
+    assert!(
+        drop_locks <= 2,
+        "8-block drop took {drop_locks} global lock acquisitions (want <= 2)"
+    );
+    assert_eq!(arena.used(), 0, "drop returned every block");
+}
+
+/// Drain protocol end to end through `SeqCache`: when every free slot
+/// sits leased in a peer worker's cache, a prefill must drain the peers
+/// and succeed — NOT report a phantom ArenaDry — and leased slots must
+/// read as free the whole time.
+#[test]
+fn prefill_drains_peer_slot_caches_instead_of_phantom_oom() {
+    let arena = BlockManager::new(8);
+    // the peer's first alloc leases the entire 8-slot arena into its
+    // private stock (SLOT_CACHE_CAP = 8)
+    let worker = arena.with_worker_cache();
+    let wseq = worker.register();
+    let held = worker.alloc(wseq).expect("first alloc leases the cache");
+    assert_eq!(arena.used(), 1);
+    assert_eq!(arena.free_count(), 7, "leased slots still count as free");
+    assert_eq!(arena.stats().leased, 7);
+
+    // 8 tokens at bs=2 -> 4 blocks, all only reachable via the drain
+    let toks: Vec<(u32, [f32; 3])> = (0..8u32).map(|i| (i, [0.5; 3])).collect();
+    let mut c = SeqCache::new_shared(2, 16, &arena);
+    c.try_load_prefill(&toks, 8).expect("drain must satisfy the prefill");
+    assert_eq!(c.n_blocks(), 4);
+    assert_eq!(arena.stats().cache_drains, 1, "exactly one peer-cache drain");
+    assert_eq!(arena.used(), 5);
+
+    drop(c);
+    worker.release(wseq, held);
+    worker.unregister(wseq);
+    drop(worker);
+    assert_eq!(arena.used(), 0);
+    assert_eq!(arena.free_count(), arena.capacity(), "nothing leaked through the drain");
+}
+
 #[test]
 fn arena_capacity_is_a_hard_bound() {
     let arena = BlockManager::new(5);

@@ -29,8 +29,11 @@ micro_hotpath`` (a flat ``{op name: microseconds/op}`` object) and FAILS
 With ``--slo`` the gate instead reads the ``BENCH_slo.json`` emitted by
 ``paged-eviction slo`` (schema ``slo-v1``) and FAILS when any gated
 scenario is missing, reports fewer completions than requests, exceeds its
-p99 TTFT/TPOT ceiling, misses its goodput/attainment floor, or shows
-different output digests at different ``--workers`` counts (the
+p99 TTFT/TPOT ceiling, misses its goodput/attainment floor, drops the
+arena contention counters (``lock_acquisitions`` etc.), misses a
+multi-worker contention-activity floor (``min_steals`` /
+``min_cross_preempts`` / ``min_preemptions`` — waived on 1-worker rows),
+or shows different output digests at different ``--workers`` counts (the
 determinism contract the whole harness rides on). Ceilings/floors are
 generous — sized for noisy shared CI runners — so a failure means a real
 tail-latency or scheduling regression, not jitter.
@@ -88,6 +91,15 @@ CEILINGS_US = {
     # the shared swap pool and restores it a round later — a per-PRESSURE
     # cost, not per-token, hence the slack.
     "cross_worker_preempt (preempt_min + restore round)": 5000.0,
+    # batched arena primitives: one global lock acquisition moves 16
+    # blocks either direction — per-BATCH costs, so even these generous
+    # ceilings catch a slide back to lock-per-block.
+    "alloc_batch_16 (alloc_many, one lock)": 50.0,
+    "release_batch_16 (release_many, one lock)": 50.0,
+    # 4 threads recycling blocks through per-worker slot caches; steady
+    # state the global lock stays cold, so the per-pair cost must stay
+    # near the uncontended single-alloc cost.
+    "arena_contended_alloc (4 threads, cached)": 100.0,
     # aggregate sim decode through the engine; loose per-token bounds so
     # an accidental serialization (one giant lock) still trips them.
     ENGINE_1W: 2000.0,
@@ -183,6 +195,23 @@ SLO_SCENARIOS = {
         "min_goodput_tok_s": 5.0,
         "min_attainment": 0.5,
     },
+    # Arena-pressure scenario (PR 9): 4 marathon requests outgrow a
+    # deliberately undersized arena while a sprint backlog begs to be
+    # stolen. The latency/goodput bounds are huge on purpose — the real
+    # teeth are the min_* RATE FLOORS, which assert the multi-worker run
+    # actually stole work and cross-preempted (i.e. the contention the
+    # scenario is built to create really happened). Rate floors apply
+    # ONLY to rows with workers > 1: at 1 worker the marathons run back
+    # to back and nothing needs stealing.
+    "saturate-steal": {
+        "max_ttft_p99_ms": 60000.0,
+        "max_tpot_p99_ms": 2000.0,
+        "min_goodput_tok_s": 5.0,
+        "min_attainment": 0.5,
+        "min_steals": 1.0,
+        "min_cross_preempts": 1.0,
+        "min_preemptions": 1.0,
+    },
 }
 
 
@@ -267,6 +296,44 @@ def check_slo(data, gates=None):
                     failures.append(
                         f"attainment regression: {label}: {attainment:.2f} is below "
                         f"the {g['min_attainment']:.2f} floor"
+                    )
+            # arena contention counters (PR 9) are REQUIRED fields on
+            # every gated row — a renamed counter must not silently
+            # vanish from the perf trajectory.
+            la = num(label, row, "lock_acquisitions")
+            ca = num(label, row, "contended_acquisitions")
+            cr = num(label, row, "cache_refills")
+            cd = num(label, row, "cache_drains")
+            if None not in (la, ca, cr, cd):
+                report.append(
+                    f"{label}: arena locks {la:.0f} ({ca:.0f} contended), "
+                    f"refills {cr:.0f}, drains {cd:.0f}"
+                )
+            # contention-activity floors: only meaningful where peers
+            # exist to steal from / preempt across, so single-worker
+            # rows are exempt by construction.
+            workers_n = w if isinstance(w, (int, float)) and not isinstance(w, bool) else None
+            for floor_key, field in (
+                ("min_steals", "steals"),
+                ("min_cross_preempts", "cross_preempts"),
+                ("min_preemptions", "preemptions"),
+            ):
+                floor = g.get(floor_key)
+                if floor is None:
+                    continue
+                v = num(label, row, field)
+                if v is None:
+                    continue
+                if workers_n is not None and workers_n > 1:
+                    report.append(f"{label}: {field} {v:.0f} (>= {floor:.0f})")
+                    if v < floor:
+                        failures.append(
+                            f"contention floor: {label}: {field} {v:.0f} is below "
+                            f"the {floor:.0f} floor expected of a multi-worker run"
+                        )
+                else:
+                    report.append(
+                        f"{label}: {field} {v:.0f} (floor waived at {w} worker(s))"
                     )
         if len({d for _, d in digests}) > 1:
             failures.append(

@@ -39,6 +39,9 @@ def healthy_rows():
         "fault_passthrough decode step (no plan)": 30.0,
         "worker_handoff (steal_tail + inject)": 0.5,
         "cross_worker_preempt (preempt_min + restore round)": 80.0,
+        "alloc_batch_16 (alloc_many, one lock)": 1.5,
+        "release_batch_16 (release_many, one lock)": 1.2,
+        "arena_contended_alloc (4 threads, cached)": 2.0,
         bench_gate.ENGINE_1W: 12.0,
         bench_gate.ENGINE_4W: 4.0,  # 3.0x scaling
         bench_gate.CORES: 8,
@@ -129,6 +132,26 @@ class CheckTests(unittest.TestCase):
             any("cross_worker_preempt" in f and "absolute" in f for f in failures)
         )
 
+    def test_arena_batch_rows_ceiling_and_presence_are_gated(self):
+        for row in (
+            "alloc_batch_16 (alloc_many, one lock)",
+            "release_batch_16 (release_many, one lock)",
+            "arena_contended_alloc (4 threads, cached)",
+        ):
+            rows = healthy_rows()
+            rows[row] = 99999.0
+            failures, _ = self.run_check(rows)
+            self.assertEqual(len(failures), 1, f"doctoring {row!r} must fail exactly once")
+            self.assertIn("absolute regression", failures[0])
+            self.assertIn(row, failures[0])
+            rows = healthy_rows()
+            del rows[row]
+            failures, _ = self.run_check(rows)
+            self.assertTrue(
+                any("missing bench row" in f and row in f for f in failures),
+                f"deleting {row!r} must fail the gate",
+            )
+
     def test_engine_scaling_below_bar_fails(self):
         rows = healthy_rows()
         rows[bench_gate.ENGINE_4W] = rows[bench_gate.ENGINE_1W] / 2.0  # 2.0x < 2.5x
@@ -173,8 +196,8 @@ class CheckTests(unittest.TestCase):
         self.assertTrue(any("non-numeric" in f for f in failures))
 
 
-def healthy_slo_row(scenario, workers, digest="00aa11bb22cc33dd"):
-    return {
+def healthy_slo_row(scenario, workers, digest="00aa11bb22cc33dd", **over):
+    row = {
         "scenario": scenario,
         "workers": workers,
         "requests": 48,
@@ -187,7 +210,16 @@ def healthy_slo_row(scenario, workers, digest="00aa11bb22cc33dd"):
         "tpot_p99_ms": 2.5,
         "slo_attainment": 1.0,
         "goodput_tok_s": 2500.0,
+        "preemptions": 2,
+        "steals": 3,
+        "cross_preempts": 2,
+        "lock_acquisitions": 400,
+        "contended_acquisitions": 12,
+        "cache_refills": 40,
+        "cache_drains": 1,
     }
+    row.update(over)
+    return row
 
 
 def healthy_slo():
@@ -199,6 +231,19 @@ def healthy_slo():
             healthy_slo_row("bursty-chat", 4, "aa"),
             healthy_slo_row("longbench-replay", 1, "bb"),
             healthy_slo_row("longbench-replay", 4, "bb"),
+            # at 1 worker saturate-steal runs its marathons back to back:
+            # zero contention activity is the HEALTHY single-worker shape
+            healthy_slo_row(
+                "saturate-steal",
+                1,
+                "cc",
+                requests=28,
+                completed=28,
+                steals=0,
+                cross_preempts=0,
+                preemptions=0,
+            ),
+            healthy_slo_row("saturate-steal", 4, "cc", requests=28, completed=28),
         ],
     }
 
@@ -274,6 +319,51 @@ class SloCheckTests(unittest.TestCase):
         data["rows"][0]["ttft_p99_ms"] = "fast"
         failures, _ = bench_gate.check_slo(data)
         self.assertTrue(any("non-numeric field" in f for f in failures))
+
+    def test_missing_contention_counter_fails(self):
+        for field in (
+            "lock_acquisitions",
+            "contended_acquisitions",
+            "cache_refills",
+            "cache_drains",
+        ):
+            data = healthy_slo()
+            del data["rows"][0][field]
+            failures, _ = bench_gate.check_slo(data)
+            self.assertEqual(len(failures), 1, f"dropping {field!r} must fail exactly once")
+            self.assertIn("non-numeric field", failures[0])
+            self.assertIn(field, failures[0])
+
+    def saturate_row(self, data, workers):
+        return next(
+            r
+            for r in data["rows"]
+            if r["scenario"] == "saturate-steal" and r["workers"] == workers
+        )
+
+    def test_contention_floors_bite_multi_worker_rows(self):
+        for field in ("steals", "cross_preempts", "preemptions"):
+            data = healthy_slo()
+            self.saturate_row(data, 4)[field] = 0
+            failures, _ = bench_gate.check_slo(data)
+            self.assertEqual(len(failures), 1, f"zeroing {field!r} must fail exactly once")
+            self.assertIn("contention floor", failures[0])
+            self.assertIn(field, failures[0])
+
+    def test_contention_floors_waived_on_single_worker_rows(self):
+        # the healthy fixture's 1-worker saturate-steal row already has
+        # zero steals/cross-preempts/preemptions and must pass
+        failures, report = bench_gate.check_slo(healthy_slo())
+        self.assertEqual(failures, [])
+        self.assertTrue(any("floor waived" in line for line in report))
+
+    def test_missing_saturate_steal_scenario_fails(self):
+        data = healthy_slo()
+        data["rows"] = [r for r in data["rows"] if r["scenario"] != "saturate-steal"]
+        failures, _ = bench_gate.check_slo(data)
+        self.assertTrue(
+            any("missing slo scenario" in f and "saturate-steal" in f for f in failures)
+        )
 
     def test_malformed_payload_fails(self):
         failures, _ = bench_gate.check_slo([1, 2, 3])
