@@ -16,7 +16,7 @@
 mod common;
 
 use common::{bench_args, section};
-use paged_eviction::eviction::{make_policy, ALL_POLICIES};
+use paged_eviction::eviction::{make_policy, REGISTRY};
 use paged_eviction::sim::attention_sim::{simulate_mean, SimConfig};
 use paged_eviction::sim::datasets::DATASETS;
 use paged_eviction::util::args::ArgSpec;
@@ -48,15 +48,19 @@ fn main() {
 fn sim_track(episodes: usize, oracle: bool) {
     section("Fig 2 (SIM track): score vs budget, page 16");
     let budgets = [256usize, 512, 1024, 2048, 4096];
+    // the full registry — the attention-feedback policies (self_attn,
+    // self_attn_token, attention_gate) run on the simulator's TRUTH mass
+    // here, the same signal the h2o_oracle row idealizes
+    let sweep: Vec<&'static str> = REGISTRY.iter().map(|i| i.name).collect();
     for d in &DATASETS {
         // oracle = paged on the NOISELESS channel-0 signal (corr 1.0)
-        let n_rows = ALL_POLICIES.len() + usize::from(oracle);
+        let n_rows = sweep.len() + usize::from(oracle);
         let mut header = vec!["policy".to_string()];
         header.extend(budgets.iter().map(|b| format!("b={b}")));
         let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
         for pi in 0..n_rows {
-            let (name, pol, corr) = if pi < ALL_POLICIES.len() {
-                (ALL_POLICIES[pi], ALL_POLICIES[pi], None)
+            let (name, pol, corr) = if pi < sweep.len() {
+                (sweep[pi], sweep[pi], None)
             } else {
                 ("h2o_oracle*", "paged", Some([1.0, 0.45, 0.30]))
             };
@@ -119,7 +123,7 @@ fn real_track(prompts: usize) {
         let mut header = vec!["policy".to_string()];
         header.extend(budgets.iter().map(|b| format!("b={b}")));
         let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
-        for pol in ALL_POLICIES {
+        for pol in REGISTRY.iter().map(|i| i.name) {
             let mut row = vec![pol.to_string()];
             for &budget in &budgets {
                 let mut acc = 0.0;

@@ -22,7 +22,7 @@ use std::time::Instant;
 
 use common::{bench_args, section};
 use paged_eviction::api::RequestBuilder;
-use paged_eviction::eviction::{make_policy, Decision};
+use paged_eviction::eviction::{make_policy, AttnFeedback, Decision};
 use paged_eviction::kvcache::{prefix_block_hashes, BlockManager, SeqCache};
 use paged_eviction::runtime::model_runner::argmax;
 use paged_eviction::runtime::{FaultyBackend, SimBackend};
@@ -110,6 +110,37 @@ fn main() {
         std::hint::black_box(ikn.post_append(&cache, 256));
     }) * 1e6;
     record(&mut t, &mut rows, "inverse_key_norm global scan (512 tokens)", us);
+
+    // attn_feedback_step: what a feedback-consuming policy adds per decode
+    // step — assemble the O(live) attention-mass vector (the sim backend's
+    // positional model) and take the guided decision instead of the proxy.
+    let sa = make_policy("self_attn").unwrap();
+    let horizon = cache.next_position();
+    let us = time_it(iters * 10, || {
+        let fb = AttnFeedback {
+            mass: (0..horizon)
+                .map(|p| paged_eviction::sim::positional_mass(p, horizon))
+                .collect(),
+        };
+        std::hint::black_box(sa.post_append_feedback(&cache, 256, Some(&fb)));
+    }) * 1e6;
+    record(&mut t, &mut rows, "attn_feedback_step (512-pos mass + guided decision)", us);
+
+    // autotune_pick: the per-request cost of one `--policy auto`
+    // resolution — lock-free arena pressure snapshot, pure table choice,
+    // counter record. This sits on the submit path, never in decode.
+    let aarena = BlockManager::new(4096);
+    let mut astats = paged_eviction::scheduler::AutotuneStats::default();
+    let mut aplen = 0usize;
+    let us = time_it(iters * 100, || {
+        aplen = (aplen % 512) + 17;
+        let snap = paged_eviction::scheduler::PressureSnapshot::read(&aarena);
+        let c = paged_eviction::scheduler::autotune::choose(aplen, 0, 1024, 16, &snap);
+        astats.record(c.policy);
+        std::hint::black_box(c);
+    }) * 1e6;
+    assert!(astats.total() > 0, "the autotuner always resolves to something");
+    record(&mut t, &mut rows, "autotune_pick (snapshot + choose + record)", us);
 
     // full decode-step metadata cycle: alloc-if-needed + append + policy +
     // evict + incremental serialization (what the runtime pays per token,

@@ -16,7 +16,7 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use anyhow::Result;
 
 use super::types::{RequestBuilder, RequestId, SeqEvent};
-use crate::eviction::make_policy;
+use crate::eviction::validate_request_policy;
 use crate::scheduler::{DecodeBackend, SchedConfig, Scheduler, StepReport};
 
 /// Lifecycle of a request's event stream as seen by its handle.
@@ -125,7 +125,9 @@ impl<B: DecodeBackend> Session<B> {
         g.next_id += 1;
         let id = RequestId(g.next_id);
         let req = builder.build(id, &g.sched.cfg);
-        make_policy(&req.policy)?; // surface bad policy names at submit
+        // surface bad policy names at submit ("auto" is valid: the
+        // scheduler resolves the sentinel when the request reaches it)
+        validate_request_policy(&req.policy)?;
         g.streams.insert(
             id.raw(),
             Stream { events: VecDeque::new(), state: HandleState::Active },

@@ -1,0 +1,237 @@
+//! AttentionGate — in-context gating ("In-context KV-Cache Eviction via
+//! Attention-Gate", arXiv 2410.12876): every candidate page carries a gate
+//! statistic — its recent attention RATE, i.e. accumulated mass normalised
+//! by how long the position has been resident — and on the block-full
+//! trigger the OLDEST page whose gate falls below `threshold ×` the mean
+//! candidate gate is dropped: a page the context has stopped attending to
+//! is evicted even when its lifetime total still looks respectable. When
+//! every page passes the gate, the global minimum goes (the memory bound
+//! always wins — the budget is hard).
+//!
+//! Structured and CoW-free: only whole pages are ever released. Without a
+//! backend feedback channel the gate runs on the V/K-ratio proxy, the same
+//! graceful degradation as [`super::SelfAttnGuided`].
+
+use super::{top_k_ascending, AttnFeedback, Decision, EvictionPolicy, PrefillScores, CH_VK_RATIO};
+use crate::kvcache::{Block, SeqCache};
+
+#[derive(Debug, Clone)]
+pub struct AttentionGate {
+    /// Never evict the most recent blocks (newest always protected).
+    pub protect_recent_blocks: usize,
+    /// A page passes the gate while its score stays at or above
+    /// `threshold ×` the mean candidate gate score.
+    pub threshold: f32,
+}
+
+impl Default for AttentionGate {
+    fn default() -> Self {
+        AttentionGate { protect_recent_blocks: 1, threshold: 0.75 }
+    }
+}
+
+impl AttentionGate {
+    /// Mean gate score of one page: attention mass per resident step with
+    /// feedback, the V/K-ratio proxy without. Zero-allocation; called once
+    /// per candidate per pass.
+    fn gate_score(&self, b: &Block, horizon: u32, fb: Option<&AttnFeedback>) -> f64 {
+        let (mut sum, mut cnt) = (0.0f64, 0u32);
+        for (_, pos, sc) in b.live_tokens() {
+            let g = match fb {
+                Some(f) => {
+                    let age = horizon.saturating_sub(pos).max(1);
+                    f64::from(f.mass_at(pos as usize)) / f64::from(age)
+                }
+                None => f64::from(sc[CH_VK_RATIO]),
+            };
+            sum += g;
+            cnt += 1;
+        }
+        if cnt == 0 {
+            0.0
+        } else {
+            sum / f64::from(cnt)
+        }
+    }
+
+    fn decide(&self, cache: &SeqCache, budget: usize, fb: Option<&AttnFeedback>) -> Decision {
+        // Same trigger as the paper's structured decode path: act only
+        // when the newest block just filled and the budget is exceeded.
+        if !cache.last_block_full() || cache.live_tokens() <= budget {
+            return Decision::Keep;
+        }
+        let n = cache.n_blocks();
+        let protected = self.protect_recent_blocks.max(1);
+        if n <= protected {
+            return Decision::Keep;
+        }
+        let fb = fb.filter(|f| !f.is_empty());
+        let horizon = cache.next_position();
+        let candidates = &cache.blocks()[..n - protected];
+        // pass 1: the gate bar (mean over candidates); pass 2: the oldest
+        // failing page, tracking the global minimum as the all-pass
+        // fallback. Two cheap scans instead of a score buffer keeps the
+        // decode decision path allocation-free.
+        let mean: f64 = candidates.iter().map(|b| self.gate_score(b, horizon, fb)).sum::<f64>()
+            / candidates.len() as f64;
+        let bar = f64::from(self.threshold) * mean;
+        let (mut min_i, mut min_g) = (0usize, f64::INFINITY);
+        for (i, b) in candidates.iter().enumerate() {
+            let g = self.gate_score(b, horizon, fb);
+            if g < bar {
+                return Decision::EvictBlock(i); // oldest gated-out page
+            }
+            if g < min_g {
+                min_g = g;
+                min_i = i;
+            }
+        }
+        Decision::EvictBlock(min_i)
+    }
+}
+
+impl EvictionPolicy for AttentionGate {
+    fn name(&self) -> &'static str {
+        "attention_gate"
+    }
+
+    fn structured(&self) -> bool {
+        true
+    }
+
+    fn prefill_keep(&self, scores: &PrefillScores, budget: usize) -> Vec<usize> {
+        // No in-context statistics exist before decode: proxy top-k.
+        if scores.len <= budget {
+            return (0..scores.len).collect();
+        }
+        top_k_ascending(&scores.channels[CH_VK_RATIO], budget)
+    }
+
+    fn post_append(&self, cache: &SeqCache, budget: usize) -> Decision {
+        self.decide(cache, budget, None)
+    }
+
+    fn post_append_feedback(
+        &self,
+        cache: &SeqCache,
+        budget: usize,
+        feedback: Option<&AttnFeedback>,
+    ) -> Decision {
+        self.decide(cache, budget, feedback)
+    }
+
+    fn wants_feedback(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache_with_blocks(block_scores: &[f32], bs: usize) -> SeqCache {
+        let mut c = SeqCache::new(bs, block_scores.len() + 2);
+        let toks: Vec<(u32, [f32; 3])> = block_scores
+            .iter()
+            .flat_map(|&s| std::iter::repeat([s, s, s]).take(bs))
+            .enumerate()
+            .map(|(i, sc)| (i as u32, sc))
+            .collect();
+        let n = toks.len() as u32;
+        c.load_prefill(&toks, n);
+        c
+    }
+
+    fn fb_from(mass: &[f32]) -> AttnFeedback {
+        AttnFeedback { mass: mass.to_vec() }
+    }
+
+    #[test]
+    fn under_budget_or_partial_block_keeps() {
+        let bs = 4;
+        let p = AttentionGate::default();
+        let mut c = cache_with_blocks(&[0.5, 0.5], bs);
+        assert_eq!(p.post_append(&c, 2 * bs), Decision::Keep);
+        c.ensure_block();
+        c.append([0.5; 3]); // newest block partial
+        assert_eq!(p.post_append(&c, bs), Decision::Keep);
+    }
+
+    #[test]
+    fn gate_evicts_oldest_starved_page() {
+        let bs = 4;
+        let c = cache_with_blocks(&[0.5, 0.5, 0.5, 0.5], bs);
+        let p = AttentionGate::default();
+        // blocks 1 and 2 both starved (fail the gate); block 1 is older
+        let mut mass = vec![1.0f32; 4 * bs];
+        for m in &mut mass[bs..3 * bs] {
+            *m = 0.0;
+        }
+        assert_eq!(
+            p.post_append_feedback(&c, 2 * bs, Some(&fb_from(&mass))),
+            Decision::EvictBlock(1)
+        );
+    }
+
+    #[test]
+    fn all_pass_falls_back_to_minimum() {
+        let bs = 4;
+        let c = cache_with_blocks(&[0.5, 0.5, 0.5], bs);
+        // block 0 is older, so matching RATES needs more accumulated
+        // mass: 1.6/token over ages 9..=12 lands just under young block
+        // 1's rate — both pass the gate, and the (slight) minimum, block
+        // 0, goes anyway; the budget still binds
+        let p = AttentionGate::default();
+        let mut mass = vec![1.0f32; 3 * bs];
+        for m in &mut mass[..bs] {
+            *m = 1.6;
+        }
+        assert_eq!(
+            p.post_append_feedback(&c, bs, Some(&fb_from(&mass))),
+            Decision::EvictBlock(0)
+        );
+    }
+
+    #[test]
+    fn proxy_fallback_gates_on_vk_ratio() {
+        let bs = 4;
+        // block 1's proxy collapses vs its peers -> gated out without fb
+        let c = cache_with_blocks(&[0.8, 0.05, 0.9], bs);
+        let p = AttentionGate::default();
+        assert_eq!(p.post_append(&c, bs), Decision::EvictBlock(1));
+        assert_eq!(p.post_append_feedback(&c, bs, None), Decision::EvictBlock(1));
+    }
+
+    #[test]
+    fn newest_block_always_protected() {
+        let bs = 4;
+        let c = cache_with_blocks(&[0.5, 0.5], bs);
+        let p = AttentionGate::default();
+        // only candidate is block 0 whatever the mass says
+        let mass = vec![1.0f32; 2 * bs];
+        assert_eq!(
+            p.post_append_feedback(&c, bs, Some(&fb_from(&mass))),
+            Decision::EvictBlock(0)
+        );
+    }
+
+    #[test]
+    fn recency_rate_beats_lifetime_total() {
+        let bs = 4;
+        let c = cache_with_blocks(&[0.5, 0.5, 0.5], bs);
+        let p = AttentionGate::default();
+        // Block 0 accumulated a big TOTAL over a long residence, but its
+        // per-step rate is lower than young block 1's: with horizon 12,
+        // ages are ~12-8 (block 0) vs ~8-4 (block 1). Give block 0 total
+        // 1.0/token (rate ~1/10) and block 1 total 2.0/token (rate ~1/3):
+        // block 0 fails the gate first.
+        let mut mass = vec![2.0f32; 3 * bs];
+        for m in &mut mass[..bs] {
+            *m = 1.0;
+        }
+        assert_eq!(
+            p.post_append_feedback(&c, bs, Some(&fb_from(&mass))),
+            Decision::EvictBlock(0)
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! The autotuner's decision table: a PURE function from (prompt shape,
+//! arena-pressure band, prefix-hit depth) to a concrete registry policy.
+//!
+//! It lives in `eviction/` next to the registry it picks from; the
+//! scheduler side — pressure snapshots, per-request resolution through the
+//! PR 5 override machinery, pick counters — lives in
+//! `scheduler::autotune`. Purity is the determinism keystone: the same
+//! (request, pressure snapshot) inputs yield the same choice at any worker
+//! count, and the sim backend's token streams are policy-invariant
+//! besides, so `--policy auto` digests stay bit-identical at workers
+//! 1 vs 4 (the schedule-smoke CI leg compares them).
+
+/// Request-level sentinel (`--policy auto`): not a registry entry — the
+/// scheduler resolves it to one at submit time.
+pub const AUTO_POLICY: &str = "auto";
+
+/// Prompt-length threshold splitting chat tails from long-context
+/// documents. The workload generator's chat prompts stay well under it,
+/// its long-context prompts well over (see `workload::scenario`).
+pub const LONG_CONTEXT_TOKENS: usize = 256;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PromptClass {
+    /// Short conversational turn: the cache fits, recency dominates.
+    Chat,
+    /// Long document: retention quality decides answer quality.
+    LongContext,
+}
+
+/// Classify a prompt by length alone — everything else the tuner uses
+/// (prefix hits, pressure) arrives as separate inputs so the function
+/// stays trivially pure.
+pub fn classify_prompt(prompt_len: usize) -> PromptClass {
+    if prompt_len >= LONG_CONTEXT_TOKENS {
+        PromptClass::LongContext
+    } else {
+        PromptClass::Chat
+    }
+}
+
+/// Arena pressure at submit time, banded by the PR 9 lock-free watermark
+/// reads (see `scheduler::autotune::PressureSnapshot`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PressureBand {
+    /// Below the low watermark: memory to spare.
+    Low,
+    /// Between the watermarks.
+    Normal,
+    /// Above the high watermark: preemption territory.
+    High,
+}
+
+/// The decision table. `prefix_hit_blocks` is how many leading prompt
+/// blocks the prefix cache would serve by reference: a request riding
+/// shared pages must never get a `kills_tokens` policy, whose hole-punch
+/// writes would force copy-on-write of every shared page at the worst
+/// possible moment (pinned by `picks_never_kill_tokens_on_prefix_hits`).
+pub fn pick_policy(
+    class: PromptClass,
+    band: PressureBand,
+    prefix_hit_blocks: usize,
+) -> &'static str {
+    use PressureBand::*;
+    use PromptClass::*;
+    match (class, band) {
+        // Short chat turns fit comfortably: the paper's structured
+        // eviction is the all-round default.
+        (Chat, Low) | (Chat, Normal) => "paged",
+        // A fresh chat prompt under arena pressure degrades to the sliding
+        // window (cheapest resident footprint) — unless it rides shared
+        // prefix pages (see above).
+        (Chat, High) => {
+            if prefix_hit_blocks > 0 {
+                "paged"
+            } else {
+                "streaming"
+            }
+        }
+        // Roomy arena + long document: the gate drops only pages the
+        // context has stopped attending to.
+        (LongContext, Low) => "attention_gate",
+        // Long context under pressure: rank pages by accumulated attention
+        // mass and keep the heavy hitters.
+        (LongContext, Normal) | (LongContext, High) => "self_attn",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry;
+    use super::*;
+
+    const CLASSES: [PromptClass; 2] = [PromptClass::Chat, PromptClass::LongContext];
+    const BANDS: [PressureBand; 3] =
+        [PressureBand::Low, PressureBand::Normal, PressureBand::High];
+
+    #[test]
+    fn every_pick_is_a_registry_entry() {
+        for class in CLASSES {
+            for band in BANDS {
+                for hits in [0usize, 1, 7] {
+                    let name = pick_policy(class, band, hits);
+                    assert!(
+                        registry::lookup(name).is_some(),
+                        "{class:?}/{band:?}/hits={hits} -> {name:?} not in registry"
+                    );
+                    assert_ne!(name, AUTO_POLICY, "the sentinel must never pick itself");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn picks_never_kill_tokens_on_prefix_hits() {
+        for class in CLASSES {
+            for band in BANDS {
+                let name = pick_policy(class, band, 3);
+                let info = registry::lookup(name).unwrap();
+                assert!(
+                    !info.kills_tokens,
+                    "{class:?}/{band:?} with prefix hits picked {name} (kills_tokens)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn classification_boundary() {
+        assert_eq!(classify_prompt(0), PromptClass::Chat);
+        assert_eq!(classify_prompt(LONG_CONTEXT_TOKENS - 1), PromptClass::Chat);
+        assert_eq!(classify_prompt(LONG_CONTEXT_TOKENS), PromptClass::LongContext);
+        assert_eq!(classify_prompt(4096), PromptClass::LongContext);
+    }
+
+    #[test]
+    fn pressure_shapes_the_pick() {
+        // chat sheds to the sliding window only when fresh AND pressured
+        assert_eq!(pick_policy(PromptClass::Chat, PressureBand::High, 0), "streaming");
+        assert_eq!(pick_policy(PromptClass::Chat, PressureBand::High, 2), "paged");
+        assert_eq!(pick_policy(PromptClass::Chat, PressureBand::Low, 0), "paged");
+        // long context trades the gate for mass ranking under pressure
+        assert_eq!(
+            pick_policy(PromptClass::LongContext, PressureBand::Low, 0),
+            "attention_gate"
+        );
+        assert_eq!(pick_policy(PromptClass::LongContext, PressureBand::High, 0), "self_attn");
+    }
+}

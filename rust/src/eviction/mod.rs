@@ -18,16 +18,24 @@
 //!   1 = key L2 norm       (InverseKeyNorm, lower = keep)
 //!   2 = KeyDiff cosine    (KeyDiff, lower = keep / higher = redundant)
 
+mod attention_gate;
+pub mod auto;
 mod full_cache;
 mod inverse_key_norm;
 mod keydiff;
 mod paged_eviction;
+pub mod registry;
+mod self_attn_guided;
 mod streaming_llm;
 
+pub use attention_gate::AttentionGate;
+pub use auto::AUTO_POLICY;
 pub use full_cache::FullCache;
 pub use inverse_key_norm::InverseKeyNorm;
 pub use keydiff::KeyDiff;
 pub use paged_eviction::PagedEviction;
+pub use registry::{make_policy, validate_request_policy, PolicyInfo, REGISTRY};
+pub use self_attn_guided::SelfAttnGuided;
 pub use streaming_llm::StreamingLlm;
 
 use crate::kvcache::SeqCache;
@@ -64,6 +72,36 @@ impl PrefillScores {
             }
         }
         PrefillScores { channels, len }
+    }
+}
+
+/// Per-token ACCUMULATED attention mass for one running sequence — the
+/// optional per-step feedback channel attention-guided policies consume
+/// (`DecodeBackend::attention_feedback`). Indexed by ORIGINAL sequence
+/// position (`mass[pos]`), the same coordinate `SeqCache::live_tokens`
+/// reports, so the layout is independent of how the cache paged or evicted
+/// its entries. Backends without an attention readout return `None` and
+/// the policies fall back to their score-channel proxy — the PJRT path
+/// ships zero kernel changes, mirroring the paper's constraint.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AttnFeedback {
+    /// `mass[pos]` = attention mass position `pos` has accumulated so far.
+    pub mass: Vec<f32>,
+}
+
+impl AttnFeedback {
+    /// Mass at `pos`; positions the backend never reported score 0
+    /// (least-attended), so a stale/short vector degrades safely.
+    pub fn mass_at(&self, pos: usize) -> f32 {
+        self.mass.get(pos).copied().unwrap_or(0.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.mass.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mass.is_empty()
     }
 }
 
@@ -254,24 +292,36 @@ pub trait EvictionPolicy: Send + Sync {
     fn kills_tokens(&self) -> bool {
         false
     }
+
+    /// True when the policy consumes the per-step attention-feedback
+    /// channel. Backends only assemble an [`AttnFeedback`] (an
+    /// O(live-tokens) pass) for sequences whose policy asks for it, so
+    /// attention-free policies keep their decode hot path byte-identical.
+    /// Mirrored by `registry::PolicyInfo::wants_feedback` (the ROADMAP
+    /// policy table's "feedback-consuming?" column).
+    fn wants_feedback(&self) -> bool {
+        false
+    }
+
+    /// Decode-phase decision with the backend's optional attention
+    /// feedback. The default ignores the channel and defers to
+    /// [`EvictionPolicy::post_append`], so attention-free policies and
+    /// feedback-less backends (`None`) meet on the same code path;
+    /// attention-guided policies override this and fall back to their
+    /// proxy themselves when handed `None`.
+    fn post_append_feedback(
+        &self,
+        cache: &SeqCache,
+        budget: usize,
+        _feedback: Option<&AttnFeedback>,
+    ) -> Decision {
+        self.post_append(cache, budget)
+    }
 }
 
-/// Instantiate a policy by its CLI/bench name.
-pub fn make_policy(name: &str) -> anyhow::Result<Box<dyn EvictionPolicy>> {
-    Ok(match name {
-        "paged" | "paged_eviction" => Box::new(PagedEviction::default()),
-        "full" | "full_cache" => Box::new(FullCache),
-        "streaming" | "streaming_llm" => Box::new(StreamingLlm::default()),
-        "inverse_key_norm" | "key_norm" | "l2" => Box::new(InverseKeyNorm::default()),
-        "keydiff" | "key_diff" => Box::new(KeyDiff::default()),
-        _ => anyhow::bail!(
-            "unknown eviction policy {name:?} \
-             (try: paged, full, streaming, inverse_key_norm, keydiff)"
-        ),
-    })
-}
-
-/// All comparable policy names in the paper's Fig. 2/3 order.
+/// The paper's comparable policy names in Fig. 2/3 order — the historical
+/// sweep set. The full (growing) set, including the attention-feedback
+/// policies, is [`registry::REGISTRY`].
 pub const ALL_POLICIES: [&str; 5] =
     ["full", "streaming", "inverse_key_norm", "keydiff", "paged"];
 
@@ -424,13 +474,37 @@ mod tests {
 
     #[test]
     fn factory_known_and_unknown() {
-        for n in ALL_POLICIES {
-            assert!(make_policy(n).is_ok(), "{n}");
+        for info in REGISTRY {
+            assert!(make_policy(info.name).is_ok(), "{}", info.name);
         }
         assert!(make_policy("h2o").is_err());
     }
 
-    /// Contract every policy must satisfy, checked against random prompts.
+    /// The historical sweep set stays a subset of the registry, in the
+    /// same make_policy universe.
+    #[test]
+    fn all_policies_are_registered() {
+        for n in ALL_POLICIES {
+            assert!(registry::lookup(n).is_some(), "{n} missing from registry");
+        }
+    }
+
+    /// A policy that ignores the feedback channel must behave identically
+    /// through the defaulted feedback entry point.
+    #[test]
+    fn default_feedback_dispatch_defers_to_post_append() {
+        let mut c = SeqCache::new(4, 6);
+        let toks: Vec<(u32, [f32; 3])> =
+            (0..12).map(|i| (i, [i as f32, i as f32, i as f32])).collect();
+        c.load_prefill(&toks, 12);
+        let fb = AttnFeedback { mass: vec![1.0; 12] };
+        let p = make_policy("paged").unwrap();
+        assert_eq!(p.post_append_feedback(&c, 8, Some(&fb)), p.post_append(&c, 8));
+        assert_eq!(p.post_append_feedback(&c, 8, None), p.post_append(&c, 8));
+    }
+
+    /// Contract every registered policy must satisfy, checked against
+    /// random prompts.
     #[test]
     fn property_prefill_keep_contract() {
         propcheck::quick("prefill-keep-contract", |rng: &mut Pcg32| {
@@ -439,8 +513,9 @@ mod tests {
             let vals: Vec<(f32, f32, f32)> =
                 (0..len).map(|_| (rng.f32(), rng.f32(), rng.f32())).collect();
             let scores = mk_scores(&vals);
-            for name in ALL_POLICIES {
-                let p = make_policy(name).unwrap();
+            for info in REGISTRY {
+                let name = info.name;
+                let p = info.make();
                 let keep = p.prefill_keep(&scores, budget);
                 if len <= budget && keep.len() != len {
                     return Err(format!("{name}: must keep all under budget"));
@@ -462,7 +537,10 @@ mod tests {
         });
     }
 
-    /// Decode contract: run random decode streams through every policy and
+    /// Decode contract: run random decode streams through every registered
+    /// policy — dispatching through the feedback entry point, alternating
+    /// a synthetic mass vector with `None` for feedback-consuming policies
+    /// so both the guided path and the proxy fallback are exercised — and
     /// check budget adherence and invariants.
     #[test]
     fn property_decode_budget_adherence() {
@@ -470,32 +548,35 @@ mod tests {
             let bs = *rng.choose(&[4usize, 8, 16]);
             let budget_blocks = 2 + rng.usize_below(4);
             let budget = budget_blocks * bs;
-            for name in ALL_POLICIES {
+            for info in REGISTRY {
+                let name = info.name;
                 if name == "full" {
                     continue; // unbounded by design
                 }
-                let p = make_policy(name).unwrap();
+                let p = info.make();
                 let cap = budget_blocks + 3;
                 let mut c = SeqCache::new(bs, cap);
                 let pre: Vec<(u32, [f32; 3])> =
                     (0..budget as u32).map(|i| (i, [rng.f32(), rng.f32(), rng.f32()])).collect();
                 c.load_prefill(&pre, budget as u32);
-                for _ in 0..(4 * bs) {
-                    // Unstructured policies fragment pages and legitimately
-                    // hold more physical blocks than the token budget
-                    // implies (the paper's Limitation 1/2); the runtime
-                    // grows the bucket. Structured policies must never
-                    // need that.
+                for step in 0..(4 * bs) {
+                    // Token-killing policies fragment pages and
+                    // legitimately hold more physical blocks than the
+                    // token budget implies (the paper's Limitation 1/2);
+                    // the runtime grows the bucket. Whole-page-only
+                    // structured policies must never need that.
                     if !c.ensure_block() {
-                        let p0 = make_policy(name).unwrap();
-                        if p0.structured() && name == "paged" {
+                        if info.structured && !info.kills_tokens {
                             return Err(format!("{name}: pool exhausted (no eviction?)"));
                         }
                         c.grow(c.capacity_blocks() + 2);
                         assert!(c.ensure_block());
                     }
                     c.append([rng.f32(), rng.f32(), rng.f32()]);
-                    match p.post_append(&c, budget) {
+                    let fb = (info.wants_feedback && step % 2 == 0).then(|| AttnFeedback {
+                        mass: (0..c.next_position()).map(|_| rng.f32()).collect(),
+                    });
+                    match p.post_append_feedback(&c, budget, fb.as_ref()) {
                         Decision::Keep => {}
                         Decision::EvictBlock(i) => {
                             if i + 1 >= c.n_blocks() {

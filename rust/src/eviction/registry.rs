@@ -1,0 +1,209 @@
+//! Single source of truth for eviction-policy names.
+//!
+//! Every surface that parses a policy name (CLI `--policy`, trace
+//! `policy=`, wire JSON) or enumerates the zoo (fig2 sweeps, the
+//! policy-contract property suite, the autotuner's decision table) goes
+//! through this table. Adding a policy here is the ONE step that lights it
+//! up everywhere, and an unknown name errors with the full valid set
+//! instead of whichever subset a local `match` remembered.
+
+use super::auto::AUTO_POLICY;
+use super::{
+    AttentionGate, EvictionPolicy, FullCache, InverseKeyNorm, KeyDiff, PagedEviction,
+    SelfAttnGuided, StreamingLlm,
+};
+
+/// One registry row: canonical name, accepted aliases, the contract flags
+/// the policy instance must agree with (pinned by `registry_matches_impls`)
+/// and its constructor.
+pub struct PolicyInfo {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    /// Whole-page decode evictions only (the paper's taxonomy).
+    pub structured: bool,
+    /// Decode decisions hole-punch tokens inside pages — shared prefix
+    /// pages must be copied-on-write before they run.
+    pub kills_tokens: bool,
+    /// Consumes the per-step attention-feedback channel when the backend
+    /// supplies one (falls back to the score-channel proxy otherwise).
+    pub wants_feedback: bool,
+    ctor: fn() -> Box<dyn EvictionPolicy>,
+}
+
+impl PolicyInfo {
+    /// Instantiate this row's policy.
+    pub fn make(&self) -> Box<dyn EvictionPolicy> {
+        (self.ctor)()
+    }
+
+    /// Whether `name` is this row's canonical name or one of its aliases.
+    pub fn answers_to(&self, name: &str) -> bool {
+        self.name == name || self.aliases.contains(&name)
+    }
+}
+
+/// Every registered policy: the paper's baselines first (Fig. 2/3 order,
+/// mirrored by [`super::ALL_POLICIES`]), then the attention-feedback
+/// generation.
+pub static REGISTRY: &[PolicyInfo] = &[
+    PolicyInfo {
+        name: "full",
+        aliases: &["full_cache"],
+        structured: true,
+        kills_tokens: false,
+        wants_feedback: false,
+        ctor: || Box::new(FullCache),
+    },
+    PolicyInfo {
+        name: "streaming",
+        aliases: &["streaming_llm"],
+        structured: true,
+        kills_tokens: true,
+        wants_feedback: false,
+        ctor: || Box::new(StreamingLlm::default()),
+    },
+    PolicyInfo {
+        name: "inverse_key_norm",
+        aliases: &["key_norm", "l2"],
+        structured: false,
+        kills_tokens: true,
+        wants_feedback: false,
+        ctor: || Box::new(InverseKeyNorm::default()),
+    },
+    PolicyInfo {
+        name: "keydiff",
+        aliases: &["key_diff"],
+        structured: false,
+        kills_tokens: true,
+        wants_feedback: false,
+        ctor: || Box::new(KeyDiff::default()),
+    },
+    PolicyInfo {
+        name: "paged",
+        aliases: &["paged_eviction"],
+        structured: true,
+        kills_tokens: false,
+        wants_feedback: false,
+        ctor: || Box::new(PagedEviction::default()),
+    },
+    PolicyInfo {
+        name: "self_attn",
+        aliases: &["self_attn_guided"],
+        structured: true,
+        kills_tokens: false,
+        wants_feedback: true,
+        ctor: || Box::new(SelfAttnGuided::default()),
+    },
+    PolicyInfo {
+        name: "self_attn_token",
+        aliases: &[],
+        structured: false,
+        kills_tokens: true,
+        wants_feedback: true,
+        ctor: || Box::new(SelfAttnGuided::token_level()),
+    },
+    PolicyInfo {
+        name: "attention_gate",
+        aliases: &["attn_gate"],
+        structured: true,
+        kills_tokens: false,
+        wants_feedback: true,
+        ctor: || Box::new(AttentionGate::default()),
+    },
+];
+
+/// Look up a registry row by canonical name or alias.
+pub fn lookup(name: &str) -> Option<&'static PolicyInfo> {
+    REGISTRY.iter().find(|p| p.answers_to(name))
+}
+
+/// Comma-joined canonical names — the "valid set" error surfaces print.
+pub fn valid_names() -> String {
+    REGISTRY.iter().map(|p| p.name).collect::<Vec<_>>().join(", ")
+}
+
+/// Instantiate a policy by its CLI/bench/wire name.
+pub fn make_policy(name: &str) -> anyhow::Result<Box<dyn EvictionPolicy>> {
+    match lookup(name) {
+        Some(info) => Ok(info.make()),
+        None => anyhow::bail!("unknown eviction policy {name:?} (valid: {})", valid_names()),
+    }
+}
+
+/// Validate a REQUEST-level policy name: any registry name/alias, or the
+/// autotuner sentinel `"auto"`, which the scheduler resolves to a concrete
+/// registry entry at submit time (see `scheduler::autotune`). Request
+/// ingress points (session submit, engine submit, wire parse, trace parse)
+/// use this instead of [`make_policy`] so `"auto"` is admitted without
+/// being instantiable.
+pub fn validate_request_policy(name: &str) -> anyhow::Result<()> {
+    if name == AUTO_POLICY || lookup(name).is_some() {
+        return Ok(());
+    }
+    anyhow::bail!(
+        "unknown eviction policy {name:?} (valid: {}, or {AUTO_POLICY:?})",
+        valid_names()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The table's flags are contracts: the instance each row builds must
+    /// agree with them, or admission/CoW decisions made from the table
+    /// diverge from what the policy actually does.
+    #[test]
+    fn registry_matches_impls() {
+        for info in REGISTRY {
+            let p = info.make();
+            assert_eq!(p.name(), info.name, "canonical name");
+            assert_eq!(p.structured(), info.structured, "{}: structured", info.name);
+            assert_eq!(p.kills_tokens(), info.kills_tokens, "{}: kills_tokens", info.name);
+            assert_eq!(p.wants_feedback(), info.wants_feedback, "{}: wants_feedback", info.name);
+        }
+    }
+
+    #[test]
+    fn names_and_aliases_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for info in REGISTRY {
+            assert!(seen.insert(info.name), "duplicate name {}", info.name);
+            for a in info.aliases {
+                assert!(seen.insert(a), "duplicate alias {a}");
+            }
+        }
+        assert!(!seen.contains(AUTO_POLICY), "\"auto\" must stay a sentinel");
+    }
+
+    #[test]
+    fn aliases_resolve_to_their_row() {
+        for info in REGISTRY {
+            for a in info.aliases {
+                assert_eq!(lookup(a).map(|p| p.name), Some(info.name), "alias {a}");
+                assert_eq!(make_policy(a).unwrap().name(), info.name, "alias {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_name_lists_the_valid_set() {
+        let err = make_policy("h2o").unwrap_err().to_string();
+        for info in REGISTRY {
+            assert!(err.contains(info.name), "error must list {}: {err}", info.name);
+        }
+    }
+
+    #[test]
+    fn request_validation_accepts_auto() {
+        assert!(validate_request_policy(AUTO_POLICY).is_ok());
+        for info in REGISTRY {
+            assert!(validate_request_policy(info.name).is_ok(), "{}", info.name);
+            for a in info.aliases {
+                assert!(validate_request_policy(a).is_ok(), "{a}");
+            }
+        }
+        let err = validate_request_policy("h2o").unwrap_err().to_string();
+        assert!(err.contains("auto"), "error must mention the sentinel: {err}");
+    }
+}

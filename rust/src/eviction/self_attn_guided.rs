@@ -1,0 +1,325 @@
+//! SelfAttnGuided — self-attention-guided eviction ("LLMs Know What to
+//! Drop", arXiv 2503.08879): rank entries by the ACCUMULATED attention
+//! mass each position has received and evict the least-attended. The mass
+//! arrives through the backend's optional per-step feedback channel
+//! ([`AttnFeedback`]); a backend that cannot supply one (the PJRT path —
+//! no kernel modifications, exactly the paper's constraint) hands the
+//! policy `None` and it falls back to the attention-free V/K-ratio proxy,
+//! degrading gracefully to PagedEviction-shaped behaviour.
+//!
+//! Two variants share the struct, selected by `block_wise`:
+//!
+//!   * **structured** (`"self_attn"`, default): on the block-full trigger,
+//!     evict the whole page with the lowest mean accumulated mass —
+//!     table-shuffle-only decode overhead, CoW-free;
+//!   * **token-level** (`"self_attn_token"`): kill the globally
+//!     least-attended tokens one by one, fragmenting pages like the other
+//!     unstructured baselines (and requiring CoW on shared pages).
+
+use std::cell::RefCell;
+
+use super::inverse_key_norm::unstructured_evict_worst;
+use super::{
+    top_k_ascending, AttnFeedback, Decision, EvictionPolicy, KillList, LiveTok, PrefillScores,
+    CH_VK_RATIO,
+};
+use crate::kvcache::SeqCache;
+
+#[derive(Debug, Clone)]
+pub struct SelfAttnGuided {
+    /// Structured variant: decode evictions drop whole least-attended
+    /// pages. `false` = token-level kills.
+    pub block_wise: bool,
+    /// Never evict the most recent blocks (the newest is always
+    /// protected): their attention mass is still accumulating, so ranking
+    /// them against settled pages would systematically drop fresh context.
+    pub protect_recent_blocks: usize,
+}
+
+impl SelfAttnGuided {
+    /// The token-level (`"self_attn_token"`) variant.
+    pub fn token_level() -> Self {
+        SelfAttnGuided { block_wise: false, protect_recent_blocks: 1 }
+    }
+}
+
+impl Default for SelfAttnGuided {
+    fn default() -> Self {
+        SelfAttnGuided { block_wise: true, protect_recent_blocks: 1 }
+    }
+}
+
+thread_local! {
+    /// Per-thread live-token scan buffer for the token-level variant —
+    /// same zero-allocation discipline as the unstructured baselines'
+    /// `SCAN_SCRATCH`.
+    static MASS_SCRATCH: RefCell<Vec<LiveTok>> = RefCell::new(Vec::new());
+}
+
+impl SelfAttnGuided {
+    /// Structured feedback path: evict the page with the lowest mean
+    /// accumulated attention mass (paper Alg. 3 trigger, mass-ranked).
+    fn evict_block_by_mass(&self, cache: &SeqCache, budget: usize, fb: &AttnFeedback) -> Decision {
+        if !cache.last_block_full() || cache.live_tokens() <= budget {
+            return Decision::Keep;
+        }
+        let n = cache.n_blocks();
+        let protected = self.protect_recent_blocks.max(1);
+        if n <= protected {
+            return Decision::Keep;
+        }
+        let pick = cache.blocks()[..n - protected]
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                let (mut sum, mut cnt) = (0.0f64, 0u32);
+                for (_, pos, _) in b.live_tokens() {
+                    sum += f64::from(fb.mass_at(pos as usize));
+                    cnt += 1;
+                }
+                (i, if cnt == 0 { 0.0 } else { sum / f64::from(cnt) })
+            })
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|(i, _)| i);
+        match pick {
+            Some(i) => Decision::EvictBlock(i),
+            None => Decision::Keep,
+        }
+    }
+
+    /// Token-level feedback path: kill the globally least-attended live
+    /// tokens (excluding the just-appended one) until within budget.
+    fn kill_tokens_by_mass(&self, cache: &SeqCache, budget: usize, fb: &AttnFeedback) -> Decision {
+        let live = cache.live_tokens();
+        if live <= budget {
+            return Decision::Keep;
+        }
+        let newest_pos = cache.next_position().saturating_sub(1);
+        MASS_SCRATCH.with(|scratch| {
+            let mut tokens = scratch.borrow_mut();
+            cache.collect_live_tokens(&mut tokens);
+            tokens.retain(|&(_, _, pos, _)| pos != newest_pos);
+            let over = (live - budget).min(tokens.len());
+            if over == 0 {
+                return Decision::Keep;
+            }
+            // least-attended first; (block, offset) tie-break keeps the
+            // kill set fully deterministic even under equal mass
+            let cmp = |a: &LiveTok, b: &LiveTok| {
+                let (ma, mb) = (fb.mass_at(a.2 as usize), fb.mass_at(b.2 as usize));
+                ma.total_cmp(&mb).then_with(|| (a.0, a.1).cmp(&(b.0, b.1)))
+            };
+            if over < tokens.len() {
+                tokens.select_nth_unstable_by(over - 1, cmp);
+            }
+            tokens[..over].sort_unstable_by(cmp);
+            let mut kills = KillList::new();
+            for &(bi, off, _, _) in &tokens[..over] {
+                kills.push(bi, off);
+            }
+            Decision::KillTokens(kills)
+        })
+    }
+
+    /// Proxy fallback for the structured variant — the V/K-ratio stands in
+    /// for attention mass, which is exactly PagedEviction's pick.
+    fn evict_block_by_proxy(&self, cache: &SeqCache, budget: usize) -> Decision {
+        if !cache.last_block_full() || cache.live_tokens() <= budget {
+            return Decision::Keep;
+        }
+        let n = cache.n_blocks();
+        let protected = self.protect_recent_blocks.max(1);
+        if n <= protected {
+            return Decision::Keep;
+        }
+        let pick = cache.blocks()[..n - protected]
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (i, b.mean_score(CH_VK_RATIO)))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|(i, _)| i);
+        match pick {
+            Some(i) => Decision::EvictBlock(i),
+            None => Decision::Keep,
+        }
+    }
+}
+
+impl EvictionPolicy for SelfAttnGuided {
+    fn name(&self) -> &'static str {
+        if self.block_wise {
+            "self_attn"
+        } else {
+            "self_attn_token"
+        }
+    }
+
+    fn structured(&self) -> bool {
+        self.block_wise
+    }
+
+    fn prefill_keep(&self, scores: &PrefillScores, budget: usize) -> Vec<usize> {
+        // No decode feedback exists yet at prefill time: keep the
+        // highest-proxy tokens, like the paper's method.
+        if scores.len <= budget {
+            return (0..scores.len).collect();
+        }
+        top_k_ascending(&scores.channels[CH_VK_RATIO], budget)
+    }
+
+    fn post_append(&self, cache: &SeqCache, budget: usize) -> Decision {
+        if self.block_wise {
+            self.evict_block_by_proxy(cache, budget)
+        } else {
+            unstructured_evict_worst(cache, budget, CH_VK_RATIO, /*higher_is_worse=*/ false)
+        }
+    }
+
+    fn post_append_feedback(
+        &self,
+        cache: &SeqCache,
+        budget: usize,
+        feedback: Option<&AttnFeedback>,
+    ) -> Decision {
+        match feedback {
+            Some(fb) if !fb.is_empty() => {
+                if self.block_wise {
+                    self.evict_block_by_mass(cache, budget, fb)
+                } else {
+                    self.kill_tokens_by_mass(cache, budget, fb)
+                }
+            }
+            _ => self.post_append(cache, budget),
+        }
+    }
+
+    fn kills_tokens(&self) -> bool {
+        !self.block_wise
+    }
+
+    fn wants_feedback(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One cache with `block_scores.len()` full blocks; every token of
+    /// block `i` carries proxy score `block_scores[i]` on all channels.
+    fn cache_with_blocks(block_scores: &[f32], bs: usize) -> SeqCache {
+        let mut c = SeqCache::new(bs, block_scores.len() + 2);
+        let toks: Vec<(u32, [f32; 3])> = block_scores
+            .iter()
+            .flat_map(|&s| std::iter::repeat([s, s, s]).take(bs))
+            .enumerate()
+            .map(|(i, sc)| (i as u32, sc))
+            .collect();
+        let n = toks.len() as u32;
+        c.load_prefill(&toks, n);
+        c
+    }
+
+    fn fb_from(mass: &[f32]) -> AttnFeedback {
+        AttnFeedback { mass: mass.to_vec() }
+    }
+
+    #[test]
+    fn structured_feedback_overrides_proxy() {
+        let bs = 4;
+        // proxy says block 0 is worst (0.1); feedback says block 1 is
+        let c = cache_with_blocks(&[0.1, 0.9, 0.5], bs);
+        let p = SelfAttnGuided::default();
+        let mut mass = vec![1.0f32; 3 * bs];
+        for m in &mut mass[bs..2 * bs] {
+            *m = 0.01; // block 1 barely attended
+        }
+        assert_eq!(
+            p.post_append_feedback(&c, 2 * bs, Some(&fb_from(&mass))),
+            Decision::EvictBlock(1)
+        );
+        // without feedback the proxy pick wins
+        assert_eq!(p.post_append_feedback(&c, 2 * bs, None), Decision::EvictBlock(0));
+        assert_eq!(p.post_append(&c, 2 * bs), Decision::EvictBlock(0));
+    }
+
+    #[test]
+    fn structured_protects_recent_and_waits_for_full_block() {
+        let bs = 4;
+        let mut c = cache_with_blocks(&[0.5, 0.5], bs);
+        let p = SelfAttnGuided::default();
+        let mass = vec![1.0f32; 3 * bs];
+        // newest block partially filled -> Keep even over budget
+        c.ensure_block();
+        c.append([0.5; 3]);
+        assert_eq!(p.post_append_feedback(&c, bs, Some(&fb_from(&mass))), Decision::Keep);
+        // fill it; lowest-mass block is the newest -> must evict an older one
+        for _ in 0..bs - 1 {
+            c.ensure_block();
+            c.append([0.5; 3]);
+        }
+        let mut mass = vec![1.0f32; 3 * bs];
+        for m in &mut mass[2 * bs..] {
+            *m = 0.0; // newest block least attended — but protected
+        }
+        mass[bs] = 0.5; // block 1 second-least
+        match p.post_append_feedback(&c, bs, Some(&fb_from(&mass))) {
+            Decision::EvictBlock(i) => assert!(i < 2, "newest block must stay"),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn token_level_kills_least_attended_not_newest() {
+        let bs = 4;
+        let mut c = cache_with_blocks(&[0.5, 0.5], bs);
+        let p = SelfAttnGuided::token_level();
+        assert!(!p.structured());
+        assert!(p.kills_tokens());
+        c.ensure_block();
+        c.append([0.5; 3]); // position 8, the newest
+        // newest position has the least mass but must survive; next-least
+        // is position 2 (block 0, offset 2)
+        let mut mass = vec![1.0f32; 9];
+        mass[8] = 0.0;
+        mass[2] = 0.1;
+        match p.post_append_feedback(&c, 8, Some(&fb_from(&mass))) {
+            Decision::KillTokens(ts) => assert_eq!(ts, vec![(0, 2)]),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn token_level_proxy_fallback_kills_lowest_ratio() {
+        let p = SelfAttnGuided::token_level();
+        let bs = 4;
+        let mut c = SeqCache::new(bs, 4);
+        // V/K ratios 1..=8: token 0 (ratio 1) is the least important
+        let toks: Vec<(u32, [f32; 3])> =
+            (0..8).map(|i| (i, [(i + 1) as f32, 0.0, 0.0])).collect();
+        c.load_prefill(&toks, 8);
+        c.ensure_block();
+        c.append([9.0, 0.0, 0.0]);
+        match p.post_append_feedback(&c, 8, None) {
+            Decision::KillTokens(ts) => assert_eq!(ts, vec![(0, 0)]),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn under_budget_keeps() {
+        let c = cache_with_blocks(&[0.5, 0.5], 4);
+        let fb = fb_from(&[0.0; 8]);
+        for p in [SelfAttnGuided::default(), SelfAttnGuided::token_level()] {
+            assert_eq!(p.post_append_feedback(&c, 8, Some(&fb)), Decision::Keep, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn names_split_by_variant() {
+        assert_eq!(SelfAttnGuided::default().name(), "self_attn");
+        assert_eq!(SelfAttnGuided::token_level().name(), "self_attn_token");
+        assert!(SelfAttnGuided::default().wants_feedback());
+    }
+}

@@ -27,5 +27,8 @@ pub mod stats;
 
 pub use block::Block;
 pub use block_manager::{ArenaStats, BlockManager, SeqId};
-pub use seq_cache::{prefix_block_hashes, BlockAlloc, KvSnapshot, SeqCache, SCORE_CHANNELS};
+pub use seq_cache::{
+    prefix_block_hashes, prefix_block_hashes_with_layout, BlockAlloc, ChannelLayout, KvSnapshot,
+    SeqCache, SCORE_CHANNELS, SCORE_LAYOUT_V1,
+};
 pub use stats::CacheStats;

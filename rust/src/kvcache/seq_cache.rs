@@ -43,6 +43,35 @@ use super::stats::CacheStats;
 /// (0 = V/K ratio, 1 = key L2 norm, 2 = KeyDiff cosine).
 pub const SCORE_CHANNELS: usize = 3;
 
+/// The per-token score-channel layout a cache was serialized under. Its
+/// [`ChannelLayout::tag`] is folded into the prefix-hash chain seed, so
+/// two builds that pack a different channel COUNT — or reinterpret what a
+/// channel means (a `version` bump) — can never alias each other's pages
+/// in the shared prefix index: the hash bytes would line up, the
+/// semantics would not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChannelLayout {
+    /// Score channels carried per token entry.
+    pub channels: u32,
+    /// Bump when a channel's MEANING changes without its count changing
+    /// (e.g. if channel 1 switched from key L2 to value L2).
+    pub version: u32,
+}
+
+/// The layout every current cache serializes under: [`SCORE_CHANNELS`]
+/// channels, semantics version 1.
+pub const SCORE_LAYOUT_V1: ChannelLayout =
+    ChannelLayout { channels: SCORE_CHANNELS as u32, version: 1 };
+
+impl ChannelLayout {
+    /// The layout's contribution to the hash-chain seed. Channel count
+    /// and version live in disjoint halves, so no two distinct layouts
+    /// share a tag.
+    pub fn tag(&self) -> u64 {
+        (u64::from(self.channels) << 32) | u64::from(self.version)
+    }
+}
+
 /// SplitMix64 finalizer — the mixing core of the prefix-block hash chain.
 fn mix64(x: u64) -> u64 {
     let mut z = x.wrapping_add(0x9e3779b97f4a7c15);
@@ -63,12 +92,26 @@ pub fn prefix_block_hashes(
     tokens: &[(u32, [f32; 3])],
     keys: &[u64],
 ) -> Vec<u64> {
+    prefix_block_hashes_with_layout(SCORE_LAYOUT_V1, block_size, tokens, keys)
+}
+
+/// [`prefix_block_hashes`] under an explicit [`ChannelLayout`] — the seed
+/// binds (block size, channel layout), so the same entries paged
+/// differently, packed with a different channel count, or reinterpreted
+/// under a new channel-semantics version never collide.
+pub fn prefix_block_hashes_with_layout(
+    layout: ChannelLayout,
+    block_size: usize,
+    tokens: &[(u32, [f32; 3])],
+    keys: &[u64],
+) -> Vec<u64> {
     assert_eq!(tokens.len(), keys.len(), "one content key per entry");
     let n_full = tokens.len() / block_size;
     let mut out = Vec::with_capacity(n_full);
-    // chain seed also binds the block size: the same entries paged
-    // differently must never collide
+    // chain seed binds the block size and the channel layout: two mixing
+    // rounds so the (size, layout) pair feeds the chain injectively
     let mut chain = mix64(0x70ae_51ca_0b10_c457 ^ block_size as u64);
+    chain = mix64(chain ^ layout.tag());
     for b in 0..n_full {
         for i in b * block_size..(b + 1) * block_size {
             let (pos, sc) = tokens[i];
@@ -1018,6 +1061,31 @@ mod tests {
 
     fn sc(x: f32) -> [f32; 3] {
         [x, x, x]
+    }
+
+    #[test]
+    fn prefix_hash_seed_binds_the_channel_layout() {
+        let entries: Vec<(u32, [f32; 3])> = (0..8).map(|i| (i, sc(i as f32))).collect();
+        let keys: Vec<u64> = (0..8).map(|i| 0x1000 + i as u64).collect();
+        let base = prefix_block_hashes(4, &entries, &keys);
+        assert_eq!(base.len(), 2);
+        assert_eq!(
+            base,
+            prefix_block_hashes_with_layout(SCORE_LAYOUT_V1, 4, &entries, &keys),
+            "the default wrapper IS the v1 layout"
+        );
+        // the same entries packed under a different channel count hash to
+        // a disjoint chain (no cross-layout prefix-index aliasing)...
+        let wider = ChannelLayout { channels: SCORE_LAYOUT_V1.channels + 1, version: 1 };
+        let w = prefix_block_hashes_with_layout(wider, 4, &entries, &keys);
+        assert!(base.iter().zip(&w).all(|(a, b)| a != b), "layouts must never alias");
+        // ...and so does a semantics version bump at the SAME count
+        let v2 = ChannelLayout { channels: SCORE_LAYOUT_V1.channels, version: 2 };
+        let v = prefix_block_hashes_with_layout(v2, 4, &entries, &keys);
+        assert!(base.iter().zip(&v).all(|(a, b)| a != b));
+        assert!(w.iter().zip(&v).all(|(a, b)| a != b));
+        assert_ne!(SCORE_LAYOUT_V1.tag(), wider.tag());
+        assert_ne!(SCORE_LAYOUT_V1.tag(), v2.tag());
     }
 
     #[test]

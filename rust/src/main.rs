@@ -21,11 +21,13 @@
 //!   paged-eviction schedule --requests 16 --arena-blocks 64 --gen 48
 //!   paged-eviction schedule --stream on --abort 3@4
 //!   paged-eviction schedule --trace requests.trace
+//!   paged-eviction schedule --policy auto --requests 16 --arena-blocks 64
 //!   paged-eviction slo --scenario bursty-chat,longbench-replay --workers 1,4
+//!   paged-eviction slo --scenario diurnal-mixed --policy auto --workers 1,4
 
 use anyhow::Result;
 
-use paged_eviction::eviction::make_policy;
+use paged_eviction::eviction::{make_policy, validate_request_policy};
 use paged_eviction::sim;
 use paged_eviction::util::args::ArgSpec;
 
@@ -202,8 +204,8 @@ fn cmd_serve() -> Result<()> {
          as low,high fractions of the arena")
     .opt("prefix-cache", "on", "share identical prompt-prefix blocks \
          across requests by refcount (on|off)")
-    .opt("policy", "paged", "server-default eviction policy \
-         (requests override per submit)")
+    .opt("policy", "paged", "server-default eviction policy, or \"auto\" \
+         for the per-request autotuner (requests override per submit)")
     .opt("budget", "1024", "server-default KV budget in tokens \
          (requests override per submit)")
     .opt("priority", "normal", "priority for requests that do not name \
@@ -236,7 +238,9 @@ fn cmd_serve() -> Result<()> {
         workers: args.get_usize("workers").max(1),
         ..SchedConfig::default()
     };
-    make_policy(&cfg.default_policy)?; // fail fast on a bad default
+    // fail fast on a bad default ("auto" is valid: the scheduler resolves
+    // the autotuner sentinel per request at submit)
+    validate_request_policy(&cfg.default_policy)?;
     if !args.get("config").is_empty() {
         use paged_eviction::util::toml;
         let text = std::fs::read_to_string(args.get("config"))?;
@@ -374,7 +378,9 @@ fn cmd_schedule() -> Result<()> {
     .opt("prompt-len", "96", "prompt tokens per request")
     .opt("gen", "48", "output tokens per request")
     .opt("budget", "64", "KV cache budget (tokens)")
-    .opt("policy", "paged", "eviction policy")
+    .opt("policy", "paged", "eviction policy, or \"auto\" to let the \
+         per-request autotuner pick one from prompt shape, prefix-cache \
+         hits and arena pressure")
     .opt("page-size", "8", "KV page size")
     .opt("concurrency", "4", "max concurrent sequences")
     .opt(
@@ -591,6 +597,8 @@ fn cmd_schedule() -> Result<()> {
         fault_retries,
         quarantined,
     );
+    let autotune = session.with_scheduler(|s| s.autotune.clone());
+    print_autotune(&autotune);
     for o in &outs {
         println!(
             "  req {:>3}: {:>3} tokens, finish {:?}, ttft {:.2} ms, preempted {}x \
@@ -609,6 +617,19 @@ fn cmd_schedule() -> Result<()> {
         println!("  req {id:>3}: cancelled (no output)");
     }
     Ok(())
+}
+
+/// The `--policy auto` resolution counters (one line, both schedule
+/// drivers). `total=0` on runs that never used the sentinel, so scripts
+/// can grep the line unconditionally.
+fn print_autotune(stats: &paged_eviction::scheduler::AutotuneStats) {
+    let picks = stats.summary();
+    println!(
+        "autotune: total={}{}{}",
+        stats.total(),
+        if picks.is_empty() { "" } else { " " },
+        picks,
+    );
 }
 
 /// One `schedule --stream on` event line (shared by the single- and
@@ -776,6 +797,11 @@ fn schedule_multi(
         fault_retries,
         quarantined,
     );
+    let mut autotune = paged_eviction::scheduler::AutotuneStats::default();
+    for w in &report.workers {
+        autotune.merge(&w.autotune);
+    }
+    print_autotune(&autotune);
     for o in &outs {
         println!(
             "  req {:>3}: {:>3} tokens, finish {:?}, ttft {:.2} ms, preempted {}x \
@@ -812,6 +838,11 @@ fn schedule_multi(
 struct SloRow {
     scenario: String,
     workers: usize,
+    /// The `--policy` flag the replay ran under (may be `"auto"`).
+    policy: String,
+    /// Completed requests per RESOLVED policy (`RequestOutput::policy`,
+    /// so `auto` rows show what the autotuner actually picked).
+    policy_counts: std::collections::BTreeMap<String, u64>,
     requests: usize,
     completed: usize,
     digest: u64,
@@ -864,6 +895,8 @@ fn cmd_slo() -> Result<()> {
          (bursty-chat|longbench-replay|diurnal-mixed|saturate-steal|all)",
     )
     .opt("workers", "1,4", "comma list of worker counts to replay at")
+    .opt("policy", "paged", "eviction policy for every request, or \
+         \"auto\" to let the per-request autotuner pick")
     .opt("concurrency", "4", "max concurrent sequences per worker")
     .opt("arena-blocks", "320", "shared arena capacity (blocks)")
     .opt("page-size", "16", "KV page size")
@@ -872,6 +905,8 @@ fn cmd_slo() -> Result<()> {
     .parse_or_exit(2);
 
     let seed = args.get_u64("seed");
+    let policy = args.get("policy");
+    validate_request_policy(policy)?; // "auto" included
     let names: Vec<String> = if args.get("scenario") == "all" {
         Scenario::builtin_names().iter().map(|s| s.to_string()).collect()
     } else {
@@ -908,16 +943,18 @@ fn cmd_slo() -> Result<()> {
                 &sc,
                 w.max(1),
                 seed,
+                policy,
                 args.get_usize("concurrency"),
                 args.get_usize("arena-blocks"),
                 args.get_usize("page-size"),
             )?;
             println!(
-                "scenario {} workers {}: {}/{} done in {:.2}s, ttft p50/p99 \
+                "scenario {} workers {} policy {}: {}/{} done in {:.2}s, ttft p50/p99 \
                  {:.1}/{:.1} ms, tpot p50/p99 {:.2}/{:.2} ms, attainment {:.2}, \
                  goodput {:.0} tok/s",
                 row.scenario,
                 row.workers,
+                row.policy,
                 row.completed,
                 row.requests,
                 row.elapsed_s,
@@ -948,6 +985,9 @@ fn cmd_slo() -> Result<()> {
                 row.cache_refills,
                 row.cache_drains,
             );
+            let by_policy: Vec<String> =
+                row.policy_counts.iter().map(|(p, n)| format!("{p}={n}")).collect();
+            println!("  policies: {}", by_policy.join(" "));
             println!("digest scenario={} workers={} {:016x}", row.scenario, row.workers, row.digest);
             digests.push((row.workers, row.digest));
             rows.push(row);
@@ -978,6 +1018,7 @@ fn run_slo_scenario(
     sc: &paged_eviction::workload::Scenario,
     workers: usize,
     seed: u64,
+    policy: &str,
     concurrency: usize,
     arena_blocks: usize,
     page_size: usize,
@@ -994,7 +1035,7 @@ fn run_slo_scenario(
         max_concurrency: concurrency,
         max_live_blocks: arena_blocks,
         prefix_cache: true,
-        default_policy: "paged".into(),
+        default_policy: policy.to_string(),
         default_budget: 1024,
         workers,
         prefill_chunk: sc.prefill_chunk,
@@ -1064,9 +1105,17 @@ fn run_slo_scenario(
     }
     let (tpot_p50, tpot_p99) =
         if tpot.is_empty() { (0.0, 0.0) } else { (tpot.pctl(0.50), tpot.pctl(0.99)) };
+    // counted by the policy each request actually RAN under — for a fixed
+    // --policy that's one bucket; under "auto" it is the autotuner's mix
+    let mut policy_counts = std::collections::BTreeMap::new();
+    for o in &outs {
+        *policy_counts.entry(o.policy.clone()).or_insert(0u64) += 1;
+    }
     Ok(SloRow {
         scenario: sc.name.to_string(),
         workers,
+        policy: policy.to_string(),
+        policy_counts,
         requests: reqs.len(),
         completed: outs.len(),
         digest: output_digest(&outs),
@@ -1109,8 +1158,11 @@ fn render_slo_json(seed: u64, rows: &[SloRow]) -> String {
     s.push_str(&format!("  \"seed\": {seed},\n"));
     s.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
+        let policy_counts: Vec<String> =
+            r.policy_counts.iter().map(|(p, n)| format!("\"{p}\": {n}")).collect();
         s.push_str(&format!(
-            "    {{\"scenario\": \"{}\", \"workers\": {}, \"requests\": {}, \
+            "    {{\"scenario\": \"{}\", \"workers\": {}, \"policy\": \"{}\", \
+             \"policy_counts\": {{{}}}, \"requests\": {}, \
              \"completed\": {}, \"digest\": \"{:016x}\", \"elapsed_s\": {}, \
              \"ttft_p50_ms\": {}, \"ttft_p99_ms\": {}, \"tpot_p50_ms\": {}, \
              \"tpot_p99_ms\": {}, \"slo_attainment\": {}, \"goodput_tok_s\": {}, \
@@ -1123,6 +1175,8 @@ fn render_slo_json(seed: u64, rows: &[SloRow]) -> String {
              \"steal_per_s\": {}, \"cross_preempt_per_s\": {}}}{}\n",
             r.scenario,
             r.workers,
+            r.policy,
+            policy_counts.join(", "),
             r.requests,
             r.completed,
             r.digest,

@@ -628,6 +628,16 @@ impl<B: DecodeBackend> DecodeBackend for FaultyBackend<B> {
         }
     }
 
+    fn attention_feedback(&self, seq: &Self::Seq) -> Option<crate::eviction::AttnFeedback> {
+        // observability channel, never a fault-injection target: a fault
+        // here could not be distinguished from a backend without one
+        self.inner.attention_feedback(&seq.inner)
+    }
+
+    fn shared_prefix_depth(&self, arena: &BlockManager, prompt: &[u32]) -> usize {
+        self.inner.shared_prefix_depth(arena, prompt)
+    }
+
     fn decode_batch(
         &mut self,
         batch: &mut [(&mut Self::Seq, u32)],

@@ -20,7 +20,7 @@
 
 use anyhow::Result;
 
-use crate::eviction::{make_policy, Decision, EvictionPolicy, PrefillScores};
+use crate::eviction::{make_policy, AttnFeedback, Decision, EvictionPolicy, PrefillScores};
 use crate::kvcache::{prefix_block_hashes, BlockAlloc, BlockManager, KvSnapshot, SeqCache};
 use crate::scheduler::backend::{
     static_prefill_claim, BackendError, DecodeBackend, HostSnapshot, Prefilled, PrefillStep,
@@ -215,6 +215,19 @@ impl SimBackend {
             keys.push(Self::content_key(i as u32, prompt[i]));
         }
         (entries, keys)
+    }
+
+    /// The sequence's attention-feedback vector: the pure positional-mass
+    /// model ([`crate::sim::positional_mass`]) sampled over every original
+    /// position up to the decode horizon. Depends only on the sequence's
+    /// own position counter — never on scheduling order, batch composition
+    /// or worker count — so feedback-consuming policies stay as replayable
+    /// as proxy-driven ones (preempt/recompute lands on the same vector).
+    fn feedback_for(seq: &SimSeq) -> AttnFeedback {
+        let horizon = seq.cache.next_position();
+        AttnFeedback {
+            mass: (0..horizon).map(|p| crate::sim::positional_mass(p, horizon)).collect(),
+        }
     }
 
     /// Logits for the current history hash: a deterministic sub-0.5 floor
@@ -465,6 +478,30 @@ impl DecodeBackend for SimBackend {
         }))
     }
 
+    fn attention_feedback(&self, seq: &SimSeq) -> Option<AttnFeedback> {
+        Some(Self::feedback_for(seq))
+    }
+
+    fn shared_prefix_depth(&self, arena: &BlockManager, prompt: &[u32]) -> usize {
+        if !self.prefix_cache || prompt.is_empty() {
+            return 0;
+        }
+        // The full-prompt identity pack: what a keep-everything prefill
+        // would publish. Published leading blocks come from policies that
+        // kept their head tokens verbatim (always true for prompts within
+        // budget), so leading-hit counting against this pack is exact for
+        // the shared-prefix workloads the autotuner cares about and a
+        // conservative 0 otherwise. A pure read — nothing is claimed.
+        let mut entries = Vec::with_capacity(prompt.len());
+        let mut keys = Vec::with_capacity(prompt.len());
+        for (i, &t) in prompt.iter().enumerate() {
+            entries.push((i as u32, Self::tok_scores(i as u32, t)));
+            keys.push(Self::content_key(i as u32, t));
+        }
+        let hashes = prefix_block_hashes(self.page_size, &entries, &keys);
+        arena.count_leading_hits(&hashes)
+    }
+
     fn decode_batch(
         &mut self,
         batch: &mut [(&mut SimSeq, u32)],
@@ -484,7 +521,15 @@ impl DecodeBackend for SimBackend {
                 seq.state = fold(seq.state, tok);
                 let pos = seq.cache.next_position();
                 seq.cache.append(Self::tok_scores(pos, tok));
-                match seq.policy.post_append(&seq.cache, seq.budget) {
+                // the O(horizon) feedback vector is assembled only for
+                // policies that consume it; every other policy's decode
+                // step is byte-for-byte the pre-feedback hot path
+                let fb = seq.policy.wants_feedback().then(|| Self::feedback_for(seq));
+                let decision = match &fb {
+                    Some(f) => seq.policy.post_append_feedback(&seq.cache, seq.budget, Some(f)),
+                    None => seq.policy.post_append(&seq.cache, seq.budget),
+                };
+                match decision {
                     Decision::Keep => {}
                     Decision::EvictBlock(i) => seq.cache.evict_block(i),
                     Decision::KillTokens(ts) => {
@@ -561,6 +606,60 @@ mod tests {
             assert!(seq.cache.live_tokens() <= 16 + 4, "budget + one page");
             seq.cache.check_invariants().unwrap();
         }
+    }
+
+    #[test]
+    fn feedback_policies_decode_the_same_tokens() {
+        // logits depend only on token history, so attention-guided
+        // policies (different cache layouts, different evictions) still
+        // produce the paged baseline's greedy tokens — the structural fact
+        // that makes `--policy auto` digests policy- and worker-invariant
+        let prompt: Vec<u32> = (0..40).map(|i| (i * 7) % 100).collect();
+        let base = drive(&prompt, 16, 16, "paged");
+        for pol in ["self_attn", "self_attn_token", "attention_gate"] {
+            assert_eq!(base, drive(&prompt, 16, 16, pol), "{pol}");
+        }
+    }
+
+    #[test]
+    fn attention_feedback_covers_the_horizon() {
+        let arena = BlockManager::new(4096);
+        let mut be = SimBackend::new(4);
+        let prompt: Vec<u32> = (0..24).map(|i| i as u32).collect();
+        let Prefilled::Ready { seq, .. } = be
+            .prefill(&arena, &prompt, 64, make_policy("self_attn").unwrap())
+            .unwrap()
+        else {
+            panic!("OOM")
+        };
+        let fb = be.attention_feedback(&seq).unwrap();
+        assert_eq!(fb.len(), seq.cache.next_position() as usize);
+        assert!((0..fb.len()).all(|p| fb.mass_at(p) > 0.0));
+        // out-of-range positions read as zero mass, by contract
+        assert_eq!(fb.mass_at(fb.len() + 5), 0.0);
+    }
+
+    #[test]
+    fn shared_prefix_depth_probe_reads_the_index() {
+        let arena = BlockManager::new(4096);
+        let mut be = SimBackend::new(4);
+        let prompt: Vec<u32> = (0..32).map(|i| i as u32).collect();
+        assert_eq!(be.shared_prefix_depth(&arena, &prompt), 0, "prefix cache off");
+        be.set_prefix_cache(true);
+        assert_eq!(be.shared_prefix_depth(&arena, &prompt), 0, "nothing published yet");
+        let Prefilled::Ready { seq, .. } = be
+            .prefill(&arena, &prompt, 64, make_policy("paged").unwrap())
+            .unwrap()
+        else {
+            panic!("OOM")
+        };
+        // within-budget prefill kept the whole prompt: its published pack
+        // IS the identity pack, so the probe sees every leading block
+        assert_eq!(be.shared_prefix_depth(&arena, &prompt), 32 / 4);
+        // a diverging prompt shares nothing
+        let other: Vec<u32> = (0..32).map(|i| (i + 100) as u32).collect();
+        assert_eq!(be.shared_prefix_depth(&arena, &other), 0);
+        drop(seq);
     }
 
     #[test]

@@ -1,0 +1,216 @@
+//! The per-request policy autotuner's scheduler half (`--policy auto`).
+//!
+//! A request submitted with the [`AUTO_POLICY`] sentinel gets its eviction
+//! policy and cache budget resolved AT SUBMIT TIME from two inputs:
+//!
+//!   * the request itself — prompt length ([`auto::classify_prompt`]) and
+//!     how many leading prompt blocks the prefix index would serve by
+//!     reference ([`crate::scheduler::DecodeBackend::shared_prefix_depth`]);
+//!   * a [`PressureSnapshot`] of the shared arena, read through the PR 9
+//!     lock-free counters (`used`/watermark loads, no arena lock).
+//!
+//! The decision itself — [`choose`] — is a pure function of those inputs
+//! delegating to the [`auto::pick_policy`] table, so the same (request,
+//! snapshot) pair resolves identically at any worker count. Resolution
+//! rides the PR 5 per-request override machinery: the chosen policy and
+//! budget are written into the [`crate::scheduler::Request`] before
+//! admission ever sees it, and surface back to callers in
+//! `RequestOutput::policy`. The sim backend's token streams are
+//! policy-invariant besides, so `--policy auto` digests stay bit-identical
+//! at workers 1 vs 4 (the schedule-smoke CI leg compares them).
+
+use std::collections::BTreeMap;
+
+use crate::eviction::auto::{self, PressureBand};
+use crate::kvcache::BlockManager;
+
+pub use crate::eviction::auto::AUTO_POLICY;
+
+/// A point-in-time read of arena occupancy — everything [`choose`] is
+/// allowed to know about global state, captured once per resolution so
+/// the decision is a pure function of an explicit value rather than of
+/// racy re-reads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PressureSnapshot {
+    pub used: usize,
+    pub capacity: usize,
+    pub above_high: bool,
+    pub below_low: bool,
+}
+
+impl PressureSnapshot {
+    /// Read the arena's lock-free occupancy counters (relaxed loads — the
+    /// same reads the round loop's admission gate uses).
+    pub fn read(arena: &BlockManager) -> PressureSnapshot {
+        PressureSnapshot {
+            used: arena.used(),
+            capacity: arena.capacity(),
+            above_high: arena.above_high_watermark(),
+            below_low: arena.below_low_watermark(0),
+        }
+    }
+
+    /// An empty-arena snapshot (tests, and backends with no arena).
+    pub fn idle(capacity: usize) -> PressureSnapshot {
+        PressureSnapshot { used: 0, capacity, above_high: false, below_low: true }
+    }
+
+    /// Collapse the snapshot to the decision table's pressure band.
+    pub fn band(&self) -> PressureBand {
+        if self.above_high {
+            PressureBand::High
+        } else if self.below_low {
+            PressureBand::Low
+        } else {
+            PressureBand::Normal
+        }
+    }
+}
+
+/// One resolved `--policy auto` decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Choice {
+    /// A concrete `eviction::registry` entry name.
+    pub policy: &'static str,
+    /// The (possibly pressure-shrunk) cache budget in tokens.
+    pub budget: usize,
+}
+
+/// Resolve policy + budget for one request. Pure: same inputs, same
+/// choice, whatever thread or worker count asks. Under a High-pressure
+/// band the budget is halved (floor: two pages — one page of content plus
+/// the write block every decode round reserves), trading retention for
+/// admission headroom exactly when the arena is preemption-bound.
+pub fn choose(
+    prompt_len: usize,
+    prefix_hit_blocks: usize,
+    base_budget: usize,
+    page_size: usize,
+    snap: &PressureSnapshot,
+) -> Choice {
+    let band = snap.band();
+    let policy = auto::pick_policy(auto::classify_prompt(prompt_len), band, prefix_hit_blocks);
+    let floor = 2 * page_size.max(1);
+    let budget = if band == PressureBand::High {
+        (base_budget / 2).max(floor.min(base_budget))
+    } else {
+        base_budget
+    };
+    Choice { policy, budget }
+}
+
+/// Pick counters (policy name -> resolutions), kept in a `BTreeMap` so
+/// iteration — and therefore every printed summary — is deterministically
+/// ordered. One lives per scheduler; the multi-worker engine sums its
+/// workers' counters into the run report.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AutotuneStats {
+    picks: BTreeMap<&'static str, u64>,
+}
+
+impl AutotuneStats {
+    pub fn record(&mut self, policy: &'static str) {
+        *self.picks.entry(policy).or_insert(0) += 1;
+    }
+
+    /// Total `--policy auto` resolutions.
+    pub fn total(&self) -> u64 {
+        self.picks.values().sum()
+    }
+
+    pub fn counts(&self) -> &BTreeMap<&'static str, u64> {
+        &self.picks
+    }
+
+    /// Fold another worker's counters into this one.
+    pub fn merge(&mut self, other: &AutotuneStats) {
+        for (name, n) in &other.picks {
+            *self.picks.entry(name).or_insert(0) += n;
+        }
+    }
+
+    /// `"paged=3 self_attn=2"` — stable order, empty string when unused.
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::with_capacity(self.picks.len());
+        for (name, n) in &self.picks {
+            parts.push(format!("{name}={n}"));
+        }
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eviction::registry;
+
+    #[test]
+    fn banding_tracks_the_watermarks() {
+        assert_eq!(PressureSnapshot::idle(64).band(), PressureBand::Low);
+        let normal =
+            PressureSnapshot { used: 40, capacity: 64, above_high: false, below_low: false };
+        assert_eq!(normal.band(), PressureBand::Normal);
+        let high = PressureSnapshot { used: 60, capacity: 64, above_high: true, below_low: false };
+        assert_eq!(high.band(), PressureBand::High);
+    }
+
+    #[test]
+    fn snapshot_read_matches_the_arena_counters() {
+        let arena = BlockManager::new(64);
+        let snap = PressureSnapshot::read(&arena);
+        assert_eq!(snap, PressureSnapshot::idle(64));
+        arena.set_watermarks(0.5, 0.75); // low = 32, high = 48
+        let seq = arena.register();
+        let blocks = arena.alloc_many(seq, 60).expect("arena has room");
+        let snap = PressureSnapshot::read(&arena);
+        assert_eq!((snap.used, snap.capacity), (60, 64));
+        assert_eq!(snap.band(), PressureBand::High);
+        arena.release_many(seq, &blocks);
+        arena.unregister(seq);
+        assert_eq!(PressureSnapshot::read(&arena).band(), PressureBand::Low);
+    }
+
+    #[test]
+    fn choose_is_pure_and_lands_in_the_registry() {
+        for (len, hits, used) in [(32usize, 0usize, 0usize), (32, 2, 60), (512, 0, 40), (512, 0, 60)]
+        {
+            let snap = PressureSnapshot {
+                used,
+                capacity: 64,
+                above_high: used >= 56,
+                below_low: used < 32,
+            };
+            let a = choose(len, hits, 256, 4, &snap);
+            let b = choose(len, hits, 256, 4, &snap);
+            assert_eq!(a, b, "pure function of its arguments");
+            assert!(registry::lookup(a.policy).is_some(), "{} not registered", a.policy);
+        }
+    }
+
+    #[test]
+    fn high_pressure_halves_the_budget_with_a_two_page_floor() {
+        let high = PressureSnapshot { used: 60, capacity: 64, above_high: true, below_low: false };
+        let low = PressureSnapshot::idle(64);
+        assert_eq!(choose(512, 0, 256, 4, &low).budget, 256);
+        assert_eq!(choose(512, 0, 256, 4, &high).budget, 128);
+        // floor: never below two pages...
+        assert_eq!(choose(512, 0, 12, 4, &high).budget, 8);
+        // ...but also never ABOVE what the caller asked for
+        assert_eq!(choose(512, 0, 6, 4, &high).budget, 6);
+    }
+
+    #[test]
+    fn stats_merge_and_summarize_deterministically() {
+        let mut a = AutotuneStats::default();
+        assert_eq!(a.summary(), "");
+        a.record("paged");
+        a.record("self_attn");
+        a.record("paged");
+        let mut b = AutotuneStats::default();
+        b.record("streaming");
+        b.record("paged");
+        a.merge(&b);
+        assert_eq!(a.total(), 5);
+        assert_eq!(a.summary(), "paged=3 self_attn=1 streaming=1");
+    }
+}

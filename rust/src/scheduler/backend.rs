@@ -335,6 +335,28 @@ pub trait DecodeBackend {
         snap: &Self::Snapshot,
     ) -> Result<Restored<Self::Seq>>;
 
+    /// The per-sequence attention-feedback channel: accumulated attention
+    /// mass per ORIGINAL position, consumed by feedback-aware eviction
+    /// policies ([`crate::eviction::EvictionPolicy::wants_feedback`]).
+    /// The default — and the PJRT runner, which ships no kernel
+    /// modifications and has no per-position attention readout — returns
+    /// `None`; such policies then fall back to their score-channel proxy.
+    /// Backends should only assemble the vector (an O(live-tokens) pass)
+    /// for sequences whose policy asks for it.
+    fn attention_feedback(&self, _seq: &Self::Seq) -> Option<crate::eviction::AttnFeedback> {
+        None
+    }
+
+    /// How many leading blocks of `prompt` the arena's prefix index would
+    /// serve by reference RIGHT NOW — the autotuner's shared-prefix-depth
+    /// probe (`scheduler::autotune`). Purely a read: no pages are claimed
+    /// or pinned. Backends without a content-addressed prefill pack (or
+    /// with the prefix cache off) report 0, which the autotuner treats as
+    /// "no shared prefix".
+    fn shared_prefix_depth(&self, _arena: &BlockManager, _prompt: &[u32]) -> usize {
+        0
+    }
+
     /// One decode step for every `(sequence, token-to-feed)` entry — the
     /// scheduler issues exactly one call per round for the whole running
     /// set. Every entry has a write slot reserved by the scheduler

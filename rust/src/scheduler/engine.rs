@@ -171,6 +171,10 @@ pub struct WorkerStats {
     pub fault_retries: u64,
     pub quarantined: u64,
     pub cancelled: u64,
+    /// `--policy auto` resolutions this worker made, by chosen policy
+    /// (empty unless the autotuner ran). Sum across workers with
+    /// [`super::autotune::AutotuneStats::merge`] for the run total.
+    pub autotune: super::autotune::AutotuneStats,
 }
 
 impl WorkerStats {
@@ -290,6 +294,7 @@ impl<B: DecodeBackend> Worker<B> {
             fault_retries: self.sched.fault_retries,
             quarantined: self.sched.quarantined,
             cancelled: self.sched.cancelled(),
+            autotune: self.sched.autotune.clone(),
         };
         // hand the backend back so interior counters (sim call tallies,
         // fault counts) outlive the thread
@@ -565,7 +570,9 @@ where
         self.next_id += 1;
         let id = RequestId(self.next_id);
         let req = builder.build(id, &self.cfg);
-        crate::eviction::make_policy(&req.policy)?; // surface bad policy names at submit
+        // surface bad policy names at submit ("auto" is valid here: the
+        // owning worker's scheduler resolves it at its own submit time)
+        crate::eviction::validate_request_policy(&req.policy)?;
         self.submit(req);
         Ok(id)
     }

@@ -33,12 +33,14 @@
 //! source are shared, so placement/stealing/cross-worker preemption never
 //! change any request's output.
 
+pub mod autotune;
 pub mod backend;
 pub mod engine;
 pub mod request;
 pub mod sched;
 pub mod swap;
 
+pub use autotune::{AutotuneStats, PressureSnapshot};
 pub use backend::{
     BackendError, ClaimMemo, DecodeBackend, HostSnapshot, Prefilled, PrefillStep, Restored,
 };

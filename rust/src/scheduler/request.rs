@@ -109,6 +109,11 @@ pub enum RequestState {
 pub struct RequestOutput {
     pub id: u64,
     pub tokens: Vec<u32>,
+    /// The eviction policy this request actually ran under. For
+    /// `--policy auto` submissions this is the autotuner's RESOLVED
+    /// choice (a concrete `eviction::registry` name, never `"auto"`) —
+    /// the wire surfaces it so callers can see what the tuner did.
+    pub policy: String,
     pub finish: FinishReason,
     /// time from admission (enqueue) to first generated token
     pub ttft_s: f64,

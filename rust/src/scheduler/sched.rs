@@ -65,12 +65,13 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::autotune::{self, AutotuneStats, PressureSnapshot};
 use super::backend::{ClaimMemo, DecodeBackend, Prefilled, PrefillStep, Restored};
 use super::engine::PressureHook;
 use super::request::{FinishReason, Priority, Request, RequestOutput};
 use super::swap::SwapPool;
 use crate::api::SeqEvent;
-use crate::eviction::make_policy;
+use crate::eviction::{make_policy, AUTO_POLICY};
 use crate::kvcache::{BlockAlloc, BlockManager, CacheStats};
 use crate::runtime::model_runner::argmax;
 use crate::util::stats::{Histogram, Summary};
@@ -380,6 +381,9 @@ pub struct Scheduler<B: DecodeBackend> {
     /// contribute the count alone). `cancelled_stats.cancelled` is the
     /// total cancel count.
     pub cancelled_stats: CacheStats,
+    /// `--policy auto` resolutions by chosen policy (empty unless the
+    /// autotuner ran). Per-worker; the engine merges across workers.
+    pub autotune: AutotuneStats,
     started: Option<Instant>,
     /// Admission serial source — shared across a multi-worker engine's
     /// schedulers so `(priority, Reverse(admit_serial))` victim keys are
@@ -450,6 +454,7 @@ impl<B: DecodeBackend> Scheduler<B> {
             fault_retries: 0,
             quarantined: 0,
             cancelled_stats: CacheStats::default(),
+            autotune: AutotuneStats::default(),
             started: None,
             admit_counter,
             steps: 0,
@@ -488,6 +493,32 @@ impl<B: DecodeBackend> Scheduler<B> {
     }
 
     pub fn submit(&mut self, mut req: Request) {
+        if req.policy == AUTO_POLICY {
+            // Resolve the sentinel NOW, before any budget check or queue
+            // state sees the request: policy + budget become ordinary
+            // per-request overrides (the PR 5 machinery), and everything
+            // downstream — admission pricing, prefill, snapshots, the
+            // surfaced `RequestOutput::policy` — sees only the concrete
+            // choice. The decision is a pure function of (request,
+            // pressure snapshot, prefix-hit depth); see
+            // `scheduler::autotune` for why that keeps multi-worker
+            // digests bit-identical.
+            let snap = PressureSnapshot::read(&self.arena);
+            let hits = self.backend.shared_prefix_depth(&self.arena, &req.prompt);
+            let choice =
+                autotune::choose(req.prompt.len(), hits, req.budget, self.cfg.page_size, &snap);
+            log::debug!(
+                "req {}: auto -> {} (budget {} -> {}, band {:?}, prefix hits {hits})",
+                req.id,
+                choice.policy,
+                req.budget,
+                choice.budget,
+                snap.band()
+            );
+            req.policy = choice.policy.to_string();
+            req.budget = choice.budget;
+            self.autotune.record(choice.policy);
+        }
         if req.budget == 0 {
             // A zero-token cache cannot hold even the incoming token; the
             // old code silently floored this to 2 blocks. Reject it.
@@ -670,6 +701,7 @@ impl<B: DecodeBackend> Scheduler<B> {
         RequestOutput {
             id: req.id,
             tokens: Vec::new(),
+            policy: req.policy.clone(),
             finish: FinishReason::Error,
             ttft_s: 0.0,
             tpot_s: 0.0,
@@ -702,6 +734,7 @@ impl<B: DecodeBackend> Scheduler<B> {
         let out = RequestOutput {
             id: entry.req.id,
             tokens: entry.resume,
+            policy: entry.req.policy.clone(),
             finish: FinishReason::Deadline,
             ttft_s: ttft,
             tpot_s: tpot,
@@ -1603,6 +1636,7 @@ impl<B: DecodeBackend> Scheduler<B> {
         let out = RequestOutput {
             id: f.req.id,
             tokens: f.produced,
+            policy: f.req.policy.clone(),
             finish,
             ttft_s: ttft,
             tpot_s: tpot,

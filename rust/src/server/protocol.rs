@@ -227,6 +227,9 @@ fn output_pairs(o: &RequestOutput) -> Vec<(&'static str, Json)> {
             Json::Arr(o.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
         ),
         ("text", Json::str(tokenizer::decode(&o.tokens))),
+        // the policy the request RAN under — for `--policy auto`
+        // submissions, the autotuner's resolved choice
+        ("policy", Json::str(&o.policy)),
         ("finish", Json::str(finish_name(o.finish))),
         ("ttft_ms", Json::num(o.ttft_s * 1e3)),
         ("tpot_ms", Json::num(o.tpot_s * 1e3)),
@@ -475,6 +478,7 @@ mod tests {
         let out = RequestOutput {
             id: 3,
             tokens: vec![104, 105],
+            policy: "self_attn".to_string(),
             finish: FinishReason::MaxTokens,
             ttft_s: 0.01,
             tpot_s: 0.002,
@@ -496,7 +500,7 @@ mod tests {
         let line = WireResponse(out).to_line();
         let j = Json::parse(&line).unwrap();
         for key in [
-            "id", "tokens", "text", "finish", "ttft_ms", "tpot_ms", "prompt_len",
+            "id", "tokens", "text", "policy", "finish", "ttft_ms", "tpot_ms", "prompt_len",
             "live_cache_tokens", "preemptions", "swaps", "retries", "prefix_hit_blocks",
             "cow_copies",
         ] {
@@ -504,6 +508,7 @@ mod tests {
         }
         assert_eq!(j.get("id").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("text").unwrap().as_str(), Some("hi"));
+        assert_eq!(j.get("policy").unwrap().as_str(), Some("self_attn"));
         assert_eq!(j.get("finish").unwrap().as_str(), Some("length"));
         assert_eq!(j.get("preemptions").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("swaps").unwrap().as_usize(), Some(1));
@@ -517,6 +522,7 @@ mod tests {
         let out = RequestOutput {
             id: 1,
             tokens: vec![],
+            policy: "paged".to_string(),
             finish: FinishReason::Deadline,
             ttft_s: 0.0,
             tpot_s: 0.0,

@@ -836,6 +836,7 @@ fn handle_conn(stream: TcpStream, handle: EngineHandle, opts: ServeOpts) -> Resu
                     RequestOutput {
                         id,
                         tokens: Vec::new(),
+                        policy: String::new(), // never admitted: no policy ran
                         finish: FinishReason::Error,
                         ttft_s: 0.0,
                         tpot_s: 0.0,

@@ -26,8 +26,8 @@ pub mod h2o;
 pub mod rouge;
 
 pub use attention_sim::{
-    simulate_episode, simulate_episodes, simulate_mean, simulate_mean_serial,
-    simulate_mean_threads, EpisodeResult, SimConfig,
+    positional_mass, simulate_episode, simulate_episodes, simulate_mean,
+    simulate_mean_serial, simulate_mean_threads, EpisodeResult, SimConfig,
 };
 pub use datasets::{DatasetProfile, ScoreKind, DATASETS};
 pub use h2o::H2oOracle;

@@ -91,7 +91,12 @@ pub fn parse_trace(text: &str) -> Result<Vec<TraceEntry>> {
                 "at" => e.at_step = val.parse().with_context(ctx)?,
                 "prompt_len" => e.prompt_len = Some(val.parse().with_context(ctx)?),
                 "gen" => e.gen = Some(val.parse().with_context(ctx)?),
-                "policy" => e.policy = Some(val.to_string()),
+                "policy" => {
+                    // fail at parse time, not mid-run at submit: the
+                    // registry owns the valid set ("auto" included)
+                    crate::eviction::validate_request_policy(val).with_context(ctx)?;
+                    e.policy = Some(val.to_string());
+                }
                 "budget" => e.budget = Some(val.parse().with_context(ctx)?),
                 "priority" => e.priority = Some(Priority::parse(val).with_context(ctx)?),
                 "deadline" => e.deadline_steps = Some(val.parse().with_context(ctx)?),
@@ -196,6 +201,19 @@ mod tests {
         assert!(msg.contains("line 1"), "missing line number: {msg}");
         assert!(msg.contains("\"frobnicate\""), "missing key: {msg}");
         assert!(msg.contains("expected one of"), "missing key list: {msg}");
+    }
+
+    #[test]
+    fn policy_names_validate_at_parse_time() {
+        let msg = err_text("at=0 policy=lru");
+        assert!(msg.contains("line 1"), "missing line number: {msg}");
+        assert!(msg.contains("\"lru\""), "missing value: {msg}");
+        assert!(msg.contains("valid:"), "missing the registry's set: {msg}");
+        // aliases and the autotuner sentinel are all valid trace values
+        for ok in ["auto", "self_attn", "attn_gate", "paged_eviction"] {
+            let es = parse_trace(&format!("at=0 policy={ok}")).unwrap();
+            assert_eq!(es[0].policy.as_deref(), Some(ok));
+        }
     }
 
     #[test]

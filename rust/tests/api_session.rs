@@ -327,7 +327,10 @@ fn high_priority_preempts_low_victim_never_the_reverse() {
 /// free), and the survivor's output is untouched.
 #[test]
 fn property_cancel_restores_the_no_b_arena_exactly() {
-    let pols = ["full", "paged", "keydiff", "streaming", "inverse_key_norm"];
+    // drawn from the registry so new policies join the property the day
+    // they register
+    let pols: Vec<&'static str> =
+        paged_eviction::eviction::REGISTRY.iter().map(|i| i.name).collect();
     propcheck::check(
         "cancel == B never existed",
         &PropConfig { cases: 24, ..Default::default() },

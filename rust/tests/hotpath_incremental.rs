@@ -9,7 +9,7 @@
 //!  * the parallel episode simulator must be bit-identical to the serial
 //!    path (episodes are seed-deterministic and order-accumulated).
 
-use paged_eviction::eviction::{make_policy, Decision, ALL_POLICIES};
+use paged_eviction::eviction::{make_policy, Decision, REGISTRY};
 use paged_eviction::kvcache::SeqCache;
 use paged_eviction::sim::attention_sim::{simulate_mean, simulate_mean_serial, SimConfig};
 use paged_eviction::sim::datasets::dataset;
@@ -77,7 +77,10 @@ fn incremental_buffers_survive_every_policy_decode_loop() {
         let bs = *rng.choose(&[4usize, 8, 16]);
         let budget_blocks = 2 + rng.usize_below(4);
         let budget = budget_blocks * bs;
-        for name in ALL_POLICIES {
+        // every registry entry, so new policies (feedback-consuming ones
+        // included, on their proxy path here) join the property at birth
+        for info in REGISTRY {
+            let name = info.name;
             if name == "full" {
                 continue; // unbounded; covered by the random-op property
             }
@@ -164,6 +167,8 @@ fn parallel_simulate_mean_is_bit_identical_to_serial() {
         ("hotpotqa", "streaming"),
         ("qasper", "keydiff"),
         ("multifieldqa", "inverse_key_norm"),
+        ("multinews", "self_attn"),
+        ("govreport", "attention_gate"),
     ] {
         let d = dataset(ds).unwrap();
         let p = make_policy(pol).unwrap();

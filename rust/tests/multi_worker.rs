@@ -48,7 +48,14 @@ fn rand_prompt(rng: &mut Pcg32, len: usize) -> Vec<u32> {
 fn pressure_workload() -> Vec<RequestBuilder> {
     let mut rng = Pcg32::new(2024);
     let shared = rand_prompt(&mut rng, 16); // 4 shared pages at page=4
-    let policies = ["paged", "streaming", "full", "keydiff", "inverse_key_norm"];
+    // every registry entry plus the autotuner sentinel: the sim backend's
+    // token streams are policy-invariant, so mixed (even auto-resolved)
+    // policies must still twin bit-identically at any worker count
+    let policies: Vec<&'static str> = paged_eviction::eviction::REGISTRY
+        .iter()
+        .map(|i| i.name)
+        .chain(std::iter::once(paged_eviction::eviction::AUTO_POLICY))
+        .collect();
     (0..10)
         .map(|i| {
             let mut prompt = if i % 2 == 0 { shared.clone() } else { Vec::new() };

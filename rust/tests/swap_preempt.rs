@@ -11,7 +11,7 @@
 //! `CacheStats`/`RequestOutput` distinguish `swaps` (restored) from
 //! `preemptions` (total evictions).
 
-use paged_eviction::eviction::make_policy;
+use paged_eviction::eviction::{make_policy, REGISTRY};
 use paged_eviction::kvcache::{BlockManager, SeqCache};
 use paged_eviction::runtime::model_runner::argmax;
 use paged_eviction::runtime::SimBackend;
@@ -302,7 +302,10 @@ fn property_snapshot_restore_roundtrip_every_policy() {
         let warm = rng.usize_below(3 * page);
         let tail = 1 + rng.usize_below(2 * page);
         let prompt: Vec<u32> = (0..plen).map(|_| rng.below(200)).collect();
-        for policy in ["paged", "full", "streaming", "inverse_key_norm", "keydiff"] {
+        // every registry entry, feedback-consuming policies included —
+        // new policies are swap-roundtrip-tested the day they register
+        for info in REGISTRY {
+            let policy = info.name;
             let arena = BlockManager::new(10_000);
             let mut be = SimBackend::new(page);
             let Prefilled::Ready { mut seq, logits } = be

@@ -30,7 +30,9 @@ With ``--slo`` the gate instead reads the ``BENCH_slo.json`` emitted by
 ``paged-eviction slo`` (schema ``slo-v1``) and FAILS when any gated
 scenario is missing, reports fewer completions than requests, exceeds its
 p99 TTFT/TPOT ceiling, misses its goodput/attainment floor, drops the
-arena contention counters (``lock_acquisitions`` etc.), misses a
+arena contention counters (``lock_acquisitions`` etc.), lacks the
+``policy`` field (and, on ``--policy auto`` rows, a nonempty
+``policy_counts`` breakdown of what the autotuner resolved), misses a
 multi-worker contention-activity floor (``min_steals`` /
 ``min_cross_preempts`` / ``min_preemptions`` — waived on 1-worker rows),
 or shows different output digests at different ``--workers`` counts (the
@@ -69,6 +71,12 @@ CEILINGS_US = {
     "decode-step metadata cycle (paged, incremental)": 250.0,
     "paged post_append scan (32 blocks)": 250.0,
     "inverse_key_norm global scan (512 tokens)": 2000.0,
+    # attention-feedback decode step: assemble the O(live) mass vector and
+    # take the guided decision — same O(n) shape as the global scan above.
+    "attn_feedback_step (512-pos mass + guided decision)": 2000.0,
+    # one --policy auto resolution: lock-free pressure snapshot + pure
+    # table choice + counter bump, paid once per SUBMIT, never per token.
+    "autotune_pick (snapshot + choose + record)": 50.0,
     "JSON request parse": 500.0,
     "argmax (4096 logits)": 250.0,
     # prefix cache: hash a 4-block chain + probe the index (admission
@@ -297,6 +305,26 @@ def check_slo(data, gates=None):
                         f"attainment regression: {label}: {attainment:.2f} is below "
                         f"the {g['min_attainment']:.2f} floor"
                     )
+            # policy accounting (PR 10): every gated row names the policy
+            # it replayed under, and an "auto" row must also break down
+            # what the autotuner actually resolved per request — with the
+            # sentinel itself never leaking through unresolved.
+            pol = row.get("policy")
+            if not isinstance(pol, str) or not pol:
+                failures.append(f"{label}: missing 'policy' field")
+            elif pol == "auto":
+                pc = row.get("policy_counts")
+                if not isinstance(pc, dict) or not pc:
+                    failures.append(
+                        f"{label}: auto row carries no 'policy_counts' breakdown"
+                    )
+                elif "auto" in pc:
+                    failures.append(
+                        f"{label}: 'auto' leaked into policy_counts unresolved"
+                    )
+                else:
+                    picks = " ".join(f"{k}={v}" for k, v in sorted(pc.items()))
+                    report.append(f"{label}: auto resolved {picks}")
             # arena contention counters (PR 9) are REQUIRED fields on
             # every gated row — a renamed counter must not silently
             # vanish from the perf trajectory.

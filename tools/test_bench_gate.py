@@ -31,6 +31,8 @@ def healthy_rows():
         "decode-step metadata cycle (paged, incremental)": 2.0,
         "paged post_append scan (32 blocks)": 1.0,
         "inverse_key_norm global scan (512 tokens)": 20.0,
+        "attn_feedback_step (512-pos mass + guided decision)": 25.0,
+        "autotune_pick (snapshot + choose + record)": 1.0,
         "JSON request parse": 3.0,
         "argmax (4096 logits)": 4.0,
         "prefix_lookup chain+probe (4 blocks of 16)": 5.0,
@@ -152,6 +154,25 @@ class CheckTests(unittest.TestCase):
                 f"deleting {row!r} must fail the gate",
             )
 
+    def test_attention_and_autotune_rows_ceiling_and_presence_are_gated(self):
+        for row in (
+            "attn_feedback_step (512-pos mass + guided decision)",
+            "autotune_pick (snapshot + choose + record)",
+        ):
+            rows = healthy_rows()
+            rows[row] = 99999.0
+            failures, _ = self.run_check(rows)
+            self.assertEqual(len(failures), 1, f"doctoring {row!r} must fail exactly once")
+            self.assertIn("absolute regression", failures[0])
+            self.assertIn(row, failures[0])
+            rows = healthy_rows()
+            del rows[row]
+            failures, _ = self.run_check(rows)
+            self.assertTrue(
+                any("missing bench row" in f and row in f for f in failures),
+                f"deleting {row!r} must fail the gate",
+            )
+
     def test_engine_scaling_below_bar_fails(self):
         rows = healthy_rows()
         rows[bench_gate.ENGINE_4W] = rows[bench_gate.ENGINE_1W] / 2.0  # 2.0x < 2.5x
@@ -203,6 +224,8 @@ def healthy_slo_row(scenario, workers, digest="00aa11bb22cc33dd", **over):
         "requests": 48,
         "completed": 48,
         "digest": digest,
+        "policy": "paged",
+        "policy_counts": {"paged": 48},
         "elapsed_s": 1.2,
         "ttft_p50_ms": 4.0,
         "ttft_p99_ms": 35.0,
@@ -333,6 +356,52 @@ class SloCheckTests(unittest.TestCase):
             self.assertEqual(len(failures), 1, f"dropping {field!r} must fail exactly once")
             self.assertIn("non-numeric field", failures[0])
             self.assertIn(field, failures[0])
+
+    def test_missing_policy_field_fails(self):
+        for doctored in (None, "", 42):
+            data = healthy_slo()
+            if doctored is None:
+                del data["rows"][0]["policy"]
+            else:
+                data["rows"][0]["policy"] = doctored
+            failures, _ = bench_gate.check_slo(data)
+            self.assertEqual(len(failures), 1, f"policy={doctored!r} must fail once")
+            self.assertIn("missing 'policy' field", failures[0])
+            self.assertIn("bursty-chat", failures[0])
+
+    def test_auto_row_without_policy_counts_fails(self):
+        for counts in (None, {}, "paged=48"):
+            data = healthy_slo()
+            data["rows"][0]["policy"] = "auto"
+            if counts is None:
+                del data["rows"][0]["policy_counts"]
+            else:
+                data["rows"][0]["policy_counts"] = counts
+            failures, _ = bench_gate.check_slo(data)
+            self.assertEqual(
+                len(failures), 1, f"policy_counts={counts!r} must fail once"
+            )
+            self.assertIn("no 'policy_counts' breakdown", failures[0])
+
+    def test_auto_sentinel_leaking_into_policy_counts_fails(self):
+        data = healthy_slo()
+        data["rows"][0]["policy"] = "auto"
+        data["rows"][0]["policy_counts"] = {"paged": 40, "auto": 8}
+        failures, _ = bench_gate.check_slo(data)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("'auto' leaked into policy_counts", failures[0])
+
+    def test_auto_row_with_resolved_counts_passes_and_reports(self):
+        data = healthy_slo()
+        for row in data["rows"]:
+            if row["scenario"] == "bursty-chat":
+                row["policy"] = "auto"
+                row["policy_counts"] = {"paged": 40, "self_attn": 8}
+        failures, report = bench_gate.check_slo(data)
+        self.assertEqual(failures, [])
+        self.assertTrue(
+            any("auto resolved paged=40 self_attn=8" in line for line in report)
+        )
 
     def saturate_row(self, data, workers):
         return next(
